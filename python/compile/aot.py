@@ -1,0 +1,242 @@
+"""AOT lowering: JAX/Pallas -> HLO text artifacts + manifest.json.
+
+This is the only place python touches the filesystem for the runtime:
+``make artifacts`` runs it once, and the Rust binary is self-contained
+afterwards.  Interchange is HLO **text**, not serialized HloModuleProto —
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per model config (shapes baked in):
+  train_step_{cfg}   (params.., m.., v.., step, tokens, targets, lr)
+                     -> (params.., m.., v.., step, loss)
+  eval_step_{cfg}    (params.., tokens, targets) -> (nll_sum, count)
+  seq_nll_{cfg}      (params.., tokens, targets, mask) -> nll[B]
+  calib_step_{cfg}   (params.., tokens, g_qkv, g_o, g_gu, g_down,
+                      s_qkv, s_o, s_gu, s_down) -> updated stats
+
+Artifacts per prunable width d (shared across configs):
+  swap_step_d{d}_{pat}_{impl}_k{K}  (W[R,d], M[R,d], G[d,d])
+                     -> (M', L_before[R], L_after[R], swaps[R])
+  layer_loss_d{d}    (W[R,d], M[R,d], G[d,d]) -> L[R]
+
+The manifest records every artifact's input/output signature plus the
+full model-config metadata (flat parameter order, prunable layers, Gram
+stream mapping, swap chunk sizes) so the Rust side derives *nothing*
+about shapes on its own.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_lib
+from . import sparseswaps as ss
+from .configs import (DEFAULT_AOT_CONFIGS, LAYER_TO_STREAM, MODEL_CONFIGS,
+                      PRUNABLE_LAYERS, SWAP_KS, SWAP_PATTERNS,
+                      swap_chunk_rows)
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _sig(args):
+    """JSON-able signature of a flat list of ShapeDtypeStructs."""
+    flat, _ = jax.tree_util.tree_flatten(args)
+    return [{"dims": list(a.shape), "dtype": str(a.dtype)} for a in flat]
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool = False):
+        self.out_dir = out_dir
+        self.force = force
+        self.artifacts = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name: str, fn, example_args, meta=None):
+        """Lower ``fn(*example_args)`` and write ``{name}.hlo.txt``."""
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(self.out_dir, fname)
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        out_avals = lowered.out_info
+        out_flat, _ = jax.tree_util.tree_flatten(out_avals)
+        entry = {
+            "file": fname,
+            "inputs": _sig(example_args),
+            "outputs": [{"dims": list(o.shape), "dtype": str(o.dtype)}
+                        for o in out_flat],
+        }
+        if meta:
+            entry.update(meta)
+        self.artifacts[name] = entry
+        if not self.force and os.path.exists(path):
+            print(f"  [skip] {fname} (exists)")
+            return
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [ok] {fname} ({len(text) / 1024:.0f} KiB)")
+
+
+def build_model_artifacts(b: Builder, cfg):
+    shapes = [s for _, s in cfg.layer_shapes()]
+    params = [_spec(s) for s in shapes]
+    tokens = _spec((cfg.batch, cfg.seq_len), jnp.int32)
+    targets = _spec((cfg.batch, cfg.seq_len), jnp.int32)
+    scalar = _spec((), jnp.float32)
+    step = _spec((), jnp.int32)
+
+    def train(params, m, v, step, tok, tgt, lr):
+        return model_lib.train_step(cfg, params, m, v, step, tok, tgt, lr)
+
+    b.emit(f"train_step_{cfg.name}", train,
+           (params, params, params, step, tokens, targets, scalar),
+           meta={"kind": "train_step", "config": cfg.name})
+
+    def evals(params, tok, tgt):
+        return model_lib.eval_step(cfg, params, tok, tgt)
+
+    b.emit(f"eval_step_{cfg.name}", evals, (params, tokens, targets),
+           meta={"kind": "eval_step", "config": cfg.name})
+
+    def seqnll(params, tok, tgt, mask):
+        return model_lib.seq_nll(cfg, params, tok, tgt, mask)
+
+    b.emit(f"seq_nll_{cfg.name}", seqnll,
+           (params, tokens, targets, _spec((cfg.batch, cfg.seq_len))),
+           meta={"kind": "seq_nll", "config": cfg.name})
+
+    nb, dm, dff = cfg.n_blocks, cfg.d_model, cfg.d_ff
+    g_args = (_spec((nb, dm, dm)), _spec((nb, dm, dm)), _spec((nb, dm, dm)),
+              _spec((nb, dff, dff)))
+    s_args = (_spec((nb, dm)), _spec((nb, dm)), _spec((nb, dm)),
+              _spec((nb, dff)))
+
+    def calib(params, tok, gq, go, gg, gd, sq, so, sg, sd):
+        return model_lib.calib_step(cfg, params, tok, gq, go, gg, gd,
+                                    sq, so, sg, sd)
+
+    b.emit(f"calib_step_{cfg.name}", calib,
+           (params, tokens) + g_args + s_args,
+           meta={"kind": "calib_step", "config": cfg.name})
+
+
+def build_swap_artifacts(b: Builder, widths, pallas_widths=()):
+    for d in sorted(widths):
+        r = swap_chunk_rows(d)
+        w = _spec((r, d))
+        m = _spec((r, d))
+        g = _spec((d, d))
+
+        def loss_fn(w_, m_, g_):
+            return ss.row_losses(w_, m_, g_)
+
+        b.emit(f"layer_loss_d{d}", loss_fn, (w, m, g),
+               meta={"kind": "layer_loss", "width": d, "chunk_rows": r})
+
+        for pat, nm_block in SWAP_PATTERNS.items():
+            if nm_block and d % nm_block != 0:
+                continue
+            impls = ["xla"] + (["pallas"] if d in pallas_widths else [])
+            for impl in impls:
+                ks = SWAP_KS if impl == "xla" else (1,)
+                for k in ks:
+                    def step_fn(w_, m_, g_, k=k, nm=nm_block, impl=impl):
+                        return ss.swap_step(w_, m_, g_, k_iters=k,
+                                            nm_block=nm, impl=impl)
+
+                    name = f"swap_step_d{d}_{pat}_{impl}_k{k}"
+                    b.emit(name, step_fn, (w, m, g),
+                           meta={"kind": "swap_step", "width": d,
+                                 "chunk_rows": r, "pattern": pat,
+                                 "nm_block": nm_block, "impl": impl,
+                                 "k_iters": k})
+
+
+def config_meta(cfg):
+    params = []
+    prunable = []
+    for idx, (name, shape) in enumerate(cfg.layer_shapes()):
+        params.append({"name": name, "dims": list(shape)})
+        short = name.split(".", 2)[-1] if name.startswith("blocks.") else name
+        if short in PRUNABLE_LAYERS:
+            block = int(name.split(".")[1])
+            prunable.append({
+                "param_index": idx,
+                "name": name,
+                "layer_type": short,
+                "block": block,
+                "d_out": shape[0],
+                "d_in": shape[1],
+                "stream": LAYER_TO_STREAM[short],
+            })
+    return {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+        "d_ff": cfg.d_ff, "n_blocks": cfg.n_blocks, "seq_len": cfg.seq_len,
+        "batch": cfg.batch, "rope_theta": cfg.rope_theta,
+        "init_seed": cfg.init_seed,
+        "params": params, "prunable": prunable,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--configs", default=None,
+                    help="comma-separated config names (default: registry)")
+    ap.add_argument("--force", action="store_true",
+                    help="regenerate even if the .hlo.txt already exists")
+    args = ap.parse_args(argv)
+
+    names = (args.configs.split(",") if args.configs
+             else os.environ.get("SPARSESWAPS_AOT_CONFIGS",
+                                 ",".join(DEFAULT_AOT_CONFIGS)).split(","))
+    cfgs = [MODEL_CONFIGS[n] for n in names]
+
+    b = Builder(args.out, force=args.force)
+    widths = set()
+    for cfg in cfgs:
+        print(f"config {cfg.name}:")
+        build_model_artifacts(b, cfg)
+        widths.update(cfg.prunable_widths())
+
+    # Pallas swap variants only for the smallest non-test width: they are
+    # the TPU-structure path; the fused-XLA variant is the CPU fast path.
+    pallas_widths = {min(w for w in widths if w >= 128)} if any(
+        w >= 128 for w in widths) else set(widths)
+    print("swap artifacts:")
+    build_swap_artifacts(b, widths, pallas_widths)
+
+    manifest = {
+        "version": 1,
+        "configs": {cfg.name: config_meta(cfg) for cfg in cfgs},
+        "artifacts": b.artifacts,
+        "swap_patterns": SWAP_PATTERNS,
+        "swap_ks": list(SWAP_KS),
+        "pallas_widths": sorted(pallas_widths),
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest.json: {len(b.artifacts)} artifacts")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

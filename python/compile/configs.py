@@ -1,0 +1,143 @@
+"""Model and artifact configuration registry.
+
+The same configs are mirrored on the Rust side (`rust/src/model/config.rs`);
+`aot.py` writes them into `artifacts/manifest.json` so the two sides can
+never drift: Rust reads shapes from the manifest, not from its own math.
+
+The "zoo" plays the role of the paper's five model families (LLaMA-3.1-8B,
+Gemma-2-9B, Yi-1.5-9B, DeepSeek-7B, Qwen2.5-7B): distinct architectures /
+seeds at a scale a CPU PJRT client can train and prune end-to-end.  See
+DESIGN.md section 2 for the substitution rationale.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+# The seven prunable linears per transformer block, in the order their
+# weights appear in the flat parameter list.  Names mirror the LLaMA
+# taxonomy used by the paper's Figure 1.
+PRUNABLE_LAYERS = (
+    "attn.q_proj",
+    "attn.k_proj",
+    "attn.v_proj",
+    "attn.o_proj",
+    "mlp.gate_proj",
+    "mlp.up_proj",
+    "mlp.down_proj",
+)
+
+# Each prunable layer reads one of four distinct activation streams, so
+# only four Gram matrices are accumulated per block:
+#   qkv  — the attention RMSNorm output            (d_model wide)
+#   o    — the concatenated attention head output  (d_model wide)
+#   gu   — the MLP RMSNorm output                  (d_model wide)
+#   down — the SwiGLU product                      (d_ff    wide)
+GRAM_STREAMS = ("qkv", "o", "gu", "down")
+LAYER_TO_STREAM = {
+    "attn.q_proj": "qkv",
+    "attn.k_proj": "qkv",
+    "attn.v_proj": "qkv",
+    "attn.o_proj": "o",
+    "mlp.gate_proj": "gu",
+    "mlp.up_proj": "gu",
+    "mlp.down_proj": "down",
+}
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_blocks: int
+    seq_len: int
+    batch: int
+    rope_theta: float = 10000.0
+    init_seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def layer_shapes(self):
+        """Flat parameter list: (name, shape) in storage order.
+
+        All linear weights use the paper layout [d_out, d_in] so that each
+        row is an independently prunable unit.
+        """
+        dm, dff, v = self.d_model, self.d_ff, self.vocab
+        shapes = [("tok_emb", (v, dm))]
+        for b in range(self.n_blocks):
+            p = f"blocks.{b}."
+            shapes += [
+                (p + "attn_norm", (dm,)),
+                (p + "attn.q_proj", (dm, dm)),
+                (p + "attn.k_proj", (dm, dm)),
+                (p + "attn.v_proj", (dm, dm)),
+                (p + "attn.o_proj", (dm, dm)),
+                (p + "mlp_norm", (dm,)),
+                (p + "mlp.gate_proj", (dff, dm)),
+                (p + "mlp.up_proj", (dff, dm)),
+                (p + "mlp.down_proj", (dm, dff)),
+            ]
+        shapes += [("final_norm", (dm,)), ("lm_head", (v, dm))]
+        return shapes
+
+    def stream_width(self, stream: str) -> int:
+        return self.d_ff if stream == "down" else self.d_model
+
+    def prunable_widths(self):
+        """Distinct d_in values over all prunable layers."""
+        return sorted({self.d_model, self.d_ff})
+
+
+# --- The model zoo -------------------------------------------------------
+# "tiny" is the test config (fast lowering, fast pytest); the three
+# "gpt-*" configs are the Table-1 zoo; "gpt-mid" exists for scale benches.
+MODEL_CONFIGS = {
+    "tiny": ModelConfig("tiny", vocab=256, d_model=64, n_heads=2,
+                        d_ff=128, n_blocks=2, seq_len=32, batch=4,
+                        init_seed=7),
+    "gpt-a": ModelConfig("gpt-a", vocab=512, d_model=256, n_heads=4,
+                         d_ff=512, n_blocks=4, seq_len=128, batch=8,
+                         init_seed=1),
+    "gpt-b": ModelConfig("gpt-b", vocab=512, d_model=320, n_heads=5,
+                         d_ff=640, n_blocks=4, seq_len=128, batch=8,
+                         init_seed=2),
+    "gpt-c": ModelConfig("gpt-c", vocab=512, d_model=256, n_heads=4,
+                         d_ff=512, n_blocks=6, seq_len=128, batch=8,
+                         init_seed=3),
+    "gpt-mid": ModelConfig("gpt-mid", vocab=512, d_model=512, n_heads=8,
+                           d_ff=1024, n_blocks=6, seq_len=128, batch=8,
+                           init_seed=4),
+}
+
+# Default configs whose artifacts `make artifacts` builds.  gpt-mid is
+# opt-in (SPARSESWAPS_AOT_CONFIGS env var) to keep artifact builds fast.
+DEFAULT_AOT_CONFIGS = ("tiny", "gpt-a", "gpt-b", "gpt-c")
+
+# Sparsity-pattern variants baked into swap artifacts.
+SWAP_PATTERNS = {"row": 0, "nm2_4": 4, "nm4_8": 8}
+
+# Swap iterations fused into a single artifact call.  k1 keeps exact
+# T_max bookkeeping; k8 amortises per-call overhead (engine ablation).
+SWAP_KS = (1, 8)
+
+
+def swap_chunk_rows(d: int, budget_bytes: int = 96 * 1024 * 1024) -> int:
+    """Row-chunk size R for a swap artifact over width d.
+
+    The fused-XLA search materialises an [R, D, D] f32 intermediate; pick
+    the largest power of two keeping it under ``budget_bytes`` (clamped to
+    [8, 256]).
+    """
+    r = budget_bytes // (d * d * 4)
+    p = 8
+    while p * 2 <= min(r, 256):
+        p *= 2
+    return max(p, 8)

@@ -1,0 +1,62 @@
+"""Pallas Gram-accumulation kernel: G <- G + X^T X, tiled.
+
+Used on the calibration path (Sec 2.1.2 of the paper): the Gram matrix is
+accumulated on-the-fly as calibration batches stream through a layer, so
+the O(B * d_in) activations are never cached — only the O(d_in^2) Gram
+matrix is kept.
+
+TPU mapping: grid ``(d/TI, d/TJ, T/TT)``; each program multiplies a
+TT x TI tile of X with a TT x TJ tile (MXU matmul after transpose) and
+accumulates into a revisited TI x TJ output block initialised from the
+incoming Gram tile.  The token axis is the innermost (sequential) grid
+dimension, so the output block stays resident in VMEM across the whole
+accumulation — one HBM write per tile.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(gin_ref, xi_ref, xj_ref, out_ref):
+    t = pl.program_id(2)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = gin_ref[...]
+
+    xi = xi_ref[...]  # [TT, TI]
+    xj = xj_ref[...]  # [TT, TJ]
+    out_ref[...] += jnp.dot(xi.T, xj, preferred_element_type=jnp.float32)
+
+
+def gram_update_pallas(g, x, *, tile_d: int = 128, tile_t: int = 128,
+                       interpret: bool = True):
+    """Accumulate one activation batch into the Gram matrix.
+
+    Args:
+      g: [D, D] float32 current Gram matrix.
+      x: [T, D] float32 activations (T tokens).
+    Returns:
+      [D, D] float32 updated Gram matrix G + X^T X.
+    """
+    t, d = x.shape
+    ti = tj = min(tile_d, d)
+    tt = min(tile_t, t)
+    assert d % ti == 0 and t % tt == 0, (t, d, tile_d, tile_t)
+
+    grid = (d // ti, d // tj, t // tt)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, tj), lambda i, j, k: (i, j)),
+            pl.BlockSpec((tt, ti), lambda i, j, k: (k, i)),
+            pl.BlockSpec((tt, tj), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((ti, tj), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, d), jnp.float32),
+        interpret=interpret,
+    )(g, x, x)

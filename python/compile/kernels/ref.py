@@ -1,0 +1,153 @@
+"""Pure-jnp reference oracles for the SparseSwaps kernels.
+
+Every Pallas kernel in this package (and the fused-XLA variants in
+``compile.sparseswaps``) is checked against these functions by pytest /
+hypothesis.  The math follows the paper exactly:
+
+  * per-row loss       L(m)     = (w - m*w)^T G (w - m*w)           (Sec 2.1.2)
+  * correlation vector c        = G ((1 - m) * w)                   (Sec 2.1.3)
+  * 1-swap cost        dL(u, p) = 2 w_u c_u + w_u^2 G_uu
+                                  - 2 w_p c_p + w_p^2 G_pp
+                                  - 2 w_u w_p G_up                  (Eq. 5)
+  * c update after accepting (u*, p*):
+                       c <- c + w_u* G[:,u*] - w_p* G[:,p*]         (Eq. 6)
+
+Conventions:
+  * Activations are ``X`` of shape ``[T, D]`` (T = B tokens in the paper's
+    notation, D = d_in); the Gram matrix is ``G = X^T X`` of shape [D, D].
+  * Weight rows follow the paper layout: ``w`` has length d_in; a full
+    weight matrix ``W`` is ``[d_out, d_in]`` so each *row* is pruned
+    independently.
+  * Masks are float arrays of {0.0, 1.0}; ``m_j = 1`` keeps weight j.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Sentinel for infeasible swaps.  Large but finite so that arithmetic with
+# realistic swap costs (|dL| << 1e20) can never make an infeasible pair win.
+BIG = jnp.float32(1e30)
+
+
+def gram(x):
+    """Gram matrix G = X^T X for activations x of shape [T, D]."""
+    x = jnp.asarray(x, jnp.float32)
+    return x.T @ x
+
+
+def gram_accumulate(g, x):
+    """One calibration-batch update: G <- G + X^T X."""
+    return g + gram(x)
+
+
+def row_loss(w, m, g):
+    """Per-row pruning loss (w - m*w)^T G (w - m*w)."""
+    q = (1.0 - m) * w
+    return q @ (g @ q)
+
+
+def batched_row_loss(w, m, g):
+    """Row losses for W, M of shape [R, D]: returns [R]."""
+    q = (1.0 - m) * w
+    return jnp.einsum("rd,rd->r", q, q @ g)
+
+
+def corr(w, m, g):
+    """Correlation vector c = G ((1-m) * w) for a single row."""
+    return g @ ((1.0 - m) * w)
+
+
+def batched_corr(w, m, g):
+    """Correlation vectors for W, M of shape [R, D]: returns [R, D]."""
+    return ((1.0 - m) * w) @ g  # G symmetric: (G q)^T = q^T G
+
+
+def wanda_saliency(w, g):
+    """Wanda criterion |W_ij| * ||X_j||_2 = |W_ij| * sqrt(G_jj).
+
+    w: [R, D] weight rows, g: [D, D] Gram matrix.  (Paper Sec 2.1.1: Wanda
+    is the Jensen upper bound of the row-wise objective.)
+    """
+    return jnp.abs(w) * jnp.sqrt(jnp.clip(jnp.diagonal(g), 0.0))[None, :]
+
+
+def swap_validity(m, nm_block=0):
+    """Boolean validity matrix V[u, p] for 1-swaps on mask row m ([D]).
+
+    u must currently be kept (m_u = 1), p pruned (m_p = 0).  For N:M
+    patterns (nm_block = M > 0), u and p must fall in the same block of
+    ``nm_block`` consecutive indices.
+    """
+    d = m.shape[-1]
+    valid = (m[:, None] > 0.5) & (m[None, :] < 0.5)
+    if nm_block:
+        blk = jnp.arange(d) // nm_block
+        valid = valid & (blk[:, None] == blk[None, :])
+    return valid
+
+
+def delta_matrix(w, m, g, c=None, nm_block=0):
+    """Full dL[u, p] matrix (Eq. 5) for one row; infeasible pairs = BIG."""
+    if c is None:
+        c = corr(w, m, g)
+    diag = jnp.diagonal(g)
+    a_u = 2.0 * w * c + w * w * diag  # term of the newly pruned u
+    b_p = -2.0 * w * c + w * w * diag  # term of the newly kept p
+    inter = -2.0 * jnp.outer(w, w) * g
+    dl = a_u[:, None] + b_p[None, :] + inter
+    return jnp.where(swap_validity(m, nm_block), dl, BIG)
+
+
+def best_swap(w, m, g, c=None, nm_block=0):
+    """Returns (dl, u, p) of the best 1-swap for one row.
+
+    Tie-breaking: first occurrence in row-major (u-major) order, matching
+    ``jnp.argmin`` over the flattened matrix.
+    """
+    d = m.shape[-1]
+    dl = delta_matrix(w, m, g, c, nm_block)
+    idx = jnp.argmin(dl.reshape(-1))
+    return dl.reshape(-1)[idx], idx // d, idx % d
+
+
+def apply_swap(w, m, c, u, p, g):
+    """Accept swap (u, p): flip mask entries and update c per Eq. 6."""
+    m = m.at[u].set(0.0).at[p].set(1.0)
+    c = c + w[u] * g[:, u] - w[p] * g[:, p]
+    return m, c
+
+
+def sparseswaps_row(w, m, g, t_max, nm_block=0, eps=0.0):
+    """Reference Algorithm 1 on a single row (python loop, eager).
+
+    Returns (m, losses) where losses[t] is the loss after t accepted swaps
+    (losses[0] is the warmstart loss).  Terminates early at a 1-swap local
+    optimum.  Used only in tests.
+    """
+    losses = [float(row_loss(w, m, g))]
+    c = corr(w, m, g)
+    for _ in range(t_max):
+        dl, u, p = best_swap(w, m, g, c, nm_block)
+        if not bool(dl < -eps):
+            break
+        m, c = apply_swap(w, m, c, u, p, g)
+        losses.append(float(row_loss(w, m, g)))
+    return m, losses
+
+
+def topk_mask(scores, keep):
+    """Per-row mask keeping the ``keep`` highest-score entries. [R, D]."""
+    order = jnp.argsort(-scores, axis=1)
+    ranks = jnp.argsort(order, axis=1)
+    return (ranks < keep).astype(jnp.float32)
+
+
+def nm_mask(scores, n, m_blk):
+    """N:M mask: keep the N highest-score entries per block of M. [R, D]."""
+    r, d = scores.shape
+    assert d % m_blk == 0
+    s = scores.reshape(r, d // m_blk, m_blk)
+    order = jnp.argsort(-s, axis=2)
+    ranks = jnp.argsort(order, axis=2)
+    return (ranks < n).astype(jnp.float32).reshape(r, d)

@@ -1,0 +1,43 @@
+"""Pallas fused Wanda-saliency kernel: S = |W| * sqrt(diag(G)).
+
+The Wanda criterion (Sun et al., 2024) falls out of the paper's row-wise
+objective as a Jensen upper bound (Sec 2.1.1); with the Gram matrix in
+hand the feature norms are just sqrt(G_jj), so the saliency is a cheap
+fused elementwise kernel — included mostly to exercise the full
+warmstart path through Pallas and as a simple tiling example.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _saliency_kernel(w_ref, d_ref, out_ref):
+    w = w_ref[...]
+    diag = d_ref[0, :]
+    out_ref[...] = jnp.abs(w) * jnp.sqrt(jnp.maximum(diag, 0.0))[None, :]
+
+
+def wanda_saliency_pallas(w, g, *, tile_r: int = 128, tile_d: int = 128,
+                          interpret: bool = True):
+    """Wanda saliency for weight rows w [R, D] given Gram matrix g [D, D]."""
+    r, d = w.shape
+    tr = min(tile_r, r)
+    td = min(tile_d, d)
+    assert r % tr == 0 and d % td == 0, (r, d, tile_r, tile_d)
+    diag = jnp.diagonal(g).reshape(1, d)
+
+    grid = (r // tr, d // td)
+    return pl.pallas_call(
+        _saliency_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, td), lambda i, j: (i, j)),
+            pl.BlockSpec((1, td), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tr, td), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, d), jnp.float32),
+        interpret=interpret,
+    )(w, diag)

@@ -1,0 +1,137 @@
+"""Pallas best-swap kernel: the compute hot-spot of SparseSwaps.
+
+For every row r of a chunk, find
+
+    argmin_{u,p}  dL(u, p) = 2 w_u c_u + w_u^2 G_uu
+                             - 2 w_p c_p + w_p^2 G_pp - 2 w_u w_p G_up
+
+subject to m_u = 1, m_p = 0 (and, for N:M sparsity, block(u) == block(p)).
+
+TPU-oriented design (see DESIGN.md "Hardware adaptation"): the candidate
+matrix dL is *never materialised* in HBM.  The grid is
+``(rows, d/TU, d/TP)``; each program streams one TU x TP tile of G into
+VMEM, forms the Eq.-5 tile with rank-1 broadcasts (VPU work), reduces it
+to a tile-local (min, argmin), and folds that into a per-row running
+minimum held in revisited output blocks — the shared-memory reduction a
+CUDA implementation would use maps onto grid-revisited outputs.
+
+VMEM per program: TU*TP*4B for the G tile plus O(TU+TP) vectors; with the
+default 128x128 tile that is ~64 KiB, far below the ~16 MiB budget, so
+tiles can be raised to 256/512 for production TPUs (block-shape sweep in
+EXPERIMENTS.md section Perf).
+
+On CPU the kernel must run with ``interpret=True`` (Mosaic custom-calls
+cannot execute on the CPU PJRT plugin); the grid then lowers to a
+sequential XLA loop, which is the correctness path, not the perf path.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Plain python float: a jnp scalar would be captured as a traced constant
+# inside the pallas kernel, which pallas_call rejects.
+BIG = 1e30
+
+
+def _best_swap_kernel(
+    # inputs (refs)
+    wu_ref, wp_ref, mu_ref, mp_ref, cu_ref, cp_ref, du_ref, dp_ref, g_ref,
+    # outputs (refs, revisited across the two tile axes)
+    dl_ref, u_ref, p_ref,
+    *, tu: int, tp: int, nm_block: int,
+):
+    iu = pl.program_id(1)
+    ip = pl.program_id(2)
+
+    @pl.when((iu == 0) & (ip == 0))
+    def _init():
+        dl_ref[...] = jnp.full_like(dl_ref, BIG)
+        u_ref[...] = jnp.full_like(u_ref, -1)
+        p_ref[...] = jnp.full_like(p_ref, -1)
+
+    wu = wu_ref[0, :]  # [TU] weights in the u-slice of this row
+    wp = wp_ref[0, :]  # [TP] weights in the p-slice
+    mu = mu_ref[0, :]
+    mp = mp_ref[0, :]
+    cu = cu_ref[0, :]
+    cp = cp_ref[0, :]
+    du = du_ref[0, :]  # diag(G) over the u-slice
+    dp = dp_ref[0, :]
+    g = g_ref[...]  # [TU, TP] tile of G
+
+    # Eq. 5 terms.  a_u: cost contribution of pruning kept index u;
+    # b_p: contribution of reviving pruned index p.
+    a_u = jnp.where(mu > 0.5, 2.0 * wu * cu + wu * wu * du, BIG)
+    b_p = jnp.where(mp < 0.5, -2.0 * wp * cp + wp * wp * dp, BIG)
+    tile = a_u[:, None] + b_p[None, :] - 2.0 * (wu[:, None] * wp[None, :]) * g
+
+    if nm_block:
+        gu = iu * tu + jax.lax.iota(jnp.int32, tu)  # global u indices
+        gp = ip * tp + jax.lax.iota(jnp.int32, tp)
+        same = (gu[:, None] // nm_block) == (gp[None, :] // nm_block)
+        tile = jnp.where(same, tile, BIG)
+
+    flat = tile.reshape(-1)
+    loc = jnp.argmin(flat)
+    tmin = flat[loc]
+    u_loc = (loc // tp).astype(jnp.int32)
+    p_loc = (loc % tp).astype(jnp.int32)
+
+    cur = dl_ref[0]
+    better = tmin < cur
+    dl_ref[0] = jnp.where(better, tmin, cur)
+    u_ref[0] = jnp.where(better, iu * tu + u_loc, u_ref[0])
+    p_ref[0] = jnp.where(better, ip * tp + p_loc, p_ref[0])
+
+
+def best_swap_pallas(w, m, c, g, *, nm_block: int = 0, tile: int = 128,
+                     interpret: bool = True):
+    """Batched best 1-swap search.
+
+    Args:
+      w, m, c: [R, D] float32 — weight rows, masks (0/1), correlation
+        vectors c = G((1-m)*w).
+      g: [D, D] float32 Gram matrix.
+      nm_block: 0 for per-row sparsity, otherwise the M of an N:M pattern.
+      tile: tile edge for both the u and p axes of G.
+
+    Returns:
+      (dl[R] f32, u[R] i32, p[R] i32): the best swap per row; u = p = -1
+      and dl = BIG when the row has no feasible pair.
+    """
+    r, d = w.shape
+    tu = tp = min(tile, d)
+    assert d % tu == 0 and d % tp == 0, (d, tile)
+    if nm_block:
+        assert tu % nm_block == 0, "tile must align with N:M blocks"
+    diag = jnp.diagonal(g).reshape(1, d)
+    w2 = w.reshape(r, d)
+
+    grid = (r, d // tu, d // tp)
+    row_u = pl.BlockSpec((1, tu), lambda i, j, k: (i, j))
+    row_p = pl.BlockSpec((1, tp), lambda i, j, k: (i, k))
+    vec_u = pl.BlockSpec((1, tu), lambda i, j, k: (0, j))
+    vec_p = pl.BlockSpec((1, tp), lambda i, j, k: (0, k))
+    g_spec = pl.BlockSpec((tu, tp), lambda i, j, k: (j, k))
+    out_spec = pl.BlockSpec((1,), lambda i, j, k: (i,))
+
+    kernel = functools.partial(_best_swap_kernel, tu=tu, tp=tp,
+                               nm_block=nm_block)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[row_u, row_p, row_u, row_p, row_u, row_p, vec_u, vec_p,
+                  g_spec],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), jnp.float32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(w2, w2, m, m, c, c, diag, diag, g)

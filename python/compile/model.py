@@ -1,0 +1,231 @@
+"""Layer-2 model: a LLaMA-style tiny GPT in pure JAX.
+
+Build-time only — every entry point here is AOT-lowered by ``aot.py`` to
+HLO text and executed from Rust via PJRT; python never runs at runtime.
+
+Architecture (mirrors the layer taxonomy of the models the paper prunes):
+pre-RMSNorm, multi-head attention with RoPE, SwiGLU MLP, untied LM head.
+The seven prunable linears per block are named after the LLaMA modules
+(``attn.{q,k,v,o}_proj``, ``mlp.{gate,up,down}_proj``); embeddings, norms
+and the final head are never pruned (paper Sec. 3).
+
+Parameters travel as a *flat list* of f32 arrays in the order defined by
+``configs.ModelConfig.layer_shapes()`` — the same order the Rust parameter
+store uses, so both sides index layers by position.
+
+Entry points lowered to artifacts:
+  * ``train_step``  — Adam step, returns updated (params, m, v, step, loss)
+  * ``eval_step``   — summed token NLL + token count (perplexity)
+  * ``seq_nll``     — per-sequence masked NLL (zero-shot choice scoring)
+  * ``calib_step``  — forward pass that accumulates the four Gram streams
+                      and feature sums per block (Sec 2.1.2 on-the-fly
+                      accumulation; DSnoT's mean/variance surrogates need
+                      the feature sums)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import gram as gram_kernels
+
+
+# --- parameter helpers ----------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int | None = None):
+    """Random initialisation, scaled per fan-in (returns the flat list)."""
+    key = jax.random.PRNGKey(cfg.init_seed if seed is None else seed)
+    params = []
+    for name, shape in cfg.layer_shapes():
+        key, sub = jax.random.split(key)
+        if name.endswith("_norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[-1]
+            scale = fan_in ** -0.5
+            params.append(
+                (jax.random.normal(sub, shape, jnp.float32) * scale))
+    return params
+
+
+def _unpack(cfg: ModelConfig, params):
+    """Split the flat list into (tok_emb, blocks, final_norm, lm_head)."""
+    idx = 0
+    tok_emb = params[idx]; idx += 1
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blk = {
+            "attn_norm": params[idx + 0],
+            "wq": params[idx + 1],
+            "wk": params[idx + 2],
+            "wv": params[idx + 3],
+            "wo": params[idx + 4],
+            "mlp_norm": params[idx + 5],
+            "wg": params[idx + 6],
+            "wu": params[idx + 7],
+            "wd": params[idx + 8],
+        }
+        blocks.append(blk)
+        idx += 9
+    final_norm = params[idx]; idx += 1
+    lm_head = params[idx]; idx += 1
+    assert idx == len(params)
+    return tok_emb, blocks, final_norm, lm_head
+
+
+# --- building blocks -------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope(x, theta: float):
+    """Rotary position embedding over [B, H, L, Hd]."""
+    b, h, l, hd = x.shape
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(l, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]  # [L, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention(cfg: ModelConfig, blk, h):
+    """h: [B, L, dm] normed input -> attention output [B, L, dm]."""
+    b, l, dm = h.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+
+    def proj(w):  # w: [d_out, d_in] paper layout
+        return jnp.einsum("bld,od->blo", h, w)
+
+    q = proj(blk["wq"]).reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    k = proj(blk["wk"]).reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    v = proj(blk["wv"]).reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    q = rope(q, cfg.rope_theta)
+    k = rope(k, cfg.rope_theta)
+
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((l, l), jnp.bool_))
+    scores = jnp.where(causal[None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, l, dm)
+
+
+def forward(cfg: ModelConfig, params, tokens, capture: bool = False):
+    """Forward pass.  tokens: [B, L] int32.
+
+    Returns (logits [B, L, V], captures) where captures is a list of one
+    dict per block with the four activation streams, flattened to
+    [B*L, width] — only populated when ``capture`` is True.
+    """
+    tok_emb, blocks, final_norm, lm_head = _unpack(cfg, params)
+    x = tok_emb[tokens]  # [B, L, dm]
+    caps = []
+    for blk in blocks:
+        h = rmsnorm(x, blk["attn_norm"])
+        attn_out = _attention(cfg, blk, h)
+        x = x + jnp.einsum("bld,od->blo", attn_out, blk["wo"])
+        h2 = rmsnorm(x, blk["mlp_norm"])
+        g = jnp.einsum("bld,od->blo", h2, blk["wg"])
+        u = jnp.einsum("bld,od->blo", h2, blk["wu"])
+        d_in = jax.nn.silu(g) * u
+        x = x + jnp.einsum("bld,od->blo", d_in, blk["wd"])
+        if capture:
+            flat = lambda a: a.reshape(-1, a.shape[-1])
+            caps.append({
+                "qkv": flat(h),
+                "o": flat(attn_out),
+                "gu": flat(h2),
+                "down": flat(d_in),
+            })
+    x = rmsnorm(x, final_norm)
+    logits = jnp.einsum("bld,vd->blv", x, lm_head)
+    return logits, caps
+
+
+# --- losses / entry points --------------------------------------------------
+
+def token_nll(logits, targets):
+    """Per-token negative log-likelihood. [B, L]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets):
+    logits, _ = forward(cfg, params, tokens)
+    return jnp.mean(token_nll(logits, targets))
+
+
+def train_step(cfg: ModelConfig, params, m, v, step, tokens, targets, lr,
+               b1=0.9, b2=0.999, adam_eps=1e-8, clip=1.0):
+    """One Adam step with global-norm gradient clipping."""
+    loss, grads = jax.value_and_grad(
+        functools.partial(loss_fn, cfg))(params, tokens, targets)
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads) + 1e-12)
+    scale = jnp.minimum(1.0, clip / gnorm)
+    grads = [g * scale for g in grads]
+    step = step + 1
+    stepf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** stepf
+    bc2 = 1.0 - b2 ** stepf
+    new_p, new_m, new_v = [], [], []
+    for p, mi, vi, g in zip(params, m, v, grads):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * g * g
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + adam_eps)
+        new_p.append(p - lr * upd)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, step, loss
+
+
+def eval_step(cfg: ModelConfig, params, tokens, targets):
+    """Summed NLL and token count over the batch (perplexity building block)."""
+    logits, _ = forward(cfg, params, tokens)
+    nll = token_nll(logits, targets)
+    return jnp.sum(nll), jnp.float32(nll.size)
+
+
+def seq_nll(cfg: ModelConfig, params, tokens, targets, mask):
+    """Masked per-sequence NLL [B] — lm-eval-style choice scoring."""
+    logits, _ = forward(cfg, params, tokens)
+    nll = token_nll(logits, targets)
+    return jnp.sum(nll * mask, axis=1)
+
+
+def calib_step(cfg: ModelConfig, params, tokens,
+               g_qkv, g_o, g_gu, g_down, s_qkv, s_o, s_gu, s_down,
+               use_pallas_gram: bool = False):
+    """Accumulate the four Gram streams + feature sums for every block.
+
+    g_qkv/g_o/g_gu: [n_blocks, dm, dm]; g_down: [n_blocks, dff, dff];
+    s_*: matching [n_blocks, width] feature sums (for DSnoT's mean /
+    variance surrogates; variances come from diag(G) and the sums).
+
+    The Gram update itself is the L1 Pallas kernel when
+    ``use_pallas_gram`` (TPU path / kernel-integration artifact variant);
+    the default XLA dot is the fast CPU path — both are tested against
+    ``kernels.ref.gram_accumulate``.
+    """
+    _, caps = forward(cfg, params, tokens, capture=True)
+    gs = {"qkv": g_qkv, "o": g_o, "gu": g_gu, "down": g_down}
+    ss = {"qkv": s_qkv, "o": s_o, "gu": s_gu, "down": s_down}
+    for b, cap in enumerate(caps):
+        for stream in ("qkv", "o", "gu", "down"):
+            x = cap[stream]  # [T, width]
+            if use_pallas_gram:
+                upd = gram_kernels.gram_update_pallas(gs[stream][b], x)
+            else:
+                upd = gs[stream][b] + x.T @ x
+            gs[stream] = gs[stream].at[b].set(upd)
+            ss[stream] = ss[stream].at[b].add(jnp.sum(x, axis=0))
+    return (gs["qkv"], gs["o"], gs["gu"], gs["down"],
+            ss["qkv"], ss["o"], ss["gu"], ss["down"])

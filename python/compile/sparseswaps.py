@@ -1,0 +1,114 @@
+"""Layer-2 SparseSwaps step: batched 1-swap refinement over a row chunk.
+
+This is the function that gets AOT-lowered (via ``compile.aot``) into the
+``swap_step_*`` artifacts the Rust coordinator executes on its hot path.
+
+Semantics (paper Algorithm 1, vectorised over a chunk of rows):
+
+  inputs   W [R, D]  weight rows (paper layout, d_in last)
+           M [R, D]  warmstart masks in {0, 1}
+           G [D, D]  Gram matrix of the layer's calibration inputs
+  compute  c = G((1-m) * w) per row, then K best-swap iterations; each
+           iteration evaluates all feasible (u, p) pairs via Eq. 5,
+           accepts the best pair iff dL < 0 (strict decrease — the paper's
+           stopping rule with eps = 0) and applies the Eq. 6 update to c.
+  outputs  M'        refined masks
+           L_before  exact per-row loss of the warmstart        [R]
+           L_after   exact per-row loss of the refined mask     [R]
+           swaps     number of accepted swaps per row (f32)     [R]
+
+K is baked into the artifact (``k_iters``); the Rust coordinator chains
+calls until every row converges or its T_max budget is exhausted, and
+compacts converged rows out of the chunk between calls.
+
+Two interchangeable implementations of the inner best-swap search:
+
+  * ``impl="xla"``     — fused XLA broadcast + argmin (fast on CPU PJRT);
+  * ``impl="pallas"``  — the L1 tiled kernel (``kernels.swap``), the
+    TPU-shaped path, lowered with interpret=True on CPU.
+
+Both decrease the *identical* exact objective; they may differ in
+tie-breaking, so tests compare achieved losses, not indices.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import swap as swap_kernels
+
+BIG = jnp.float32(1e30)
+
+
+def _best_swap_xla(w, m, c, g, diag, nm_block):
+    """Fused-XLA batched best-swap: returns (dl[R], u[R], p[R])."""
+    r, d = w.shape
+    a_u = jnp.where(m > 0.5, 2.0 * w * c + w * w * diag, BIG)  # [R, D]
+    b_p = jnp.where(m < 0.5, -2.0 * w * c + w * w * diag, BIG)  # [R, D]
+    tile = (a_u[:, :, None] + b_p[:, None, :]
+            - 2.0 * (w[:, :, None] * w[:, None, :]) * g[None, :, :])
+    if nm_block:
+        blk = jnp.arange(d) // nm_block
+        same = blk[:, None] == blk[None, :]
+        tile = jnp.where(same[None, :, :], tile, BIG)
+    flat = tile.reshape(r, d * d)
+    idx = jnp.argmin(flat, axis=1)
+    dl = jnp.take_along_axis(flat, idx[:, None], axis=1)[:, 0]
+    return dl, (idx // d).astype(jnp.int32), (idx % d).astype(jnp.int32)
+
+
+def swap_step(w, m, g, *, k_iters: int, nm_block: int = 0,
+              impl: str = "xla", tile: int = 128, interpret: bool = True):
+    """Run up to ``k_iters`` exact 1-swap iterations on a chunk of rows."""
+    r, d = w.shape
+    diag = jnp.diagonal(g)
+
+    q0 = (1.0 - m) * w
+    l_before = jnp.einsum("rd,rd->r", q0, q0 @ g)
+    c0 = q0 @ g  # == G q per row (G symmetric)
+
+    if impl == "xla":
+        search = functools.partial(_best_swap_xla, g=g, diag=diag,
+                                   nm_block=nm_block)
+    elif impl == "pallas":
+        def search(w_, m_, c_):
+            return swap_kernels.best_swap_pallas(
+                w_, m_, c_, g, nm_block=nm_block, tile=tile,
+                interpret=interpret)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+
+    def body(_, state):
+        m_, c_, nswaps = state
+        dl, u, p = search(w, m_, c_)
+        # Strict-decrease acceptance; rows at a local optimum (dl >= 0) or
+        # without feasible pairs (u = -1, dl = BIG) become no-ops.
+        accept = (dl < 0.0) & (u >= 0)
+        acc = accept.astype(jnp.float32)
+        u_safe = jnp.maximum(u, 0)
+        p_safe = jnp.maximum(p, 0)
+        oh_u = jax.nn.one_hot(u_safe, d, dtype=jnp.float32) * acc[:, None]
+        oh_p = jax.nn.one_hot(p_safe, d, dtype=jnp.float32) * acc[:, None]
+        m_new = m_ - oh_u + oh_p
+        wu = jnp.take_along_axis(w, u_safe[:, None], axis=1)[:, 0] * acc
+        wp = jnp.take_along_axis(w, p_safe[:, None], axis=1)[:, 0] * acc
+        c_new = c_ + wu[:, None] * g[u_safe, :] - wp[:, None] * g[p_safe, :]
+        return m_new, c_new, nswaps + acc
+
+    m_out, _, nswaps = jax.lax.fori_loop(
+        0, k_iters, body, (m, c0, jnp.zeros((r,), jnp.float32)))
+
+    # Exact loss of the refined mask, recomputed from scratch so the
+    # reported value carries no accumulated floating-point drift.
+    q1 = (1.0 - m_out) * w
+    l_after = jnp.einsum("rd,rd->r", q1, q1 @ g)
+    return m_out, l_before, l_after, nswaps
+
+
+def row_losses(w, m, g):
+    """Standalone exact per-row loss (used by the `layer_loss` artifact)."""
+    q = (1.0 - m) * w
+    return jnp.einsum("rd,rd->r", q, q @ g)

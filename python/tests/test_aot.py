@@ -1,0 +1,101 @@
+"""AOT pipeline tests: manifest consistency and HLO text sanity.
+
+Full lowering of the zoo takes minutes, so these tests lower only the
+`tiny` config into a temp dir and validate the manifest contract the Rust
+loader depends on.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.configs import (MODEL_CONFIGS, PRUNABLE_LAYERS,
+                             swap_chunk_rows)
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    rc = aot.main(["--out", str(out), "--configs", "tiny"])
+    assert rc == 0
+    with open(out / "manifest.json") as f:
+        return str(out), json.load(f)
+
+
+class TestManifest:
+    def test_artifact_files_exist(self, built):
+        out, manifest = built
+        for name, entry in manifest["artifacts"].items():
+            path = os.path.join(out, entry["file"])
+            assert os.path.exists(path), name
+            head = open(path).read(200)
+            assert head.startswith("HloModule"), name
+
+    def test_config_metadata(self, built):
+        _, manifest = built
+        cfg = manifest["configs"]["tiny"]
+        mc = MODEL_CONFIGS["tiny"]
+        assert cfg["d_model"] == mc.d_model
+        assert len(cfg["params"]) == len(mc.layer_shapes())
+        prunable = cfg["prunable"]
+        assert len(prunable) == mc.n_blocks * len(PRUNABLE_LAYERS)
+        # Every prunable entry points at a weight with matching dims.
+        for p in prunable:
+            dims = cfg["params"][p["param_index"]]["dims"]
+            assert dims == [p["d_out"], p["d_in"]]
+            assert p["layer_type"] in PRUNABLE_LAYERS
+
+    def test_train_step_signature_round_trip(self, built):
+        _, manifest = built
+        cfg = manifest["configs"]["tiny"]
+        entry = manifest["artifacts"]["train_step_tiny"]
+        n_params = len(cfg["params"])
+        # inputs: params + m + v + step + tokens + targets + lr
+        assert len(entry["inputs"]) == 3 * n_params + 4
+        # outputs: params + m + v + step + loss
+        assert len(entry["outputs"]) == 3 * n_params + 2
+
+    def test_swap_step_signatures(self, built):
+        _, manifest = built
+        mc = MODEL_CONFIGS["tiny"]
+        for d in mc.prunable_widths():
+            r = swap_chunk_rows(d)
+            name = f"swap_step_d{d}_row_xla_k1"
+            entry = manifest["artifacts"][name]
+            assert entry["inputs"][0]["dims"] == [r, d]
+            assert entry["inputs"][2]["dims"] == [d, d]
+            assert [o["dims"] for o in entry["outputs"]] == [
+                [r, d], [r], [r], [r]]
+            assert entry["chunk_rows"] == r
+
+    def test_layer_loss_artifacts_present(self, built):
+        _, manifest = built
+        for d in MODEL_CONFIGS["tiny"].prunable_widths():
+            assert f"layer_loss_d{d}" in manifest["artifacts"]
+
+    def test_calib_step_signature(self, built):
+        _, manifest = built
+        cfg = manifest["configs"]["tiny"]
+        entry = manifest["artifacts"]["calib_step_tiny"]
+        n_params = len(cfg["params"])
+        # params + tokens + 4 gram stacks + 4 sum stacks
+        assert len(entry["inputs"]) == n_params + 1 + 8
+        assert len(entry["outputs"]) == 8
+        nb, dm, dff = cfg["n_blocks"], cfg["d_model"], cfg["d_ff"]
+        assert entry["inputs"][n_params + 1]["dims"] == [nb, dm, dm]
+        assert entry["inputs"][n_params + 4]["dims"] == [nb, dff, dff]
+
+
+class TestChunkRows:
+    def test_budget_respected(self):
+        for d in (64, 128, 256, 512, 640, 1024):
+            r = swap_chunk_rows(d)
+            assert 8 <= r <= 256
+            assert r * d * d * 4 <= 96 * 1024 * 1024 or r == 8
+
+    def test_power_of_two(self):
+        for d in (64, 256, 512):
+            r = swap_chunk_rows(d)
+            assert r & (r - 1) == 0

@@ -1,0 +1,213 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes / sparsities / tile sizes; every property asserts
+allclose against the reference.  These tests are the core correctness
+signal for the kernels that get AOT-lowered into the runtime artifacts.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram, ref, saliency, swap
+
+SETTINGS = dict(deadline=None, max_examples=15)
+
+
+def _instance(seed, rows, d, t, keep_frac=0.5, nm=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, d)).astype(np.float32)
+    g = np.asarray(ref.gram(x))
+    w = rng.normal(size=(rows, d)).astype(np.float32)
+    scores = np.abs(w) * np.sqrt(np.diag(g))[None]
+    if nm:
+        m = np.asarray(ref.nm_mask(jnp.asarray(scores), nm // 2, nm))
+    else:
+        m = np.asarray(ref.topk_mask(jnp.asarray(scores),
+                                     max(1, int(d * keep_frac))))
+    c = np.asarray(ref.batched_corr(w, m, g))
+    return w, m, c, g
+
+
+class TestBestSwapKernel:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 10_000),
+           rows=st.sampled_from([1, 2, 5]),
+           d=st.sampled_from([32, 64, 128]),
+           keep=st.sampled_from([0.25, 0.5, 0.75]))
+    def test_matches_reference_row_pattern(self, seed, rows, d, keep):
+        w, m, c, g = _instance(seed, rows, d, t=48, keep_frac=keep)
+        dl, u, p = swap.best_swap_pallas(
+            jnp.asarray(w), jnp.asarray(m), jnp.asarray(c), jnp.asarray(g),
+            tile=32)
+        for r in range(rows):
+            dl_ref, _, _ = ref.best_swap(jnp.asarray(w[r]), jnp.asarray(m[r]),
+                                         jnp.asarray(g))
+            np.testing.assert_allclose(float(dl[r]), float(dl_ref),
+                                       rtol=1e-4, atol=1e-2)
+            # Returned indices must describe a feasible pair achieving dl.
+            uu, pp = int(u[r]), int(p[r])
+            assert m[r, uu] == 1.0 and m[r, pp] == 0.0
+            full = np.asarray(ref.delta_matrix(jnp.asarray(w[r]),
+                                               jnp.asarray(m[r]),
+                                               jnp.asarray(g)))
+            np.testing.assert_allclose(float(dl[r]), full[uu, pp],
+                                       rtol=1e-4, atol=1e-2)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 10_000), d=st.sampled_from([32, 64, 128]),
+           nm=st.sampled_from([4, 8]))
+    def test_matches_reference_nm_pattern(self, seed, d, nm):
+        w, m, c, g = _instance(seed, 3, d, t=48, nm=nm)
+        dl, u, p = swap.best_swap_pallas(
+            jnp.asarray(w), jnp.asarray(m), jnp.asarray(c), jnp.asarray(g),
+            nm_block=nm, tile=32)
+        for r in range(3):
+            dl_ref, _, _ = ref.best_swap(jnp.asarray(w[r]), jnp.asarray(m[r]),
+                                         jnp.asarray(g), nm_block=nm)
+            np.testing.assert_allclose(float(dl[r]), float(dl_ref),
+                                       rtol=1e-4, atol=1e-2)
+            uu, pp = int(u[r]), int(p[r])
+            assert uu // nm == pp // nm, "swap crossed an N:M block"
+
+    @pytest.mark.parametrize("tile", [16, 32, 64, 128])
+    def test_tile_size_invariance(self, tile):
+        w, m, c, g = _instance(3, 4, 128, t=64)
+        dl, _, _ = swap.best_swap_pallas(
+            jnp.asarray(w), jnp.asarray(m), jnp.asarray(c), jnp.asarray(g),
+            tile=tile)
+        dl_ref = np.array([
+            float(ref.best_swap(jnp.asarray(w[r]), jnp.asarray(m[r]),
+                                jnp.asarray(g))[0]) for r in range(4)])
+        np.testing.assert_allclose(np.asarray(dl), dl_ref, rtol=1e-4,
+                                   atol=1e-2)
+
+    def test_all_kept_row_has_no_feasible_swap(self):
+        w, m, c, g = _instance(0, 2, 32, t=16)
+        m = np.array(m)
+        m[0, :] = 1.0  # nothing pruned: no (u, p) pair exists
+        c = np.asarray(ref.batched_corr(w, m, g))
+        dl, u, p = swap.best_swap_pallas(
+            jnp.asarray(w), jnp.asarray(m), jnp.asarray(c), jnp.asarray(g),
+            tile=32)
+        assert float(dl[0]) >= 1e29 and int(u[0]) == -1 and int(p[0]) == -1
+
+    def test_under_jit(self):
+        w, m, c, g = _instance(9, 2, 64, t=32)
+        f = jax.jit(lambda *a: swap.best_swap_pallas(*a, tile=32))
+        dl, _, _ = f(jnp.asarray(w), jnp.asarray(m), jnp.asarray(c),
+                     jnp.asarray(g))
+        dl_ref, _, _ = ref.best_swap(jnp.asarray(w[0]), jnp.asarray(m[0]),
+                                     jnp.asarray(g))
+        np.testing.assert_allclose(float(dl[0]), float(dl_ref), rtol=1e-4,
+                                   atol=1e-2)
+
+
+class TestGramKernel:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 10_000),
+           d=st.sampled_from([32, 64, 128]),
+           t=st.sampled_from([32, 64, 128]))
+    def test_matches_reference(self, seed, d, t):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(size=(t, d)).astype(np.float32)
+        g0 = rng.normal(size=(d, d)).astype(np.float32)
+        g0 = g0 + g0.T
+        out = gram.gram_update_pallas(jnp.asarray(g0), jnp.asarray(x),
+                                      tile_d=32, tile_t=32)
+        want = np.asarray(ref.gram_accumulate(jnp.asarray(g0),
+                                              jnp.asarray(x)))
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-4,
+                                   atol=1e-2)
+
+    def test_accumulation_chain_matches_single_shot(self):
+        rng = np.random.default_rng(1)
+        xs = [rng.normal(size=(64, 64)).astype(np.float32) for _ in range(4)]
+        g = jnp.zeros((64, 64), jnp.float32)
+        for x in xs:
+            g = gram.gram_update_pallas(g, jnp.asarray(x), tile_d=32,
+                                        tile_t=32)
+        whole = np.concatenate(xs, axis=0)
+        np.testing.assert_allclose(np.asarray(g), whole.T @ whole, rtol=1e-4,
+                                   atol=1e-1)
+
+
+class TestSaliencyKernel:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 10_000), rows=st.sampled_from([16, 64]),
+           d=st.sampled_from([32, 128]))
+    def test_matches_reference(self, seed, rows, d):
+        rng = np.random.default_rng(seed)
+        w = rng.normal(size=(rows, d)).astype(np.float32)
+        x = rng.normal(size=(64, d)).astype(np.float32)
+        g = np.asarray(ref.gram(x))
+        out = saliency.wanda_saliency_pallas(jnp.asarray(w), jnp.asarray(g),
+                                             tile_r=16, tile_d=32)
+        want = np.asarray(ref.wanda_saliency(jnp.asarray(w), jnp.asarray(g)))
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestReferenceInternals:
+    """Sanity checks on the oracle itself (it anchors everything else)."""
+
+    def test_loss_equals_residual_norm(self):
+        # L = ||(w - m*w)^T X||^2 must equal the Gram form (Sec 2.1.2).
+        rng = np.random.default_rng(0)
+        x = rng.normal(size=(40, 16)).astype(np.float32)
+        w = rng.normal(size=16).astype(np.float32)
+        m = (rng.random(16) > 0.5).astype(np.float32)
+        direct = float(np.sum(((1 - m) * w @ x.T) ** 2))
+        viagram = float(ref.row_loss(jnp.asarray(w), jnp.asarray(m),
+                                     jnp.asarray(ref.gram(x))))
+        np.testing.assert_allclose(direct, viagram, rtol=1e-4)
+
+    def test_delta_matches_recomputed_loss(self):
+        # dL(u,p) from Eq. 5 must equal L(m') - L(m) exactly.
+        rng = np.random.default_rng(4)
+        x = rng.normal(size=(32, 12)).astype(np.float32)
+        g = jnp.asarray(ref.gram(x))
+        w = jnp.asarray(rng.normal(size=12).astype(np.float32))
+        m = np.ones(12, np.float32)
+        m[[1, 5, 7, 8]] = 0.0
+        m = jnp.asarray(m)
+        dl = np.asarray(ref.delta_matrix(w, m, g))
+        base = float(ref.row_loss(w, m, g))
+        for u in range(12):
+            for p in range(12):
+                if m[u] == 1.0 and m[p] == 0.0:
+                    m2 = m.at[u].set(0.0).at[p].set(1.0)
+                    np.testing.assert_allclose(
+                        dl[u, p], float(ref.row_loss(w, m2, g)) - base,
+                        rtol=1e-3, atol=1e-2)
+
+    def test_corr_update_consistency(self):
+        # Eq. 6 incremental update == recomputation from scratch.
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(32, 16)).astype(np.float32)
+        g = jnp.asarray(ref.gram(x))
+        w = jnp.asarray(rng.normal(size=16).astype(np.float32))
+        m, _ = jnp.asarray(np.r_[np.ones(8), np.zeros(8)].astype(np.float32)), None
+        c = ref.corr(w, m, g)
+        m2, c2 = ref.apply_swap(w, m, c, 2, 11, g)
+        np.testing.assert_allclose(np.asarray(c2),
+                                   np.asarray(ref.corr(w, m2, g)),
+                                   rtol=1e-4, atol=1e-2)
+
+    def test_paper_counterexample_greedy_vs_joint(self):
+        """The paper's Sec 2.1.3 example: greedy separate (p, u) choice is
+        detrimental; the joint best 1-swap reaches L = 1 from L = 81."""
+        # B = 1, d_in = 4: pruned contributions {+10, -1}, unpruned {+9, -9}.
+        # Take X = ones so w_j phi_j = w_j.
+        x = np.ones((1, 4), np.float32)
+        g = jnp.asarray(ref.gram(x))
+        w = jnp.asarray(np.array([10.0, -1.0, 9.0, -9.0], np.float32))
+        m = jnp.asarray(np.array([0.0, 0.0, 1.0, 1.0], np.float32))
+        assert float(ref.row_loss(w, m, g)) == pytest.approx(81.0)
+        dl, u, p = ref.best_swap(w, m, g)
+        # Best joint swap: prune w_3 = -9 (index 3), keep w_1 = -1 (index 1).
+        assert (int(u), int(p)) == (3, 1)
+        m2, _ = ref.apply_swap(w, m, ref.corr(w, m, g), int(u), int(p), g)
+        assert float(ref.row_loss(w, m2, g)) == pytest.approx(1.0)

@@ -1,0 +1,174 @@
+"""L2 model tests: shapes, trainability, calibration statistics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as model_lib
+from compile.configs import MODEL_CONFIGS
+from compile.kernels import ref
+
+CFG = MODEL_CONFIGS["tiny"]
+
+
+def _params():
+    return model_lib.init_params(CFG)
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, CFG.vocab, size=(CFG.batch, CFG.seq_len))
+    targets = np.roll(tokens, -1, axis=1)
+    return jnp.asarray(tokens, jnp.int32), jnp.asarray(targets, jnp.int32)
+
+
+class TestForward:
+    def test_shapes(self):
+        tokens, _ = _batch()
+        logits, caps = model_lib.forward(CFG, _params(), tokens,
+                                         capture=True)
+        assert logits.shape == (CFG.batch, CFG.seq_len, CFG.vocab)
+        assert len(caps) == CFG.n_blocks
+        t = CFG.batch * CFG.seq_len
+        for cap in caps:
+            assert cap["qkv"].shape == (t, CFG.d_model)
+            assert cap["o"].shape == (t, CFG.d_model)
+            assert cap["gu"].shape == (t, CFG.d_model)
+            assert cap["down"].shape == (t, CFG.d_ff)
+
+    def test_causality(self):
+        """Changing a future token must not change past logits."""
+        tokens, _ = _batch()
+        logits1, _ = model_lib.forward(CFG, _params(), tokens)
+        tokens2 = tokens.at[:, -1].set((tokens[:, -1] + 1) % CFG.vocab)
+        logits2, _ = model_lib.forward(CFG, _params(), tokens2)
+        np.testing.assert_allclose(np.asarray(logits1[:, :-1]),
+                                   np.asarray(logits2[:, :-1]),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_initial_loss_near_uniform(self):
+        tokens, targets = _batch()
+        loss = model_lib.loss_fn(CFG, _params(), tokens, targets)
+        assert abs(float(loss) - np.log(CFG.vocab)) < 1.0
+
+
+class TestTrainStep:
+    def test_loss_decreases(self):
+        params = _params()
+        m = [jnp.zeros_like(p) for p in params]
+        v = [jnp.zeros_like(p) for p in params]
+        step = jnp.int32(0)
+        tokens, targets = _batch()
+        fn = jax.jit(lambda p, m_, v_, s, tk, tg: model_lib.train_step(
+            CFG, p, m_, v_, s, tk, tg, jnp.float32(1e-3)))
+        first = None
+        for _ in range(12):
+            params, m, v, step, loss = fn(params, m, v, step, tokens,
+                                          targets)
+            first = first if first is not None else float(loss)
+        assert float(loss) < first - 0.3, (first, float(loss))
+        assert int(step) == 12
+
+
+class TestEval:
+    def test_eval_matches_loss(self):
+        params = _params()
+        tokens, targets = _batch()
+        nll_sum, count = model_lib.eval_step(CFG, params, tokens, targets)
+        loss = model_lib.loss_fn(CFG, params, tokens, targets)
+        np.testing.assert_allclose(float(nll_sum) / float(count),
+                                   float(loss), rtol=1e-4)
+
+    def test_seq_nll_consistency(self):
+        """seq_nll with an all-ones mask sums to eval_step's total."""
+        params = _params()
+        tokens, targets = _batch()
+        mask = jnp.ones((CFG.batch, CFG.seq_len), jnp.float32)
+        per_seq = model_lib.seq_nll(CFG, params, tokens, targets, mask)
+        nll_sum, _ = model_lib.eval_step(CFG, params, tokens, targets)
+        np.testing.assert_allclose(float(jnp.sum(per_seq)), float(nll_sum),
+                                   rtol=1e-4)
+
+    def test_seq_nll_mask_zeroes_out(self):
+        params = _params()
+        tokens, targets = _batch()
+        mask = jnp.zeros((CFG.batch, CFG.seq_len), jnp.float32)
+        per_seq = model_lib.seq_nll(CFG, params, tokens, targets, mask)
+        np.testing.assert_allclose(np.asarray(per_seq), 0.0, atol=1e-6)
+
+
+class TestCalibStep:
+    def _zeros_stats(self):
+        nb, dm, dff = CFG.n_blocks, CFG.d_model, CFG.d_ff
+        gs = (jnp.zeros((nb, dm, dm)), jnp.zeros((nb, dm, dm)),
+              jnp.zeros((nb, dm, dm)), jnp.zeros((nb, dff, dff)))
+        ss_ = (jnp.zeros((nb, dm)), jnp.zeros((nb, dm)), jnp.zeros((nb, dm)),
+               jnp.zeros((nb, dff)))
+        return gs, ss_
+
+    def test_grams_match_captured_activations(self):
+        params = _params()
+        tokens, _ = _batch()
+        gs, ss_ = self._zeros_stats()
+        out = model_lib.calib_step(CFG, params, tokens, *gs, *ss_)
+        g_qkv, g_o, g_gu, g_down = out[:4]
+        s_qkv = out[4]
+        _, caps = model_lib.forward(CFG, params, tokens, capture=True)
+        for b, cap in enumerate(caps):
+            np.testing.assert_allclose(
+                np.asarray(g_qkv[b]), np.asarray(ref.gram(cap["qkv"])),
+                rtol=1e-3, atol=1e-2)
+            np.testing.assert_allclose(
+                np.asarray(g_down[b]), np.asarray(ref.gram(cap["down"])),
+                rtol=1e-3, atol=1e-2)
+            np.testing.assert_allclose(
+                np.asarray(s_qkv[b]),
+                np.asarray(jnp.sum(cap["qkv"], axis=0)), rtol=1e-3,
+                atol=1e-2)
+
+    def test_accumulates_across_batches(self):
+        params = _params()
+        gs, ss_ = self._zeros_stats()
+        t1, _ = _batch(1)
+        t2, _ = _batch(2)
+        out1 = model_lib.calib_step(CFG, params, t1, *gs, *ss_)
+        out2 = model_lib.calib_step(CFG, params, t2, *out1)
+        # Same as summing the two single-batch updates.
+        outb = model_lib.calib_step(CFG, params, t2, *gs, *ss_)
+        np.testing.assert_allclose(
+            np.asarray(out2[0]), np.asarray(out1[0]) + np.asarray(outb[0])
+            - 0.0, rtol=1e-3, atol=5e-2)
+
+    def test_grams_are_psd(self):
+        params = _params()
+        tokens, _ = _batch()
+        gs, ss_ = self._zeros_stats()
+        out = model_lib.calib_step(CFG, params, tokens, *gs, *ss_)
+        for g_stack in out[:4]:
+            for b in range(CFG.n_blocks):
+                evals = np.linalg.eigvalsh(np.asarray(g_stack[b]))
+                assert evals.min() > -1e-1, evals.min()
+
+    def test_pallas_gram_variant_matches(self):
+        params = _params()
+        tokens, _ = _batch()
+        gs, ss_ = self._zeros_stats()
+        out_x = model_lib.calib_step(CFG, params, tokens, *gs, *ss_)
+        out_p = model_lib.calib_step(CFG, params, tokens, *gs, *ss_,
+                                     use_pallas_gram=True)
+        for a, b in zip(out_x, out_p):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=1e-2)
+
+
+class TestInit:
+    def test_param_order_matches_config(self):
+        params = _params()
+        shapes = [tuple(s) for _, s in CFG.layer_shapes()]
+        assert [p.shape for p in params] == shapes
+
+    def test_deterministic(self):
+        a = model_lib.init_params(CFG)
+        b = model_lib.init_params(CFG)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

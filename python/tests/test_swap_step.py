@@ -1,0 +1,148 @@
+"""L2 swap-step semantics: the batched Algorithm 1 that becomes the
+``swap_step_*`` runtime artifacts.
+
+Invariants checked (mirroring the Rust property tests so the native and
+offload engines agree on semantics):
+  * monotone, exact loss decrease (paper Prop 2.1);
+  * sparsity pattern preserved (per-row counts / N:M block counts);
+  * both impls ("xla" fused vs "pallas" L1 kernel) achieve the same loss;
+  * a converged chunk is a 1-swap local optimum (exhaustively verified);
+  * results match the eager single-row reference loop.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import sparseswaps as ss
+from compile.kernels import ref
+
+SETTINGS = dict(deadline=None, max_examples=12)
+
+
+def _instance(seed, rows, d, t=48, keep_frac=0.5, nm=0, warmstart="wanda"):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(t, d)).astype(np.float32)
+    g = np.asarray(ref.gram(x))
+    w = rng.normal(size=(rows, d)).astype(np.float32)
+    if warmstart == "wanda":
+        scores = np.abs(w) * np.sqrt(np.diag(g))[None]
+    elif warmstart == "magnitude":
+        scores = np.abs(w)
+    else:  # random
+        scores = rng.random((rows, d)).astype(np.float32)
+    if nm:
+        m = np.asarray(ref.nm_mask(jnp.asarray(scores), nm // 2, nm))
+    else:
+        m = np.asarray(ref.topk_mask(jnp.asarray(scores),
+                                     max(1, int(d * keep_frac))))
+    return (jnp.asarray(w), jnp.asarray(m), jnp.asarray(g))
+
+
+class TestSwapStepInvariants:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 10_000), d=st.sampled_from([32, 64]),
+           k=st.sampled_from([1, 3, 8]),
+           warmstart=st.sampled_from(["wanda", "magnitude", "random"]))
+    def test_monotone_and_pattern_preserving(self, seed, d, k, warmstart):
+        w, m, g = _instance(seed, 4, d, warmstart=warmstart)
+        m2, lb, la, ns = ss.swap_step(w, m, g, k_iters=k)
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert np.all(la <= lb * (1 + 1e-5) + 1e-4)
+        np.testing.assert_array_equal(np.asarray(m2).sum(1),
+                                      np.asarray(m).sum(1))
+        assert set(np.unique(np.asarray(m2))) <= {0.0, 1.0}
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 10_000), nm=st.sampled_from([4, 8]))
+    def test_nm_block_counts_preserved(self, seed, nm):
+        w, m, g = _instance(seed, 4, 64, nm=nm)
+        m2, lb, la, _ = ss.swap_step(w, m, g, k_iters=5, nm_block=nm)
+        blocks = np.asarray(m2).reshape(4, 64 // nm, nm).sum(2)
+        assert np.all(blocks == nm // 2)
+        assert np.all(np.asarray(la) <= np.asarray(lb) + 1e-4)
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 10_000), d=st.sampled_from([32, 64]))
+    def test_impl_equivalence(self, seed, d):
+        """Fused-XLA and Pallas engines reach the same loss (tie-breaking
+        may differ, so masks can differ; the objective may not)."""
+        w, m, g = _instance(seed, 3, d)
+        _, _, la_x, ns_x = ss.swap_step(w, m, g, k_iters=6, impl="xla")
+        _, _, la_p, ns_p = ss.swap_step(w, m, g, k_iters=6, impl="pallas",
+                                        tile=32)
+        np.testing.assert_allclose(np.asarray(la_x), np.asarray(la_p),
+                                   rtol=1e-3, atol=1e-2)
+        np.testing.assert_array_equal(np.asarray(ns_x), np.asarray(ns_p))
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 10_000))
+    def test_matches_eager_reference_loop(self, seed):
+        w, m, g = _instance(seed, 2, 32)
+        k = 4
+        m2, _, la, _ = ss.swap_step(w, m, g, k_iters=k)
+        for r in range(2):
+            _, losses = ref.sparseswaps_row(w[r], m[r], g, t_max=k)
+            np.testing.assert_allclose(float(la[r]), losses[-1], rtol=1e-3,
+                                       atol=1e-2)
+
+    def test_convergence_to_local_optimum(self):
+        """After enough iterations no single swap can improve (eps = 0
+        local optimum, Def. A.1) — verified exhaustively per row."""
+        w, m, g = _instance(11, 3, 24, t=32)
+        m2, _, la, ns = ss.swap_step(w, m, g, k_iters=200)
+        for r in range(3):
+            dl = np.asarray(ref.delta_matrix(w[r], jnp.asarray(m2[r]), g))
+            feasible = dl[dl < 1e29]
+            # Allow tiny negative slack for f32 accumulation noise.
+            assert feasible.min() >= -1e-2, feasible.min()
+
+    def test_swap_count_bounded_by_k(self):
+        w, m, g = _instance(2, 4, 32)
+        for k in (1, 2, 5):
+            _, _, _, ns = ss.swap_step(w, m, g, k_iters=k)
+            assert np.all(np.asarray(ns) <= k)
+
+    def test_zero_loss_warmstart_is_fixed_point(self):
+        """A mask pruning only zero weights has L = 0; nothing to do."""
+        d = 16
+        w = np.zeros((1, d), np.float32)
+        w[0, : d // 2] = np.arange(1, d // 2 + 1, dtype=np.float32)
+        m = np.zeros((1, d), np.float32)
+        m[0, : d // 2] = 1.0  # keep all non-zeros, prune only zeros
+        x = np.random.default_rng(0).normal(size=(32, d)).astype(np.float32)
+        g = np.asarray(ref.gram(x))
+        m2, lb, la, ns = ss.swap_step(jnp.asarray(w), jnp.asarray(m),
+                                      jnp.asarray(g), k_iters=5)
+        assert float(lb[0]) < 1e-5 and float(la[0]) < 1e-5
+        assert float(ns[0]) == 0.0
+        np.testing.assert_array_equal(np.asarray(m2), m)
+
+    def test_jit_and_shapes(self):
+        w, m, g = _instance(0, 8, 32)
+        f = jax.jit(lambda w_, m_, g_: ss.swap_step(w_, m_, g_, k_iters=2))
+        m2, lb, la, ns = f(w, m, g)
+        assert m2.shape == (8, 32) and lb.shape == (8,)
+        assert la.shape == (8,) and ns.shape == (8,)
+
+
+class TestErrorReductionScale:
+    def test_wanda_warmstart_reduction_in_paper_ballpark(self):
+        """Table 3 / Fig. 1 shape: on correlated data, ~dozens of swaps
+        cut the Wanda per-row error by tens of percent."""
+        rng = np.random.default_rng(0)
+        d, t = 128, 256
+        # Correlated features (random mixing) — the regime where Wanda's
+        # diagonal bound is loose and swaps help most.
+        base = rng.normal(size=(t, d)).astype(np.float32)
+        mix = rng.normal(size=(d, d)).astype(np.float32) / np.sqrt(d)
+        x = base @ (np.eye(d, dtype=np.float32) + 0.9 * mix)
+        g = np.asarray(ref.gram(x))
+        w = rng.normal(size=(16, d)).astype(np.float32)
+        scores = np.abs(w) * np.sqrt(np.diag(g))[None]
+        m = np.asarray(ref.topk_mask(jnp.asarray(scores), int(d * 0.4)))
+        _, lb, la, _ = ss.swap_step(jnp.asarray(w), jnp.asarray(m),
+                                    jnp.asarray(g), k_iters=50)
+        reduction = 1.0 - float(np.asarray(la).sum() / np.asarray(lb).sum())
+        assert reduction > 0.2, reduction  # paper reports up to ~0.6

@@ -1,0 +1,81 @@
+//! Ablation B (DESIGN.md): swap-engine comparison on one realistic layer
+//! — fused-XLA offload (k=1 vs k=8 per call), Pallas-kernel offload, and
+//! the native Rust engine.  Measures wall-clock per accepted swap and
+//! verifies all engines land on comparable losses.
+mod common;
+
+use std::time::Instant;
+
+use sparseswaps::coordinator::{refine_layer_offload, OffloadConfig};
+use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
+use sparseswaps::pruning::saliency;
+use sparseswaps::pruning::sparseswaps::{refine_layer, SwapConfig};
+use sparseswaps::util::benchlib::Table;
+use sparseswaps::util::prng::Rng;
+use sparseswaps::util::tensor::Matrix;
+
+fn main() {
+    common::run_bench("ablation_engine", |ctx| {
+        let d = 128usize;
+        let rows = 128usize;
+        let t_max = if ctx.quick { 10 } else { 25 };
+        let mut rng = Rng::new(7);
+        let x = Matrix::from_fn(4 * d, d, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+        let pattern = Pattern::PerRow { keep: d * 2 / 5 };
+        let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+
+        let mut table = Table::new(
+            format!("Ablation B — engines on one layer ({rows}x{d}, 60%, \
+                     T_max={t_max})"),
+            &["Engine", "seconds", "total swaps", "µs/swap",
+              "rel. reduction"]);
+
+        // Offload engines (require artifacts at this width).
+        for impl_name in ["xla", "pallas"] {
+            if sparseswaps::runtime::Manifest::load("artifacts").ok()
+                .and_then(|m| m.find_swap_artifact(
+                    d, "row", impl_name, 1).ok().map(|_| ()))
+                .is_none() {
+                continue;
+            }
+            let mut mask = warm.clone();
+            let cfg = OffloadConfig { impl_name: impl_name.into(), t_max };
+            let t0 = Instant::now();
+            let (outcome, _) = refine_layer_offload(
+                &ctx.rt, &w, &mut mask, &g, pattern, &cfg, &[])
+                .map_err(|e| e.to_string())?;
+            let secs = t0.elapsed().as_secs_f64();
+            let swaps = outcome.total_swaps().max(1);
+            table.row(vec![
+                format!("offload[{impl_name}]"),
+                format!("{secs:.3}"),
+                swaps.to_string(),
+                format!("{:.1}", 1e6 * secs / swaps as f64),
+                format!("{:.2}%", 100.0 * outcome.relative_reduction()),
+            ]);
+        }
+        // Native engine, 1 and N threads.
+        for threads in [1usize, 4] {
+            let mut mask = warm.clone();
+            let cfg = SwapConfig { t_max, eps: 0.0 };
+            let t0 = Instant::now();
+            let outcome = refine_layer(&w, &mut mask, &g, pattern, &cfg,
+                                       threads);
+            let secs = t0.elapsed().as_secs_f64();
+            let swaps = outcome.total_swaps().max(1);
+            table.row(vec![
+                format!("native[{threads}t]"),
+                format!("{secs:.3}"),
+                swaps.to_string(),
+                format!("{:.1}", 1e6 * secs / swaps as f64),
+                format!("{:.2}%", 100.0 * outcome.relative_reduction()),
+            ]);
+        }
+        table.print();
+        Ok(vec![table.to_markdown()])
+    });
+}

@@ -1,0 +1,63 @@
+//! Ablation C: cross-row sparsity reallocation (the paper's named
+//! future-work direction) vs uniform per-row budgets, on layers with
+//! heterogeneous row energies.
+use std::time::Instant;
+
+use sparseswaps::pruning::error::layer_loss;
+use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
+use sparseswaps::pruning::realloc::{reallocate_layer, ReallocConfig};
+use sparseswaps::pruning::saliency;
+use sparseswaps::pruning::sparseswaps::{refine_layer, SwapConfig};
+use sparseswaps::util::benchlib::Table;
+use sparseswaps::util::prng::Rng;
+use sparseswaps::util::tensor::Matrix;
+
+fn main() {
+    let t0 = Instant::now();
+    let mut table = Table::new(
+        "Ablation C — cross-row budget reallocation (64x64, keep 40%, \
+         20 instances)",
+        &["row heterogeneity", "wanda/opt-ish", "uniform+SS",
+          "realloc+SS", "extra gain", "mean moves"]);
+    for hetero in [0.0f32, 1.0, 3.0] {
+        let (mut sum_warm, mut sum_uni, mut sum_re) = (0.0, 0.0, 0.0);
+        let mut moves = 0usize;
+        let n = 20;
+        for seed in 0..n {
+            let mut rng = Rng::new(5000 + seed);
+            let d = 64;
+            let x = Matrix::from_fn(3 * d, d, |_, _| rng.gaussian_f32());
+            let mut g = Matrix::zeros(d, d);
+            g.gram_accumulate(&x);
+            let w = Matrix::from_fn(16, d, |r, _| {
+                rng.gaussian_f32() * (1.0 + hetero * r as f32 / 16.0)
+            });
+            let pattern = Pattern::PerRow { keep: (d * 2) / 5 };
+            let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                        pattern);
+            sum_warm += layer_loss(&w, &warm, &g);
+            let mut uni = warm.clone();
+            refine_layer(&w, &mut uni, &g, pattern,
+                         &SwapConfig { t_max: 50, eps: 0.0 }, 1);
+            sum_uni += layer_loss(&w, &uni, &g);
+            let mut re = warm.clone();
+            let out = reallocate_layer(&w, &mut re, &g, &ReallocConfig {
+                max_moves: 512, min_keep: 2, t_max: 50,
+            });
+            sum_re += layer_loss(&w, &re, &g);
+            moves += out.moves;
+        }
+        table.row(vec![
+            format!("{hetero:.0}x"),
+            format!("{:.0}", sum_warm / n as f64),
+            format!("{:.0}", sum_uni / n as f64),
+            format!("{:.0}", sum_re / n as f64),
+            format!("{:.2}%", 100.0 * (1.0 - sum_re / sum_uni)),
+            format!("{:.0}", moves as f64 / n as f64),
+        ]);
+    }
+    table.print();
+    table.append_to("reports/benchmarks.md").ok();
+    println!("[ablation_realloc] done in {:.1}s",
+             t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,48 @@
+//! Shared bench scaffolding: every bench target regenerates one paper
+//! table/figure via the report module, times it, and appends the result
+//! to reports/benchmarks.md.
+
+use std::time::Instant;
+
+use sparseswaps::report::Ctx;
+
+pub const REPORT_PATH: &str = "reports/benchmarks.md";
+
+/// Run one bench body with timing + report plumbing.  Skips (successfully)
+/// when artifacts are missing so `cargo bench` works on fresh checkouts.
+pub fn run_bench(name: &str,
+                 body: impl FnOnce(&Ctx) -> Result<Vec<String>, String>) {
+    sparseswaps::util::logging::init_from_env();
+    let ctx = match Ctx::from_env() {
+        Ok(c) => c,
+        Err(e) => {
+            println!("[{name}] SKIP: no artifacts ({e}); run `make \
+                      artifacts` first");
+            return;
+        }
+    };
+    println!("[{name}] starting (quick={})", ctx.quick);
+    let t0 = Instant::now();
+    match body(&ctx) {
+        Ok(blocks) => {
+            let secs = t0.elapsed().as_secs_f64();
+            println!("[{name}] done in {secs:.1}s");
+            let mut out = format!("\n## bench {name} ({secs:.1}s)\n");
+            for b in blocks {
+                out.push_str(&b);
+            }
+            if let Some(dir) = std::path::Path::new(REPORT_PATH).parent() {
+                std::fs::create_dir_all(dir).ok();
+            }
+            use std::io::Write;
+            if let Ok(mut f) = std::fs::OpenOptions::new()
+                .create(true).append(true).open(REPORT_PATH) {
+                let _ = f.write_all(out.as_bytes());
+            }
+        }
+        Err(e) => {
+            println!("[{name}] FAILED: {e}");
+            std::process::exit(1);
+        }
+    }
+}

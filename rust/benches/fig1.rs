@@ -1,0 +1,14 @@
+//! Regenerates paper Figure 1: per-layer relative reduction in local
+//! pruning error vs Wanda, grouped by block and layer type.
+mod common;
+
+fn main() {
+    common::run_bench("fig1", |ctx| {
+        let model = if ctx.quick { "tiny" } else { "gpt-a" };
+        let (t, plot) = sparseswaps::report::fig1(ctx, model)
+            .map_err(|e| e.to_string())?;
+        t.print();
+        println!("{plot}");
+        Ok(vec![t.to_markdown(), format!("\n```\n{plot}```\n")])
+    });
+}

@@ -1,0 +1,14 @@
+//! Regenerates paper Figure 2: perplexity vs the number of calibration
+//! batches, Wanda vs Wanda+SparseSwaps at 50% / 60% sparsity.
+mod common;
+
+fn main() {
+    common::run_bench("fig2", |ctx| {
+        let model = if ctx.quick { "tiny" } else { "gpt-a" };
+        let (t, plot) = sparseswaps::report::fig2(ctx, model)
+            .map_err(|e| e.to_string())?;
+        t.print();
+        println!("{plot}");
+        Ok(vec![t.to_markdown(), format!("\n```\n{plot}```\n")])
+    });
+}

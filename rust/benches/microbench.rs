@@ -1,0 +1,72 @@
+//! Hot-path micro-benchmarks for the perf log (EXPERIMENTS.md §Perf):
+//! swap-step artifact latency per width/k, runtime pack/exec/unpack
+//! split, and the native engine's per-swap cost.
+mod common;
+
+use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
+use sparseswaps::pruning::saliency;
+use sparseswaps::runtime::TensorData;
+use sparseswaps::util::benchlib::{bench, fmt_duration_ns, Table};
+use sparseswaps::util::prng::Rng;
+use sparseswaps::util::tensor::Matrix;
+
+fn main() {
+    common::run_bench("microbench", |ctx| {
+        let mut table = Table::new(
+            "Microbench — swap-step artifact latency",
+            &["artifact", "chunk", "mean", "p95", "ms/row-iter x1e3"]);
+        let widths = [64usize, 128, 256, 512];
+        for d in widths {
+            for k in [1usize, 8] {
+                let name = format!("swap_step_d{d}_row_xla_k{k}");
+                let Ok(entry) = ctx.rt.manifest().artifact(&name)
+                    else { continue };
+                let entry = entry.clone();
+                let rows = entry.chunk_rows;
+                let mut rng = Rng::new(3);
+                let x = Matrix::from_fn(2 * d, d,
+                                        |_, _| rng.gaussian_f32());
+                let mut g = Matrix::zeros(d, d);
+                g.gram_accumulate(&x);
+                let w = Matrix::from_fn(rows, d,
+                                        |_, _| rng.gaussian_f32());
+                let mask = mask_from_scores(
+                    &saliency::wanda(&w, &g.diag()),
+                    Pattern::PerRow { keep: d * 2 / 5 });
+                let inputs = vec![
+                    TensorData::from_matrix(&w),
+                    TensorData::from_matrix(&mask),
+                    TensorData::from_matrix(&g),
+                ];
+                let samples = if ctx.quick { 3 } else { 8 };
+                let stats = bench(1, samples, || {
+                    ctx.rt.execute(&name, inputs.clone()).unwrap();
+                });
+                table.row(vec![
+                    name.clone(),
+                    rows.to_string(),
+                    fmt_duration_ns(stats.mean_ns),
+                    fmt_duration_ns(stats.p95_ns),
+                    format!("{:.3}",
+                            stats.mean_ns / 1e6
+                            / (rows * k) as f64 * 1e3),
+                ]);
+            }
+        }
+        table.print();
+
+        let stats = ctx.rt.stats();
+        let mut split = Table::new(
+            "Microbench — runtime time split (cumulative)",
+            &["executions", "exec", "pack", "unpack", "compile"]);
+        split.row(vec![
+            stats.executions.to_string(),
+            format!("{:.2}s", stats.exec_nanos as f64 / 1e9),
+            format!("{:.2}s", stats.pack_nanos as f64 / 1e9),
+            format!("{:.2}s", stats.unpack_nanos as f64 / 1e9),
+            format!("{:.2}s", stats.compile_nanos as f64 / 1e9),
+        ]);
+        split.print();
+        Ok(vec![table.to_markdown(), split.to_markdown()])
+    });
+}

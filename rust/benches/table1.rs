@@ -1,0 +1,14 @@
+//! Regenerates paper Table 1: perplexity + zero-shot accuracy for
+//! {Wanda, RIA} x {-, DSnoT, SparseSwaps} at 60% row-wise and 2:4
+//! sparsity across the model zoo.
+mod common;
+
+fn main() {
+    common::run_bench("table1", |ctx| {
+        let (a, b) = sparseswaps::report::table1(ctx)
+            .map_err(|e| e.to_string())?;
+        a.print();
+        b.print();
+        Ok(vec![a.to_markdown(), b.to_markdown()])
+    });
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Table 2: perplexity with magnitude warmstart at
+//! 50% / 60% sparsity, with and without SparseSwaps refinement.
+mod common;
+
+fn main() {
+    common::run_bench("table2", |ctx| {
+        let t = sparseswaps::report::table2(ctx)
+            .map_err(|e| e.to_string())?;
+        t.print();
+        Ok(vec![t.to_markdown()])
+    });
+}

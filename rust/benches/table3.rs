@@ -1,0 +1,13 @@
+//! Regenerates paper Table 3: mean relative error reduction and
+//! perplexity vs the number of 1-swap iterations (Wanda warmstart).
+mod common;
+
+fn main() {
+    common::run_bench("table3", |ctx| {
+        let model = if ctx.quick { "tiny" } else { "gpt-a" };
+        let t = sparseswaps::report::table3(ctx, model)
+            .map_err(|e| e.to_string())?;
+        t.print();
+        Ok(vec![t.to_markdown()])
+    });
+}

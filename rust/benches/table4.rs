@@ -1,0 +1,12 @@
+//! Regenerates paper Table 4: average relative error reduction per
+//! warmstart criterion (weaker warmstarts leave more room).
+mod common;
+
+fn main() {
+    common::run_bench("table4", |ctx| {
+        let t = sparseswaps::report::table4(ctx)
+            .map_err(|e| e.to_string())?;
+        t.print();
+        Ok(vec![t.to_markdown()])
+    });
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Table 5: pipeline wall-clock vs T_max — the
+//! "overhead grows linearly in the number of swap iterations" claim.
+mod common;
+
+fn main() {
+    common::run_bench("table5", |ctx| {
+        let model = if ctx.quick { "tiny" } else { "gpt-a" };
+        let t = sparseswaps::report::table5(ctx, model)
+            .map_err(|e| e.to_string())?;
+        t.print();
+        Ok(vec![t.to_markdown()])
+    });
+}

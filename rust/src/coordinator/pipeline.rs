@@ -1,0 +1,353 @@
+//! The pruning pipeline: the paper's full procedure over a transformer.
+//!
+//!   for each block (sequential mode — earlier blocks already masked):
+//!     run calibration through the masked model, accumulating the four
+//!       Gram streams for the block's layers;
+//!     for each prunable layer:
+//!       warmstart mask (magnitude / Wanda / RIA — computed natively
+//!         from W and diag(G));
+//!       refinement: SparseSwaps (offload via HLO swap artifacts, or the
+//!         native Rust engine), DSnoT, or none;
+//!       record exact per-layer loss before/after and apply the mask.
+//!
+//! One-shot mode instead calibrates once on the dense model and prunes
+//! every block from those statistics (Wanda-style; cheaper, slightly
+//! worse).  Both modes exist because the paper's baselines differ in
+//! this respect and the ablation benches compare them.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::coordinator::swaploop::{refine_layer_offload, OffloadConfig};
+use crate::data::{Dataset, Split};
+use crate::gram::{accumulate, GramStats};
+use crate::model::store::{MaskSet, ParamStore};
+use crate::pruning::dsnot::{self, DsnotConfig};
+use crate::pruning::error::relative_reduction;
+use crate::pruning::mask::{mask_from_scores, validate, Pattern};
+use crate::pruning::saliency::{self, Criterion};
+use crate::pruning::sparseswaps::{self, SwapConfig};
+use crate::runtime::service::{Runtime, RuntimeError};
+use crate::util::threadpool::default_threads;
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Refiner {
+    /// Warmstart only.
+    None,
+    /// SparseSwaps through the HLO artifacts (production path).
+    SparseSwapsOffload { impl_name: String },
+    /// SparseSwaps through the pure-Rust engine (reference path).
+    SparseSwapsNative,
+    /// The DSnoT baseline.
+    Dsnot,
+}
+
+impl Refiner {
+    pub fn label(&self) -> String {
+        match self {
+            Refiner::None => "none".into(),
+            Refiner::SparseSwapsOffload { impl_name } =>
+                format!("sparseswaps[{impl_name}]"),
+            Refiner::SparseSwapsNative => "sparseswaps[native]".into(),
+            Refiner::Dsnot => "dsnot".into(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PruneConfig {
+    pub criterion: Criterion,
+    pub pattern_kind: PatternKind,
+    pub refiner: Refiner,
+    pub t_max: usize,
+    pub calib_batches: usize,
+    /// Sequential (per-block re-calibration on the masked model) vs
+    /// one-shot (single dense calibration pass).
+    pub sequential: bool,
+    /// Mask snapshots at these cumulative iteration counts (Table 3).
+    pub checkpoints: Vec<usize>,
+    pub threads: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PatternKind {
+    Unstructured { sparsity: f64 },
+    Nm { n: usize, m: usize },
+}
+
+impl PatternKind {
+    pub fn pattern_for(&self, d_in: usize) -> Pattern {
+        match *self {
+            PatternKind::Unstructured { sparsity } =>
+                Pattern::per_row_sparsity(d_in, sparsity),
+            PatternKind::Nm { n, m } => Pattern::Nm { n, m },
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            PatternKind::Unstructured { sparsity } =>
+                format!("{:.0}%", sparsity * 100.0),
+            PatternKind::Nm { n, m } => format!("{n}:{m}"),
+        }
+    }
+}
+
+impl Default for PruneConfig {
+    fn default() -> Self {
+        Self {
+            criterion: Criterion::Wanda,
+            pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
+            refiner: Refiner::SparseSwapsOffload {
+                impl_name: "xla".into(),
+            },
+            t_max: 100,
+            calib_batches: 8,
+            sequential: true,
+            checkpoints: Vec::new(),
+            threads: default_threads(),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct LayerReport {
+    pub name: String,
+    pub layer_type: String,
+    pub block: usize,
+    pub loss_warmstart: f64,
+    pub loss_refined: f64,
+    pub swaps: usize,
+    pub rows_converged: usize,
+    pub rows: usize,
+    pub seconds: f64,
+}
+
+impl LayerReport {
+    pub fn relative_reduction(&self) -> f64 {
+        relative_reduction(self.loss_warmstart, self.loss_refined)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PruneReport {
+    pub layers: Vec<LayerReport>,
+    pub calib_seconds: f64,
+    pub refine_seconds: f64,
+    pub warmstart_seconds: f64,
+    /// Mask snapshots per checkpoint (whole-model MaskSets).
+    pub snapshots: BTreeMap<usize, MaskSet>,
+}
+
+impl PruneReport {
+    pub fn total_warmstart_loss(&self) -> f64 {
+        self.layers.iter().map(|l| l.loss_warmstart).sum()
+    }
+
+    pub fn total_refined_loss(&self) -> f64 {
+        self.layers.iter().map(|l| l.loss_refined).sum()
+    }
+
+    /// Mean over layers of the per-layer relative reduction (the paper's
+    /// Table 3/4 "average relative error reduction").
+    pub fn mean_relative_reduction(&self) -> f64 {
+        if self.layers.is_empty() {
+            return 0.0;
+        }
+        self.layers.iter().map(|l| l.relative_reduction()).sum::<f64>()
+            / self.layers.len() as f64
+    }
+}
+
+/// Run the pruning pipeline.  `store` keeps its dense weights; the
+/// resulting masks are returned (apply with `store.masked(&masks)`).
+pub fn prune(rt: &Runtime, store: &ParamStore, ds: &Dataset,
+             cfg: &PruneConfig) -> Result<(MaskSet, PruneReport),
+                                          RuntimeError> {
+    let meta = store.meta.clone();
+    let calib = ds.batches(&meta, Split::Calibration, cfg.calib_batches);
+    let mut masks = MaskSet::all_ones(&meta);
+    let mut report = PruneReport::default();
+    for &cp in &cfg.checkpoints {
+        report.snapshots.insert(cp, MaskSet::all_ones(&meta));
+    }
+
+    let blocks: Vec<usize> = (0..meta.n_blocks).collect();
+    let mut stats_oneshot: Option<GramStats> = None;
+    if !cfg.sequential {
+        let t0 = Instant::now();
+        stats_oneshot = Some(accumulate(rt, store, &calib)?);
+        report.calib_seconds += t0.elapsed().as_secs_f64();
+    }
+
+    for &b in &blocks {
+        let stats = if cfg.sequential {
+            // Recalibrate with everything pruned so far applied.
+            let t0 = Instant::now();
+            let masked = store.masked(&masks);
+            let s = accumulate(rt, &masked, &calib)?;
+            report.calib_seconds += t0.elapsed().as_secs_f64();
+            s
+        } else {
+            stats_oneshot.clone().unwrap()
+        };
+
+        let layers: Vec<_> = meta.prunable.iter().enumerate()
+            .filter(|(_, l)| l.block == b)
+            .map(|(i, l)| (i, l.clone()))
+            .collect();
+        for (li, layer) in layers {
+            let w = store.weight(&layer);
+            let g = stats.gram_for(&layer);
+            let pattern = cfg.pattern_kind.pattern_for(layer.d_in);
+
+            let t0 = Instant::now();
+            let scores = saliency::scores(cfg.criterion, &w, &g.diag());
+            let mut mask = mask_from_scores(&scores, pattern);
+            report.warmstart_seconds += t0.elapsed().as_secs_f64();
+
+            let t1 = Instant::now();
+            let mut layer_report = LayerReport {
+                name: layer.name.clone(),
+                layer_type: layer.layer_type.clone(),
+                block: layer.block,
+                loss_warmstart: 0.0,
+                loss_refined: 0.0,
+                swaps: 0,
+                rows_converged: 0,
+                rows: layer.d_out,
+                seconds: 0.0,
+            };
+            match &cfg.refiner {
+                Refiner::None => {
+                    let loss = crate::pruning::error::layer_loss(
+                        &w, &mask, &g);
+                    layer_report.loss_warmstart = loss;
+                    layer_report.loss_refined = loss;
+                }
+                Refiner::SparseSwapsOffload { impl_name } => {
+                    let ocfg = OffloadConfig {
+                        impl_name: impl_name.clone(),
+                        t_max: cfg.t_max,
+                    };
+                    let (outcome, snaps) = refine_layer_offload(
+                        rt, &w, &mut mask, &g, pattern, &ocfg,
+                        &cfg.checkpoints)?;
+                    layer_report.loss_warmstart = outcome.total_before();
+                    layer_report.loss_refined = outcome.total_after();
+                    layer_report.swaps = outcome.total_swaps();
+                    layer_report.rows_converged = outcome.rows.iter()
+                        .filter(|r| r.converged).count();
+                    for (cp, snap) in snaps {
+                        if let Some(ms) = report.snapshots.get_mut(&cp) {
+                            ms.masks[li] = snap;
+                        }
+                    }
+                }
+                Refiner::SparseSwapsNative => {
+                    // Segment the budget at checkpoint boundaries so the
+                    // native engine supports Table-3 style snapshots too
+                    // (restarting refine_layer is exact: c is recomputed
+                    // from the current mask each call).
+                    let mut stops: Vec<usize> = cfg.checkpoints.iter()
+                        .copied().filter(|&c| c <= cfg.t_max).collect();
+                    stops.push(cfg.t_max);
+                    stops.sort_unstable();
+                    stops.dedup();
+                    let mut done = 0usize;
+                    let mut first: Option<Vec<f64>> = None;
+                    let mut total_swaps = 0usize;
+                    let mut last_outcome = None;
+                    for &stop in &stops {
+                        if stop > done {
+                            let scfg = SwapConfig { t_max: stop - done,
+                                                    eps: 0.0 };
+                            let outcome = sparseswaps::refine_layer(
+                                &w, &mut mask, &g, pattern, &scfg,
+                                cfg.threads);
+                            if first.is_none() {
+                                first = Some(outcome.rows.iter()
+                                    .map(|r| r.loss_before).collect());
+                            }
+                            total_swaps += outcome.total_swaps();
+                            last_outcome = Some(outcome);
+                            done = stop;
+                        }
+                        if cfg.checkpoints.contains(&stop) {
+                            if let Some(ms) =
+                                report.snapshots.get_mut(&stop) {
+                                ms.masks[li] = mask.clone();
+                            }
+                        }
+                    }
+                    let outcome = last_outcome.expect("t_max > 0");
+                    layer_report.loss_warmstart = first
+                        .map(|f| f.iter().sum())
+                        .unwrap_or_default();
+                    layer_report.loss_refined = outcome.total_after();
+                    layer_report.swaps = total_swaps;
+                    layer_report.rows_converged = outcome.rows.iter()
+                        .filter(|r| r.converged).count();
+                }
+                Refiner::Dsnot => {
+                    let before = crate::pruning::error::layer_loss(
+                        &w, &mask, &g);
+                    let fstats = stats.feature_stats_for(&layer);
+                    dsnot::refine_layer(&w, &mut mask, &fstats, pattern,
+                                        &DsnotConfig::default());
+                    layer_report.loss_warmstart = before;
+                    layer_report.loss_refined =
+                        crate::pruning::error::layer_loss(&w, &mask, &g);
+                }
+            }
+            layer_report.seconds = t1.elapsed().as_secs_f64();
+            report.refine_seconds += layer_report.seconds;
+
+            validate(&mask, pattern)
+                .map_err(|e| RuntimeError::Msg(format!(
+                    "{}: {e}", layer.name)))?;
+            crate::log_debug!(
+                "prune[{}] {} loss {:.4} -> {:.4} ({:+.1}%)",
+                meta.name, layer.name, layer_report.loss_warmstart,
+                layer_report.loss_refined,
+                -100.0 * layer_report.relative_reduction());
+            masks.masks[li] = mask;
+            report.layers.push(layer_report);
+        }
+    }
+    // Checkpoint snapshots cover layers only up to their capture point;
+    // fill the remainder with the final masks so each snapshot is a
+    // complete, valid model mask.
+    let final_masks = masks.clone();
+    for (_, snap) in report.snapshots.iter_mut() {
+        for (i, m) in snap.masks.iter_mut().enumerate() {
+            if m.data.iter().all(|&v| v == 1.0) {
+                *m = final_masks.masks[i].clone();
+            }
+        }
+    }
+    Ok((masks, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels() {
+        assert_eq!(Refiner::None.label(), "none");
+        assert_eq!(Refiner::SparseSwapsOffload { impl_name: "xla".into() }
+                   .label(), "sparseswaps[xla]");
+        assert_eq!(PatternKind::Unstructured { sparsity: 0.6 }.label(),
+                   "60%");
+        assert_eq!(PatternKind::Nm { n: 2, m: 4 }.label(), "2:4");
+    }
+
+    #[test]
+    fn pattern_for_width() {
+        let pk = PatternKind::Unstructured { sparsity: 0.5 };
+        assert_eq!(pk.pattern_for(64), Pattern::PerRow { keep: 32 });
+        let nm = PatternKind::Nm { n: 2, m: 4 };
+        assert_eq!(nm.pattern_for(64), Pattern::Nm { n: 2, m: 4 });
+    }
+}

@@ -1,0 +1,91 @@
+//! Training loop: drives the `train_step_{cfg}` artifact (Adam + clip,
+//! built by jax.grad at AOT time) from Rust.  Python never runs here —
+//! optimizer state lives in host tensors threaded through executions.
+
+use std::time::Instant;
+
+use crate::data::{Dataset, Split};
+use crate::model::store::ParamStore;
+use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::tensor_data::TensorData;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub n_batches: usize,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self { steps: 300, lr: 1e-3, n_batches: 32, log_every: 25 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    /// (step, loss) samples at `log_every` cadence plus the final step.
+    pub loss_curve: Vec<(usize, f64)>,
+    pub final_loss: f64,
+    pub initial_loss: f64,
+    pub seconds: f64,
+}
+
+pub fn train(rt: &Runtime, store: &mut ParamStore, ds: &Dataset,
+             cfg: &TrainConfig) -> Result<TrainReport, RuntimeError> {
+    let meta = store.meta.clone();
+    let artifact = format!("train_step_{}", meta.name);
+    let n_params = meta.params.len();
+    let batches = ds.batches(&meta, Split::Train, cfg.n_batches);
+
+    let mut m = ParamStore::zeros_like(&meta).tensors;
+    let mut v = ParamStore::zeros_like(&meta).tensors;
+    let mut step = TensorData::scalar_i32(0);
+    let lr = TensorData::scalar_f32(cfg.lr);
+
+    let t0 = Instant::now();
+    let mut report = TrainReport::default();
+    for s in 0..cfg.steps {
+        let (tokens, targets) = &batches[s % batches.len()];
+        let mut inputs = Vec::with_capacity(3 * n_params + 4);
+        inputs.extend(store.tensors.iter().cloned());
+        inputs.extend(m.iter().cloned());
+        inputs.extend(v.iter().cloned());
+        inputs.push(step.clone());
+        inputs.push(tokens.clone());
+        inputs.push(targets.clone());
+        inputs.push(lr.clone());
+        let mut out = rt.execute(&artifact, inputs)?;
+        // outputs: params.., m.., v.., step, loss
+        let loss = out.pop().unwrap().scalar_value()?;
+        step = out.pop().unwrap();
+        let vs = out.split_off(2 * n_params);
+        let ms = out.split_off(n_params);
+        store.tensors = out;
+        m = ms;
+        v = vs;
+        if s == 0 {
+            report.initial_loss = loss;
+        }
+        if s % cfg.log_every == 0 || s + 1 == cfg.steps {
+            report.loss_curve.push((s, loss));
+            crate::log_info!("train[{}] step {s}/{} loss {loss:.4}",
+                             meta.name, cfg.steps);
+        }
+        report.final_loss = loss;
+    }
+    report.seconds = t0.elapsed().as_secs_f64();
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = TrainConfig::default();
+        assert!(c.steps > 0 && c.lr > 0.0 && c.n_batches > 0);
+    }
+}

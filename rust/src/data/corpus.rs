@@ -1,0 +1,194 @@
+//! Synthetic corpus generator: the stand-in for C4 / WikiText.
+//!
+//! A seeded order-1 Markov grammar over an invented vocabulary with a
+//! Zipfian marginal:
+//!   * words are built from syllables, so the byte-BPE tokenizer has
+//!     real sub-word structure to learn;
+//!   * each word has a sparse successor distribution (few high-prob
+//!     successors), giving the language predictable bigram structure —
+//!     which is what makes calibration features *correlated* and
+//!     perplexity a meaningful target;
+//!   * sentence lengths and punctuation follow simple distributions.
+//!
+//! Determinism: the whole corpus is a pure function of (seed, n_words).
+
+use crate::util::prng::Rng;
+
+const SYLLABLES: &[&str] = &[
+    "ka", "ri", "to", "ve", "mun", "sol", "ba", "du", "li", "zor",
+    "fen", "gra", "hu", "pel", "qua", "nim", "tas", "wex", "yol", "cer",
+];
+
+#[derive(Clone, Debug)]
+pub struct Grammar {
+    pub words: Vec<String>,
+    /// Zipfian unigram weights.
+    pub unigram: Vec<f64>,
+    /// Per word: (successor ids, cumulative weights).
+    transitions: Vec<(Vec<usize>, Vec<f64>)>,
+}
+
+impl Grammar {
+    pub fn new(seed: u64, vocab_words: usize) -> Grammar {
+        let mut rng = Rng::new(seed ^ 0x6772616d);
+        // Distinct invented words from 2-3 syllables.
+        let mut words = Vec::with_capacity(vocab_words);
+        let mut seen = std::collections::HashSet::new();
+        while words.len() < vocab_words {
+            let n = 2 + rng.usize_below(2);
+            let w: String = (0..n)
+                .map(|_| SYLLABLES[rng.usize_below(SYLLABLES.len())])
+                .collect();
+            if seen.insert(w.clone()) {
+                words.push(w);
+            }
+        }
+        // Zipf marginal: p(rank r) ~ 1 / (r + 2)^1.1
+        let unigram: Vec<f64> = (0..vocab_words)
+            .map(|r| 1.0 / ((r + 2) as f64).powf(1.1))
+            .collect();
+        // Sparse successors: 6 candidates biased toward frequent words,
+        // with heavy-tailed weights.
+        let transitions = (0..vocab_words).map(|_| {
+            let k = 4 + rng.usize_below(4);
+            let mut succ = Vec::with_capacity(k);
+            let mut weights = Vec::with_capacity(k);
+            for _ in 0..k {
+                succ.push(rng.weighted_index(&unigram));
+                weights.push(rng.f64().powi(2) + 0.05);
+            }
+            let mut cum = 0.0;
+            let cums: Vec<f64> = weights.iter().map(|w| {
+                cum += w;
+                cum
+            }).collect();
+            (succ, cums)
+        }).collect();
+        Grammar { words, unigram, transitions }
+    }
+
+    pub fn next_word(&self, current: usize, rng: &mut Rng) -> usize {
+        let (succ, cums) = &self.transitions[current];
+        // Mostly follow the chain; occasionally jump via the unigram
+        // (keeps the chain ergodic).
+        if rng.bool(0.15) {
+            rng.weighted_index(&self.unigram)
+        } else {
+            let total = *cums.last().unwrap();
+            let t = rng.f64() * total;
+            let idx = cums.partition_point(|&c| c < t);
+            succ[idx.min(succ.len() - 1)]
+        }
+    }
+
+    /// Most likely successor of `current` under the chain (for building
+    /// zero-shot gold answers).
+    pub fn best_successor(&self, current: usize) -> usize {
+        let (succ, cums) = &self.transitions[current];
+        let mut best = (0.0, succ[0]);
+        let mut prev = 0.0;
+        for (i, &c) in cums.iter().enumerate() {
+            let w = c - prev;
+            prev = c;
+            if w > best.0 {
+                best = (w, succ[i]);
+            }
+        }
+        best.1
+    }
+
+    /// Successor ids of a word (unique, for negative sampling).
+    pub fn successors(&self, current: usize) -> &[usize] {
+        &self.transitions[current].0
+    }
+}
+
+/// Generate `n_words` of text from the grammar.
+pub fn generate_text(grammar: &Grammar, seed: u64, n_words: usize)
+    -> String {
+    let mut rng = Rng::new(seed ^ 0x74657874);
+    let mut out = String::with_capacity(n_words * 7);
+    let mut current = rng.weighted_index(&grammar.unigram);
+    let mut sentence_left = 5 + rng.usize_below(12);
+    for i in 0..n_words {
+        if i > 0 {
+            out.push(' ');
+        }
+        out.push_str(&grammar.words[current]);
+        sentence_left -= 1;
+        if sentence_left == 0 {
+            out.push('.');
+            sentence_left = 5 + rng.usize_below(12);
+            current = rng.weighted_index(&grammar.unigram);
+        } else {
+            current = grammar.next_word(current, &mut rng);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let g1 = Grammar::new(1, 100);
+        let g2 = Grammar::new(1, 100);
+        assert_eq!(g1.words, g2.words);
+        assert_eq!(generate_text(&g1, 5, 200), generate_text(&g2, 5, 200));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let g = Grammar::new(1, 100);
+        assert_ne!(generate_text(&g, 5, 200), generate_text(&g, 6, 200));
+    }
+
+    #[test]
+    fn zipf_marginal_realised() {
+        // Frequent ranks must actually appear more often in generated
+        // text than rare ranks.
+        let g = Grammar::new(2, 200);
+        let text = generate_text(&g, 7, 20_000);
+        let mut counts = vec![0usize; 200];
+        for w in text.split_whitespace() {
+            let w = w.trim_end_matches('.');
+            if let Some(i) = g.words.iter().position(|x| x == w) {
+                counts[i] += 1;
+            }
+        }
+        let head: usize = counts[..20].iter().sum();
+        let tail: usize = counts[180..].iter().sum();
+        assert!(head > 5 * tail.max(1), "head {head} tail {tail}");
+    }
+
+    #[test]
+    fn chain_is_predictable() {
+        // The best successor should appear after its predecessor far
+        // more often than chance.
+        let g = Grammar::new(3, 100);
+        let mut rng = Rng::new(0);
+        let mut hits = 0;
+        let mut total = 0;
+        let mut cur = 0;
+        for _ in 0..5_000 {
+            let next = g.next_word(cur, &mut rng);
+            if next == g.best_successor(cur) {
+                hits += 1;
+            }
+            total += 1;
+            cur = next;
+        }
+        let rate = hits as f64 / total as f64;
+        assert!(rate > 0.15, "predictability {rate}");
+    }
+
+    #[test]
+    fn text_contains_sentences() {
+        let g = Grammar::new(4, 50);
+        let text = generate_text(&g, 1, 500);
+        assert!(text.contains('.'));
+        assert!(text.split_whitespace().count() >= 500);
+    }
+}

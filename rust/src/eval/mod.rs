@@ -1,0 +1,41 @@
+//! Evaluation harness: perplexity (WikiText stand-in) and synthetic
+//! zero-shot accuracy (EleutherAI-suite stand-in).
+
+pub mod zeroshot;
+
+use crate::model::store::ParamStore;
+use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::tensor_data::TensorData;
+
+/// Perplexity of `store` over held-out batches: exp(total_nll / tokens).
+pub fn perplexity(rt: &Runtime, store: &ParamStore,
+                  batches: &[(TensorData, TensorData)])
+    -> Result<f64, RuntimeError> {
+    let artifact = format!("eval_step_{}", store.meta.name);
+    let mut nll = 0.0f64;
+    let mut count = 0.0f64;
+    for (tokens, targets) in batches {
+        let mut inputs = store.tensor_args();
+        inputs.push(tokens.clone());
+        inputs.push(targets.clone());
+        let out = rt.execute(&artifact, inputs)?;
+        nll += out[0].scalar_value()?;
+        count += out[1].scalar_value()?;
+    }
+    if count == 0.0 {
+        return Err(RuntimeError::Msg("no eval tokens".into()));
+    }
+    Ok((nll / count).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime-dependent tests live in rust/tests/pipeline_e2e.rs; here we
+    // only check the ppl arithmetic contract via a tiny helper.
+    #[test]
+    fn ppl_formula() {
+        let nll = 2.0f64 * 100.0;
+        let count = 100.0;
+        assert!(((nll / count).exp() - 2.0f64.exp()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,212 @@
+//! Synthetic zero-shot harness (the EleutherAI-suite stand-in; see
+//! DESIGN.md section 2).
+//!
+//! Tasks are 4-way multiple-choice continuations built from the corpus
+//! grammar: a context is sampled from the Markov chain, the gold answer
+//! is the chain's most likely successor of the final word, distractors
+//! are unigram-sampled words that are *not* successors.  Scoring follows
+//! lm-eval: each (context + choice) sequence is scored by the summed NLL
+//! of the choice tokens (via the `seq_nll_{cfg}` artifact); the lowest
+//! NLL wins.  Chance accuracy is 25%.
+
+use crate::data::Dataset;
+use crate::model::store::ParamStore;
+use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::tensor_data::TensorData;
+use crate::util::prng::Rng;
+
+pub const N_CHOICES: usize = 4;
+
+#[derive(Clone, Debug)]
+pub struct Task {
+    /// Token ids of (context + choice) per choice.
+    pub choice_ids: Vec<Vec<i32>>,
+    /// First target index of the choice span per choice.
+    pub span_start: Vec<usize>,
+    pub gold: usize,
+}
+
+/// Build `n_tasks` deterministic tasks from the grammar.
+pub fn build_tasks(ds: &Dataset, meta_vocab: usize, n_tasks: usize,
+                   seed: u64) -> Vec<Task> {
+    let mut rng = Rng::new(seed ^ 0x5a45524f);
+    let g = &ds.grammar;
+    let mut tasks = Vec::with_capacity(n_tasks);
+    while tasks.len() < n_tasks {
+        // Sample a context path through the chain.
+        let mut cur = rng.weighted_index(&g.unigram);
+        let mut ctx_words = vec![g.words[cur].clone()];
+        for _ in 0..7 {
+            cur = g.next_word(cur, &mut rng);
+            ctx_words.push(g.words[cur].clone());
+        }
+        let gold_word = g.best_successor(cur);
+        let succ = g.successors(cur);
+        // Distractors: non-successor words.
+        let mut distractors = Vec::new();
+        let mut guard = 0;
+        while distractors.len() < N_CHOICES - 1 && guard < 1000 {
+            guard += 1;
+            let w = rng.weighted_index(&g.unigram);
+            if w != gold_word && !succ.contains(&w)
+                && !distractors.contains(&w) {
+                distractors.push(w);
+            }
+        }
+        if distractors.len() < N_CHOICES - 1 {
+            continue;
+        }
+        let mut choices = vec![gold_word];
+        choices.extend(distractors);
+        // Shuffle choices, remembering the gold position.
+        let mut order: Vec<usize> = (0..N_CHOICES).collect();
+        rng.shuffle(&mut order);
+        let gold = order.iter().position(|&i| i == 0).unwrap();
+        let context = ctx_words.join(" ");
+        let ctx_ids = encode_clamped(ds, meta_vocab, &context);
+        let mut choice_ids = Vec::with_capacity(N_CHOICES);
+        let mut span_start = Vec::with_capacity(N_CHOICES);
+        let mut ok = true;
+        for &oi in &order {
+            let full = format!("{context} {}", g.words[choices[oi]]);
+            let ids = encode_clamped(ds, meta_vocab, &full);
+            if ids.len() <= ctx_ids.len() {
+                ok = false;
+                break;
+            }
+            // Targets are tokens shifted by one: predicting choice token
+            // at position t means target index t-1.
+            span_start.push(ctx_ids.len() - 1);
+            choice_ids.push(ids);
+        }
+        if ok {
+            tasks.push(Task { choice_ids, span_start, gold });
+        }
+    }
+    tasks
+}
+
+fn encode_clamped(ds: &Dataset, vocab: usize, text: &str) -> Vec<i32> {
+    ds.tokenizer.encode(text)
+        .into_iter()
+        .map(|t| (t as usize).min(vocab - 1) as i32)
+        .collect()
+}
+
+/// Score tasks with the model; returns accuracy in [0, 1].
+pub fn accuracy(rt: &Runtime, store: &ParamStore, tasks: &[Task])
+    -> Result<f64, RuntimeError> {
+    let meta = &store.meta;
+    let artifact = format!("seq_nll_{}", meta.name);
+    let (b, l) = (meta.batch, meta.seq_len);
+
+    // Flatten all (task, choice) sequences, then batch them.
+    struct Seq {
+        task: usize,
+        choice: usize,
+        ids: Vec<i32>,
+        span_start: usize,
+    }
+    let mut seqs = Vec::new();
+    for (ti, t) in tasks.iter().enumerate() {
+        for c in 0..N_CHOICES {
+            seqs.push(Seq {
+                task: ti,
+                choice: c,
+                ids: t.choice_ids[c].clone(),
+                span_start: t.span_start[c],
+            });
+        }
+    }
+    let mut nlls = vec![vec![f64::INFINITY; N_CHOICES]; tasks.len()];
+    for chunk in seqs.chunks(b) {
+        let mut tokens = vec![0i32; b * l];
+        let mut targets = vec![0i32; b * l];
+        let mut mask = vec![0.0f32; b * l];
+        for (row, s) in chunk.iter().enumerate() {
+            let ids = if s.ids.len() > l + 1 {
+                // Keep the tail (the choice span must survive).
+                &s.ids[s.ids.len() - (l + 1)..]
+            } else {
+                &s.ids[..]
+            };
+            let shift = s.ids.len().saturating_sub(l + 1);
+            let n = ids.len().min(l + 1);
+            for t in 0..n.saturating_sub(1) {
+                tokens[row * l + t] = ids[t];
+                targets[row * l + t] = ids[t + 1];
+            }
+            let start = s.span_start.saturating_sub(shift);
+            let end = (s.ids.len() - 1 - shift).min(l);
+            for t in start..end {
+                mask[row * l + t] = 1.0;
+            }
+        }
+        let mut inputs = store.tensor_args();
+        inputs.push(TensorData::I32 { dims: vec![b, l], data: tokens });
+        inputs.push(TensorData::I32 { dims: vec![b, l], data: targets });
+        inputs.push(TensorData::F32 { dims: vec![b, l], data: mask });
+        let out = rt.execute(&artifact, inputs)?;
+        let vals = out[0].as_f32()?;
+        for (row, s) in chunk.iter().enumerate() {
+            nlls[s.task][s.choice] = vals[row] as f64;
+        }
+    }
+    let mut correct = 0;
+    for (ti, t) in tasks.iter().enumerate() {
+        let best = nlls[ti]
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if best == t.gold {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / tasks.len().max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_meta;
+
+    #[test]
+    fn tasks_are_well_formed() {
+        let meta = tiny_meta();
+        let ds = Dataset::build(&meta, 3);
+        let tasks = build_tasks(&ds, meta.vocab, 20, 1);
+        assert_eq!(tasks.len(), 20);
+        for t in &tasks {
+            assert_eq!(t.choice_ids.len(), N_CHOICES);
+            assert!(t.gold < N_CHOICES);
+            for (ids, &start) in t.choice_ids.iter().zip(&t.span_start) {
+                assert!(start < ids.len() - 1);
+                assert!(ids.iter().all(|&i| (i as usize) < meta.vocab));
+            }
+        }
+    }
+
+    #[test]
+    fn tasks_deterministic() {
+        let meta = tiny_meta();
+        let ds = Dataset::build(&meta, 3);
+        let a = build_tasks(&ds, meta.vocab, 5, 9);
+        let b = build_tasks(&ds, meta.vocab, 5, 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.gold, y.gold);
+            assert_eq!(x.choice_ids, y.choice_ids);
+        }
+    }
+
+    #[test]
+    fn gold_positions_are_shuffled() {
+        let meta = tiny_meta();
+        let ds = Dataset::build(&meta, 3);
+        let tasks = build_tasks(&ds, meta.vocab, 40, 2);
+        let positions: std::collections::HashSet<usize> =
+            tasks.iter().map(|t| t.gold).collect();
+        assert!(positions.len() >= 3, "{positions:?}");
+    }
+}

@@ -1,0 +1,147 @@
+//! Calibration-statistics analysis: the activation-outlier /
+//! feature-correlation diagnostics that motivate the paper's method.
+//!
+//! The paper argues magnitude pruning fails on transformers because of
+//! systematic activation outliers (Dettmers et al.) and that Wanda's
+//! diagonal bound ignores within-row interactions.  These diagnostics
+//! quantify both on a given Gram matrix:
+//!   * outlier ratio — max/median feature norm (sqrt diag G);
+//!   * correlation mass — off-diagonal Frobenius share of the
+//!     normalised Gram (0 = perfectly decorrelated features, where
+//!     Wanda is already optimal and SparseSwaps can't help);
+//!   * effective rank — exp(entropy of the normalised diag spectrum
+//!     proxy).
+//!
+//! Exposed on the CLI as `sparseswaps analyze` and used by tests to
+//! verify the synthetic corpus actually produces correlated features
+//! (otherwise every experiment here would be trivial).
+
+use crate::util::tensor::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct GramDiagnostics {
+    pub dim: usize,
+    /// max feature norm / median feature norm.
+    pub outlier_ratio: f64,
+    /// Off-diagonal share of ||Ghat||_F^2 for Ghat = D^-1/2 G D^-1/2.
+    pub correlation_mass: f64,
+    /// Mean absolute off-diagonal correlation.
+    pub mean_abs_corr: f64,
+    /// exp(Shannon entropy) of the normalised diagonal (participation
+    /// number of feature energies).
+    pub energy_participation: f64,
+}
+
+pub fn diagnose(g: &Matrix) -> GramDiagnostics {
+    assert_eq!(g.rows, g.cols);
+    let d = g.rows;
+    let diag: Vec<f64> =
+        (0..d).map(|i| (g.at(i, i) as f64).max(0.0)).collect();
+    let mut norms: Vec<f64> = diag.iter().map(|v| v.sqrt()).collect();
+    norms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = norms[d / 2].max(1e-12);
+    let outlier_ratio = norms[d - 1] / median;
+
+    // Normalised correlation matrix statistics.
+    let mut off_sq = 0.0f64;
+    let mut diag_sq = 0.0f64;
+    let mut abs_sum = 0.0f64;
+    let mut count = 0usize;
+    for i in 0..d {
+        let di = diag[i].sqrt().max(1e-12);
+        for j in 0..d {
+            let dj = diag[j].sqrt().max(1e-12);
+            let c = g.at(i, j) as f64 / (di * dj);
+            if i == j {
+                diag_sq += c * c;
+            } else {
+                off_sq += c * c;
+                abs_sum += c.abs();
+                count += 1;
+            }
+        }
+    }
+    let correlation_mass = off_sq / (off_sq + diag_sq).max(1e-12);
+    let mean_abs_corr = abs_sum / count.max(1) as f64;
+
+    let total: f64 = diag.iter().sum::<f64>().max(1e-12);
+    let entropy: f64 = diag.iter()
+        .map(|&v| {
+            let p = (v / total).max(1e-300);
+            -p * p.ln()
+        })
+        .sum();
+    GramDiagnostics {
+        dim: d,
+        outlier_ratio,
+        correlation_mass,
+        mean_abs_corr,
+        energy_participation: entropy.exp(),
+    }
+}
+
+impl GramDiagnostics {
+    pub fn summary(&self) -> String {
+        format!(
+            "d={:<5} outlier_ratio={:<8.2} corr_mass={:<8.4} \
+             mean|corr|={:<8.4} energy_participation={:.1}",
+            self.dim, self.outlier_ratio, self.correlation_mass,
+            self.mean_abs_corr, self.energy_participation)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn identity_gram_is_decorrelated() {
+        let g = Matrix::eye(16);
+        let diag = diagnose(&g);
+        assert!(diag.correlation_mass < 1e-9);
+        assert!((diag.outlier_ratio - 1.0).abs() < 1e-9);
+        assert!((diag.energy_participation - 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iid_gaussian_features_have_low_correlation() {
+        let mut rng = Rng::new(0);
+        let x = Matrix::from_fn(4096, 16, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(16, 16);
+        g.gram_accumulate(&x);
+        let d = diagnose(&g);
+        assert!(d.mean_abs_corr < 0.05, "{}", d.summary());
+        assert!(d.outlier_ratio < 1.3, "{}", d.summary());
+    }
+
+    #[test]
+    fn outlier_feature_detected() {
+        let mut rng = Rng::new(1);
+        let x = Matrix::from_fn(1024, 16, |_, j| {
+            let scale = if j == 3 { 20.0 } else { 1.0 };
+            rng.gaussian_f32() * scale
+        });
+        let mut g = Matrix::zeros(16, 16);
+        g.gram_accumulate(&x);
+        let d = diagnose(&g);
+        assert!(d.outlier_ratio > 10.0, "{}", d.summary());
+        assert!(d.energy_participation < 4.0, "{}", d.summary());
+    }
+
+    #[test]
+    fn mixed_features_have_correlation_mass() {
+        let mut rng = Rng::new(2);
+        let d = 16;
+        let base = Matrix::from_fn(1024, d, |_, _| rng.gaussian_f32());
+        let mix = Matrix::from_fn(d, d, |i, j| {
+            if i == j { 1.0 } else { 0.5 * rng.gaussian_f32()
+                                     / (d as f32).sqrt() }
+        });
+        let x = base.matmul(&mix);
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let diag = diagnose(&g);
+        assert!(diag.correlation_mass > 0.01, "{}", diag.summary());
+    }
+}

@@ -1,0 +1,154 @@
+//! Calibration: streaming Gram-matrix accumulation through the
+//! `calib_step_{cfg}` artifact.
+//!
+//! The artifact runs the model forward on one calibration batch and adds
+//! X^T X (plus feature sums) for each of the four activation streams of
+//! every block (Sec 2.1.2: G accumulates on-the-fly; raw activations are
+//! never materialised host-side).  The coordinator threads the stat
+//! tensors through successive executions and slices per-layer Gram
+//! matrices out at the end.
+
+pub mod analysis;
+
+use crate::model::store::ParamStore;
+use crate::pruning::dsnot::FeatureStats;
+use crate::runtime::manifest::{ModelMeta, PrunableLayer};
+use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::tensor_data::TensorData;
+use crate::util::tensor::Matrix;
+
+/// Stream order must match `calib_step`'s argument order (aot.py).
+pub const STREAMS: [&str; 4] = ["qkv", "o", "gu", "down"];
+
+#[derive(Clone, Debug)]
+pub struct GramStats {
+    pub meta: ModelMeta,
+    /// Gram stacks per stream: tensors of dims [n_blocks, d, d].
+    grams: Vec<TensorData>,
+    /// Feature-sum stacks per stream: dims [n_blocks, d].
+    sums: Vec<TensorData>,
+    /// Total calibration tokens accumulated.
+    pub tokens: usize,
+    /// Batches consumed.
+    pub batches: usize,
+}
+
+impl GramStats {
+    pub fn zeros(meta: &ModelMeta) -> GramStats {
+        let nb = meta.n_blocks;
+        let width = |s: &str| if s == "down" { meta.d_ff }
+                              else { meta.d_model };
+        let grams = STREAMS.iter().map(|s| {
+            let d = width(s);
+            TensorData::F32 { dims: vec![nb, d, d],
+                              data: vec![0.0; nb * d * d] }
+        }).collect();
+        let sums = STREAMS.iter().map(|s| {
+            let d = width(s);
+            TensorData::F32 { dims: vec![nb, d], data: vec![0.0; nb * d] }
+        }).collect();
+        GramStats { meta: meta.clone(), grams, sums, tokens: 0, batches: 0 }
+    }
+
+    fn stream_index(stream: &str) -> usize {
+        STREAMS.iter().position(|s| *s == stream)
+            .unwrap_or_else(|| panic!("unknown stream {stream}"))
+    }
+
+    fn stream_width(&self, stream: &str) -> usize {
+        if stream == "down" { self.meta.d_ff } else { self.meta.d_model }
+    }
+
+    /// Gram matrix for one prunable layer (slice of its stream stack).
+    pub fn gram_for(&self, layer: &PrunableLayer) -> Matrix {
+        let si = Self::stream_index(&layer.stream);
+        let d = self.stream_width(&layer.stream);
+        assert_eq!(d, layer.d_in);
+        let data = self.grams[si].as_f32().unwrap();
+        let offset = layer.block * d * d;
+        Matrix::from_vec(d, d, data[offset..offset + d * d].to_vec())
+    }
+
+    /// DSnoT feature statistics for one layer.
+    pub fn feature_stats_for(&self, layer: &PrunableLayer) -> FeatureStats {
+        let si = Self::stream_index(&layer.stream);
+        let d = self.stream_width(&layer.stream);
+        let sums = self.sums[si].as_f32().unwrap();
+        let offset = layer.block * d;
+        let g = self.gram_for(layer);
+        FeatureStats::from_gram(&g.diag(), &sums[offset..offset + d],
+                                self.tokens)
+    }
+
+    /// Run one calibration batch through the artifact, updating stats.
+    pub fn accumulate_batch(&mut self, rt: &Runtime, store: &ParamStore,
+                            tokens: &TensorData)
+        -> Result<(), RuntimeError> {
+        let artifact = format!("calib_step_{}", self.meta.name);
+        let mut inputs = store.tensor_args();
+        inputs.push(tokens.clone());
+        inputs.extend(self.grams.iter().cloned());
+        inputs.extend(self.sums.iter().cloned());
+        let out = rt.execute(&artifact, inputs)?;
+        assert_eq!(out.len(), 8);
+        let mut it = out.into_iter();
+        for g in self.grams.iter_mut() {
+            *g = it.next().unwrap();
+        }
+        for s in self.sums.iter_mut() {
+            *s = it.next().unwrap();
+        }
+        self.tokens += self.meta.tokens_per_batch();
+        self.batches += 1;
+        Ok(())
+    }
+}
+
+/// Accumulate Gram statistics over a set of calibration batches using
+/// the (already masked, for sequential mode) parameter store.
+pub fn accumulate(rt: &Runtime, store: &ParamStore,
+                  batches: &[(TensorData, TensorData)])
+    -> Result<GramStats, RuntimeError> {
+    let mut stats = GramStats::zeros(&store.meta);
+    for (tokens, _) in batches {
+        stats.accumulate_batch(rt, store, tokens)?;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_meta;
+
+    #[test]
+    fn zeros_layout() {
+        let meta = tiny_meta();
+        let stats = GramStats::zeros(&meta);
+        assert_eq!(stats.grams.len(), 4);
+        assert_eq!(stats.grams[0].dims(),
+                   &[meta.n_blocks, meta.d_model, meta.d_model]);
+        assert_eq!(stats.grams[3].dims(),
+                   &[meta.n_blocks, meta.d_ff, meta.d_ff]);
+        for layer in &meta.prunable {
+            let g = stats.gram_for(layer);
+            assert_eq!((g.rows, g.cols), (layer.d_in, layer.d_in));
+            assert!(g.data.iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn gram_slicing_addresses_blocks() {
+        let meta = tiny_meta();
+        let mut stats = GramStats::zeros(&meta);
+        // Mark block 1's qkv gram with a sentinel.
+        let d = meta.d_model;
+        stats.grams[0].as_f32_mut().unwrap()[d * d] = 42.0;
+        let l_b0 = meta.prunable.iter()
+            .find(|l| l.block == 0 && l.stream == "qkv").unwrap();
+        let l_b1 = meta.prunable.iter()
+            .find(|l| l.block == 1 && l.stream == "qkv").unwrap();
+        assert_eq!(stats.gram_for(l_b0).at(0, 0), 0.0);
+        assert_eq!(stats.gram_for(l_b1).at(0, 0), 42.0);
+    }
+}

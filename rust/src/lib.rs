@@ -1,0 +1,18 @@
+//! SparseSwaps: tractable LLM pruning mask refinement at scale.
+//!
+//! Reproduction of Zimmer et al. (2025) as a three-layer Rust + JAX +
+//! Pallas system: Pallas kernels (L1) and JAX graphs (L2) are AOT-lowered
+//! to HLO text at build time; this crate (L3) loads them through PJRT and
+//! owns the entire pruning pipeline — training, calibration, warmstarts,
+//! 1-swap refinement, evaluation and reporting.  See DESIGN.md.
+
+pub mod util;
+pub mod pruning;
+pub mod runtime;
+pub mod model;
+pub mod tokenizer;
+pub mod data;
+pub mod gram;
+pub mod eval;
+pub mod coordinator;
+pub mod report;

@@ -1,0 +1,346 @@
+//! `sparseswaps` CLI — the Layer-3 entrypoint.
+//!
+//! Subcommands:
+//!   train    train a zoo model through the AOT train-step artifact
+//!   prune    run the pruning pipeline (warmstart + refinement)
+//!   eval     perplexity + zero-shot accuracy of a checkpoint
+//!   report   regenerate a paper table/figure (table1..table5, fig1, fig2)
+//!   inspect  list manifest artifacts and model configs
+
+use std::process::ExitCode;
+
+use sparseswaps::coordinator::{
+    prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
+};
+use sparseswaps::data::{Dataset, Split};
+use sparseswaps::eval::{perplexity, zeroshot};
+use sparseswaps::model::{checkpoint, ParamStore};
+use sparseswaps::pruning::Criterion;
+use sparseswaps::report;
+use sparseswaps::runtime::Runtime;
+use sparseswaps::util::cli::ArgSpec;
+use sparseswaps::util::logging;
+
+fn main() -> ExitCode {
+    logging::init_from_env();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else {
+        eprint!("{}", top_usage());
+        return ExitCode::FAILURE;
+    };
+    let rest = &argv[1..];
+    let result = match cmd.as_str() {
+        "train" => cmd_train(rest),
+        "prune" => cmd_prune(rest),
+        "eval" => cmd_eval(rest),
+        "report" => cmd_report(rest),
+        "inspect" => cmd_inspect(rest),
+        "analyze" => cmd_analyze(rest),
+        "--help" | "-h" | "help" => {
+            print!("{}", top_usage());
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}\n{}",
+                             top_usage()).into()),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+type CliResult = Result<(), Box<dyn std::error::Error>>;
+
+fn top_usage() -> String {
+    "sparseswaps — LLM pruning mask refinement (Zimmer et al., 2025)\n\n\
+     USAGE:\n  sparseswaps <train|prune|eval|report|analyze|inspect> \
+     [FLAGS]\n\n\
+     Run `sparseswaps <cmd> --help` for per-command flags.\n".into()
+}
+
+fn runtime(args: &sparseswaps::util::cli::Args) -> Result<Runtime, String> {
+    Runtime::start(args.get("artifacts")).map_err(|e| e.to_string())
+}
+
+fn cmd_train(argv: &[String]) -> CliResult {
+    let spec = ArgSpec::new("sparseswaps train",
+                            "train a model via the AOT train-step")
+        .flag("config", "gpt-a", "model config name from the manifest")
+        .flag("steps", "300", "training steps")
+        .flag("lr", "0.002", "Adam learning rate")
+        .flag("batches", "24", "distinct training batches to cycle")
+        .flag("seed", "42", "dataset seed")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("out", "runs/model.ssck", "output checkpoint path");
+    let args = spec.parse(argv)?;
+    let rt = runtime(&args)?;
+    let meta = rt.manifest().config(args.get("config"))?.clone();
+    let ds = Dataset::build(&meta, args.parse_num("seed")?);
+    let mut store = ParamStore::init(&meta, meta.init_seed);
+    let cfg = TrainConfig {
+        steps: args.parse_num("steps")?,
+        lr: args.parse_num("lr")?,
+        n_batches: args.parse_num("batches")?,
+        log_every: 25,
+    };
+    let rep = train(&rt, &mut store, &ds, &cfg)?;
+    checkpoint::save(args.get("out"), &store, None)?;
+    println!("trained {} for {} steps: loss {:.4} -> {:.4} \
+              ({:.1}s); saved to {}",
+             meta.name, cfg.steps, rep.initial_loss, rep.final_loss,
+             rep.seconds, args.get("out"));
+    Ok(())
+}
+
+fn parse_pattern(s: &str) -> Result<PatternKind, String> {
+    if let Some(sparseswaps::pruning::Pattern::Nm { n, m }) =
+        sparseswaps::pruning::Pattern::parse(s) {
+        return Ok(PatternKind::Nm { n, m });
+    }
+    let v: f64 = s.trim_end_matches('%').parse()
+        .map_err(|_| format!("bad pattern {s:?}: want e.g. 0.6 or 2:4"))?;
+    let sparsity = if v > 1.0 { v / 100.0 } else { v };
+    if !(0.0..1.0).contains(&sparsity) {
+        return Err(format!("sparsity {sparsity} out of range"));
+    }
+    Ok(PatternKind::Unstructured { sparsity })
+}
+
+fn parse_refiner(s: &str, engine: &str) -> Result<Refiner, String> {
+    match s {
+        "none" => Ok(Refiner::None),
+        "dsnot" => Ok(Refiner::Dsnot),
+        "sparseswaps" => match engine {
+            "native" => Ok(Refiner::SparseSwapsNative),
+            e @ ("xla" | "pallas") =>
+                Ok(Refiner::SparseSwapsOffload { impl_name: e.into() }),
+            other => Err(format!("unknown engine {other:?}")),
+        },
+        other => Err(format!("unknown refiner {other:?}")),
+    }
+}
+
+fn cmd_prune(argv: &[String]) -> CliResult {
+    let spec = ArgSpec::new("sparseswaps prune", "run the pruning pipeline")
+        .flag("config", "gpt-a", "model config name")
+        .required_flag("checkpoint", "input checkpoint (.ssck)")
+        .flag("criterion", "wanda", "warmstart: magnitude|wanda|ria")
+        .flag("pattern", "0.6", "sparsity (0.6, 60%) or N:M (2:4)")
+        .flag("refine", "sparseswaps", "refiner: none|dsnot|sparseswaps")
+        .flag("engine", "xla", "sparseswaps engine: xla|pallas|native")
+        .flag("tmax", "100", "max 1-swap iterations per row (T_max)")
+        .flag("calib-batches", "8", "calibration batches")
+        .flag("seed", "42", "dataset seed")
+        .bool_flag("oneshot", "single dense calibration pass \
+                              (default: sequential per block)")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("out", "runs/pruned.ssck", "output checkpoint (with masks)");
+    let args = spec.parse(argv)?;
+    let rt = runtime(&args)?;
+    let meta = rt.manifest().config(args.get("config"))?.clone();
+    let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;
+    let ds = Dataset::build(&meta, args.parse_num("seed")?);
+    let cfg = PruneConfig {
+        criterion: Criterion::parse(args.get("criterion"))
+            .ok_or_else(|| format!("bad criterion {:?}",
+                                   args.get("criterion")))?,
+        pattern_kind: parse_pattern(args.get("pattern"))?,
+        refiner: parse_refiner(args.get("refine"), args.get("engine"))?,
+        t_max: args.parse_num("tmax")?,
+        calib_batches: args.parse_num("calib-batches")?,
+        sequential: !args.get_bool("oneshot"),
+        checkpoints: vec![],
+        threads: sparseswaps::util::threadpool::default_threads(),
+    };
+    let t0 = std::time::Instant::now();
+    let (masks, rep) = prune(&rt, &store, &ds, &cfg)?;
+    checkpoint::save(args.get("out"), &store, Some(&masks))?;
+    println!("pruned {} [{} warmstart, {} refiner, {}]:",
+             meta.name, cfg.criterion.name(), cfg.refiner.label(),
+             cfg.pattern_kind.label());
+    println!("  layers: {}  sparsity: {:.2}%  total swaps: {}",
+             rep.layers.len(), 100.0 * masks.overall_sparsity(),
+             rep.layers.iter().map(|l| l.swaps).sum::<usize>());
+    println!("  layer loss: {:.4} -> {:.4}  (mean rel. reduction {:.2}%)",
+             rep.total_warmstart_loss(), rep.total_refined_loss(),
+             100.0 * rep.mean_relative_reduction());
+    println!("  time: {:.1}s (calib {:.1}s, refine {:.1}s); saved {}",
+             t0.elapsed().as_secs_f64(), rep.calib_seconds,
+             rep.refine_seconds, args.get("out"));
+    Ok(())
+}
+
+fn cmd_eval(argv: &[String]) -> CliResult {
+    let spec = ArgSpec::new("sparseswaps eval",
+                            "perplexity + zero-shot of a checkpoint")
+        .flag("config", "gpt-a", "model config name")
+        .required_flag("checkpoint", "checkpoint (.ssck)")
+        .flag("val-batches", "8", "validation batches")
+        .flag("tasks", "64", "zero-shot tasks")
+        .flag("seed", "42", "dataset seed")
+        .bool_flag("dense", "ignore stored masks (evaluate dense)")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let args = spec.parse(argv)?;
+    let rt = runtime(&args)?;
+    let meta = rt.manifest().config(args.get("config"))?.clone();
+    let (store, masks) = checkpoint::load(args.get("checkpoint"), &meta)?;
+    let ds = Dataset::build(&meta, args.parse_num("seed")?);
+    let eval_store = match (&masks, args.get_bool("dense")) {
+        (Some(m), false) => {
+            println!("applying stored masks (sparsity {:.2}%)",
+                     100.0 * m.overall_sparsity());
+            store.masked(m)
+        }
+        _ => store.clone(),
+    };
+    let val = ds.batches(&meta, Split::Validation,
+                         args.parse_num("val-batches")?);
+    let ppl = perplexity(&rt, &eval_store, &val)?;
+    let tasks = zeroshot::build_tasks(&ds, meta.vocab,
+                                      args.parse_num("tasks")?, 911);
+    let acc = zeroshot::accuracy(&rt, &eval_store, &tasks)?;
+    println!("perplexity: {ppl:.3}");
+    println!("zero-shot accuracy: {:.2}% ({} tasks, chance 25%)",
+             100.0 * acc, tasks.len());
+    Ok(())
+}
+
+fn cmd_report(argv: &[String]) -> CliResult {
+    let spec = ArgSpec::new("sparseswaps report",
+                            "regenerate a paper table/figure")
+        .positional("experiment",
+                    "table1|table2|table3|table4|table5|fig1|fig2|all",
+                    true)
+        .flag("model", "gpt-a", "model for single-model experiments")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .flag("out", "reports/report.md", "markdown output (appended)")
+        .bool_flag("quick", "tiny model, reduced budgets");
+    let args = spec.parse(argv)?;
+    let rt = runtime(&args)?;
+    let quick = args.get_bool("quick")
+        || std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let ctx = report::Ctx::new(rt, "runs", quick);
+    let model = if quick { "tiny".to_string() }
+                else { args.get("model").to_string() };
+    let out = args.get("out");
+    let exp = args.positional(0).unwrap().to_string();
+    let run = |name: &str| -> CliResult {
+        match name {
+            "table1" => {
+                let (a, b) = report::table1(&ctx)?;
+                a.print();
+                b.print();
+                a.append_to(out)?;
+                b.append_to(out)?;
+            }
+            "table2" => {
+                let t = report::table2(&ctx)?;
+                t.print();
+                t.append_to(out)?;
+            }
+            "table3" => {
+                let t = report::table3(&ctx, &model)?;
+                t.print();
+                t.append_to(out)?;
+            }
+            "table4" => {
+                let t = report::table4(&ctx)?;
+                t.print();
+                t.append_to(out)?;
+            }
+            "table5" => {
+                let t = report::table5(&ctx, &model)?;
+                t.print();
+                t.append_to(out)?;
+            }
+            "fig1" => {
+                let (t, plot) = report::fig1(&ctx, &model)?;
+                t.print();
+                println!("{plot}");
+                t.append_to(out)?;
+            }
+            "fig2" => {
+                let (t, plot) = report::fig2(&ctx, &model)?;
+                t.print();
+                println!("{plot}");
+                t.append_to(out)?;
+            }
+            other => return Err(
+                format!("unknown experiment {other:?}").into()),
+        }
+        Ok(())
+    };
+    if exp == "all" {
+        for name in ["table1", "table2", "table3", "table4", "table5",
+                     "fig1", "fig2"] {
+            println!("=== {name} ===");
+            run(name)?;
+        }
+    } else {
+        run(&exp)?;
+    }
+    Ok(())
+}
+
+fn cmd_inspect(argv: &[String]) -> CliResult {
+    let spec = ArgSpec::new("sparseswaps inspect",
+                            "list manifest configs and artifacts")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let args = spec.parse(argv)?;
+    let rt = runtime(&args)?;
+    let m = rt.manifest();
+    println!("configs:");
+    for (name, cfg) in &m.configs {
+        println!("  {name}: d_model={} n_heads={} d_ff={} blocks={} \
+                  vocab={} seq={} batch={} ({} prunable layers, {} \
+                  prunable weights)",
+                 cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.n_blocks,
+                 cfg.vocab, cfg.seq_len, cfg.batch, cfg.prunable.len(),
+                 cfg.prunable_weight_count());
+    }
+    println!("artifacts: {}", m.artifacts.len());
+    let mut by_kind: std::collections::BTreeMap<&str, usize> =
+        Default::default();
+    for a in m.artifacts.values() {
+        *by_kind.entry(a.kind.as_str()).or_default() += 1;
+    }
+    for (kind, count) in by_kind {
+        println!("  {kind}: {count}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(argv: &[String]) -> CliResult {
+    let spec = ArgSpec::new("sparseswaps analyze",
+                            "calibration-statistics diagnostics \
+                             (activation outliers, feature correlation)")
+        .flag("config", "tiny", "model config name")
+        .flag("checkpoint", "", "checkpoint (.ssck); fresh init if empty")
+        .flag("calib-batches", "4", "calibration batches")
+        .flag("seed", "42", "dataset seed")
+        .flag("artifacts", "artifacts", "artifact directory");
+    let args = spec.parse(argv)?;
+    let rt = runtime(&args)?;
+    let meta = rt.manifest().config(args.get("config"))?.clone();
+    let store = if args.get("checkpoint").is_empty() {
+        ParamStore::init(&meta, meta.init_seed)
+    } else {
+        checkpoint::load(args.get("checkpoint"), &meta)?.0
+    };
+    let ds = Dataset::build(&meta, args.parse_num("seed")?);
+    let calib = ds.batches(&meta, Split::Calibration,
+                           args.parse_num("calib-batches")?);
+    let stats = sparseswaps::gram::accumulate(&rt, &store, &calib)?;
+    println!("calibration: {} batches, {} tokens", stats.batches,
+             stats.tokens);
+    println!("{:<28} {}", "layer", "diagnostics");
+    for layer in &meta.prunable {
+        let g = stats.gram_for(layer);
+        let d = sparseswaps::gram::analysis::diagnose(&g);
+        println!("{:<28} {}", layer.name, d.summary());
+    }
+    Ok(())
+}

@@ -1,0 +1,320 @@
+//! Checkpoint format `.ssck`: params (+ optional masks) with CRC32.
+//!
+//! Layout (little-endian):
+//!   magic "SSCK" | u32 version | u32 name_len | name bytes
+//!   u32 n_tensors | per tensor: u32 name_len | name | u8 dtype |
+//!     u32 ndims | u64 dims[] | payload bytes
+//!   u32 n_masks  | per mask: u32 rows | u32 cols | payload f32
+//!   u32 crc32 of everything before it
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::model::store::{MaskSet, ParamStore};
+use crate::runtime::manifest::ModelMeta;
+use crate::runtime::tensor_data::TensorData;
+use crate::util::tensor::Matrix;
+
+const MAGIC: &[u8; 4] = b"SSCK";
+const VERSION: u32 = 1;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("format: {0}")]
+    Format(String),
+}
+
+// --- CRC32 (IEEE, table-driven) -------------------------------------------
+
+fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    for (i, entry) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 == 1 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *entry = c;
+    }
+    table
+}
+
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: once_cell::sync::Lazy<[u32; 256]> =
+        once_cell::sync::Lazy::new(crc32_table);
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// --- serialisation ----------------------------------------------------------
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.pos + n > self.buf.len() {
+            return Err(CheckpointError::Format("truncated file".into()));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String, CheckpointError> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|e| CheckpointError::Format(e.to_string()))
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_string(buf: &mut Vec<u8>, s: &str) {
+    push_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn tensor_bytes(t: &TensorData) -> (&[usize], u8, &[u8]) {
+    match t {
+        TensorData::F32 { dims, data } => (dims, 0, unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                       data.len() * 4)
+        }),
+        TensorData::I32 { dims, data } => (dims, 1, unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                       data.len() * 4)
+        }),
+    }
+}
+
+pub fn save(path: impl AsRef<Path>, store: &ParamStore,
+            masks: Option<&MaskSet>) -> Result<(), CheckpointError> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    push_u32(&mut buf, VERSION);
+    push_string(&mut buf, &store.meta.name);
+    push_u32(&mut buf, store.tensors.len() as u32);
+    for ((name, _), t) in store.meta.params.iter().zip(&store.tensors) {
+        push_string(&mut buf, name);
+        let (dims, dtype, payload) = tensor_bytes(t);
+        buf.push(dtype);
+        push_u32(&mut buf, dims.len() as u32);
+        for &d in dims {
+            buf.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        buf.extend_from_slice(payload);
+    }
+    match masks {
+        Some(ms) => {
+            push_u32(&mut buf, ms.masks.len() as u32);
+            for m in &ms.masks {
+                push_u32(&mut buf, m.rows as u32);
+                push_u32(&mut buf, m.cols as u32);
+                buf.extend_from_slice(unsafe {
+                    std::slice::from_raw_parts(
+                        m.data.as_ptr() as *const u8, m.data.len() * 4)
+                });
+            }
+        }
+        None => push_u32(&mut buf, 0),
+    }
+    let crc = crc32(&buf);
+    push_u32(&mut buf, crc);
+    if let Some(dir) = path.as_ref().parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+pub fn load(path: impl AsRef<Path>, meta: &ModelMeta)
+    -> Result<(ParamStore, Option<MaskSet>), CheckpointError> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)?.read_to_end(&mut buf)?;
+    if buf.len() < 8 || &buf[..4] != MAGIC {
+        return Err(CheckpointError::Format("bad magic".into()));
+    }
+    let stored_crc = u32::from_le_bytes(
+        buf[buf.len() - 4..].try_into().unwrap());
+    let actual = crc32(&buf[..buf.len() - 4]);
+    if stored_crc != actual {
+        return Err(CheckpointError::Format(format!(
+            "crc mismatch: stored {stored_crc:#x}, computed {actual:#x}")));
+    }
+    let mut cur = Cursor { buf: &buf[..buf.len() - 4], pos: 4 };
+    let version = cur.u32()?;
+    if version != VERSION {
+        return Err(CheckpointError::Format(format!(
+            "unsupported version {version}")));
+    }
+    let cfg_name = cur.string()?;
+    if cfg_name != meta.name {
+        return Err(CheckpointError::Format(format!(
+            "checkpoint is for config {cfg_name:?}, expected {:?}",
+            meta.name)));
+    }
+    let n_tensors = cur.u32()? as usize;
+    if n_tensors != meta.params.len() {
+        return Err(CheckpointError::Format(format!(
+            "checkpoint has {n_tensors} tensors, manifest expects {}",
+            meta.params.len())));
+    }
+    let mut tensors = Vec::with_capacity(n_tensors);
+    for (name, want_dims) in &meta.params {
+        let got_name = cur.string()?;
+        if &got_name != name {
+            return Err(CheckpointError::Format(format!(
+                "tensor order mismatch: got {got_name:?}, want {name:?}")));
+        }
+        let dtype = cur.take(1)?[0];
+        let ndims = cur.u32()? as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(cur.u64()? as usize);
+        }
+        if &dims != want_dims {
+            return Err(CheckpointError::Format(format!(
+                "{name}: dims {dims:?} != manifest {want_dims:?}")));
+        }
+        let n: usize = dims.iter().product();
+        let payload = cur.take(n * 4)?;
+        let tensor = match dtype {
+            0 => TensorData::F32 {
+                dims,
+                data: payload.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            1 => TensorData::I32 {
+                dims,
+                data: payload.chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            other => return Err(CheckpointError::Format(format!(
+                "unknown dtype tag {other}"))),
+        };
+        tensors.push(tensor);
+    }
+    let n_masks = cur.u32()? as usize;
+    let masks = if n_masks > 0 {
+        if n_masks != meta.prunable.len() {
+            return Err(CheckpointError::Format(format!(
+                "checkpoint has {n_masks} masks, expected {}",
+                meta.prunable.len())));
+        }
+        let mut ms = Vec::with_capacity(n_masks);
+        for layer in &meta.prunable {
+            let rows = cur.u32()? as usize;
+            let cols = cur.u32()? as usize;
+            if (rows, cols) != (layer.d_out, layer.d_in) {
+                return Err(CheckpointError::Format(format!(
+                    "mask shape {rows}x{cols} != layer {}x{}",
+                    layer.d_out, layer.d_in)));
+            }
+            let payload = cur.take(rows * cols * 4)?;
+            ms.push(Matrix::from_vec(rows, cols,
+                payload.chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect()));
+        }
+        Some(MaskSet { masks: ms })
+    } else {
+        None
+    };
+    Ok((ParamStore { meta: meta.clone(), tensors }, masks))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_meta;
+    use crate::pruning::mask::{mask_from_scores, Pattern};
+
+    #[test]
+    fn crc32_known_vectors() {
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b"hello"), 0x3610A686);
+    }
+
+    #[test]
+    fn round_trip_params_only() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 5);
+        let path = std::env::temp_dir().join("ssck_test_params.ssck");
+        save(&path, &store, None).unwrap();
+        let (loaded, masks) = load(&path, &meta).unwrap();
+        assert!(masks.is_none());
+        for (a, b) in store.tensors.iter().zip(&loaded.tensors) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn round_trip_with_masks() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 5);
+        let mut masks = MaskSet::all_ones(&meta);
+        for (i, layer) in meta.prunable.iter().enumerate() {
+            let w = store.weight(layer);
+            let scores = crate::pruning::saliency::magnitude(&w);
+            masks.masks[i] = mask_from_scores(
+                &scores, Pattern::PerRow { keep: layer.d_in / 2 });
+        }
+        let path = std::env::temp_dir().join("ssck_test_masks.ssck");
+        save(&path, &store, Some(&masks)).unwrap();
+        let (_, loaded) = load(&path, &meta).unwrap();
+        let loaded = loaded.unwrap();
+        for (a, b) in masks.masks.iter().zip(&loaded.masks) {
+            assert_eq!(a.data, b.data);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 5);
+        let path = std::env::temp_dir().join("ssck_test_corrupt.ssck");
+        save(&path, &store, None).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(load(&path, &meta),
+                         Err(CheckpointError::Format(_))));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn wrong_config_rejected() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 5);
+        let path = std::env::temp_dir().join("ssck_test_cfg.ssck");
+        save(&path, &store, None).unwrap();
+        let mut other = tiny_meta();
+        other.name = "other".into();
+        assert!(load(&path, &other).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,8 @@
+//! Model-side substrates: the flat parameter store the artifacts
+//! consume, checkpoint io, and shared test fixtures.
+
+pub mod checkpoint;
+pub mod store;
+pub mod testutil;
+
+pub use store::{MaskSet, ParamStore};

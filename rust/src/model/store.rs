@@ -1,0 +1,174 @@
+//! Parameter store: the flat, manifest-ordered list of model tensors the
+//! HLO artifacts consume, plus typed access to prunable weight matrices.
+
+use crate::runtime::manifest::{ModelMeta, PrunableLayer};
+use crate::runtime::tensor_data::TensorData;
+use crate::util::prng::Rng;
+use crate::util::tensor::Matrix;
+
+#[derive(Clone, Debug)]
+pub struct ParamStore {
+    pub meta: ModelMeta,
+    /// One tensor per manifest `params` entry, same order.
+    pub tensors: Vec<TensorData>,
+}
+
+impl ParamStore {
+    /// Random init mirroring the python side's scheme (norms = 1, linear
+    /// weights gaussian scaled by fan_in^-0.5).  Exact bit-equality with
+    /// jax init is *not* required — training happens through the same
+    /// HLO either way — but the distributions match.
+    pub fn init(meta: &ModelMeta, seed: u64) -> ParamStore {
+        let mut rng = Rng::new(seed);
+        let tensors = meta.params.iter().map(|(name, dims)| {
+            let n: usize = dims.iter().product();
+            if name.ends_with("_norm") {
+                TensorData::F32 { dims: dims.clone(), data: vec![1.0; n] }
+            } else {
+                let fan_in = *dims.last().unwrap() as f32;
+                let scale = fan_in.powf(-0.5);
+                TensorData::F32 {
+                    dims: dims.clone(),
+                    data: (0..n).map(|_| rng.gaussian_f32() * scale)
+                        .collect(),
+                }
+            }
+        }).collect();
+        ParamStore { meta: meta.clone(), tensors }
+    }
+
+    pub fn zeros_like(meta: &ModelMeta) -> ParamStore {
+        let tensors = meta.params.iter().map(|(_, dims)| {
+            let n: usize = dims.iter().product();
+            TensorData::F32 { dims: dims.clone(), data: vec![0.0; n] }
+        }).collect();
+        ParamStore { meta: meta.clone(), tensors }
+    }
+
+    pub fn total_elements(&self) -> usize {
+        self.tensors.iter().map(|t| t.element_count()).sum()
+    }
+
+    /// Weight matrix of a prunable layer ([d_out, d_in] paper layout).
+    pub fn weight(&self, layer: &PrunableLayer) -> Matrix {
+        let t = &self.tensors[layer.param_index];
+        let data = t.as_f32().expect("weights are f32").to_vec();
+        Matrix::from_vec(layer.d_out, layer.d_in, data)
+    }
+
+    pub fn set_weight(&mut self, layer: &PrunableLayer, w: &Matrix) {
+        assert_eq!((w.rows, w.cols), (layer.d_out, layer.d_in));
+        let t = &mut self.tensors[layer.param_index];
+        t.as_f32_mut().expect("weights are f32")
+            .copy_from_slice(&w.data);
+    }
+
+    /// A copy of the store with every prunable weight masked (W ⊙ M).
+    pub fn masked(&self, masks: &MaskSet) -> ParamStore {
+        let mut out = self.clone();
+        for (layer, mask) in self.meta.prunable.iter().zip(&masks.masks) {
+            let t = &mut out.tensors[layer.param_index];
+            let data = t.as_f32_mut().unwrap();
+            for (v, &m) in data.iter_mut().zip(&mask.data) {
+                *v *= m;
+            }
+        }
+        out
+    }
+
+    /// Flat clone of all tensors (artifact argument prefix).
+    pub fn tensor_args(&self) -> Vec<TensorData> {
+        self.tensors.clone()
+    }
+}
+
+/// One mask per prunable layer (manifest order).
+#[derive(Clone, Debug)]
+pub struct MaskSet {
+    pub masks: Vec<Matrix>,
+}
+
+impl MaskSet {
+    pub fn all_ones(meta: &ModelMeta) -> MaskSet {
+        MaskSet {
+            masks: meta.prunable.iter()
+                .map(|l| Matrix::from_fn(l.d_out, l.d_in, |_, _| 1.0))
+                .collect(),
+        }
+    }
+
+    pub fn overall_sparsity(&self) -> f64 {
+        let total: usize = self.masks.iter().map(|m| m.data.len()).sum();
+        let kept: f64 = self.masks.iter()
+            .flat_map(|m| m.data.iter())
+            .map(|&v| v as f64)
+            .sum();
+        1.0 - kept / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_meta;
+
+    #[test]
+    fn init_shapes_match_meta() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 7);
+        assert_eq!(store.tensors.len(), meta.params.len());
+        for (t, (_, dims)) in store.tensors.iter().zip(&meta.params) {
+            assert_eq!(t.dims(), &dims[..]);
+        }
+    }
+
+    #[test]
+    fn norms_init_to_one() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 7);
+        for (i, (name, _)) in meta.params.iter().enumerate() {
+            if name.ends_with("_norm") {
+                assert!(store.tensors[i].as_f32().unwrap().iter()
+                        .all(|&v| v == 1.0), "{name}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_round_trip() {
+        let meta = tiny_meta();
+        let mut store = ParamStore::init(&meta, 3);
+        let layer = meta.prunable[0].clone();
+        let mut w = store.weight(&layer);
+        w.set(0, 0, 42.0);
+        store.set_weight(&layer, &w);
+        assert_eq!(store.weight(&layer).at(0, 0), 42.0);
+    }
+
+    #[test]
+    fn masking_zeroes_weights() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 3);
+        let mut masks = MaskSet::all_ones(&meta);
+        masks.masks[0].data.fill(0.0);
+        let masked = store.masked(&masks);
+        let layer = &meta.prunable[0];
+        assert!(masked.weight(layer).data.iter().all(|&v| v == 0.0));
+        // Other layers untouched.
+        let other = &meta.prunable[1];
+        assert_eq!(masked.weight(other).data, store.weight(other).data);
+        assert!(masks.overall_sparsity() > 0.0);
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let meta = tiny_meta();
+        let a = ParamStore::init(&meta, 9);
+        let b = ParamStore::init(&meta, 9);
+        assert_eq!(a.tensors[0].as_f32().unwrap(),
+                   b.tensors[0].as_f32().unwrap());
+        let c = ParamStore::init(&meta, 10);
+        assert_ne!(a.tensors[0].as_f32().unwrap(),
+                   c.tensors[0].as_f32().unwrap());
+    }
+}

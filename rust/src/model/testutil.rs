@@ -1,0 +1,87 @@
+//! Shared test fixtures: a hand-built `ModelMeta` mirroring the python
+//! "tiny" config, available without artifacts on disk.
+
+use crate::runtime::manifest::{ModelMeta, PrunableLayer};
+
+/// Mirror of `configs.MODEL_CONFIGS["tiny"]` (python side).
+pub fn tiny_meta() -> ModelMeta {
+    meta_for(256, 64, 2, 128, 2, 32, 4)
+}
+
+pub fn meta_for(vocab: usize, d_model: usize, n_heads: usize, d_ff: usize,
+                n_blocks: usize, seq_len: usize, batch: usize)
+    -> ModelMeta {
+    let mut params: Vec<(String, Vec<usize>)> =
+        vec![("tok_emb".into(), vec![vocab, d_model])];
+    let mut prunable = Vec::new();
+    let streams = [
+        ("attn.q_proj", "qkv", d_model, d_model),
+        ("attn.k_proj", "qkv", d_model, d_model),
+        ("attn.v_proj", "qkv", d_model, d_model),
+        ("attn.o_proj", "o", d_model, d_model),
+        ("mlp.gate_proj", "gu", d_ff, d_model),
+        ("mlp.up_proj", "gu", d_ff, d_model),
+        ("mlp.down_proj", "down", d_model, d_ff),
+    ];
+    for b in 0..n_blocks {
+        params.push((format!("blocks.{b}.attn_norm"), vec![d_model]));
+        for &(lt, stream, d_out, d_in) in &streams[..4] {
+            let idx = params.len();
+            params.push((format!("blocks.{b}.{lt}"), vec![d_out, d_in]));
+            prunable.push(PrunableLayer {
+                param_index: idx,
+                name: format!("blocks.{b}.{lt}"),
+                layer_type: lt.to_string(),
+                block: b,
+                d_out,
+                d_in,
+                stream: stream.to_string(),
+            });
+        }
+        params.push((format!("blocks.{b}.mlp_norm"), vec![d_model]));
+        for &(lt, stream, d_out, d_in) in &streams[4..] {
+            let idx = params.len();
+            params.push((format!("blocks.{b}.{lt}"), vec![d_out, d_in]));
+            prunable.push(PrunableLayer {
+                param_index: idx,
+                name: format!("blocks.{b}.{lt}"),
+                layer_type: lt.to_string(),
+                block: b,
+                d_out,
+                d_in,
+                stream: stream.to_string(),
+            });
+        }
+    }
+    params.push(("final_norm".into(), vec![d_model]));
+    params.push(("lm_head".into(), vec![vocab, d_model]));
+    ModelMeta {
+        name: "tiny".into(),
+        vocab,
+        d_model,
+        n_heads,
+        d_ff,
+        n_blocks,
+        seq_len,
+        batch,
+        init_seed: 7,
+        params,
+        prunable,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_meta_consistent() {
+        let m = tiny_meta();
+        // 1 emb + 2 blocks * 9 + final_norm + lm_head
+        assert_eq!(m.params.len(), 1 + 2 * 9 + 2);
+        assert_eq!(m.prunable.len(), 14);
+        for p in &m.prunable {
+            assert_eq!(m.params[p.param_index].1, vec![p.d_out, p.d_in]);
+        }
+    }
+}

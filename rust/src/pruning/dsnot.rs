@@ -1,0 +1,268 @@
+//! DSnoT baseline (Zhang et al., 2024b): "Dynamic Sparse no Training".
+//!
+//! Reimplemented from the paper's description for comparison (the
+//! official code is unavailable offline).  DSnoT iteratively *grows* a
+//! pruned weight and *prunes* a kept weight per row, choosing both from
+//! cheap surrogate statistics of the reconstruction error rather than
+//! the exact quadratic objective:
+//!
+//!   * expected residual  E[r] = sum_{j pruned} w_j mu_j, where mu_j is
+//!     the mean of feature j over the calibration set;
+//!   * grow the pruned index whose expected contribution w_p mu_p
+//!     opposes E[r] with the largest magnitude (moves E[r] toward 0);
+//!   * prune the kept index with the smallest Wanda-style influence
+//!     |w_u| * sqrt(mu_u^2 + var_u)  (second moment = E[x_u^2]).
+//!
+//! Because both choices ignore the interaction term -2 w_u w_p G_up, a
+//! DSnoT cycle can *increase* the true loss (exactly the failure mode
+//! the paper's Sec 2.1.3 counterexample illustrates); SparseSwaps is
+//! monotone by construction.  Our tests assert the behaviour class, and
+//! the benches reproduce the Table 1 ordering (DSnoT helps, SparseSwaps
+//! helps more).
+
+use crate::pruning::mask::Pattern;
+use crate::util::tensor::Matrix;
+
+/// Per-feature calibration statistics (accumulated alongside the Gram
+/// matrix during the calibration pass).
+#[derive(Clone, Debug)]
+pub struct FeatureStats {
+    /// Mean of each feature over calibration tokens.
+    pub mean: Vec<f32>,
+    /// Second moment E[x_j^2] (= G_jj / tokens).
+    pub second_moment: Vec<f32>,
+}
+
+impl FeatureStats {
+    pub fn from_gram(gram_diag: &[f32], feature_sums: &[f32],
+                     tokens: usize) -> Self {
+        assert_eq!(gram_diag.len(), feature_sums.len());
+        let n = tokens.max(1) as f32;
+        let mean: Vec<f32> = feature_sums.iter().map(|s| s / n).collect();
+        let second_moment: Vec<f32> =
+            gram_diag.iter().map(|g| (g / n).max(0.0)).collect();
+        Self { mean, second_moment }
+    }
+
+    pub fn variance(&self, j: usize) -> f32 {
+        (self.second_moment[j] - self.mean[j] * self.mean[j]).max(0.0)
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct DsnotConfig {
+    /// Maximum prune/regrow cycles per row.
+    pub max_cycles: usize,
+    /// Stop when |E[r]| drops below this threshold.
+    pub residual_tol: f32,
+}
+
+impl Default for DsnotConfig {
+    fn default() -> Self {
+        Self { max_cycles: 50, residual_tol: 1e-6 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct DsnotOutcome {
+    pub cycles: usize,
+}
+
+/// One row of DSnoT.  `m` is mutated in place; the sparsity level (and
+/// N:M block structure, if any) is preserved by swapping in pairs.
+pub fn refine_row(w: &[f32], m: &mut [f32], stats: &FeatureStats,
+                  nm_block: usize, cfg: &DsnotConfig) -> DsnotOutcome {
+    let d = w.len();
+    let mut cycles = 0;
+    for _ in 0..cfg.max_cycles {
+        // Expected residual of the pruned set.
+        let mut er = 0.0f32;
+        for j in 0..d {
+            if m[j] < 0.5 {
+                er += w[j] * stats.mean[j];
+            }
+        }
+        if er.abs() <= cfg.residual_tol {
+            break;
+        }
+        // Grow: pruned index whose contribution most opposes E[r].
+        let mut grow: Option<(f32, usize)> = None;
+        for p in 0..d {
+            if m[p] < 0.5 {
+                let contrib = w[p] * stats.mean[p];
+                // Removing p from the pruned set changes E[r] by -contrib;
+                // we want the largest decrease of |E[r]|.
+                let newmag = (er - contrib).abs();
+                let gain = er.abs() - newmag;
+                if gain > 0.0
+                    && grow.map_or(true, |(bg, _)| gain > bg) {
+                    grow = Some((gain, p));
+                }
+            }
+        }
+        let Some((_, p_star)) = grow else { break };
+        // Prune: kept index with the smallest influence, restricted to
+        // the same N:M block when applicable.
+        let (blk_lo, blk_hi) = if nm_block > 0 {
+            let b = p_star / nm_block;
+            (b * nm_block, (b + 1) * nm_block)
+        } else {
+            (0, d)
+        };
+        let mut prune: Option<(f32, usize)> = None;
+        for u in blk_lo..blk_hi {
+            if m[u] > 0.5 && u != p_star {
+                let infl = w[u].abs() * stats.second_moment[u].sqrt();
+                if prune.map_or(true, |(bi, _)| infl < bi) {
+                    prune = Some((infl, u));
+                }
+            }
+        }
+        let Some((_, u_star)) = prune else { break };
+        m[p_star] = 1.0;
+        m[u_star] = 0.0;
+        cycles += 1;
+    }
+    DsnotOutcome { cycles }
+}
+
+/// Refine a whole layer with DSnoT.
+pub fn refine_layer(w: &Matrix, mask: &mut Matrix, stats: &FeatureStats,
+                    pattern: Pattern, cfg: &DsnotConfig) -> usize {
+    let nm_block = pattern.nm_block();
+    let mut total = 0;
+    for r in 0..w.rows {
+        let mut row = mask.row(r).to_vec();
+        total += refine_row(w.row(r), &mut row, stats, nm_block, cfg).cycles;
+        mask.row_mut(r).copy_from_slice(&row);
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask::{mask_from_scores, validate, Pattern};
+    use crate::pruning::saliency;
+    use crate::util::prng::Rng;
+
+    fn stats_from_x(x: &Matrix) -> FeatureStats {
+        let d = x.cols;
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(x);
+        let mut sums = vec![0.0f32; d];
+        for t in 0..x.rows {
+            for j in 0..d {
+                sums[j] += x.at(t, j);
+            }
+        }
+        FeatureStats::from_gram(&g.diag(), &sums, x.rows)
+    }
+
+    fn biased_instance(seed: u64) -> (Matrix, Matrix, FeatureStats) {
+        // Features with non-zero means so E[r] is informative.
+        let mut rng = Rng::new(seed);
+        let d = 24;
+        let means: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+        let x = Matrix::from_fn(64, d,
+                                |_, j| means[j] + 0.3 * rng.gaussian_f32());
+        let w = Matrix::from_fn(6, d, |_, _| rng.gaussian_f32());
+        let stats = stats_from_x(&x);
+        (w, x, stats)
+    }
+
+    #[test]
+    fn preserves_per_row_sparsity() {
+        let (w, _, stats) = biased_instance(0);
+        let pattern = Pattern::PerRow { keep: 10 };
+        let mut mask = mask_from_scores(&saliency::magnitude(&w), pattern);
+        refine_layer(&w, &mut mask, &stats, pattern,
+                     &DsnotConfig::default());
+        validate(&mask, pattern).unwrap();
+    }
+
+    #[test]
+    fn preserves_nm_structure() {
+        let (w, _, stats) = biased_instance(1);
+        let pattern = Pattern::Nm { n: 2, m: 4 };
+        let mut mask = mask_from_scores(&saliency::magnitude(&w), pattern);
+        refine_layer(&w, &mut mask, &stats, pattern,
+                     &DsnotConfig::default());
+        validate(&mask, pattern).unwrap();
+    }
+
+    #[test]
+    fn reduces_expected_residual() {
+        let (w, _, stats) = biased_instance(2);
+        let pattern = Pattern::PerRow { keep: 10 };
+        let mut mask = mask_from_scores(&saliency::magnitude(&w), pattern);
+        let er = |m: &Matrix, r: usize| -> f32 {
+            (0..w.cols)
+                .filter(|&j| m.at(r, j) < 0.5)
+                .map(|j| w.at(r, j) * stats.mean[j])
+                .sum()
+        };
+        let before: f32 = (0..w.rows).map(|r| er(&mask, r).abs()).sum();
+        refine_layer(&w, &mut mask, &stats, pattern,
+                     &DsnotConfig::default());
+        let after: f32 = (0..w.rows).map(|r| er(&mask, r).abs()).sum();
+        assert!(after <= before + 1e-4, "{before} -> {after}");
+    }
+
+    #[test]
+    fn stats_variance_consistent() {
+        let (_, x, stats) = biased_instance(3);
+        // variance = E[x^2] - mean^2 must be >= 0 and roughly match a
+        // direct computation.
+        for j in 0..x.cols {
+            let mean = (0..x.rows).map(|t| x.at(t, j)).sum::<f32>()
+                / x.rows as f32;
+            let var = (0..x.rows)
+                .map(|t| (x.at(t, j) - mean).powi(2))
+                .sum::<f32>() / x.rows as f32;
+            assert!((stats.variance(j) - var).abs() < 1e-2,
+                    "{} vs {}", stats.variance(j), var);
+        }
+    }
+
+    #[test]
+    fn can_increase_true_loss_unlike_sparseswaps() {
+        // Behaviour-class check: across random instances DSnoT sometimes
+        // increases the exact quadratic loss (it optimises a surrogate);
+        // SparseSwaps never does.  We only assert "sometimes" over a
+        // seed sweep to keep the test robust.
+        use crate::pruning::error::layer_loss;
+        let mut dsnot_row_increased = 0;
+        for seed in 0..40 {
+            let (w, x, stats) = biased_instance(100 + seed);
+            let d = x.cols;
+            let mut g = Matrix::zeros(d, d);
+            g.gram_accumulate(&x);
+            let pattern = Pattern::PerRow { keep: 10 };
+            // Wanda warmstart: already strong, so the surrogate's blind
+            // spots (ignored interactions) show up more readily.
+            let scores = saliency::wanda(&w, &g.diag());
+            let mut mask = mask_from_scores(&scores, pattern);
+            let mut dmask = mask.clone();
+            refine_layer(&w, &mut dmask, &stats, pattern,
+                         &DsnotConfig::default());
+            for r in 0..w.rows {
+                let b = crate::pruning::error::row_loss(
+                    w.row(r), mask.row(r), &g);
+                let a = crate::pruning::error::row_loss(
+                    w.row(r), dmask.row(r), &g);
+                if a > b * (1.0 + 1e-6) {
+                    dsnot_row_increased += 1;
+                }
+            }
+            // SparseSwaps on the same warmstart is always monotone.
+            let out = crate::pruning::sparseswaps::refine_layer(
+                &w, &mut mask, &g, pattern,
+                &crate::pruning::sparseswaps::SwapConfig::default(), 1);
+            assert!(out.total_after() <= out.total_before() + 1e-6);
+            let _ = layer_loss(&w, &mask, &g);
+        }
+        assert!(dsnot_row_increased > 0,
+                "expected DSnoT to be non-monotone on some row");
+    }
+}

@@ -1,0 +1,160 @@
+//! Exact per-row / per-layer pruning error via the Gram formulation:
+//!   L_i(m) = (w_i - m_i ⊙ w_i)^T G (w_i - m_i ⊙ w_i)        (Sec 2.1.2)
+//! and the correlation vector c = G((1-m) ⊙ w)                (Sec 2.1.3).
+
+use crate::util::tensor::{dot, Matrix};
+
+/// Correlation vector c for one row: c = G q with q = (1-m) ⊙ w.
+pub fn corr_vector(w: &[f32], m: &[f32], g: &Matrix) -> Vec<f32> {
+    let d = w.len();
+    assert_eq!(g.rows, d);
+    let q: Vec<f32> = w.iter().zip(m).map(|(&wv, &mv)| (1.0 - mv) * wv)
+        .collect();
+    // c_i = sum_j G_ij q_j; exploit q's sparsity (only pruned j non-zero).
+    let mut c = vec![0.0f32; d];
+    for (j, &qj) in q.iter().enumerate() {
+        if qj != 0.0 {
+            crate::util::tensor::axpy(qj, g.row(j), &mut c);
+        }
+    }
+    c
+}
+
+/// Exact per-row loss given a precomputed correlation vector:
+/// L = q^T G q = q . c.
+pub fn row_loss_with_corr(w: &[f32], m: &[f32], c: &[f32]) -> f64 {
+    let mut s = 0.0f64;
+    for i in 0..w.len() {
+        let q = (1.0 - m[i]) * w[i];
+        if q != 0.0 {
+            s += (q as f64) * (c[i] as f64);
+        }
+    }
+    s
+}
+
+/// Exact per-row loss from scratch.
+pub fn row_loss(w: &[f32], m: &[f32], g: &Matrix) -> f64 {
+    let c = corr_vector(w, m, g);
+    row_loss_with_corr(w, m, &c)
+}
+
+/// Per-row losses for a full layer. Returns one loss per row of `w`.
+pub fn layer_row_losses(w: &Matrix, mask: &Matrix, g: &Matrix) -> Vec<f64> {
+    assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+    (0..w.rows).map(|r| row_loss(w.row(r), mask.row(r), g)).collect()
+}
+
+/// Total layer loss  ||W X - (M ⊙ W) X||_F^2  (Eq. 1).
+pub fn layer_loss(w: &Matrix, mask: &Matrix, g: &Matrix) -> f64 {
+    layer_row_losses(w, mask, g).iter().sum()
+}
+
+/// Direct (activation-space) loss for testing the Gram identity:
+/// computes ||(W - M⊙W) X^T||_F^2 from raw activations x [t, d].
+pub fn layer_loss_direct(w: &Matrix, mask: &Matrix, x: &Matrix) -> f64 {
+    assert_eq!(w.cols, x.cols);
+    let mut total = 0.0f64;
+    for r in 0..w.rows {
+        let wrow = w.row(r);
+        let mrow = mask.row(r);
+        let q: Vec<f32> = wrow.iter().zip(mrow)
+            .map(|(&wv, &mv)| (1.0 - mv) * wv)
+            .collect();
+        for t in 0..x.rows {
+            let v = dot(&q, x.row(t)) as f64;
+            total += v * v;
+        }
+    }
+    total
+}
+
+/// Relative error reduction (paper's Fig. 1 / Tables 3-4 metric):
+/// 1 - after/before, guarded for before == 0.
+pub fn relative_reduction(before: f64, after: f64) -> f64 {
+    if before <= 0.0 {
+        0.0
+    } else {
+        1.0 - after / before
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn random_instance(seed: u64, t: usize, d: usize)
+        -> (Matrix, Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(t, d, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let w = Matrix::from_fn(4, d, |_, _| rng.gaussian_f32());
+        let mask = Matrix::from_fn(4, d, |_, _| {
+            if rng.bool(0.5) { 1.0 } else { 0.0 }
+        });
+        (x, g, w, mask)
+    }
+
+    #[test]
+    fn gram_loss_equals_direct_loss() {
+        let (x, g, w, mask) = random_instance(3, 40, 16);
+        let via_gram = layer_loss(&w, &mask, &g);
+        let direct = layer_loss_direct(&w, &mask, &x);
+        assert!((via_gram - direct).abs() / direct.max(1.0) < 1e-4,
+                "{via_gram} vs {direct}");
+    }
+
+    #[test]
+    fn full_mask_has_zero_loss() {
+        let (_, g, w, _) = random_instance(5, 30, 12);
+        let ones = Matrix::from_fn(4, 12, |_, _| 1.0);
+        assert!(layer_loss(&w, &ones, &g).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_mask_loss_is_full_norm() {
+        let (x, g, w, _) = random_instance(7, 25, 10);
+        let zeros = Matrix::zeros(4, 10);
+        let loss = layer_loss(&w, &zeros, &g);
+        // ||W X^T||_F^2 computed directly.
+        let mut want = 0.0f64;
+        for r in 0..4 {
+            for t in 0..x.rows {
+                let v = dot(w.row(r), x.row(t)) as f64;
+                want += v * v;
+            }
+        }
+        assert!((loss - want).abs() / want < 1e-4);
+    }
+
+    #[test]
+    fn corr_vector_matches_dense_matvec() {
+        let (_, g, w, mask) = random_instance(9, 30, 14);
+        let c = corr_vector(w.row(0), mask.row(0), &g);
+        let q: Vec<f32> = w.row(0).iter().zip(mask.row(0))
+            .map(|(&wv, &mv)| (1.0 - mv) * wv)
+            .collect();
+        let want = g.matvec(&q);
+        for i in 0..14 {
+            assert!((c[i] - want[i]).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn losses_are_nonnegative() {
+        for seed in 0..5 {
+            let (_, g, w, mask) = random_instance(seed, 20, 8);
+            for l in layer_row_losses(&w, &mask, &g) {
+                assert!(l >= -1e-6, "{l}");
+            }
+        }
+    }
+
+    #[test]
+    fn relative_reduction_basics() {
+        assert!((relative_reduction(10.0, 4.0) - 0.6).abs() < 1e-12);
+        assert_eq!(relative_reduction(0.0, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! Exact brute-force mask selection for tiny instances.
+//!
+//! The paper notes the mask-selection problem is NP-hard and that IP
+//! solvers are infeasible at LLM scale; at toy scale (d_in <= ~22) we
+//! can enumerate every per-row mask and measure how far SparseSwaps'
+//! 1-swap local optima are from the true optimum (the "Abl. A" study in
+//! DESIGN.md).  Enumeration uses Gosper's hack over k-subsets, and the
+//! loss L = sum_{i,j in P} w_i w_j G_ij is evaluated over the pruned
+//! set only, so each candidate costs O(|P|^2).
+
+use crate::util::tensor::Matrix;
+
+/// Max dimension we allow (C(24,12) ~ 2.7M subsets keeps this fast).
+pub const MAX_EXACT_DIM: usize = 24;
+
+/// Loss of pruning exactly the set bits of `pruned` (bitmask over d).
+fn loss_of_pruned_set(w: &[f32], g: &Matrix, pruned: u64) -> f64 {
+    let mut idx = [0usize; MAX_EXACT_DIM];
+    let mut n = 0;
+    let mut bits = pruned;
+    while bits != 0 {
+        idx[n] = bits.trailing_zeros() as usize;
+        n += 1;
+        bits &= bits - 1;
+    }
+    let mut loss = 0.0f64;
+    for a in 0..n {
+        let i = idx[a];
+        let wi = w[i] as f64;
+        loss += wi * wi * g.at(i, i) as f64;
+        for b in a + 1..n {
+            let j = idx[b];
+            loss += 2.0 * wi * w[j] as f64 * g.at(i, j) as f64;
+        }
+    }
+    loss
+}
+
+/// Next k-subset bitmask in lexicographic order (Gosper's hack):
+///   u = lowest set bit; w = v + u ripples the lowest block up one;
+///   (v ^ w) / u >> 2 re-packs the remaining block bits at the bottom.
+fn next_subset(v: u64) -> u64 {
+    debug_assert!(v != 0);
+    let u = v & v.wrapping_neg();
+    let w = v.wrapping_add(u);
+    w | (((v ^ w) / u) >> 2)
+}
+
+/// Optimal per-row mask: keep `keep` of `d` weights minimising the exact
+/// loss.  Returns (mask_row, optimal_loss).
+pub fn optimal_row_mask(w: &[f32], g: &Matrix, keep: usize)
+    -> (Vec<f32>, f64) {
+    let d = w.len();
+    assert!(d <= MAX_EXACT_DIM, "exact solver capped at {MAX_EXACT_DIM}");
+    assert!(keep <= d);
+    let prune = d - keep;
+    if prune == 0 {
+        return (vec![1.0; d], 0.0);
+    }
+    let mut best_loss = f64::INFINITY;
+    let mut best_set = 0u64;
+    let mut subset: u64 = (1u64 << prune) - 1;
+    let limit: u64 = 1u64 << d;
+    while subset < limit {
+        let loss = loss_of_pruned_set(w, g, subset);
+        if loss < best_loss {
+            best_loss = loss;
+            best_set = subset;
+        }
+        if subset == 0 {
+            break;
+        }
+        subset = next_subset(subset);
+    }
+    let mut mask = vec![1.0f32; d];
+    for i in 0..d {
+        if best_set >> i & 1 == 1 {
+            mask[i] = 0.0;
+        }
+    }
+    (mask, best_loss)
+}
+
+/// Exact optimum for every row of a small layer.
+pub fn optimal_layer_mask(w: &Matrix, g: &Matrix, keep: usize)
+    -> (Matrix, f64) {
+    let mut mask = Matrix::zeros(w.rows, w.cols);
+    let mut total = 0.0;
+    for r in 0..w.rows {
+        let (row, loss) = optimal_row_mask(w.row(r), g, keep);
+        mask.row_mut(r).copy_from_slice(&row);
+        total += loss;
+    }
+    (mask, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::error::row_loss;
+    use crate::pruning::mask::{mask_from_scores, Pattern};
+    use crate::pruning::saliency;
+    use crate::pruning::sparseswaps::{refine_row, SwapConfig};
+    use crate::util::prng::Rng;
+
+    fn instance(seed: u64, d: usize) -> (Vec<f32>, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(32, d, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let w: Vec<f32> = (0..d).map(|_| rng.gaussian_f32()).collect();
+        (w, g)
+    }
+
+    #[test]
+    fn matches_exhaustive_loss_evaluation() {
+        let (w, g) = instance(0, 10);
+        let (mask, loss) = optimal_row_mask(&w, &g, 5);
+        assert!((row_loss(&w, &mask, &g) - loss).abs() < 1e-3);
+        assert_eq!(mask.iter().filter(|&&v| v == 1.0).count(), 5);
+    }
+
+    #[test]
+    fn optimum_beats_or_matches_all_heuristics() {
+        for seed in 0..5 {
+            let (w, g) = instance(seed, 12);
+            let keep = 6;
+            let (_, opt) = optimal_row_mask(&w, &g, keep);
+            let wm = Matrix::from_vec(1, 12, w.clone());
+            for crit in [saliency::Criterion::Magnitude,
+                         saliency::Criterion::Wanda,
+                         saliency::Criterion::Ria] {
+                let scores = saliency::scores(crit, &wm, &g.diag());
+                let mask = mask_from_scores(&scores,
+                                            Pattern::PerRow { keep });
+                let loss = row_loss(&w, mask.row(0), &g);
+                assert!(opt <= loss + 1e-4,
+                        "{:?}: optimum {} > heuristic {}", crit, opt, loss);
+            }
+        }
+    }
+
+    #[test]
+    fn sparseswaps_local_optimum_sandwiched() {
+        // optimum <= SparseSwaps result <= warmstart (per row).
+        for seed in 0..5 {
+            let (w, g) = instance(100 + seed, 14);
+            let keep = 7;
+            let wm = Matrix::from_vec(1, 14, w.clone());
+            let scores = saliency::wanda(&wm, &g.diag());
+            let mask = mask_from_scores(&scores, Pattern::PerRow { keep });
+            let warm = row_loss(&w, mask.row(0), &g);
+            let mut mrow = mask.row(0).to_vec();
+            let out = refine_row(&w, &mut mrow, &g, 0,
+                                 &SwapConfig { t_max: 1000, eps: 0.0 });
+            let (_, opt) = optimal_row_mask(&w, &g, keep);
+            assert!(out.loss_after <= warm + 1e-6);
+            assert!(opt <= out.loss_after + 1e-3,
+                    "optimum {} > sparseswaps {}", opt, out.loss_after);
+        }
+    }
+
+    #[test]
+    fn keep_all_is_zero_loss() {
+        let (w, g) = instance(7, 8);
+        let (mask, loss) = optimal_row_mask(&w, &g, 8);
+        assert_eq!(mask, vec![1.0; 8]);
+        assert_eq!(loss, 0.0);
+    }
+
+    #[test]
+    fn gospers_hack_visits_all_subsets() {
+        // Count 3-subsets of 6 elements: C(6,3) = 20.
+        let mut count = 0;
+        let mut s: u64 = 0b111;
+        while s < 1 << 6 {
+            count += 1;
+            s = next_subset(s);
+        }
+        assert_eq!(count, 20);
+    }
+}

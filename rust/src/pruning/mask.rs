@@ -1,0 +1,235 @@
+//! Pruning masks and sparsity patterns.
+//!
+//! Masks are stored as f32 {0,1} matrices ([`Matrix`]) so they can be fed
+//! to the HLO swap artifacts without conversion; 1 keeps a weight, 0
+//! prunes it.  Patterns follow the paper: per-row (equal sparsity per
+//! row — the row-decoupling assumption of Sec 2.1.1) and semi-structured
+//! N:M (keep N per block of M).
+
+use crate::util::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pattern {
+    /// Keep exactly `keep` weights in every row.
+    PerRow { keep: usize },
+    /// Keep exactly `n` weights in every consecutive block of `m`.
+    Nm { n: usize, m: usize },
+}
+
+impl Pattern {
+    /// Per-row pattern from a target sparsity fraction (pruned share).
+    pub fn per_row_sparsity(d_in: usize, sparsity: f64) -> Pattern {
+        assert!((0.0..1.0).contains(&sparsity));
+        let prune = ((d_in as f64) * sparsity).round() as usize;
+        Pattern::PerRow { keep: d_in - prune.min(d_in) }
+    }
+
+    pub fn sparsity(&self, d_in: usize) -> f64 {
+        match self {
+            Pattern::PerRow { keep } => 1.0 - *keep as f64 / d_in as f64,
+            Pattern::Nm { n, m } => 1.0 - *n as f64 / *m as f64,
+        }
+    }
+
+    /// The block width constraining swaps (0 = whole row).
+    pub fn nm_block(&self) -> usize {
+        match self {
+            Pattern::PerRow { .. } => 0,
+            Pattern::Nm { m, .. } => *m,
+        }
+    }
+
+    pub fn keep_per_row(&self, d_in: usize) -> usize {
+        match self {
+            Pattern::PerRow { keep } => (*keep).min(d_in),
+            Pattern::Nm { n, m } => d_in / m * n,
+        }
+    }
+
+    /// Artifact-name suffix ("row", "nm2_4", "nm4_8").
+    pub fn artifact_tag(&self) -> String {
+        match self {
+            Pattern::PerRow { .. } => "row".to_string(),
+            Pattern::Nm { n, m } => format!("nm{n}_{m}"),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Pattern> {
+        if let Some((n, m)) = s.split_once(':') {
+            let n = n.parse().ok()?;
+            let m = m.parse().ok()?;
+            if n == 0 || m == 0 || n > m {
+                return None;
+            }
+            Some(Pattern::Nm { n, m })
+        } else {
+            None
+        }
+    }
+}
+
+/// Build a mask keeping the highest-score entries under `pattern`.
+/// Deterministic: ties break toward the lower index.
+pub fn mask_from_scores(scores: &Matrix, pattern: Pattern) -> Matrix {
+    let (rows, cols) = (scores.rows, scores.cols);
+    let mut mask = Matrix::zeros(rows, cols);
+    match pattern {
+        Pattern::PerRow { keep } => {
+            let keep = keep.min(cols);
+            let mut idx: Vec<usize> = Vec::with_capacity(cols);
+            for r in 0..rows {
+                idx.clear();
+                idx.extend(0..cols);
+                let srow = scores.row(r);
+                idx.sort_by(|&a, &b| srow[b]
+                    .partial_cmp(&srow[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&b)));
+                let mrow = mask.row_mut(r);
+                for &j in idx.iter().take(keep) {
+                    mrow[j] = 1.0;
+                }
+            }
+        }
+        Pattern::Nm { n, m } => {
+            assert!(cols % m == 0,
+                    "d_in {cols} not divisible by N:M block {m}");
+            for r in 0..rows {
+                let srow = scores.row(r);
+                let mrow = mask.row_mut(r);
+                for b in 0..cols / m {
+                    let lo = b * m;
+                    let mut idx: Vec<usize> = (lo..lo + m).collect();
+                    idx.sort_by(|&a, &c| srow[c]
+                        .partial_cmp(&srow[a])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&c)));
+                    for &j in idx.iter().take(n) {
+                        mrow[j] = 1.0;
+                    }
+                }
+            }
+        }
+    }
+    mask
+}
+
+/// Check that `mask` is binary and satisfies `pattern` exactly.
+pub fn validate(mask: &Matrix, pattern: Pattern) -> Result<(), String> {
+    for (i, &v) in mask.data.iter().enumerate() {
+        if v != 0.0 && v != 1.0 {
+            return Err(format!("mask entry {i} = {v} is not binary"));
+        }
+    }
+    match pattern {
+        Pattern::PerRow { keep } => {
+            let keep = keep.min(mask.cols);
+            for r in 0..mask.rows {
+                let k: f32 = mask.row(r).iter().sum();
+                if k as usize != keep {
+                    return Err(format!(
+                        "row {r} keeps {k} weights, expected {keep}"));
+                }
+            }
+        }
+        Pattern::Nm { n, m } => {
+            if mask.cols % m != 0 {
+                return Err(format!("cols {} not divisible by {m}",
+                                   mask.cols));
+            }
+            for r in 0..mask.rows {
+                let row = mask.row(r);
+                for b in 0..mask.cols / m {
+                    let k: f32 = row[b * m..(b + 1) * m].iter().sum();
+                    if k as usize != n {
+                        return Err(format!(
+                            "row {r} block {b} keeps {k}, expected {n}"));
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Apply a mask in place: W <- M ⊙ W.
+pub fn apply_mask(w: &mut Matrix, mask: &Matrix) {
+    assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+    for (wv, &mv) in w.data.iter_mut().zip(&mask.data) {
+        *wv *= mv;
+    }
+}
+
+/// Achieved overall sparsity of a mask (fraction of zeros).
+pub fn achieved_sparsity(mask: &Matrix) -> f64 {
+    let kept: f64 = mask.data.iter().map(|&v| v as f64).sum();
+    1.0 - kept / mask.data.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scores() -> Matrix {
+        Matrix::from_fn(2, 8, |i, j| ((i * 8 + j) % 5) as f32
+                        + 0.1 * j as f32)
+    }
+
+    #[test]
+    fn per_row_keeps_topk() {
+        let m = mask_from_scores(&scores(), Pattern::PerRow { keep: 3 });
+        validate(&m, Pattern::PerRow { keep: 3 }).unwrap();
+        // Highest-scoring indices in row 0: scores 0.. = [0,1.1,2.2,3.3,
+        // 4.4,0.5,1.6,2.7] -> top3 = {4, 3, 7}
+        assert_eq!(m.row(0), &[0., 0., 0., 1., 1., 0., 0., 1.]);
+    }
+
+    #[test]
+    fn nm_mask_per_block() {
+        let m = mask_from_scores(&scores(), Pattern::Nm { n: 2, m: 4 });
+        validate(&m, Pattern::Nm { n: 2, m: 4 }).unwrap();
+        for r in 0..2 {
+            for b in 0..2 {
+                let k: f32 = m.row(r)[b * 4..(b + 1) * 4].iter().sum();
+                assert_eq!(k, 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let mut m = mask_from_scores(&scores(), Pattern::PerRow { keep: 3 });
+        m.set(0, 0, 1.0); // extra kept weight
+        assert!(validate(&m, Pattern::PerRow { keep: 3 }).is_err());
+        m.set(0, 0, 0.5);
+        assert!(validate(&m, Pattern::PerRow { keep: 3 }).is_err());
+    }
+
+    #[test]
+    fn pattern_helpers() {
+        let p = Pattern::per_row_sparsity(100, 0.6);
+        assert_eq!(p, Pattern::PerRow { keep: 40 });
+        assert!((p.sparsity(100) - 0.6).abs() < 1e-9);
+        assert_eq!(Pattern::parse("2:4"), Some(Pattern::Nm { n: 2, m: 4 }));
+        assert_eq!(Pattern::parse("4:2"), None);
+        assert_eq!(Pattern::Nm { n: 2, m: 4 }.keep_per_row(16), 8);
+        assert_eq!(Pattern::Nm { n: 2, m: 4 }.artifact_tag(), "nm2_4");
+    }
+
+    #[test]
+    fn apply_and_sparsity() {
+        let mut w = Matrix::from_fn(2, 4, |_, _| 1.0);
+        let mask = mask_from_scores(&Matrix::from_fn(2, 4, |_, j| j as f32),
+                                    Pattern::PerRow { keep: 1 });
+        apply_mask(&mut w, &mask);
+        assert_eq!(w.data.iter().sum::<f32>(), 2.0);
+        assert!((achieved_sparsity(&mask) - 0.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tie_break_is_deterministic() {
+        let s = Matrix::zeros(1, 6);
+        let m = mask_from_scores(&s, Pattern::PerRow { keep: 2 });
+        assert_eq!(m.row(0), &[1., 1., 0., 0., 0., 0.]);
+    }
+}

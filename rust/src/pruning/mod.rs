@@ -1,0 +1,16 @@
+//! The pruning algorithm library: masks and patterns, warmstart
+//! saliencies, exact per-row error (Gram form), the native SparseSwaps
+//! engine, the DSnoT baseline, and a brute-force exact solver for tiny
+//! instances.  The HLO *offload* engine lives in `coordinator::swaploop`
+//! and is property-tested against `sparseswaps` here.
+
+pub mod dsnot;
+pub mod error;
+pub mod exact;
+pub mod mask;
+pub mod realloc;
+pub mod saliency;
+pub mod sparseswaps;
+
+pub use mask::Pattern;
+pub use saliency::Criterion;

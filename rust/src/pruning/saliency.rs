@@ -1,0 +1,140 @@
+//! Warmstart saliency criteria: magnitude, Wanda, RIA.
+//!
+//! All three need only the weights and the Gram diagonal (the feature
+//! norms are ||X_j||_2 = sqrt(G_jj) — a consequence of the paper's Gram
+//! formulation, Sec 2.1.2), so warmstarts are computed natively without
+//! touching PJRT.
+
+use crate::util::tensor::Matrix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Criterion {
+    Magnitude,
+    Wanda,
+    /// RIA (Zhang et al., 2024a): relative importance * activation norms.
+    Ria,
+}
+
+impl Criterion {
+    pub fn parse(s: &str) -> Option<Criterion> {
+        match s {
+            "magnitude" => Some(Criterion::Magnitude),
+            "wanda" => Some(Criterion::Wanda),
+            "ria" => Some(Criterion::Ria),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Criterion::Magnitude => "magnitude",
+            Criterion::Wanda => "wanda",
+            Criterion::Ria => "ria",
+        }
+    }
+}
+
+/// |W_ij| — the data-free baseline the paper shows degrades badly on
+/// transformers (Table 2).
+pub fn magnitude(w: &Matrix) -> Matrix {
+    Matrix::from_vec(w.rows, w.cols,
+                     w.data.iter().map(|v| v.abs()).collect())
+}
+
+/// Wanda: |W_ij| * ||X_j||_2 = |W_ij| * sqrt(G_jj)  (Sun et al., 2024).
+pub fn wanda(w: &Matrix, gram_diag: &[f32]) -> Matrix {
+    assert_eq!(w.cols, gram_diag.len());
+    let norms: Vec<f32> =
+        gram_diag.iter().map(|&g| g.max(0.0).sqrt()).collect();
+    Matrix::from_fn(w.rows, w.cols, |i, j| w.at(i, j).abs() * norms[j])
+}
+
+/// RIA with the paper's default a = 0.5:
+///   RIA_ij = (|W_ij| / sum_k |W_ik|  +  |W_ij| / sum_k |W_kj|)
+///            * (||X_j||_2)^a
+pub fn ria(w: &Matrix, gram_diag: &[f32], a: f32) -> Matrix {
+    assert_eq!(w.cols, gram_diag.len());
+    let mut row_sums = vec![0.0f32; w.rows];
+    let mut col_sums = vec![0.0f32; w.cols];
+    for i in 0..w.rows {
+        for j in 0..w.cols {
+            let v = w.at(i, j).abs();
+            row_sums[i] += v;
+            col_sums[j] += v;
+        }
+    }
+    let norms: Vec<f32> = gram_diag
+        .iter()
+        .map(|&g| g.max(0.0).sqrt().powf(a))
+        .collect();
+    Matrix::from_fn(w.rows, w.cols, |i, j| {
+        let v = w.at(i, j).abs();
+        let rel = v / row_sums[i].max(1e-12) + v / col_sums[j].max(1e-12);
+        rel * norms[j]
+    })
+}
+
+/// Dispatch on criterion.
+pub fn scores(criterion: Criterion, w: &Matrix, gram_diag: &[f32])
+    -> Matrix {
+    match criterion {
+        Criterion::Magnitude => magnitude(w),
+        Criterion::Wanda => wanda(w, gram_diag),
+        Criterion::Ria => ria(w, gram_diag, 0.5),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn magnitude_is_abs() {
+        let w = Matrix::from_vec(1, 3, vec![-2.0, 0.5, -0.1]);
+        assert_eq!(magnitude(&w).data, vec![2.0, 0.5, 0.1]);
+    }
+
+    #[test]
+    fn wanda_weights_by_feature_norm() {
+        let w = Matrix::from_vec(1, 2, vec![1.0, 1.0]);
+        // G_00 = 4 (norm 2), G_11 = 9 (norm 3).
+        let s = wanda(&w, &[4.0, 9.0]);
+        assert_eq!(s.data, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn wanda_clamps_negative_diag() {
+        let w = Matrix::from_vec(1, 2, vec![1.0, 1.0]);
+        let s = wanda(&w, &[-1e-6, 1.0]);
+        assert_eq!(s.data[0], 0.0);
+    }
+
+    #[test]
+    fn ria_prefers_relatively_large_entries() {
+        // Row 0 is uniformly large; row 1 has one dominant entry.  RIA's
+        // relative term must boost the dominant entry of row 1 above the
+        // (absolutely larger) entries of row 0's column shares.
+        let w = Matrix::from_vec(2, 2, vec![4.0, 4.0, 0.1, 2.0]);
+        let s = ria(&w, &[1.0, 1.0], 0.5);
+        // Within row 1, entry 1 dominates entry 0 by a large margin.
+        assert!(s.at(1, 1) > 10.0 * s.at(1, 0));
+    }
+
+    #[test]
+    fn criterion_parse() {
+        assert_eq!(Criterion::parse("wanda"), Some(Criterion::Wanda));
+        assert_eq!(Criterion::parse("ria"), Some(Criterion::Ria));
+        assert_eq!(Criterion::parse("x"), None);
+        assert_eq!(Criterion::Magnitude.name(), "magnitude");
+    }
+
+    #[test]
+    fn dispatch_matches_direct() {
+        let w = Matrix::from_fn(3, 4, |i, j| (i as f32 - j as f32) * 0.7);
+        let gd = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(scores(Criterion::Wanda, &w, &gd).data,
+                   wanda(&w, &gd).data);
+        assert_eq!(scores(Criterion::Magnitude, &w, &gd).data,
+                   magnitude(&w).data);
+    }
+}

@@ -1,0 +1,322 @@
+//! Native (pure-Rust) SparseSwaps engine: exact Algorithm 1.
+//!
+//! This is the reference implementation the HLO offload engine is tested
+//! against, and the fallback when artifacts are unavailable.  Per row:
+//!
+//!   1. c = G((1-m) ⊙ w), L = q.c
+//!   2. repeat up to t_max times:
+//!        evaluate dL(u,p) (Eq. 5) over all feasible pairs via O(1)
+//!        lookups into (G, c); take the argmin;
+//!        if dL < -eps: flip the pair, update c (Eq. 6), else stop.
+//!
+//! The pair scan precomputes the separable terms
+//!   a_u = 2 w_u c_u + w_u^2 G_uu   (cost of pruning kept u)
+//!   b_p = -2 w_p c_p + w_p^2 G_pp  (gain of reviving pruned p)
+//! so the inner loop is one multiply-add per pair — the same O(|U||P|)
+//! complexity the paper reports.
+
+use crate::pruning::error::{corr_vector, row_loss_with_corr};
+use crate::pruning::mask::Pattern;
+use crate::util::tensor::Matrix;
+use crate::util::threadpool::parallel_map;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SwapConfig {
+    /// Maximum accepted swaps per row (the paper's T_max).
+    pub t_max: usize,
+    /// Minimum improvement to accept a swap (paper uses 0 = strict).
+    pub eps: f64,
+}
+
+impl Default for SwapConfig {
+    fn default() -> Self {
+        Self { t_max: 100, eps: 0.0 }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RowOutcome {
+    pub loss_before: f64,
+    pub loss_after: f64,
+    pub swaps: usize,
+    /// True if the row reached a 1-swap local optimum before t_max.
+    pub converged: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct LayerOutcome {
+    pub rows: Vec<RowOutcome>,
+}
+
+impl LayerOutcome {
+    pub fn total_before(&self) -> f64 {
+        self.rows.iter().map(|r| r.loss_before).sum()
+    }
+
+    pub fn total_after(&self) -> f64 {
+        self.rows.iter().map(|r| r.loss_after).sum()
+    }
+
+    pub fn total_swaps(&self) -> usize {
+        self.rows.iter().map(|r| r.swaps).sum()
+    }
+
+    pub fn relative_reduction(&self) -> f64 {
+        crate::pruning::error::relative_reduction(self.total_before(),
+                                                  self.total_after())
+    }
+}
+
+/// Best feasible 1-swap for one row given precomputed c.
+/// Returns (dl, u, p) or None when no feasible pair exists.
+pub fn best_swap(w: &[f32], m: &[f32], c: &[f32], g: &Matrix,
+                 nm_block: usize) -> Option<(f64, usize, usize)> {
+    let d = w.len();
+    let diag = |i: usize| g.at(i, i);
+
+    // Separable Eq.-5 terms.
+    let mut kept: Vec<usize> = Vec::new();
+    let mut pruned: Vec<usize> = Vec::new();
+    for i in 0..d {
+        if m[i] > 0.5 {
+            kept.push(i);
+        } else {
+            pruned.push(i);
+        }
+    }
+    if kept.is_empty() || pruned.is_empty() {
+        return None;
+    }
+    let a_u: Vec<f64> = kept.iter()
+        .map(|&u| 2.0 * w[u] as f64 * c[u] as f64
+             + (w[u] as f64).powi(2) * diag(u) as f64)
+        .collect();
+    let b_p: Vec<f64> = pruned.iter()
+        .map(|&p| -2.0 * w[p] as f64 * c[p] as f64
+             + (w[p] as f64).powi(2) * diag(p) as f64)
+        .collect();
+
+    let mut best: Option<(f64, usize, usize)> = None;
+    let mut consider = |dl: f64, u: usize, p: usize| {
+        if best.map_or(true, |(b, _, _)| dl < b) {
+            best = Some((dl, u, p));
+        }
+    };
+
+    if nm_block == 0 {
+        for (ku, &u) in kept.iter().enumerate() {
+            let wu = w[u] as f64;
+            let au = a_u[ku];
+            let grow = g.row(u);
+            for (kp, &p) in pruned.iter().enumerate() {
+                let dl = au + b_p[kp]
+                    - 2.0 * wu * w[p] as f64 * grow[p] as f64;
+                consider(dl, u, p);
+            }
+        }
+    } else {
+        // N:M: only same-block pairs are feasible.
+        for (ku, &u) in kept.iter().enumerate() {
+            let blk = u / nm_block;
+            let wu = w[u] as f64;
+            let au = a_u[ku];
+            let grow = g.row(u);
+            // pruned is sorted ascending; binary search the block range.
+            let lo = pruned.partition_point(|&p| p < blk * nm_block);
+            let hi = pruned.partition_point(|&p| p < (blk + 1) * nm_block);
+            for kp in lo..hi {
+                let p = pruned[kp];
+                let dl = au + b_p[kp]
+                    - 2.0 * wu * w[p] as f64 * grow[p] as f64;
+                consider(dl, u, p);
+            }
+        }
+    }
+    best
+}
+
+/// Run Algorithm 1 on a single row, mutating the mask row in place.
+pub fn refine_row(w: &[f32], m: &mut [f32], g: &Matrix, nm_block: usize,
+                  cfg: &SwapConfig) -> RowOutcome {
+    let mut c = corr_vector(w, m, g);
+    let loss_before = row_loss_with_corr(w, m, &c);
+    let mut swaps = 0;
+    let mut converged = false;
+    for _ in 0..cfg.t_max {
+        match best_swap(w, m, &c, g, nm_block) {
+            Some((dl, u, p)) if dl < -cfg.eps => {
+                m[u] = 0.0;
+                m[p] = 1.0;
+                // Eq. 6: c += w_u G[:,u] - w_p G[:,p]  (G symmetric, so
+                // columns are rows).
+                crate::util::tensor::axpy(w[u], g.row(u), &mut c);
+                crate::util::tensor::axpy(-w[p], g.row(p), &mut c);
+                swaps += 1;
+            }
+            _ => {
+                converged = true;
+                break;
+            }
+        }
+    }
+    // Recompute the final loss from scratch (no accumulated drift).
+    let c_final = corr_vector(w, m, g);
+    let loss_after = row_loss_with_corr(w, m, &c_final);
+    RowOutcome { loss_before, loss_after, swaps, converged }
+}
+
+/// Refine every row of a layer, parallelised across rows (the paper's
+/// "fully parallelizable across rows" claim).
+pub fn refine_layer(w: &Matrix, mask: &mut Matrix, g: &Matrix,
+                    pattern: Pattern, cfg: &SwapConfig, threads: usize)
+    -> LayerOutcome {
+    assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+    assert_eq!(g.rows, w.cols);
+    let nm_block = pattern.nm_block();
+    let rows: Vec<(Vec<f32>, RowOutcome)> =
+        parallel_map(w.rows, threads, |r| {
+            let mut mrow = mask.row(r).to_vec();
+            let outcome = refine_row(w.row(r), &mut mrow, g, nm_block, cfg);
+            (mrow, outcome)
+        });
+    let mut outcome = LayerOutcome::default();
+    for (r, (mrow, row_out)) in rows.into_iter().enumerate() {
+        mask.row_mut(r).copy_from_slice(&mrow);
+        outcome.rows.push(row_out);
+    }
+    outcome
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::error::{layer_loss, row_loss};
+    use crate::pruning::mask::{mask_from_scores, validate};
+    use crate::pruning::saliency;
+    use crate::util::prng::Rng;
+
+    pub(crate) fn instance(seed: u64, t: usize, rows: usize, d: usize)
+        -> (Matrix, Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(t, d, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+        (w, g, x)
+    }
+
+    #[test]
+    fn refinement_reduces_wanda_loss() {
+        let (w, g, _) = instance(0, 64, 8, 32);
+        let pattern = Pattern::PerRow { keep: 13 };
+        let scores = saliency::wanda(&w, &g.diag());
+        let mut mask = mask_from_scores(&scores, pattern);
+        let before = layer_loss(&w, &mask, &g);
+        let out = refine_layer(&w, &mut mask, &g, pattern,
+                               &SwapConfig::default(), 2);
+        let after = layer_loss(&w, &mask, &g);
+        assert!(after < before * 0.95, "{before} -> {after}");
+        assert!((out.total_after() - after).abs() / after.max(1.0) < 1e-3);
+        validate(&mask, pattern).unwrap();
+    }
+
+    #[test]
+    fn nm_pattern_preserved_and_improved() {
+        let (w, g, _) = instance(1, 64, 6, 32);
+        let pattern = Pattern::Nm { n: 2, m: 4 };
+        let scores = saliency::wanda(&w, &g.diag());
+        let mut mask = mask_from_scores(&scores, pattern);
+        let before = layer_loss(&w, &mask, &g);
+        refine_layer(&w, &mut mask, &g, pattern, &SwapConfig::default(), 1);
+        let after = layer_loss(&w, &mask, &g);
+        assert!(after <= before + 1e-9);
+        validate(&mask, pattern).unwrap();
+    }
+
+    #[test]
+    fn terminal_mask_is_local_optimum() {
+        let (w, g, _) = instance(2, 48, 3, 20);
+        let pattern = Pattern::PerRow { keep: 8 };
+        let scores = saliency::magnitude(&w);
+        let mut mask = mask_from_scores(&scores, pattern);
+        let out = refine_layer(&w, &mut mask, &g, pattern,
+                               &SwapConfig { t_max: 1000, eps: 0.0 }, 1);
+        assert!(out.rows.iter().all(|r| r.converged));
+        // Exhaustive: no single swap may improve.
+        for r in 0..w.rows {
+            let base = row_loss(w.row(r), mask.row(r), &g);
+            for u in 0..20 {
+                for p in 0..20 {
+                    if mask.at(r, u) == 1.0 && mask.at(r, p) == 0.0 {
+                        let mut m2: Vec<f32> = mask.row(r).to_vec();
+                        m2[u] = 0.0;
+                        m2[p] = 1.0;
+                        let l2 = row_loss(w.row(r), &m2, &g);
+                        assert!(l2 >= base - 1e-2,
+                                "row {r}: swap ({u},{p}) improves \
+                                 {base} -> {l2}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn swap_count_within_tmax() {
+        let (w, g, _) = instance(3, 32, 4, 24);
+        let pattern = Pattern::PerRow { keep: 10 };
+        let mut mask = mask_from_scores(&saliency::magnitude(&w), pattern);
+        let cfg = SwapConfig { t_max: 3, eps: 0.0 };
+        let out = refine_layer(&w, &mut mask, &g, pattern, &cfg, 1);
+        assert!(out.rows.iter().all(|r| r.swaps <= 3));
+    }
+
+    #[test]
+    fn paper_counterexample() {
+        // Sec 2.1.3 worked example: B=1, d=4, X=1, w=[10,-1,9,-9],
+        // pruned={0,1}: L=81.  The best joint swap reaches L=1.
+        let g = {
+            let x = Matrix::from_vec(1, 4, vec![1.0, 1.0, 1.0, 1.0]);
+            let mut g = Matrix::zeros(4, 4);
+            g.gram_accumulate(&x);
+            g
+        };
+        let w = vec![10.0f32, -1.0, 9.0, -9.0];
+        let mut m = vec![0.0f32, 0.0, 1.0, 1.0];
+        let out = refine_row(&w, &mut m, &g, 0,
+                             &SwapConfig { t_max: 1, eps: 0.0 });
+        assert!((out.loss_before - 81.0).abs() < 1e-3);
+        assert!((out.loss_after - 1.0).abs() < 1e-3, "{}", out.loss_after);
+        assert_eq!(m, vec![0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn deterministic_across_thread_counts() {
+        let (w, g, _) = instance(4, 40, 8, 24);
+        let pattern = Pattern::PerRow { keep: 9 };
+        let scores = saliency::wanda(&w, &g.diag());
+        let mut m1 = mask_from_scores(&scores, pattern);
+        let mut m4 = m1.clone();
+        refine_layer(&w, &mut m1, &g, pattern, &SwapConfig::default(), 1);
+        refine_layer(&w, &mut m4, &g, pattern, &SwapConfig::default(), 4);
+        assert_eq!(m1.data, m4.data);
+    }
+
+    #[test]
+    fn eps_bounds_swap_count() {
+        // Prop A.2: with eps > 0 the algorithm performs at most
+        // ceil(L0 / eps) swaps.
+        let (w, g, _) = instance(5, 32, 4, 24);
+        let pattern = Pattern::PerRow { keep: 8 };
+        let mut mask = mask_from_scores(&saliency::magnitude(&w), pattern);
+        for r in 0..w.rows {
+            let l0 = row_loss(w.row(r), mask.row(r), &g);
+            let eps = (l0 / 10.0).max(1e-6);
+            let mut mrow = mask.row_mut(r).to_vec();
+            let out = refine_row(w.row(r), &mut mrow, &g, 0,
+                                 &SwapConfig { t_max: 10_000, eps });
+            let bound = (l0 / eps).ceil() as usize;
+            assert!(out.swaps <= bound, "{} > {}", out.swaps, bound);
+        }
+    }
+}

@@ -1,0 +1,500 @@
+//! Experiment grids regenerating every table and figure of the paper's
+//! evaluation section (see DESIGN.md section 4 for the index).
+//!
+//! Absolute numbers differ from the paper (tiny models, synthetic data,
+//! CPU PJRT — DESIGN.md section 2); the *shapes* are what each function
+//! asserts and reports: who wins, in which regime, and by roughly what
+//! factor.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use crate::coordinator::{
+    prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
+};
+use crate::data::{Dataset, Split};
+use crate::eval::{perplexity, zeroshot};
+use crate::model::checkpoint;
+use crate::model::store::{MaskSet, ParamStore};
+use crate::runtime::service::{Runtime, RuntimeError};
+use crate::util::benchlib::{ascii_plot, Table};
+
+/// Shared context: runtime + trained-model cache.
+pub struct Ctx {
+    pub rt: Runtime,
+    pub runs_dir: PathBuf,
+    /// Quick mode: tiny model, smaller budgets (CI-friendly).
+    pub quick: bool,
+    cache: std::sync::Mutex<BTreeMap<String, (ParamStore, u64)>>,
+}
+
+impl Ctx {
+    pub fn new(rt: Runtime, runs_dir: impl Into<PathBuf>, quick: bool)
+        -> Ctx {
+        Ctx { rt, runs_dir: runs_dir.into(), quick,
+              cache: std::sync::Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn from_env() -> Result<Ctx, RuntimeError> {
+        let dir = std::env::var("SPARSESWAPS_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".into());
+        let rt = Runtime::start(&dir)?;
+        let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+        Ok(Ctx::new(rt, "runs", quick))
+    }
+
+    /// The model zoo standing in for the paper's five LLM families.
+    pub fn zoo(&self) -> Vec<String> {
+        if self.quick {
+            vec!["tiny".into()]
+        } else {
+            ["gpt-a", "gpt-b", "gpt-c"]
+                .iter()
+                .filter(|n| self.rt.manifest().configs.contains_key(**n))
+                .map(|s| s.to_string())
+                .collect()
+        }
+    }
+
+    pub fn train_steps(&self) -> usize {
+        if self.quick { 60 } else { 150 }
+    }
+
+    pub fn calib_batches(&self) -> usize {
+        if self.quick { 3 } else { 4 }
+    }
+
+    pub fn t_max(&self) -> usize {
+        if self.quick { 10 } else { 25 }
+    }
+
+    pub fn val_batches(&self) -> usize {
+        if self.quick { 3 } else { 6 }
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<Dataset, RuntimeError> {
+        let meta = self.rt.manifest().config(name)?.clone();
+        Ok(Dataset::build(&meta, 42 ^ meta.init_seed))
+    }
+
+    /// Train (or load a cached checkpoint of) a zoo model.
+    pub fn model(&self, name: &str)
+        -> Result<(ParamStore, Dataset), RuntimeError> {
+        let meta = self.rt.manifest().config(name)?.clone();
+        let ds = self.dataset(name)?;
+        if let Some((store, _)) = self.cache.lock().unwrap().get(name) {
+            return Ok((store.clone(), ds));
+        }
+        let steps = self.train_steps();
+        let path = self.runs_dir.join(format!("{name}-s{steps}.ssck"));
+        let store = match checkpoint::load(&path, &meta) {
+            Ok((store, _)) => {
+                crate::log_info!("loaded cached checkpoint {}",
+                                 path.display());
+                store
+            }
+            Err(_) => {
+                crate::log_info!("training {name} for {steps} steps");
+                let mut store = ParamStore::init(&meta, meta.init_seed);
+                let cfg = TrainConfig { steps, lr: 2e-3, n_batches: 24,
+                                        log_every: 50 };
+                train(&self.rt, &mut store, &ds, &cfg)?;
+                checkpoint::save(&path, &store, None)
+                    .map_err(|e| RuntimeError::Msg(e.to_string()))?;
+                store
+            }
+        };
+        self.cache.lock().unwrap()
+            .insert(name.to_string(), (store.clone(), 0));
+        Ok((store, ds))
+    }
+
+    fn base_prune(&self) -> PruneConfig {
+        PruneConfig {
+            t_max: self.t_max(),
+            calib_batches: self.calib_batches(),
+            sequential: false, // shared grams across method comparisons
+            ..Default::default()
+        }
+    }
+
+    fn eval_model(&self, store: &ParamStore, ds: &Dataset,
+                  masks: Option<&MaskSet>)
+        -> Result<(f64, f64), RuntimeError> {
+        let masked;
+        let target = match masks {
+            Some(m) => {
+                masked = store.masked(m);
+                &masked
+            }
+            None => store,
+        };
+        let val = ds.batches(&store.meta, Split::Validation,
+                             self.val_batches());
+        let ppl = perplexity(&self.rt, target, &val)?;
+        let n_tasks = if self.quick { 24 } else { 64 };
+        let tasks = zeroshot::build_tasks(ds, store.meta.vocab, n_tasks,
+                                          911);
+        let acc = zeroshot::accuracy(&self.rt, target, &tasks)?;
+        Ok((ppl, acc))
+    }
+}
+
+fn pct(x: f64) -> String {
+    format!("{:.2}%", 100.0 * x)
+}
+
+// --- Table 1 ----------------------------------------------------------------
+
+/// Table 1: ppl + zero-shot for {Wanda, RIA} x {none, DSnoT, SparseSwaps}
+/// at 60% row-wise and 2:4 sparsity, across the zoo.
+pub fn table1(ctx: &Ctx) -> Result<(Table, Table), RuntimeError> {
+    use crate::pruning::Criterion;
+    let zoo = ctx.zoo();
+    let mut headers: Vec<String> = vec!["Method".into(),
+                                        "Sparsity".into()];
+    headers.extend(zoo.iter().cloned());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t_ppl = Table::new(
+        "Table 1a — Perplexity (lower is better)", &hdr);
+    let mut t_acc = Table::new(
+        "Table 1b — Zero-shot accuracy (higher is better)", &hdr);
+
+    let patterns = [PatternKind::Unstructured { sparsity: 0.6 },
+                    PatternKind::Nm { n: 2, m: 4 }];
+    let methods: Vec<(&str, Criterion, Refiner)> = vec![
+        ("Wanda", Criterion::Wanda, Refiner::None),
+        ("+ DSnoT", Criterion::Wanda, Refiner::Dsnot),
+        ("+ SparseSwaps", Criterion::Wanda, Refiner::SparseSwapsNative),
+        ("RIA", Criterion::Ria, Refiner::None),
+        ("+ DSnoT", Criterion::Ria, Refiner::Dsnot),
+        ("+ SparseSwaps", Criterion::Ria, Refiner::SparseSwapsNative),
+    ];
+
+    for pattern in patterns {
+        for (label, crit, refiner) in &methods {
+            let mut ppl_row = vec![label.to_string(), pattern.label()];
+            let mut acc_row = vec![label.to_string(), pattern.label()];
+            for name in &zoo {
+                let (store, ds) = ctx.model(name)?;
+                let cfg = PruneConfig {
+                    criterion: *crit,
+                    pattern_kind: pattern,
+                    refiner: refiner.clone(),
+                    ..ctx.base_prune()
+                };
+                let (masks, _) = prune(&ctx.rt, &store, &ds, &cfg)?;
+                let (ppl, acc) = ctx.eval_model(&store, &ds,
+                                                Some(&masks))?;
+                ppl_row.push(format!("{ppl:.2}"));
+                acc_row.push(pct(acc));
+            }
+            t_ppl.row(ppl_row);
+            t_acc.row(acc_row);
+        }
+    }
+    Ok((t_ppl, t_acc))
+}
+
+// --- Table 2 ----------------------------------------------------------------
+
+/// Table 2: magnitude warmstart at 50% / 60%, with and without
+/// SparseSwaps — the high-degradation regime where refinement helps most.
+pub fn table2(ctx: &Ctx) -> Result<Table, RuntimeError> {
+    use crate::pruning::Criterion;
+    let zoo = ctx.zoo();
+    let mut headers: Vec<String> = vec!["Method".into(),
+                                        "Sparsity".into()];
+    headers.extend(zoo.iter().cloned());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table 2 — Perplexity, magnitude warmstart", &hdr);
+    for sparsity in [0.5, 0.6] {
+        for (label, refiner) in [
+            ("Magnitude", Refiner::None),
+            ("+ SparseSwaps",
+             Refiner::SparseSwapsNative),
+        ] {
+            let mut row = vec![label.to_string(),
+                               format!("{:.0}%", sparsity * 100.0)];
+            for name in &zoo {
+                let (store, ds) = ctx.model(name)?;
+                let cfg = PruneConfig {
+                    criterion: Criterion::Magnitude,
+                    pattern_kind:
+                        PatternKind::Unstructured { sparsity },
+                    refiner: refiner.clone(),
+                    ..ctx.base_prune()
+                };
+                let (masks, _) = prune(&ctx.rt, &store, &ds, &cfg)?;
+                let (ppl, _) = ctx.eval_model(&store, &ds, Some(&masks))?;
+                row.push(format!("{ppl:.2}"));
+            }
+            t.row(row);
+        }
+    }
+    Ok(t)
+}
+
+// --- Table 3 ----------------------------------------------------------------
+
+/// Table 3: mean relative error reduction and perplexity vs the number
+/// of 1-swap iterations (Wanda warmstart; 50% and 60% sparsity).
+pub fn table3(ctx: &Ctx, model: &str)
+    -> Result<Table, RuntimeError> {
+    let iters: Vec<usize> = if ctx.quick {
+        vec![1, 2, 5, 10]
+    } else {
+        vec![1, 2, 5, 10, 25, 50]
+    };
+    let mut headers: Vec<String> = vec!["Sparsity".into(),
+                                        "Metric".into(), "0".into()];
+    headers.extend(iters.iter().map(|i| i.to_string()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        format!("Table 3 — error reduction & ppl vs iterations ({model})"),
+        &hdr);
+
+    let (store, ds) = ctx.model(model)?;
+    for sparsity in [0.5, 0.6] {
+        let cfg = PruneConfig {
+            pattern_kind: PatternKind::Unstructured { sparsity },
+            refiner: Refiner::SparseSwapsOffload {
+                impl_name: "xla".into(),
+            },
+            t_max: *iters.last().unwrap(),
+            checkpoints: iters.clone(),
+            ..ctx.base_prune()
+        };
+        // Warmstart-only run for the 0-iteration column.
+        let cfg0 = PruneConfig { refiner: Refiner::None,
+                                 checkpoints: vec![], ..cfg.clone() };
+        let (masks0, rep0) = prune(&ctx.rt, &store, &ds, &cfg0)?;
+        let (ppl0, _) = ctx.eval_model(&store, &ds, Some(&masks0))?;
+        let base_losses: Vec<f64> = rep0.layers.iter()
+            .map(|l| l.loss_warmstart).collect();
+
+        let (_, rep) = prune(&ctx.rt, &store, &ds, &cfg)?;
+        let mut err_row = vec![format!("{:.0}%", sparsity * 100.0),
+                               "Error reduction (%)".to_string(),
+                               "0.00".to_string()];
+        let mut ppl_row = vec![format!("{:.0}%", sparsity * 100.0),
+                               "Perplexity".to_string(),
+                               format!("{ppl0:.2}")];
+        for &it in &iters {
+            let snap = &rep.snapshots[&it];
+            // Mean per-layer relative reduction vs warmstart, recomputed
+            // exactly (native Gram-form loss) under the snapshot mask.
+            let red = checkpoint_reductions(ctx, &store, &ds, &cfg,
+                                            snap, &base_losses)?;
+            err_row.push(format!("{:.2}", 100.0 * red));
+            let (ppl, _) = ctx.eval_model(&store, &ds, Some(snap))?;
+            ppl_row.push(format!("{ppl:.2}"));
+        }
+        t.row(err_row);
+        t.row(ppl_row);
+    }
+    Ok(t)
+}
+
+/// Mean per-layer relative error reduction of `snap` vs warmstart
+/// losses, recomputed exactly from fresh gram statistics.
+fn checkpoint_reductions(ctx: &Ctx, store: &ParamStore, ds: &Dataset,
+                         cfg: &PruneConfig, snap: &MaskSet,
+                         base_losses: &[f64])
+    -> Result<f64, RuntimeError> {
+    let calib = ds.batches(&store.meta, Split::Calibration,
+                           cfg.calib_batches);
+    let stats = crate::gram::accumulate(&ctx.rt, store, &calib)?;
+    let mut total = 0.0;
+    let n = store.meta.prunable.len();
+    for (li, layer) in store.meta.prunable.iter().enumerate() {
+        let w = store.weight(layer);
+        let g = stats.gram_for(layer);
+        let after = crate::pruning::error::layer_loss(
+            &w, &snap.masks[li], &g);
+        total += crate::pruning::error::relative_reduction(
+            base_losses[li], after);
+    }
+    Ok(total / n as f64)
+}
+
+// --- Table 4 ----------------------------------------------------------------
+
+/// Table 4: average relative error reduction per warmstart criterion —
+/// weaker warmstarts leave more room (magnitude > wanda).
+pub fn table4(ctx: &Ctx) -> Result<Table, RuntimeError> {
+    use crate::pruning::Criterion;
+    let zoo = ctx.zoo();
+    let mut headers: Vec<String> = vec!["Warmstart".into()];
+    headers.extend(zoo.iter().cloned());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "Table 4 — mean relative error reduction at 60% sparsity", &hdr);
+    for (label, crit) in [("Magnitude", Criterion::Magnitude),
+                          ("Wanda", Criterion::Wanda)] {
+        let mut row = vec![label.to_string()];
+        for name in &zoo {
+            let (store, ds) = ctx.model(name)?;
+            let cfg = PruneConfig {
+                criterion: crit,
+                pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
+                refiner: Refiner::SparseSwapsOffload {
+                    impl_name: "xla".into(),
+                },
+                ..ctx.base_prune()
+            };
+            let (_, rep) = prune(&ctx.rt, &store, &ds, &cfg)?;
+            row.push(pct(rep.mean_relative_reduction()));
+        }
+        t.row(row);
+    }
+    Ok(t)
+}
+
+// --- Table 5 ----------------------------------------------------------------
+
+/// Table 5: wall-clock of the pipeline vs T_max (the linear-overhead
+/// claim).  T_max = 0 is the baseline: calibration + Wanda + evaluation.
+pub fn table5(ctx: &Ctx, model: &str) -> Result<Table, RuntimeError> {
+    let tmaxes: Vec<usize> = if ctx.quick {
+        vec![0, 1, 2, 5]
+    } else {
+        vec![0, 1, 2, 5, 10, 25]
+    };
+    let mut headers: Vec<String> = vec!["T_max".into()];
+    headers.extend(tmaxes.iter().map(|t| t.to_string()));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        format!("Table 5 — wall-clock seconds vs T_max ({model})"), &hdr);
+    let (store, ds) = ctx.model(model)?;
+    let mut row = vec!["seconds".to_string()];
+    for &tm in &tmaxes {
+        let cfg = PruneConfig {
+            pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
+            refiner: if tm == 0 { Refiner::None } else {
+                Refiner::SparseSwapsNative
+            },
+            t_max: tm.max(1),
+            ..ctx.base_prune()
+        };
+        let t0 = Instant::now();
+        let (masks, _) = prune(&ctx.rt, &store, &ds, &cfg)?;
+        let _ = ctx.eval_model(&store, &ds, Some(&masks))?;
+        row.push(format!("{:.1}", t0.elapsed().as_secs_f64()));
+    }
+    t.row(row);
+    Ok(t)
+}
+
+// --- Figure 1 ----------------------------------------------------------------
+
+/// Figure 1: per-layer relative error reduction vs Wanda, grouped by
+/// transformer block and layer type.
+pub fn fig1(ctx: &Ctx, model: &str)
+    -> Result<(Table, String), RuntimeError> {
+    let (store, ds) = ctx.model(model)?;
+    let cfg = PruneConfig {
+        pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
+        refiner: Refiner::SparseSwapsNative,
+        ..ctx.base_prune()
+    };
+    let (_, rep) = prune(&ctx.rt, &store, &ds, &cfg)?;
+
+    let layer_types = ["attn.q_proj", "attn.k_proj", "attn.v_proj",
+                       "attn.o_proj", "mlp.gate_proj", "mlp.up_proj",
+                       "mlp.down_proj"];
+    let n_blocks = store.meta.n_blocks;
+    let mut headers = vec!["Layer type".to_string()];
+    headers.extend((0..n_blocks).map(|b| format!("block {b}")));
+    headers.push("mean".into());
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        format!("Figure 1 — per-layer error reduction vs Wanda ({model}, \
+                 60%)"), &hdr);
+    let mut series = Vec::new();
+    for lt in layer_types {
+        let mut row = vec![lt.to_string()];
+        let mut vals = Vec::new();
+        for b in 0..n_blocks {
+            let l = rep.layers.iter()
+                .find(|l| l.layer_type == lt && l.block == b)
+                .expect("layer present");
+            let red = l.relative_reduction();
+            row.push(pct(red));
+            vals.push(100.0 * red);
+        }
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        row.push(format!("{mean:.2}%"));
+        t.row(row);
+        series.push((lt, vals));
+    }
+    let xs: Vec<f64> = (0..n_blocks).map(|b| b as f64).collect();
+    let series_ref: Vec<(&str, Vec<f64>)> = series.iter()
+        .map(|(n, v)| (*n, v.clone())).collect();
+    let plot = ascii_plot(
+        "Figure 1 — relative error reduction (%) by block", &xs,
+        &series_ref, 60, 12);
+    Ok((t, plot))
+}
+
+// --- Figure 2 ----------------------------------------------------------------
+
+/// Figure 2: perplexity vs the number of calibration batches, Wanda vs
+/// Wanda + SparseSwaps, at 50% and 60% sparsity.
+pub fn fig2(ctx: &Ctx, model: &str)
+    -> Result<(Table, String), RuntimeError> {
+    let sample_counts: Vec<usize> = if ctx.quick {
+        vec![1, 2, 4]
+    } else {
+        vec![1, 2, 4, 8, 16]
+    };
+    let (store, ds) = ctx.model(model)?;
+    let mut headers = vec!["Method".to_string(), "Sparsity".into()];
+    headers.extend(sample_counts.iter().map(|c| format!("{c} batches")));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        format!("Figure 2 — ppl vs calibration batches ({model})"), &hdr);
+    let mut series: Vec<(String, Vec<f64>)> = Vec::new();
+    for sparsity in [0.5, 0.6] {
+        for (label, refiner) in [
+            ("Wanda", Refiner::None),
+            ("Wanda+SS", Refiner::SparseSwapsNative),
+        ] {
+            let mut row = vec![label.to_string(),
+                               format!("{:.0}%", sparsity * 100.0)];
+            let mut vals = Vec::new();
+            for &n in &sample_counts {
+                let cfg = PruneConfig {
+                    pattern_kind:
+                        PatternKind::Unstructured { sparsity },
+                    refiner: refiner.clone(),
+                    calib_batches: n,
+                    ..ctx.base_prune()
+                };
+                let (masks, _) = prune(&ctx.rt, &store, &ds, &cfg)?;
+                let (ppl, _) = ctx.eval_model(&store, &ds, Some(&masks))?;
+                row.push(format!("{ppl:.2}"));
+                vals.push(ppl);
+            }
+            t.row(row);
+            series.push((format!("{label}@{:.0}%", sparsity * 100.0),
+                         vals));
+        }
+    }
+    let xs: Vec<f64> = sample_counts.iter().map(|&c| c as f64).collect();
+    let series_ref: Vec<(&str, Vec<f64>)> = series.iter()
+        .map(|(n, v)| (n.as_str(), v.clone())).collect();
+    let plot = ascii_plot("Figure 2 — perplexity vs calibration batches",
+                          &xs, &series_ref, 60, 12);
+    Ok((t, plot))
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pct_formatting() {
+        assert_eq!(super::pct(0.4321), "43.21%");
+    }
+}

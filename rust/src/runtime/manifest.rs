@@ -1,0 +1,345 @@
+//! `artifacts/manifest.json` — the contract between the python AOT
+//! compiler and this runtime.  Rust derives *no* shapes on its own: the
+//! manifest carries every artifact's input/output signature and the full
+//! model-config metadata (flat parameter order, prunable layers, Gram
+//! stream mapping, swap chunk sizes).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::jsonlite::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType, String> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => Err(format!("unsupported dtype {other:?}")),
+        }
+    }
+
+    pub fn byte_size(&self) -> usize {
+        4
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub dims: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSig {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<TensorSig, String> {
+        let dims = v.get("dims").and_then(Json::as_arr)
+            .ok_or("missing dims")?
+            .iter()
+            .map(|d| d.as_usize().ok_or("bad dim"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let dtype = DType::parse(
+            v.get("dtype").and_then(Json::as_str).ok_or("missing dtype")?)?;
+        Ok(TensorSig { dims, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    pub kind: String,
+    /// swap_step / layer_loss metadata (0 when absent).
+    pub width: usize,
+    pub chunk_rows: usize,
+    pub nm_block: usize,
+    pub k_iters: usize,
+    pub impl_name: String,
+    pub pattern: String,
+    pub config: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct PrunableLayer {
+    pub param_index: usize,
+    pub name: String,
+    pub layer_type: String,
+    pub block: usize,
+    pub d_out: usize,
+    pub d_in: usize,
+    pub stream: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_blocks: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub init_seed: u64,
+    /// Flat parameter list: (name, dims) in artifact argument order.
+    pub params: Vec<(String, Vec<usize>)>,
+    pub prunable: Vec<PrunableLayer>,
+}
+
+impl ModelMeta {
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq_len
+    }
+
+    /// Total number of weights in prunable layers.
+    pub fn prunable_weight_count(&self) -> usize {
+        self.prunable.iter().map(|p| p.d_out * p.d_in).sum()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub configs: BTreeMap<String, ModelMeta>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get(key).and_then(Json::as_usize)
+        .ok_or_else(|| format!("missing/invalid {key}"))
+}
+
+fn get_str(v: &Json, key: &str) -> Option<String> {
+    v.get(key).and_then(Json::as_str).map(str::to_string)
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest, String> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        let root = Json::parse(&text).map_err(|e| e.to_string())?;
+        Self::from_json(&root, dir)
+    }
+
+    pub fn from_json(root: &Json, dir: PathBuf) -> Result<Manifest, String> {
+        let mut configs = BTreeMap::new();
+        for (name, cv) in root.get("configs").and_then(Json::as_obj)
+            .ok_or("missing configs")? {
+            let params = cv.get("params").and_then(Json::as_arr)
+                .ok_or("missing params")?
+                .iter()
+                .map(|p| -> Result<_, String> {
+                    let n = get_str(p, "name").ok_or("param name")?;
+                    let dims = p.get("dims").and_then(Json::as_arr)
+                        .ok_or("param dims")?
+                        .iter()
+                        .map(|d| d.as_usize().ok_or("bad dim".to_string()))
+                        .collect::<Result<Vec<_>, _>>()?;
+                    Ok((n, dims))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            let prunable = cv.get("prunable").and_then(Json::as_arr)
+                .ok_or("missing prunable")?
+                .iter()
+                .map(|p| -> Result<_, String> {
+                    Ok(PrunableLayer {
+                        param_index: get_usize(p, "param_index")?,
+                        name: get_str(p, "name").ok_or("name")?,
+                        layer_type: get_str(p, "layer_type")
+                            .ok_or("layer_type")?,
+                        block: get_usize(p, "block")?,
+                        d_out: get_usize(p, "d_out")?,
+                        d_in: get_usize(p, "d_in")?,
+                        stream: get_str(p, "stream").ok_or("stream")?,
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            configs.insert(name.clone(), ModelMeta {
+                name: name.clone(),
+                vocab: get_usize(cv, "vocab")?,
+                d_model: get_usize(cv, "d_model")?,
+                n_heads: get_usize(cv, "n_heads")?,
+                d_ff: get_usize(cv, "d_ff")?,
+                n_blocks: get_usize(cv, "n_blocks")?,
+                seq_len: get_usize(cv, "seq_len")?,
+                batch: get_usize(cv, "batch")?,
+                init_seed: get_usize(cv, "init_seed")? as u64,
+                params,
+                prunable,
+            });
+        }
+
+        let mut artifacts = BTreeMap::new();
+        for (name, av) in root.get("artifacts").and_then(Json::as_obj)
+            .ok_or("missing artifacts")? {
+            let sigs = |key: &str| -> Result<Vec<TensorSig>, String> {
+                av.get(key).and_then(Json::as_arr)
+                    .ok_or_else(|| format!("missing {key}"))?
+                    .iter()
+                    .map(TensorSig::from_json)
+                    .collect()
+            };
+            artifacts.insert(name.clone(), ArtifactEntry {
+                name: name.clone(),
+                file: dir.join(get_str(av, "file").ok_or("file")?),
+                inputs: sigs("inputs")?,
+                outputs: sigs("outputs")?,
+                kind: get_str(av, "kind").unwrap_or_default(),
+                width: get_usize(av, "width").unwrap_or(0),
+                chunk_rows: get_usize(av, "chunk_rows").unwrap_or(0),
+                nm_block: get_usize(av, "nm_block").unwrap_or(0),
+                k_iters: get_usize(av, "k_iters").unwrap_or(0),
+                impl_name: get_str(av, "impl").unwrap_or_default(),
+                pattern: get_str(av, "pattern").unwrap_or_default(),
+                config: get_str(av, "config").unwrap_or_default(),
+            });
+        }
+        Ok(Manifest { dir, configs, artifacts })
+    }
+
+    pub fn config(&self, name: &str) -> Result<&ModelMeta, String> {
+        self.configs.get(name)
+            .ok_or_else(|| format!("unknown model config {name:?} \
+                                    (have: {:?})",
+                                   self.configs.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry, String> {
+        self.artifacts.get(name)
+            .ok_or_else(|| format!("unknown artifact {name:?}; run \
+                                    `make artifacts`"))
+    }
+
+    /// Swap-step artifact name for (width, pattern tag, impl, k).
+    pub fn swap_artifact_name(width: usize, pattern_tag: &str,
+                              impl_name: &str, k: usize) -> String {
+        format!("swap_step_d{width}_{pattern_tag}_{impl_name}_k{k}")
+    }
+
+    /// Pick the best available swap artifact: prefers the requested k,
+    /// falls back to k=1.
+    pub fn find_swap_artifact(&self, width: usize, pattern_tag: &str,
+                              impl_name: &str, k: usize)
+        -> Result<&ArtifactEntry, String> {
+        let name = Self::swap_artifact_name(width, pattern_tag, impl_name,
+                                            k);
+        if let Some(a) = self.artifacts.get(&name) {
+            return Ok(a);
+        }
+        self.artifact(&Self::swap_artifact_name(width, pattern_tag,
+                                                impl_name, 1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_json() -> Json {
+        Json::parse(r#"{
+          "configs": {
+            "tiny": {
+              "vocab": 256, "d_model": 64, "n_heads": 2, "d_ff": 128,
+              "n_blocks": 1, "seq_len": 32, "batch": 4, "rope_theta": 1e4,
+              "init_seed": 7,
+              "params": [
+                {"name": "tok_emb", "dims": [256, 64]},
+                {"name": "blocks.0.attn.q_proj", "dims": [64, 64]}
+              ],
+              "prunable": [
+                {"param_index": 1, "name": "blocks.0.attn.q_proj",
+                 "layer_type": "attn.q_proj", "block": 0,
+                 "d_out": 64, "d_in": 64, "stream": "qkv"}
+              ]
+            }
+          },
+          "artifacts": {
+            "swap_step_d64_row_xla_k1": {
+              "file": "swap_step_d64_row_xla_k1.hlo.txt",
+              "kind": "swap_step", "width": 64, "chunk_rows": 128,
+              "pattern": "row", "nm_block": 0, "impl": "xla", "k_iters": 1,
+              "inputs": [
+                {"dims": [128, 64], "dtype": "float32"},
+                {"dims": [128, 64], "dtype": "float32"},
+                {"dims": [64, 64], "dtype": "float32"}
+              ],
+              "outputs": [
+                {"dims": [128, 64], "dtype": "float32"},
+                {"dims": [128], "dtype": "float32"},
+                {"dims": [128], "dtype": "float32"},
+                {"dims": [128], "dtype": "float32"}
+              ]
+            }
+          }
+        }"#).unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::from_json(&sample_json(), PathBuf::from("/x"))
+            .unwrap();
+        let cfg = m.config("tiny").unwrap();
+        assert_eq!(cfg.d_model, 64);
+        assert_eq!(cfg.params.len(), 2);
+        assert_eq!(cfg.prunable[0].stream, "qkv");
+        let a = m.artifact("swap_step_d64_row_xla_k1").unwrap();
+        assert_eq!(a.chunk_rows, 128);
+        assert_eq!(a.inputs[2].dims, vec![64, 64]);
+        assert_eq!(a.outputs.len(), 4);
+        assert_eq!(a.inputs[0].dtype, DType::F32);
+    }
+
+    #[test]
+    fn unknown_lookups_fail() {
+        let m = Manifest::from_json(&sample_json(), PathBuf::from("/x"))
+            .unwrap();
+        assert!(m.config("nope").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn swap_fallback_to_k1() {
+        let m = Manifest::from_json(&sample_json(), PathBuf::from("/x"))
+            .unwrap();
+        let a = m.find_swap_artifact(64, "row", "xla", 8).unwrap();
+        assert_eq!(a.k_iters, 1);
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        // Integration-ish: if `make artifacts` has run, the real manifest
+        // must parse and agree with its own swap naming scheme.
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(!m.configs.is_empty());
+        for (name, a) in &m.artifacts {
+            if a.kind == "swap_step" {
+                assert_eq!(name,
+                           &Manifest::swap_artifact_name(
+                               a.width, &a.pattern, &a.impl_name,
+                               a.k_iters));
+                assert_eq!(a.inputs.len(), 3);
+                assert_eq!(a.outputs.len(), 4);
+            }
+        }
+    }
+}

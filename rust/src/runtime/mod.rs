@@ -1,0 +1,10 @@
+//! PJRT runtime: manifest-driven loading and execution of the AOT HLO
+//! artifacts produced by `python/compile/aot.py`.
+
+pub mod manifest;
+pub mod service;
+pub mod tensor_data;
+
+pub use manifest::{ArtifactEntry, Manifest, ModelMeta, PrunableLayer};
+pub use service::{Runtime, RuntimeError, ServiceStats};
+pub use tensor_data::TensorData;

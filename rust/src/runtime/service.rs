@@ -1,0 +1,313 @@
+//! PJRT runtime service: a dedicated thread owning the (non-`Send`)
+//! client and compiled executables, serving execute requests over
+//! channels.
+//!
+//! Artifact flow (see /opt/xla-example/load_hlo for the pattern):
+//!   HLO text --HloModuleProto::from_text_file--> proto
+//!            --XlaComputation::from_proto--> computation
+//!            --client.compile--> PjRtLoadedExecutable (cached)
+//! Executions pack [`TensorData`] into `xla::Literal`s, run, then
+//! decompose the single tuple output back into `TensorData`s (the PJRT
+//! wrapper returns tupled results; see DESIGN.md runtime notes).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::runtime::manifest::{DType, Manifest};
+use crate::runtime::tensor_data::TensorData;
+
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("runtime: {0}")]
+    Msg(String),
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<String> for RuntimeError {
+    fn from(s: String) -> Self {
+        RuntimeError::Msg(s)
+    }
+}
+
+type ExecResult = Result<Vec<TensorData>, RuntimeError>;
+
+enum Request {
+    Exec {
+        artifact: String,
+        inputs: Vec<TensorData>,
+        reply: mpsc::Sender<ExecResult>,
+    },
+    /// Compile without executing (warm the cache).
+    Preload {
+        artifact: String,
+        reply: mpsc::Sender<Result<(), RuntimeError>>,
+    },
+    Stats {
+        reply: mpsc::Sender<ServiceStats>,
+    },
+    Shutdown,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub exec_nanos: u64,
+    pub pack_nanos: u64,
+    pub unpack_nanos: u64,
+    pub compile_nanos: u64,
+}
+
+impl ServiceStats {
+    pub fn exec_seconds(&self) -> f64 {
+        self.exec_nanos as f64 / 1e9
+    }
+}
+
+/// Handle to the runtime service; cheap to clone and `Send`.
+#[derive(Clone)]
+pub struct Runtime {
+    tx: mpsc::Sender<Request>,
+    manifest: Arc<Manifest>,
+    _join: Arc<JoinGuard>,
+}
+
+struct JoinGuard {
+    tx: mpsc::Sender<Request>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Drop for JoinGuard {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Runtime {
+    /// Start the service: load the manifest and spawn the PJRT thread.
+    pub fn start(artifact_dir: impl AsRef<std::path::Path>)
+        -> Result<Runtime, RuntimeError> {
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread_manifest = Arc::clone(&manifest);
+        let handle = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || service_main(rx, thread_manifest))
+            .map_err(|e| RuntimeError::Msg(e.to_string()))?;
+        Ok(Runtime {
+            tx: tx.clone(),
+            manifest,
+            _join: Arc::new(JoinGuard { tx, handle: Some(handle) }),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact by name; validates signatures against the
+    /// manifest on both sides.
+    pub fn execute(&self, artifact: &str, inputs: Vec<TensorData>)
+        -> ExecResult {
+        let entry = self.manifest.artifact(artifact)?;
+        if inputs.len() != entry.inputs.len() {
+            return Err(RuntimeError::Msg(format!(
+                "{artifact}: expected {} inputs, got {}",
+                entry.inputs.len(), inputs.len())));
+        }
+        for (i, (t, sig)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            t.check_sig(sig, &format!("{artifact} input {i}"))?;
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Request::Exec {
+            artifact: artifact.to_string(),
+            inputs,
+            reply: reply_tx,
+        }).map_err(|_| RuntimeError::Msg("service stopped".into()))?;
+        reply_rx.recv()
+            .map_err(|_| RuntimeError::Msg("service dropped reply".into()))?
+    }
+
+    /// Compile an artifact ahead of first use.
+    pub fn preload(&self, artifact: &str) -> Result<(), RuntimeError> {
+        let _ = self.manifest.artifact(artifact)?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx.send(Request::Preload {
+            artifact: artifact.to_string(),
+            reply: reply_tx,
+        }).map_err(|_| RuntimeError::Msg("service stopped".into()))?;
+        reply_rx.recv()
+            .map_err(|_| RuntimeError::Msg("service dropped reply".into()))?
+    }
+
+    pub fn stats(&self) -> ServiceStats {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        if self.tx.send(Request::Stats { reply: reply_tx }).is_err() {
+            return ServiceStats::default();
+        }
+        reply_rx.recv().unwrap_or_default()
+    }
+}
+
+// --- service thread --------------------------------------------------------
+
+struct Service {
+    client: xla::PjRtClient,
+    manifest: Arc<Manifest>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: ServiceStats,
+}
+
+fn service_main(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the construction error.
+            for req in rx {
+                match req {
+                    Request::Exec { reply, .. } => {
+                        let _ = reply.send(Err(RuntimeError::Xla(
+                            format!("client init failed: {e:?}"))));
+                    }
+                    Request::Preload { reply, .. } => {
+                        let _ = reply.send(Err(RuntimeError::Xla(
+                            format!("client init failed: {e:?}"))));
+                    }
+                    Request::Stats { reply } => {
+                        let _ = reply.send(ServiceStats::default());
+                    }
+                    Request::Shutdown => break,
+                }
+            }
+            return;
+        }
+    };
+    let mut svc = Service {
+        client,
+        manifest,
+        executables: HashMap::new(),
+        stats: ServiceStats::default(),
+    };
+    for req in rx {
+        match req {
+            Request::Exec { artifact, inputs, reply } => {
+                let _ = reply.send(svc.execute(&artifact, inputs));
+            }
+            Request::Preload { artifact, reply } => {
+                let _ = reply.send(svc.ensure_compiled(&artifact)
+                                   .map(|_| ()));
+            }
+            Request::Stats { reply } => {
+                let _ = reply.send(svc.stats.clone());
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+impl Service {
+    fn ensure_compiled(&mut self, artifact: &str)
+        -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
+        if !self.executables.contains_key(artifact) {
+            let entry = self.manifest.artifact(artifact)?.clone();
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| RuntimeError::Xla(format!(
+                    "parse {}: {e:?}", entry.file.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)
+                .map_err(|e| RuntimeError::Xla(format!(
+                    "compile {artifact}: {e:?}")))?;
+            self.stats.compiles += 1;
+            self.stats.compile_nanos += t0.elapsed().as_nanos() as u64;
+            self.executables.insert(artifact.to_string(), exe);
+        }
+        Ok(&self.executables[artifact])
+    }
+
+    fn execute(&mut self, artifact: &str, inputs: Vec<TensorData>)
+        -> ExecResult {
+        let entry = self.manifest.artifact(artifact)?.clone();
+        self.ensure_compiled(artifact)?;
+
+        // Upload inputs as PjRtBuffers we own and run via `execute_b`.
+        // The crate's literal-based `execute` leaks every input device
+        // buffer (xla_rs.cc releases them and never frees), which OOMs
+        // long runs — see EXPERIMENTS.md §Perf iteration 4.
+        let t0 = Instant::now();
+        let buffers: Vec<xla::PjRtBuffer> = inputs.iter()
+            .map(|t| pack_buffer(&self.client, t))
+            .collect::<Result<_, _>>()?;
+        let t_pack = t0.elapsed();
+
+        let exe = &self.executables[artifact];
+        let t1 = Instant::now();
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)
+            .map_err(|e| RuntimeError::Xla(format!(
+                "execute {artifact}: {e:?}")))?;
+        drop(buffers); // input device memory freed here
+        let t_exec = t1.elapsed();
+
+        let t2 = Instant::now();
+        let mut tuple = result[0][0].to_literal_sync()
+            .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
+        let parts = tuple.decompose_tuple()
+            .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
+        if parts.len() != entry.outputs.len() {
+            return Err(RuntimeError::Msg(format!(
+                "{artifact}: manifest declares {} outputs, PJRT returned {}",
+                entry.outputs.len(), parts.len())));
+        }
+        let outputs: Vec<TensorData> = parts.iter().zip(&entry.outputs)
+            .map(|(lit, sig)| unpack_literal(lit, sig.dtype,
+                                             &sig.dims))
+            .collect::<Result<_, _>>()?;
+        let t_unpack = t2.elapsed();
+
+        self.stats.executions += 1;
+        self.stats.pack_nanos += t_pack.as_nanos() as u64;
+        self.stats.exec_nanos += t_exec.as_nanos() as u64;
+        self.stats.unpack_nanos += t_unpack.as_nanos() as u64;
+        Ok(outputs)
+    }
+}
+
+fn pack_buffer(client: &xla::PjRtClient, t: &TensorData)
+    -> Result<xla::PjRtBuffer, RuntimeError> {
+    // Use the *typed* upload: the crate's `buffer_from_host_raw_bytes`
+    // passes an `ElementType` discriminant where the C side expects a
+    // `PrimitiveType`, silently creating a buffer of the wrong dtype
+    // (F32 -> F16).  The typed variant converts correctly.
+    match t {
+        TensorData::F32 { dims, data } => {
+            client.buffer_from_host_buffer::<f32>(data, dims, None)
+        }
+        TensorData::I32 { dims, data } => {
+            client.buffer_from_host_buffer::<i32>(data, dims, None)
+        }
+    }
+    .map_err(|e| RuntimeError::Xla(format!("pack buffer: {e:?}")))
+}
+
+fn unpack_literal(lit: &xla::Literal, dtype: DType, dims: &[usize])
+    -> Result<TensorData, RuntimeError> {
+    match dtype {
+        DType::F32 => {
+            let data = lit.to_vec::<f32>()
+                .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
+            Ok(TensorData::F32 { dims: dims.to_vec(), data })
+        }
+        DType::I32 => {
+            let data = lit.to_vec::<i32>()
+                .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
+            Ok(TensorData::I32 { dims: dims.to_vec(), data })
+        }
+    }
+}

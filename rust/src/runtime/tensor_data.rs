@@ -1,0 +1,154 @@
+//! Host-side tensors for crossing the runtime-service channel.
+//!
+//! `xla::Literal` wraps a raw pointer and is not `Send`; the service
+//! thread owns all PJRT objects, and callers exchange [`TensorData`]
+//! (plain `Vec`s + dims), which the service packs/unpacks at the
+//! boundary.
+
+use crate::runtime::manifest::{DType, TensorSig};
+use crate::util::tensor::Matrix;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32 { dims: Vec<usize>, data: Vec<f32> },
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+}
+
+impl TensorData {
+    pub fn scalar_f32(v: f32) -> TensorData {
+        TensorData::F32 { dims: vec![], data: vec![v] }
+    }
+
+    pub fn scalar_i32(v: i32) -> TensorData {
+        TensorData::I32 { dims: vec![], data: vec![v] }
+    }
+
+    pub fn zeros(sig: &TensorSig) -> TensorData {
+        let n = sig.element_count();
+        match sig.dtype {
+            DType::F32 => TensorData::F32 { dims: sig.dims.clone(),
+                                            data: vec![0.0; n] },
+            DType::I32 => TensorData::I32 { dims: sig.dims.clone(),
+                                            data: vec![0; n] },
+        }
+    }
+
+    pub fn from_matrix(m: &Matrix) -> TensorData {
+        TensorData::F32 { dims: vec![m.rows, m.cols],
+                          data: m.data.clone() }
+    }
+
+    pub fn into_matrix(self) -> Result<Matrix, String> {
+        match self {
+            TensorData::F32 { dims, data } if dims.len() == 2 => {
+                Ok(Matrix::from_vec(dims[0], dims[1], data))
+            }
+            other => Err(format!("not a 2-D f32 tensor: {:?}",
+                                 other.sig())),
+        }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            TensorData::F32 { dims, .. } | TensorData::I32 { dims, .. } =>
+                dims,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32 { .. } => DType::F32,
+            TensorData::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn sig(&self) -> TensorSig {
+        TensorSig { dims: self.dims().to_vec(), dtype: self.dtype() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims().iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32], String> {
+        match self {
+            TensorData::F32 { data, .. } => Ok(data),
+            _ => Err("expected f32 tensor".into()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32], String> {
+        match self {
+            TensorData::F32 { data, .. } => Ok(data),
+            _ => Err("expected f32 tensor".into()),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32], String> {
+        match self {
+            TensorData::I32 { data, .. } => Ok(data),
+            _ => Err("expected i32 tensor".into()),
+        }
+    }
+
+    /// First element as f64 (scalar outputs: losses, counts, steps).
+    pub fn scalar_value(&self) -> Result<f64, String> {
+        match self {
+            TensorData::F32 { data, .. } =>
+                data.first().copied().map(|v| v as f64)
+                    .ok_or_else(|| "empty tensor".into()),
+            TensorData::I32 { data, .. } =>
+                data.first().copied().map(|v| v as f64)
+                    .ok_or_else(|| "empty tensor".into()),
+        }
+    }
+
+    /// Validate against a manifest signature.
+    pub fn check_sig(&self, want: &TensorSig, what: &str)
+        -> Result<(), String> {
+        let got = self.sig();
+        if &got != want {
+            return Err(format!(
+                "{what}: tensor signature mismatch: got {:?} {:?}, \
+                 want {:?} {:?}", got.dtype, got.dims, want.dtype,
+                want.dims));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_round_trip() {
+        let m = Matrix::from_fn(3, 4, |i, j| (i * 4 + j) as f32);
+        let t = TensorData::from_matrix(&m);
+        assert_eq!(t.dims(), &[3, 4]);
+        let back = t.into_matrix().unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn zeros_matches_sig() {
+        let sig = TensorSig { dims: vec![2, 3], dtype: DType::I32 };
+        let t = TensorData::zeros(&sig);
+        assert_eq!(t.element_count(), 6);
+        assert_eq!(t.dtype(), DType::I32);
+        t.check_sig(&sig, "t").unwrap();
+    }
+
+    #[test]
+    fn sig_mismatch_detected() {
+        let t = TensorData::scalar_f32(1.0);
+        let bad = TensorSig { dims: vec![1], dtype: DType::F32 };
+        assert!(t.check_sig(&bad, "t").is_err());
+    }
+
+    #[test]
+    fn scalar_access() {
+        assert_eq!(TensorData::scalar_f32(2.5).scalar_value().unwrap(), 2.5);
+        assert_eq!(TensorData::scalar_i32(7).scalar_value().unwrap(), 7.0);
+    }
+}

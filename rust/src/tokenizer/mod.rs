@@ -1,0 +1,192 @@
+//! Byte-level BPE tokenizer, trained in-repo (standing in for the HF
+//! tokenizers the paper's models use; see DESIGN.md section 2).
+//!
+//! Training: start from the 256 byte tokens, repeatedly merge the most
+//! frequent adjacent pair until the target vocab size.  Encoding applies
+//! merges greedily in rank order (the standard BPE scheme).
+
+use std::collections::HashMap;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    /// Target vocabulary size (>= 256).
+    pub vocab_size: usize,
+    /// Merge rules in application order: (left, right) -> new token id.
+    pub merges: Vec<(u32, u32)>,
+    merge_rank: HashMap<(u32, u32), usize>,
+    /// Byte sequences per token id (for decoding).
+    pieces: Vec<Vec<u8>>,
+}
+
+impl Tokenizer {
+    /// Pure byte-level tokenizer (no merges).
+    pub fn byte_level() -> Tokenizer {
+        Tokenizer {
+            vocab_size: 256,
+            merges: Vec::new(),
+            merge_rank: HashMap::new(),
+            pieces: (0..=255u8).map(|b| vec![b]).collect(),
+        }
+    }
+
+    /// Train BPE merges on `text` up to `vocab_size` tokens.
+    pub fn train(text: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size >= 256, "vocab must cover raw bytes");
+        let mut tok = Tokenizer::byte_level();
+        tok.vocab_size = vocab_size;
+        // Work on a word-segmented corpus so merges never cross spaces
+        // (keeps the learned pieces linguistic-ish and training fast).
+        let mut words: HashMap<Vec<u32>, usize> = HashMap::new();
+        for w in text.split_whitespace() {
+            // Prefix each word with a space marker byte so word-initial
+            // pieces are distinct (GPT-2 style).
+            let mut ids: Vec<u32> = vec![b' ' as u32];
+            ids.extend(w.bytes().map(|b| b as u32));
+            *words.entry(ids).or_insert(0) += 1;
+        }
+        while tok.pieces.len() < vocab_size {
+            // Count adjacent pairs.
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (ids, &freq) in &words {
+                for win in ids.windows(2) {
+                    *counts.entry((win[0], win[1])).or_insert(0) += freq;
+                }
+            }
+            // Deterministic argmax: highest count, then lowest pair ids.
+            let Some((&pair, &count)) = counts.iter().max_by(
+                |(p1, c1), (p2, c2)| c1.cmp(c2)
+                    .then(p2.cmp(p1))) else { break };
+            if count < 2 {
+                break;
+            }
+            let new_id = tok.pieces.len() as u32;
+            let mut piece = tok.pieces[pair.0 as usize].clone();
+            piece.extend_from_slice(&tok.pieces[pair.1 as usize]);
+            tok.pieces.push(piece);
+            tok.merge_rank.insert(pair, tok.merges.len());
+            tok.merges.push(pair);
+            // Apply the merge to every word.
+            words = words.into_iter().map(|(ids, freq)| {
+                (merge_once(&ids, pair, new_id), freq)
+            }).collect();
+        }
+        tok
+    }
+
+    pub fn actual_vocab(&self) -> usize {
+        self.pieces.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::new();
+        for w in text.split_inclusive(' ') {
+            // Keep the trailing space attached to the *next* word as a
+            // marker, matching training segmentation.
+            let mut ids: Vec<u32> = w.bytes().map(|b| b as u32).collect();
+            // Apply merges in rank order until none applies.
+            loop {
+                let mut best: Option<(usize, usize)> = None; // (rank, pos)
+                for (pos, win) in ids.windows(2).enumerate() {
+                    if let Some(&rank) =
+                        self.merge_rank.get(&(win[0], win[1])) {
+                        if best.map_or(true, |(br, _)| rank < br) {
+                            best = Some((rank, pos));
+                        }
+                    }
+                }
+                let Some((rank, pos)) = best else { break };
+                let (l, r) = self.merges[rank];
+                let new_id = self.id_of_merge(rank);
+                let _ = (l, r);
+                ids.splice(pos..pos + 2, [new_id]);
+            }
+            out.extend(ids);
+        }
+        out
+    }
+
+    fn id_of_merge(&self, rank: usize) -> u32 {
+        256 + rank as u32
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(p) = self.pieces.get(id as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+}
+
+fn merge_once(ids: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(ids.len());
+    let mut i = 0;
+    while i < ids.len() {
+        if i + 1 < ids.len() && ids[i] == pair.0 && ids[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(ids[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "the quick brown fox jumps over the lazy dog \
+                          the quick brown fox the quick the";
+
+    #[test]
+    fn byte_level_round_trip() {
+        let tok = Tokenizer::byte_level();
+        let ids = tok.encode("hello world");
+        assert_eq!(tok.decode(&ids), "hello world");
+        assert!(ids.iter().all(|&i| i < 256));
+    }
+
+    #[test]
+    fn trained_round_trip() {
+        let tok = Tokenizer::train(SAMPLE, 300);
+        for text in [SAMPLE, "the quick dog", "unseen words zebra!"] {
+            let ids = tok.encode(text);
+            assert_eq!(tok.decode(&ids), text, "{text}");
+        }
+    }
+
+    #[test]
+    fn merges_compress() {
+        let tok = Tokenizer::train(SAMPLE, 320);
+        let byte_len = SAMPLE.len();
+        let bpe_len = tok.encode(SAMPLE).len();
+        assert!(bpe_len < byte_len, "{bpe_len} !< {byte_len}");
+        assert!(tok.actual_vocab() > 256);
+    }
+
+    #[test]
+    fn ids_within_vocab() {
+        let tok = Tokenizer::train(SAMPLE, 280);
+        let ids = tok.encode("the quick brown fox and some new text");
+        assert!(ids.iter().all(|&i| (i as usize) < tok.actual_vocab()));
+    }
+
+    #[test]
+    fn training_deterministic() {
+        let a = Tokenizer::train(SAMPLE, 300);
+        let b = Tokenizer::train(SAMPLE, 300);
+        assert_eq!(a.merges, b.merges);
+        assert_eq!(a.encode(SAMPLE), b.encode(SAMPLE));
+    }
+
+    #[test]
+    fn unicode_survives() {
+        let tok = Tokenizer::train(SAMPLE, 270);
+        let text = "naïve café ↦ λ";
+        assert_eq!(tok.decode(&tok.encode(text)), text);
+    }
+}

@@ -1,0 +1,239 @@
+//! Benchmark harness (no criterion offline): warmup, timed samples,
+//! robust statistics, and Markdown table emission.
+//!
+//! Every `rust/benches/*.rs` target (`harness = false`) uses this to
+//! regenerate one paper table/figure: benches both *measure* (wall-clock
+//! stats) and *report* (the table rows the paper prints).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut ns: Vec<f64>) -> Stats {
+        assert!(!ns.is_empty());
+        ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = ns.len();
+        let mean = ns.iter().sum::<f64>() / n as f64;
+        let var = ns.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        let pct = |p: f64| ns[(((n - 1) as f64) * p).round() as usize];
+        Stats {
+            n,
+            mean_ns: mean,
+            std_ns: var.sqrt(),
+            min_ns: ns[0],
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+        }
+    }
+
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+pub fn fmt_duration_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `samples` timed runs.
+pub fn bench<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut ns = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        ns.push(t0.elapsed().as_nanos() as f64);
+    }
+    Stats::from_samples(ns)
+}
+
+/// Time a single run (for expensive end-to-end pipelines).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Markdown table builder with alignment.
+pub struct Table {
+    title: String,
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(),
+                   "row width mismatch in table '{}'", self.title);
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = format!("\n### {}\n\n", self.title);
+        out.push_str(&line(&self.headers));
+        let sep: Vec<String> =
+            widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&line(&sep));
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_markdown());
+    }
+
+    /// Also append to a report file (used to build EXPERIMENTS.md data).
+    pub fn append_to(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)?;
+        f.write_all(self.to_markdown().as_bytes())
+    }
+}
+
+/// ASCII series plot for figure-style outputs (Fig. 1 / Fig. 2).
+pub fn ascii_plot(title: &str, xs: &[f64], series: &[(&str, Vec<f64>)],
+                  width: usize, height: usize) -> String {
+    let mut all: Vec<f64> = series.iter().flat_map(|(_, ys)| ys.clone())
+        .filter(|y| y.is_finite())
+        .collect();
+    if all.is_empty() || xs.is_empty() {
+        return format!("{title}: (no data)\n");
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (ymin, ymax) = (all[0], all[all.len() - 1]);
+    let span = (ymax - ymin).max(1e-12);
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = [b'*', b'o', b'+', b'x', b'#'];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (i, &y) in ys.iter().enumerate() {
+            if !y.is_finite() {
+                continue;
+            }
+            let col = if xs.len() == 1 { 0 } else {
+                i * (width - 1) / (xs.len() - 1)
+            };
+            let rowf = (y - ymin) / span;
+            let row = height - 1 - ((rowf * (height - 1) as f64).round()
+                                    as usize);
+            grid[row][col] = marks[si % marks.len()];
+        }
+    }
+    let mut out = format!("{title}  [y: {ymin:.4} .. {ymax:.4}]\n");
+    for row in grid {
+        out.push_str("  |");
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("   x: {:?}\n", xs));
+    for (si, (name, _)) in series.iter().enumerate() {
+        out.push_str(&format!("   {} = {}\n",
+                              marks[si % marks.len()] as char, name));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean_ns - 3.0).abs() < 1e-9);
+        assert_eq!(s.p50_ns, 3.0);
+        assert_eq!(s.min_ns, 1.0);
+    }
+
+    #[test]
+    fn bench_runs_closure() {
+        let mut count = 0;
+        let s = bench(2, 5, || count += 1);
+        assert_eq!(count, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("Demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert_eq!(md.lines().filter(|l| l.starts_with('|')).count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        Table::new("t", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration_ns(500.0), "500 ns");
+        assert_eq!(fmt_duration_ns(2_500.0), "2.50 µs");
+        assert_eq!(fmt_duration_ns(3_000_000.0), "3.00 ms");
+        assert_eq!(fmt_duration_ns(1.5e9), "1.500 s");
+    }
+
+    #[test]
+    fn ascii_plot_handles_series() {
+        let p = ascii_plot("t", &[0.0, 1.0, 2.0],
+                           &[("a", vec![1.0, 2.0, 3.0]),
+                             ("b", vec![3.0, 2.0, 1.0])], 20, 5);
+        assert!(p.contains("t  [y:"));
+        assert!(p.contains("* = a"));
+    }
+}

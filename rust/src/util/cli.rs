@@ -1,0 +1,274 @@
+//! Declarative CLI flag parser (no clap offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, defaults, and auto-generated `--help` text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    UnknownFlag(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("missing required {0}")]
+    MissingRequired(String),
+    #[error("invalid value for --{flag}: {value:?} ({expected})")]
+    InvalidValue { flag: String, value: String, expected: &'static str },
+    #[error("unexpected positional argument {0:?}")]
+    UnexpectedPositional(String),
+}
+
+#[derive(Clone)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    default: Option<&'static str>,
+    is_bool: bool,
+    required: bool,
+}
+
+/// Declarative argument specification for one subcommand.
+pub struct ArgSpec {
+    program: String,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+    positionals: Vec<(&'static str, &'static str, bool)>, // name, help, req
+}
+
+pub struct Args {
+    values: BTreeMap<String, String>,
+    bools: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(program: impl Into<String>, about: &'static str) -> Self {
+        Self { program: program.into(), about, flags: Vec::new(),
+               positionals: Vec::new() }
+    }
+
+    pub fn flag(mut self, name: &'static str, default: &'static str,
+                help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: Some(default),
+                                   is_bool: false, required: false });
+        self
+    }
+
+    pub fn required_flag(mut self, name: &'static str,
+                         help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None,
+                                   is_bool: false, required: true });
+        self
+    }
+
+    pub fn bool_flag(mut self, name: &'static str,
+                     help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: None,
+                                   is_bool: true, required: false });
+        self
+    }
+
+    pub fn positional(mut self, name: &'static str, help: &'static str,
+                      required: bool) -> Self {
+        self.positionals.push((name, help, required));
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.program,
+                            self.about, self.program);
+        for (name, _, req) in &self.positionals {
+            if *req {
+                s.push_str(&format!(" <{name}>"));
+            } else {
+                s.push_str(&format!(" [{name}]"));
+            }
+        }
+        s.push_str(" [FLAGS]\n\nFLAGS:\n");
+        for f in &self.flags {
+            let d = match f.default {
+                Some(d) if !f.is_bool => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            let req = if f.required { " (required)" } else { "" };
+            s.push_str(&format!("  --{:<22} {}{}{}\n", f.name, f.help, d,
+                                req));
+        }
+        s.push_str("  --help                   show this message\n");
+        s
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut values = BTreeMap::new();
+        let mut bools = BTreeMap::new();
+        let mut positionals = Vec::new();
+        for f in &self.flags {
+            if let Some(d) = f.default {
+                values.insert(f.name.to_string(), d.to_string());
+            }
+            if f.is_bool {
+                bools.insert(f.name.to_string(), false);
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (name, inline) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                if name == "help" {
+                    print!("{}", self.usage());
+                    std::process::exit(0);
+                }
+                let spec = self.flags.iter().find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.clone()))?;
+                if spec.is_bool {
+                    let v = match inline.as_deref() {
+                        Some("false") | Some("0") => false,
+                        _ => true,
+                    };
+                    bools.insert(name, v);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(
+                                    || CliError::MissingValue(name.clone()))?
+                                .clone()
+                        }
+                    };
+                    values.insert(name, v);
+                }
+            } else {
+                if positionals.len() >= self.positionals.len() {
+                    return Err(CliError::UnexpectedPositional(a.clone()));
+                }
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        for f in &self.flags {
+            if f.required && !values.contains_key(f.name) {
+                return Err(CliError::MissingRequired(
+                    format!("flag --{}", f.name)));
+            }
+        }
+        for (idx, (name, _, req)) in self.positionals.iter().enumerate() {
+            if *req && positionals.len() <= idx {
+                return Err(CliError::MissingRequired(
+                    format!("positional <{name}>")));
+            }
+        }
+        Ok(Args { values, bools, positionals })
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> &str {
+        self.values.get(name).map(|s| s.as_str()).unwrap_or("")
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(|s| s.as_str())
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str)
+        -> Result<T, CliError> {
+        self.get(name).parse().map_err(|_| CliError::InvalidValue {
+            flag: name.to_string(),
+            value: self.get(name).to_string(),
+            expected: std::any::type_name::<T>(),
+        })
+    }
+
+    /// Comma-separated list of T.
+    pub fn parse_list<T: std::str::FromStr>(&self, name: &str)
+        -> Result<Vec<T>, CliError> {
+        self.get(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse().map_err(|_| CliError::InvalidValue {
+                flag: name.to_string(),
+                value: s.to_string(),
+                expected: std::any::type_name::<T>(),
+            }))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "a test command")
+            .flag("alpha", "1.5", "alpha value")
+            .required_flag("name", "the name")
+            .bool_flag("verbose", "chatty")
+            .positional("input", "input file", true)
+    }
+
+    fn argv(list: &[&str]) -> Vec<String> {
+        list.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_args() {
+        let a = spec()
+            .parse(&argv(&["file.txt", "--name", "x", "--verbose",
+                           "--alpha=2.5"]))
+            .unwrap();
+        assert_eq!(a.positional(0), Some("file.txt"));
+        assert_eq!(a.get("name"), "x");
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.parse_num::<f64>("alpha").unwrap(), 2.5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = spec().parse(&argv(&["f", "--name", "n"])).unwrap();
+        assert_eq!(a.get("alpha"), "1.5");
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_flag() {
+        assert!(matches!(spec().parse(&argv(&["f"])),
+                         Err(CliError::MissingRequired(_))));
+    }
+
+    #[test]
+    fn missing_required_positional() {
+        assert!(matches!(spec().parse(&argv(&["--name", "n"])),
+                         Err(CliError::MissingRequired(_))));
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(spec().parse(&argv(&["f", "--name", "n", "--bogus"])),
+                         Err(CliError::UnknownFlag(_))));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let s = ArgSpec::new("t", "x").flag("ks", "1,2,5", "list");
+        let a = s.parse(&[]).unwrap();
+        assert_eq!(a.parse_list::<usize>("ks").unwrap(), vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn bool_flag_explicit_false() {
+        let s = ArgSpec::new("t", "x").bool_flag("on", "y");
+        let a = s.parse(&argv(&["--on=false"])).unwrap();
+        assert!(!a.get_bool("on"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Substrate utilities built in-repo (the offline environment provides
+//! no serde/clap/tokio/criterion/proptest/rayon): JSON, CLI parsing,
+//! threading, PRNG, property testing, benchmarking, dense tensors,
+//! logging.
+
+pub mod benchlib;
+pub mod cli;
+pub mod jsonlite;
+pub mod logging;
+pub mod prng;
+pub mod proptest;
+pub mod tensor;
+pub mod threadpool;

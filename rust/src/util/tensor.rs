@@ -1,0 +1,252 @@
+//! Dense f32 matrix type used by the native pruning engine and the
+//! parameter store.  Deliberately small: row-major storage, the handful
+//! of BLAS-1/2/3 operations the algorithms need, no broadcasting.
+
+use std::fmt;
+
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Matrix[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize,
+                   mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        Self::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.at(i, j);
+            }
+        }
+        out
+    }
+
+    /// C = A * B  (ikj loop order for cache-friendly access).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (n, k, m) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(n, m);
+        for i in 0..n {
+            let arow = self.row(i);
+            let orow = &mut out.data[i * m..(i + 1) * m];
+            for (kk, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * m..(kk + 1) * m];
+                for j in 0..m {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// y = A x.
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// G += X^T X for an activation block X ([t, d] row-major).
+    pub fn gram_accumulate(&mut self, x: &Matrix) {
+        assert_eq!(self.rows, x.cols);
+        assert_eq!(self.cols, x.cols);
+        let d = x.cols;
+        for t in 0..x.rows {
+            let xr = x.row(t);
+            for i in 0..d {
+                let xi = xr[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let grow = &mut self.data[i * d..(i + 1) * d];
+                for j in 0..d {
+                    grow[j] += xi * xr[j];
+                }
+            }
+        }
+    }
+
+    pub fn diag(&self) -> Vec<f32> {
+        assert_eq!(self.rows, self.cols);
+        (0..self.rows).map(|i| self.at(i, i)).collect()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn frobenius_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-lane unrolled accumulation: measurably faster than a naive fold
+    // and deterministic across runs.
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for c in 0..chunks {
+        let i = c * 4;
+        acc[0] += a[i] * b[i];
+        acc[1] += a[i + 1] * b[i + 1];
+        acc[2] += a[i + 2] * b[i + 2];
+        acc[3] += a[i + 3] * b[i + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Matrix::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = Matrix::from_fn(4, 4, |i, j| (i * 4 + j) as f32);
+        let c = a.matmul(&Matrix::eye(4));
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let a = Matrix::from_fn(3, 5, |i, j| (i * 7 + j) as f32);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gram_matches_explicit() {
+        let x = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let mut g = Matrix::zeros(2, 2);
+        g.gram_accumulate(&x);
+        let want = x.transpose().matmul(&x);
+        assert!(g.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn gram_accumulates_incrementally() {
+        let x1 = Matrix::from_fn(4, 3, |i, j| (i + j) as f32);
+        let x2 = Matrix::from_fn(5, 3, |i, j| (i * j) as f32 - 1.0);
+        let mut g = Matrix::zeros(3, 3);
+        g.gram_accumulate(&x1);
+        g.gram_accumulate(&x2);
+        let mut whole = Matrix::zeros(3, 3);
+        let mut cat = x1.data.clone();
+        cat.extend_from_slice(&x2.data);
+        whole.gram_accumulate(&Matrix::from_vec(9, 3, cat));
+        assert!(g.max_abs_diff(&whole) < 1e-4);
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let a = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f32 * 0.5);
+        let x = vec![1.0, -2.0, 0.5];
+        let y = a.matvec(&x);
+        let xm = Matrix::from_vec(3, 1, x);
+        let want = a.matmul(&xm);
+        for i in 0..4 {
+            assert!((y[i] - want.data[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.3 - 7.0).collect();
+        let b: Vec<f32> = (0..103).map(|i| (i as f32) * -0.1 + 2.0).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-2);
+    }
+
+    #[test]
+    fn axpy_basic() {
+        let x = vec![1.0, 2.0, 3.0];
+        let mut y = vec![10.0, 20.0, 30.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
+}

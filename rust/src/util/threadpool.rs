@@ -1,0 +1,228 @@
+//! Fixed-size thread pool + scoped data-parallel helpers.
+//!
+//! Built in-repo (no rayon/tokio offline).  Two entry points:
+//!   * [`ThreadPool`] — long-lived workers with a job queue, used by the
+//!     coordinator to refine several layers concurrently;
+//!   * [`parallel_chunks`] — scoped fork/join over an index range for
+//!     one-off data parallelism (gram reduction, eval batches).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Message {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads consuming a shared job queue.
+pub struct ThreadPool {
+    workers: Vec<thread::JoinHandle<()>>,
+    sender: mpsc::Sender<Message>,
+    queue_guard: Arc<Mutex<mpsc::Receiver<Message>>>,
+    pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+}
+
+impl ThreadPool {
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (sender, receiver) = mpsc::channel::<Message>();
+        let queue_guard = Arc::new(Mutex::new(receiver));
+        let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let mut workers = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rx = Arc::clone(&queue_guard);
+            let pend = Arc::clone(&pending);
+            workers.push(thread::spawn(move || loop {
+                let msg = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                match msg {
+                    Ok(Message::Run(job)) => {
+                        job();
+                        let (lock, cv) = &*pend;
+                        let mut cnt = lock.lock().unwrap();
+                        *cnt -= 1;
+                        if *cnt == 0 {
+                            cv.notify_all();
+                        }
+                    }
+                    Ok(Message::Shutdown) | Err(_) => break,
+                }
+            }));
+        }
+        Self { workers, sender, queue_guard, pending }
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        {
+            let (lock, _) = &*self.pending;
+            *lock.lock().unwrap() += 1;
+        }
+        self.sender.send(Message::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let (lock, cv) = &*self.pending;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cv.wait(cnt).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.wait();
+        for _ in &self.workers {
+            let _ = self.sender.send(Message::Shutdown);
+        }
+        // Keep the receiver alive until workers exit.
+        let _guard = Arc::clone(&self.queue_guard);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Reasonable default parallelism for this host.
+pub fn default_threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Scoped fork/join: run `f(start, end)` over `n_items` split into
+/// roughly equal contiguous chunks across `n_threads` threads.
+pub fn parallel_chunks<F>(n_items: usize, n_threads: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n_items == 0 {
+        return;
+    }
+    let n_threads = n_threads.max(1).min(n_items);
+    let chunk = n_items.div_ceil(n_threads);
+    thread::scope(|s| {
+        for t in 0..n_threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n_items);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || f(lo, hi));
+        }
+    });
+}
+
+/// Map `f` over 0..n in parallel, collecting results in index order.
+pub fn parallel_map<T, F>(n: usize, n_threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<T>>> =
+        out.iter_mut().map(Mutex::new).collect();
+    let next = AtomicUsize::new(0);
+    let n_threads = n_threads.max(1).min(n.max(1));
+    thread::scope(|s| {
+        for _ in 0..n_threads {
+            let f = &f;
+            let next = &next;
+            let slots = &slots;
+            s.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                **slots[i].lock().unwrap() = Some(v);
+            });
+        }
+    });
+    out.into_iter().map(|v| v.expect("slot filled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn pool_wait_is_reusable() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait();
+            assert_eq!(counter.load(Ordering::Relaxed), 10 * (round + 1));
+        }
+    }
+
+    #[test]
+    fn parallel_chunks_covers_range() {
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        parallel_chunks(97, 8, |lo, hi| {
+            for i in lo..hi {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(50, 6, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let out: Vec<usize> = parallel_map(0, 4, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_drop_joins_cleanly() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..20 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                thread::sleep(std::time::Duration::from_millis(1));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 20);
+    }
+}

@@ -1,0 +1,261 @@
+//! Property tests for the Algorithm-1 invariants (DESIGN.md §8), run on
+//! the in-repo property harness (`util::proptest`) over randomized
+//! instances.  No artifacts required — these exercise the native engine
+//! and the shared math.
+
+use sparseswaps::pruning::error::{corr_vector, layer_loss, row_loss};
+use sparseswaps::pruning::exact::optimal_row_mask;
+use sparseswaps::pruning::mask::{
+    achieved_sparsity, apply_mask, mask_from_scores, validate, Pattern,
+};
+use sparseswaps::pruning::saliency;
+use sparseswaps::pruning::sparseswaps::{
+    best_swap, refine_layer, refine_row, SwapConfig,
+};
+use sparseswaps::util::proptest::{check, ensure, Gen};
+use sparseswaps::util::tensor::Matrix;
+
+struct Instance {
+    w: Matrix,
+    g: Matrix,
+    pattern: Pattern,
+}
+
+fn random_instance(gen: &mut Gen, nm_allowed: bool) -> Instance {
+    let d = *gen.choose(&[8usize, 12, 16, 24, 32]);
+    let rows = gen.usize_in(1, 6);
+    let t = gen.usize_in(d, 4 * d);
+    let x = Matrix::from_fn(t, d, |_, _| gen.rng.gaussian_f32());
+    let mut g = Matrix::zeros(d, d);
+    g.gram_accumulate(&x);
+    let w = Matrix::from_fn(rows, d, |_, _| gen.rng.gaussian_f32());
+    let pattern = if nm_allowed && d % 4 == 0 && gen.rng.bool(0.4) {
+        Pattern::Nm { n: 2, m: 4 }
+    } else {
+        let keep = gen.usize_in(1, d - 1);
+        Pattern::PerRow { keep }
+    };
+    Instance { w, g, pattern }
+}
+
+fn warmstart(gen: &mut Gen, inst: &Instance) -> Matrix {
+    let crit = *gen.choose(&[saliency::Criterion::Magnitude,
+                             saliency::Criterion::Wanda,
+                             saliency::Criterion::Ria]);
+    let scores = saliency::scores(crit, &inst.w, &inst.g.diag());
+    mask_from_scores(&scores, inst.pattern)
+}
+
+#[test]
+fn prop_loss_never_increases() {
+    // (i) every accepted swap strictly decreases the per-row loss.
+    check("loss monotone", 120, |gen| {
+        let inst = random_instance(gen, true);
+        let mut mask = warmstart(gen, &inst);
+        let before = layer_loss(&inst.w, &mask, &inst.g);
+        let t_max = gen.usize_in(1, 50);
+        refine_layer(&inst.w, &mut mask, &inst.g, inst.pattern,
+                     &SwapConfig { t_max, eps: 0.0 }, 1);
+        let after = layer_loss(&inst.w, &mask, &inst.g);
+        ensure(after <= before * (1.0 + 1e-5) + 1e-4,
+               || format!("{before} -> {after}"))
+    });
+}
+
+#[test]
+fn prop_sparsity_pattern_preserved() {
+    // (ii) per-row counts / N:M block counts survive any refinement.
+    check("pattern preserved", 120, |gen| {
+        let inst = random_instance(gen, true);
+        let mut mask = warmstart(gen, &inst);
+        refine_layer(&inst.w, &mut mask, &inst.g, inst.pattern,
+                     &SwapConfig { t_max: 30, eps: 0.0 }, 1);
+        validate(&mask, inst.pattern).map_err(|e| e)
+    });
+}
+
+#[test]
+fn prop_corr_vector_consistent_after_swaps() {
+    // (iii) the Eq.-6 incremental update of c equals recomputation.
+    check("corr consistency", 80, |gen| {
+        let inst = random_instance(gen, false);
+        let w = inst.w.row(0);
+        let mut m: Vec<f32> = warmstart(gen, &inst).row(0).to_vec();
+        let mut c = corr_vector(w, &m, &inst.g);
+        for _ in 0..10 {
+            let Some((dl, u, p)) = best_swap(w, &m, &c, &inst.g, 0)
+                else { break };
+            if dl >= 0.0 {
+                break;
+            }
+            m[u] = 0.0;
+            m[p] = 1.0;
+            // Incremental Eq. 6 update...
+            for i in 0..w.len() {
+                c[i] += w[u] * inst.g.at(i, u) - w[p] * inst.g.at(i, p);
+            }
+            // ...must match recomputation from scratch.
+            let fresh = corr_vector(w, &m, &inst.g);
+            for i in 0..c.len() {
+                let scale = fresh[i].abs().max(1.0);
+                if (c[i] - fresh[i]).abs() / scale > 1e-3 {
+                    return Err(format!(
+                        "c[{i}] drifted: {} vs {}", c[i], fresh[i]));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_termination_bound() {
+    // (iv) Prop A.2: at most ceil(L0/eps) swaps with tolerance eps.
+    check("termination bound", 60, |gen| {
+        let inst = random_instance(gen, false);
+        let mut mask = warmstart(gen, &inst);
+        for r in 0..inst.w.rows {
+            let l0 = row_loss(inst.w.row(r), mask.row(r), &inst.g);
+            if l0 <= 0.0 {
+                continue;
+            }
+            let eps = l0 / (gen.usize_in(2, 40) as f64);
+            let mut mrow = mask.row_mut(r).to_vec();
+            let out = refine_row(inst.w.row(r), &mut mrow, &inst.g, 0,
+                                 &SwapConfig { t_max: 100_000, eps });
+            let bound = (l0 / eps).ceil() as usize;
+            if out.swaps > bound {
+                return Err(format!("{} swaps > bound {}", out.swaps,
+                                   bound));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_terminal_is_local_optimum() {
+    // (v) at convergence no single feasible swap improves the loss.
+    check("local optimum", 40, |gen| {
+        let inst = random_instance(gen, true);
+        let mut mask = warmstart(gen, &inst);
+        let nm = inst.pattern.nm_block();
+        let out = refine_layer(&inst.w, &mut mask, &inst.g, inst.pattern,
+                               &SwapConfig { t_max: 100_000, eps: 0.0 },
+                               1);
+        for (r, row_out) in out.rows.iter().enumerate() {
+            ensure(row_out.converged, || format!("row {r} not converged"))?;
+            let w = inst.w.row(r);
+            let base = row_loss(w, mask.row(r), &inst.g);
+            let d = w.len();
+            for u in 0..d {
+                for p in 0..d {
+                    let feasible = mask.at(r, u) == 1.0
+                        && mask.at(r, p) == 0.0
+                        && (nm == 0 || u / nm == p / nm);
+                    if feasible {
+                        let mut m2 = mask.row(r).to_vec();
+                        m2[u] = 0.0;
+                        m2[p] = 1.0;
+                        let l2 = row_loss(w, &m2, &inst.g);
+                        if l2 < base - 1e-2 - 1e-5 * base.abs() {
+                            return Err(format!(
+                                "row {r} swap ({u},{p}) improves \
+                                 {base} -> {l2}"));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exact_optimum_sandwich() {
+    // (vii) brute-force optimum <= SparseSwaps result <= warmstart.
+    check("optimum sandwich", 30, |gen| {
+        let d = *gen.choose(&[8usize, 10, 12, 14]);
+        let t = gen.usize_in(d, 3 * d);
+        let x = Matrix::from_fn(t, d, |_, _| gen.rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let w: Vec<f32> = (0..d).map(|_| gen.rng.gaussian_f32()).collect();
+        let keep = gen.usize_in(1, d - 1);
+        let wm = Matrix::from_vec(1, d, w.clone());
+        let scores = saliency::wanda(&wm, &g.diag());
+        let mask = mask_from_scores(&scores, Pattern::PerRow { keep });
+        let warm = row_loss(&w, mask.row(0), &g);
+        let mut mrow = mask.row(0).to_vec();
+        let out = refine_row(&w, &mut mrow, &g, 0,
+                             &SwapConfig { t_max: 100_000, eps: 0.0 });
+        let (_, opt) = optimal_row_mask(&w, &g, keep);
+        ensure(out.loss_after <= warm * (1.0 + 1e-5) + 1e-4,
+               || format!("refined {} > warmstart {warm}",
+                          out.loss_after))?;
+        ensure(opt <= out.loss_after * (1.0 + 1e-4) + 1e-3,
+               || format!("optimum {opt} > refined {}", out.loss_after))
+    });
+}
+
+#[test]
+fn prop_masking_matches_loss_semantics() {
+    // Masked-weight semantics: pruning error of (W, M) equals the
+    // distance between dense and masked layer outputs.
+    check("masking semantics", 60, |gen| {
+        let inst = random_instance(gen, false);
+        let mask = warmstart(gen, &inst);
+        let mut wm = inst.w.clone();
+        apply_mask(&mut wm, &mask);
+        // (W - M.W) == W - masked(W) elementwise.
+        for i in 0..inst.w.rows {
+            for j in 0..inst.w.cols {
+                let lhs = (1.0 - mask.at(i, j)) * inst.w.at(i, j);
+                let rhs = inst.w.at(i, j) - wm.at(i, j);
+                if (lhs - rhs).abs() > 1e-6 {
+                    return Err(format!("mismatch at ({i},{j})"));
+                }
+            }
+        }
+        ensure((0.0..=1.0).contains(&achieved_sparsity(&mask)),
+               || "sparsity out of range".into())
+    });
+}
+
+#[test]
+fn prop_best_swap_matches_bruteforce_delta() {
+    // Eq. 5 lookup == brute-force evaluation of L(m') - L(m) over all
+    // feasible pairs, and best_swap returns the minimum.
+    check("eq5 vs bruteforce", 60, |gen| {
+        let inst = random_instance(gen, false);
+        let w = inst.w.row(0);
+        let m: Vec<f32> = warmstart(gen, &inst).row(0).to_vec();
+        let c = corr_vector(w, &m, &inst.g);
+        let base = row_loss(w, &m, &inst.g);
+        let d = w.len();
+        let mut best_direct: Option<f64> = None;
+        for u in 0..d {
+            for p in 0..d {
+                if m[u] == 1.0 && m[p] == 0.0 {
+                    let mut m2 = m.clone();
+                    m2[u] = 0.0;
+                    m2[p] = 1.0;
+                    let dl = row_loss(w, &m2, &inst.g) - base;
+                    if best_direct.map_or(true, |b| dl < b) {
+                        best_direct = Some(dl);
+                    }
+                }
+            }
+        }
+        match (best_swap(w, &m, &c, &inst.g, 0), best_direct) {
+            (None, None) => Ok(()),
+            (Some((dl, _, _)), Some(direct)) => {
+                let scale = direct.abs().max(1.0);
+                ensure((dl - direct).abs() / scale < 1e-3,
+                       || format!("eq5 {dl} vs direct {direct}"))
+            }
+            (a, b) => Err(format!("feasibility mismatch: {a:?} vs \
+                                   {}", b.is_some())),
+        }
+    });
+}

@@ -1,0 +1,223 @@
+//! Integration: execute real AOT artifacts through the PJRT runtime and
+//! check them against the native Rust implementations.
+//!
+//! Requires `make artifacts` (skipped otherwise, so `cargo test` stays
+//! green on a fresh checkout).
+
+use sparseswaps::pruning::error::layer_row_losses;
+use sparseswaps::pruning::mask::{mask_from_scores, validate, Pattern};
+use sparseswaps::pruning::saliency;
+use sparseswaps::pruning::sparseswaps::{refine_layer, SwapConfig};
+use sparseswaps::runtime::{Runtime, TensorData};
+use sparseswaps::util::prng::Rng;
+use sparseswaps::util::tensor::Matrix;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(
+        std::env::var("SPARSESWAPS_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".into()));
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn instance(seed: u64, rows: usize, d: usize) -> (Matrix, Matrix) {
+    let mut rng = Rng::new(seed);
+    let x = Matrix::from_fn(4 * d, d, |_, _| rng.gaussian_f32());
+    let mut g = Matrix::zeros(d, d);
+    g.gram_accumulate(&x);
+    let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+    (w, g)
+}
+
+/// Pad a (rows x d) matrix into the artifact's fixed chunk height.
+fn pad_chunk(m: &Matrix, chunk_rows: usize) -> Matrix {
+    assert!(m.rows <= chunk_rows);
+    let mut out = Matrix::zeros(chunk_rows, m.cols);
+    out.data[..m.data.len()].copy_from_slice(&m.data);
+    out
+}
+
+#[test]
+fn layer_loss_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::start(&dir).unwrap();
+    let entry = rt.manifest().artifact("layer_loss_d64").unwrap().clone();
+    let rows = entry.chunk_rows;
+
+    let (w, g) = instance(0, 16, 64);
+    let scores = saliency::wanda(&w, &g.diag());
+    let mask = mask_from_scores(&scores, Pattern::PerRow { keep: 26 });
+
+    // Pad rows 16..rows with kept-everything masks (zero loss).
+    let wp = pad_chunk(&w, rows);
+    let mut mp = pad_chunk(&mask, rows);
+    for r in 16..rows {
+        mp.row_mut(r).fill(1.0);
+    }
+    let out = rt.execute("layer_loss_d64", vec![
+        TensorData::from_matrix(&wp),
+        TensorData::from_matrix(&mp),
+        TensorData::from_matrix(&g),
+    ]).unwrap();
+    let losses = out[0].as_f32().unwrap();
+    let native = layer_row_losses(&w, &mask, &g);
+    for r in 0..16 {
+        let rel = (losses[r] as f64 - native[r]).abs()
+            / native[r].abs().max(1.0);
+        assert!(rel < 1e-3, "row {r}: {} vs {}", losses[r], native[r]);
+    }
+    for r in 16..rows {
+        assert!(losses[r].abs() < 1e-3);
+    }
+}
+
+#[test]
+fn swap_step_artifact_matches_native_engine() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::start(&dir).unwrap();
+    let name = "swap_step_d64_row_xla_k8";
+    let entry = rt.manifest().artifact(name).unwrap().clone();
+    let rows = entry.chunk_rows;
+
+    let (w, g) = instance(1, rows, 64);
+    let scores = saliency::wanda(&w, &g.diag());
+    let pattern = Pattern::PerRow { keep: 26 };
+    let mask = mask_from_scores(&scores, pattern);
+
+    let out = rt.execute(name, vec![
+        TensorData::from_matrix(&w),
+        TensorData::from_matrix(&mask),
+        TensorData::from_matrix(&g),
+    ]).unwrap();
+    let m_out = out[0].clone().into_matrix().unwrap();
+    let l_before = out[1].as_f32().unwrap().to_vec();
+    let l_after = out[2].as_f32().unwrap().to_vec();
+    let swaps = out[3].as_f32().unwrap().to_vec();
+
+    validate(&m_out, pattern).unwrap();
+    // Offload losses must match native evaluation of its own masks.
+    let native_before = layer_row_losses(&w, &mask, &g);
+    let native_after = layer_row_losses(&w, &m_out, &g);
+    for r in 0..rows {
+        assert!((l_before[r] as f64 - native_before[r]).abs()
+                / native_before[r].max(1.0) < 1e-3);
+        assert!((l_after[r] as f64 - native_after[r]).abs()
+                / native_after[r].max(1.0) < 1e-3);
+        assert!(l_after[r] <= l_before[r] * 1.0001 + 1e-3);
+        assert!(swaps[r] <= 8.0);
+    }
+
+    // And the native engine with the same budget reaches the same losses
+    // (tie-breaking may differ; the objective may not).
+    let mut native_mask = mask.clone();
+    let cfg = SwapConfig { t_max: 8, eps: 0.0 };
+    let out_native = refine_layer(&w, &mut native_mask, &g, pattern, &cfg,
+                                  2);
+    for r in 0..rows {
+        let a = l_after[r] as f64;
+        let b = out_native.rows[r].loss_after;
+        assert!((a - b).abs() / b.abs().max(1.0) < 5e-3,
+                "row {r}: offload {a} vs native {b}");
+        assert_eq!(swaps[r] as usize, out_native.rows[r].swaps,
+                   "row {r} swap count");
+    }
+}
+
+#[test]
+fn swap_step_nm_artifact_preserves_blocks() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::start(&dir).unwrap();
+    let name = "swap_step_d64_nm2_4_xla_k8";
+    let entry = rt.manifest().artifact(name).unwrap().clone();
+    let rows = entry.chunk_rows;
+
+    let (w, g) = instance(2, rows, 64);
+    let pattern = Pattern::Nm { n: 2, m: 4 };
+    let mask = mask_from_scores(&saliency::wanda(&w, &g.diag()), pattern);
+    let out = rt.execute(name, vec![
+        TensorData::from_matrix(&w),
+        TensorData::from_matrix(&mask),
+        TensorData::from_matrix(&g),
+    ]).unwrap();
+    let m_out = out[0].clone().into_matrix().unwrap();
+    validate(&m_out, pattern).unwrap();
+    let l_before = out[1].as_f32().unwrap();
+    let l_after = out[2].as_f32().unwrap();
+    let total_b: f32 = l_before.iter().sum();
+    let total_a: f32 = l_after.iter().sum();
+    assert!(total_a < total_b, "{total_a} !< {total_b}");
+}
+
+#[test]
+fn pallas_swap_artifact_agrees_with_xla_variant() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::start(&dir).unwrap();
+    // Pallas variants exist only for the designated width (manifest
+    // `pallas_widths`); 128 in the default build.
+    let pallas = "swap_step_d128_row_pallas_k1";
+    let xla_ = "swap_step_d128_row_xla_k1";
+    if rt.manifest().artifact(pallas).is_err() {
+        return;
+    }
+    let rows = rt.manifest().artifact(pallas).unwrap().chunk_rows;
+    let (w, g) = instance(3, rows, 128);
+    let mask = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                Pattern::PerRow { keep: 51 });
+    let inputs = |m: &Matrix| vec![
+        TensorData::from_matrix(&w),
+        TensorData::from_matrix(m),
+        TensorData::from_matrix(&g),
+    ];
+    let out_p = rt.execute(pallas, inputs(&mask)).unwrap();
+    let out_x = rt.execute(xla_, inputs(&mask)).unwrap();
+    let la_p = out_p[2].as_f32().unwrap();
+    let la_x = out_x[2].as_f32().unwrap();
+    for r in 0..rows {
+        assert!((la_p[r] - la_x[r]).abs() / la_x[r].abs().max(1.0) < 5e-3,
+                "row {r}: pallas {} vs xla {}", la_p[r], la_x[r]);
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_signatures() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::start(&dir).unwrap();
+    let err = rt.execute("layer_loss_d64", vec![
+        TensorData::scalar_f32(1.0),
+    ]);
+    assert!(err.is_err());
+    let entry = rt.manifest().artifact("layer_loss_d64").unwrap().clone();
+    let rows = entry.chunk_rows;
+    // Wrong dims on the gram input.
+    let err2 = rt.execute("layer_loss_d64", vec![
+        TensorData::F32 { dims: vec![rows, 64],
+                          data: vec![0.0; rows * 64] },
+        TensorData::F32 { dims: vec![rows, 64],
+                          data: vec![1.0; rows * 64] },
+        TensorData::F32 { dims: vec![63, 64], data: vec![0.0; 63 * 64] },
+    ]);
+    assert!(err2.is_err());
+}
+
+#[test]
+fn service_stats_accumulate() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::start(&dir).unwrap();
+    let before = rt.stats();
+    let (w, g) = instance(4, 8, 64);
+    let entry = rt.manifest().artifact("layer_loss_d64").unwrap().clone();
+    let wp = pad_chunk(&w, entry.chunk_rows);
+    let mp = {
+        let mut m = Matrix::zeros(entry.chunk_rows, 64);
+        m.data.fill(1.0);
+        m
+    };
+    rt.execute("layer_loss_d64", vec![
+        TensorData::from_matrix(&wp),
+        TensorData::from_matrix(&mp),
+        TensorData::from_matrix(&g),
+    ]).unwrap();
+    let after = rt.stats();
+    assert_eq!(after.executions, before.executions + 1);
+    assert!(after.compiles >= 1);
+    assert!(after.exec_nanos > 0);
+}
