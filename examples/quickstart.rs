@@ -1,15 +1,20 @@
 //! Quickstart: refine a single layer's pruning mask with SparseSwaps.
 //!
-//! Uses the native (pure-Rust) engine on synthetic calibration data, so
-//! it runs without AOT artifacts.  Demonstrates the core objects: Gram
-//! matrix, Wanda warmstart, Algorithm 1, and the exact per-row loss.
+//! Uses the native (pure-Rust) incremental active-set engine on
+//! synthetic calibration data, so it runs without AOT artifacts.
+//! Demonstrates the core objects: Gram matrix, Wanda warmstart,
+//! Algorithm 1, the exact per-row loss, and the `RefineEngine` trait
+//! with Table-3 style iteration checkpoints.
 //!
 //!   cargo run --release --example quickstart
 
+use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::error::layer_loss;
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
 use sparseswaps::pruning::saliency;
-use sparseswaps::pruning::sparseswaps::{refine_layer, SwapConfig};
+use sparseswaps::pruning::sparseswaps::{
+    refine_layer, NativeEngine, SwapConfig,
+};
 use sparseswaps::util::prng::Rng;
 use sparseswaps::util::tensor::Matrix;
 
@@ -40,11 +45,12 @@ fn main() {
     // Wanda warmstart at 60% per-row sparsity: |W_ij| * sqrt(G_jj).
     let pattern = Pattern::per_row_sparsity(d_in, 0.6);
     let scores = saliency::wanda(&w, &g.diag());
-    let mut mask = mask_from_scores(&scores, pattern);
-    let warmstart_loss = layer_loss(&w, &mask, &g);
+    let warm_mask = mask_from_scores(&scores, pattern);
+    let warmstart_loss = layer_loss(&w, &warm_mask, &g);
 
     // SparseSwaps: exact 1-swap refinement (Algorithm 1).
     let cfg = SwapConfig { t_max: 100, eps: 0.0 };
+    let mut mask = warm_mask.clone();
     let outcome = refine_layer(&w, &mut mask, &g, pattern, &cfg, 4);
     let refined_loss = layer_loss(&w, &mask, &g);
 
@@ -57,4 +63,20 @@ fn main() {
              outcome.total_swaps(),
              outcome.rows.iter().filter(|r| r.converged).count());
     assert!(refined_loss < warmstart_loss);
+
+    // Same engine through the uniform RefineEngine trait, capturing
+    // mask snapshots after 1, 5 and 25 swaps/row (paper Table 3).
+    let ctx = LayerContext {
+        w: &w, g: &g, stats: None, pattern, t_max: 100, threads: 4,
+    };
+    let mut mask2 = warm_mask.clone();
+    let out = NativeEngine::default()
+        .refine(&ctx, &mut mask2, &[1, 5, 25])
+        .expect("native engine is infallible");
+    println!("  loss trajectory (swaps/row -> loss):");
+    for (cp, snap) in &out.snapshots {
+        println!("    {cp:>3} -> {:.2}", layer_loss(&w, snap, &g));
+    }
+    // The trait path and the direct call are the same engine.
+    assert_eq!(mask2.data, mask.data);
 }

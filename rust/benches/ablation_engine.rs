@@ -1,7 +1,11 @@
 //! Ablation B (DESIGN.md): swap-engine comparison on one realistic layer
-//! — fused-XLA offload (k=1 vs k=8 per call), Pallas-kernel offload, and
-//! the native Rust engine.  Measures wall-clock per accepted swap and
-//! verifies all engines land on comparable losses.
+//! — fused-XLA offload (k=1 vs k=8 per call), Pallas-kernel offload, the
+//! legacy full-rescan native loop, and the incremental active-set native
+//! engine.  Measures wall-clock per accepted swap plus rows/s and
+//! swaps/s throughput, verifies all engines land on comparable losses
+//! (the two native loops must produce *identical* masks), and emits the
+//! numbers to `reports/ablation_engine.json` so the incremental-engine
+//! speedup is tracked in the perf trajectory.
 mod common;
 
 use std::time::Instant;
@@ -9,8 +13,11 @@ use std::time::Instant;
 use sparseswaps::coordinator::{refine_layer_offload, OffloadConfig};
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
 use sparseswaps::pruning::saliency;
-use sparseswaps::pruning::sparseswaps::{refine_layer, SwapConfig};
+use sparseswaps::pruning::sparseswaps::{
+    refine_layer, refine_layer_rescan, LayerOutcome, SwapConfig,
+};
 use sparseswaps::util::benchlib::Table;
+use sparseswaps::util::jsonlite::Json;
 use sparseswaps::util::prng::Rng;
 use sparseswaps::util::tensor::Matrix;
 
@@ -31,8 +38,34 @@ fn main() {
         let mut table = Table::new(
             format!("Ablation B — engines on one layer ({rows}x{d}, 60%, \
                      T_max={t_max})"),
-            &["Engine", "seconds", "total swaps", "µs/swap",
-              "rel. reduction"]);
+            &["Engine", "seconds", "total swaps", "µs/swap", "rows/s",
+              "swaps/s", "rel. reduction"]);
+        let mut engines_json: Vec<Json> = Vec::new();
+        let mut record = |table: &mut Table, label: &str, secs: f64,
+                          outcome: &LayerOutcome| {
+            let secs_safe = secs.max(1e-9);
+            let swaps = outcome.total_swaps().max(1);
+            let rows_per_s = rows as f64 / secs_safe;
+            let swaps_per_s = swaps as f64 / secs_safe;
+            table.row(vec![
+                label.to_string(),
+                format!("{secs:.3}"),
+                swaps.to_string(),
+                format!("{:.1}", 1e6 * secs / swaps as f64),
+                format!("{rows_per_s:.0}"),
+                format!("{swaps_per_s:.0}"),
+                format!("{:.2}%", 100.0 * outcome.relative_reduction()),
+            ]);
+            engines_json.push(Json::obj(vec![
+                ("engine", Json::str(label)),
+                ("seconds", Json::num(secs)),
+                ("swaps", Json::num(outcome.total_swaps() as f64)),
+                ("rows_per_s", Json::num(rows_per_s)),
+                ("swaps_per_s", Json::num(swaps_per_s)),
+                ("rel_reduction",
+                 Json::num(outcome.relative_reduction())),
+            ]));
+        };
 
         // Offload engines (require artifacts at this width).
         for impl_name in ["xla", "pallas"] {
@@ -49,33 +82,66 @@ fn main() {
                 &ctx.rt, &w, &mut mask, &g, pattern, &cfg, &[])
                 .map_err(|e| e.to_string())?;
             let secs = t0.elapsed().as_secs_f64();
-            let swaps = outcome.total_swaps().max(1);
-            table.row(vec![
-                format!("offload[{impl_name}]"),
-                format!("{secs:.3}"),
-                swaps.to_string(),
-                format!("{:.1}", 1e6 * secs / swaps as f64),
-                format!("{:.2}%", 100.0 * outcome.relative_reduction()),
-            ]);
+            record(&mut table, &format!("offload[{impl_name}]"), secs,
+                   &outcome);
         }
-        // Native engine, 1 and N threads.
+
+        // Native loops: legacy full-rescan vs incremental active-set,
+        // at 1 and 4 row-parallel threads.  Masks must agree bitwise.
+        let cfg = SwapConfig { t_max, eps: 0.0 };
+        let mut rescan_1t = f64::NAN;
+        let mut incremental_1t = f64::NAN;
+        let mut mask_rescan: Option<Matrix> = None;
         for threads in [1usize, 4] {
             let mut mask = warm.clone();
-            let cfg = SwapConfig { t_max, eps: 0.0 };
+            let t0 = Instant::now();
+            let outcome = refine_layer_rescan(&w, &mut mask, &g, pattern,
+                                              &cfg, threads);
+            let secs = t0.elapsed().as_secs_f64();
+            if threads == 1 {
+                rescan_1t = secs;
+                mask_rescan = Some(mask.clone());
+            }
+            record(&mut table, &format!("rescan[{threads}t]"), secs,
+                   &outcome);
+        }
+        for threads in [1usize, 4] {
+            let mut mask = warm.clone();
             let t0 = Instant::now();
             let outcome = refine_layer(&w, &mut mask, &g, pattern, &cfg,
                                        threads);
             let secs = t0.elapsed().as_secs_f64();
-            let swaps = outcome.total_swaps().max(1);
-            table.row(vec![
-                format!("native[{threads}t]"),
-                format!("{secs:.3}"),
-                swaps.to_string(),
-                format!("{:.1}", 1e6 * secs / swaps as f64),
-                format!("{:.2}%", 100.0 * outcome.relative_reduction()),
-            ]);
+            if threads == 1 {
+                incremental_1t = secs;
+            }
+            if mask.data != mask_rescan.as_ref().unwrap().data {
+                return Err(format!(
+                    "incremental mask diverged from rescan reference \
+                     at {threads} threads"));
+            }
+            record(&mut table, &format!("incremental[{threads}t]"), secs,
+                   &outcome);
         }
+        let speedup = rescan_1t / incremental_1t.max(1e-9);
+        println!("incremental active-set speedup vs rescan (1t): \
+                  {speedup:.2}x");
         table.print();
-        Ok(vec![table.to_markdown()])
+
+        let json = Json::obj(vec![
+            ("bench", Json::str("ablation_engine")),
+            ("rows", Json::num(rows as f64)),
+            ("d", Json::num(d as f64)),
+            ("t_max", Json::num(t_max as f64)),
+            ("engines", Json::Arr(engines_json)),
+            ("incremental_speedup_1t", Json::num(speedup)),
+        ]);
+        std::fs::create_dir_all("reports").ok();
+        std::fs::write("reports/ablation_engine.json",
+                       format!("{json}\n"))
+            .map_err(|e| e.to_string())?;
+
+        Ok(vec![table.to_markdown(),
+                format!("\nincremental active-set speedup vs rescan \
+                         (1t): **{speedup:.2}x**\n")])
     });
 }

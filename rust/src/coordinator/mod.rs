@@ -1,11 +1,12 @@
 //! Layer-3 coordinator: the pruning pipeline (layer scheduler +
-//! calibration + warmstart + refinement), the offload swap engine, and
-//! the trainer that drives the AOT train-step artifact.
+//! calibration + warmstart + refinement through `RefineEngine`s), the
+//! offload swap engine, and the trainer that drives the AOT train-step
+//! artifact.
 
 pub mod pipeline;
 pub mod swaploop;
 pub mod trainer;
 
 pub use pipeline::{prune, PatternKind, PruneConfig, PruneReport, Refiner};
-pub use swaploop::{refine_layer_offload, OffloadConfig};
+pub use swaploop::{refine_layer_offload, OffloadConfig, OffloadEngine};
 pub use trainer::{train, TrainConfig, TrainReport};

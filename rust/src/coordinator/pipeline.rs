@@ -6,9 +6,17 @@
 //!     for each prunable layer:
 //!       warmstart mask (magnitude / Wanda / RIA — computed natively
 //!         from W and diag(G));
-//!       refinement: SparseSwaps (offload via HLO swap artifacts, or the
-//!         native Rust engine), DSnoT, or none;
+//!       refinement through the layer's [`RefineEngine`] (SparseSwaps
+//!         offload or native, DSnoT, or none);
 //!       record exact per-layer loss before/after and apply the mask.
+//!
+//! Refinement is per-layer embarrassingly parallel (the paper's row
+//! decoupling extends across layers once the block's Gram statistics
+//! are fixed), so layers within a block are scheduled concurrently on
+//! the shared [`ThreadPool`] whenever the engine runs without the PJRT
+//! runtime, with the row-thread budget split across the concurrent
+//! jobs.  Per-row results are independent of scheduling, so masks are
+//! bit-identical to the serial schedule.
 //!
 //! One-shot mode instead calibrates once on the dense model and prunes
 //! every block from those statistics (Wanda-style; cheaper, slightly
@@ -18,17 +26,21 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
-use crate::coordinator::swaploop::{refine_layer_offload, OffloadConfig};
+use crate::coordinator::swaploop::OffloadEngine;
 use crate::data::{Dataset, Split};
 use crate::gram::{accumulate, GramStats};
 use crate::model::store::{MaskSet, ParamStore};
-use crate::pruning::dsnot::{self, DsnotConfig};
+use crate::pruning::dsnot::{DsnotEngine, FeatureStats};
+use crate::pruning::engine::{
+    LayerContext, NoopEngine, RefineEngine, RefineOutcome,
+};
 use crate::pruning::error::relative_reduction;
 use crate::pruning::mask::{mask_from_scores, validate, Pattern};
 use crate::pruning::saliency::{self, Criterion};
-use crate::pruning::sparseswaps::{self, SwapConfig};
+use crate::pruning::sparseswaps::NativeEngine;
+use crate::runtime::manifest::PrunableLayer;
 use crate::runtime::service::{Runtime, RuntimeError};
-use crate::util::threadpool::default_threads;
+use crate::util::threadpool::{default_threads, ThreadPool};
 
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Refiner {
@@ -52,6 +64,32 @@ impl Refiner {
             Refiner::Dsnot => "dsnot".into(),
         }
     }
+
+    /// Engine construction — the pipeline's entire refiner dispatch.
+    /// Non-offload engines come from the single [`Self::local_engine`]
+    /// registry, so adding a refiner means one constructor line there.
+    pub fn engine<'a>(&self, rt: &'a Runtime)
+        -> Box<dyn RefineEngine + 'a> {
+        match self {
+            Refiner::SparseSwapsOffload { impl_name } =>
+                Box::new(OffloadEngine::new(rt, impl_name.clone())),
+            local => local.local_engine()
+                .expect("non-offload refiners are runtime-free"),
+        }
+    }
+
+    /// Runtime-free engine construction for pool workers; `None` for
+    /// engines that must stay on the scheduling thread (offload holds
+    /// the PJRT handle, which serialises execution anyway).
+    fn local_engine(&self) -> Option<Box<dyn RefineEngine + Send>> {
+        match self {
+            Refiner::None => Some(Box::new(NoopEngine)),
+            Refiner::SparseSwapsNative =>
+                Some(Box::new(NativeEngine::default())),
+            Refiner::Dsnot => Some(Box::new(DsnotEngine::default())),
+            Refiner::SparseSwapsOffload { .. } => None,
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -67,6 +105,10 @@ pub struct PruneConfig {
     /// Mask snapshots at these cumulative iteration counts (Table 3).
     pub checkpoints: Vec<usize>,
     pub threads: usize,
+    /// Schedule independent layers of a block concurrently on the
+    /// thread pool (runtime-free engines only).  Masks are identical
+    /// either way; disable to get per-layer wall-clock timings.
+    pub layer_parallel: bool,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -106,6 +148,7 @@ impl Default for PruneConfig {
             sequential: true,
             checkpoints: Vec::new(),
             threads: default_threads(),
+            layer_parallel: true,
         }
     }
 }
@@ -133,6 +176,8 @@ impl LayerReport {
 pub struct PruneReport {
     pub layers: Vec<LayerReport>,
     pub calib_seconds: f64,
+    /// Summed per-layer refinement time (CPU seconds under the
+    /// layer-parallel schedule, wall seconds under the serial one).
     pub refine_seconds: f64,
     pub warmstart_seconds: f64,
     /// Mask snapshots per checkpoint (whole-model MaskSets).
@@ -159,6 +204,97 @@ impl PruneReport {
     }
 }
 
+/// One layer's inputs, owned so refinement can move to a pool worker.
+struct LayerJob {
+    li: usize,
+    layer: PrunableLayer,
+    w: crate::util::tensor::Matrix,
+    g: crate::util::tensor::Matrix,
+    stats: Option<FeatureStats>,
+    pattern: Pattern,
+    mask: crate::util::tensor::Matrix,
+}
+
+struct LayerResult {
+    li: usize,
+    pattern: Pattern,
+    mask: crate::util::tensor::Matrix,
+    outcome: RefineOutcome,
+    report: LayerReport,
+}
+
+/// Refine one prepared layer through an engine and assemble its report.
+fn refine_job(engine: &dyn RefineEngine, job: LayerJob, t_max: usize,
+              threads: usize, checkpoints: &[usize])
+    -> Result<LayerResult, String> {
+    let LayerJob { li, layer, w, g, stats, pattern, mut mask } = job;
+    let ctx = LayerContext {
+        w: &w,
+        g: &g,
+        stats: stats.as_ref(),
+        pattern,
+        t_max,
+        threads,
+    };
+    let t0 = Instant::now();
+    let outcome = engine.refine(&ctx, &mut mask, checkpoints)
+        .map_err(|e| format!("{}: {e}", layer.name))?;
+    let seconds = t0.elapsed().as_secs_f64();
+    let report = LayerReport {
+        name: layer.name.clone(),
+        layer_type: layer.layer_type.clone(),
+        block: layer.block,
+        loss_warmstart: outcome.layer.total_before(),
+        loss_refined: outcome.layer.total_after(),
+        swaps: outcome.layer.total_swaps(),
+        rows_converged: outcome.layer.rows_converged(),
+        rows: layer.d_out,
+        seconds,
+    };
+    Ok(LayerResult { li, pattern, mask, outcome, report })
+}
+
+/// Refine a block's layers concurrently on the pool.  Each job builds
+/// its runtime-free engine; the row-thread budget is split across the
+/// concurrent jobs so a narrow block (fewer layers than cores) keeps
+/// the same total parallelism as the serial schedule.  Row results are
+/// independent of thread counts, so masks are identical either way.
+fn refine_block_parallel(pool: &ThreadPool, jobs: Vec<LayerJob>,
+                         refiner: &Refiner, t_max: usize,
+                         threads: usize, checkpoints: &[usize])
+    -> Result<Vec<LayerResult>, RuntimeError> {
+    let n_jobs = jobs.len();
+    let row_threads = (threads / n_jobs.max(1)).max(1);
+    let (tx, rx) = std::sync::mpsc::channel();
+    for job in jobs {
+        let tx = tx.clone();
+        let refiner = refiner.clone();
+        let checkpoints = checkpoints.to_vec();
+        pool.submit(move || {
+            let engine = refiner.local_engine()
+                .expect("offload engines are scheduled serially");
+            let res = refine_job(engine.as_ref(), job, t_max,
+                                 row_threads, &checkpoints);
+            let _ = tx.send(res);
+        });
+    }
+    drop(tx);
+    pool.wait();
+    let mut results = Vec::new();
+    for res in rx {
+        results.push(res.map_err(RuntimeError::Msg)?);
+    }
+    // A panicked job is contained by the pool but sends no result;
+    // surface that instead of returning a silently incomplete mask set.
+    if results.len() != n_jobs {
+        return Err(RuntimeError::Msg(format!(
+            "layer refinement lost {} of {} jobs (worker panic)",
+            n_jobs - results.len(), n_jobs)));
+    }
+    results.sort_by_key(|r| r.li);
+    Ok(results)
+}
+
 /// Run the pruning pipeline.  `store` keeps its dense weights; the
 /// resulting masks are returned (apply with `store.masked(&masks)`).
 pub fn prune(rt: &Runtime, store: &ParamStore, ds: &Dataset,
@@ -168,9 +304,25 @@ pub fn prune(rt: &Runtime, store: &ParamStore, ds: &Dataset,
     let calib = ds.batches(&meta, Split::Calibration, cfg.calib_batches);
     let mut masks = MaskSet::all_ones(&meta);
     let mut report = PruneReport::default();
-    for &cp in &cfg.checkpoints {
-        report.snapshots.insert(cp, MaskSet::all_ones(&meta));
-    }
+    // Snapshot capture is tracked explicitly per (checkpoint, layer):
+    // `None` means "not captured yet" and is backfilled with the final
+    // layer mask at the end.  (The old implementation used "mask is
+    // all-ones" as the not-captured sentinel, which clobbered
+    // legitimately dense snapshots.)
+    let n_layers = meta.prunable.len();
+    let mut captured: BTreeMap<usize,
+                               Vec<Option<crate::util::tensor::Matrix>>> =
+        cfg.checkpoints.iter()
+            .map(|&cp| (cp, (0..n_layers).map(|_| None).collect()))
+            .collect();
+
+    let use_pool = cfg.layer_parallel && cfg.threads > 1
+        && cfg.refiner.local_engine().is_some();
+    let pool = if use_pool {
+        Some(ThreadPool::new(cfg.threads))
+    } else {
+        None
+    };
 
     let blocks: Vec<usize> = (0..meta.n_blocks).collect();
     let mut stats_oneshot: Option<GramStats> = None;
@@ -196,135 +348,74 @@ pub fn prune(rt: &Runtime, store: &ParamStore, ds: &Dataset,
             .filter(|(_, l)| l.block == b)
             .map(|(i, l)| (i, l.clone()))
             .collect();
+
+        // Warmstart every layer first (cheap, serial), then refine.
+        let mut jobs = Vec::with_capacity(layers.len());
         for (li, layer) in layers {
             let w = store.weight(&layer);
             let g = stats.gram_for(&layer);
             let pattern = cfg.pattern_kind.pattern_for(layer.d_in);
-
             let t0 = Instant::now();
             let scores = saliency::scores(cfg.criterion, &w, &g.diag());
-            let mut mask = mask_from_scores(&scores, pattern);
+            let mask = mask_from_scores(&scores, pattern);
             report.warmstart_seconds += t0.elapsed().as_secs_f64();
-
-            let t1 = Instant::now();
-            let mut layer_report = LayerReport {
-                name: layer.name.clone(),
-                layer_type: layer.layer_type.clone(),
-                block: layer.block,
-                loss_warmstart: 0.0,
-                loss_refined: 0.0,
-                swaps: 0,
-                rows_converged: 0,
-                rows: layer.d_out,
-                seconds: 0.0,
+            let fstats = if cfg.refiner == Refiner::Dsnot {
+                Some(stats.feature_stats_for(&layer))
+            } else {
+                None
             };
-            match &cfg.refiner {
-                Refiner::None => {
-                    let loss = crate::pruning::error::layer_loss(
-                        &w, &mask, &g);
-                    layer_report.loss_warmstart = loss;
-                    layer_report.loss_refined = loss;
-                }
-                Refiner::SparseSwapsOffload { impl_name } => {
-                    let ocfg = OffloadConfig {
-                        impl_name: impl_name.clone(),
-                        t_max: cfg.t_max,
-                    };
-                    let (outcome, snaps) = refine_layer_offload(
-                        rt, &w, &mut mask, &g, pattern, &ocfg,
-                        &cfg.checkpoints)?;
-                    layer_report.loss_warmstart = outcome.total_before();
-                    layer_report.loss_refined = outcome.total_after();
-                    layer_report.swaps = outcome.total_swaps();
-                    layer_report.rows_converged = outcome.rows.iter()
-                        .filter(|r| r.converged).count();
-                    for (cp, snap) in snaps {
-                        if let Some(ms) = report.snapshots.get_mut(&cp) {
-                            ms.masks[li] = snap;
-                        }
-                    }
-                }
-                Refiner::SparseSwapsNative => {
-                    // Segment the budget at checkpoint boundaries so the
-                    // native engine supports Table-3 style snapshots too
-                    // (restarting refine_layer is exact: c is recomputed
-                    // from the current mask each call).
-                    let mut stops: Vec<usize> = cfg.checkpoints.iter()
-                        .copied().filter(|&c| c <= cfg.t_max).collect();
-                    stops.push(cfg.t_max);
-                    stops.sort_unstable();
-                    stops.dedup();
-                    let mut done = 0usize;
-                    let mut first: Option<Vec<f64>> = None;
-                    let mut total_swaps = 0usize;
-                    let mut last_outcome = None;
-                    for &stop in &stops {
-                        if stop > done {
-                            let scfg = SwapConfig { t_max: stop - done,
-                                                    eps: 0.0 };
-                            let outcome = sparseswaps::refine_layer(
-                                &w, &mut mask, &g, pattern, &scfg,
-                                cfg.threads);
-                            if first.is_none() {
-                                first = Some(outcome.rows.iter()
-                                    .map(|r| r.loss_before).collect());
-                            }
-                            total_swaps += outcome.total_swaps();
-                            last_outcome = Some(outcome);
-                            done = stop;
-                        }
-                        if cfg.checkpoints.contains(&stop) {
-                            if let Some(ms) =
-                                report.snapshots.get_mut(&stop) {
-                                ms.masks[li] = mask.clone();
-                            }
-                        }
-                    }
-                    let outcome = last_outcome.expect("t_max > 0");
-                    layer_report.loss_warmstart = first
-                        .map(|f| f.iter().sum())
-                        .unwrap_or_default();
-                    layer_report.loss_refined = outcome.total_after();
-                    layer_report.swaps = total_swaps;
-                    layer_report.rows_converged = outcome.rows.iter()
-                        .filter(|r| r.converged).count();
-                }
-                Refiner::Dsnot => {
-                    let before = crate::pruning::error::layer_loss(
-                        &w, &mask, &g);
-                    let fstats = stats.feature_stats_for(&layer);
-                    dsnot::refine_layer(&w, &mut mask, &fstats, pattern,
-                                        &DsnotConfig::default());
-                    layer_report.loss_warmstart = before;
-                    layer_report.loss_refined =
-                        crate::pruning::error::layer_loss(&w, &mask, &g);
-                }
-            }
-            layer_report.seconds = t1.elapsed().as_secs_f64();
-            report.refine_seconds += layer_report.seconds;
+            jobs.push(LayerJob {
+                li, layer, w, g, stats: fstats, pattern, mask,
+            });
+        }
 
+        let results = if let Some(pool) = &pool {
+            refine_block_parallel(pool, jobs, &cfg.refiner, cfg.t_max,
+                                  cfg.threads, &cfg.checkpoints)?
+        } else {
+            let engine = cfg.refiner.engine(rt);
+            let mut out = Vec::with_capacity(jobs.len());
+            for job in jobs {
+                out.push(refine_job(engine.as_ref(), job, cfg.t_max,
+                                    cfg.threads, &cfg.checkpoints)
+                         .map_err(RuntimeError::Msg)?);
+            }
+            out
+        };
+
+        for res in results {
+            let LayerResult { li, pattern, mask, outcome, report: lr } =
+                res;
+            report.refine_seconds += lr.seconds;
             validate(&mask, pattern)
                 .map_err(|e| RuntimeError::Msg(format!(
-                    "{}: {e}", layer.name)))?;
+                    "{}: {e}", lr.name)))?;
             crate::log_debug!(
                 "prune[{}] {} loss {:.4} -> {:.4} ({:+.1}%)",
-                meta.name, layer.name, layer_report.loss_warmstart,
-                layer_report.loss_refined,
-                -100.0 * layer_report.relative_reduction());
+                meta.name, lr.name, lr.loss_warmstart, lr.loss_refined,
+                -100.0 * lr.relative_reduction());
+            for (cp, snap) in outcome.snapshots {
+                if let Some(slots) = captured.get_mut(&cp) {
+                    slots[li] = Some(snap);
+                }
+            }
             masks.masks[li] = mask;
-            report.layers.push(layer_report);
+            report.layers.push(lr);
         }
     }
-    // Checkpoint snapshots cover layers only up to their capture point;
-    // fill the remainder with the final masks so each snapshot is a
+
+    // Each snapshot covers layers only up to its capture point; fill the
+    // never-captured slots with the final masks so every snapshot is a
     // complete, valid model mask.
     let final_masks = masks.clone();
-    for (_, snap) in report.snapshots.iter_mut() {
-        for (i, m) in snap.masks.iter_mut().enumerate() {
-            if m.data.iter().all(|&v| v == 1.0) {
-                *m = final_masks.masks[i].clone();
-            }
-        }
+    for (cp, slots) in captured {
+        let snapshot = MaskSet {
+            masks: slots.into_iter().enumerate()
+                .map(|(i, m)| m.unwrap_or_else(
+                    || final_masks.masks[i].clone()))
+                .collect(),
+        };
+        report.snapshots.insert(cp, snapshot);
     }
     Ok((masks, report))
 }
@@ -349,5 +440,22 @@ mod tests {
         assert_eq!(pk.pattern_for(64), Pattern::PerRow { keep: 32 });
         let nm = PatternKind::Nm { n: 2, m: 4 };
         assert_eq!(nm.pattern_for(64), Pattern::Nm { n: 2, m: 4 });
+    }
+
+    #[test]
+    fn local_engines_cover_runtime_free_refiners() {
+        assert!(Refiner::None.local_engine().is_some());
+        assert!(Refiner::SparseSwapsNative.local_engine().is_some());
+        assert!(Refiner::Dsnot.local_engine().is_some());
+        assert!(Refiner::SparseSwapsOffload { impl_name: "xla".into() }
+                .local_engine().is_none());
+    }
+
+    #[test]
+    fn engine_labels_match_refiner_labels() {
+        for r in [Refiner::None, Refiner::SparseSwapsNative,
+                  Refiner::Dsnot] {
+            assert_eq!(r.local_engine().unwrap().name(), r.label());
+        }
     }
 }

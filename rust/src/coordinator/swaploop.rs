@@ -14,12 +14,17 @@
 //!   * rows that converge (fewer than k swaps accepted in a call) are
 //!     compacted out of the active set, so late iterations run on
 //!     ever-smaller chunks;
-//!   * optional mask snapshots at given cumulative-iteration checkpoints
-//!     (Table 3's "perplexity vs number of 1-swap iterations" needs the
-//!     mask after 1, 2, 5, ... swaps without re-running the pipeline).
+//!   * checkpoint segmentation (Table 3's "perplexity vs number of
+//!     1-swap iterations") is delegated to the shared
+//!     [`drive_segments`] driver, the same one the native engine uses —
+//!     this module only decides how far one artifact call advances.
 
 use std::collections::BTreeMap;
 
+use crate::pruning::engine::{
+    drive_segments, LayerContext, RefineEngine, RefineError, RefineOutcome,
+};
+use crate::pruning::error::row_loss;
 use crate::pruning::mask::Pattern;
 use crate::pruning::sparseswaps::{LayerOutcome, RowOutcome};
 use crate::runtime::service::{Runtime, RuntimeError};
@@ -39,133 +44,169 @@ impl Default for OffloadConfig {
     }
 }
 
+#[derive(Clone)]
+struct RowState {
+    used: usize,
+    converged: bool,
+    loss_before: f64,
+    loss_after: f64,
+}
+
+/// SparseSwaps through the HLO swap artifacts, as a [`RefineEngine`].
+///
+/// Holds the runtime handle; `ctx.threads` is ignored because the PJRT
+/// service serialises artifact execution anyway (row parallelism lives
+/// *inside* the artifact).
+pub struct OffloadEngine<'rt> {
+    rt: &'rt Runtime,
+    impl_name: String,
+}
+
+impl<'rt> OffloadEngine<'rt> {
+    pub fn new(rt: &'rt Runtime, impl_name: impl Into<String>) -> Self {
+        Self { rt, impl_name: impl_name.into() }
+    }
+}
+
+impl RefineEngine for OffloadEngine<'_> {
+    fn name(&self) -> String {
+        format!("sparseswaps[{}]", self.impl_name)
+    }
+
+    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
+              checkpoints: &[usize])
+        -> Result<RefineOutcome, RefineError> {
+        let (w, g) = (ctx.w, ctx.g);
+        let d = w.cols;
+        let tag = ctx.pattern.artifact_tag();
+        let manifest = self.rt.manifest();
+        let k8 = manifest
+            .find_swap_artifact(d, &tag, &self.impl_name, 8)
+            .map_err(|e| RefineError::Msg(e.to_string()))?
+            .clone();
+        let k1 = manifest
+            .find_swap_artifact(d, &tag, &self.impl_name, 1)
+            .map_err(|e| RefineError::Msg(e.to_string()))?
+            .clone();
+        assert_eq!(k8.chunk_rows, k1.chunk_rows);
+        let chunk = k8.chunk_rows;
+        let g_tensor = TensorData::from_matrix(g);
+
+        let mut rows: Vec<RowState> = (0..w.rows).map(|_| RowState {
+            used: 0,
+            converged: false,
+            loss_before: f64::NAN,
+            loss_after: f64::NAN,
+        }).collect();
+
+        let snapshots = drive_segments(ctx.t_max, checkpoints, mask,
+                                       |mask, budget| {
+            // Use the k8 artifact while >= 8 iterations remain, else k1
+            // (keeps T_max bookkeeping exact for arbitrary budgets).
+            let (entry, k) = if budget >= k8.k_iters && k8.k_iters > 1 {
+                (&k8, k8.k_iters)
+            } else {
+                (&k1, k1.k_iters)
+            };
+            let active: Vec<usize> = rows.iter().enumerate()
+                .filter(|(_, r)| !r.converged)
+                .map(|(i, _)| i)
+                .collect();
+            if active.is_empty() {
+                // Stationary: the driver jumps to the next boundary so
+                // remaining checkpoints still get recorded.
+                return Ok(0);
+            }
+            for group in active.chunks(chunk) {
+                // Pack the chunk (pad with all-kept rows = no-op).
+                let mut wc = Matrix::zeros(chunk, d);
+                let mut mc = Matrix::from_fn(chunk, d, |_, _| 1.0);
+                for (slot, &ri) in group.iter().enumerate() {
+                    wc.row_mut(slot).copy_from_slice(w.row(ri));
+                    mc.row_mut(slot).copy_from_slice(mask.row(ri));
+                }
+                let out = self.rt.execute(&entry.name, vec![
+                    TensorData::from_matrix(&wc),
+                    TensorData::from_matrix(&mc),
+                    g_tensor.clone(),
+                ]).map_err(|e| RefineError::Msg(e.to_string()))?;
+                let m_out = out[0].as_f32()
+                    .map_err(|e| RefineError::Msg(e.to_string()))?;
+                let l_before = out[1].as_f32()
+                    .map_err(|e| RefineError::Msg(e.to_string()))?;
+                let l_after = out[2].as_f32()
+                    .map_err(|e| RefineError::Msg(e.to_string()))?;
+                let swaps = out[3].as_f32()
+                    .map_err(|e| RefineError::Msg(e.to_string()))?;
+                for (slot, &ri) in group.iter().enumerate() {
+                    mask.row_mut(ri)
+                        .copy_from_slice(&m_out[slot * d..(slot + 1) * d]);
+                    let r = &mut rows[ri];
+                    if r.loss_before.is_nan() {
+                        r.loss_before = l_before[slot] as f64;
+                    }
+                    r.loss_after = l_after[slot] as f64;
+                    let s = swaps[slot] as usize;
+                    r.used += s;
+                    if s < k {
+                        // Fewer accepted swaps than iterations executed:
+                        // the row hit a 1-swap local optimum inside the
+                        // call.
+                        r.converged = true;
+                    }
+                }
+            }
+            // Each call executes exactly `k` iterations per active row.
+            Ok(k)
+        })?;
+
+        // Rows the loop never touched (t_max == 0, or a row that was
+        // never packed into a chunk) still carry NaN sentinels.  Compute
+        // their true loss explicitly — the old code collapsed these to
+        // 0.0 via NaN.max(0.0), reporting zero loss where the native
+        // engine reports the real one.
+        for (ri, r) in rows.iter_mut().enumerate() {
+            if r.loss_before.is_nan() {
+                // Both sentinels are always set together by the chunk
+                // loop, so this is the only recoverable state.
+                let l = row_loss(w.row(ri), mask.row(ri), g);
+                r.loss_before = l;
+                r.loss_after = l;
+            }
+        }
+
+        let layer = LayerOutcome {
+            rows: rows.into_iter().map(|r| RowOutcome {
+                loss_before: r.loss_before,
+                loss_after: r.loss_after,
+                swaps: r.used,
+                converged: r.converged,
+            }).collect(),
+        };
+        Ok(RefineOutcome { layer, snapshots })
+    }
+}
+
 /// Refine every row of (w, mask) against Gram matrix g.  Returns the
 /// outcome plus mask snapshots at the requested iteration checkpoints.
+/// Thin wrapper over [`OffloadEngine`] kept for benches and direct
+/// callers; the pipeline goes through the trait.
 pub fn refine_layer_offload(
     rt: &Runtime, w: &Matrix, mask: &mut Matrix, g: &Matrix,
     pattern: Pattern, cfg: &OffloadConfig, checkpoints: &[usize],
 ) -> Result<(LayerOutcome, BTreeMap<usize, Matrix>), RuntimeError> {
-    let d = w.cols;
-    let tag = pattern.artifact_tag();
-    let k8 = rt.manifest()
-        .find_swap_artifact(d, &tag, &cfg.impl_name, 8)?.clone();
-    let k1 = rt.manifest()
-        .find_swap_artifact(d, &tag, &cfg.impl_name, 1)?.clone();
-    assert_eq!(k8.chunk_rows, k1.chunk_rows);
-    let chunk = k8.chunk_rows;
-    let g_tensor = TensorData::from_matrix(g);
-
-    #[derive(Clone)]
-    struct RowState {
-        used: usize,
-        converged: bool,
-        loss_before: f64,
-        loss_after: f64,
-    }
-    let mut rows: Vec<RowState> = (0..w.rows).map(|_| RowState {
-        used: 0,
-        converged: false,
-        loss_before: f64::NAN,
-        loss_after: f64::NAN,
-    }).collect();
-
-    let mut snapshots: BTreeMap<usize, Matrix> = BTreeMap::new();
-    let mut sorted_cp: Vec<usize> = checkpoints.to_vec();
-    sorted_cp.sort_unstable();
-    sorted_cp.dedup();
-
-    // Iterations completed so far across the whole layer (uniform per
-    // row by construction: we advance all active rows in lockstep).
-    let mut done_iters = 0usize;
-
-    while done_iters < cfg.t_max {
-        // Next stop: a checkpoint boundary or t_max.
-        let next_stop = sorted_cp.iter().copied()
-            .find(|&c| c > done_iters && c <= cfg.t_max)
-            .unwrap_or(cfg.t_max);
-        let budget = next_stop - done_iters;
-        // Use the k8 artifact while >= 8 iterations remain, else k1
-        // (keeps T_max bookkeeping exact for arbitrary budgets).
-        let (entry, k) = if budget >= k8.k_iters && k8.k_iters > 1 {
-            (&k8, k8.k_iters)
-        } else {
-            (&k1, k1.k_iters)
-        };
-
-        let active: Vec<usize> = rows.iter().enumerate()
-            .filter(|(_, r)| !r.converged)
-            .map(|(i, _)| i)
-            .collect();
-        if active.is_empty() {
-            // Stationary from here on; jump to the next stop so any
-            // remaining checkpoints still get recorded.
-            done_iters = next_stop;
-            if sorted_cp.contains(&done_iters) {
-                snapshots.insert(done_iters, mask.clone());
-            }
-            continue;
-        }
-
-        for group in active.chunks(chunk) {
-            // Pack the chunk (pad with all-kept rows = guaranteed no-op).
-            let mut wc = Matrix::zeros(chunk, d);
-            let mut mc = Matrix::from_fn(chunk, d, |_, _| 1.0);
-            for (slot, &ri) in group.iter().enumerate() {
-                wc.row_mut(slot).copy_from_slice(w.row(ri));
-                mc.row_mut(slot).copy_from_slice(mask.row(ri));
-            }
-            let out = rt.execute(&entry.name, vec![
-                TensorData::from_matrix(&wc),
-                TensorData::from_matrix(&mc),
-                g_tensor.clone(),
-            ])?;
-            let m_out = out[0].as_f32()?;
-            let l_before = out[1].as_f32()?;
-            let l_after = out[2].as_f32()?;
-            let swaps = out[3].as_f32()?;
-            for (slot, &ri) in group.iter().enumerate() {
-                mask.row_mut(ri)
-                    .copy_from_slice(&m_out[slot * d..(slot + 1) * d]);
-                let r = &mut rows[ri];
-                if r.loss_before.is_nan() {
-                    r.loss_before = l_before[slot] as f64;
-                }
-                r.loss_after = l_after[slot] as f64;
-                let s = swaps[slot] as usize;
-                r.used += s;
-                if s < k {
-                    // Fewer accepted swaps than iterations executed:
-                    // the row hit a 1-swap local optimum inside the call.
-                    r.converged = true;
-                }
-            }
-        }
-        // Each call executes exactly `k` iterations per active row.
-        done_iters += k;
-        if sorted_cp.contains(&done_iters) {
-            snapshots.insert(done_iters, mask.clone());
-        }
-    }
-    // If every row converged before later checkpoints, the mask is
-    // stationary from here on — record it for the remaining checkpoints
-    // so Table-3 style sweeps always see a complete series.
-    for &cp in &sorted_cp {
-        if cp <= cfg.t_max {
-            snapshots.entry(cp).or_insert_with(|| mask.clone());
-        }
-    }
-
-    let outcome = LayerOutcome {
-        rows: rows.into_iter().map(|r| RowOutcome {
-            loss_before: if r.loss_before.is_nan() { 0.0 }
-                         else { r.loss_before },
-            loss_after: if r.loss_after.is_nan() { r.loss_before.max(0.0) }
-                        else { r.loss_after },
-            swaps: r.used,
-            converged: r.converged,
-        }).collect(),
+    let ctx = LayerContext {
+        w,
+        g,
+        stats: None,
+        pattern,
+        t_max: cfg.t_max,
+        threads: 1,
     };
-    Ok((outcome, snapshots))
+    let out = OffloadEngine::new(rt, cfg.impl_name.clone())
+        .refine(&ctx, mask, checkpoints)
+        .map_err(|e| RuntimeError::Msg(e.to_string()))?;
+    Ok((out.layer, out.snapshots))
 }
 
 #[cfg(test)]

@@ -132,7 +132,13 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         .flag("refine", "sparseswaps", "refiner: none|dsnot|sparseswaps")
         .flag("engine", "xla", "sparseswaps engine: xla|pallas|native")
         .flag("tmax", "100", "max 1-swap iterations per row (T_max)")
+        .flag("checkpoints", "", "comma-separated cumulative iteration \
+                                  counts to snapshot (Table 3)")
         .flag("calib-batches", "8", "calibration batches")
+        .flag("threads", "0", "worker threads (0 = all cores)")
+        .bool_flag_on("layer-parallel", "refine independent layers of a \
+                                         block concurrently (native and \
+                                         dsnot engines)")
         .flag("seed", "42", "dataset seed")
         .bool_flag("oneshot", "single dense calibration pass \
                               (default: sequential per block)")
@@ -143,6 +149,10 @@ fn cmd_prune(argv: &[String]) -> CliResult {
     let meta = rt.manifest().config(args.get("config"))?.clone();
     let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;
     let ds = Dataset::build(&meta, args.parse_num("seed")?);
+    let threads = match args.parse_num::<usize>("threads")? {
+        0 => sparseswaps::util::threadpool::default_threads(),
+        t => t,
+    };
     let cfg = PruneConfig {
         criterion: Criterion::parse(args.get("criterion"))
             .ok_or_else(|| format!("bad criterion {:?}",
@@ -152,8 +162,9 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         t_max: args.parse_num("tmax")?,
         calib_batches: args.parse_num("calib-batches")?,
         sequential: !args.get_bool("oneshot"),
-        checkpoints: vec![],
-        threads: sparseswaps::util::threadpool::default_threads(),
+        checkpoints: args.parse_list("checkpoints")?,
+        threads,
+        layer_parallel: args.get_bool("layer-parallel"),
     };
     let t0 = std::time::Instant::now();
     let (masks, rep) = prune(&rt, &store, &ds, &cfg)?;
@@ -170,6 +181,11 @@ fn cmd_prune(argv: &[String]) -> CliResult {
     println!("  time: {:.1}s (calib {:.1}s, refine {:.1}s); saved {}",
              t0.elapsed().as_secs_f64(), rep.calib_seconds,
              rep.refine_seconds, args.get("out"));
+    if !rep.snapshots.is_empty() {
+        println!("  snapshots: {} checkpoint masks captured at {:?}",
+                 rep.snapshots.len(),
+                 rep.snapshots.keys().collect::<Vec<_>>());
+    }
     Ok(())
 }
 

@@ -18,12 +18,34 @@ use crate::util::tensor::Matrix;
 const MAGIC: &[u8; 4] = b"SSCK";
 const VERSION: u32 = 1;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CheckpointError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("format: {0}")]
+    Io(std::io::Error),
     Format(String),
+}
+
+impl std::fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "io: {e}"),
+            CheckpointError::Format(s) => write!(f, "format: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            CheckpointError::Format(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
 }
 
 // --- CRC32 (IEEE, table-driven) -------------------------------------------
@@ -41,11 +63,12 @@ fn crc32_table() -> [u32; 256] {
 }
 
 pub fn crc32(data: &[u8]) -> u32 {
-    static TABLE: once_cell::sync::Lazy<[u32; 256]> =
-        once_cell::sync::Lazy::new(crc32_table);
+    static TABLE: std::sync::OnceLock<[u32; 256]> =
+        std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(crc32_table);
     let mut c = 0xFFFF_FFFFu32;
     for &b in data {
-        c = TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
     }
     c ^ 0xFFFF_FFFF
 }

@@ -20,8 +20,16 @@
 //! the benches reproduce the Table 1 ordering (DSnoT helps, SparseSwaps
 //! helps more).
 
+use std::collections::BTreeMap;
+
+use crate::pruning::engine::{
+    LayerContext, RefineEngine, RefineError, RefineOutcome,
+};
+use crate::pruning::error::row_loss;
 use crate::pruning::mask::Pattern;
+use crate::pruning::sparseswaps::{LayerOutcome, RowOutcome};
 use crate::util::tensor::Matrix;
+use crate::util::threadpool::parallel_map;
 
 /// Per-feature calibration statistics (accumulated alongside the Gram
 /// matrix during the calibration pass).
@@ -139,6 +147,63 @@ pub fn refine_layer(w: &Matrix, mask: &mut Matrix, stats: &FeatureStats,
     total
 }
 
+/// DSnoT behind the [`RefineEngine`] contract.  Rows are independent,
+/// so they are refined in parallel; the exact Gram-form loss is
+/// recorded before/after each row so reports are directly comparable
+/// with the SparseSwaps engines (the legacy pipeline only recorded the
+/// layer total).
+///
+/// DSnoT cycles are grow/prune moves against a surrogate objective —
+/// they are not 1-swap iterations — so iteration checkpoints do not
+/// apply: `refine` returns no snapshots and the pipeline backfills
+/// every checkpoint with the final mask.  The cycle budget comes from
+/// [`DsnotConfig`] (its own hyperparameter), not `ctx.t_max`, matching
+/// the baseline's published setup.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DsnotEngine {
+    pub cfg: DsnotConfig,
+}
+
+impl RefineEngine for DsnotEngine {
+    fn name(&self) -> String {
+        "dsnot".into()
+    }
+
+    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
+              _checkpoints: &[usize])
+        -> Result<RefineOutcome, RefineError> {
+        let stats = ctx.stats.ok_or(RefineError::MissingInput(
+            "per-feature calibration statistics (DSnoT)"))?;
+        let (w, g) = (ctx.w, ctx.g);
+        assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+        let nm_block = ctx.pattern.nm_block();
+        let cfg = self.cfg;
+        let rows: Vec<(Vec<f32>, RowOutcome)> =
+            parallel_map(w.rows, ctx.threads.max(1), |r| {
+                let mut m = mask.row(r).to_vec();
+                let before = row_loss(w.row(r), &m, g);
+                let out = refine_row(w.row(r), &mut m, stats, nm_block,
+                                     &cfg);
+                let after = row_loss(w.row(r), &m, g);
+                (m, RowOutcome {
+                    loss_before: before,
+                    loss_after: after,
+                    swaps: out.cycles,
+                    converged: out.cycles < cfg.max_cycles,
+                })
+            });
+        let mut out_rows = Vec::with_capacity(w.rows);
+        for (r, (m, ro)) in rows.into_iter().enumerate() {
+            mask.row_mut(r).copy_from_slice(&m);
+            out_rows.push(ro);
+        }
+        Ok(RefineOutcome {
+            layer: LayerOutcome { rows: out_rows },
+            snapshots: BTreeMap::new(),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +288,44 @@ mod tests {
             assert!((stats.variance(j) - var).abs() < 1e-2,
                     "{} vs {}", stats.variance(j), var);
         }
+    }
+
+    #[test]
+    fn engine_matches_legacy_layer_loop() {
+        let (w, x, stats) = biased_instance(5);
+        let d = x.cols;
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let pattern = Pattern::PerRow { keep: 10 };
+        let warm = mask_from_scores(&saliency::magnitude(&w), pattern);
+        let mut m_legacy = warm.clone();
+        refine_layer(&w, &mut m_legacy, &stats, pattern,
+                     &DsnotConfig::default());
+        let ctx = LayerContext {
+            w: &w, g: &g, stats: Some(&stats), pattern,
+            t_max: 0, threads: 2,
+        };
+        let mut m_engine = warm.clone();
+        let out = DsnotEngine::default()
+            .refine(&ctx, &mut m_engine, &[]).unwrap();
+        assert_eq!(m_legacy.data, m_engine.data);
+        validate(&m_engine, pattern).unwrap();
+        assert_eq!(out.layer.rows.len(), w.rows);
+    }
+
+    #[test]
+    fn engine_requires_feature_stats() {
+        let (w, x, _) = biased_instance(6);
+        let d = x.cols;
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let pattern = Pattern::PerRow { keep: 10 };
+        let mut mask = mask_from_scores(&saliency::magnitude(&w), pattern);
+        let ctx = LayerContext {
+            w: &w, g: &g, stats: None, pattern, t_max: 0, threads: 1,
+        };
+        assert!(DsnotEngine::default()
+                .refine(&ctx, &mut mask, &[]).is_err());
     }
 
     #[test]

@@ -1,0 +1,260 @@
+//! The `RefineEngine` trait: one uniform contract for every mask
+//! refiner, plus the crate's single checkpoint-segmentation driver.
+//!
+//! Before this module existed every refiner was an arm of a large
+//! `match` inside `coordinator::pipeline::prune()`, and the Table-3
+//! checkpoint/snapshot bookkeeping was implemented twice (once in the
+//! native path, once — differently — in the offload swap loop).  Now:
+//!
+//!   * every refiner implements [`RefineEngine::refine`] over a borrowed
+//!     [`LayerContext`], so the pipeline schedules layers without
+//!     knowing which algorithm runs inside;
+//!   * segmented engines (native and offload SparseSwaps) drive their
+//!     iteration budget through [`drive_segments`], the one place that
+//!     knows how to split `t_max` at checkpoint boundaries and capture
+//!     mask snapshots;
+//!   * adding a refiner from related work (Frank-Wolfe relaxation,
+//!     learnable masks, ...) is a one-file change: implement the trait
+//!     and register a constructor in `Refiner::engine`
+//!     (`coordinator::pipeline`).  See `examples/custom_engine.rs`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::pruning::dsnot::FeatureStats;
+use crate::pruning::mask::Pattern;
+use crate::pruning::sparseswaps::{LayerOutcome, RowOutcome};
+use crate::util::tensor::Matrix;
+
+/// Everything a refiner may consume for one layer.  Borrowed, so the
+/// pipeline stays free to schedule layers concurrently.
+pub struct LayerContext<'a> {
+    /// Dense weights, [d_out, d_in] (the paper's row-major layout).
+    pub w: &'a Matrix,
+    /// Gram matrix of the layer's input stream, [d_in, d_in].
+    pub g: &'a Matrix,
+    /// Per-feature calibration statistics for surrogate-objective
+    /// refiners (DSnoT); exact-objective engines ignore it.
+    pub stats: Option<&'a FeatureStats>,
+    pub pattern: Pattern,
+    /// Iteration budget per row (the paper's T_max).
+    pub t_max: usize,
+    /// Worker threads the engine may use internally.
+    pub threads: usize,
+}
+
+/// Why a refinement call failed.
+#[derive(Debug)]
+pub enum RefineError {
+    /// Engine-internal failure (artifact lookup, runtime execution, ...).
+    Msg(String),
+    /// The [`LayerContext`] lacks an input this engine requires.
+    MissingInput(&'static str),
+}
+
+impl fmt::Display for RefineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RefineError::Msg(s) => write!(f, "refine: {s}"),
+            RefineError::MissingInput(what) =>
+                write!(f, "refine: missing input: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for RefineError {}
+
+impl From<String> for RefineError {
+    fn from(s: String) -> Self {
+        RefineError::Msg(s)
+    }
+}
+
+/// What a refinement call produced: per-row outcomes plus the mask
+/// snapshots captured at the requested iteration checkpoints.
+#[derive(Clone, Debug, Default)]
+pub struct RefineOutcome {
+    /// Per-row losses, swap counts and convergence flags.
+    pub layer: LayerOutcome,
+    /// Mask snapshot per requested checkpoint; every requested
+    /// checkpoint in (0, t_max] is present (engines that do not iterate
+    /// — warmstart-only, DSnoT — return an empty map and the pipeline
+    /// backfills with the final mask).
+    pub snapshots: BTreeMap<usize, Matrix>,
+}
+
+/// The uniform refiner contract.
+pub trait RefineEngine {
+    /// Stable engine label for logs and reports.
+    fn name(&self) -> String;
+
+    /// Refine `mask` in place under `ctx`, capturing snapshots at the
+    /// requested cumulative-iteration checkpoints.  Implementations
+    /// must keep `mask` valid for `ctx.pattern` at every step.
+    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
+              checkpoints: &[usize]) -> Result<RefineOutcome, RefineError>;
+}
+
+/// The checkpoint-segmentation driver — the only implementation of
+/// Table-3 snapshot bookkeeping in the crate, shared by the native and
+/// offload engines.
+///
+/// `advance` moves every unconverged row forward by at most `budget`
+/// iterations and returns the number it actually executed (uniform
+/// across active rows by construction: engines advance rows in
+/// lockstep).  Returning 0 signals a stationary mask; the driver then
+/// jumps to the next boundary so later checkpoints still get recorded.
+/// Checkpoints outside (0, t_max] are ignored here and backfilled by
+/// the caller.
+pub fn drive_segments<F>(t_max: usize, checkpoints: &[usize],
+                         mask: &mut Matrix, mut advance: F)
+    -> Result<BTreeMap<usize, Matrix>, RefineError>
+where
+    F: FnMut(&mut Matrix, usize) -> Result<usize, RefineError>,
+{
+    let mut stops: Vec<usize> = checkpoints.iter().copied()
+        .filter(|&c| c > 0 && c <= t_max)
+        .collect();
+    stops.sort_unstable();
+    stops.dedup();
+    let mut snapshots: BTreeMap<usize, Matrix> = BTreeMap::new();
+    let mut done = 0usize;
+    while done < t_max {
+        let next_stop = stops.iter().copied().find(|&c| c > done)
+            .unwrap_or(t_max);
+        let budget = next_stop - done;
+        let stepped = advance(mask, budget)?;
+        done = if stepped == 0 {
+            next_stop
+        } else {
+            done + stepped.min(budget)
+        };
+        if stops.binary_search(&done).is_ok() {
+            snapshots.insert(done, mask.clone());
+        }
+    }
+    // Every row may converge before later checkpoints; the mask is
+    // stationary from there, so the remaining snapshots are the final
+    // mask (Table-3 sweeps always see a complete series).
+    for &cp in &stops {
+        snapshots.entry(cp).or_insert_with(|| mask.clone());
+    }
+    Ok(snapshots)
+}
+
+/// Warmstart-only "refiner": records the exact per-row loss and leaves
+/// the mask untouched.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NoopEngine;
+
+impl RefineEngine for NoopEngine {
+    fn name(&self) -> String {
+        "none".into()
+    }
+
+    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
+              _checkpoints: &[usize])
+        -> Result<RefineOutcome, RefineError> {
+        let rows = crate::pruning::error::layer_row_losses(ctx.w, mask,
+                                                           ctx.g)
+            .into_iter()
+            .map(|l| RowOutcome {
+                loss_before: l,
+                loss_after: l,
+                swaps: 0,
+                converged: false,
+            })
+            .collect();
+        Ok(RefineOutcome {
+            layer: LayerOutcome { rows },
+            snapshots: BTreeMap::new(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask::mask_from_scores;
+    use crate::pruning::saliency;
+    use crate::util::prng::Rng;
+
+    fn instance() -> (Matrix, Matrix, Matrix, Pattern) {
+        let mut rng = Rng::new(11);
+        let d = 16;
+        let x = Matrix::from_fn(48, d, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let w = Matrix::from_fn(4, d, |_, _| rng.gaussian_f32());
+        let pattern = Pattern::PerRow { keep: 6 };
+        let mask = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+        (w, g, mask, pattern)
+    }
+
+    #[test]
+    fn noop_preserves_mask_and_reports_loss() {
+        let (w, g, mut mask, pattern) = instance();
+        let before = mask.clone();
+        let ctx = LayerContext {
+            w: &w, g: &g, stats: None, pattern, t_max: 10, threads: 1,
+        };
+        let out = NoopEngine.refine(&ctx, &mut mask, &[2, 5]).unwrap();
+        assert_eq!(mask.data, before.data);
+        assert!(out.snapshots.is_empty());
+        assert_eq!(out.layer.rows.len(), w.rows);
+        assert!((out.layer.total_before() - out.layer.total_after()).abs()
+                < 1e-12);
+        assert!(out.layer.total_before() > 0.0);
+    }
+
+    #[test]
+    fn driver_segments_at_checkpoints() {
+        let mut mask = Matrix::zeros(1, 4);
+        let mut budgets: Vec<usize> = Vec::new();
+        let snaps = drive_segments(10, &[3, 7, 12, 0], &mut mask,
+                                   |m, budget| {
+            budgets.push(budget);
+            // Mutate so snapshots are distinguishable.
+            m.data[0] += budget as f32;
+            Ok(budget)
+        }).unwrap();
+        // Segments split exactly at in-range checkpoints.
+        assert_eq!(budgets, vec![3, 4, 3]);
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[&3].data[0], 3.0);
+        assert_eq!(snaps[&7].data[0], 7.0);
+    }
+
+    #[test]
+    fn driver_backfills_after_stationary() {
+        let mut mask = Matrix::zeros(1, 2);
+        let mut calls = 0;
+        let snaps = drive_segments(20, &[2, 15], &mut mask, |m, budget| {
+            calls += 1;
+            if calls == 1 {
+                m.data[0] = 1.0;
+                Ok(budget)
+            } else {
+                Ok(0) // stationary: all rows converged
+            }
+        }).unwrap();
+        // Checkpoint 2 captured live; 15 backfilled with the final mask.
+        assert_eq!(snaps[&2].data[0], 1.0);
+        assert_eq!(snaps[&15].data[0], 1.0);
+    }
+
+    #[test]
+    fn driver_partial_steps_accumulate() {
+        // An engine stepping k=2 at a time still lands on even
+        // checkpoints and t_max exactly.
+        let mut mask = Matrix::zeros(1, 1);
+        let snaps = drive_segments(8, &[4], &mut mask, |m, budget| {
+            let k = budget.min(2);
+            m.data[0] += k as f32;
+            Ok(k)
+        }).unwrap();
+        assert_eq!(snaps[&4].data[0], 4.0);
+        assert_eq!(mask.data[0], 8.0);
+    }
+}

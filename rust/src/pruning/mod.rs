@@ -1,10 +1,13 @@
 //! The pruning algorithm library: masks and patterns, warmstart
-//! saliencies, exact per-row error (Gram form), the native SparseSwaps
-//! engine, the DSnoT baseline, and a brute-force exact solver for tiny
+//! saliencies, exact per-row error (Gram form), the [`RefineEngine`]
+//! contract every refiner implements, the native SparseSwaps engine,
+//! the DSnoT baseline, and a brute-force exact solver for tiny
 //! instances.  The HLO *offload* engine lives in `coordinator::swaploop`
-//! and is property-tested against `sparseswaps` here.
+//! (it needs the PJRT runtime) but implements the same trait and is
+//! property-tested against `sparseswaps` here.
 
 pub mod dsnot;
+pub mod engine;
 pub mod error;
 pub mod exact;
 pub mod mask;
@@ -12,5 +15,9 @@ pub mod realloc;
 pub mod saliency;
 pub mod sparseswaps;
 
+pub use engine::{
+    LayerContext, NoopEngine, RefineEngine, RefineError, RefineOutcome,
+};
 pub use mask::Pattern;
 pub use saliency::Criterion;
+pub use sparseswaps::NativeEngine;

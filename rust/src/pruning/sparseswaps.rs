@@ -14,10 +14,31 @@
 //!   b_p = -2 w_p c_p + w_p^2 G_pp  (gain of reviving pruned p)
 //! so the inner loop is one multiply-add per pair — the same O(|U||P|)
 //! complexity the paper reports.
+//!
+//! Two loop implementations share those semantics:
+//!
+//!   * [`refine_layer`] / [`NativeEngine`] — the production *incremental
+//!     active-set* loop: the kept/pruned partition, the correlation
+//!     vector c, and per-row scratch for the separable terms persist
+//!     across swaps (and across checkpoint segments), and kept indices
+//!     whose conservative Eq.-5 lower bound cannot beat the current
+//!     best pair skip their inner scan entirely;
+//!   * [`refine_layer_rescan`] — the pre-refactor loop that rebuilds
+//!     the partition and both term vectors from scratch on every
+//!     accepted swap.  Retained as the bit-exact oracle for the parity
+//!     property tests and as the baseline arm of the `ablation_engine`
+//!     bench.
+//!
+//! Both produce bit-identical masks: the incremental loop evaluates the
+//! same f64 expressions in the same order and only skips pairs that
+//! provably cannot win the argmin.
 
-use crate::pruning::error::{corr_vector, row_loss_with_corr};
+use crate::pruning::engine::{
+    drive_segments, LayerContext, RefineEngine, RefineError, RefineOutcome,
+};
+use crate::pruning::error::{corr_vector, row_loss, row_loss_with_corr};
 use crate::pruning::mask::Pattern;
-use crate::util::tensor::Matrix;
+use crate::util::tensor::{axpy, Matrix};
 use crate::util::threadpool::parallel_map;
 
 #[derive(Clone, Copy, Debug)]
@@ -59,6 +80,10 @@ impl LayerOutcome {
 
     pub fn total_swaps(&self) -> usize {
         self.rows.iter().map(|r| r.swaps).sum()
+    }
+
+    pub fn rows_converged(&self) -> usize {
+        self.rows.iter().filter(|r| r.converged).count()
     }
 
     pub fn relative_reduction(&self) -> f64 {
@@ -136,6 +161,8 @@ pub fn best_swap(w: &[f32], m: &[f32], c: &[f32], g: &Matrix,
 }
 
 /// Run Algorithm 1 on a single row, mutating the mask row in place.
+/// Full-rescan reference loop: every accepted swap rebuilds the
+/// partition and both Eq.-5 term vectors via [`best_swap`].
 pub fn refine_row(w: &[f32], m: &mut [f32], g: &Matrix, nm_block: usize,
                   cfg: &SwapConfig) -> RowOutcome {
     let mut c = corr_vector(w, m, g);
@@ -149,8 +176,8 @@ pub fn refine_row(w: &[f32], m: &mut [f32], g: &Matrix, nm_block: usize,
                 m[p] = 1.0;
                 // Eq. 6: c += w_u G[:,u] - w_p G[:,p]  (G symmetric, so
                 // columns are rows).
-                crate::util::tensor::axpy(w[u], g.row(u), &mut c);
-                crate::util::tensor::axpy(-w[p], g.row(p), &mut c);
+                axpy(w[u], g.row(u), &mut c);
+                axpy(-w[p], g.row(p), &mut c);
                 swaps += 1;
             }
             _ => {
@@ -165,11 +192,13 @@ pub fn refine_row(w: &[f32], m: &mut [f32], g: &Matrix, nm_block: usize,
     RowOutcome { loss_before, loss_after, swaps, converged }
 }
 
-/// Refine every row of a layer, parallelised across rows (the paper's
-/// "fully parallelizable across rows" claim).
-pub fn refine_layer(w: &Matrix, mask: &mut Matrix, g: &Matrix,
-                    pattern: Pattern, cfg: &SwapConfig, threads: usize)
-    -> LayerOutcome {
+/// The pre-refactor layer loop: [`refine_row`] per row, rebuilding all
+/// per-row state on every swap.  Kept as the bit-exact reference for
+/// [`refine_layer`] (see the parity properties in `tests/properties.rs`)
+/// and as the baseline arm of the `ablation_engine` bench.
+pub fn refine_layer_rescan(w: &Matrix, mask: &mut Matrix, g: &Matrix,
+                           pattern: Pattern, cfg: &SwapConfig,
+                           threads: usize) -> LayerOutcome {
     assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
     assert_eq!(g.rows, w.cols);
     let nm_block = pattern.nm_block();
@@ -185,6 +214,282 @@ pub fn refine_layer(w: &Matrix, mask: &mut Matrix, g: &Matrix,
         outcome.rows.push(row_out);
     }
     outcome
+}
+
+// --- incremental active-set engine ------------------------------------------
+
+/// Persistent per-row state of the incremental engine: the mask row,
+/// the Eq.-6-maintained correlation vector, and the kept/pruned index
+/// partition (each ascending).  Survives accepted swaps *and*
+/// checkpoint segment boundaries, so nothing is ever rebuilt from
+/// scratch mid-refinement.
+#[derive(Clone)]
+struct RowState {
+    mask: Vec<f32>,
+    c: Vec<f32>,
+    kept: Vec<usize>,
+    pruned: Vec<usize>,
+    swaps: usize,
+    converged: bool,
+    loss_before: f64,
+}
+
+impl RowState {
+    fn init(w: &[f32], m: &[f32], g: &Matrix) -> RowState {
+        let c = corr_vector(w, m, g);
+        let loss_before = row_loss_with_corr(w, m, &c);
+        let mut kept = Vec::with_capacity(m.len());
+        let mut pruned = Vec::with_capacity(m.len());
+        for (i, &mv) in m.iter().enumerate() {
+            if mv > 0.5 {
+                kept.push(i);
+            } else {
+                pruned.push(i);
+            }
+        }
+        RowState {
+            mask: m.to_vec(),
+            c,
+            kept,
+            pruned,
+            swaps: 0,
+            converged: false,
+            loss_before,
+        }
+    }
+
+    /// Apply an accepted swap (prune u, revive p): Eq.-6 update of c
+    /// plus an O(log d) sorted-partition exchange.
+    fn apply_swap(&mut self, w: &[f32], g: &Matrix, u: usize, p: usize) {
+        self.mask[u] = 0.0;
+        self.mask[p] = 1.0;
+        axpy(w[u], g.row(u), &mut self.c);
+        axpy(-w[p], g.row(p), &mut self.c);
+        let ku = self.kept.binary_search(&u).expect("u was kept");
+        self.kept.remove(ku);
+        let ki = self.kept.binary_search(&p).unwrap_err();
+        self.kept.insert(ki, p);
+        let pp = self.pruned.binary_search(&p).expect("p was pruned");
+        self.pruned.remove(pp);
+        let pi = self.pruned.binary_search(&u).unwrap_err();
+        self.pruned.insert(pi, u);
+        self.swaps += 1;
+    }
+}
+
+/// Reusable scratch for the pair scan: refilled in O(|U| + |P|) per
+/// swap instead of reallocated four times per swap as the rescan loop
+/// does.
+struct Scratch {
+    a: Vec<f64>,
+    b: Vec<f64>,
+    wp: Vec<f64>,
+}
+
+impl Scratch {
+    fn new(d: usize) -> Scratch {
+        Scratch {
+            a: Vec::with_capacity(d),
+            b: Vec::with_capacity(d),
+            wp: Vec::with_capacity(d),
+        }
+    }
+}
+
+/// Identical selection to [`best_swap`] — same argmin, same first-wins
+/// tie-breaking, bit-identical f64 arithmetic — but reading the
+/// maintained partition, reusing scratch buffers, and (for the per-row
+/// pattern) skipping kept indices whose conservative lower bound on any
+/// reachable dL cannot beat the current best pair.
+fn best_swap_active(w: &[f32], st: &RowState, g: &Matrix, nm_block: usize,
+                    gmax: &[f64], ws: &mut Scratch)
+    -> Option<(f64, usize, usize)> {
+    let (kept, pruned) = (&st.kept, &st.pruned);
+    if kept.is_empty() || pruned.is_empty() {
+        return None;
+    }
+    let c = &st.c;
+    ws.a.clear();
+    ws.a.extend(kept.iter().map(|&u| {
+        2.0 * w[u] as f64 * c[u] as f64
+            + (w[u] as f64).powi(2) * g.at(u, u) as f64
+    }));
+    ws.b.clear();
+    ws.wp.clear();
+    let mut min_b = f64::INFINITY;
+    let mut wmax = 0.0f64;
+    for &p in pruned {
+        let bp = -2.0 * w[p] as f64 * c[p] as f64
+            + (w[p] as f64).powi(2) * g.at(p, p) as f64;
+        if bp < min_b {
+            min_b = bp;
+        }
+        let wpf = w[p] as f64;
+        if wpf.abs() > wmax {
+            wmax = wpf.abs();
+        }
+        ws.b.push(bp);
+        ws.wp.push(wpf);
+    }
+
+    let mut best_dl = f64::INFINITY;
+    let mut best: Option<(usize, usize)> = None;
+    if nm_block == 0 {
+        for (ku, &u) in kept.iter().enumerate() {
+            let au = ws.a[ku];
+            // 2.0 * x is exact in f64, so (2*w_u)*w_p*G_up below rounds
+            // identically to best_swap's 2.0*w_u*w_p*G_up.
+            let wu2 = 2.0 * w[u] as f64;
+            // Active-set skip: dL(u, .) >= a_u + min_p b_p
+            // - |2 w_u| max_p|w_p| max_j|G_uj| in exact arithmetic; the
+            // relative slack dwarfs f64 rounding, so a skipped u can
+            // never have held the strictly-smaller argmin.
+            let cap = wu2.abs() * wmax * gmax[u];
+            let slack = 1e-9 * (au.abs() + min_b.abs() + cap + 1.0);
+            if best.is_some() && au + min_b - cap - slack >= best_dl {
+                continue;
+            }
+            let grow = g.row(u);
+            for ((&p, &bp), &wpf) in
+                pruned.iter().zip(&ws.b).zip(&ws.wp) {
+                let dl = au + bp - wu2 * wpf * grow[p] as f64;
+                if dl < best_dl {
+                    best_dl = dl;
+                    best = Some((u, p));
+                }
+            }
+        }
+    } else {
+        // N:M: only same-block pairs are feasible; blocks are tiny, so
+        // the bound-skip is not worth the bookkeeping here.
+        for (ku, &u) in kept.iter().enumerate() {
+            let blk = u / nm_block;
+            let au = ws.a[ku];
+            let wu2 = 2.0 * w[u] as f64;
+            let grow = g.row(u);
+            let lo = pruned.partition_point(|&p| p < blk * nm_block);
+            let hi = pruned.partition_point(|&p| p < (blk + 1) * nm_block);
+            for kp in lo..hi {
+                let p = pruned[kp];
+                let dl = au + ws.b[kp] - wu2 * ws.wp[kp] * grow[p] as f64;
+                if dl < best_dl {
+                    best_dl = dl;
+                    best = Some((u, p));
+                }
+            }
+        }
+    }
+    best.map(|(u, p)| (best_dl, u, p))
+}
+
+/// Advance one row by up to `budget` accepted swaps.
+fn advance_row(w: &[f32], g: &Matrix, nm_block: usize, eps: f64,
+               gmax: &[f64], budget: usize, st: &mut RowState) {
+    let mut ws = Scratch::new(w.len());
+    for _ in 0..budget {
+        match best_swap_active(w, st, g, nm_block, gmax, &mut ws) {
+            Some((dl, u, p)) if dl < -eps => st.apply_swap(w, g, u, p),
+            _ => {
+                st.converged = true;
+                break;
+            }
+        }
+    }
+}
+
+/// The incremental active-set SparseSwaps engine (pure Rust).
+///
+/// Row state persists across swaps and checkpoint segments, so driving
+/// Table-3 snapshots costs nothing beyond the mask copies, and the
+/// final losses are still recomputed from scratch (no drift).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeEngine {
+    /// Minimum improvement to accept a swap (paper uses 0 = strict).
+    pub eps: f64,
+}
+
+impl RefineEngine for NativeEngine {
+    fn name(&self) -> String {
+        "sparseswaps[native]".into()
+    }
+
+    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
+              checkpoints: &[usize])
+        -> Result<RefineOutcome, RefineError> {
+        let (w, g) = (ctx.w, ctx.g);
+        assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+        assert_eq!(g.rows, w.cols);
+        let nm_block = ctx.pattern.nm_block();
+        let threads = ctx.threads.max(1);
+        let eps = self.eps;
+        // Row-wise max |G_uj|, shared by every row's skip bound.
+        let gmax: Vec<f64> = (0..g.rows)
+            .map(|j| g.row(j).iter()
+                 .map(|&v| (v as f64).abs())
+                 .fold(0.0, f64::max))
+            .collect();
+        let mut states: Vec<RowState> = parallel_map(w.rows, threads, |r| {
+            RowState::init(w.row(r), mask.row(r), g)
+        });
+        let snapshots = drive_segments(ctx.t_max, checkpoints, mask,
+                                       |mask, budget| {
+            if states.iter().all(|s| s.converged) {
+                return Ok(0);
+            }
+            let advanced: Vec<RowState> =
+                parallel_map(w.rows, threads, |r| {
+                    let mut st = states[r].clone();
+                    if !st.converged {
+                        advance_row(w.row(r), g, nm_block, eps, &gmax,
+                                    budget, &mut st);
+                    }
+                    st
+                });
+            for (r, st) in advanced.iter().enumerate() {
+                mask.row_mut(r).copy_from_slice(&st.mask);
+            }
+            states = advanced;
+            Ok(budget)
+        })?;
+        // Final losses recomputed from scratch (no accumulated drift),
+        // exactly like the rescan loop.
+        let loss_after: Vec<f64> = parallel_map(w.rows, threads, |r| {
+            row_loss(w.row(r), mask.row(r), g)
+        });
+        let rows = states.iter().zip(&loss_after)
+            .map(|(st, &la)| RowOutcome {
+                loss_before: st.loss_before,
+                loss_after: la,
+                swaps: st.swaps,
+                converged: st.converged,
+            })
+            .collect();
+        Ok(RefineOutcome {
+            layer: LayerOutcome { rows },
+            snapshots,
+        })
+    }
+}
+
+/// Refine every row of a layer, parallelised across rows (the paper's
+/// "fully parallelizable across rows" claim).  Delegates to the
+/// incremental [`NativeEngine`]; bit-identical to
+/// [`refine_layer_rescan`].
+pub fn refine_layer(w: &Matrix, mask: &mut Matrix, g: &Matrix,
+                    pattern: Pattern, cfg: &SwapConfig, threads: usize)
+    -> LayerOutcome {
+    let ctx = LayerContext {
+        w,
+        g,
+        stats: None,
+        pattern,
+        t_max: cfg.t_max,
+        threads,
+    };
+    NativeEngine { eps: cfg.eps }
+        .refine(&ctx, mask, &[])
+        .expect("native engine is infallible")
+        .layer
 }
 
 #[cfg(test)]
@@ -318,5 +623,73 @@ mod tests {
             let bound = (l0 / eps).ceil() as usize;
             assert!(out.swaps <= bound, "{} > {}", out.swaps, bound);
         }
+    }
+
+    #[test]
+    fn incremental_matches_rescan_smoke() {
+        // Full parity coverage lives in tests/properties.rs; this is
+        // the fast in-module check.
+        for seed in 0..6 {
+            let (w, g, _) = instance(100 + seed, 48, 5, 24);
+            for pattern in [Pattern::PerRow { keep: 9 },
+                            Pattern::Nm { n: 2, m: 4 }] {
+                let warm = mask_from_scores(
+                    &saliency::wanda(&w, &g.diag()), pattern);
+                let cfg = SwapConfig { t_max: 30, eps: 0.0 };
+                let mut m_ref = warm.clone();
+                let out_ref = refine_layer_rescan(&w, &mut m_ref, &g,
+                                                  pattern, &cfg, 1);
+                let mut m_inc = warm.clone();
+                let out_inc = refine_layer(&w, &mut m_inc, &g, pattern,
+                                           &cfg, 1);
+                assert_eq!(m_ref.data, m_inc.data, "seed {seed}");
+                assert_eq!(out_ref.total_swaps(), out_inc.total_swaps());
+            }
+        }
+    }
+
+    #[test]
+    fn engine_checkpoints_match_plain_run() {
+        let (w, g, _) = instance(9, 48, 4, 24);
+        let pattern = Pattern::PerRow { keep: 9 };
+        let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+        let ctx = LayerContext {
+            w: &w, g: &g, stats: None, pattern, t_max: 20, threads: 1,
+        };
+        let mut plain = warm.clone();
+        NativeEngine::default().refine(&ctx, &mut plain, &[]).unwrap();
+        let mut segmented = warm.clone();
+        let out = NativeEngine::default()
+            .refine(&ctx, &mut segmented, &[1, 3, 7, 20, 99])
+            .unwrap();
+        // Continuous row state: segmentation cannot change the result.
+        assert_eq!(plain.data, segmented.data);
+        // Requested in-range checkpoints all captured; 99 > t_max left
+        // to the pipeline backfill.
+        for cp in [1usize, 3, 7, 20] {
+            let snap = &out.snapshots[&cp];
+            validate(snap, pattern).unwrap();
+        }
+        assert!(!out.snapshots.contains_key(&99));
+        assert_eq!(out.snapshots[&20].data, segmented.data);
+    }
+
+    #[test]
+    fn engine_handles_t_max_zero() {
+        let (w, g, _) = instance(10, 32, 3, 16);
+        let pattern = Pattern::PerRow { keep: 6 };
+        let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+        let ctx = LayerContext {
+            w: &w, g: &g, stats: None, pattern, t_max: 0, threads: 1,
+        };
+        let mut mask = warm.clone();
+        let out = NativeEngine::default()
+            .refine(&ctx, &mut mask, &[]).unwrap();
+        assert_eq!(mask.data, warm.data);
+        assert_eq!(out.layer.total_swaps(), 0);
+        assert!((out.layer.total_before() - out.layer.total_after()).abs()
+                < 1e-9);
     }
 }

@@ -115,6 +115,9 @@ impl Ctx {
             t_max: self.t_max(),
             calib_batches: self.calib_batches(),
             sequential: false, // shared grams across method comparisons
+            // Layer-parallel scheduling is mask-identical to serial
+            // (pipeline invariant), so the experiment grids keep it on.
+            layer_parallel: true,
             ..Default::default()
         }
     }
@@ -376,7 +379,9 @@ pub fn table5(ctx: &Ctx, model: &str) -> Result<Table, RuntimeError> {
             refiner: if tm == 0 { Refiner::None } else {
                 Refiner::SparseSwapsNative
             },
-            t_max: tm.max(1),
+            // Engines handle t_max == 0 gracefully now; no .max(1)
+            // workaround needed.
+            t_max: tm,
             ..ctx.base_prune()
         };
         let t0 = Instant::now();

@@ -19,13 +19,22 @@ use std::time::Instant;
 use crate::runtime::manifest::{DType, Manifest};
 use crate::runtime::tensor_data::TensorData;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("runtime: {0}")]
     Msg(String),
-    #[error("xla: {0}")]
     Xla(String),
 }
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Msg(s) => write!(f, "runtime: {s}"),
+            RuntimeError::Xla(s) => write!(f, "xla: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {}
 
 impl From<String> for RuntimeError {
     fn from(s: String) -> Self {

@@ -4,20 +4,35 @@
 //! arguments, defaults, and auto-generated `--help` text.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     UnknownFlag(String),
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("missing required {0}")]
     MissingRequired(String),
-    #[error("invalid value for --{flag}: {value:?} ({expected})")]
     InvalidValue { flag: String, value: String, expected: &'static str },
-    #[error("unexpected positional argument {0:?}")]
     UnexpectedPositional(String),
 }
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CliError::UnknownFlag(n) => write!(f, "unknown flag --{n}"),
+            CliError::MissingValue(n) =>
+                write!(f, "flag --{n} expects a value"),
+            CliError::MissingRequired(what) =>
+                write!(f, "missing required {what}"),
+            CliError::InvalidValue { flag, value, expected } =>
+                write!(f, "invalid value for --{flag}: {value:?} \
+                           ({expected})"),
+            CliError::UnexpectedPositional(a) =>
+                write!(f, "unexpected positional argument {a:?}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 #[derive(Clone)]
 struct FlagSpec {
@@ -69,6 +84,14 @@ impl ArgSpec {
         self
     }
 
+    /// Boolean flag that defaults to *on*; disable with `--name=false`.
+    pub fn bool_flag_on(mut self, name: &'static str,
+                        help: &'static str) -> Self {
+        self.flags.push(FlagSpec { name, help, default: Some("true"),
+                                   is_bool: true, required: false });
+        self
+    }
+
     pub fn positional(mut self, name: &'static str, help: &'static str,
                       required: bool) -> Self {
         self.positionals.push((name, help, required));
@@ -89,6 +112,8 @@ impl ArgSpec {
         for f in &self.flags {
             let d = match f.default {
                 Some(d) if !f.is_bool => format!(" (default: {d})"),
+                Some(_) if f.is_bool =>
+                    " (default: on; =false disables)".to_string(),
                 _ => String::new(),
             };
             let req = if f.required { " (required)" } else { "" };
@@ -105,10 +130,13 @@ impl ArgSpec {
         let mut positionals = Vec::new();
         for f in &self.flags {
             if let Some(d) = f.default {
-                values.insert(f.name.to_string(), d.to_string());
+                if !f.is_bool {
+                    values.insert(f.name.to_string(), d.to_string());
+                }
             }
             if f.is_bool {
-                bools.insert(f.name.to_string(), false);
+                bools.insert(f.name.to_string(),
+                             f.default == Some("true"));
             }
         }
         let mut i = 0;
@@ -270,5 +298,14 @@ mod tests {
         let s = ArgSpec::new("t", "x").bool_flag("on", "y");
         let a = s.parse(&argv(&["--on=false"])).unwrap();
         assert!(!a.get_bool("on"));
+    }
+
+    #[test]
+    fn bool_flag_on_defaults_true_and_disables() {
+        let s = || ArgSpec::new("t", "x").bool_flag_on("fast", "y");
+        assert!(s().parse(&[]).unwrap().get_bool("fast"));
+        assert!(!s().parse(&argv(&["--fast=false"])).unwrap()
+                .get_bool("fast"));
+        assert!(s().parse(&argv(&["--fast"])).unwrap().get_bool("fast"));
     }
 }

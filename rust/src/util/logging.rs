@@ -3,9 +3,8 @@
 //! debug) or `set_level`.
 
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
-
-use once_cell::sync::Lazy;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum Level {
@@ -16,7 +15,11 @@ pub enum Level {
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(2);
-static START: Lazy<Instant> = Lazy::new(Instant::now);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn start() -> &'static Instant {
+    START.get_or_init(Instant::now)
+}
 
 pub fn init_from_env() {
     let lvl = match std::env::var("SPARSESWAPS_LOG").as_deref() {
@@ -26,7 +29,7 @@ pub fn init_from_env() {
         _ => Level::Info,
     };
     set_level(lvl);
-    Lazy::force(&START);
+    let _ = start();
 }
 
 pub fn set_level(l: Level) {
@@ -41,7 +44,7 @@ pub fn log(l: Level, args: std::fmt::Arguments<'_>) {
     if !enabled(l) {
         return;
     }
-    let t = START.elapsed();
+    let t = start().elapsed();
     let tag = match l {
         Level::Error => "ERROR",
         Level::Warn => "WARN ",

@@ -43,7 +43,13 @@ impl ThreadPool {
                 };
                 match msg {
                     Ok(Message::Run(job)) => {
-                        job();
+                        // Contain panics so a failing job can neither
+                        // kill the worker nor leave the pending counter
+                        // stuck (which would hang wait() forever).
+                        // Callers that need the job's outcome observe it
+                        // through the job's own channel, not the panic.
+                        let _ = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(job));
                         let (lock, cv) = &*pend;
                         let mut cnt = lock.lock().unwrap();
                         *cnt -= 1;
@@ -209,6 +215,22 @@ mod tests {
     fn parallel_map_empty() {
         let out: Vec<usize> = parallel_map(0, 4, |i| i);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.submit(|| panic!("job failure"));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        // wait() must not hang, and the workers must keep serving.
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
     }
 
     #[test]

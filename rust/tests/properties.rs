@@ -3,6 +3,7 @@
 //! instances.  No artifacts required — these exercise the native engine
 //! and the shared math.
 
+use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::error::{corr_vector, layer_loss, row_loss};
 use sparseswaps::pruning::exact::optimal_row_mask;
 use sparseswaps::pruning::mask::{
@@ -10,7 +11,8 @@ use sparseswaps::pruning::mask::{
 };
 use sparseswaps::pruning::saliency;
 use sparseswaps::pruning::sparseswaps::{
-    best_swap, refine_layer, refine_row, SwapConfig,
+    best_swap, refine_layer, refine_layer_rescan, refine_row,
+    NativeEngine, SwapConfig,
 };
 use sparseswaps::util::proptest::{check, ensure, Gen};
 use sparseswaps::util::tensor::Matrix;
@@ -195,6 +197,81 @@ fn prop_exact_optimum_sandwich() {
                           out.loss_after))?;
         ensure(opt <= out.loss_after * (1.0 + 1e-4) + 1e-3,
                || format!("optimum {opt} > refined {}", out.loss_after))
+    });
+}
+
+#[test]
+fn prop_incremental_engine_matches_rescan_reference() {
+    // (viii) the incremental active-set native engine is bit-identical
+    // to the from-scratch rescan loop: same masks, same swap counts,
+    // for both PerRow and Nm patterns, across 1/4 thread counts.
+    check("incremental active-set parity", 80, |gen| {
+        let inst = random_instance(gen, true);
+        let warm = warmstart(gen, &inst);
+        let t_max = gen.usize_in(1, 40);
+        let cfg = SwapConfig { t_max, eps: 0.0 };
+        let mut m_ref = warm.clone();
+        let out_ref = refine_layer_rescan(&inst.w, &mut m_ref, &inst.g,
+                                          inst.pattern, &cfg, 1);
+        for threads in [1usize, 4] {
+            let mut m = warm.clone();
+            let out = refine_layer(&inst.w, &mut m, &inst.g,
+                                   inst.pattern, &cfg, threads);
+            ensure(m.data == m_ref.data,
+                   || format!("mask mismatch vs rescan at {threads} \
+                               threads (t_max {t_max}, pattern \
+                               {:?})", inst.pattern))?;
+            ensure(out.total_swaps() == out_ref.total_swaps(),
+                   || format!("swap count {} vs reference {}",
+                              out.total_swaps(), out_ref.total_swaps()))?;
+            let rel = (out.total_after() - out_ref.total_after()).abs()
+                / out_ref.total_after().abs().max(1e-9);
+            ensure(rel < 1e-9,
+                   || format!("loss {} vs reference {}",
+                              out.total_after(), out_ref.total_after()))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_segmentation_is_exact() {
+    // (ix) the shared checkpoint driver cannot change the result: the
+    // native engine's row state persists across segment boundaries, so
+    // a checkpointed run lands on the same final mask as a plain run,
+    // and every in-range checkpoint snapshot is a valid mask.
+    check("checkpoint segmentation exact", 40, |gen| {
+        let inst = random_instance(gen, true);
+        let warm = warmstart(gen, &inst);
+        let t_max = gen.usize_in(2, 30);
+        let cps = vec![gen.usize_in(1, t_max), gen.usize_in(1, t_max),
+                       t_max + gen.usize_in(1, 10)];
+        let ctx = LayerContext {
+            w: &inst.w, g: &inst.g, stats: None, pattern: inst.pattern,
+            t_max, threads: 1,
+        };
+        let mut plain = warm.clone();
+        NativeEngine::default().refine(&ctx, &mut plain, &[])
+            .map_err(|e| e.to_string())?;
+        let mut segmented = warm.clone();
+        let out = NativeEngine::default()
+            .refine(&ctx, &mut segmented, &cps)
+            .map_err(|e| e.to_string())?;
+        ensure(plain.data == segmented.data,
+               || format!("segmented mask diverged (t_max {t_max}, \
+                           checkpoints {cps:?})"))?;
+        for &cp in &cps {
+            if cp <= t_max {
+                let snap = out.snapshots.get(&cp).ok_or_else(
+                    || format!("checkpoint {cp} missing"))?;
+                validate(snap, inst.pattern)?;
+            } else {
+                ensure(!out.snapshots.contains_key(&cp),
+                       || format!("out-of-range checkpoint {cp} \
+                                   captured"))?;
+            }
+        }
+        Ok(())
     });
 }
 
