@@ -67,7 +67,8 @@ fn main() {
     // Same engine through the uniform RefineEngine trait, capturing
     // mask snapshots after 1, 5 and 25 swaps/row (paper Table 3).
     let ctx = LayerContext {
-        w: &w, g: &g, stats: None, pattern, t_max: 100, threads: 4,
+        w: &w, g: g.as_gram(), stats: None, pattern, t_max: 100,
+        threads: 4,
     };
     let mut mask2 = warm_mask.clone();
     let out = NativeEngine::default()

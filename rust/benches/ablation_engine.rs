@@ -1,27 +1,200 @@
-//! Ablation B (DESIGN.md): swap-engine comparison on one realistic layer
-//! — fused-XLA offload (k=1 vs k=8 per call), Pallas-kernel offload, the
-//! legacy full-rescan native loop, and the incremental active-set native
-//! engine.  Measures wall-clock per accepted swap plus rows/s and
-//! swaps/s throughput, verifies all engines land on comparable losses
-//! (the two native loops must produce *identical* masks), and emits the
-//! numbers to `reports/ablation_engine.json` so the incremental-engine
-//! speedup is tracked in the perf trajectory.
+//! Ablation B (DESIGN.md): swap-engine comparison.
+//!
+//! Part 1 (artifact-free, always runs): the legacy full-rescan native
+//! loop vs the incremental active-set engine on each kernel dispatch
+//! arm, on a realistic layer (d=1024 outside quick mode).  Verifies
+//! every arm's masks are bit-identical to the rescan oracle, measures
+//! wall-clock per accepted swap plus rows/s and swaps/s, and emits the
+//! numbers to `reports/ablation_engine.json` and the "engine" section
+//! of `reports/bench_kernels.json` so the speedup trajectory
+//! (incremental-vs-rescan and SIMD-vs-scalar) is tracked per PR.
+//!
+//! Part 2 (needs artifacts): the fused-XLA and Pallas offload engines
+//! on their own artifact-width layer.
 mod common;
 
 use std::time::Instant;
 
 use sparseswaps::coordinator::{refine_layer_offload, OffloadConfig};
+use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
 use sparseswaps::pruning::saliency;
 use sparseswaps::pruning::sparseswaps::{
-    refine_layer, refine_layer_rescan, LayerOutcome, SwapConfig,
+    refine_layer_rescan, LayerOutcome, NativeEngine, SwapConfig,
 };
-use sparseswaps::util::benchlib::Table;
+use sparseswaps::util::benchlib::{merge_json_section, Table};
 use sparseswaps::util::jsonlite::Json;
+use sparseswaps::util::kernels;
 use sparseswaps::util::prng::Rng;
 use sparseswaps::util::tensor::Matrix;
 
+fn record(table: &mut Table, engines_json: &mut Vec<Json>, label: &str,
+          rows: usize, secs: f64, outcome: &LayerOutcome) -> f64 {
+    let secs_safe = secs.max(1e-9);
+    let swaps = outcome.total_swaps().max(1);
+    let rows_per_s = rows as f64 / secs_safe;
+    let swaps_per_s = swaps as f64 / secs_safe;
+    table.row(vec![
+        label.to_string(),
+        format!("{secs:.3}"),
+        swaps.to_string(),
+        format!("{:.1}", 1e6 * secs / swaps as f64),
+        format!("{rows_per_s:.0}"),
+        format!("{swaps_per_s:.0}"),
+        format!("{:.2}%", 100.0 * outcome.relative_reduction()),
+    ]);
+    engines_json.push(Json::obj(vec![
+        ("engine", Json::str(label)),
+        ("seconds", Json::num(secs)),
+        ("swaps", Json::num(outcome.total_swaps() as f64)),
+        ("rows_per_s", Json::num(rows_per_s)),
+        ("swaps_per_s", Json::num(swaps_per_s)),
+        ("rel_reduction", Json::num(outcome.relative_reduction())),
+    ]));
+    rows_per_s
+}
+
+/// Artifact-free engine comparison; exits non-zero if any arm's mask
+/// diverges from the rescan oracle.
+fn native_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let (d, rows, t_max) =
+        if quick { (128usize, 64usize, 10usize) }
+        else { (1024, 256, 25) };
+    let mut rng = Rng::new(7);
+    let x = Matrix::from_fn(2 * d, d, |_, _| rng.gaussian_f32());
+    let mut g = Matrix::zeros(d, d);
+    g.gram_accumulate_par(&x, 4);
+    let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+    let pattern = Pattern::PerRow { keep: d * 2 / 5 };
+    let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()), pattern);
+    let cfg = SwapConfig { t_max, eps: 0.0 };
+
+    let mut table = Table::new(
+        format!("Ablation B — native engines on one layer ({rows}x{d}, \
+                 60%, T_max={t_max})"),
+        &["Engine", "seconds", "total swaps", "µs/swap", "rows/s",
+          "swaps/s", "rel. reduction"]);
+    let mut engines_json: Vec<Json> = Vec::new();
+
+    // Baseline: the legacy full-rescan loop (bit-exact oracle).
+    let mut rescan_1t = f64::NAN;
+    let mut mask_rescan: Option<Matrix> = None;
+    for threads in [1usize, 4] {
+        let mut mask = warm.clone();
+        let t0 = Instant::now();
+        let outcome = refine_layer_rescan(&w, &mut mask, &g, pattern,
+                                          &cfg, threads);
+        let secs = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            rescan_1t = secs;
+            mask_rescan = Some(mask.clone());
+        }
+        record(&mut table, &mut engines_json,
+               &format!("rescan[{threads}t]"), rows, secs, &outcome);
+    }
+    let mask_rescan = mask_rescan.expect("rescan ran at 1 thread");
+
+    // Incremental active-set engine, per kernel arm x thread count.
+    let mut rows_per_s_1t: Vec<(String, f64)> = Vec::new();
+    let mut secs_1t: Vec<(String, f64)> = Vec::new();
+    for arm in kernels::arms() {
+        for threads in [1usize, 4] {
+            let engine = NativeEngine { eps: 0.0, arm: Some(arm) };
+            let ctx = LayerContext {
+                w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+                threads,
+            };
+            let mut mask = warm.clone();
+            let t0 = Instant::now();
+            let outcome = engine.refine(&ctx, &mut mask, &[])
+                .expect("native engine is infallible");
+            let secs = t0.elapsed().as_secs_f64();
+            if mask.data != mask_rescan.data {
+                eprintln!("[ablation_engine] PARITY FAILURE: \
+                           incremental[{}][{threads}t] mask diverged \
+                           from the rescan oracle", arm.name());
+                std::process::exit(1);
+            }
+            let label = format!("incremental[{}][{threads}t]",
+                                arm.name());
+            let rps = record(&mut table, &mut engines_json, &label,
+                             rows, secs, &outcome.layer);
+            if threads == 1 {
+                rows_per_s_1t.push((arm.name().to_string(), rps));
+                secs_1t.push((arm.name().to_string(), secs));
+            }
+        }
+    }
+
+    let secs_of = |name: &str| {
+        secs_1t.iter().find(|(n, _)| n == name).map(|(_, s)| *s)
+    };
+    let scalar_1t = secs_of("scalar").unwrap_or(f64::NAN);
+    let incremental_speedup = rescan_1t / scalar_1t.max(1e-9);
+    println!("incremental active-set speedup vs rescan (scalar, 1t): \
+              {incremental_speedup:.2}x");
+    let simd_speedup = match secs_of("simd") {
+        Some(simd_1t) => {
+            let s = scalar_1t / simd_1t.max(1e-9);
+            println!("SIMD arm speedup vs scalar (1t): {s:.2}x");
+            Some(s)
+        }
+        None => {
+            println!("SIMD arm unavailable on this host");
+            None
+        }
+    };
+    table.print();
+
+    let mut fields = vec![
+        ("bench", Json::str("ablation_engine")),
+        ("rows", Json::num(rows as f64)),
+        ("d", Json::num(d as f64)),
+        ("t_max", Json::num(t_max as f64)),
+        ("engines", Json::Arr(engines_json.clone())),
+        ("incremental_speedup_1t", Json::num(incremental_speedup)),
+    ];
+    if let Some(s) = simd_speedup {
+        fields.push(("simd_speedup_1t", Json::num(s)));
+    }
+    let json = Json::obj(fields);
+    std::fs::create_dir_all("reports").ok();
+    if let Err(e) = std::fs::write("reports/ablation_engine.json",
+                                   format!("{json}\n")) {
+        eprintln!("[ablation_engine] FAILED writing report: {e}");
+        std::process::exit(1);
+    }
+
+    let engine_section = Json::obj(vec![
+        ("d", Json::num(d as f64)),
+        ("rows", Json::num(rows as f64)),
+        ("t_max", Json::num(t_max as f64)),
+        ("rescan_rows_per_s_1t",
+         Json::num(rows as f64 / rescan_1t.max(1e-9))),
+        ("rows_per_s_1t", Json::Obj(
+            rows_per_s_1t.iter()
+                .map(|(n, v)| (n.clone(), Json::num(*v)))
+                .collect())),
+        ("incremental_speedup_vs_rescan_1t",
+         Json::num(incremental_speedup)),
+        ("simd_speedup_vs_scalar_1t",
+         simd_speedup.map(Json::num).unwrap_or(Json::Null)),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "engine", engine_section) {
+        eprintln!("[ablation_engine] FAILED writing bench_kernels: {e}");
+        std::process::exit(1);
+    }
+    println!("[ablation_engine] engine section written to \
+              reports/bench_kernels.json");
+}
+
 fn main() {
+    native_section();
+
+    // Offload engines (need AOT artifacts; their own layer at an
+    // artifact width).
     common::run_bench("ablation_engine", |ctx| {
         let d = 128usize;
         let rows = 128usize;
@@ -36,38 +209,12 @@ fn main() {
                                     pattern);
 
         let mut table = Table::new(
-            format!("Ablation B — engines on one layer ({rows}x{d}, 60%, \
+            format!("Ablation B — offload engines ({rows}x{d}, 60%, \
                      T_max={t_max})"),
             &["Engine", "seconds", "total swaps", "µs/swap", "rows/s",
               "swaps/s", "rel. reduction"]);
         let mut engines_json: Vec<Json> = Vec::new();
-        let mut record = |table: &mut Table, label: &str, secs: f64,
-                          outcome: &LayerOutcome| {
-            let secs_safe = secs.max(1e-9);
-            let swaps = outcome.total_swaps().max(1);
-            let rows_per_s = rows as f64 / secs_safe;
-            let swaps_per_s = swaps as f64 / secs_safe;
-            table.row(vec![
-                label.to_string(),
-                format!("{secs:.3}"),
-                swaps.to_string(),
-                format!("{:.1}", 1e6 * secs / swaps as f64),
-                format!("{rows_per_s:.0}"),
-                format!("{swaps_per_s:.0}"),
-                format!("{:.2}%", 100.0 * outcome.relative_reduction()),
-            ]);
-            engines_json.push(Json::obj(vec![
-                ("engine", Json::str(label)),
-                ("seconds", Json::num(secs)),
-                ("swaps", Json::num(outcome.total_swaps() as f64)),
-                ("rows_per_s", Json::num(rows_per_s)),
-                ("swaps_per_s", Json::num(swaps_per_s)),
-                ("rel_reduction",
-                 Json::num(outcome.relative_reduction())),
-            ]));
-        };
-
-        // Offload engines (require artifacts at this width).
+        let mut ran = 0;
         for impl_name in ["xla", "pallas"] {
             if sparseswaps::runtime::Manifest::load("artifacts").ok()
                 .and_then(|m| m.find_swap_artifact(
@@ -82,66 +229,32 @@ fn main() {
                 &ctx.rt, &w, &mut mask, &g, pattern, &cfg, &[])
                 .map_err(|e| e.to_string())?;
             let secs = t0.elapsed().as_secs_f64();
-            record(&mut table, &format!("offload[{impl_name}]"), secs,
+            record(&mut table, &mut engines_json,
+                   &format!("offload[{impl_name}]"), rows, secs,
                    &outcome);
+            ran += 1;
         }
-
-        // Native loops: legacy full-rescan vs incremental active-set,
-        // at 1 and 4 row-parallel threads.  Masks must agree bitwise.
-        let cfg = SwapConfig { t_max, eps: 0.0 };
-        let mut rescan_1t = f64::NAN;
-        let mut incremental_1t = f64::NAN;
-        let mut mask_rescan: Option<Matrix> = None;
-        for threads in [1usize, 4] {
-            let mut mask = warm.clone();
-            let t0 = Instant::now();
-            let outcome = refine_layer_rescan(&w, &mut mask, &g, pattern,
-                                              &cfg, threads);
-            let secs = t0.elapsed().as_secs_f64();
-            if threads == 1 {
-                rescan_1t = secs;
-                mask_rescan = Some(mask.clone());
-            }
-            record(&mut table, &format!("rescan[{threads}t]"), secs,
-                   &outcome);
+        if ran == 0 {
+            return Ok(vec!["\n(no swap artifacts at this width)\n"
+                .to_string()]);
         }
-        for threads in [1usize, 4] {
-            let mut mask = warm.clone();
-            let t0 = Instant::now();
-            let outcome = refine_layer(&w, &mut mask, &g, pattern, &cfg,
-                                       threads);
-            let secs = t0.elapsed().as_secs_f64();
-            if threads == 1 {
-                incremental_1t = secs;
-            }
-            if mask.data != mask_rescan.as_ref().unwrap().data {
-                return Err(format!(
-                    "incremental mask diverged from rescan reference \
-                     at {threads} threads"));
-            }
-            record(&mut table, &format!("incremental[{threads}t]"), secs,
-                   &outcome);
-        }
-        let speedup = rescan_1t / incremental_1t.max(1e-9);
-        println!("incremental active-set speedup vs rescan (1t): \
-                  {speedup:.2}x");
         table.print();
-
-        let json = Json::obj(vec![
-            ("bench", Json::str("ablation_engine")),
-            ("rows", Json::num(rows as f64)),
-            ("d", Json::num(d as f64)),
-            ("t_max", Json::num(t_max as f64)),
-            ("engines", Json::Arr(engines_json)),
-            ("incremental_speedup_1t", Json::num(speedup)),
-        ]);
-        std::fs::create_dir_all("reports").ok();
-        std::fs::write("reports/ablation_engine.json",
-                       format!("{json}\n"))
-            .map_err(|e| e.to_string())?;
-
-        Ok(vec![table.to_markdown(),
-                format!("\nincremental active-set speedup vs rescan \
-                         (1t): **{speedup:.2}x**\n")])
+        // Append the offload rows to the report native_section() wrote,
+        // so the perf trajectory keeps tracking every engine.
+        let path = "reports/ablation_engine.json";
+        if let Some(mut root) = std::fs::read_to_string(path)
+            .ok()
+            .and_then(|text| Json::parse(text.trim()).ok())
+        {
+            if let Json::Obj(map) = &mut root {
+                if let Some(Json::Arr(engines)) = map.get_mut("engines") {
+                    engines.extend(engines_json);
+                }
+                map.insert("offload_d".into(), Json::num(d as f64));
+            }
+            std::fs::write(path, format!("{root}\n"))
+                .map_err(|e| e.to_string())?;
+        }
+        Ok(vec![table.to_markdown()])
     });
 }

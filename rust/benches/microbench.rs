@@ -1,16 +1,27 @@
 //! Hot-path micro-benchmarks for the perf log (EXPERIMENTS.md §Perf):
-//! swap-step artifact latency per width/k, runtime pack/exec/unpack
-//! split, and the native engine's per-swap cost.
+//! kernel-layer GFLOP/s per dispatch arm (dot/axpy/axpy_dot/matmul/
+//! syrk — runs without artifacts and feeds the "kernels" section of
+//! `reports/bench_kernels.json`), swap-step artifact latency per
+//! width/k, runtime pack/exec/unpack split, and the native engine's
+//! per-swap cost.
 mod common;
 
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
 use sparseswaps::pruning::saliency;
 use sparseswaps::runtime::TensorData;
-use sparseswaps::util::benchlib::{bench, fmt_duration_ns, Table};
+use sparseswaps::util::benchlib::{
+    bench, fmt_duration_ns, gflops, merge_json_section, Table,
+};
+use sparseswaps::util::jsonlite::Json;
+use sparseswaps::util::kernels::{self, Arm};
 use sparseswaps::util::prng::Rng;
 use sparseswaps::util::tensor::Matrix;
 
 fn main() {
+    // Artifact-free kernel section first: always runs (CI bench smoke
+    // relies on it), asserts scalar/SIMD parity, and emits GFLOP/s.
+    kernel_section();
+    // Artifact-dependent sections (skip gracefully on fresh checkouts).
     common::run_bench("microbench", |ctx| {
         let mut table = Table::new(
             "Microbench — swap-step artifact latency",
@@ -69,4 +80,159 @@ fn main() {
         split.print();
         Ok(vec![table.to_markdown(), split.to_markdown()])
     });
+}
+
+/// Benchmark every kernel on every available dispatch arm and merge
+/// the numbers into `reports/bench_kernels.json` (section "kernels").
+/// Exits non-zero if the arms disagree beyond tolerance, so the CI
+/// bench smoke job doubles as a parity gate.
+fn kernel_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let arms = kernels::arms();
+    println!("[microbench] kernel section: arms {:?} (active {})",
+             arms.iter().map(|a| a.name()).collect::<Vec<_>>(),
+             kernels::active().name());
+    verify_arm_parity(&arms);
+
+    let mut table = Table::new(
+        "Microbench — kernel layer throughput per dispatch arm",
+        &["op", "arm", "shape", "mean", "GFLOP/s"]);
+    let mut results: Vec<Json> = Vec::new();
+    let sizes: &[usize] = if quick { &[96] } else { &[256, 1024] };
+    let samples = if quick { 3 } else { 5 };
+    let mut rng = Rng::new(11);
+    let mut sink = 0.0f32;
+    for &d in sizes {
+        let n = d * d;
+        let a: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let am = Matrix::from_fn(d, d, |_, _| rng.gaussian_f32());
+        let bm = Matrix::from_fn(d, d, |_, _| rng.gaussian_f32());
+        let x = Matrix::from_fn(2 * d, d, |_, _| rng.gaussian_f32());
+        for &arm in &arms {
+            let mut record = |op: &str, shape: String, flops: f64,
+                              mean_ns: f64| {
+                let gf = gflops(flops, mean_ns);
+                table.row(vec![
+                    op.to_string(),
+                    arm.name().to_string(),
+                    shape.clone(),
+                    fmt_duration_ns(mean_ns),
+                    format!("{gf:.2}"),
+                ]);
+                results.push(Json::obj(vec![
+                    ("op", Json::str(op)),
+                    ("arm", Json::str(arm.name())),
+                    ("shape", Json::str(shape)),
+                    ("mean_ns", Json::num(mean_ns)),
+                    ("gflops", Json::num(gf)),
+                ]));
+            };
+
+            let st = bench(1, samples, || {
+                sink += kernels::dot_arm(arm, &a, &b);
+            });
+            record("dot", format!("n={n}"), 2.0 * n as f64, st.mean_ns);
+
+            let mut y = b.clone();
+            let st = bench(1, samples, || {
+                kernels::axpy_arm(arm, 0.5, &a, &mut y);
+            });
+            sink += y[0];
+            record("axpy", format!("n={n}"), 2.0 * n as f64, st.mean_ns);
+
+            let mut y = b.clone();
+            let st = bench(1, samples, || {
+                sink += kernels::axpy_dot_arm(arm, 0.5, &a, &mut y);
+            });
+            record("axpy_dot", format!("n={n}"), 4.0 * n as f64,
+                   st.mean_ns);
+
+            let st = bench(1, samples, || {
+                let c = kernels::matmul_arm(arm, &am, &bm);
+                sink += c.data[0];
+            });
+            record("matmul", format!("{d}x{d}x{d}"),
+                   2.0 * (d as f64).powi(3), st.mean_ns);
+
+            for threads in [1usize, 4] {
+                let mut g = Matrix::zeros(d, d);
+                let st = bench(1, samples, || {
+                    kernels::syrk_arm(arm, &mut g, &x, threads);
+                });
+                sink += g.data[0];
+                // Upper triangle + mirror ~= t*d*d effective flops.
+                record(&format!("syrk[{threads}t]"),
+                       format!("t={} d={d}", 2 * d),
+                       2.0 * (2 * d) as f64 * (d as f64) * (d as f64)
+                           / 2.0,
+                       st.mean_ns);
+            }
+        }
+    }
+    std::hint::black_box(sink);
+    table.print();
+    let section = Json::obj(vec![
+        ("arms", Json::Arr(
+            arms.iter().map(|a| Json::str(a.name())).collect())),
+        ("active", Json::str(kernels::active().name())),
+        ("results", Json::Arr(results)),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "kernels", section) {
+        eprintln!("[microbench] FAILED writing bench_kernels.json: {e}");
+        std::process::exit(1);
+    }
+    println!("[microbench] kernel section written to \
+              reports/bench_kernels.json");
+}
+
+/// Cross-arm correctness gate on ragged shapes (exits non-zero on
+/// mismatch; the full randomized coverage lives in tests/properties.rs).
+fn verify_arm_parity(arms: &[Arm]) {
+    if arms.len() < 2 {
+        println!("[microbench] single-arm host: parity check skipped");
+        return;
+    }
+    let mut rng = Rng::new(29);
+    let mut fail = |msg: String| {
+        eprintln!("[microbench] KERNEL PARITY FAILURE: {msg}");
+        std::process::exit(1);
+    };
+    for n in [3usize, 33, 257] {
+        let a: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let b: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let ds = kernels::dot_arm(Arm::Scalar, &a, &b);
+        let dv = kernels::dot_arm(Arm::Simd, &a, &b);
+        if (ds - dv).abs() > 1e-4 * ds.abs().max(1.0) {
+            fail(format!("dot n={n}: {ds} vs {dv}"));
+        }
+        let mut ys = b.clone();
+        let mut yv = b.clone();
+        kernels::axpy_arm(Arm::Scalar, 0.7, &a, &mut ys);
+        kernels::axpy_arm(Arm::Simd, 0.7, &a, &mut yv);
+        if ys.iter().zip(&yv).any(|(s, v)| s.to_bits() != v.to_bits()) {
+            fail(format!("axpy not bit-identical at n={n}"));
+        }
+    }
+    for d in [5usize, 21] {
+        let x = Matrix::from_fn(2 * d + 1, d, |_, _| rng.gaussian_f32());
+        let mut gs = Matrix::zeros(d, d);
+        kernels::syrk_arm(Arm::Scalar, &mut gs, &x, 1);
+        let mut gv = Matrix::zeros(d, d);
+        kernels::syrk_arm(Arm::Simd, &mut gv, &x, 1);
+        let scale = gs.data.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        if gs.max_abs_diff(&gv) > 1e-4 * scale {
+            fail(format!("syrk d={d} diverged across arms"));
+        }
+        let a = Matrix::from_fn(d, d + 3, |_, _| rng.gaussian_f32());
+        let b = Matrix::from_fn(d + 3, d, |_, _| rng.gaussian_f32());
+        let ms = kernels::matmul_arm(Arm::Scalar, &a, &b);
+        let mv = kernels::matmul_arm(Arm::Simd, &a, &b);
+        let scale = ms.data.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        if ms.max_abs_diff(&mv) > 1e-4 * scale {
+            fail(format!("matmul d={d} diverged across arms"));
+        }
+    }
+    println!("[microbench] scalar/simd parity OK");
 }

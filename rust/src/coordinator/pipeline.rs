@@ -204,12 +204,17 @@ impl PruneReport {
     }
 }
 
-/// One layer's inputs, owned so refinement can move to a pool worker.
-struct LayerJob {
+/// One layer's inputs.  Weights and mask are owned; the Gram matrix is
+/// a zero-copy [`GramView`] into the block's calibration stream stack,
+/// so scheduling a layer never materialises a d*d copy.  Jobs move to
+/// pool workers through the scoped submission API
+/// ([`ThreadPool::run_scoped`]), which is what lets them carry the
+/// borrow.
+struct LayerJob<'a> {
     li: usize,
     layer: PrunableLayer,
     w: crate::util::tensor::Matrix,
-    g: crate::util::tensor::Matrix,
+    g: crate::util::tensor::GramView<'a>,
     stats: Option<FeatureStats>,
     pattern: Pattern,
     mask: crate::util::tensor::Matrix,
@@ -224,13 +229,13 @@ struct LayerResult {
 }
 
 /// Refine one prepared layer through an engine and assemble its report.
-fn refine_job(engine: &dyn RefineEngine, job: LayerJob, t_max: usize,
+fn refine_job(engine: &dyn RefineEngine, job: LayerJob<'_>, t_max: usize,
               threads: usize, checkpoints: &[usize])
     -> Result<LayerResult, String> {
     let LayerJob { li, layer, w, g, stats, pattern, mut mask } = job;
     let ctx = LayerContext {
         w: &w,
-        g: &g,
+        g,
         stats: stats.as_ref(),
         pattern,
         t_max,
@@ -259,27 +264,32 @@ fn refine_job(engine: &dyn RefineEngine, job: LayerJob, t_max: usize,
 /// concurrent jobs so a narrow block (fewer layers than cores) keeps
 /// the same total parallelism as the serial schedule.  Row results are
 /// independent of thread counts, so masks are identical either way.
-fn refine_block_parallel(pool: &ThreadPool, jobs: Vec<LayerJob>,
-                         refiner: &Refiner, t_max: usize,
-                         threads: usize, checkpoints: &[usize])
+fn refine_block_parallel<'a>(pool: &ThreadPool, jobs: Vec<LayerJob<'a>>,
+                             refiner: &Refiner, t_max: usize,
+                             threads: usize, checkpoints: &[usize])
     -> Result<Vec<LayerResult>, RuntimeError> {
     let n_jobs = jobs.len();
     let row_threads = (threads / n_jobs.max(1)).max(1);
     let (tx, rx) = std::sync::mpsc::channel();
+    // Scoped submission: jobs borrow the block's Gram stream stack
+    // (zero-copy views), so they go through `run_scoped`, which blocks
+    // until every job has finished.
+    let mut scoped: Vec<Box<dyn FnOnce() + Send + 'a>> =
+        Vec::with_capacity(n_jobs);
     for job in jobs {
         let tx = tx.clone();
         let refiner = refiner.clone();
         let checkpoints = checkpoints.to_vec();
-        pool.submit(move || {
+        scoped.push(Box::new(move || {
             let engine = refiner.local_engine()
                 .expect("offload engines are scheduled serially");
             let res = refine_job(engine.as_ref(), job, t_max,
                                  row_threads, &checkpoints);
             let _ = tx.send(res);
-        });
+        }));
     }
     drop(tx);
-    pool.wait();
+    pool.run_scoped(scoped);
     let mut results = Vec::new();
     for res in rx {
         results.push(res.map_err(RuntimeError::Msg)?);
@@ -333,15 +343,18 @@ pub fn prune(rt: &Runtime, store: &ParamStore, ds: &Dataset,
     }
 
     for &b in &blocks {
-        let stats = if cfg.sequential {
+        // Borrow (never clone) the Gram statistics: layer jobs hold
+        // zero-copy views into this block's stream stacks.
+        let stats_block;
+        let stats: &GramStats = if cfg.sequential {
             // Recalibrate with everything pruned so far applied.
             let t0 = Instant::now();
             let masked = store.masked(&masks);
-            let s = accumulate(rt, &masked, &calib)?;
+            stats_block = accumulate(rt, &masked, &calib)?;
             report.calib_seconds += t0.elapsed().as_secs_f64();
-            s
+            &stats_block
         } else {
-            stats_oneshot.clone().unwrap()
+            stats_oneshot.as_ref().expect("one-shot stats computed")
         };
 
         let layers: Vec<_> = meta.prunable.iter().enumerate()

@@ -90,7 +90,12 @@ impl RefineEngine for OffloadEngine<'_> {
             .clone();
         assert_eq!(k8.chunk_rows, k1.chunk_rows);
         let chunk = k8.chunk_rows;
-        let g_tensor = TensorData::from_matrix(g);
+        // One packing copy at the PJRT boundary (unavoidable: the
+        // artifact owns its buffers); the view itself is zero-copy.
+        let g_tensor = TensorData::F32 {
+            dims: vec![g.d, g.d],
+            data: g.as_slice().to_vec(),
+        };
 
         let mut rows: Vec<RowState> = (0..w.rows).map(|_| RowState {
             used: 0,
@@ -197,7 +202,7 @@ pub fn refine_layer_offload(
 ) -> Result<(LayerOutcome, BTreeMap<usize, Matrix>), RuntimeError> {
     let ctx = LayerContext {
         w,
-        g,
+        g: g.as_gram(),
         stats: None,
         pattern,
         t_max: cfg.t_max,

@@ -16,7 +16,7 @@
 //! verify the synthetic corpus actually produces correlated features
 //! (otherwise every experiment here would be trivial).
 
-use crate::util::tensor::Matrix;
+use crate::util::tensor::GramView;
 
 #[derive(Clone, Debug)]
 pub struct GramDiagnostics {
@@ -32,9 +32,9 @@ pub struct GramDiagnostics {
     pub energy_participation: f64,
 }
 
-pub fn diagnose(g: &Matrix) -> GramDiagnostics {
-    assert_eq!(g.rows, g.cols);
-    let d = g.rows;
+pub fn diagnose<'a>(g: impl Into<GramView<'a>>) -> GramDiagnostics {
+    let g = g.into();
+    let d = g.d;
     let diag: Vec<f64> =
         (0..d).map(|i| (g.at(i, i) as f64).max(0.0)).collect();
     let mut norms: Vec<f64> = diag.iter().map(|v| v.sqrt()).collect();
@@ -94,6 +94,7 @@ impl GramDiagnostics {
 mod tests {
     use super::*;
     use crate::util::prng::Rng;
+    use crate::util::tensor::Matrix;
 
     #[test]
     fn identity_gram_is_decorrelated() {

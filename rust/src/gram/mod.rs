@@ -15,7 +15,7 @@ use crate::pruning::dsnot::FeatureStats;
 use crate::runtime::manifest::{ModelMeta, PrunableLayer};
 use crate::runtime::service::{Runtime, RuntimeError};
 use crate::runtime::tensor_data::TensorData;
-use crate::util::tensor::Matrix;
+use crate::util::tensor::GramView;
 
 /// Stream order must match `calib_step`'s argument order (aot.py).
 pub const STREAMS: [&str; 4] = ["qkv", "o", "gu", "down"];
@@ -59,25 +59,38 @@ impl GramStats {
         if stream == "down" { self.meta.d_ff } else { self.meta.d_model }
     }
 
-    /// Gram matrix for one prunable layer (slice of its stream stack).
-    pub fn gram_for(&self, layer: &PrunableLayer) -> Matrix {
+    /// Gram matrix for one prunable layer: a zero-copy [`GramView`]
+    /// into its stream stack (no d*d materialisation — at LLM widths
+    /// the old per-access copy was 16M floats per layer).
+    pub fn gram_for(&self, layer: &PrunableLayer) -> GramView<'_> {
         let si = Self::stream_index(&layer.stream);
         let d = self.stream_width(&layer.stream);
         assert_eq!(d, layer.d_in);
         let data = self.grams[si].as_f32().unwrap();
         let offset = layer.block * d * d;
-        Matrix::from_vec(d, d, data[offset..offset + d * d].to_vec())
+        GramView::new(&data[offset..offset + d * d], d)
     }
 
-    /// DSnoT feature statistics for one layer.
+    /// Gram diagonal for one layer, sliced with stride d directly from
+    /// the stream stack (O(d) work — never materialises the d*d Gram).
+    pub fn diag_for(&self, layer: &PrunableLayer) -> Vec<f32> {
+        let si = Self::stream_index(&layer.stream);
+        let d = self.stream_width(&layer.stream);
+        assert_eq!(d, layer.d_in);
+        let data = self.grams[si].as_f32().unwrap();
+        let offset = layer.block * d * d;
+        (0..d).map(|i| data[offset + i * d + i]).collect()
+    }
+
+    /// DSnoT feature statistics for one layer (diagonal + feature
+    /// sums only; no Gram copy).
     pub fn feature_stats_for(&self, layer: &PrunableLayer) -> FeatureStats {
         let si = Self::stream_index(&layer.stream);
         let d = self.stream_width(&layer.stream);
         let sums = self.sums[si].as_f32().unwrap();
         let offset = layer.block * d;
-        let g = self.gram_for(layer);
-        FeatureStats::from_gram(&g.diag(), &sums[offset..offset + d],
-                                self.tokens)
+        FeatureStats::from_gram(&self.diag_for(layer),
+                                &sums[offset..offset + d], self.tokens)
     }
 
     /// Run one calibration batch through the artifact, updating stats.
@@ -132,8 +145,8 @@ mod tests {
                    &[meta.n_blocks, meta.d_ff, meta.d_ff]);
         for layer in &meta.prunable {
             let g = stats.gram_for(layer);
-            assert_eq!((g.rows, g.cols), (layer.d_in, layer.d_in));
-            assert!(g.data.iter().all(|&v| v == 0.0));
+            assert_eq!(g.d, layer.d_in);
+            assert!(g.as_slice().iter().all(|&v| v == 0.0));
         }
     }
 
@@ -150,5 +163,22 @@ mod tests {
             .find(|l| l.block == 1 && l.stream == "qkv").unwrap();
         assert_eq!(stats.gram_for(l_b0).at(0, 0), 0.0);
         assert_eq!(stats.gram_for(l_b1).at(0, 0), 42.0);
+    }
+
+    #[test]
+    fn diag_for_matches_gram_diagonal() {
+        let meta = tiny_meta();
+        let mut stats = GramStats::zeros(&meta);
+        // Fill block 0's qkv gram with distinguishable values.
+        let d = meta.d_model;
+        for (i, v) in stats.grams[0].as_f32_mut().unwrap()[..d * d]
+            .iter_mut()
+            .enumerate()
+        {
+            *v = i as f32;
+        }
+        let layer = meta.prunable.iter()
+            .find(|l| l.block == 0 && l.stream == "qkv").unwrap();
+        assert_eq!(stats.diag_for(layer), stats.gram_for(layer).diag());
     }
 }

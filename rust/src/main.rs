@@ -136,6 +136,8 @@ fn cmd_prune(argv: &[String]) -> CliResult {
                                   counts to snapshot (Table 3)")
         .flag("calib-batches", "8", "calibration batches")
         .flag("threads", "0", "worker threads (0 = all cores)")
+        .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd \
+                                  (scalar for cross-arm parity testing)")
         .bool_flag_on("layer-parallel", "refine independent layers of a \
                                          block concurrently (native and \
                                          dsnot engines)")
@@ -145,6 +147,7 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         .flag("artifacts", "artifacts", "artifact directory")
         .flag("out", "runs/pruned.ssck", "output checkpoint (with masks)");
     let args = spec.parse(argv)?;
+    sparseswaps::util::kernels::select(args.get("kernels"))?;
     let rt = runtime(&args)?;
     let meta = rt.manifest().config(args.get("config"))?.clone();
     let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;
@@ -169,9 +172,10 @@ fn cmd_prune(argv: &[String]) -> CliResult {
     let t0 = std::time::Instant::now();
     let (masks, rep) = prune(&rt, &store, &ds, &cfg)?;
     checkpoint::save(args.get("out"), &store, Some(&masks))?;
-    println!("pruned {} [{} warmstart, {} refiner, {}]:",
+    println!("pruned {} [{} warmstart, {} refiner, {}, {} kernels]:",
              meta.name, cfg.criterion.name(), cfg.refiner.label(),
-             cfg.pattern_kind.label());
+             cfg.pattern_kind.label(),
+             sparseswaps::util::kernels::active().name());
     println!("  layers: {}  sparsity: {:.2}%  total swaps: {}",
              rep.layers.len(), 100.0 * masks.overall_sparsity(),
              rep.layers.iter().map(|l| l.swaps).sum::<usize>());
@@ -233,8 +237,10 @@ fn cmd_report(argv: &[String]) -> CliResult {
         .flag("model", "gpt-a", "model for single-model experiments")
         .flag("artifacts", "artifacts", "artifact directory")
         .flag("out", "reports/report.md", "markdown output (appended)")
+        .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd")
         .bool_flag("quick", "tiny model, reduced budgets");
     let args = spec.parse(argv)?;
+    sparseswaps::util::kernels::select(args.get("kernels"))?;
     let rt = runtime(&args)?;
     let quick = args.get_bool("quick")
         || std::env::var("SPARSESWAPS_QUICK").is_ok();
@@ -355,7 +361,7 @@ fn cmd_analyze(argv: &[String]) -> CliResult {
     println!("{:<28} {}", "layer", "diagnostics");
     for layer in &meta.prunable {
         let g = stats.gram_for(layer);
-        let d = sparseswaps::gram::analysis::diagnose(&g);
+        let d = sparseswaps::gram::analysis::diagnose(g);
         println!("{:<28} {}", layer.name, d.summary());
     }
     Ok(())

@@ -302,7 +302,7 @@ mod tests {
         refine_layer(&w, &mut m_legacy, &stats, pattern,
                      &DsnotConfig::default());
         let ctx = LayerContext {
-            w: &w, g: &g, stats: Some(&stats), pattern,
+            w: &w, g: g.as_gram(), stats: Some(&stats), pattern,
             t_max: 0, threads: 2,
         };
         let mut m_engine = warm.clone();
@@ -322,7 +322,8 @@ mod tests {
         let pattern = Pattern::PerRow { keep: 10 };
         let mut mask = mask_from_scores(&saliency::magnitude(&w), pattern);
         let ctx = LayerContext {
-            w: &w, g: &g, stats: None, pattern, t_max: 0, threads: 1,
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 0,
+            threads: 1,
         };
         assert!(DsnotEngine::default()
                 .refine(&ctx, &mut mask, &[]).is_err());

@@ -24,15 +24,17 @@ use std::fmt;
 use crate::pruning::dsnot::FeatureStats;
 use crate::pruning::mask::Pattern;
 use crate::pruning::sparseswaps::{LayerOutcome, RowOutcome};
-use crate::util::tensor::Matrix;
+use crate::util::tensor::{GramView, Matrix};
 
 /// Everything a refiner may consume for one layer.  Borrowed, so the
 /// pipeline stays free to schedule layers concurrently.
 pub struct LayerContext<'a> {
     /// Dense weights, [d_out, d_in] (the paper's row-major layout).
     pub w: &'a Matrix,
-    /// Gram matrix of the layer's input stream, [d_in, d_in].
-    pub g: &'a Matrix,
+    /// Gram matrix of the layer's input stream, [d_in, d_in]: a
+    /// zero-copy view into the calibration stream stack (or into a
+    /// square `Matrix` via [`Matrix::as_gram`]).
+    pub g: GramView<'a>,
     /// Per-feature calibration statistics for surrogate-objective
     /// refiners (DSnoT); exact-objective engines ignore it.
     pub stats: Option<&'a FeatureStats>,
@@ -197,7 +199,8 @@ mod tests {
         let (w, g, mut mask, pattern) = instance();
         let before = mask.clone();
         let ctx = LayerContext {
-            w: &w, g: &g, stats: None, pattern, t_max: 10, threads: 1,
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 10,
+            threads: 1,
         };
         let out = NoopEngine.refine(&ctx, &mut mask, &[2, 5]).unwrap();
         assert_eq!(mask.data, before.data);

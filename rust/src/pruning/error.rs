@@ -2,12 +2,16 @@
 //!   L_i(m) = (w_i - m_i ⊙ w_i)^T G (w_i - m_i ⊙ w_i)        (Sec 2.1.2)
 //! and the correlation vector c = G((1-m) ⊙ w)                (Sec 2.1.3).
 
-use crate::util::tensor::{dot, Matrix};
+use crate::util::tensor::{dot, GramView, Matrix};
 
 /// Correlation vector c for one row: c = G q with q = (1-m) ⊙ w.
-pub fn corr_vector(w: &[f32], m: &[f32], g: &Matrix) -> Vec<f32> {
+/// `g` may be a borrowed [`GramView`] (zero-copy stream-stack slice)
+/// or a `&Matrix`.
+pub fn corr_vector<'a>(w: &[f32], m: &[f32],
+                       g: impl Into<GramView<'a>>) -> Vec<f32> {
+    let g = g.into();
     let d = w.len();
-    assert_eq!(g.rows, d);
+    assert_eq!(g.d, d);
     let q: Vec<f32> = w.iter().zip(m).map(|(&wv, &mv)| (1.0 - mv) * wv)
         .collect();
     // c_i = sum_j G_ij q_j; exploit q's sparsity (only pruned j non-zero).
@@ -34,19 +38,23 @@ pub fn row_loss_with_corr(w: &[f32], m: &[f32], c: &[f32]) -> f64 {
 }
 
 /// Exact per-row loss from scratch.
-pub fn row_loss(w: &[f32], m: &[f32], g: &Matrix) -> f64 {
+pub fn row_loss<'a>(w: &[f32], m: &[f32],
+                    g: impl Into<GramView<'a>>) -> f64 {
     let c = corr_vector(w, m, g);
     row_loss_with_corr(w, m, &c)
 }
 
 /// Per-row losses for a full layer. Returns one loss per row of `w`.
-pub fn layer_row_losses(w: &Matrix, mask: &Matrix, g: &Matrix) -> Vec<f64> {
+pub fn layer_row_losses<'a>(w: &Matrix, mask: &Matrix,
+                            g: impl Into<GramView<'a>>) -> Vec<f64> {
     assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+    let g = g.into();
     (0..w.rows).map(|r| row_loss(w.row(r), mask.row(r), g)).collect()
 }
 
 /// Total layer loss  ||W X - (M ⊙ W) X||_F^2  (Eq. 1).
-pub fn layer_loss(w: &Matrix, mask: &Matrix, g: &Matrix) -> f64 {
+pub fn layer_loss<'a>(w: &Matrix, mask: &Matrix,
+                      g: impl Into<GramView<'a>>) -> f64 {
     layer_row_losses(w, mask, g).iter().sum()
 }
 

@@ -8,13 +8,13 @@
 //! loss L = sum_{i,j in P} w_i w_j G_ij is evaluated over the pruned
 //! set only, so each candidate costs O(|P|^2).
 
-use crate::util::tensor::Matrix;
+use crate::util::tensor::{GramView, Matrix};
 
 /// Max dimension we allow (C(24,12) ~ 2.7M subsets keeps this fast).
 pub const MAX_EXACT_DIM: usize = 24;
 
 /// Loss of pruning exactly the set bits of `pruned` (bitmask over d).
-fn loss_of_pruned_set(w: &[f32], g: &Matrix, pruned: u64) -> f64 {
+fn loss_of_pruned_set(w: &[f32], g: GramView<'_>, pruned: u64) -> f64 {
     let mut idx = [0usize; MAX_EXACT_DIM];
     let mut n = 0;
     let mut bits = pruned;
@@ -48,8 +48,9 @@ fn next_subset(v: u64) -> u64 {
 
 /// Optimal per-row mask: keep `keep` of `d` weights minimising the exact
 /// loss.  Returns (mask_row, optimal_loss).
-pub fn optimal_row_mask(w: &[f32], g: &Matrix, keep: usize)
-    -> (Vec<f32>, f64) {
+pub fn optimal_row_mask<'a>(w: &[f32], g: impl Into<GramView<'a>>,
+                            keep: usize) -> (Vec<f32>, f64) {
+    let g = g.into();
     let d = w.len();
     assert!(d <= MAX_EXACT_DIM, "exact solver capped at {MAX_EXACT_DIM}");
     assert!(keep <= d);
@@ -82,8 +83,9 @@ pub fn optimal_row_mask(w: &[f32], g: &Matrix, keep: usize)
 }
 
 /// Exact optimum for every row of a small layer.
-pub fn optimal_layer_mask(w: &Matrix, g: &Matrix, keep: usize)
-    -> (Matrix, f64) {
+pub fn optimal_layer_mask<'a>(w: &Matrix, g: impl Into<GramView<'a>>,
+                              keep: usize) -> (Matrix, f64) {
+    let g = g.into();
     let mut mask = Matrix::zeros(w.rows, w.cols);
     let mut total = 0.0;
     for r in 0..w.rows {

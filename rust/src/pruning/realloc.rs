@@ -133,15 +133,12 @@ pub fn reallocate_layer(w: &Matrix, mask: &mut Matrix, g: &Matrix,
             break;
         }
         // Apply: row rr keeps p; row dr prunes u.  Update c per Eq. 6
-        // (one-sided variants: only one index flips per row).
+        // (one-sided variants: only one index flips per row; G is
+        // symmetric, so column p is row p — one kernel axpy each).
         ms[rr][p] = 1.0;
-        for i in 0..d {
-            cs[rr][i] -= w.row(rr)[p] * g.at(i, p);
-        }
+        crate::util::tensor::axpy(-w.row(rr)[p], g.row(p), &mut cs[rr]);
         ms[dr][u] = 0.0;
-        for i in 0..d {
-            cs[dr][i] += w.row(dr)[u] * g.at(i, u);
-        }
+        crate::util::tensor::axpy(w.row(dr)[u], g.row(u), &mut cs[dr]);
         moves += 1;
     }
 

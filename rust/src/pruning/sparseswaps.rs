@@ -13,32 +13,40 @@
 //!   a_u = 2 w_u c_u + w_u^2 G_uu   (cost of pruning kept u)
 //!   b_p = -2 w_p c_p + w_p^2 G_pp  (gain of reviving pruned p)
 //! so the inner loop is one multiply-add per pair — the same O(|U||P|)
-//! complexity the paper reports.
+//! complexity the paper reports.  The inner loop itself runs through
+//! the runtime-dispatched kernel layer (`util::kernels::pair_scan_arm`:
+//! scalar, or AVX2 f64 lanes with exact first-wins argmin semantics).
 //!
 //! Two loop implementations share those semantics:
 //!
 //!   * [`refine_layer`] / [`NativeEngine`] — the production *incremental
 //!     active-set* loop: the kept/pruned partition, the correlation
-//!     vector c, and per-row scratch for the separable terms persist
-//!     across swaps (and across checkpoint segments), and kept indices
+//!     vector c, and slab-per-worker scratch for the separable terms
+//!     persist across swaps *and* checkpoint segments (row states are
+//!     advanced in place — never cloned per segment), and kept indices
 //!     whose conservative Eq.-5 lower bound cannot beat the current
-//!     best pair skip their inner scan entirely;
+//!     best pair skip their inner scan entirely.  The bound is
+//!     per-N:M-block (falling back to the whole row for unstructured
+//!     patterns), so N:M scans benefit too;
 //!   * [`refine_layer_rescan`] — the pre-refactor loop that rebuilds
 //!     the partition and both term vectors from scratch on every
 //!     accepted swap.  Retained as the bit-exact oracle for the parity
 //!     property tests and as the baseline arm of the `ablation_engine`
 //!     bench.
 //!
-//! Both produce bit-identical masks: the incremental loop evaluates the
-//! same f64 expressions in the same order and only skips pairs that
-//! provably cannot win the argmin.
+//! Both produce bit-identical masks on every dispatch arm: the
+//! incremental loop evaluates the same f64 expressions in the same
+//! order, only skips pairs that provably cannot win the argmin, and
+//! the Eq.-6 update (`axpy`) is elementwise mul+add in both kernel
+//! arms, so even the scalar-vs-SIMD masks agree bit-for-bit.
 
 use crate::pruning::engine::{
     drive_segments, LayerContext, RefineEngine, RefineError, RefineOutcome,
 };
 use crate::pruning::error::{corr_vector, row_loss, row_loss_with_corr};
 use crate::pruning::mask::Pattern;
-use crate::util::tensor::{axpy, Matrix};
+use crate::util::kernels::{self, Arm};
+use crate::util::tensor::{axpy, GramView, Matrix};
 use crate::util::threadpool::parallel_map;
 
 #[derive(Clone, Copy, Debug)]
@@ -94,8 +102,10 @@ impl LayerOutcome {
 
 /// Best feasible 1-swap for one row given precomputed c.
 /// Returns (dl, u, p) or None when no feasible pair exists.
-pub fn best_swap(w: &[f32], m: &[f32], c: &[f32], g: &Matrix,
-                 nm_block: usize) -> Option<(f64, usize, usize)> {
+pub fn best_swap<'a>(w: &[f32], m: &[f32], c: &[f32],
+                     g: impl Into<GramView<'a>>, nm_block: usize)
+    -> Option<(f64, usize, usize)> {
+    let g = g.into();
     let d = w.len();
     let diag = |i: usize| g.at(i, i);
 
@@ -163,8 +173,10 @@ pub fn best_swap(w: &[f32], m: &[f32], c: &[f32], g: &Matrix,
 /// Run Algorithm 1 on a single row, mutating the mask row in place.
 /// Full-rescan reference loop: every accepted swap rebuilds the
 /// partition and both Eq.-5 term vectors via [`best_swap`].
-pub fn refine_row(w: &[f32], m: &mut [f32], g: &Matrix, nm_block: usize,
-                  cfg: &SwapConfig) -> RowOutcome {
+pub fn refine_row<'a>(w: &[f32], m: &mut [f32],
+                      g: impl Into<GramView<'a>>, nm_block: usize,
+                      cfg: &SwapConfig) -> RowOutcome {
+    let g = g.into();
     let mut c = corr_vector(w, m, g);
     let loss_before = row_loss_with_corr(w, m, &c);
     let mut swaps = 0;
@@ -196,11 +208,13 @@ pub fn refine_row(w: &[f32], m: &mut [f32], g: &Matrix, nm_block: usize,
 /// per-row state on every swap.  Kept as the bit-exact reference for
 /// [`refine_layer`] (see the parity properties in `tests/properties.rs`)
 /// and as the baseline arm of the `ablation_engine` bench.
-pub fn refine_layer_rescan(w: &Matrix, mask: &mut Matrix, g: &Matrix,
-                           pattern: Pattern, cfg: &SwapConfig,
-                           threads: usize) -> LayerOutcome {
+pub fn refine_layer_rescan<'a>(w: &Matrix, mask: &mut Matrix,
+                               g: impl Into<GramView<'a>>,
+                               pattern: Pattern, cfg: &SwapConfig,
+                               threads: usize) -> LayerOutcome {
+    let g = g.into();
     assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
-    assert_eq!(g.rows, w.cols);
+    assert_eq!(g.d, w.cols);
     let nm_block = pattern.nm_block();
     let rows: Vec<(Vec<f32>, RowOutcome)> =
         parallel_map(w.rows, threads, |r| {
@@ -221,9 +235,9 @@ pub fn refine_layer_rescan(w: &Matrix, mask: &mut Matrix, g: &Matrix,
 /// Persistent per-row state of the incremental engine: the mask row,
 /// the Eq.-6-maintained correlation vector, and the kept/pruned index
 /// partition (each ascending).  Survives accepted swaps *and*
-/// checkpoint segment boundaries, so nothing is ever rebuilt from
-/// scratch mid-refinement.
-#[derive(Clone)]
+/// checkpoint segment boundaries — rows are advanced *in place*
+/// (chunked across workers), so nothing is cloned or rebuilt
+/// mid-refinement.
 struct RowState {
     mask: Vec<f32>,
     c: Vec<f32>,
@@ -235,7 +249,7 @@ struct RowState {
 }
 
 impl RowState {
-    fn init(w: &[f32], m: &[f32], g: &Matrix) -> RowState {
+    fn init(w: &[f32], m: &[f32], g: GramView<'_>) -> RowState {
         let c = corr_vector(w, m, g);
         let loss_before = row_loss_with_corr(w, m, &c);
         let mut kept = Vec::with_capacity(m.len());
@@ -260,11 +274,12 @@ impl RowState {
 
     /// Apply an accepted swap (prune u, revive p): Eq.-6 update of c
     /// plus an O(log d) sorted-partition exchange.
-    fn apply_swap(&mut self, w: &[f32], g: &Matrix, u: usize, p: usize) {
+    fn apply_swap(&mut self, arm: Arm, w: &[f32], g: GramView<'_>,
+                  u: usize, p: usize) {
         self.mask[u] = 0.0;
         self.mask[p] = 1.0;
-        axpy(w[u], g.row(u), &mut self.c);
-        axpy(-w[p], g.row(p), &mut self.c);
+        kernels::axpy_arm(arm, w[u], g.row(u), &mut self.c);
+        kernels::axpy_arm(arm, -w[p], g.row(p), &mut self.c);
         let ku = self.kept.binary_search(&u).expect("u was kept");
         self.kept.remove(ku);
         let ki = self.kept.binary_search(&p).unwrap_err();
@@ -277,56 +292,88 @@ impl RowState {
     }
 }
 
-/// Reusable scratch for the pair scan: refilled in O(|U| + |P|) per
-/// swap instead of reallocated four times per swap as the rescan loop
-/// does.
+/// Slab-per-worker scratch for the pair scan: allocated once per
+/// worker when refinement starts and reused across every row *and*
+/// every checkpoint segment that worker processes (the old design
+/// reallocated per row per segment).
 struct Scratch {
-    a: Vec<f64>,
+    /// Separable Eq.-5 gain of reviving each pruned index.
     b: Vec<f64>,
+    /// w_p as f64, packed over the pruned partition.
     wp: Vec<f64>,
+    /// G_up packed (and widened) over the scanned pruned range.
+    gp: Vec<f64>,
+    /// Per-N:M-block minimum of `b` (skip bound); empty when
+    /// unstructured.
+    blk_min_b: Vec<f64>,
+    /// Per-N:M-block max |w_p| (skip bound); empty when unstructured.
+    blk_wmax: Vec<f64>,
 }
 
 impl Scratch {
-    fn new(d: usize) -> Scratch {
+    fn new(d: usize, nm_block: usize) -> Scratch {
+        let nblocks = if nm_block == 0 { 0 } else { d.div_ceil(nm_block) };
         Scratch {
-            a: Vec::with_capacity(d),
             b: Vec::with_capacity(d),
             wp: Vec::with_capacity(d),
+            gp: Vec::with_capacity(d),
+            blk_min_b: vec![0.0; nblocks],
+            blk_wmax: vec![0.0; nblocks],
         }
     }
 }
 
 /// Identical selection to [`best_swap`] — same argmin, same first-wins
 /// tie-breaking, bit-identical f64 arithmetic — but reading the
-/// maintained partition, reusing scratch buffers, and (for the per-row
-/// pattern) skipping kept indices whose conservative lower bound on any
-/// reachable dL cannot beat the current best pair.
-fn best_swap_active(w: &[f32], st: &RowState, g: &Matrix, nm_block: usize,
-                    gmax: &[f64], ws: &mut Scratch)
+/// maintained partition, reusing the worker slab, running the inner
+/// loop through the kernel layer, and skipping kept indices whose
+/// conservative lower bound on any reachable dL cannot beat the
+/// current best pair.  `gmax[u]` is max |G_uj| over the columns u's
+/// scan can touch (its N:M block, or the whole row when
+/// unstructured), so the bound is tight per block and N:M scans
+/// benefit too.
+fn best_swap_active(arm: Arm, w: &[f32], st: &RowState, g: GramView<'_>,
+                    nm_block: usize, gmax: &[f64], ws: &mut Scratch)
     -> Option<(f64, usize, usize)> {
     let (kept, pruned) = (&st.kept, &st.pruned);
     if kept.is_empty() || pruned.is_empty() {
         return None;
     }
     let c = &st.c;
-    ws.a.clear();
-    ws.a.extend(kept.iter().map(|&u| {
-        2.0 * w[u] as f64 * c[u] as f64
-            + (w[u] as f64).powi(2) * g.at(u, u) as f64
-    }));
+
+    // Pack the separable pruned-side terms once per call, tracking the
+    // skip-bound statistics per scan scope (row, or N:M block).
     ws.b.clear();
     ws.wp.clear();
     let mut min_b = f64::INFINITY;
     let mut wmax = 0.0f64;
+    if nm_block > 0 {
+        for v in ws.blk_min_b.iter_mut() {
+            *v = f64::INFINITY;
+        }
+        for v in ws.blk_wmax.iter_mut() {
+            *v = 0.0;
+        }
+    }
     for &p in pruned {
         let bp = -2.0 * w[p] as f64 * c[p] as f64
             + (w[p] as f64).powi(2) * g.at(p, p) as f64;
-        if bp < min_b {
-            min_b = bp;
-        }
         let wpf = w[p] as f64;
-        if wpf.abs() > wmax {
-            wmax = wpf.abs();
+        if nm_block == 0 {
+            if bp < min_b {
+                min_b = bp;
+            }
+            if wpf.abs() > wmax {
+                wmax = wpf.abs();
+            }
+        } else {
+            let blk = p / nm_block;
+            if bp < ws.blk_min_b[blk] {
+                ws.blk_min_b[blk] = bp;
+            }
+            if wpf.abs() > ws.blk_wmax[blk] {
+                ws.blk_wmax[blk] = wpf.abs();
+            }
         }
         ws.b.push(bp);
         ws.wp.push(wpf);
@@ -335,11 +382,13 @@ fn best_swap_active(w: &[f32], st: &RowState, g: &Matrix, nm_block: usize,
     let mut best_dl = f64::INFINITY;
     let mut best: Option<(usize, usize)> = None;
     if nm_block == 0 {
-        for (ku, &u) in kept.iter().enumerate() {
-            let au = ws.a[ku];
+        for &u in kept.iter() {
+            let wu = w[u] as f64;
             // 2.0 * x is exact in f64, so (2*w_u)*w_p*G_up below rounds
             // identically to best_swap's 2.0*w_u*w_p*G_up.
-            let wu2 = 2.0 * w[u] as f64;
+            let au = 2.0 * wu * c[u] as f64
+                + wu.powi(2) * g.at(u, u) as f64;
+            let wu2 = 2.0 * wu;
             // Active-set skip: dL(u, .) >= a_u + min_p b_p
             // - |2 w_u| max_p|w_p| max_j|G_uj| in exact arithmetic; the
             // relative slack dwarfs f64 rounding, so a skipped u can
@@ -350,45 +399,61 @@ fn best_swap_active(w: &[f32], st: &RowState, g: &Matrix, nm_block: usize,
                 continue;
             }
             let grow = g.row(u);
-            for ((&p, &bp), &wpf) in
-                pruned.iter().zip(&ws.b).zip(&ws.wp) {
-                let dl = au + bp - wu2 * wpf * grow[p] as f64;
-                if dl < best_dl {
-                    best_dl = dl;
-                    best = Some((u, p));
-                }
+            ws.gp.clear();
+            ws.gp.extend(pruned.iter().map(|&p| grow[p] as f64));
+            if let Some((dl, kp)) = kernels::pair_scan_arm(
+                arm, au, wu2, &ws.b, &ws.wp, &ws.gp, best_dl) {
+                best_dl = dl;
+                best = Some((u, pruned[kp]));
             }
         }
     } else {
-        // N:M: only same-block pairs are feasible; blocks are tiny, so
-        // the bound-skip is not worth the bookkeeping here.
-        for (ku, &u) in kept.iter().enumerate() {
+        // N:M: only same-block pairs are feasible; the per-block bound
+        // (min_b, wmax and gmax restricted to u's block) lets whole
+        // blocks skip their scan.
+        for &u in kept.iter() {
             let blk = u / nm_block;
-            let au = ws.a[ku];
-            let wu2 = 2.0 * w[u] as f64;
-            let grow = g.row(u);
             let lo = pruned.partition_point(|&p| p < blk * nm_block);
             let hi = pruned.partition_point(|&p| p < (blk + 1) * nm_block);
-            for kp in lo..hi {
-                let p = pruned[kp];
-                let dl = au + ws.b[kp] - wu2 * ws.wp[kp] * grow[p] as f64;
-                if dl < best_dl {
-                    best_dl = dl;
-                    best = Some((u, p));
-                }
+            if lo == hi {
+                continue;
+            }
+            let wu = w[u] as f64;
+            let au = 2.0 * wu * c[u] as f64
+                + wu.powi(2) * g.at(u, u) as f64;
+            let wu2 = 2.0 * wu;
+            let min_b_blk = ws.blk_min_b[blk];
+            let cap = wu2.abs() * ws.blk_wmax[blk] * gmax[u];
+            let slack = 1e-9 * (au.abs() + min_b_blk.abs() + cap + 1.0);
+            if best.is_some() && au + min_b_blk - cap - slack >= best_dl {
+                continue;
+            }
+            let grow = g.row(u);
+            ws.gp.clear();
+            ws.gp.extend(
+                pruned[lo..hi].iter().map(|&p| grow[p] as f64));
+            if let Some((dl, kp)) = kernels::pair_scan_arm(
+                arm, au, wu2, &ws.b[lo..hi], &ws.wp[lo..hi], &ws.gp,
+                best_dl) {
+                best_dl = dl;
+                best = Some((u, pruned[lo + kp]));
             }
         }
     }
     best.map(|(u, p)| (best_dl, u, p))
 }
 
-/// Advance one row by up to `budget` accepted swaps.
-fn advance_row(w: &[f32], g: &Matrix, nm_block: usize, eps: f64,
-               gmax: &[f64], budget: usize, st: &mut RowState) {
-    let mut ws = Scratch::new(w.len());
+/// Advance one row by up to `budget` accepted swaps, reusing the
+/// worker's slab.
+#[allow(clippy::too_many_arguments)]
+fn advance_row(arm: Arm, w: &[f32], g: GramView<'_>, nm_block: usize,
+               eps: f64, gmax: &[f64], budget: usize, st: &mut RowState,
+               ws: &mut Scratch) {
     for _ in 0..budget {
-        match best_swap_active(w, st, g, nm_block, gmax, &mut ws) {
-            Some((dl, u, p)) if dl < -eps => st.apply_swap(w, g, u, p),
+        match best_swap_active(arm, w, st, g, nm_block, gmax, ws) {
+            Some((dl, u, p)) if dl < -eps => {
+                st.apply_swap(arm, w, g, u, p)
+            }
             _ => {
                 st.converged = true;
                 break;
@@ -399,13 +464,17 @@ fn advance_row(w: &[f32], g: &Matrix, nm_block: usize, eps: f64,
 
 /// The incremental active-set SparseSwaps engine (pure Rust).
 ///
-/// Row state persists across swaps and checkpoint segments, so driving
-/// Table-3 snapshots costs nothing beyond the mask copies, and the
-/// final losses are still recomputed from scratch (no drift).
+/// Row state persists across swaps and checkpoint segments (advanced
+/// in place — no per-segment clones), so driving Table-3 snapshots
+/// costs nothing beyond the mask copies, and the final losses are
+/// still recomputed from scratch (no drift).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeEngine {
     /// Minimum improvement to accept a swap (paper uses 0 = strict).
     pub eps: f64,
+    /// Kernel dispatch arm override (parity tests and benches);
+    /// `None` uses the process-wide arm (`--kernels`).
+    pub arm: Option<Arm>,
 }
 
 impl RefineEngine for NativeEngine {
@@ -418,37 +487,63 @@ impl RefineEngine for NativeEngine {
         -> Result<RefineOutcome, RefineError> {
         let (w, g) = (ctx.w, ctx.g);
         assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
-        assert_eq!(g.rows, w.cols);
+        assert_eq!(g.d, w.cols);
+        let d = w.cols;
         let nm_block = ctx.pattern.nm_block();
         let threads = ctx.threads.max(1);
         let eps = self.eps;
-        // Row-wise max |G_uj|, shared by every row's skip bound.
-        let gmax: Vec<f64> = (0..g.rows)
-            .map(|j| g.row(j).iter()
-                 .map(|&v| (v as f64).abs())
-                 .fold(0.0, f64::max))
-            .collect();
+        let arm = self.arm.unwrap_or_else(kernels::active);
+        // Skip-bound table: max |G_uj| over the columns u's scan can
+        // reach — its N:M block, or the whole row when unstructured.
+        let gmax: Vec<f64> = parallel_map(d, threads, |u| {
+            let (lo, hi) = if nm_block == 0 {
+                (0, d)
+            } else {
+                let blk = u / nm_block;
+                (blk * nm_block, ((blk + 1) * nm_block).min(d))
+            };
+            g.row(u)[lo..hi].iter()
+                .map(|&v| (v as f64).abs())
+                .fold(0.0, f64::max)
+        });
         let mut states: Vec<RowState> = parallel_map(w.rows, threads, |r| {
             RowState::init(w.row(r), mask.row(r), g)
         });
+        // Slab-per-worker scratch, reused across checkpoint segments.
+        let n_workers = threads.min(w.rows.max(1));
+        let mut slabs: Vec<Scratch> = (0..n_workers)
+            .map(|_| Scratch::new(d, nm_block))
+            .collect();
         let snapshots = drive_segments(ctx.t_max, checkpoints, mask,
                                        |mask, budget| {
             if states.iter().all(|s| s.converged) {
                 return Ok(0);
             }
-            let advanced: Vec<RowState> =
-                parallel_map(w.rows, threads, |r| {
-                    let mut st = states[r].clone();
-                    if !st.converged {
-                        advance_row(w.row(r), g, nm_block, eps, &gmax,
-                                    budget, &mut st);
+            let chunk = w.rows.div_ceil(n_workers).max(1);
+            {
+                let gmax = &gmax;
+                std::thread::scope(|scope| {
+                    for (ci, (sts, slab)) in states
+                        .chunks_mut(chunk)
+                        .zip(slabs.iter_mut())
+                        .enumerate()
+                    {
+                        scope.spawn(move || {
+                            for (k, st) in sts.iter_mut().enumerate() {
+                                let r = ci * chunk + k;
+                                if !st.converged {
+                                    advance_row(arm, w.row(r), g,
+                                                nm_block, eps, gmax,
+                                                budget, st, slab);
+                                }
+                            }
+                        });
                     }
-                    st
                 });
-            for (r, st) in advanced.iter().enumerate() {
+            }
+            for (r, st) in states.iter().enumerate() {
                 mask.row_mut(r).copy_from_slice(&st.mask);
             }
-            states = advanced;
             Ok(budget)
         })?;
         // Final losses recomputed from scratch (no accumulated drift),
@@ -475,18 +570,19 @@ impl RefineEngine for NativeEngine {
 /// "fully parallelizable across rows" claim).  Delegates to the
 /// incremental [`NativeEngine`]; bit-identical to
 /// [`refine_layer_rescan`].
-pub fn refine_layer(w: &Matrix, mask: &mut Matrix, g: &Matrix,
-                    pattern: Pattern, cfg: &SwapConfig, threads: usize)
+pub fn refine_layer<'a>(w: &Matrix, mask: &mut Matrix,
+                        g: impl Into<GramView<'a>>, pattern: Pattern,
+                        cfg: &SwapConfig, threads: usize)
     -> LayerOutcome {
     let ctx = LayerContext {
         w,
-        g,
+        g: g.into(),
         stats: None,
         pattern,
         t_max: cfg.t_max,
         threads,
     };
-    NativeEngine { eps: cfg.eps }
+    NativeEngine { eps: cfg.eps, arm: None }
         .refine(&ctx, mask, &[])
         .expect("native engine is infallible")
         .layer
@@ -649,13 +745,48 @@ mod tests {
     }
 
     #[test]
+    fn kernel_arms_produce_identical_masks() {
+        // The Eq.-6 axpy is elementwise in both arms and the pair scan
+        // evaluates identical f64 values, so scalar and SIMD runs land
+        // on bit-identical masks (and swap counts).
+        for pattern in [Pattern::PerRow { keep: 10 },
+                        Pattern::Nm { n: 2, m: 4 }] {
+            let (w, g, _) = instance(42, 64, 6, 32);
+            let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                        pattern);
+            let ctx = LayerContext {
+                w: &w, g: g.as_gram(), stats: None, pattern,
+                t_max: 25, threads: 2,
+            };
+            let mut reference: Option<(Vec<f32>, usize)> = None;
+            for arm in kernels::arms() {
+                let engine = NativeEngine { eps: 0.0, arm: Some(arm) };
+                let mut mask = warm.clone();
+                let out = engine.refine(&ctx, &mut mask, &[]).unwrap();
+                match &reference {
+                    None => {
+                        reference =
+                            Some((mask.data.clone(),
+                                  out.layer.total_swaps()));
+                    }
+                    Some((m0, s0)) => {
+                        assert_eq!(&mask.data, m0, "arm {arm:?}");
+                        assert_eq!(out.layer.total_swaps(), *s0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn engine_checkpoints_match_plain_run() {
         let (w, g, _) = instance(9, 48, 4, 24);
         let pattern = Pattern::PerRow { keep: 9 };
         let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
                                     pattern);
         let ctx = LayerContext {
-            w: &w, g: &g, stats: None, pattern, t_max: 20, threads: 1,
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 20,
+            threads: 1,
         };
         let mut plain = warm.clone();
         NativeEngine::default().refine(&ctx, &mut plain, &[]).unwrap();
@@ -682,7 +813,8 @@ mod tests {
         let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
                                     pattern);
         let ctx = LayerContext {
-            w: &w, g: &g, stats: None, pattern, t_max: 0, threads: 1,
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 0,
+            threads: 1,
         };
         let mut mask = warm.clone();
         let out = NativeEngine::default()

@@ -142,6 +142,33 @@ impl Table {
     }
 }
 
+/// GFLOP/s given a flop count and mean nanoseconds (flops/ns happens
+/// to equal GFLOP/s exactly).
+pub fn gflops(flops: f64, mean_ns: f64) -> f64 {
+    flops / mean_ns.max(1e-9)
+}
+
+/// Read-modify-write one top-level section of a JSON report file, so
+/// several bench targets can contribute to a combined report (e.g.
+/// `reports/bench_kernels.json`: `microbench` writes "kernels",
+/// `ablation_engine` writes "engine").  A missing or unparsable file
+/// starts from an empty object.
+pub fn merge_json_section(path: &str, key: &str,
+                          value: crate::util::jsonlite::Json)
+    -> std::io::Result<()> {
+    use crate::util::jsonlite::Json;
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|json| json.as_obj().cloned())
+        .unwrap_or_default();
+    root.insert(key.to_string(), value);
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, format!("{}\n", Json::Obj(root)))
+}
+
 /// ASCII series plot for figure-style outputs (Fig. 1 / Fig. 2).
 pub fn ascii_plot(title: &str, xs: &[f64], series: &[(&str, Vec<f64>)],
                   width: usize, height: usize) -> String {
@@ -218,6 +245,31 @@ mod tests {
     #[should_panic(expected = "row width mismatch")]
     fn table_rejects_bad_row() {
         Table::new("t", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn merge_json_section_combines_writers() {
+        use crate::util::jsonlite::Json;
+        let path = std::env::temp_dir()
+            .join(format!("ss_bench_merge_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        merge_json_section(&path, "kernels",
+                           Json::obj(vec![("n", Json::num(1.0))]))
+            .unwrap();
+        merge_json_section(&path, "engine",
+                           Json::obj(vec![("d", Json::num(2.0))]))
+            .unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let root = Json::parse(text.trim()).unwrap();
+        assert_eq!(root.path("kernels.n").unwrap(), &Json::num(1.0));
+        assert_eq!(root.path("engine.d").unwrap(), &Json::num(2.0));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn gflops_is_flops_per_ns() {
+        assert!((gflops(2e9, 1e9) - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,905 @@
+//! Runtime-dispatched SIMD kernel layer — the single compute substrate
+//! under every inner-loop operation of Algorithm 1.
+//!
+//! Two dispatch arms:
+//!
+//!   * `scalar` — the portable baseline.  Bit-identical to the
+//!     pre-kernel-layer code (`dot` keeps the 4-lane unrolled
+//!     reduction, `axpy` the plain elementwise update, `matmul`/`syrk`
+//!     the same per-element accumulation order), so masks and losses
+//!     are unchanged on every platform.
+//!   * `simd` — AVX2/FMA via `std::arch`, available on x86-64 hosts
+//!     that report both features at runtime
+//!     (`is_x86_feature_detected!`).
+//!
+//! The active arm is chosen once per process through a `OnceLock`:
+//! `--kernels=scalar|simd|auto` (CLI) or the `SPARSESWAPS_KERNELS`
+//! environment variable override auto-detection; parity tests and
+//! benches bypass the global and call the `*_arm` variants directly.
+//!
+//! Determinism guarantees (relied on by the property tests and the
+//! engine parity oracle):
+//!
+//!   * every kernel is deterministic for a fixed arm and input;
+//!   * `axpy` and `axpy_dot`'s update are elementwise mul+add in BOTH
+//!     arms (no FMA contraction), so the Eq.-6 correlation state — and
+//!     therefore every swap decision and mask — is bit-identical
+//!     across arms;
+//!   * `pair_scan` evaluates the separable Eq.-5 delta with the exact
+//!     scalar rounding sequence in both arms and resolves argmin ties
+//!     by first (lowest) index, matching the scalar loop's strict
+//!     `dl < best` first-wins semantics;
+//!   * `dot`, `matmul` and `syrk` may use FMA and a different
+//!     reduction shape on the `simd` arm; results agree with `scalar`
+//!     to relative 1e-4 on realistic inputs (property-tested).
+
+use std::sync::OnceLock;
+
+use crate::util::tensor::Matrix;
+
+/// A dispatch arm of the kernel layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Arm {
+    Scalar,
+    Simd,
+}
+
+impl Arm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arm::Scalar => "scalar",
+            Arm::Simd => "simd",
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+pub fn simd_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn simd_available() -> bool {
+    false
+}
+
+/// Best arm this host supports.
+pub fn detect() -> Arm {
+    if simd_available() {
+        Arm::Simd
+    } else {
+        Arm::Scalar
+    }
+}
+
+/// Every arm usable on this host (scalar always; simd when detected).
+/// Parity tests and benches sweep this list.
+pub fn arms() -> Vec<Arm> {
+    let mut out = vec![Arm::Scalar];
+    if simd_available() {
+        out.push(Arm::Simd);
+    }
+    out
+}
+
+static ACTIVE: OnceLock<Arm> = OnceLock::new();
+
+/// The process-wide arm, selected once: `select()` wins if called
+/// before first use, then `SPARSESWAPS_KERNELS=scalar|simd`, then
+/// runtime detection.
+pub fn active() -> Arm {
+    *ACTIVE.get_or_init(|| match std::env::var("SPARSESWAPS_KERNELS") {
+        Ok(v) if v == "scalar" => Arm::Scalar,
+        Ok(v) if v == "simd" && simd_available() => Arm::Simd,
+        _ => detect(),
+    })
+}
+
+/// Lock the process-wide arm from a CLI flag (`--kernels=...`).
+/// `auto` defers to [`active`] (so the `SPARSESWAPS_KERNELS` env
+/// override still applies); explicit names lock the arm.  Errors on
+/// unknown names, on `simd` when the host lacks AVX2/FMA, and when a
+/// *different* arm was already locked in.
+pub fn select(name: &str) -> Result<Arm, String> {
+    let want = match name {
+        // Don't lock: let the env override / detection decide lazily.
+        "" | "auto" => return Ok(active()),
+        "scalar" => Arm::Scalar,
+        "simd" => {
+            if !simd_available() {
+                return Err("SIMD kernels unavailable on this host \
+                            (needs x86-64 with AVX2 and FMA)"
+                    .into());
+            }
+            Arm::Simd
+        }
+        other => {
+            return Err(format!(
+                "unknown kernel arm {other:?} (want auto|scalar|simd)"
+            ))
+        }
+    };
+    if ACTIVE.set(want).is_err() {
+        let cur = *ACTIVE.get().expect("arm initialised");
+        if cur != want {
+            return Err(format!(
+                "kernel arm already locked to {} for this process",
+                cur.name()
+            ));
+        }
+    }
+    Ok(want)
+}
+
+// --- public ops (global-arm wrappers + explicit-arm variants) ---------------
+
+/// Dot product of two equally-sized f32 slices.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    dot_arm(active(), a, b)
+}
+
+pub fn dot_arm(arm: Arm, a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if arm == Arm::Simd && simd_available() {
+        // SAFETY: AVX2+FMA presence verified at runtime.
+        return unsafe { avx2::dot(a, b) };
+    }
+    let _ = arm;
+    scalar::dot(a, b)
+}
+
+/// y += alpha * x (elementwise; bit-identical across arms).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    axpy_arm(active(), alpha, x, y)
+}
+
+pub fn axpy_arm(arm: Arm, alpha: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if arm == Arm::Simd && simd_available() {
+        // SAFETY: AVX2 presence verified at runtime.
+        unsafe { avx2::axpy(alpha, x, y) };
+        return;
+    }
+    let _ = arm;
+    scalar::axpy(alpha, x, y)
+}
+
+/// Fused update + readback: `y += alpha * x`, returns `x . y_updated`
+/// in one pass over the operands.  The update half is bit-identical
+/// across arms (mul+add, like [`axpy`]); the returned dot may differ
+/// in reduction order on the `simd` arm.
+///
+/// Part of the kernel API surface (bench + property-tested) for
+/// fused update-then-readback loops; the refinement path currently
+/// keeps its loss accumulation in f64 and so uses plain [`axpy`] —
+/// wire this in wherever an f32 readback of the updated vector is
+/// acceptable.
+#[inline]
+pub fn axpy_dot(alpha: f32, x: &[f32], y: &mut [f32]) -> f32 {
+    axpy_dot_arm(active(), alpha, x, y)
+}
+
+pub fn axpy_dot_arm(arm: Arm, alpha: f32, x: &[f32], y: &mut [f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if arm == Arm::Simd && simd_available() {
+        // SAFETY: AVX2+FMA presence verified at runtime.
+        return unsafe { avx2::axpy_dot(alpha, x, y) };
+    }
+    let _ = arm;
+    scalar::axpy_dot(alpha, x, y)
+}
+
+/// Separable Eq.-5 pair scan over packed per-pruned-index terms:
+/// `dl[i] = au + b[i] - wu2 * wp[i] * gp[i]` (all f64), returning the
+/// first index achieving the strict minimum below `best`, or `None`
+/// when nothing improves on `best`.  Both arms compute each `dl[i]`
+/// with the identical rounding sequence, so the selected pair is
+/// bit-identical across arms.
+pub fn pair_scan_arm(
+    arm: Arm,
+    au: f64,
+    wu2: f64,
+    b: &[f64],
+    wp: &[f64],
+    gp: &[f64],
+    best: f64,
+) -> Option<(f64, usize)> {
+    #[cfg(target_arch = "x86_64")]
+    if arm == Arm::Simd && simd_available() {
+        // SAFETY: AVX2 presence verified at runtime.
+        return unsafe { avx2::pair_scan(au, wu2, b, wp, gp, best) };
+    }
+    let _ = arm;
+    scalar::pair_scan(au, wu2, b, wp, gp, best)
+}
+
+/// Cache-blocked matrix multiply `A * B` with packed B panels.
+/// The scalar arm reproduces the historic ikj loop bit-for-bit (same
+/// per-element accumulation order over k, same skip of zero A
+/// entries); the simd arm runs the inner microkernel with FMA.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_arm(active(), a, b)
+}
+
+/// k-panel height of the blocked matmul/packing loop.
+const MATMUL_KC: usize = 128;
+/// j-panel width of the blocked matmul/packing loop.
+const MATMUL_NC: usize = 512;
+
+pub fn matmul_arm(arm: Arm, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    let mut out = Matrix::zeros(n, m);
+    if n == 0 || k == 0 || m == 0 {
+        return out;
+    }
+    let use_simd = arm == Arm::Simd && simd_available();
+    let mut pack = vec![0.0f32; MATMUL_KC.min(k) * MATMUL_NC.min(m)];
+    let mut jc = 0;
+    while jc < m {
+        let jw = MATMUL_NC.min(m - jc);
+        let mut kc = 0;
+        while kc < k {
+            let kw = MATMUL_KC.min(k - kc);
+            // Pack the B panel [kc..kc+kw) x [jc..jc+jw) contiguously
+            // so the microkernel streams one cache-resident buffer.
+            for kk in 0..kw {
+                let src = (kc + kk) * m + jc;
+                pack[kk * jw..kk * jw + jw]
+                    .copy_from_slice(&b.data[src..src + jw]);
+            }
+            for i in 0..n {
+                let arow = &a.data[i * k + kc..i * k + kc + kw];
+                let crow = &mut out.data[i * m + jc..i * m + jc + jw];
+                for (kk, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &pack[kk * jw..kk * jw + jw];
+                    fma_axpy_inner(use_simd, av, brow, crow);
+                }
+            }
+            kc += kw;
+        }
+        jc += jw;
+    }
+    out
+}
+
+/// Inner microkernel of matmul/syrk: `y += a * x`, FMA on the simd arm.
+#[inline]
+fn fma_axpy_inner(use_simd: bool, alpha: f32, x: &[f32], y: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if use_simd {
+        // SAFETY: `use_simd` is only true after runtime detection.
+        unsafe { avx2::fma_axpy(alpha, x, y) };
+        return;
+    }
+    let _ = use_simd;
+    scalar::axpy(alpha, x, y);
+}
+
+/// Symmetric rank-k update `G += X^T X` for an activation block X
+/// ([t, d] row-major): computes only the upper triangle (halving the
+/// FLOPs) and mirrors it, parallelised over row panels on the in-repo
+/// thread pool.
+///
+/// Contract: `G` must be exactly symmetric on entry (zeros, or the
+/// result of previous `syrk` / `gram_accumulate` calls — those are
+/// exactly symmetric because f32 multiplication commutes).  The
+/// scalar arm is bit-identical to the historic dense accumulation for
+/// any thread count: each element's contributions are added in
+/// ascending-`t` order regardless of panel assignment.
+pub fn syrk_arm(arm: Arm, g: &mut Matrix, x: &Matrix, threads: usize) {
+    assert_eq!(g.rows, x.cols, "syrk shape mismatch");
+    assert_eq!(g.cols, x.cols, "syrk shape mismatch");
+    let d = x.cols;
+    if d == 0 {
+        return;
+    }
+    let use_simd = arm == Arm::Simd && simd_available();
+    let n_threads = threads.max(1).min(d);
+    if n_threads <= 1 {
+        syrk_panel(use_simd, &mut g.data, 0, d, d, x);
+    } else {
+        let chunk = d.div_ceil(n_threads);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(n_threads);
+        let mut rest = g.data.as_mut_slice();
+        let mut i0 = 0usize;
+        while i0 < d {
+            let rows_here = chunk.min(d - i0);
+            let (panel, tail) = rest.split_at_mut(rows_here * d);
+            rest = tail;
+            let lo = i0;
+            jobs.push(Box::new(move || {
+                syrk_panel(use_simd, panel, lo, lo + rows_here, d, x)
+            }));
+            i0 += rows_here;
+        }
+        crate::util::threadpool::global().run_scoped(jobs);
+    }
+    // Mirror the accumulated upper triangle into the lower one.
+    for i in 0..d {
+        for j in i + 1..d {
+            g.data[j * d + i] = g.data[i * d + j];
+        }
+    }
+}
+
+/// Accumulate rows [i0, i1) of the upper triangle into `panel` (the
+/// corresponding contiguous row slice of G).
+fn syrk_panel(
+    use_simd: bool,
+    panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    d: usize,
+    x: &Matrix,
+) {
+    for i in i0..i1 {
+        let grow = &mut panel[(i - i0) * d..(i - i0) * d + d];
+        for t in 0..x.rows {
+            let xr = x.row(t);
+            let xi = xr[i];
+            if xi == 0.0 {
+                continue;
+            }
+            fma_axpy_inner(use_simd, xi, &xr[i..], &mut grow[i..]);
+        }
+    }
+}
+
+// --- scalar arm -------------------------------------------------------------
+
+mod scalar {
+    /// 4-lane unrolled accumulation — the historic `util::tensor::dot`,
+    /// kept verbatim so the scalar arm stays bit-identical to the
+    /// pre-kernel-layer code.
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0.0f32; 4];
+        let chunks = a.len() / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            acc[0] += a[i] * b[i];
+            acc[1] += a[i + 1] * b[i + 1];
+            acc[2] += a[i + 2] * b[i + 2];
+            acc[3] += a[i + 3] * b[i + 3];
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for i in chunks * 4..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    pub fn axpy_dot(alpha: f32, x: &[f32], y: &mut [f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        let mut acc = [0.0f32; 4];
+        let chunks = x.len() / 4;
+        for c in 0..chunks {
+            let i = c * 4;
+            y[i] += alpha * x[i];
+            acc[0] += x[i] * y[i];
+            y[i + 1] += alpha * x[i + 1];
+            acc[1] += x[i + 1] * y[i + 1];
+            y[i + 2] += alpha * x[i + 2];
+            acc[2] += x[i + 2] * y[i + 2];
+            y[i + 3] += alpha * x[i + 3];
+            acc[3] += x[i + 3] * y[i + 3];
+        }
+        let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+        for i in chunks * 4..x.len() {
+            y[i] += alpha * x[i];
+            s += x[i] * y[i];
+        }
+        s
+    }
+
+    /// The historic inner pair loop, verbatim: strict `<` keeps the
+    /// first index achieving the minimum.
+    pub fn pair_scan(
+        au: f64,
+        wu2: f64,
+        b: &[f64],
+        wp: &[f64],
+        gp: &[f64],
+        best: f64,
+    ) -> Option<(f64, usize)> {
+        debug_assert_eq!(b.len(), wp.len());
+        debug_assert_eq!(b.len(), gp.len());
+        let mut cur: Option<(f64, usize)> = None;
+        let mut best_dl = best;
+        for i in 0..b.len() {
+            let dl = au + b[i] - wu2 * wp[i] * gp[i];
+            if dl < best_dl {
+                best_dl = dl;
+                cur = Some((dl, i));
+            }
+        }
+        cur
+    }
+}
+
+// --- AVX2/FMA arm -----------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Deterministic lane reduction: spill and sum in fixed order.
+    #[inline]
+    unsafe fn hsum_ps(v: __m256) -> f32 {
+        let mut lanes = [0.0f32; 8];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), v);
+        let mut s = 0.0f32;
+        for l in lanes {
+            s += l;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i)),
+                acc0,
+            );
+            i += 8;
+        }
+        let mut s = hsum_ps(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Elementwise mul+add — deliberately NOT fused, so every element
+    /// rounds exactly like the scalar arm and the Eq.-6 correlation
+    /// state stays bit-identical across arms.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let av = _mm256_set1_ps(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let prod = _mm256_mul_ps(av, _mm256_loadu_ps(px.add(i)));
+            let sum = _mm256_add_ps(_mm256_loadu_ps(py.add(i)), prod);
+            _mm256_storeu_ps(py.add(i), sum);
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// Fused microkernel for matmul/syrk accumulation (FMA allowed).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn fma_axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let av = _mm256_set1_ps(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let acc = _mm256_fmadd_ps(
+                av,
+                _mm256_loadu_ps(px.add(i)),
+                _mm256_loadu_ps(py.add(i)),
+            );
+            _mm256_storeu_ps(py.add(i), acc);
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy_dot(alpha: f32, x: &[f32], y: &mut [f32]) -> f32 {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let av = _mm256_set1_ps(alpha);
+        let mut acc = _mm256_setzero_ps();
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(px.add(i));
+            // Update half: mul+add, bit-identical to the scalar arm.
+            let yv = _mm256_add_ps(
+                _mm256_loadu_ps(py.add(i)),
+                _mm256_mul_ps(av, xv),
+            );
+            _mm256_storeu_ps(py.add(i), yv);
+            acc = _mm256_fmadd_ps(xv, yv, acc);
+            i += 8;
+        }
+        let mut s = hsum_ps(acc);
+        while i < n {
+            y[i] += alpha * x[i];
+            s += x[i] * y[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Vectorised Eq.-5 scan: 4 f64 lanes, per-lane running best with
+    /// first-wins semantics, then a lexicographic (dl, index) lane
+    /// reduction.  Each `dl` is computed with the exact scalar rounding
+    /// sequence (no FMA), so the result is bit-identical to
+    /// `scalar::pair_scan`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pair_scan(
+        au: f64,
+        wu2: f64,
+        b: &[f64],
+        wp: &[f64],
+        gp: &[f64],
+        best: f64,
+    ) -> Option<(f64, usize)> {
+        debug_assert_eq!(b.len(), wp.len());
+        debug_assert_eq!(b.len(), gp.len());
+        let n = b.len();
+        let mut i = 0usize;
+        let mut cur: Option<(f64, usize)> = None;
+        if n >= 8 {
+            let au_v = _mm256_set1_pd(au);
+            let wu2_v = _mm256_set1_pd(wu2);
+            let mut best_v = _mm256_set1_pd(best);
+            let mut idx_v = _mm256_set1_pd(-1.0);
+            let mut lane = _mm256_setr_pd(0.0, 1.0, 2.0, 3.0);
+            let four = _mm256_set1_pd(4.0);
+            while i + 4 <= n {
+                let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+                let wv = _mm256_loadu_pd(wp.as_ptr().add(i));
+                let gv = _mm256_loadu_pd(gp.as_ptr().add(i));
+                // (au + b) - ((wu2 * wp) * gp): scalar rounding order.
+                let dl = _mm256_sub_pd(
+                    _mm256_add_pd(au_v, bv),
+                    _mm256_mul_pd(_mm256_mul_pd(wu2_v, wv), gv),
+                );
+                let lt = _mm256_cmp_pd::<_CMP_LT_OQ>(dl, best_v);
+                best_v = _mm256_blendv_pd(best_v, dl, lt);
+                idx_v = _mm256_blendv_pd(idx_v, lane, lt);
+                lane = _mm256_add_pd(lane, four);
+                i += 4;
+            }
+            let mut bests = [0.0f64; 4];
+            let mut idxs = [0.0f64; 4];
+            _mm256_storeu_pd(bests.as_mut_ptr(), best_v);
+            _mm256_storeu_pd(idxs.as_mut_ptr(), idx_v);
+            // Lane l's best index is the first in that lane's
+            // subsequence; the lexicographic (dl, idx) reduction then
+            // recovers the global first-wins winner.
+            for l in 0..4 {
+                if idxs[l] < 0.0 {
+                    continue;
+                }
+                let (dl, kp) = (bests[l], idxs[l] as usize);
+                cur = match cur {
+                    Some((cd, ck))
+                        if !(dl < cd || (dl == cd && kp < ck)) =>
+                    {
+                        Some((cd, ck))
+                    }
+                    _ => Some((dl, kp)),
+                };
+            }
+        }
+        let mut best_dl = match cur {
+            Some((cd, _)) => cd,
+            None => best,
+        };
+        while i < n {
+            let dl = au + b[i] - wu2 * wp[i] * gp[i];
+            if dl < best_dl {
+                best_dl = dl;
+                cur = Some((dl, i));
+            }
+            i += 1;
+        }
+        cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn vecs(seed: u64, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a = (0..n).map(|_| rng.gaussian_f32()).collect();
+        let b = (0..n).map(|_| rng.gaussian_f32()).collect();
+        (a, b)
+    }
+
+    fn naive_matmul(a: &Matrix, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0f64;
+                for k in 0..a.cols {
+                    s += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                out.set(i, j, s as f32);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn active_arm_is_usable() {
+        let arm = active();
+        assert!(arms().contains(&arm));
+    }
+
+    #[test]
+    fn select_rejects_unknown() {
+        assert!(select("fancy").is_err());
+    }
+
+    #[test]
+    fn dot_scalar_matches_reference() {
+        for n in [0usize, 1, 3, 7, 8, 33, 257] {
+            let (a, b) = vecs(n as u64, n);
+            let want: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            let got = dot_arm(Arm::Scalar, &a, &b) as f64;
+            assert!(
+                (got - want).abs() <= 1e-4 * want.abs().max(1.0),
+                "n={n}: {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dot_arms_agree() {
+        if !simd_available() {
+            return;
+        }
+        for n in [1usize, 5, 8, 15, 16, 17, 100, 1023] {
+            let (a, b) = vecs(100 + n as u64, n);
+            let s = dot_arm(Arm::Scalar, &a, &b);
+            let v = dot_arm(Arm::Simd, &a, &b);
+            assert!(
+                (s - v).abs() <= 1e-4 * s.abs().max(1.0),
+                "n={n}: scalar {s} vs simd {v}"
+            );
+        }
+    }
+
+    #[test]
+    fn axpy_arms_bit_identical() {
+        for n in [1usize, 7, 8, 9, 64, 101] {
+            let (x, y0) = vecs(200 + n as u64, n);
+            let mut ys = y0.clone();
+            axpy_arm(Arm::Scalar, -1.75, &x, &mut ys);
+            for arm in arms() {
+                let mut ya = y0.clone();
+                axpy_arm(arm, -1.75, &x, &mut ya);
+                for i in 0..n {
+                    assert_eq!(
+                        ys[i].to_bits(),
+                        ya[i].to_bits(),
+                        "n={n} i={i} arm={arm:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_dot_updates_and_returns_dot() {
+        for arm in arms() {
+            for n in [1usize, 4, 11, 64, 130] {
+                let (x, y0) = vecs(300 + n as u64, n);
+                let mut y = y0.clone();
+                let got = axpy_dot_arm(arm, 0.5, &x, &mut y);
+                // Update half must equal a plain axpy bit-for-bit.
+                let mut want_y = y0.clone();
+                axpy_arm(Arm::Scalar, 0.5, &x, &mut want_y);
+                for i in 0..n {
+                    assert_eq!(y[i].to_bits(), want_y[i].to_bits());
+                }
+                let want: f64 = x
+                    .iter()
+                    .zip(&y)
+                    .map(|(&a, &b)| a as f64 * b as f64)
+                    .sum();
+                assert!(
+                    (got as f64 - want).abs()
+                        <= 1e-4 * want.abs().max(1.0),
+                    "arm={arm:?} n={n}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_blocked_matches_naive_ragged() {
+        let mut rng = Rng::new(5);
+        for (n, k, m) in [(1, 1, 1), (2, 3, 4), (7, 13, 5), (20, 33, 17)] {
+            let a = Matrix::from_fn(n, k, |_, _| rng.gaussian_f32());
+            let b = Matrix::from_fn(k, m, |_, _| rng.gaussian_f32());
+            let want = naive_matmul(&a, &b);
+            for arm in arms() {
+                let got = matmul_arm(arm, &a, &b);
+                assert!(
+                    got.max_abs_diff(&want) < 1e-3,
+                    "({n},{k},{m}) arm={arm:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_scalar_matches_legacy_ikj_bitwise() {
+        // The legacy loop, inlined here as the bit-exactness oracle.
+        let legacy = |a: &Matrix, b: &Matrix| -> Matrix {
+            let (n, k, m) = (a.rows, a.cols, b.cols);
+            let mut out = Matrix::zeros(n, m);
+            for i in 0..n {
+                let arow = a.row(i);
+                let orow = &mut out.data[i * m..(i + 1) * m];
+                for (kk, &av) in arow.iter().enumerate().take(k) {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * m..(kk + 1) * m];
+                    for j in 0..m {
+                        orow[j] += av * brow[j];
+                    }
+                }
+            }
+            out
+        };
+        let mut rng = Rng::new(6);
+        for (n, k, m) in [(3, 200, 5), (9, 150, 700), (4, 129, 513)] {
+            let a = Matrix::from_fn(n, k, |_, _| rng.gaussian_f32());
+            let b = Matrix::from_fn(k, m, |_, _| rng.gaussian_f32());
+            let want = legacy(&a, &b);
+            let got = matmul_arm(Arm::Scalar, &a, &b);
+            for (x, y) in got.data.iter().zip(&want.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_matches_transpose_matmul() {
+        let mut rng = Rng::new(7);
+        for (t, d) in [(5, 3), (20, 13), (64, 33)] {
+            let x = Matrix::from_fn(t, d, |_, _| rng.gaussian_f32());
+            let want = x.transpose().matmul(&x);
+            for arm in arms() {
+                for threads in [1usize, 3] {
+                    let mut g = Matrix::zeros(d, d);
+                    syrk_arm(arm, &mut g, &x, threads);
+                    assert!(
+                        g.max_abs_diff(&want) < 1e-3,
+                        "t={t} d={d} arm={arm:?} threads={threads}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_is_exactly_symmetric_and_thread_invariant() {
+        let mut rng = Rng::new(8);
+        let (t, d) = (40, 29);
+        let x = Matrix::from_fn(t, d, |_, _| rng.gaussian_f32());
+        for arm in arms() {
+            let mut g1 = Matrix::zeros(d, d);
+            syrk_arm(arm, &mut g1, &x, 1);
+            for i in 0..d {
+                for j in 0..d {
+                    assert_eq!(
+                        g1.at(i, j).to_bits(),
+                        g1.at(j, i).to_bits()
+                    );
+                }
+            }
+            let mut g4 = Matrix::zeros(d, d);
+            syrk_arm(arm, &mut g4, &x, 4);
+            for (a, b) in g1.data.iter().zip(&g4.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pair_scan_matches_bruteforce_first_wins() {
+        let mut rng = Rng::new(9);
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 31, 100] {
+            let b: Vec<f64> =
+                (0..n).map(|_| rng.gaussian_f32() as f64).collect();
+            let wp: Vec<f64> =
+                (0..n).map(|_| rng.gaussian_f32() as f64).collect();
+            let gp: Vec<f64> =
+                (0..n).map(|_| rng.gaussian_f32() as f64).collect();
+            let (au, wu2) = (0.3f64, -1.1f64);
+            for best in [f64::INFINITY, 0.0] {
+                let mut want: Option<(f64, usize)> = None;
+                let mut cur = best;
+                for i in 0..n {
+                    let dl = au + b[i] - wu2 * wp[i] * gp[i];
+                    if dl < cur {
+                        cur = dl;
+                        want = Some((dl, i));
+                    }
+                }
+                for arm in arms() {
+                    let got =
+                        pair_scan_arm(arm, au, wu2, &b, &wp, &gp, best);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some((gd, gi)), Some((wd, wi))) => {
+                            assert_eq!(gd.to_bits(), wd.to_bits());
+                            assert_eq!(gi, wi, "n={n} arm={arm:?}");
+                        }
+                        other => panic!("n={n} arm={arm:?}: {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_scan_breaks_ties_by_first_index() {
+        // All entries produce the identical dl; the first index wins.
+        let n = 13;
+        let b = vec![1.0f64; n];
+        let wp = vec![0.0f64; n];
+        let gp = vec![0.0f64; n];
+        for arm in arms() {
+            let got =
+                pair_scan_arm(arm, -2.0, 1.0, &b, &wp, &gp, f64::INFINITY);
+            assert_eq!(got, Some((-1.0, 0)), "arm={arm:?}");
+        }
+    }
+}

@@ -6,6 +6,7 @@
 pub mod benchlib;
 pub mod cli;
 pub mod jsonlite;
+pub mod kernels;
 pub mod logging;
 pub mod prng;
 pub mod proptest;

@@ -1,8 +1,14 @@
 //! Dense f32 matrix type used by the native pruning engine and the
-//! parameter store.  Deliberately small: row-major storage, the handful
-//! of BLAS-1/2/3 operations the algorithms need, no broadcasting.
+//! parameter store, plus [`GramView`], the zero-copy view of a square
+//! Gram matrix.  Deliberately small: row-major storage, the handful of
+//! BLAS-1/2/3 operations the algorithms need, no broadcasting.  All
+//! compute routes through the runtime-dispatched kernel layer
+//! (`util::kernels`); the scalar arm reproduces the historic loops
+//! bit-for-bit.
 
 use std::fmt;
+
+use crate::util::kernels;
 
 #[derive(Clone, PartialEq)]
 pub struct Matrix {
@@ -64,6 +70,12 @@ impl Matrix {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Zero-copy [`GramView`] of this (square) matrix.
+    pub fn as_gram(&self) -> GramView<'_> {
+        assert_eq!(self.rows, self.cols, "gram view requires square");
+        GramView::new(&self.data, self.rows)
+    }
+
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -74,25 +86,10 @@ impl Matrix {
         out
     }
 
-    /// C = A * B  (ikj loop order for cache-friendly access).
+    /// C = A * B through the kernel layer's cache-blocked, packed-panel
+    /// multiply (scalar arm bit-identical to the historic ikj loop).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (n, k, m) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(n, m);
-        for i in 0..n {
-            let arow = self.row(i);
-            let orow = &mut out.data[i * m..(i + 1) * m];
-            for (kk, &a) in arow.iter().enumerate().take(k) {
-                if a == 0.0 {
-                    continue;
-                }
-                let brow = &other.data[kk * m..(kk + 1) * m];
-                for j in 0..m {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
-        out
+        kernels::matmul(self, other)
     }
 
     /// y = A x.
@@ -101,24 +98,18 @@ impl Matrix {
         (0..self.rows).map(|i| dot(self.row(i), x)).collect()
     }
 
-    /// G += X^T X for an activation block X ([t, d] row-major).
+    /// G += X^T X for an activation block X ([t, d] row-major), via the
+    /// kernel layer's symmetric rank-k update (upper triangle +
+    /// mirror).  `self` must be exactly symmetric on entry — zeros or
+    /// a previous Gram accumulation.
     pub fn gram_accumulate(&mut self, x: &Matrix) {
-        assert_eq!(self.rows, x.cols);
-        assert_eq!(self.cols, x.cols);
-        let d = x.cols;
-        for t in 0..x.rows {
-            let xr = x.row(t);
-            for i in 0..d {
-                let xi = xr[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let grow = &mut self.data[i * d..(i + 1) * d];
-                for j in 0..d {
-                    grow[j] += xi * xr[j];
-                }
-            }
-        }
+        kernels::syrk_arm(kernels::active(), self, x, 1);
+    }
+
+    /// [`Self::gram_accumulate`] parallelised over row panels.  Results
+    /// are bit-identical for every thread count.
+    pub fn gram_accumulate_par(&mut self, x: &Matrix, threads: usize) {
+        kernels::syrk_arm(kernels::active(), self, x, threads);
     }
 
     pub fn diag(&self) -> Vec<f32> {
@@ -146,37 +137,81 @@ impl Matrix {
     }
 }
 
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-lane unrolled accumulation: measurably faster than a naive fold
-    // and deterministic across runs.
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for c in 0..chunks {
-        let i = c * 4;
-        acc[0] += a[i] * b[i];
-        acc[1] += a[i + 1] * b[i + 1];
-        acc[2] += a[i + 2] * b[i + 2];
-        acc[3] += a[i + 3] * b[i + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+/// Borrowed, zero-copy view of a square Gram matrix: a `d * d` window
+/// into a backing buffer (one layer's slice of a `[n_blocks, d, d]`
+/// calibration stream stack, or a whole square [`Matrix`]) plus the
+/// dimension.  `Copy`, so engines pass it by value; rows borrow from
+/// the backing store and are never cloned.
+#[derive(Clone, Copy, Debug)]
+pub struct GramView<'a> {
+    data: &'a [f32],
+    /// Dimension (the view is d x d).
+    pub d: usize,
 }
 
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
+impl<'a> GramView<'a> {
+    pub fn new(data: &'a [f32], d: usize) -> GramView<'a> {
+        assert_eq!(data.len(), d * d, "gram view must be d*d");
+        GramView { data, d }
     }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.d && j < self.d);
+        self.data[i * self.d + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.d..(i + 1) * self.d]
+    }
+
+    /// The full contiguous d*d backing slice (row-major).
+    pub fn as_slice(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Diagonal, gathered into an owned vector (O(d), not O(d^2)).
+    pub fn diag(&self) -> Vec<f32> {
+        (0..self.d).map(|i| self.at(i, i)).collect()
+    }
+
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(self.d, x.len());
+        (0..self.d).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// Owned copy — only for callers that must outlive the backing
+    /// store (snapshots, tests); the refinement path never needs it.
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.d, self.d, self.data.to_vec())
+    }
+}
+
+impl<'a> From<&'a Matrix> for GramView<'a> {
+    fn from(m: &'a Matrix) -> GramView<'a> {
+        m.as_gram()
+    }
+}
+
+/// Dot product (kernel-dispatched; scalar arm keeps the historic
+/// 4-lane unrolled reduction, deterministic per arm).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    kernels::dot(a, b)
+}
+
+/// y += alpha * x (kernel-dispatched; elementwise mul+add in both
+/// arms, so results are bit-identical across arms).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    kernels::axpy(alpha, x, y)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::kernels::Arm;
 
     #[test]
     fn matmul_small() {
@@ -223,6 +258,19 @@ mod tests {
     }
 
     #[test]
+    fn gram_par_is_bit_identical() {
+        let mut rng = crate::util::prng::Rng::new(3);
+        let x = Matrix::from_fn(30, 17, |_, _| rng.gaussian_f32());
+        let mut g1 = Matrix::zeros(17, 17);
+        g1.gram_accumulate(&x);
+        let mut g4 = Matrix::zeros(17, 17);
+        g4.gram_accumulate_par(&x, 4);
+        for (a, b) in g1.data.iter().zip(&g4.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
     fn matvec_matches_matmul() {
         let a = Matrix::from_fn(4, 3, |i, j| (i * 3 + j) as f32 * 0.5);
         let x = vec![1.0, -2.0, 0.5];
@@ -235,11 +283,32 @@ mod tests {
     }
 
     #[test]
-    fn dot_unrolled_matches_naive() {
-        let a: Vec<f32> = (0..103).map(|i| (i as f32) * 0.3 - 7.0).collect();
-        let b: Vec<f32> = (0..103).map(|i| (i as f32) * -0.1 + 2.0).collect();
-        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        assert!((dot(&a, &b) - naive).abs() < 1e-2);
+    fn dot_matches_naive_relative() {
+        // Relative tolerance: the old absolute 1e-2 bound broke for
+        // large-magnitude inputs.  Cover small, ragged and
+        // large-magnitude vectors on every available arm.
+        for (n, scale) in [(7usize, 1.0f32), (103, 1.0), (103, 1e6),
+                           (1025, 3e4)] {
+            let a: Vec<f32> = (0..n)
+                .map(|i| ((i as f32) * 0.3 - 7.0) * scale)
+                .collect();
+            let b: Vec<f32> = (0..n)
+                .map(|i| ((i as f32) * -0.1 + 2.0) * scale)
+                .collect();
+            let naive: f64 = a
+                .iter()
+                .zip(&b)
+                .map(|(&x, &y)| x as f64 * y as f64)
+                .sum();
+            for arm in crate::util::kernels::arms() {
+                let got = crate::util::kernels::dot_arm(arm, &a, &b);
+                let rel = (got as f64 - naive).abs()
+                    / naive.abs().max(1e-12);
+                assert!(rel < 1e-4,
+                        "n={n} scale={scale} arm={arm:?}: {got} vs \
+                         {naive} (rel {rel})");
+            }
+        }
     }
 
     #[test]
@@ -248,5 +317,49 @@ mod tests {
         let mut y = vec![10.0, 20.0, 30.0];
         axpy(2.0, &x, &mut y);
         assert_eq!(y, vec![12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn gram_view_addresses_square() {
+        let m = Matrix::from_fn(3, 3, |i, j| (i * 3 + j) as f32);
+        let v = m.as_gram();
+        assert_eq!(v.d, 3);
+        assert_eq!(v.at(1, 2), 5.0);
+        assert_eq!(v.row(2), &[6.0, 7.0, 8.0]);
+        assert_eq!(v.diag(), vec![0.0, 4.0, 8.0]);
+        assert_eq!(v.to_matrix(), m);
+        assert_eq!(v.as_slice(), &m.data[..]);
+    }
+
+    #[test]
+    fn gram_view_slices_a_stack() {
+        // Two stacked 2x2 grams in one buffer; the view addresses the
+        // second without copying.
+        let stack = vec![0.0f32, 0.0, 0.0, 0.0, 1.0, 2.0, 3.0, 4.0];
+        let v = GramView::new(&stack[4..8], 2);
+        assert_eq!(v.at(0, 0), 1.0);
+        assert_eq!(v.at(1, 1), 4.0);
+        assert_eq!(v.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_scalar_arm_exact_shapes() {
+        // Blocked path crosses the KC/NC boundaries; values must still
+        // match a naive product.
+        let mut rng = crate::util::prng::Rng::new(4);
+        let a = Matrix::from_fn(3, 130, |_, _| rng.gaussian_f32());
+        let b = Matrix::from_fn(130, 10, |_, _| rng.gaussian_f32());
+        let got = crate::util::kernels::matmul_arm(Arm::Scalar, &a, &b);
+        let mut want = Matrix::zeros(3, 10);
+        for i in 0..3 {
+            for j in 0..10 {
+                let mut s = 0.0f64;
+                for k in 0..130 {
+                    s += a.at(i, k) as f64 * b.at(k, j) as f64;
+                }
+                want.set(i, j, s as f32);
+            }
+        }
+        assert!(got.max_abs_diff(&want) < 1e-3);
     }
 }

@@ -8,7 +8,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -85,6 +85,38 @@ impl ThreadPool {
             cnt = cv.wait(cnt).unwrap();
         }
     }
+
+    /// Run a batch of *borrowing* jobs to completion on the pool
+    /// (scoped fork/join): submits every job, then blocks until all of
+    /// them (and any other pending work) have finished, so the jobs
+    /// may capture non-`'static` references — e.g. zero-copy
+    /// [`crate::util::tensor::GramView`]s into calibration state.
+    pub fn run_scoped<'env>(&self,
+                            jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        for job in jobs {
+            // SAFETY: `wait()` below blocks until every job submitted
+            // here has completed (worker panics are contained and
+            // still decrement the pending counter), so no job —
+            // and therefore no borrow it captures — outlives 'env.
+            let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>,
+                                      Box<dyn FnOnce() + Send + 'static>>(
+                    job)
+            };
+            self.submit(job);
+        }
+        self.wait();
+    }
+}
+
+/// Process-wide shared pool for kernel-level data parallelism (the
+/// syrk row panels).  Lazily sized to the host's parallelism.  Do not
+/// call blocking scoped work on it from *inside* one of its own
+/// workers (possible starvation); the crate only uses it from
+/// top-level compute calls.
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
 }
 
 impl Drop for ThreadPool {
@@ -231,6 +263,47 @@ mod tests {
         // wait() must not hang, and the workers must keep serving.
         pool.wait();
         assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn run_scoped_allows_borrowed_jobs() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..100).collect();
+        let total = AtomicU64::new(0);
+        {
+            let data = &data;
+            let total = &total;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..4)
+                .map(|t| {
+                    Box::new(move || {
+                        let s: u64 = data.iter()
+                            .skip(t)
+                            .step_by(4)
+                            .sum();
+                        total.fetch_add(s, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_reusable() {
+        for _ in 0..2 {
+            let counter = AtomicU64::new(0);
+            let c = &counter;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+                .map(|_| {
+                    Box::new(move || {
+                        c.fetch_add(1, Ordering::Relaxed);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            global().run_scoped(jobs);
+            assert_eq!(counter.load(Ordering::Relaxed), 8);
+        }
     }
 
     #[test]

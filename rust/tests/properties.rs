@@ -14,6 +14,7 @@ use sparseswaps::pruning::sparseswaps::{
     best_swap, refine_layer, refine_layer_rescan, refine_row,
     NativeEngine, SwapConfig,
 };
+use sparseswaps::util::kernels::{self, Arm};
 use sparseswaps::util::proptest::{check, ensure, Gen};
 use sparseswaps::util::tensor::Matrix;
 
@@ -247,8 +248,8 @@ fn prop_checkpoint_segmentation_is_exact() {
         let cps = vec![gen.usize_in(1, t_max), gen.usize_in(1, t_max),
                        t_max + gen.usize_in(1, 10)];
         let ctx = LayerContext {
-            w: &inst.w, g: &inst.g, stats: None, pattern: inst.pattern,
-            t_max, threads: 1,
+            w: &inst.w, g: inst.g.as_gram(), stats: None,
+            pattern: inst.pattern, t_max, threads: 1,
         };
         let mut plain = warm.clone();
         NativeEngine::default().refine(&ctx, &mut plain, &[])
@@ -270,6 +271,192 @@ fn prop_checkpoint_segmentation_is_exact() {
                        || format!("out-of-range checkpoint {cp} \
                                    captured"))?;
             }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_syrk_exactly_symmetric() {
+    // (x) the kernel-layer rank-k update computes the upper triangle
+    // and mirrors it: results are bit-exactly symmetric on every arm,
+    // thread count, and ragged (non-lane-multiple) dimension, and
+    // match the explicit X^T X product.
+    check("syrk symmetry", 40, |gen| {
+        let d = gen.usize_in(1, 41);
+        let t = gen.usize_in(1, 3 * d);
+        let x = Matrix::from_fn(t, d, |_, _| gen.rng.gaussian_f32());
+        let want = x.transpose().matmul(&x);
+        for arm in kernels::arms() {
+            for threads in [1usize, 3] {
+                let mut g = Matrix::zeros(d, d);
+                kernels::syrk_arm(arm, &mut g, &x, threads);
+                for i in 0..d {
+                    for j in 0..i {
+                        if g.at(i, j).to_bits() != g.at(j, i).to_bits() {
+                            return Err(format!(
+                                "asymmetric at ({i},{j}), arm {arm:?}, \
+                                 {threads} threads"));
+                        }
+                    }
+                }
+                let scale = want.data.iter()
+                    .map(|v| v.abs())
+                    .fold(1.0f32, f32::max);
+                ensure(g.max_abs_diff(&want) <= 1e-3 * scale,
+                       || format!("syrk diverged from X^T X (d={d}, \
+                                   t={t}, arm {arm:?})"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kernels_scalar_simd_parity() {
+    // (xi) scalar-vs-SIMD parity for dot/axpy/axpy_dot/matmul/gram on
+    // ragged sizes: axpy (and axpy_dot's update half) bit-identical,
+    // reductions within relative 1e-4.
+    if !kernels::simd_available() {
+        return;
+    }
+    check("kernel arm parity", 60, |gen| {
+        let n = gen.usize_in(1, 300);
+        let a = gen.vec_gaussian(n, 1.0);
+        let b = gen.vec_gaussian(n, 1.0);
+        let ds = kernels::dot_arm(Arm::Scalar, &a, &b) as f64;
+        let dv = kernels::dot_arm(Arm::Simd, &a, &b) as f64;
+        ensure((ds - dv).abs() <= 1e-4 * ds.abs().max(1.0),
+               || format!("dot parity n={n}: {ds} vs {dv}"))?;
+
+        let alpha = gen.f32_in(-2.0, 2.0);
+        let mut ys = b.clone();
+        let mut yv = b.clone();
+        kernels::axpy_arm(Arm::Scalar, alpha, &a, &mut ys);
+        kernels::axpy_arm(Arm::Simd, alpha, &a, &mut yv);
+        for i in 0..n {
+            if ys[i].to_bits() != yv[i].to_bits() {
+                return Err(format!("axpy not bit-identical at {i}"));
+            }
+        }
+
+        let mut zs = b.clone();
+        let mut zv = b.clone();
+        let rs = kernels::axpy_dot_arm(Arm::Scalar, alpha, &a, &mut zs)
+            as f64;
+        let rv = kernels::axpy_dot_arm(Arm::Simd, alpha, &a, &mut zv)
+            as f64;
+        for i in 0..n {
+            if zs[i].to_bits() != zv[i].to_bits() {
+                return Err(format!("axpy_dot update not bit-identical \
+                                    at {i}"));
+            }
+        }
+        ensure((rs - rv).abs() <= 1e-4 * rs.abs().max(1.0),
+               || format!("axpy_dot readback parity: {rs} vs {rv}"))?;
+
+        let (rows, inner, cols) =
+            (gen.usize_in(1, 12), gen.usize_in(1, 40), gen.usize_in(1, 12));
+        let am = Matrix::from_fn(rows, inner, |_, _| gen.rng.gaussian_f32());
+        let bm = Matrix::from_fn(inner, cols, |_, _| gen.rng.gaussian_f32());
+        let ms = kernels::matmul_arm(Arm::Scalar, &am, &bm);
+        let mv = kernels::matmul_arm(Arm::Simd, &am, &bm);
+        let scale = ms.data.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        ensure(ms.max_abs_diff(&mv) <= 1e-4 * scale.max(1.0),
+               || format!("matmul parity ({rows}x{inner}x{cols})"))?;
+
+        let d = gen.usize_in(1, 30);
+        let t = gen.usize_in(1, 2 * d);
+        let x = Matrix::from_fn(t, d, |_, _| gen.rng.gaussian_f32());
+        let mut gs = Matrix::zeros(d, d);
+        kernels::syrk_arm(Arm::Scalar, &mut gs, &x, 1);
+        let mut gv = Matrix::zeros(d, d);
+        kernels::syrk_arm(Arm::Simd, &mut gv, &x, 1);
+        let gscale = gs.data.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        ensure(gs.max_abs_diff(&gv) <= 1e-4 * gscale.max(1.0),
+               || format!("gram parity (t={t}, d={d})"))
+    });
+}
+
+#[test]
+fn prop_engine_masks_identical_across_arms() {
+    // (xii) the property-test oracle of the kernel layer: refining the
+    // same instance on the scalar and SIMD arms produces *identical*
+    // masks and swap counts (the Eq.-6 state is elementwise, the pair
+    // scan evaluates identical f64 values), and losses agree within
+    // relative 1e-4.
+    if !kernels::simd_available() {
+        return;
+    }
+    check("engine arm parity", 40, |gen| {
+        let inst = random_instance(gen, true);
+        let warm = warmstart(gen, &inst);
+        let t_max = gen.usize_in(1, 30);
+        let mut results: Vec<(Vec<f32>, usize, f64)> = Vec::new();
+        for arm in [Arm::Scalar, Arm::Simd] {
+            let engine = NativeEngine { eps: 0.0, arm: Some(arm) };
+            let ctx = LayerContext {
+                w: &inst.w, g: inst.g.as_gram(), stats: None,
+                pattern: inst.pattern, t_max, threads: 1,
+            };
+            let mut mask = warm.clone();
+            let out = engine.refine(&ctx, &mut mask, &[])
+                .map_err(|e| e.to_string())?;
+            results.push((mask.data, out.layer.total_swaps(),
+                          out.layer.total_after()));
+        }
+        ensure(results[0].0 == results[1].0,
+               || format!("masks diverged across arms (t_max {t_max}, \
+                           pattern {:?})", inst.pattern))?;
+        ensure(results[0].1 == results[1].1,
+               || format!("swap counts diverged: {} vs {}",
+                          results[0].1, results[1].1))?;
+        let (l0, l1) = (results[0].2, results[1].2);
+        ensure((l0 - l1).abs() <= 1e-4 * l0.abs().max(1.0),
+               || format!("losses diverged: {l0} vs {l1}"))
+    });
+}
+
+#[test]
+fn prop_block_skip_bound_never_skips_argmin() {
+    // (xiii) the per-block active-set skip bound is conservative: on
+    // N:M patterns (where it newly applies) the incremental engine
+    // still lands on the rescan loop's exact masks and swap counts —
+    // i.e. no true argmin pair was ever skipped.
+    check("per-block skip bound", 60, |gen| {
+        let m = *gen.choose(&[4usize, 8]);
+        let blocks = gen.usize_in(2, 6);
+        let d = m * blocks;
+        let keep_n = gen.usize_in(1, m - 1);
+        let pattern = Pattern::Nm { n: keep_n, m };
+        let t = gen.usize_in(d, 2 * d);
+        let x = Matrix::from_fn(t, d, |_, _| gen.rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let rows = gen.usize_in(1, 4);
+        let w = Matrix::from_fn(rows, d, |_, _| gen.rng.gaussian_f32());
+        let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+        let cfg = SwapConfig { t_max: gen.usize_in(1, 30), eps: 0.0 };
+        let mut m_ref = warm.clone();
+        let out_ref = refine_layer_rescan(&w, &mut m_ref, &g, pattern,
+                                          &cfg, 1);
+        for arm in kernels::arms() {
+            let engine = NativeEngine { eps: 0.0, arm: Some(arm) };
+            let ctx = LayerContext {
+                w: &w, g: g.as_gram(), stats: None, pattern,
+                t_max: cfg.t_max, threads: 1,
+            };
+            let mut mask = warm.clone();
+            let out = engine.refine(&ctx, &mut mask, &[])
+                .map_err(|e| e.to_string())?;
+            ensure(mask.data == m_ref.data,
+                   || format!("N:M mask diverged from rescan \
+                               ({keep_n}:{m}, d={d}, arm {arm:?})"))?;
+            ensure(out.layer.total_swaps() == out_ref.total_swaps(),
+                   || format!("swap count {} vs rescan {}",
+                              out.layer.total_swaps(),
+                              out_ref.total_swaps()))?;
         }
         Ok(())
     });
