@@ -13,7 +13,7 @@ use sparseswaps::coordinator::{
 use sparseswaps::data::{Dataset, Split};
 use sparseswaps::eval::{perplexity, zeroshot};
 use sparseswaps::model::ParamStore;
-use sparseswaps::runtime::Runtime;
+use sparseswaps::runtime::{RuntimeOptions, RuntimePool};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     sparseswaps::util::logging::init_from_env();
@@ -23,7 +23,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .ok().and_then(|s| s.parse().ok())
         .unwrap_or(if config == "tiny" { 80 } else { 300 });
 
-    let rt = Runtime::start("artifacts")?;
+    // SPARSESWAPS_DEVICES>1 fans offload refinement out across pool
+    // workers (masks are bit-identical to the serial schedule).
+    let devices = std::env::var("SPARSESWAPS_DEVICES")
+        .ok().and_then(|s| s.parse().ok()).unwrap_or(1);
+    let rt = RuntimePool::start("artifacts", devices,
+                                RuntimeOptions::default())?;
     let meta = rt.manifest().config(&config)?.clone();
     println!("== end-to-end: {} (d_model={}, {} blocks, {} prunable \
               weights) ==",

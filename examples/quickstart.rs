@@ -7,6 +7,12 @@
 //! with Table-3 style iteration checkpoints.
 //!
 //!   cargo run --release --example quickstart
+//!
+//! For the offload path, `sparseswaps prune` takes `--devices N`
+//! (runtime-pool workers; layers of a block refine concurrently,
+//! masks bit-identical to `--devices 1`) and `--device-mem-budget`
+//! MiB (per-device resident buffer cache; see the README's "Runtime
+//! pool & device-buffer cache" section).
 
 use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::error::layer_loss;
@@ -33,7 +39,9 @@ fn main() {
             mixer.set(i, j, mixer.at(i, j) + 0.9 * mix.at(i, j));
         }
     }
-    let x = base.matmul(&mixer);
+    // Row-panel-parallel matmul (bit-identical to the single-thread
+    // path for any thread count).
+    let x = base.matmul_par(&mixer, 4);
 
     // The Gram matrix G = X^T X is all the algorithm ever needs
     // (paper Sec 2.1.2) — accumulate it streaming, O(d_in^2) memory.

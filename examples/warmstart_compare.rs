@@ -11,13 +11,14 @@ use sparseswaps::coordinator::{
 use sparseswaps::data::Dataset;
 use sparseswaps::model::ParamStore;
 use sparseswaps::pruning::Criterion;
-use sparseswaps::runtime::Runtime;
+use sparseswaps::runtime::{RuntimeOptions, RuntimePool};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     sparseswaps::util::logging::init_from_env();
     let config = std::env::var("SPARSESWAPS_E2E_CONFIG")
         .unwrap_or_else(|_| "tiny".into());
-    let rt = Runtime::start("artifacts")?;
+    let rt = RuntimePool::start("artifacts", 1,
+                                RuntimeOptions::default())?;
     let meta = rt.manifest().config(&config)?.clone();
     let ds = Dataset::build(&meta, 42);
     let mut store = ParamStore::init(&meta, meta.init_seed);

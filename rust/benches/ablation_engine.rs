@@ -9,19 +9,31 @@
 //! of `reports/bench_kernels.json` so the speedup trajectory
 //! (incremental-vs-rescan and SIMD-vs-scalar) is tracked per PR.
 //!
-//! Part 2 (needs artifacts): the fused-XLA and Pallas offload engines
+//! Part 2 (artifact-free, always runs): the runtime-pool sweep — the
+//! offload engine over the interp backend, fanning a block of layers
+//! across 1/2/4 device workers.  Gates on pooled masks being
+//! bit-identical to the serial schedule and reports rows/s, buffer-
+//! cache hit rate and steal counts to the "pool" section of
+//! `reports/bench_kernels.json`.
+//!
+//! Part 3 (needs artifacts): the fused-XLA and Pallas offload engines
 //! on their own artifact-width layer.
 mod common;
 
+use std::sync::Mutex;
 use std::time::Instant;
 
-use sparseswaps::coordinator::{refine_layer_offload, OffloadConfig};
+use sparseswaps::coordinator::{
+    refine_layer_offload, OffloadConfig, OffloadEngine,
+};
 use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
 use sparseswaps::pruning::saliency;
 use sparseswaps::pruning::sparseswaps::{
     refine_layer_rescan, LayerOutcome, NativeEngine, SwapConfig,
 };
+use sparseswaps::runtime::testutil::{interp_pool, swap_manifest};
+use sparseswaps::runtime::{Runtime, RuntimeOptions};
 use sparseswaps::util::benchlib::{merge_json_section, Table};
 use sparseswaps::util::jsonlite::Json;
 use sparseswaps::util::kernels;
@@ -190,8 +202,121 @@ fn native_section() {
               reports/bench_kernels.json");
 }
 
+/// Artifact-free runtime-pool sweep: the offload engine over the
+/// interp backend, one block of layers fanned across 1/2/4 device
+/// workers.  Exits non-zero if any pooled mask diverges from the
+/// serial schedule (the CI bench smoke job gates on this).
+fn pool_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let (d, chunk, rows, layers, t_max) =
+        if quick { (64usize, 32usize, 64usize, 4usize, 10usize) }
+        else { (256, 64, 192, 8, 25) };
+    let manifest = swap_manifest(d, chunk);
+    let pattern = Pattern::PerRow { keep: d * 2 / 5 };
+    let mut rng = Rng::new(11);
+    let work: Vec<(Matrix, Matrix, Matrix)> = (0..layers).map(|_| {
+        let x = Matrix::from_fn(2 * d, d, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate_par(&x, 4);
+        let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+        let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+        (w, g, warm)
+    }).collect();
+
+    let mut table = Table::new(
+        format!("Runtime pool — offload[interp] layer fan-out \
+                 ({layers} layers x {rows}x{d}, T_max={t_max})"),
+        &["devices", "seconds", "rows/s", "cache hit rate", "steals",
+          "speedup vs 1"]);
+    let mut sweeps: Vec<Json> = Vec::new();
+    let mut reference: Option<Vec<Matrix>> = None;
+    let mut serial_secs = f64::NAN;
+    for devices in [1usize, 2, 4] {
+        let pool = interp_pool(&manifest, devices,
+                               RuntimeOptions::default());
+        let slots: Vec<Mutex<Option<Matrix>>> =
+            (0..layers).map(|_| Mutex::new(None)).collect();
+        let t0 = Instant::now();
+        let jobs: Vec<Box<dyn FnOnce(&Runtime) + Send + '_>> = work
+            .iter()
+            .zip(&slots)
+            .map(|((w, g, warm), slot)| {
+                Box::new(move |rt: &Runtime| {
+                    let ctx = LayerContext {
+                        w, g: g.as_gram(), stats: None, pattern,
+                        t_max, threads: 1,
+                    };
+                    let mut mask = warm.clone();
+                    OffloadEngine::new(rt, "interp")
+                        .refine(&ctx, &mut mask, &[])
+                        .expect("interp offload refine");
+                    *slot.lock().unwrap() = Some(mask);
+                }) as Box<dyn FnOnce(&Runtime) + Send + '_>
+            })
+            .collect();
+        pool.run_scoped(jobs);
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let masks: Vec<Matrix> = slots.into_iter()
+            .map(|s| s.into_inner().unwrap().expect("job completed"))
+            .collect();
+        match &reference {
+            None => {
+                serial_secs = secs;
+                reference = Some(masks);
+            }
+            Some(want) => {
+                for (li, (a, b)) in want.iter().zip(&masks).enumerate() {
+                    if a.data != b.data {
+                        eprintln!("[ablation_engine] PARITY FAILURE: \
+                                   pool[{devices}] layer {li} mask \
+                                   diverged from the serial schedule");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
+        let stats = pool.stats_total();
+        let rows_per_s = (layers * rows) as f64 / secs;
+        let speedup = serial_secs / secs;
+        table.row(vec![
+            devices.to_string(),
+            format!("{secs:.3}"),
+            format!("{rows_per_s:.0}"),
+            format!("{:.0}%", 100.0 * stats.cache_hit_rate()),
+            pool.steals().to_string(),
+            format!("{speedup:.2}x"),
+        ]);
+        sweeps.push(Json::obj(vec![
+            ("devices", Json::num(devices as f64)),
+            ("seconds", Json::num(secs)),
+            ("rows_per_s", Json::num(rows_per_s)),
+            ("cache_hit_rate", Json::num(stats.cache_hit_rate())),
+            ("cache_evictions", Json::num(stats.cache_evictions as f64)),
+            ("steals", Json::num(pool.steals() as f64)),
+            ("speedup_vs_serial", Json::num(speedup)),
+        ]));
+    }
+    table.print();
+    let section = Json::obj(vec![
+        ("d", Json::num(d as f64)),
+        ("rows", Json::num(rows as f64)),
+        ("layers", Json::num(layers as f64)),
+        ("t_max", Json::num(t_max as f64)),
+        ("sweeps", Json::Arr(sweeps)),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "pool", section) {
+        eprintln!("[ablation_engine] FAILED writing bench_kernels: {e}");
+        std::process::exit(1);
+    }
+    println!("[ablation_engine] pool section written to \
+              reports/bench_kernels.json (serial parity OK)");
+}
+
 fn main() {
     native_section();
+    pool_section();
 
     // Offload engines (need AOT artifacts; their own layer at an
     // artifact width).

@@ -67,14 +67,16 @@ fn main() {
         table.print();
 
         let stats = ctx.rt.stats();
+        // Since the backend refactor, output download/decompose time
+        // is part of the backend's execute call, so it folds into
+        // "exec" (ServiceStats::unpack_nanos stays 0).
         let mut split = Table::new(
             "Microbench — runtime time split (cumulative)",
-            &["executions", "exec", "pack", "unpack", "compile"]);
+            &["executions", "exec (incl. unpack)", "pack", "compile"]);
         split.row(vec![
             stats.executions.to_string(),
             format!("{:.2}s", stats.exec_nanos as f64 / 1e9),
             format!("{:.2}s", stats.pack_nanos as f64 / 1e9),
-            format!("{:.2}s", stats.unpack_nanos as f64 / 1e9),
             format!("{:.2}s", stats.compile_nanos as f64 / 1e9),
         ]);
         split.print();

@@ -12,11 +12,14 @@
 //!
 //! Refinement is per-layer embarrassingly parallel (the paper's row
 //! decoupling extends across layers once the block's Gram statistics
-//! are fixed), so layers within a block are scheduled concurrently on
-//! the shared [`ThreadPool`] whenever the engine runs without the PJRT
-//! runtime, with the row-thread budget split across the concurrent
-//! jobs.  Per-row results are independent of scheduling, so masks are
-//! bit-identical to the serial schedule.
+//! are fixed), so layers within a block are scheduled concurrently:
+//! runtime-free engines on the shared [`ThreadPool`] (row-thread
+//! budget split across the concurrent jobs), and the offload engine
+//! across the workers of the [`RuntimePool`] when it has more than
+//! one device — each layer job runs against its worker's own service
+//! thread and device-buffer cache.  Per-row results are independent
+//! of scheduling, so masks are bit-identical to the serial schedule
+//! either way.
 //!
 //! One-shot mode instead calibrates once on the dense model and prunes
 //! every block from those statistics (Wanda-style; cheaper, slightly
@@ -39,6 +42,7 @@ use crate::pruning::mask::{mask_from_scores, validate, Pattern};
 use crate::pruning::saliency::{self, Criterion};
 use crate::pruning::sparseswaps::NativeEngine;
 use crate::runtime::manifest::PrunableLayer;
+use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeError};
 use crate::util::threadpool::{default_threads, ThreadPool};
 
@@ -105,8 +109,9 @@ pub struct PruneConfig {
     /// Mask snapshots at these cumulative iteration counts (Table 3).
     pub checkpoints: Vec<usize>,
     pub threads: usize,
-    /// Schedule independent layers of a block concurrently on the
-    /// thread pool (runtime-free engines only).  Masks are identical
+    /// Schedule independent layers of a block concurrently:
+    /// runtime-free engines on the thread pool, the offload engine
+    /// across the runtime pool's device workers.  Masks are identical
     /// either way; disable to get per-layer wall-clock timings.
     pub layer_parallel: bool,
 }
@@ -290,12 +295,21 @@ fn refine_block_parallel<'a>(pool: &ThreadPool, jobs: Vec<LayerJob<'a>>,
     }
     drop(tx);
     pool.run_scoped(scoped);
+    collect_block_results(rx, n_jobs)
+}
+
+/// Drain a block's fan-in channel: surface the first failed job,
+/// detect jobs lost to worker panics (a panicked job is contained by
+/// its pool but sends no result — better an error than a silently
+/// incomplete mask set), and restore submission order.
+fn collect_block_results(
+    rx: std::sync::mpsc::Receiver<Result<LayerResult, String>>,
+    n_jobs: usize,
+) -> Result<Vec<LayerResult>, RuntimeError> {
     let mut results = Vec::new();
     for res in rx {
         results.push(res.map_err(RuntimeError::Msg)?);
     }
-    // A panicked job is contained by the pool but sends no result;
-    // surface that instead of returning a silently incomplete mask set.
     if results.len() != n_jobs {
         return Err(RuntimeError::Msg(format!(
             "layer refinement lost {} of {} jobs (worker panic)",
@@ -305,11 +319,47 @@ fn refine_block_parallel<'a>(pool: &ThreadPool, jobs: Vec<LayerJob<'a>>,
     Ok(results)
 }
 
+/// Refine a block's layers concurrently across the runtime pool's
+/// workers (offload engine).  Each job builds an [`OffloadEngine`]
+/// bound to *its* worker's runtime, so artifact executions fan out
+/// over the devices while per-layer refinement — and therefore every
+/// mask — stays identical to the serial single-service schedule.
+fn refine_block_offload<'a>(pool: &RuntimePool, jobs: Vec<LayerJob<'a>>,
+                            impl_name: &str, t_max: usize,
+                            checkpoints: &[usize])
+    -> Result<Vec<LayerResult>, RuntimeError> {
+    let n_jobs = jobs.len();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut scoped: Vec<Box<dyn FnOnce(&Runtime) + Send + 'a>> =
+        Vec::with_capacity(n_jobs);
+    for job in jobs {
+        let tx = tx.clone();
+        let impl_name = impl_name.to_string();
+        let checkpoints = checkpoints.to_vec();
+        scoped.push(Box::new(move |rt: &Runtime| {
+            let engine = OffloadEngine::new(rt, impl_name);
+            // Row parallelism lives inside the artifact; one host
+            // thread per layer job is the whole story.
+            let res = refine_job(&engine, job, t_max, 1, &checkpoints);
+            let _ = tx.send(res);
+        }));
+    }
+    drop(tx);
+    pool.run_scoped(scoped);
+    collect_block_results(rx, n_jobs)
+}
+
 /// Run the pruning pipeline.  `store` keeps its dense weights; the
 /// resulting masks are returned (apply with `store.masked(&masks)`).
-pub fn prune(rt: &Runtime, store: &ParamStore, ds: &Dataset,
+///
+/// Serial stages (calibration, warmstarts) run on the pool's primary
+/// runtime; offload refinement fans layers out across all pool
+/// workers when `pool.devices() > 1` (disable with
+/// `layer_parallel: false` — masks are bit-identical either way).
+pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
              cfg: &PruneConfig) -> Result<(MaskSet, PruneReport),
                                           RuntimeError> {
+    let rt: &Runtime = pool.primary();
     let meta = store.meta.clone();
     let calib = ds.batches(&meta, Split::Calibration, cfg.calib_batches);
     let mut masks = MaskSet::all_ones(&meta);
@@ -326,12 +376,18 @@ pub fn prune(rt: &Runtime, store: &ParamStore, ds: &Dataset,
             .map(|&cp| (cp, (0..n_layers).map(|_| None).collect()))
             .collect();
 
-    let use_pool = cfg.layer_parallel && cfg.threads > 1
+    let use_thread_pool = cfg.layer_parallel && cfg.threads > 1
         && cfg.refiner.local_engine().is_some();
-    let pool = if use_pool {
+    let thread_pool = if use_thread_pool {
         Some(ThreadPool::new(cfg.threads))
     } else {
         None
+    };
+    let offload_impl = match &cfg.refiner {
+        Refiner::SparseSwapsOffload { impl_name }
+            if cfg.layer_parallel && pool.devices() > 1 =>
+            Some(impl_name.clone()),
+        _ => None,
     };
 
     let blocks: Vec<usize> = (0..meta.n_blocks).collect();
@@ -382,9 +438,12 @@ pub fn prune(rt: &Runtime, store: &ParamStore, ds: &Dataset,
             });
         }
 
-        let results = if let Some(pool) = &pool {
-            refine_block_parallel(pool, jobs, &cfg.refiner, cfg.t_max,
+        let results = if let Some(tp) = &thread_pool {
+            refine_block_parallel(tp, jobs, &cfg.refiner, cfg.t_max,
                                   cfg.threads, &cfg.checkpoints)?
+        } else if let Some(impl_name) = &offload_impl {
+            refine_block_offload(pool, jobs, impl_name, cfg.t_max,
+                                 &cfg.checkpoints)?
         } else {
             let engine = cfg.refiner.engine(rt);
             let mut out = Vec::with_capacity(jobs.len());

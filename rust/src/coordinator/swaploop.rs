@@ -14,12 +14,20 @@
 //!   * rows that converge (fewer than k swaps accepted in a call) are
 //!     compacted out of the active set, so late iterations run on
 //!     ever-smaller chunks;
+//!   * the Gram tensor and the packed W chunks go through the
+//!     service's persistent device-buffer cache (`ExecInput::Cached`,
+//!     keyed by a per-refinement layer id): G uploads once per layer,
+//!     W chunks once per active-set generation, and only the mask
+//!     chunks — which change every call — travel per call.  This is
+//!     the transport analogue of the host-side `GramView`;
 //!   * checkpoint segmentation (Table 3's "perplexity vs number of
 //!     1-swap iterations") is delegated to the shared
 //!     [`drive_segments`] driver, the same one the native engine uses —
 //!     this module only decides how far one artifact call advances.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use crate::pruning::engine::{
     drive_segments, LayerContext, RefineEngine, RefineError, RefineOutcome,
@@ -27,9 +35,20 @@ use crate::pruning::engine::{
 use crate::pruning::error::row_loss;
 use crate::pruning::mask::Pattern;
 use crate::pruning::sparseswaps::{LayerOutcome, RowOutcome};
-use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::service::{
+    BufferKey, ExecInput, Runtime, RuntimeError,
+};
 use crate::runtime::tensor_data::TensorData;
 use crate::util::tensor::Matrix;
+
+/// Monotone id distinguishing each offload refinement call's cached
+/// device buffers (the [`BufferKey`] "layer" coordinate).  Process-
+/// wide, so concurrent layers on different pool workers never
+/// collide even within one worker's cache.
+fn next_layer_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
 
 #[derive(Clone, Debug)]
 pub struct OffloadConfig {
@@ -90,12 +109,27 @@ impl RefineEngine for OffloadEngine<'_> {
             .clone();
         assert_eq!(k8.chunk_rows, k1.chunk_rows);
         let chunk = k8.chunk_rows;
-        // One packing copy at the PJRT boundary (unavoidable: the
-        // artifact owns its buffers); the view itself is zero-copy.
-        let g_tensor = TensorData::F32 {
+        // One packing copy at the device boundary, made ONCE per
+        // refinement: G is keyed into the service's device-buffer
+        // cache and stays resident across every chunk of every
+        // segment (the old code re-packed and re-uploaded the d*d
+        // tensor per call).
+        let layer_id = next_layer_id();
+        let g_data = Arc::new(TensorData::F32 {
             dims: vec![g.d, g.d],
             data: g.as_slice().to_vec(),
+        });
+        let g_key = BufferKey {
+            layer: layer_id,
+            tensor: "gram".into(),
+            generation: 0,
         };
+        // W chunks are constant while the active row set is;
+        // convergence compaction bumps the generation, invalidating
+        // the per-chunk uploads (and the host-side packed copies).
+        let mut generation: u64 = 0;
+        let mut last_active: Vec<usize> = (0..w.rows).collect();
+        let mut w_chunks: Vec<Option<Arc<TensorData>>> = Vec::new();
 
         let mut rows: Vec<RowState> = (0..w.rows).map(|_| RowState {
             used: 0,
@@ -104,8 +138,8 @@ impl RefineEngine for OffloadEngine<'_> {
             loss_after: f64::NAN,
         }).collect();
 
-        let snapshots = drive_segments(ctx.t_max, checkpoints, mask,
-                                       |mask, budget| {
+        let driven = drive_segments(ctx.t_max, checkpoints, mask,
+                                    |mask, budget| {
             // Use the k8 artifact while >= 8 iterations remain, else k1
             // (keeps T_max bookkeeping exact for arbitrary budgets).
             let (entry, k) = if budget >= k8.k_iters && k8.k_iters > 1 {
@@ -122,18 +156,50 @@ impl RefineEngine for OffloadEngine<'_> {
                 // remaining checkpoints still get recorded.
                 return Ok(0);
             }
-            for group in active.chunks(chunk) {
-                // Pack the chunk (pad with all-kept rows = no-op).
-                let mut wc = Matrix::zeros(chunk, d);
+            if active != last_active {
+                generation += 1;
+                last_active.clone_from(&active);
+                w_chunks.clear();
+            }
+            w_chunks.resize(active.len().div_ceil(chunk), None);
+            for (gi, group) in active.chunks(chunk).enumerate() {
+                // W chunk: packed once per generation (pad rows are
+                // zero weights = no-op) and served from the resident
+                // device buffer on later calls.
+                let wc = match &w_chunks[gi] {
+                    Some(t) => Arc::clone(t),
+                    None => {
+                        let mut m = Matrix::zeros(chunk, d);
+                        for (slot, &ri) in group.iter().enumerate() {
+                            m.row_mut(slot)
+                                .copy_from_slice(w.row(ri));
+                        }
+                        let t = Arc::new(TensorData::from_matrix(&m));
+                        w_chunks[gi] = Some(Arc::clone(&t));
+                        t
+                    }
+                };
+                // Mask chunk: changes every call, so packed inline
+                // (pad with all-kept rows = no feasible swap, provably
+                // a no-op).
                 let mut mc = Matrix::from_fn(chunk, d, |_, _| 1.0);
                 for (slot, &ri) in group.iter().enumerate() {
-                    wc.row_mut(slot).copy_from_slice(w.row(ri));
                     mc.row_mut(slot).copy_from_slice(mask.row(ri));
                 }
-                let out = self.rt.execute(&entry.name, vec![
-                    TensorData::from_matrix(&wc),
-                    TensorData::from_matrix(&mc),
-                    g_tensor.clone(),
+                let out = self.rt.execute_cached(&entry.name, vec![
+                    ExecInput::Cached {
+                        key: BufferKey {
+                            layer: layer_id,
+                            tensor: format!("w{gi}"),
+                            generation,
+                        },
+                        data: wc,
+                    },
+                    ExecInput::Inline(TensorData::from_matrix(&mc)),
+                    ExecInput::Cached {
+                        key: g_key.clone(),
+                        data: Arc::clone(&g_data),
+                    },
                 ]).map_err(|e| RefineError::Msg(e.to_string()))?;
                 let m_out = out[0].as_f32()
                     .map_err(|e| RefineError::Msg(e.to_string()))?;
@@ -163,7 +229,12 @@ impl RefineEngine for OffloadEngine<'_> {
             }
             // Each call executes exactly `k` iterations per active row.
             Ok(k)
-        })?;
+        });
+        // Release this refinement's resident buffers whether or not
+        // the drive succeeded; the LRU would reclaim them eventually,
+        // releasing now keeps the budget for live layers.
+        self.rt.invalidate(layer_id);
+        let snapshots = driven?;
 
         // Rows the loop never touched (t_max == 0, or a row that was
         // never packed into a chunk) still carry NaN sentinels.  Compute

@@ -17,7 +17,7 @@ use sparseswaps::eval::{perplexity, zeroshot};
 use sparseswaps::model::{checkpoint, ParamStore};
 use sparseswaps::pruning::Criterion;
 use sparseswaps::report;
-use sparseswaps::runtime::Runtime;
+use sparseswaps::runtime::{Runtime, RuntimeOptions, RuntimePool};
 use sparseswaps::util::cli::ArgSpec;
 use sparseswaps::util::logging;
 
@@ -63,6 +63,22 @@ fn top_usage() -> String {
 
 fn runtime(args: &sparseswaps::util::cli::Args) -> Result<Runtime, String> {
     Runtime::start(args.get("artifacts")).map_err(|e| e.to_string())
+}
+
+/// Pool options from the shared `--devices` / `--device-mem-budget`
+/// flags (0 devices = all cores; budget in MiB, 0 = unlimited).
+fn pool_args(args: &sparseswaps::util::cli::Args)
+    -> Result<(usize, RuntimeOptions), Box<dyn std::error::Error>> {
+    let devices = match args.parse_num::<usize>("devices")? {
+        0 => sparseswaps::util::threadpool::default_threads(),
+        n => n,
+    };
+    let budget_mib: u64 = args.parse_num("device-mem-budget")?;
+    let opts = RuntimeOptions {
+        device_mem_budget: budget_mib.saturating_mul(1 << 20),
+        device: 0,
+    };
+    Ok((devices, opts))
 }
 
 fn cmd_train(argv: &[String]) -> CliResult {
@@ -139,8 +155,14 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd \
                                   (scalar for cross-arm parity testing)")
         .bool_flag_on("layer-parallel", "refine independent layers of a \
-                                         block concurrently (native and \
-                                         dsnot engines)")
+                                         block concurrently (thread pool \
+                                         for native/dsnot, runtime pool \
+                                         for offload)")
+        .flag("devices", "0", "offload runtime service workers \
+                               (0 = all cores); >1 refines layers \
+                               concurrently across devices")
+        .flag("device-mem-budget", "512", "per-device buffer-cache \
+                                           budget in MiB (0 = unlimited)")
         .flag("seed", "42", "dataset seed")
         .bool_flag("oneshot", "single dense calibration pass \
                               (default: sequential per block)")
@@ -148,7 +170,18 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         .flag("out", "runs/pruned.ssck", "output checkpoint (with masks)");
     let args = spec.parse(argv)?;
     sparseswaps::util::kernels::select(args.get("kernels"))?;
-    let rt = runtime(&args)?;
+    let refiner = parse_refiner(args.get("refine"), args.get("engine"))?;
+    let layer_parallel = args.get_bool("layer-parallel");
+    let (devices, opts) = pool_args(&args)?;
+    // Only the offload engine with layer-parallel scheduling can use
+    // more than one worker; everything else runs on the primary, so
+    // don't spawn (and later compile on) idle service threads.
+    let devices = match refiner {
+        Refiner::SparseSwapsOffload { .. } if layer_parallel => devices,
+        _ => 1,
+    };
+    let rt = RuntimePool::start(args.get("artifacts"), devices, opts)
+        .map_err(|e| e.to_string())?;
     let meta = rt.manifest().config(args.get("config"))?.clone();
     let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;
     let ds = Dataset::build(&meta, args.parse_num("seed")?);
@@ -161,13 +194,13 @@ fn cmd_prune(argv: &[String]) -> CliResult {
             .ok_or_else(|| format!("bad criterion {:?}",
                                    args.get("criterion")))?,
         pattern_kind: parse_pattern(args.get("pattern"))?,
-        refiner: parse_refiner(args.get("refine"), args.get("engine"))?,
+        refiner,
         t_max: args.parse_num("tmax")?,
         calib_batches: args.parse_num("calib-batches")?,
         sequential: !args.get_bool("oneshot"),
         checkpoints: args.parse_list("checkpoints")?,
         threads,
-        layer_parallel: args.get_bool("layer-parallel"),
+        layer_parallel,
     };
     let t0 = std::time::Instant::now();
     let (masks, rep) = prune(&rt, &store, &ds, &cfg)?;
@@ -189,6 +222,16 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         println!("  snapshots: {} checkpoint masks captured at {:?}",
                  rep.snapshots.len(),
                  rep.snapshots.keys().collect::<Vec<_>>());
+    }
+    let ps = rt.stats_total();
+    if ps.executions > 0 {
+        println!("  runtime pool: {} device(s), {} artifact execs, \
+                  buffer cache {}/{} hits ({:.0}%), {} evictions, \
+                  {:.1} MiB summed per-device peaks",
+                 rt.devices(), ps.executions, ps.cache_hits,
+                 ps.cache_hits + ps.cache_misses,
+                 100.0 * ps.cache_hit_rate(), ps.cache_evictions,
+                 ps.cache_peak_bytes as f64 / (1u64 << 20) as f64);
     }
     Ok(())
 }
@@ -238,10 +281,16 @@ fn cmd_report(argv: &[String]) -> CliResult {
         .flag("artifacts", "artifacts", "artifact directory")
         .flag("out", "reports/report.md", "markdown output (appended)")
         .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd")
+        .flag("devices", "1", "offload runtime service workers \
+                               (0 = all cores)")
+        .flag("device-mem-budget", "512", "per-device buffer-cache \
+                                           budget in MiB (0 = unlimited)")
         .bool_flag("quick", "tiny model, reduced budgets");
     let args = spec.parse(argv)?;
     sparseswaps::util::kernels::select(args.get("kernels"))?;
-    let rt = runtime(&args)?;
+    let (devices, opts) = pool_args(&args)?;
+    let rt = RuntimePool::start(args.get("artifacts"), devices, opts)
+        .map_err(|e| e.to_string())?;
     let quick = args.get_bool("quick")
         || std::env::var("SPARSESWAPS_QUICK").is_ok();
     let ctx = report::Ctx::new(rt, "runs", quick);

@@ -17,12 +17,15 @@ use crate::data::{Dataset, Split};
 use crate::eval::{perplexity, zeroshot};
 use crate::model::checkpoint;
 use crate::model::store::{MaskSet, ParamStore};
-use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::pool::RuntimePool;
+use crate::runtime::service::{RuntimeError, RuntimeOptions};
 use crate::util::benchlib::{ascii_plot, Table};
 
-/// Shared context: runtime + trained-model cache.
+/// Shared context: runtime pool + trained-model cache.  `rt` derefs
+/// to the pool's primary runtime, so serial call sites are unchanged;
+/// `prune` fans offload layers out across all pool workers.
 pub struct Ctx {
-    pub rt: Runtime,
+    pub rt: RuntimePool,
     pub runs_dir: PathBuf,
     /// Quick mode: tiny model, smaller budgets (CI-friendly).
     pub quick: bool,
@@ -30,7 +33,7 @@ pub struct Ctx {
 }
 
 impl Ctx {
-    pub fn new(rt: Runtime, runs_dir: impl Into<PathBuf>, quick: bool)
+    pub fn new(rt: RuntimePool, runs_dir: impl Into<PathBuf>, quick: bool)
         -> Ctx {
         Ctx { rt, runs_dir: runs_dir.into(), quick,
               cache: std::sync::Mutex::new(BTreeMap::new()) }
@@ -39,7 +42,12 @@ impl Ctx {
     pub fn from_env() -> Result<Ctx, RuntimeError> {
         let dir = std::env::var("SPARSESWAPS_ARTIFACTS")
             .unwrap_or_else(|_| "artifacts".into());
-        let rt = Runtime::start(&dir)?;
+        let devices = std::env::var("SPARSESWAPS_DEVICES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(1);
+        let rt = RuntimePool::start(&dir, devices,
+                                    RuntimeOptions::default())?;
         let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
         Ok(Ctx::new(rt, "runs", quick))
     }

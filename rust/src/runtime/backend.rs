@@ -1,0 +1,398 @@
+//! Pluggable execution backends for the runtime service.
+//!
+//! The service thread owns exactly one [`Backend`]: the XLA PJRT
+//! client when the `xla` feature is enabled (requires the vendored
+//! `xla` crate), or [`InterpBackend`] — a pure-Rust interpreter of the
+//! refinement artifact kinds — in the default std-only build.  The
+//! backend is always constructed *on* the service thread (factory
+//! pattern, see `Runtime::start_with_backend`), so non-`Send` device
+//! handles never cross threads; only the factory has to be `Send`.
+//!
+//! The split is what makes the runtime layer testable: the pool and
+//! the device-buffer cache are exercised against [`InterpBackend`]
+//! (or a test-local mock) without any PJRT toolchain, while the
+//! production path keeps the exact artifact contract.
+
+use std::collections::HashSet;
+
+use crate::runtime::manifest::ArtifactEntry;
+use crate::runtime::service::RuntimeError;
+use crate::runtime::tensor_data::TensorData;
+
+/// One device's execution substrate, driven by the service thread.
+pub trait Backend {
+    /// Device-resident buffer handle (may wrap raw pointers; the
+    /// service never moves it off its thread).
+    type Buf;
+
+    /// Stable backend label for logs and errors.
+    fn name(&self) -> &'static str;
+
+    /// Compile an artifact ahead of execution (idempotent).  Returns
+    /// `true` when a compile actually happened, `false` when the
+    /// executable was already cached.
+    fn compile(&mut self, entry: &ArtifactEntry)
+        -> Result<bool, RuntimeError>;
+
+    /// Upload one host tensor into a device buffer.
+    fn upload(&mut self, t: &TensorData)
+        -> Result<Self::Buf, RuntimeError>;
+
+    /// Execute a compiled artifact over device buffers, returning
+    /// host tensors in the artifact's declared output order.
+    fn execute(&mut self, entry: &ArtifactEntry, inputs: &[&Self::Buf])
+        -> Result<Vec<TensorData>, RuntimeError>;
+}
+
+/// Backend the default (std-only) build starts services with.
+#[cfg(feature = "xla")]
+pub type DefaultBackend = XlaBackend;
+/// Backend the default (std-only) build starts services with.
+#[cfg(not(feature = "xla"))]
+pub type DefaultBackend = InterpBackend;
+
+fn unsupported_kind(kind: &str) -> RuntimeError {
+    RuntimeError::Msg(format!(
+        "artifact kind {kind:?} needs the PJRT backend (build with the \
+         `xla` feature and a vendored xla crate)"))
+}
+
+/// Pure-Rust interpreter of the refinement artifact kinds
+/// (`swap_step`, `layer_loss`), using the same reference ops as the
+/// native engine (`pruning::sparseswaps::refine_row`), so the offload
+/// engine, the runtime pool, and the device-buffer cache all run —
+/// and are testable and benchable — without a PJRT toolchain.
+/// Model-execution kinds (train/calib/eval) report an error pointing
+/// at the `xla` feature.
+///
+/// "Device" buffers are host copies: [`Backend::upload`] clones the
+/// tensor, standing in for the host→device transfer, so a cache hit
+/// skips exactly the work a real device would skip.
+#[derive(Default)]
+pub struct InterpBackend {
+    compiled: HashSet<String>,
+}
+
+impl InterpBackend {
+    pub fn new() -> InterpBackend {
+        InterpBackend::default()
+    }
+
+    /// Factory for `Runtime::start_with_backend`.
+    pub fn new_default() -> Result<InterpBackend, RuntimeError> {
+        Ok(InterpBackend::new())
+    }
+}
+
+impl Backend for InterpBackend {
+    type Buf = TensorData;
+
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn compile(&mut self, entry: &ArtifactEntry)
+        -> Result<bool, RuntimeError> {
+        match entry.kind.as_str() {
+            "swap_step" | "layer_loss" =>
+                Ok(self.compiled.insert(entry.name.clone())),
+            other => Err(unsupported_kind(other)),
+        }
+    }
+
+    fn upload(&mut self, t: &TensorData)
+        -> Result<TensorData, RuntimeError> {
+        Ok(t.clone())
+    }
+
+    fn execute(&mut self, entry: &ArtifactEntry, inputs: &[&TensorData])
+        -> Result<Vec<TensorData>, RuntimeError> {
+        match entry.kind.as_str() {
+            "swap_step" => exec_swap_step(entry, inputs),
+            "layer_loss" => exec_layer_loss(entry, inputs),
+            other => Err(unsupported_kind(other)),
+        }
+    }
+}
+
+/// Unpack the shared (w, mask, gram) chunk layout of the refinement
+/// artifacts.
+fn chunk_inputs<'a>(entry: &ArtifactEntry, inputs: &[&'a TensorData])
+    -> Result<(&'a [f32], &'a [f32], crate::util::tensor::GramView<'a>,
+               usize, usize),
+              RuntimeError> {
+    if inputs.len() != 3 {
+        return Err(RuntimeError::Msg(format!(
+            "{}: expected 3 inputs (w, mask, gram), got {}",
+            entry.name, inputs.len())));
+    }
+    let (d, chunk) = (entry.width, entry.chunk_rows);
+    let w = inputs[0].as_f32().map_err(RuntimeError::Msg)?;
+    let m = inputs[1].as_f32().map_err(RuntimeError::Msg)?;
+    let g = inputs[2].as_f32().map_err(RuntimeError::Msg)?;
+    if w.len() != chunk * d || m.len() != chunk * d || g.len() != d * d {
+        return Err(RuntimeError::Msg(format!(
+            "{}: input element counts do not match chunk {chunk} x \
+             width {d}", entry.name)));
+    }
+    Ok((w, m, crate::util::tensor::GramView::new(g, d), chunk, d))
+}
+
+/// Up to `k_iters` exact 1-swaps per row — the reference semantics of
+/// the `swap_step_*` artifacts (bit-for-bit `refine_row`).
+fn exec_swap_step(entry: &ArtifactEntry, inputs: &[&TensorData])
+    -> Result<Vec<TensorData>, RuntimeError> {
+    use crate::pruning::sparseswaps::{refine_row, SwapConfig};
+    let (w, m, g, chunk, d) = chunk_inputs(entry, inputs)?;
+    let cfg = SwapConfig { t_max: entry.k_iters.max(1), eps: 0.0 };
+    let mut m_out = m.to_vec();
+    let mut l_before = vec![0.0f32; chunk];
+    let mut l_after = vec![0.0f32; chunk];
+    let mut swaps = vec![0.0f32; chunk];
+    for r in 0..chunk {
+        let row_w = &w[r * d..(r + 1) * d];
+        let row_m = &mut m_out[r * d..(r + 1) * d];
+        let out = refine_row(row_w, row_m, g, entry.nm_block, &cfg);
+        l_before[r] = out.loss_before as f32;
+        l_after[r] = out.loss_after as f32;
+        swaps[r] = out.swaps as f32;
+    }
+    Ok(vec![
+        TensorData::F32 { dims: vec![chunk, d], data: m_out },
+        TensorData::F32 { dims: vec![chunk], data: l_before },
+        TensorData::F32 { dims: vec![chunk], data: l_after },
+        TensorData::F32 { dims: vec![chunk], data: swaps },
+    ])
+}
+
+/// Exact per-row loss of a masked chunk (the `layer_loss_*` kind).
+fn exec_layer_loss(entry: &ArtifactEntry, inputs: &[&TensorData])
+    -> Result<Vec<TensorData>, RuntimeError> {
+    let (w, m, g, chunk, d) = chunk_inputs(entry, inputs)?;
+    let losses: Vec<f32> = (0..chunk)
+        .map(|r| crate::pruning::error::row_loss(
+            &w[r * d..(r + 1) * d], &m[r * d..(r + 1) * d], g) as f32)
+        .collect();
+    Ok(vec![TensorData::F32 { dims: vec![chunk], data: losses }])
+}
+
+#[cfg(feature = "xla")]
+pub use xla_backend::XlaBackend;
+
+/// PJRT-backed execution.  Compiled only with `--features xla`, which
+/// requires adding the vendored `xla` crate as a path dependency (the
+/// offline build has no crates.io access); see DESIGN.md runtime
+/// notes and the load_hlo example for the artifact flow:
+///   HLO text -> HloModuleProto -> XlaComputation -> compile (cached).
+#[cfg(feature = "xla")]
+mod xla_backend {
+    use std::collections::HashMap;
+
+    use super::Backend;
+    use crate::runtime::manifest::{ArtifactEntry, DType};
+    use crate::runtime::service::RuntimeError;
+    use crate::runtime::tensor_data::TensorData;
+
+    pub struct XlaBackend {
+        client: xla::PjRtClient,
+        executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl XlaBackend {
+        /// Factory for `Runtime::start_with_backend`.
+        pub fn new_default() -> Result<XlaBackend, RuntimeError> {
+            let client = xla::PjRtClient::cpu().map_err(|e| {
+                RuntimeError::Xla(format!("client init failed: {e:?}"))
+            })?;
+            Ok(XlaBackend { client, executables: HashMap::new() })
+        }
+    }
+
+    impl Backend for XlaBackend {
+        type Buf = xla::PjRtBuffer;
+
+        fn name(&self) -> &'static str {
+            "xla-pjrt"
+        }
+
+        fn compile(&mut self, entry: &ArtifactEntry)
+            -> Result<bool, RuntimeError> {
+            if self.executables.contains_key(&entry.name) {
+                return Ok(false);
+            }
+            let proto = xla::HloModuleProto::from_text_file(&entry.file)
+                .map_err(|e| RuntimeError::Xla(format!(
+                    "parse {}: {e:?}", entry.file.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)
+                .map_err(|e| RuntimeError::Xla(format!(
+                    "compile {}: {e:?}", entry.name)))?;
+            self.executables.insert(entry.name.clone(), exe);
+            Ok(true)
+        }
+
+        fn upload(&mut self, t: &TensorData)
+            -> Result<xla::PjRtBuffer, RuntimeError> {
+            // Typed upload: `buffer_from_host_raw_bytes` passes an
+            // `ElementType` discriminant where the C side expects a
+            // `PrimitiveType`, silently creating a buffer of the wrong
+            // dtype (F32 -> F16).  The typed variant converts
+            // correctly.
+            match t {
+                TensorData::F32 { dims, data } => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(data, dims, None),
+                TensorData::I32 { dims, data } => self
+                    .client
+                    .buffer_from_host_buffer::<i32>(data, dims, None),
+            }
+            .map_err(|e| RuntimeError::Xla(format!("pack buffer: {e:?}")))
+        }
+
+        fn execute(&mut self, entry: &ArtifactEntry,
+                   inputs: &[&xla::PjRtBuffer])
+            -> Result<Vec<TensorData>, RuntimeError> {
+            let exe = self.executables.get(&entry.name)
+                .ok_or_else(|| RuntimeError::Msg(format!(
+                    "{}: executed before compile", entry.name)))?;
+            // Buffers stay owned by the service (persistently cached
+            // ones survive the call); `execute_b` borrows them.  The
+            // crate's literal-based `execute` leaks every input device
+            // buffer — see EXPERIMENTS.md §Perf iteration 4.
+            let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)
+                .map_err(|e| RuntimeError::Xla(format!(
+                    "execute {}: {e:?}", entry.name)))?;
+            let mut tuple = result[0][0].to_literal_sync()
+                .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
+            let parts = tuple.decompose_tuple()
+                .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
+            if parts.len() != entry.outputs.len() {
+                return Err(RuntimeError::Msg(format!(
+                    "{}: manifest declares {} outputs, PJRT returned {}",
+                    entry.name, entry.outputs.len(), parts.len())));
+            }
+            parts.iter().zip(&entry.outputs)
+                .map(|(lit, sig)| unpack_literal(lit, sig.dtype,
+                                                 &sig.dims))
+                .collect()
+        }
+    }
+
+    fn unpack_literal(lit: &xla::Literal, dtype: DType, dims: &[usize])
+        -> Result<TensorData, RuntimeError> {
+        match dtype {
+            DType::F32 => {
+                let data = lit.to_vec::<f32>()
+                    .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
+                Ok(TensorData::F32 { dims: dims.to_vec(), data })
+            }
+            DType::I32 => {
+                let data = lit.to_vec::<i32>()
+                    .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
+                Ok(TensorData::I32 { dims: dims.to_vec(), data })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask::{mask_from_scores, validate, Pattern};
+    use crate::pruning::saliency;
+    use crate::pruning::sparseswaps::{refine_row, SwapConfig};
+    use crate::runtime::manifest::Manifest;
+    use crate::util::prng::Rng;
+    use crate::util::tensor::Matrix;
+
+    fn instance(seed: u64, rows: usize, d: usize) -> (Matrix, Matrix) {
+        let mut rng = Rng::new(seed);
+        let x = Matrix::from_fn(3 * d, d, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate(&x);
+        let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+        (w, g)
+    }
+
+    #[test]
+    fn interp_swap_step_matches_refine_row_bitwise() {
+        let (d, chunk) = (24usize, 6usize);
+        let entry = crate::runtime::manifest::ArtifactEntry::swap_step(
+            d, chunk, "row", 0, "interp", 8);
+        let (w, g) = instance(3, chunk, d);
+        let pattern = Pattern::PerRow { keep: 10 };
+        let mask = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+        let mut be = InterpBackend::new();
+        assert!(be.compile(&entry).unwrap());
+        assert!(!be.compile(&entry).unwrap());
+        let bufs = [
+            be.upload(&crate::runtime::TensorData::from_matrix(&w))
+                .unwrap(),
+            be.upload(&crate::runtime::TensorData::from_matrix(&mask))
+                .unwrap(),
+            be.upload(&crate::runtime::TensorData::from_matrix(&g))
+                .unwrap(),
+        ];
+        let refs: Vec<&TensorData> = bufs.iter().collect();
+        let out = be.execute(&entry, &refs).unwrap();
+        let m_out = out[0].as_f32().unwrap();
+        let swaps = out[3].as_f32().unwrap();
+        let cfg = SwapConfig { t_max: 8, eps: 0.0 };
+        for r in 0..chunk {
+            let mut want = mask.row(r).to_vec();
+            let ro = refine_row(w.row(r), &mut want, &g, 0, &cfg);
+            assert_eq!(&m_out[r * d..(r + 1) * d], &want[..], "row {r}");
+            assert_eq!(swaps[r] as usize, ro.swaps, "row {r}");
+        }
+        let got = Matrix::from_vec(chunk, d, m_out.to_vec());
+        validate(&got, pattern).unwrap();
+    }
+
+    #[test]
+    fn interp_layer_loss_matches_native() {
+        let (d, chunk) = (16usize, 4usize);
+        let entry = crate::runtime::manifest::ArtifactEntry::layer_loss(
+            d, chunk);
+        let (w, g) = instance(4, chunk, d);
+        let mask = mask_from_scores(&saliency::magnitude(&w),
+                                    Pattern::PerRow { keep: 7 });
+        let mut be = InterpBackend::new();
+        be.compile(&entry).unwrap();
+        let bufs = [
+            be.upload(&TensorData::from_matrix(&w)).unwrap(),
+            be.upload(&TensorData::from_matrix(&mask)).unwrap(),
+            be.upload(&TensorData::from_matrix(&g)).unwrap(),
+        ];
+        let refs: Vec<&TensorData> = bufs.iter().collect();
+        let out = be.execute(&entry, &refs).unwrap();
+        let losses = out[0].as_f32().unwrap();
+        let native =
+            crate::pruning::error::layer_row_losses(&w, &mask, &g);
+        for r in 0..chunk {
+            assert!((losses[r] as f64 - native[r]).abs()
+                    / native[r].abs().max(1.0) < 1e-5, "row {r}");
+        }
+    }
+
+    #[test]
+    fn interp_rejects_model_artifact_kinds() {
+        let mut be = InterpBackend::new();
+        let mut entry = crate::runtime::manifest::ArtifactEntry::layer_loss(
+            8, 4);
+        entry.kind = "calib_step".into();
+        assert!(be.compile(&entry).is_err());
+    }
+
+    #[test]
+    fn swap_step_entry_naming_matches_manifest_scheme() {
+        let e = crate::runtime::manifest::ArtifactEntry::swap_step(
+            64, 128, "nm2_4", 4, "interp", 8);
+        assert_eq!(e.name,
+                   Manifest::swap_artifact_name(64, "nm2_4", "interp", 8));
+        assert_eq!(e.inputs.len(), 3);
+        assert_eq!(e.outputs.len(), 4);
+        assert_eq!(e.inputs[2].dims, vec![64, 64]);
+        assert_eq!(e.outputs[0].dims, vec![128, 64]);
+    }
+}

@@ -69,6 +69,65 @@ pub struct ArtifactEntry {
     pub config: String,
 }
 
+impl ArtifactEntry {
+    /// The swap-step signature contract, in one place: inputs
+    /// (w [chunk, d], mask [chunk, d], gram [d, d]) and outputs
+    /// (mask [chunk, d], loss_before [chunk], loss_after [chunk],
+    /// swaps [chunk]), all f32.  Used by `runtime::testutil` to
+    /// fabricate interp-executable manifests and by the integrity
+    /// checks against the python AOT output.
+    pub fn swap_step(width: usize, chunk_rows: usize, pattern_tag: &str,
+                     nm_block: usize, impl_name: &str, k: usize)
+        -> ArtifactEntry {
+        let name = Manifest::swap_artifact_name(width, pattern_tag,
+                                                impl_name, k);
+        let mat = TensorSig { dims: vec![chunk_rows, width],
+                              dtype: DType::F32 };
+        let gram = TensorSig { dims: vec![width, width],
+                               dtype: DType::F32 };
+        let col = TensorSig { dims: vec![chunk_rows], dtype: DType::F32 };
+        ArtifactEntry {
+            file: PathBuf::from(format!("{name}.hlo.txt")),
+            name,
+            inputs: vec![mat.clone(), mat.clone(), gram],
+            outputs: vec![mat, col.clone(), col.clone(), col],
+            kind: "swap_step".into(),
+            width,
+            chunk_rows,
+            nm_block,
+            k_iters: k,
+            impl_name: impl_name.into(),
+            pattern: pattern_tag.into(),
+            config: String::new(),
+        }
+    }
+
+    /// The layer-loss signature contract: inputs (w, mask, gram) as in
+    /// [`Self::swap_step`], one output (loss [chunk]).
+    pub fn layer_loss(width: usize, chunk_rows: usize) -> ArtifactEntry {
+        let name = Manifest::layer_loss_name(width);
+        let mat = TensorSig { dims: vec![chunk_rows, width],
+                              dtype: DType::F32 };
+        let gram = TensorSig { dims: vec![width, width],
+                               dtype: DType::F32 };
+        let col = TensorSig { dims: vec![chunk_rows], dtype: DType::F32 };
+        ArtifactEntry {
+            file: PathBuf::from(format!("{name}.hlo.txt")),
+            name,
+            inputs: vec![mat.clone(), mat, gram],
+            outputs: vec![col],
+            kind: "layer_loss".into(),
+            width,
+            chunk_rows,
+            nm_block: 0,
+            k_iters: 0,
+            impl_name: String::new(),
+            pattern: String::new(),
+            config: String::new(),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct PrunableLayer {
     pub param_index: usize,
@@ -230,6 +289,11 @@ impl Manifest {
     pub fn swap_artifact_name(width: usize, pattern_tag: &str,
                               impl_name: &str, k: usize) -> String {
         format!("swap_step_d{width}_{pattern_tag}_{impl_name}_k{k}")
+    }
+
+    /// Layer-loss artifact name for a width.
+    pub fn layer_loss_name(width: usize) -> String {
+        format!("layer_loss_d{width}")
     }
 
     /// Pick the best available swap artifact: prefers the requested k,

@@ -1,10 +1,22 @@
-//! PJRT runtime: manifest-driven loading and execution of the AOT HLO
-//! artifacts produced by `python/compile/aot.py`.
+//! Runtime layer: manifest-driven loading and execution of the AOT
+//! HLO artifacts produced by `python/compile/aot.py`, through
+//! pluggable backends (PJRT under `--features xla`, a pure-Rust
+//! artifact interpreter otherwise), a per-device service thread with
+//! a persistent device-buffer cache, and a multi-device
+//! [`RuntimePool`] with work-stealing dispatch.
 
+pub mod backend;
 pub mod manifest;
+pub mod pool;
 pub mod service;
 pub mod tensor_data;
+pub mod testutil;
 
+pub use backend::{Backend, DefaultBackend, InterpBackend};
 pub use manifest::{ArtifactEntry, Manifest, ModelMeta, PrunableLayer};
-pub use service::{Runtime, RuntimeError, ServiceStats};
+pub use pool::RuntimePool;
+pub use service::{
+    BufferKey, ExecInput, Runtime, RuntimeError, RuntimeOptions,
+    ServiceStats, DEFAULT_DEVICE_MEM_BUDGET,
+};
 pub use tensor_data::TensorData;

@@ -1,0 +1,435 @@
+//! [`RuntimePool`]: N independent runtime service workers behind a
+//! work-stealing dispatch queue.
+//!
+//! The paper's 1-swap refinement is embarrassingly parallel across
+//! rows *and* layers; a single `runtime::Runtime` serialises the
+//! offload path because one service thread owns the device.  The pool
+//! starts `devices` workers (each its own service thread, compiled
+//! executables, and device-buffer cache — no shared mutable state;
+//! the parsed manifest is shared immutably) and dispatches per-layer
+//! jobs across them:
+//!
+//!   * every worker has its own deque; [`RuntimePool::submit`]
+//!     round-robins, [`RuntimePool::submit_to`] pins;
+//!   * an idle worker first drains its own deque (FIFO), then steals
+//!     from the other deques' tails, so an unbalanced block (one slow
+//!     layer) never strands the remaining workers;
+//!   * jobs receive `&Runtime` for *their* worker, so every artifact
+//!     execution a job issues lands on that worker's device.
+//!
+//! Determinism: scheduling moves whole layers between identical
+//! workers and per-layer refinement depends only on its inputs, so
+//! pooled masks are bit-identical to the serial schedule (property-
+//! tested in `tests/runtime_pool.rs`; gated in the bench smoke CI
+//! job).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::runtime::backend::DefaultBackend;
+use crate::runtime::manifest::Manifest;
+use crate::runtime::service::{
+    Runtime, RuntimeError, RuntimeOptions, ServiceStats,
+};
+
+type Job = Box<dyn FnOnce(&Runtime) + Send + 'static>;
+
+struct PoolState {
+    /// One deque per worker: owner pops the front, thieves the back.
+    queues: Vec<Mutex<VecDeque<Job>>>,
+    /// Sleeping dispatchers park here between queue sweeps.
+    idle: Mutex<()>,
+    work_cv: Condvar,
+    pending: Mutex<usize>,
+    done_cv: Condvar,
+    shutdown: AtomicBool,
+    steals: AtomicU64,
+    ran: Vec<AtomicU64>,
+}
+
+pub struct RuntimePool {
+    runtimes: Vec<Runtime>,
+    state: Arc<PoolState>,
+    dispatchers: Vec<JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl RuntimePool {
+    /// Start `devices` service workers (min 1) over the artifact
+    /// directory.  The manifest is parsed once; every worker owns its
+    /// own compiled executables and device-buffer cache.
+    pub fn start(artifact_dir: impl AsRef<std::path::Path>,
+                 devices: usize, opts: RuntimeOptions)
+        -> Result<RuntimePool, RuntimeError> {
+        let devices = devices.max(1);
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let mut runtimes = Vec::with_capacity(devices);
+        for device in 0..devices {
+            runtimes.push(Runtime::start_with_backend(
+                Arc::clone(&manifest),
+                DefaultBackend::new_default,
+                RuntimeOptions { device, ..opts })?);
+        }
+        Ok(Self::from_runtimes(runtimes))
+    }
+
+    /// Wrap externally constructed runtime handles (tests and benches
+    /// inject interp- or mock-backed workers here; see
+    /// `runtime::testutil`).
+    pub fn from_runtimes(runtimes: Vec<Runtime>) -> RuntimePool {
+        assert!(!runtimes.is_empty(), "pool needs at least one runtime");
+        let n = runtimes.len();
+        let state = Arc::new(PoolState {
+            queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            idle: Mutex::new(()),
+            work_cv: Condvar::new(),
+            pending: Mutex::new(0),
+            done_cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            steals: AtomicU64::new(0),
+            ran: (0..n).map(|_| AtomicU64::new(0)).collect(),
+        });
+        let dispatchers = runtimes.iter().enumerate()
+            .map(|(i, rt)| {
+                let rt = rt.clone();
+                let state = Arc::clone(&state);
+                std::thread::Builder::new()
+                    .name(format!("runtime-pool-{i}"))
+                    .spawn(move || dispatch_main(i, rt, state))
+                    .expect("spawn pool dispatcher")
+            })
+            .collect();
+        RuntimePool {
+            runtimes,
+            state,
+            dispatchers,
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn devices(&self) -> usize {
+        self.runtimes.len()
+    }
+
+    /// Worker 0's handle — the designated runtime for inherently
+    /// serial stages (calibration, training, evaluation).  Also
+    /// reachable through `Deref`, so a `&RuntimePool` coerces wherever
+    /// a `&Runtime` is expected.
+    pub fn primary(&self) -> &Runtime {
+        &self.runtimes[0]
+    }
+
+    pub fn runtime(&self, i: usize) -> &Runtime {
+        &self.runtimes[i]
+    }
+
+    /// Jobs moved between workers so far.
+    pub fn steals(&self) -> u64 {
+        self.state.steals.load(Ordering::Relaxed)
+    }
+
+    /// Jobs completed per worker (dispatch fairness diagnostics).
+    pub fn jobs_run(&self) -> Vec<u64> {
+        self.state.ran.iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Per-worker service stats (device i at index i).  Named so it
+    /// does not shadow `Runtime::stats()` through `Deref` — `.stats()`
+    /// on a pool still reads the primary worker.
+    pub fn worker_stats(&self) -> Vec<ServiceStats> {
+        self.runtimes.iter().map(|r| r.stats()).collect()
+    }
+
+    /// All workers' counters folded together.
+    pub fn stats_total(&self) -> ServiceStats {
+        let mut total = ServiceStats::default();
+        for s in self.worker_stats() {
+            total.merge(&s);
+        }
+        total
+    }
+
+    fn enqueue(&self, worker: usize, job: Job) {
+        *self.state.pending.lock().unwrap() += 1;
+        self.state.queues[worker % self.devices()]
+            .lock().unwrap()
+            .push_back(job);
+        let _g = self.state.idle.lock().unwrap();
+        self.state.work_cv.notify_all();
+    }
+
+    /// Submit one job to a specific worker's deque (still stealable
+    /// by idle workers — that is the point of the test hook).
+    pub fn submit_to<F>(&self, worker: usize, f: F)
+    where
+        F: FnOnce(&Runtime) + Send + 'static,
+    {
+        self.enqueue(worker, Box::new(f));
+    }
+
+    /// Round-robin submit.
+    pub fn submit<F>(&self, f: F)
+    where
+        F: FnOnce(&Runtime) + Send + 'static,
+    {
+        let w = self.next.fetch_add(1, Ordering::Relaxed)
+            % self.devices();
+        self.enqueue(w, Box::new(f));
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn wait(&self) {
+        let mut cnt = self.state.pending.lock().unwrap();
+        while *cnt > 0 {
+            cnt = self.state.done_cv.wait(cnt).unwrap();
+        }
+    }
+
+    /// Run a batch of *borrowing* jobs to completion on the pool
+    /// (scoped fork/join), the same contract as
+    /// `ThreadPool::run_scoped`: submits every job round-robin, then
+    /// blocks until all of them have finished, so jobs may capture
+    /// non-`'static` references (zero-copy Gram views into block
+    /// calibration state).
+    pub fn run_scoped<'env>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce(&Runtime) + Send + 'env>>,
+    ) {
+        for job in jobs {
+            // SAFETY: `wait()` below blocks until every job submitted
+            // here has completed (dispatcher panics are contained and
+            // still decrement the pending counter), so no job — and
+            // therefore no borrow it captures — outlives 'env.
+            let job: Job = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce(&Runtime) + Send + 'env>, Job>(job)
+            };
+            let w = self.next.fetch_add(1, Ordering::Relaxed)
+                % self.devices();
+            self.enqueue(w, job);
+        }
+        self.wait();
+    }
+}
+
+/// The pool dereferences to its primary worker, so serial call sites
+/// (`train(&pool, ..)`, `perplexity(&pool, ..)`) keep compiling
+/// unchanged while pooled scheduling stays explicit.
+impl std::ops::Deref for RuntimePool {
+    type Target = Runtime;
+
+    fn deref(&self) -> &Runtime {
+        self.primary()
+    }
+}
+
+impl Drop for RuntimePool {
+    fn drop(&mut self) {
+        self.wait();
+        self.state.shutdown.store(true, Ordering::Release);
+        {
+            let _g = self.state.idle.lock().unwrap();
+            self.state.work_cv.notify_all();
+        }
+        for h in self.dispatchers.drain(..) {
+            let _ = h.join();
+        }
+        // Worker runtimes shut down via their own guards.
+    }
+}
+
+fn dispatch_main(me: usize, rt: Runtime, state: Arc<PoolState>) {
+    let n = state.queues.len();
+    loop {
+        // Own queue first (FIFO), then steal from the other deques'
+        // tails.
+        let mut job = state.queues[me].lock().unwrap().pop_front();
+        if job.is_none() {
+            for k in 1..n {
+                let victim = (me + k) % n;
+                job = state.queues[victim].lock().unwrap().pop_back();
+                if job.is_some() {
+                    state.steals.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+        }
+        match job {
+            Some(job) => {
+                // Contain panics so a failing job can neither kill the
+                // dispatcher nor leave the pending counter stuck.
+                let _ = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| job(&rt)));
+                state.ran[me].fetch_add(1, Ordering::Relaxed);
+                let mut cnt = state.pending.lock().unwrap();
+                *cnt -= 1;
+                if *cnt == 0 {
+                    state.done_cv.notify_all();
+                }
+            }
+            None => {
+                if state.shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+                // Timed wait sidesteps lost-wakeup races between the
+                // empty sweep above and a concurrent submit; 5ms is
+                // noise next to layer-sized jobs.
+                let guard = state.idle.lock().unwrap();
+                let _ = state.work_cv
+                    .wait_timeout(guard, Duration::from_millis(5))
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::InterpBackend;
+    use std::sync::atomic::AtomicU64;
+
+    fn empty_pool(n: usize) -> RuntimePool {
+        let manifest = Arc::new(Manifest {
+            dir: std::path::PathBuf::from("."),
+            configs: Default::default(),
+            artifacts: Default::default(),
+        });
+        let runtimes = (0..n)
+            .map(|device| Runtime::start_with_backend(
+                Arc::clone(&manifest),
+                InterpBackend::new_default,
+                RuntimeOptions { device,
+                                 ..RuntimeOptions::default() })
+                .unwrap())
+            .collect();
+        RuntimePool::from_runtimes(runtimes)
+    }
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = empty_pool(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.submit(move |_rt| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+        assert_eq!(pool.jobs_run().iter().sum::<u64>(), 50);
+    }
+
+    #[test]
+    fn wait_is_reusable() {
+        let pool = empty_pool(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        for round in 0..3u64 {
+            for _ in 0..10 {
+                let c = Arc::clone(&counter);
+                pool.submit(move |_rt| {
+                    c.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+            pool.wait();
+            assert_eq!(counter.load(Ordering::Relaxed),
+                       10 * (round + 1));
+        }
+    }
+
+    #[test]
+    fn idle_workers_steal_a_pinned_queue() {
+        let pool = empty_pool(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..24 {
+            let c = Arc::clone(&counter);
+            pool.submit_to(0, move |_rt| {
+                std::thread::sleep(Duration::from_millis(2));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 24);
+        assert!(pool.steals() > 0,
+                "idle workers must steal from the pinned queue");
+    }
+
+    #[test]
+    fn jobs_see_their_workers_runtime() {
+        let pool = empty_pool(3);
+        let seen = Arc::new(Mutex::new(std::collections::BTreeSet::new()));
+        for _ in 0..30 {
+            let seen = Arc::clone(&seen);
+            pool.submit(move |rt| {
+                std::thread::sleep(Duration::from_millis(1));
+                seen.lock().unwrap().insert(rt.device());
+            });
+        }
+        pool.wait();
+        let seen = seen.lock().unwrap();
+        assert!(!seen.is_empty());
+        assert!(seen.iter().all(|&d| d < 3));
+    }
+
+    #[test]
+    fn run_scoped_allows_borrowed_jobs() {
+        let pool = empty_pool(3);
+        let data: Vec<u64> = (0..100).collect();
+        let total = AtomicU64::new(0);
+        {
+            let data = &data;
+            let total = &total;
+            let jobs: Vec<Box<dyn FnOnce(&Runtime) + Send + '_>> =
+                (0..4)
+                    .map(|t| {
+                        Box::new(move |_rt: &Runtime| {
+                            let s: u64 = data.iter()
+                                .skip(t)
+                                .step_by(4)
+                                .sum();
+                            total.fetch_add(s, Ordering::Relaxed);
+                        })
+                            as Box<dyn FnOnce(&Runtime) + Send + '_>
+                    })
+                    .collect();
+            pool.run_scoped(jobs);
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn pool_survives_panicking_job() {
+        let pool = empty_pool(2);
+        let counter = Arc::new(AtomicU64::new(0));
+        pool.submit(|_rt| panic!("job failure"));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move |_rt| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = empty_pool(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..12 {
+            let c = Arc::clone(&counter);
+            pool.submit(move |_rt| {
+                std::thread::sleep(Duration::from_millis(1));
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        drop(pool);
+        assert_eq!(counter.load(Ordering::Relaxed), 12);
+    }
+}

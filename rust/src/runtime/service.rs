@@ -1,14 +1,23 @@
-//! PJRT runtime service: a dedicated thread owning the (non-`Send`)
-//! client and compiled executables, serving execute requests over
-//! channels.
+//! Runtime service: one dedicated thread per device worker owning a
+//! (possibly non-`Send`) execution [`Backend`] plus its compiled
+//! executables, serving execute requests over channels.
 //!
-//! Artifact flow (see /opt/xla-example/load_hlo for the pattern):
-//!   HLO text --HloModuleProto::from_text_file--> proto
-//!            --XlaComputation::from_proto--> computation
-//!            --client.compile--> PjRtLoadedExecutable (cached)
-//! Executions pack [`TensorData`] into `xla::Literal`s, run, then
-//! decompose the single tuple output back into `TensorData`s (the PJRT
-//! wrapper returns tupled results; see DESIGN.md runtime notes).
+//! Two things live on the service thread and nowhere else:
+//!
+//!   * the backend (PJRT client under `--features xla`, the pure-Rust
+//!     artifact interpreter otherwise — see `runtime::backend`);
+//!   * the **device-buffer cache**: host tensors uploaded through
+//!     [`ExecInput::Cached`] stay resident on the device, keyed by
+//!     `(layer, tensor, generation)`.  A repeat call with the same key
+//!     reuses the buffer (no re-pack, no re-upload); a bumped
+//!     generation invalidates the stale buffer; an LRU sweep bounded
+//!     by [`RuntimeOptions::device_mem_budget`] reclaims memory after
+//!     each call.  Hit/miss/eviction counters surface through
+//!     [`ServiceStats`].
+//!
+//! Executions exchange [`TensorData`] (plain `Vec`s + dims); the
+//! service packs/unpacks at the boundary, so handles stay `Send` and
+//! several workers can form a `runtime::pool::RuntimePool`.
 
 use std::collections::HashMap;
 use std::sync::mpsc;
@@ -16,7 +25,8 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::runtime::manifest::{DType, Manifest};
+use crate::runtime::backend::{Backend, DefaultBackend};
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
 use crate::runtime::tensor_data::TensorData;
 
 #[derive(Debug)]
@@ -44,10 +54,45 @@ impl From<String> for RuntimeError {
 
 type ExecResult = Result<Vec<TensorData>, RuntimeError>;
 
+/// Key of one persistently cached device buffer.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct BufferKey {
+    /// Caller-chosen layer/job id; unique per refinement call (see
+    /// `OffloadEngine`), so concurrent layers never collide.
+    pub layer: u64,
+    /// Tensor role within the layer ("gram", "w0", "w1", ...).
+    pub tensor: String,
+    /// Content generation.  A bumped generation for the same
+    /// (layer, tensor) drops the stale resident buffer on next use.
+    pub generation: u64,
+}
+
+/// One input of a cached execution.
+pub enum ExecInput {
+    /// Uploaded for this call only, never cached (e.g. mask chunks,
+    /// which change every call).
+    Inline(TensorData),
+    /// Uploaded once, then served from the resident device buffer
+    /// while the generation matches.  `data` travels on every call so
+    /// a miss (first use, bumped generation, post-eviction) re-uploads
+    /// without a round-trip back to the caller; `Arc` keeps that
+    /// cheap.
+    Cached { key: BufferKey, data: Arc<TensorData> },
+}
+
+impl ExecInput {
+    fn data(&self) -> &TensorData {
+        match self {
+            ExecInput::Inline(t) => t,
+            ExecInput::Cached { data, .. } => data,
+        }
+    }
+}
+
 enum Request {
     Exec {
         artifact: String,
-        inputs: Vec<TensorData>,
+        inputs: Vec<ExecInput>,
         reply: mpsc::Sender<ExecResult>,
     },
     /// Compile without executing (warm the cache).
@@ -58,6 +103,8 @@ enum Request {
     Stats {
         reply: mpsc::Sender<ServiceStats>,
     },
+    /// Drop every cached buffer belonging to one layer id.
+    Invalidate { layer: u64 },
     Shutdown,
 }
 
@@ -65,23 +112,91 @@ enum Request {
 pub struct ServiceStats {
     pub executions: u64,
     pub compiles: u64,
+    /// Backend execute time; since the backend API returns host
+    /// tensors, output download/decompose is included here.
     pub exec_nanos: u64,
     pub pack_nanos: u64,
+    /// Retained for report compatibility; the backend API folds
+    /// output unpacking into `exec_nanos`, so this stays 0.
     pub unpack_nanos: u64,
     pub compile_nanos: u64,
+    /// Device-buffer cache: resident-buffer reuses (uploads skipped).
+    pub cache_hits: u64,
+    /// Uploads of cacheable inputs (first use, bumped generation, or
+    /// re-upload after eviction).
+    pub cache_misses: u64,
+    /// LRU evictions forced by the device memory budget.
+    pub cache_evictions: u64,
+    /// Buffers dropped by generation bumps and explicit layer
+    /// invalidation.
+    pub cache_invalidations: u64,
+    /// Bytes currently resident in the cache.
+    pub cache_bytes: u64,
+    /// High-water mark of `cache_bytes`.
+    pub cache_peak_bytes: u64,
 }
 
 impl ServiceStats {
     pub fn exec_seconds(&self) -> f64 {
         self.exec_nanos as f64 / 1e9
     }
+
+    /// Cache hit rate over all cacheable lookups (0 when none ran).
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Fold another worker's counters into this one (pool totals).
+    /// Byte gauges sum across devices: `cache_bytes` is the fleet's
+    /// current resident total; `cache_peak_bytes` becomes the *sum of
+    /// per-device peaks* (an upper bound on any simultaneous fleet
+    /// peak — the devices need not have peaked at the same instant).
+    pub fn merge(&mut self, o: &ServiceStats) {
+        self.executions += o.executions;
+        self.compiles += o.compiles;
+        self.exec_nanos += o.exec_nanos;
+        self.pack_nanos += o.pack_nanos;
+        self.unpack_nanos += o.unpack_nanos;
+        self.compile_nanos += o.compile_nanos;
+        self.cache_hits += o.cache_hits;
+        self.cache_misses += o.cache_misses;
+        self.cache_evictions += o.cache_evictions;
+        self.cache_invalidations += o.cache_invalidations;
+        self.cache_bytes += o.cache_bytes;
+        self.cache_peak_bytes += o.cache_peak_bytes;
+    }
 }
 
-/// Handle to the runtime service; cheap to clone and `Send`.
+/// Default per-device buffer-cache budget (bytes).
+pub const DEFAULT_DEVICE_MEM_BUDGET: u64 = 512 << 20;
+
+/// Options for starting one runtime service worker.
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeOptions {
+    /// Device-buffer cache budget in bytes; the LRU sweep reclaims
+    /// beyond this after every call.  0 = unlimited.
+    pub device_mem_budget: u64,
+    /// Device index (pool worker id; 0 for a standalone runtime).
+    pub device: usize,
+}
+
+impl Default for RuntimeOptions {
+    fn default() -> Self {
+        Self { device_mem_budget: DEFAULT_DEVICE_MEM_BUDGET, device: 0 }
+    }
+}
+
+/// Handle to one runtime service worker; cheap to clone and `Send`.
 #[derive(Clone)]
 pub struct Runtime {
     tx: mpsc::Sender<Request>,
     manifest: Arc<Manifest>,
+    device: usize,
     _join: Arc<JoinGuard>,
 }
 
@@ -100,19 +215,43 @@ impl Drop for JoinGuard {
 }
 
 impl Runtime {
-    /// Start the service: load the manifest and spawn the PJRT thread.
+    /// Start a service over the artifact directory with the default
+    /// backend and options.
     pub fn start(artifact_dir: impl AsRef<std::path::Path>)
         -> Result<Runtime, RuntimeError> {
+        Self::start_opts(artifact_dir, RuntimeOptions::default())
+    }
+
+    /// [`Self::start`] with explicit options.
+    pub fn start_opts(artifact_dir: impl AsRef<std::path::Path>,
+                      opts: RuntimeOptions)
+        -> Result<Runtime, RuntimeError> {
         let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        Self::start_with_backend(manifest, DefaultBackend::new_default,
+                                 opts)
+    }
+
+    /// Start a service worker over an explicit backend.  The factory
+    /// runs *on* the service thread, so the backend itself need not be
+    /// `Send` (PJRT clients are not); only the factory is.
+    pub fn start_with_backend<B, F>(manifest: Arc<Manifest>, factory: F,
+                                    opts: RuntimeOptions)
+        -> Result<Runtime, RuntimeError>
+    where
+        B: Backend + 'static,
+        F: FnOnce() -> Result<B, RuntimeError> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Request>();
         let thread_manifest = Arc::clone(&manifest);
         let handle = std::thread::Builder::new()
-            .name("pjrt-service".into())
-            .spawn(move || service_main(rx, thread_manifest))
+            .name(format!("runtime-service-{}", opts.device))
+            .spawn(move || service_main(rx, thread_manifest, factory,
+                                        opts))
             .map_err(|e| RuntimeError::Msg(e.to_string()))?;
         Ok(Runtime {
             tx: tx.clone(),
             manifest,
+            device: opts.device,
             _join: Arc::new(JoinGuard { tx, handle: Some(handle) }),
         })
     }
@@ -121,9 +260,23 @@ impl Runtime {
         &self.manifest
     }
 
+    /// Device index this worker was started with.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
     /// Execute an artifact by name; validates signatures against the
-    /// manifest on both sides.
+    /// manifest on both sides.  All inputs are uploaded per call.
     pub fn execute(&self, artifact: &str, inputs: Vec<TensorData>)
+        -> ExecResult {
+        self.execute_cached(
+            artifact,
+            inputs.into_iter().map(ExecInput::Inline).collect())
+    }
+
+    /// [`Self::execute`] with per-input cache control: `Cached` inputs
+    /// upload once and stay resident under their [`BufferKey`].
+    pub fn execute_cached(&self, artifact: &str, inputs: Vec<ExecInput>)
         -> ExecResult {
         let entry = self.manifest.artifact(artifact)?;
         if inputs.len() != entry.inputs.len() {
@@ -132,7 +285,7 @@ impl Runtime {
                 entry.inputs.len(), inputs.len())));
         }
         for (i, (t, sig)) in inputs.iter().zip(&entry.inputs).enumerate() {
-            t.check_sig(sig, &format!("{artifact} input {i}"))?;
+            t.data().check_sig(sig, &format!("{artifact} input {i}"))?;
         }
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx.send(Request::Exec {
@@ -163,35 +316,61 @@ impl Runtime {
         }
         reply_rx.recv().unwrap_or_default()
     }
+
+    /// Release every device buffer cached under `layer` (fire and
+    /// forget; the channel's FIFO order makes it take effect before
+    /// any later call from this handle).  The LRU sweep would reclaim
+    /// them eventually — releasing promptly keeps the budget for live
+    /// layers.
+    pub fn invalidate(&self, layer: u64) {
+        let _ = self.tx.send(Request::Invalidate { layer });
+    }
 }
 
 // --- service thread --------------------------------------------------------
 
-struct Service {
-    client: xla::PjRtClient,
+struct CachedBuf<Buf> {
+    buf: Buf,
+    generation: u64,
+    bytes: u64,
+    last_used: u64,
+}
+
+struct Service<B: Backend> {
+    backend: B,
     manifest: Arc<Manifest>,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// LRU budget in bytes (0 = unlimited).
+    budget: u64,
+    cache: HashMap<(u64, String), CachedBuf<B::Buf>>,
+    tick: u64,
     stats: ServiceStats,
 }
 
-fn service_main(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => c,
+fn service_main<B, F>(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>,
+                      factory: F, opts: RuntimeOptions)
+where
+    B: Backend,
+    F: FnOnce() -> Result<B, RuntimeError>,
+{
+    let backend = match factory() {
+        Ok(b) => b,
         Err(e) => {
             // Fail every request with the construction error.
+            let msg = format!("backend init failed: {e}");
             for req in rx {
                 match req {
                     Request::Exec { reply, .. } => {
-                        let _ = reply.send(Err(RuntimeError::Xla(
-                            format!("client init failed: {e:?}"))));
+                        let _ = reply.send(Err(RuntimeError::Msg(
+                            msg.clone())));
                     }
                     Request::Preload { reply, .. } => {
-                        let _ = reply.send(Err(RuntimeError::Xla(
-                            format!("client init failed: {e:?}"))));
+                        let _ = reply.send(Err(RuntimeError::Msg(
+                            msg.clone())));
                     }
                     Request::Stats { reply } => {
                         let _ = reply.send(ServiceStats::default());
                     }
+                    Request::Invalidate { .. } => {}
                     Request::Shutdown => break,
                 }
             }
@@ -199,9 +378,11 @@ fn service_main(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>) {
         }
     };
     let mut svc = Service {
-        client,
+        backend,
         manifest,
-        executables: HashMap::new(),
+        budget: opts.device_mem_budget,
+        cache: HashMap::new(),
+        tick: 0,
         stats: ServiceStats::default(),
     };
     for req in rx {
@@ -210,113 +391,175 @@ fn service_main(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>) {
                 let _ = reply.send(svc.execute(&artifact, inputs));
             }
             Request::Preload { artifact, reply } => {
-                let _ = reply.send(svc.ensure_compiled(&artifact)
-                                   .map(|_| ()));
+                let _ = reply.send(svc.preload(&artifact));
             }
             Request::Stats { reply } => {
                 let _ = reply.send(svc.stats.clone());
             }
+            Request::Invalidate { layer } => svc.invalidate_layer(layer),
             Request::Shutdown => break,
         }
     }
 }
 
-impl Service {
-    fn ensure_compiled(&mut self, artifact: &str)
-        -> Result<&xla::PjRtLoadedExecutable, RuntimeError> {
-        if !self.executables.contains_key(artifact) {
-            let entry = self.manifest.artifact(artifact)?.clone();
-            let t0 = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(&entry.file)
-                .map_err(|e| RuntimeError::Xla(format!(
-                    "parse {}: {e:?}", entry.file.display())))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp)
-                .map_err(|e| RuntimeError::Xla(format!(
-                    "compile {artifact}: {e:?}")))?;
+impl<B: Backend> Service<B> {
+    fn preload(&mut self, artifact: &str) -> Result<(), RuntimeError> {
+        let manifest = Arc::clone(&self.manifest);
+        let entry = manifest.artifact(artifact)?;
+        self.ensure_compiled(entry)
+    }
+
+    fn ensure_compiled(&mut self, entry: &ArtifactEntry)
+        -> Result<(), RuntimeError> {
+        let t0 = Instant::now();
+        if self.backend.compile(entry)? {
             self.stats.compiles += 1;
             self.stats.compile_nanos += t0.elapsed().as_nanos() as u64;
-            self.executables.insert(artifact.to_string(), exe);
         }
-        Ok(&self.executables[artifact])
+        Ok(())
     }
 
-    fn execute(&mut self, artifact: &str, inputs: Vec<TensorData>)
-        -> ExecResult {
-        let entry = self.manifest.artifact(artifact)?.clone();
-        self.ensure_compiled(artifact)?;
-
-        // Upload inputs as PjRtBuffers we own and run via `execute_b`.
-        // The crate's literal-based `execute` leaks every input device
-        // buffer (xla_rs.cc releases them and never frees), which OOMs
-        // long runs — see EXPERIMENTS.md §Perf iteration 4.
+    /// Make one cacheable input resident: reuse on generation match,
+    /// drop + re-upload on mismatch, upload + insert on first use.
+    fn ensure_resident(&mut self, key: &BufferKey, data: &TensorData)
+        -> Result<(), RuntimeError> {
+        let mk = (key.layer, key.tensor.clone());
+        if let Some(c) = self.cache.get_mut(&mk) {
+            if c.generation == key.generation {
+                self.tick += 1;
+                c.last_used = self.tick;
+                self.stats.cache_hits += 1;
+                return Ok(());
+            }
+        }
+        // Stale generation: drop the old buffer before re-uploading.
+        if let Some(old) = self.cache.remove(&mk) {
+            self.stats.cache_bytes -= old.bytes;
+            self.stats.cache_invalidations += 1;
+        }
         let t0 = Instant::now();
-        let buffers: Vec<xla::PjRtBuffer> = inputs.iter()
-            .map(|t| pack_buffer(&self.client, t))
-            .collect::<Result<_, _>>()?;
-        let t_pack = t0.elapsed();
+        let buf = self.backend.upload(data)?;
+        self.stats.pack_nanos += t0.elapsed().as_nanos() as u64;
+        self.stats.cache_misses += 1;
+        let bytes = data.byte_size() as u64;
+        self.tick += 1;
+        self.cache.insert(mk, CachedBuf {
+            buf,
+            generation: key.generation,
+            bytes,
+            last_used: self.tick,
+        });
+        self.stats.cache_bytes += bytes;
+        self.stats.cache_peak_bytes =
+            self.stats.cache_peak_bytes.max(self.stats.cache_bytes);
+        Ok(())
+    }
 
-        let exe = &self.executables[artifact];
+    /// Evict least-recently-used buffers until the budget holds.
+    /// Runs only between calls, so an in-flight call's inputs are
+    /// never reclaimed under it.
+    fn trim_to_budget(&mut self) {
+        if self.budget == 0 {
+            return;
+        }
+        while self.stats.cache_bytes > self.budget
+            && !self.cache.is_empty() {
+            let victim = self.cache.iter()
+                .min_by_key(|(_, c)| c.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("cache non-empty");
+            let old = self.cache.remove(&victim).expect("victim resident");
+            self.stats.cache_bytes -= old.bytes;
+            self.stats.cache_evictions += 1;
+        }
+    }
+
+    fn invalidate_layer(&mut self, layer: u64) {
+        let keys: Vec<(u64, String)> = self.cache.keys()
+            .filter(|(l, _)| *l == layer)
+            .cloned()
+            .collect();
+        for k in keys {
+            let old = self.cache.remove(&k).expect("key resident");
+            self.stats.cache_bytes -= old.bytes;
+            self.stats.cache_invalidations += 1;
+        }
+    }
+
+    fn execute(&mut self, artifact: &str, inputs: Vec<ExecInput>)
+        -> ExecResult {
+        // Borrow the entry through a local Arc clone so `self` stays
+        // free for &mut calls — no per-call ArtifactEntry clone on the
+        // hot path.
+        let manifest = Arc::clone(&self.manifest);
+        let entry = manifest.artifact(artifact)?;
+        self.ensure_compiled(entry)?;
+
+        // Duplicate cache keys within one call would both resolve to
+        // the single surviving buffer in phase 2 (the second upload
+        // replaces the first) — reject instead of executing with
+        // wrong data.
+        for (i, a) in inputs.iter().enumerate() {
+            if let ExecInput::Cached { key: ka, .. } = a {
+                for b in &inputs[i + 1..] {
+                    if let ExecInput::Cached { key: kb, .. } = b {
+                        if ka.layer == kb.layer && ka.tensor == kb.tensor
+                        {
+                            return Err(RuntimeError::Msg(format!(
+                                "{artifact}: duplicate cached input \
+                                 key ({}, {:?})", ka.layer, ka.tensor)));
+                        }
+                    }
+                }
+            }
+        }
+
+        // Phase 1: make every cached input resident and upload the
+        // per-call inline inputs.  No buffer refs are held yet, so the
+        // cache map stays freely mutable.
+        for inp in &inputs {
+            if let ExecInput::Cached { key, data } = inp {
+                self.ensure_resident(key, data)?;
+            }
+        }
+        let t0 = Instant::now();
+        let mut temps: Vec<B::Buf> = Vec::new();
+        for inp in &inputs {
+            if let ExecInput::Inline(t) = inp {
+                temps.push(self.backend.upload(t)?);
+            }
+        }
+        self.stats.pack_nanos += t0.elapsed().as_nanos() as u64;
+
+        // Phase 2: assemble the argument refs (cache + temps) in the
+        // artifact's input order and run.
+        let mut refs: Vec<&B::Buf> = Vec::with_capacity(inputs.len());
+        let mut ti = 0usize;
+        for inp in &inputs {
+            match inp {
+                ExecInput::Inline(_) => {
+                    refs.push(&temps[ti]);
+                    ti += 1;
+                }
+                ExecInput::Cached { key, .. } => {
+                    let mk = (key.layer, key.tensor.clone());
+                    refs.push(&self.cache[&mk].buf);
+                }
+            }
+        }
         let t1 = Instant::now();
-        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)
-            .map_err(|e| RuntimeError::Xla(format!(
-                "execute {artifact}: {e:?}")))?;
-        drop(buffers); // input device memory freed here
-        let t_exec = t1.elapsed();
+        let outputs = self.backend.execute(entry, &refs)?;
+        drop(refs);
+        drop(temps); // per-call input device memory freed here
+        self.stats.exec_nanos += t1.elapsed().as_nanos() as u64;
 
-        let t2 = Instant::now();
-        let mut tuple = result[0][0].to_literal_sync()
-            .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
-        let parts = tuple.decompose_tuple()
-            .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
-        if parts.len() != entry.outputs.len() {
+        if outputs.len() != entry.outputs.len() {
             return Err(RuntimeError::Msg(format!(
-                "{artifact}: manifest declares {} outputs, PJRT returned {}",
-                entry.outputs.len(), parts.len())));
+                "{artifact}: manifest declares {} outputs, backend \
+                 returned {}", entry.outputs.len(), outputs.len())));
         }
-        let outputs: Vec<TensorData> = parts.iter().zip(&entry.outputs)
-            .map(|(lit, sig)| unpack_literal(lit, sig.dtype,
-                                             &sig.dims))
-            .collect::<Result<_, _>>()?;
-        let t_unpack = t2.elapsed();
-
         self.stats.executions += 1;
-        self.stats.pack_nanos += t_pack.as_nanos() as u64;
-        self.stats.exec_nanos += t_exec.as_nanos() as u64;
-        self.stats.unpack_nanos += t_unpack.as_nanos() as u64;
+        self.trim_to_budget();
         Ok(outputs)
-    }
-}
-
-fn pack_buffer(client: &xla::PjRtClient, t: &TensorData)
-    -> Result<xla::PjRtBuffer, RuntimeError> {
-    // Use the *typed* upload: the crate's `buffer_from_host_raw_bytes`
-    // passes an `ElementType` discriminant where the C side expects a
-    // `PrimitiveType`, silently creating a buffer of the wrong dtype
-    // (F32 -> F16).  The typed variant converts correctly.
-    match t {
-        TensorData::F32 { dims, data } => {
-            client.buffer_from_host_buffer::<f32>(data, dims, None)
-        }
-        TensorData::I32 { dims, data } => {
-            client.buffer_from_host_buffer::<i32>(data, dims, None)
-        }
-    }
-    .map_err(|e| RuntimeError::Xla(format!("pack buffer: {e:?}")))
-}
-
-fn unpack_literal(lit: &xla::Literal, dtype: DType, dims: &[usize])
-    -> Result<TensorData, RuntimeError> {
-    match dtype {
-        DType::F32 => {
-            let data = lit.to_vec::<f32>()
-                .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
-            Ok(TensorData::F32 { dims: dims.to_vec(), data })
-        }
-        DType::I32 => {
-            let data = lit.to_vec::<i32>()
-                .map_err(|e| RuntimeError::Xla(format!("{e:?}")))?;
-            Ok(TensorData::I32 { dims: dims.to_vec(), data })
-        }
     }
 }

@@ -70,6 +70,11 @@ impl TensorData {
         self.dims().iter().product()
     }
 
+    /// Host/device footprint in bytes (both dtypes are 4-byte).
+    pub fn byte_size(&self) -> usize {
+        self.element_count() * self.dtype().byte_size()
+    }
+
     pub fn as_f32(&self) -> Result<&[f32], String> {
         match self {
             TensorData::F32 { data, .. } => Ok(data),

@@ -1,0 +1,55 @@
+//! In-memory manifests and interp-backed runtimes/pools, shared by
+//! the runtime tests, the pooled-offload parity properties, and the
+//! artifact-free pool sweep in `benches/ablation_engine.rs`.
+//!
+//! Nothing here touches the filesystem: `swap_manifest` fabricates
+//! the swap-step/layer-loss artifact entries directly and
+//! `InterpBackend` executes them natively, so the whole offload stack
+//! (engine → pool → service → cache) runs without `make artifacts`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::runtime::backend::InterpBackend;
+use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::runtime::pool::RuntimePool;
+use crate::runtime::service::{Runtime, RuntimeOptions};
+
+/// Manifest holding interp-executable swap-step artifacts (k=1 and
+/// k=8, per-row + 2:4 patterns, impl "interp") and a layer-loss
+/// artifact, all at one width/chunk shape.
+pub fn swap_manifest(d: usize, chunk_rows: usize) -> Manifest {
+    let mut artifacts = std::collections::BTreeMap::new();
+    for (tag, nm) in [("row", 0usize), ("nm2_4", 4)] {
+        for k in [1usize, 8] {
+            let e = ArtifactEntry::swap_step(d, chunk_rows, tag, nm,
+                                             "interp", k);
+            artifacts.insert(e.name.clone(), e);
+        }
+    }
+    let ll = ArtifactEntry::layer_loss(d, chunk_rows);
+    artifacts.insert(ll.name.clone(), ll);
+    Manifest {
+        dir: PathBuf::from("."),
+        configs: Default::default(),
+        artifacts,
+    }
+}
+
+/// One service worker over [`InterpBackend`].
+pub fn interp_runtime(manifest: &Manifest, opts: RuntimeOptions)
+    -> Runtime {
+    Runtime::start_with_backend(Arc::new(manifest.clone()),
+                                InterpBackend::new_default, opts)
+        .expect("start interp runtime")
+}
+
+/// A pool of `devices` interp workers over one manifest.
+pub fn interp_pool(manifest: &Manifest, devices: usize,
+                   opts: RuntimeOptions) -> RuntimePool {
+    RuntimePool::from_runtimes(
+        (0..devices.max(1))
+            .map(|device| interp_runtime(
+                manifest, RuntimeOptions { device, ..opts }))
+            .collect())
+}

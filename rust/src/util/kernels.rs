@@ -223,12 +223,26 @@ pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
     matmul_arm(active(), a, b)
 }
 
+/// [`matmul`] parallelised over output-row panels — the same scheme
+/// [`syrk_arm`] uses.  Each worker runs the full blocked loop over
+/// its row range with a private B pack buffer, so every output
+/// element's accumulation order is unchanged and results are
+/// bit-identical for any thread count (per arm).
+pub fn matmul_par(a: &Matrix, b: &Matrix, threads: usize) -> Matrix {
+    matmul_arm_par(active(), a, b, threads)
+}
+
 /// k-panel height of the blocked matmul/packing loop.
 const MATMUL_KC: usize = 128;
 /// j-panel width of the blocked matmul/packing loop.
 const MATMUL_NC: usize = 512;
 
 pub fn matmul_arm(arm: Arm, a: &Matrix, b: &Matrix) -> Matrix {
+    matmul_arm_par(arm, a, b, 1)
+}
+
+pub fn matmul_arm_par(arm: Arm, a: &Matrix, b: &Matrix, threads: usize)
+    -> Matrix {
     assert_eq!(a.cols, b.rows, "matmul shape mismatch");
     let (n, k, m) = (a.rows, a.cols, b.cols);
     let mut out = Matrix::zeros(n, m);
@@ -236,6 +250,41 @@ pub fn matmul_arm(arm: Arm, a: &Matrix, b: &Matrix) -> Matrix {
         return out;
     }
     let use_simd = arm == Arm::Simd && simd_available();
+    let n_threads = threads.max(1).min(n);
+    if n_threads <= 1 {
+        matmul_panel(use_simd, a, b, &mut out.data, 0, n);
+        return out;
+    }
+    let chunk = n.div_ceil(n_threads);
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(n_threads);
+    let mut rest = out.data.as_mut_slice();
+    let mut i0 = 0usize;
+    while i0 < n {
+        let rows_here = chunk.min(n - i0);
+        let (panel, tail) = rest.split_at_mut(rows_here * m);
+        rest = tail;
+        let lo = i0;
+        jobs.push(Box::new(move || {
+            matmul_panel(use_simd, a, b, panel, lo, lo + rows_here)
+        }));
+        i0 += rows_here;
+    }
+    crate::util::threadpool::global().run_scoped(jobs);
+    out
+}
+
+/// Compute output rows [i0, i1) into `panel` (the corresponding
+/// contiguous row slice of C) with a private B pack buffer.
+fn matmul_panel(
+    use_simd: bool,
+    a: &Matrix,
+    b: &Matrix,
+    panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+) {
+    let (k, m) = (a.cols, b.cols);
     let mut pack = vec![0.0f32; MATMUL_KC.min(k) * MATMUL_NC.min(m)];
     let mut jc = 0;
     while jc < m {
@@ -250,9 +299,10 @@ pub fn matmul_arm(arm: Arm, a: &Matrix, b: &Matrix) -> Matrix {
                 pack[kk * jw..kk * jw + jw]
                     .copy_from_slice(&b.data[src..src + jw]);
             }
-            for i in 0..n {
+            for i in i0..i1 {
                 let arow = &a.data[i * k + kc..i * k + kc + kw];
-                let crow = &mut out.data[i * m + jc..i * m + jc + jw];
+                let crow = &mut panel[(i - i0) * m + jc
+                                      ..(i - i0) * m + jc + jw];
                 for (kk, &av) in arow.iter().enumerate() {
                     if av == 0.0 {
                         continue;
@@ -265,7 +315,6 @@ pub fn matmul_arm(arm: Arm, a: &Matrix, b: &Matrix) -> Matrix {
         }
         jc += jw;
     }
-    out
 }
 
 /// Inner microkernel of matmul/syrk: `y += a * x`, FMA on the simd arm.
@@ -805,6 +854,30 @@ mod tests {
             let got = matmul_arm(Arm::Scalar, &a, &b);
             for (x, y) in got.data.iter().zip(&want.data) {
                 assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_par_is_bit_identical_across_threads() {
+        let mut rng = Rng::new(12);
+        for (n, k, m) in [(1usize, 5usize, 3usize), (7, 40, 11),
+                          (23, 130, 520)] {
+            let a = Matrix::from_fn(n, k, |_, _| rng.gaussian_f32());
+            let b = Matrix::from_fn(k, m, |_, _| rng.gaussian_f32());
+            for arm in arms() {
+                let single = matmul_arm(arm, &a, &b);
+                for threads in [2usize, 4, 9] {
+                    let par = matmul_arm_par(arm, &a, &b, threads);
+                    for (x, y) in par.data.iter().zip(&single.data) {
+                        assert_eq!(
+                            x.to_bits(),
+                            y.to_bits(),
+                            "({n},{k},{m}) arm={arm:?} \
+                             threads={threads}"
+                        );
+                    }
+                }
             }
         }
     }

@@ -92,6 +92,12 @@ impl Matrix {
         kernels::matmul(self, other)
     }
 
+    /// [`Self::matmul`] parallelised over output-row panels (the
+    /// scheme `syrk` uses).  Bit-identical for every thread count.
+    pub fn matmul_par(&self, other: &Matrix, threads: usize) -> Matrix {
+        kernels::matmul_par(self, other, threads)
+    }
+
     /// y = A x.
     pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(self.cols, x.len());

@@ -10,14 +10,21 @@ use sparseswaps::coordinator::{
 use sparseswaps::data::{Dataset, Split};
 use sparseswaps::eval::{perplexity, zeroshot};
 use sparseswaps::model::{checkpoint, ParamStore};
-use sparseswaps::runtime::Runtime;
+use sparseswaps::runtime::{Runtime, RuntimeOptions, RuntimePool};
 
-fn runtime() -> Option<Runtime> {
+fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::PathBuf::from(
         std::env::var("SPARSESWAPS_ARTIFACTS")
             .unwrap_or_else(|_| "artifacts".into()));
-    dir.join("manifest.json").exists()
-        .then(|| Runtime::start(&dir).unwrap())
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+/// Two-device pool: serial stages use the primary worker (the handle
+/// derefs to it), offload refinement fans out across both.
+fn runtime() -> Option<RuntimePool> {
+    artifacts_dir().map(|dir| {
+        RuntimePool::start(&dir, 2, RuntimeOptions::default()).unwrap()
+    })
 }
 
 fn trained_tiny(rt: &Runtime) -> (ParamStore, Dataset) {
@@ -193,6 +200,33 @@ fn native_and_offload_engines_agree() {
         assert!(hi as f64 <= lo as f64 * 1.5 + 8.0,
                 "{}: swap counts differ too much: {} vs {}",
                 a.name, a.swaps, b.swaps);
+    }
+}
+
+#[test]
+fn pooled_offload_masks_match_single_device() {
+    // The runtime-pool acceptance property on real artifacts: layer
+    // fan-out across devices must be bit-invisible in the masks.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt1 = RuntimePool::start(&dir, 1, RuntimeOptions::default())
+        .unwrap();
+    let rt4 = RuntimePool::start(&dir, 4, RuntimeOptions::default())
+        .unwrap();
+    let (store, ds) = trained_tiny(&rt1);
+    let cfg = PruneConfig {
+        pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
+        refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
+        t_max: 10,
+        calib_batches: 3,
+        sequential: false,
+        ..Default::default()
+    };
+    let (m1, _) = prune(&rt1, &store, &ds, &cfg).unwrap();
+    let (m4, _) = prune(&rt4, &store, &ds, &cfg).unwrap();
+    for (a, b) in m1.masks.iter().zip(&m4.masks) {
+        assert_eq!(a.data, b.data,
+                   "pooled offload masks must be bit-identical to the \
+                    single-device schedule");
     }
 }
 
