@@ -93,9 +93,26 @@ fn encode_clamped(ds: &Dataset, vocab: usize, text: &str) -> Vec<i32> {
         .collect()
 }
 
-/// Score tasks with the model; returns accuracy in [0, 1].
-pub fn accuracy(rt: &Runtime, store: &ParamStore, tasks: &[Task])
-    -> Result<f64, RuntimeError> {
+/// Lowest-NLL choice index under lm-eval rules.  NaN scores never win
+/// (treated as +∞ — a poisoned model must not get credit); `None`
+/// when every choice is non-finite, which callers count as incorrect.
+pub fn pick_best(nlls: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &raw) in nlls.iter().enumerate() {
+        let v = if raw.is_nan() { f64::INFINITY } else { raw };
+        if best.is_none_or(|(_, bv)| v < bv) {
+            best = Some((i, v));
+        }
+    }
+    best.and_then(|(i, v)| v.is_finite().then_some(i))
+}
+
+/// Summed choice-span NLL per (task, choice), batched through the
+/// `seq_nll_{cfg}` artifact.  Sequences longer than seq_len + 1 keep
+/// their tail (the choice span must survive the truncation); the mask
+/// window is shifted accordingly.
+pub fn score_tasks(rt: &Runtime, store: &ParamStore, tasks: &[Task])
+    -> Result<Vec<Vec<f64>>, RuntimeError> {
     let meta = &store.meta;
     let artifact = format!("seq_nll_{}", meta.name);
     let (b, l) = (meta.batch, meta.seq_len);
@@ -152,18 +169,20 @@ pub fn accuracy(rt: &Runtime, store: &ParamStore, tasks: &[Task])
             nlls[s.task][s.choice] = vals[row] as f64;
         }
     }
-    let mut correct = 0;
-    for (ti, t) in tasks.iter().enumerate() {
-        let best = nlls[ti]
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap()
-            .0;
-        if best == t.gold {
-            correct += 1;
-        }
-    }
+    Ok(nlls)
+}
+
+/// Score tasks with the model; returns accuracy in [0, 1].  A task
+/// whose best score is NaN or otherwise non-finite counts as
+/// incorrect (the old implementation panicked on NaN via
+/// `partial_cmp(..).unwrap()`).
+pub fn accuracy(rt: &Runtime, store: &ParamStore, tasks: &[Task])
+    -> Result<f64, RuntimeError> {
+    let nlls = score_tasks(rt, store, tasks)?;
+    let correct = tasks.iter()
+        .zip(&nlls)
+        .filter(|(t, scores)| pick_best(scores) == Some(t.gold))
+        .count();
     Ok(correct as f64 / tasks.len().max(1) as f64)
 }
 
@@ -198,6 +217,25 @@ mod tests {
             assert_eq!(x.gold, y.gold);
             assert_eq!(x.choice_ids, y.choice_ids);
         }
+    }
+
+    #[test]
+    fn pick_best_prefers_lowest_nll() {
+        assert_eq!(pick_best(&[3.0, 1.0, 2.0, 4.0]), Some(1));
+        assert_eq!(pick_best(&[0.5]), Some(0));
+    }
+
+    #[test]
+    fn pick_best_treats_nan_as_never_winning() {
+        // Poisoned gold row: NaN must lose to every finite score, not
+        // panic (the old partial_cmp().unwrap() aborted here).
+        assert_eq!(pick_best(&[f64::NAN, 2.0, 3.0, 4.0]), Some(1));
+        assert_eq!(pick_best(&[2.0, f64::NAN, 1.5, 4.0]), Some(2));
+        // All-poisoned (or never-scored) rows: no winner, so the task
+        // counts as incorrect.
+        assert_eq!(pick_best(&[f64::NAN; 4]), None);
+        assert_eq!(pick_best(&[f64::INFINITY; 4]), None);
+        assert_eq!(pick_best(&[f64::NAN, f64::INFINITY]), None);
     }
 
     #[test]

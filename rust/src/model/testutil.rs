@@ -64,10 +64,19 @@ pub fn meta_for(vocab: usize, d_model: usize, n_heads: usize, d_ff: usize,
         n_blocks,
         seq_len,
         batch,
+        rope_theta: 10000.0,
         init_seed: 7,
         params,
         prunable,
     }
+}
+
+/// In-memory manifest exposing the full artifact surface (model
+/// kinds + swap/layer-loss) for [`tiny_meta`], interp-executable —
+/// the whole train → calibrate → prune → refine → eval cycle runs
+/// without `make artifacts` (see `runtime::testutil::model_manifest`).
+pub fn tiny_manifest() -> crate::runtime::manifest::Manifest {
+    crate::runtime::testutil::model_manifest(&tiny_meta())
 }
 
 #[cfg(test)]

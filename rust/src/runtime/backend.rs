@@ -2,11 +2,12 @@
 //!
 //! The service thread owns exactly one [`Backend`]: the XLA PJRT
 //! client when the `xla` feature is enabled (requires the vendored
-//! `xla` crate), or [`InterpBackend`] — a pure-Rust interpreter of the
-//! refinement artifact kinds — in the default std-only build.  The
-//! backend is always constructed *on* the service thread (factory
-//! pattern, see `Runtime::start_with_backend`), so non-`Send` device
-//! handles never cross threads; only the factory has to be `Send`.
+//! `xla` crate), or [`InterpBackend`] — a pure-Rust interpreter of
+//! every artifact kind, refinement and model-execution alike — in the
+//! default std-only build.  The backend is always constructed *on*
+//! the service thread (factory pattern, see
+//! `Runtime::start_with_backend`), so non-`Send` device handles never
+//! cross threads; only the factory has to be `Send`.
 //!
 //! The split is what makes the runtime layer testable: the pool and
 //! the device-buffer cache are exercised against [`InterpBackend`]
@@ -15,7 +16,8 @@
 
 use std::collections::HashSet;
 
-use crate::runtime::manifest::ArtifactEntry;
+use crate::runtime::interp_model;
+use crate::runtime::manifest::{ArtifactEntry, ModelMeta};
 use crate::runtime::service::RuntimeError;
 use crate::runtime::tensor_data::TensorData;
 
@@ -51,19 +53,29 @@ pub type DefaultBackend = XlaBackend;
 #[cfg(not(feature = "xla"))]
 pub type DefaultBackend = InterpBackend;
 
-fn unsupported_kind(kind: &str) -> RuntimeError {
+fn unknown_kind(kind: &str) -> RuntimeError {
     RuntimeError::Msg(format!(
-        "artifact kind {kind:?} needs the PJRT backend (build with the \
-         `xla` feature and a vendored xla crate)"))
+        "unknown artifact kind {kind:?} (expected one of {:?})",
+        crate::runtime::manifest::ARTIFACT_KINDS))
 }
 
-/// Pure-Rust interpreter of the refinement artifact kinds
-/// (`swap_step`, `layer_loss`), using the same reference ops as the
-/// native engine (`pruning::sparseswaps::refine_row`), so the offload
-/// engine, the runtime pool, and the device-buffer cache all run —
-/// and are testable and benchable — without a PJRT toolchain.
-/// Model-execution kinds (train/calib/eval) report an error pointing
-/// at the `xla` feature.
+/// Resolved model config of a model-execution artifact entry.
+/// `Manifest::load` attaches it at parse time; hand-built entries
+/// must use the typed `ArtifactEntry` constructors.
+fn model_meta(entry: &ArtifactEntry) -> Result<&ModelMeta, RuntimeError> {
+    entry.model.as_ref().ok_or_else(|| RuntimeError::Msg(format!(
+        "{}: model artifact carries no resolved config metadata \
+         (manifest entry missing its `config`)", entry.name)))
+}
+
+/// Pure-Rust interpreter of every artifact kind: the refinement kinds
+/// (`swap_step`, `layer_loss`) via the same reference ops as the
+/// native engine (`pruning::sparseswaps::refine_row`), and the
+/// model-execution kinds (`calib_step`, `eval_step`, `seq_nll`,
+/// `train_step`) via `runtime::interp_model`'s tiny-GPT
+/// forward/backward — so the whole pipeline (train → calibrate →
+/// prune → refine → evaluate) runs, and is testable and benchable,
+/// without a PJRT toolchain or `make artifacts`.
 ///
 /// "Device" buffers are host copies: [`Backend::upload`] clones the
 /// tensor, standing in for the host→device transfer, so a cache hit
@@ -96,7 +108,11 @@ impl Backend for InterpBackend {
         match entry.kind.as_str() {
             "swap_step" | "layer_loss" =>
                 Ok(self.compiled.insert(entry.name.clone())),
-            other => Err(unsupported_kind(other)),
+            "calib_step" | "eval_step" | "seq_nll" | "train_step" => {
+                model_meta(entry)?;
+                Ok(self.compiled.insert(entry.name.clone()))
+            }
+            other => Err(unknown_kind(other)),
         }
     }
 
@@ -110,7 +126,15 @@ impl Backend for InterpBackend {
         match entry.kind.as_str() {
             "swap_step" => exec_swap_step(entry, inputs),
             "layer_loss" => exec_layer_loss(entry, inputs),
-            other => Err(unsupported_kind(other)),
+            "calib_step" => interp_model::exec_calib_step(
+                model_meta(entry)?, inputs).map_err(RuntimeError::Msg),
+            "eval_step" => interp_model::exec_eval_step(
+                model_meta(entry)?, inputs).map_err(RuntimeError::Msg),
+            "seq_nll" => interp_model::exec_seq_nll(
+                model_meta(entry)?, inputs).map_err(RuntimeError::Msg),
+            "train_step" => interp_model::exec_train_step(
+                model_meta(entry)?, inputs).map_err(RuntimeError::Msg),
+            other => Err(unknown_kind(other)),
         }
     }
 }
@@ -376,12 +400,48 @@ mod tests {
     }
 
     #[test]
-    fn interp_rejects_model_artifact_kinds() {
+    fn interp_rejects_model_kind_without_meta() {
+        // A model-execution entry that never resolved its config (the
+        // typed constructors and `Manifest::load` always attach one)
+        // must fail at compile, not mid-execution.
         let mut be = InterpBackend::new();
         let mut entry = crate::runtime::manifest::ArtifactEntry::layer_loss(
             8, 4);
         entry.kind = "calib_step".into();
         assert!(be.compile(&entry).is_err());
+        entry.kind = "frobnicate".into();
+        assert!(be.compile(&entry).is_err());
+    }
+
+    #[test]
+    fn interp_eval_step_runs_through_backend() {
+        let meta = crate::model::testutil::meta_for(8, 8, 2, 16, 1, 4, 2);
+        let entry = crate::runtime::manifest::ArtifactEntry::eval_step(
+            &meta);
+        let store = crate::model::store::ParamStore::init(&meta, 3);
+        let n = meta.batch * meta.seq_len;
+        let toks = TensorData::I32 {
+            dims: vec![meta.batch, meta.seq_len],
+            data: (0..n).map(|i| (i % meta.vocab) as i32).collect(),
+        };
+        let mut be = InterpBackend::new();
+        assert!(be.compile(&entry).unwrap());
+        let mut bufs: Vec<TensorData> = store.tensors.iter()
+            .map(|t| be.upload(t).unwrap())
+            .collect();
+        bufs.push(be.upload(&toks).unwrap());
+        bufs.push(be.upload(&toks).unwrap());
+        let refs: Vec<&TensorData> = bufs.iter().collect();
+        let out = be.execute(&entry, &refs).unwrap();
+        assert_eq!(out.len(), 2);
+        let nll = out[0].scalar_value().unwrap();
+        let count = out[1].scalar_value().unwrap();
+        assert_eq!(count, n as f64);
+        assert!(nll.is_finite() && nll > 0.0);
+        // Mean NLL of a random-init model sits near ln(vocab).
+        let mean = nll / count;
+        assert!((mean - (meta.vocab as f64).ln()).abs() < 1.5,
+                "mean nll {mean}");
     }
 
     #[test]

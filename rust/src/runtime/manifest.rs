@@ -52,6 +52,20 @@ impl TensorSig {
     }
 }
 
+/// Every artifact kind the runtime understands.  `Manifest::load`
+/// rejects anything else at parse time — an unknown or missing kind
+/// used to default to `""` and only surface later as an opaque
+/// backend "unsupported kind" error.
+pub const ARTIFACT_KINDS: [&str; 6] = [
+    "swap_step", "layer_loss", "calib_step", "eval_step", "seq_nll",
+    "train_step",
+];
+
+/// The subset of [`ARTIFACT_KINDS`] that executes the model itself
+/// and therefore needs a resolvable `config` (a [`ModelMeta`]).
+pub const MODEL_KINDS: [&str; 4] =
+    ["calib_step", "eval_step", "seq_nll", "train_step"];
+
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
     pub name: String,
@@ -67,6 +81,11 @@ pub struct ArtifactEntry {
     pub impl_name: String,
     pub pattern: String,
     pub config: String,
+    /// Resolved model config for the model-execution kinds
+    /// ([`MODEL_KINDS`]); `None` for the refinement kinds.  Attached
+    /// at parse time so backends can interpret the artifact without a
+    /// manifest handle.
+    pub model: Option<ModelMeta>,
 }
 
 impl ArtifactEntry {
@@ -99,6 +118,7 @@ impl ArtifactEntry {
             impl_name: impl_name.into(),
             pattern: pattern_tag.into(),
             config: String::new(),
+            model: None,
         }
     }
 
@@ -124,8 +144,121 @@ impl ArtifactEntry {
             impl_name: String::new(),
             pattern: String::new(),
             config: String::new(),
+            model: None,
         }
     }
+
+    /// Shared shell of the four model-execution artifact entries.
+    fn model_entry(kind: &str, meta: &ModelMeta, inputs: Vec<TensorSig>,
+                   outputs: Vec<TensorSig>) -> ArtifactEntry {
+        let name = format!("{kind}_{}", meta.name);
+        ArtifactEntry {
+            file: PathBuf::from(format!("{name}.hlo.txt")),
+            name,
+            inputs,
+            outputs,
+            kind: kind.into(),
+            width: 0,
+            chunk_rows: 0,
+            nm_block: 0,
+            k_iters: 0,
+            impl_name: String::new(),
+            pattern: String::new(),
+            config: meta.name.clone(),
+            model: Some(meta.clone()),
+        }
+    }
+
+    /// The train-step signature contract, mirroring
+    /// `coordinator::trainer::train`: inputs (params.., m.., v..,
+    /// step i32 [], tokens [b, l] i32, targets [b, l] i32, lr f32 [])
+    /// and outputs (params.., m.., v.., step i32 [], loss f32 []).
+    pub fn train_step(meta: &ModelMeta) -> ArtifactEntry {
+        let p = param_sigs(meta);
+        let mut inputs = Vec::with_capacity(3 * p.len() + 4);
+        inputs.extend(p.iter().cloned());
+        inputs.extend(p.iter().cloned());
+        inputs.extend(p.iter().cloned());
+        inputs.push(scalar_sig(DType::I32));
+        inputs.push(tokens_sig(meta));
+        inputs.push(tokens_sig(meta));
+        inputs.push(scalar_sig(DType::F32));
+        let mut outputs = Vec::with_capacity(3 * p.len() + 2);
+        outputs.extend(p.iter().cloned());
+        outputs.extend(p.iter().cloned());
+        outputs.extend(p);
+        outputs.push(scalar_sig(DType::I32));
+        outputs.push(scalar_sig(DType::F32));
+        Self::model_entry("train_step", meta, inputs, outputs)
+    }
+
+    /// The eval-step contract (`eval::perplexity`): inputs (params..,
+    /// tokens, targets), outputs (summed NLL f32 [], token count
+    /// f32 []).
+    pub fn eval_step(meta: &ModelMeta) -> ArtifactEntry {
+        let mut inputs = param_sigs(meta);
+        inputs.push(tokens_sig(meta));
+        inputs.push(tokens_sig(meta));
+        let outputs = vec![scalar_sig(DType::F32),
+                           scalar_sig(DType::F32)];
+        Self::model_entry("eval_step", meta, inputs, outputs)
+    }
+
+    /// The seq-nll contract (`eval::zeroshot`): inputs (params..,
+    /// tokens, targets, mask f32 [b, l]), one output (per-row masked
+    /// NLL f32 [b]).
+    pub fn seq_nll(meta: &ModelMeta) -> ArtifactEntry {
+        let mut inputs = param_sigs(meta);
+        inputs.push(tokens_sig(meta));
+        inputs.push(tokens_sig(meta));
+        inputs.push(TensorSig {
+            dims: vec![meta.batch, meta.seq_len],
+            dtype: DType::F32,
+        });
+        let outputs = vec![TensorSig { dims: vec![meta.batch],
+                                       dtype: DType::F32 }];
+        Self::model_entry("seq_nll", meta, inputs, outputs)
+    }
+
+    /// The calib-step contract (`gram::GramStats`): inputs (params..,
+    /// tokens, four Gram stacks [n_blocks, d, d], four feature-sum
+    /// stacks [n_blocks, d]) and the same eight stat tensors as
+    /// outputs, in `gram::STREAMS` order (qkv, o, gu, down).
+    pub fn calib_step(meta: &ModelMeta) -> ArtifactEntry {
+        let widths = [meta.d_model, meta.d_model, meta.d_model,
+                      meta.d_ff];
+        let mut inputs = param_sigs(meta);
+        inputs.push(tokens_sig(meta));
+        let mut stats = Vec::with_capacity(8);
+        for d in widths {
+            stats.push(TensorSig { dims: vec![meta.n_blocks, d, d],
+                                   dtype: DType::F32 });
+        }
+        for d in widths {
+            stats.push(TensorSig { dims: vec![meta.n_blocks, d],
+                                   dtype: DType::F32 });
+        }
+        inputs.extend(stats.iter().cloned());
+        Self::model_entry("calib_step", meta, inputs, stats)
+    }
+}
+
+/// One [`TensorSig`] per manifest parameter, in order — the
+/// `ParamStore::tensor_args` prefix every model artifact consumes.
+fn param_sigs(meta: &ModelMeta) -> Vec<TensorSig> {
+    meta.params.iter()
+        .map(|(_, dims)| TensorSig { dims: dims.clone(),
+                                     dtype: DType::F32 })
+        .collect()
+}
+
+fn tokens_sig(meta: &ModelMeta) -> TensorSig {
+    TensorSig { dims: vec![meta.batch, meta.seq_len],
+                dtype: DType::I32 }
+}
+
+fn scalar_sig(dtype: DType) -> TensorSig {
+    TensorSig { dims: vec![], dtype }
 }
 
 #[derive(Clone, Debug)]
@@ -149,6 +282,8 @@ pub struct ModelMeta {
     pub n_blocks: usize,
     pub seq_len: usize,
     pub batch: usize,
+    /// RoPE base frequency (python `ModelConfig.rope_theta`).
+    pub rope_theta: f64,
     pub init_seed: u64,
     /// Flat parameter list: (name, dims) in artifact argument order.
     pub params: Vec<(String, Vec<usize>)>,
@@ -238,6 +373,8 @@ impl Manifest {
                 n_blocks: get_usize(cv, "n_blocks")?,
                 seq_len: get_usize(cv, "seq_len")?,
                 batch: get_usize(cv, "batch")?,
+                rope_theta: cv.get("rope_theta").and_then(Json::as_f64)
+                    .unwrap_or(10000.0),
                 init_seed: get_usize(cv, "init_seed")? as u64,
                 params,
                 prunable,
@@ -254,19 +391,45 @@ impl Manifest {
                     .map(TensorSig::from_json)
                     .collect()
             };
+            // A missing or typoed kind used to default to "" here and
+            // only fail much later, inside a backend, as an opaque
+            // "unsupported kind" execution error.  Catch it at parse
+            // time, naming the artifact.
+            let kind = get_str(av, "kind").ok_or_else(|| format!(
+                "artifact {name:?}: missing kind (expected one of \
+                 {ARTIFACT_KINDS:?})"))?;
+            if !ARTIFACT_KINDS.contains(&kind.as_str()) {
+                return Err(format!(
+                    "artifact {name:?}: unknown kind {kind:?} (expected \
+                     one of {ARTIFACT_KINDS:?})"));
+            }
+            let config = get_str(av, "config").unwrap_or_default();
+            let model = if MODEL_KINDS.contains(&kind.as_str()) {
+                if config.is_empty() {
+                    return Err(format!(
+                        "artifact {name:?}: kind {kind:?} requires a \
+                         `config` naming its model"));
+                }
+                Some(configs.get(&config).cloned().ok_or_else(
+                    || format!("artifact {name:?}: unknown model config \
+                                {config:?}"))?)
+            } else {
+                None
+            };
             artifacts.insert(name.clone(), ArtifactEntry {
                 name: name.clone(),
                 file: dir.join(get_str(av, "file").ok_or("file")?),
                 inputs: sigs("inputs")?,
                 outputs: sigs("outputs")?,
-                kind: get_str(av, "kind").unwrap_or_default(),
+                kind,
                 width: get_usize(av, "width").unwrap_or(0),
                 chunk_rows: get_usize(av, "chunk_rows").unwrap_or(0),
                 nm_block: get_usize(av, "nm_block").unwrap_or(0),
                 k_iters: get_usize(av, "k_iters").unwrap_or(0),
                 impl_name: get_str(av, "impl").unwrap_or_default(),
                 pattern: get_str(av, "pattern").unwrap_or_default(),
-                config: get_str(av, "config").unwrap_or_default(),
+                config,
+                model,
             });
         }
         Ok(Manifest { dir, configs, artifacts })
@@ -383,6 +546,87 @@ mod tests {
             .unwrap();
         let a = m.find_swap_artifact(64, "row", "xla", 8).unwrap();
         assert_eq!(a.k_iters, 1);
+    }
+
+    fn artifact_json(kind_field: &str) -> Json {
+        Json::parse(&format!(r#"{{
+          "configs": {{}},
+          "artifacts": {{
+            "swap_step_d8_row_xla_k1": {{
+              "file": "a.hlo.txt", {kind_field}
+              "width": 8, "chunk_rows": 4,
+              "inputs": [], "outputs": []
+            }}
+          }}
+        }}"#)).unwrap()
+    }
+
+    #[test]
+    fn missing_kind_is_a_parse_error() {
+        let err = Manifest::from_json(&artifact_json(""),
+                                      PathBuf::from("/x"))
+            .unwrap_err();
+        assert!(err.contains("swap_step_d8_row_xla_k1"), "{err}");
+        assert!(err.contains("missing kind"), "{err}");
+    }
+
+    #[test]
+    fn typoed_kind_is_a_parse_error() {
+        let err = Manifest::from_json(
+            &artifact_json(r#""kind": "swap_stpe","#),
+            PathBuf::from("/x")).unwrap_err();
+        assert!(err.contains("swap_step_d8_row_xla_k1"), "{err}");
+        assert!(err.contains("swap_stpe"), "{err}");
+    }
+
+    #[test]
+    fn model_kind_requires_known_config() {
+        let json = Json::parse(r#"{
+          "configs": {},
+          "artifacts": {
+            "eval_step_tiny": {
+              "file": "e.hlo.txt", "kind": "eval_step",
+              "config": "tiny", "inputs": [], "outputs": []
+            }
+          }
+        }"#).unwrap();
+        let err = Manifest::from_json(&json, PathBuf::from("/x"))
+            .unwrap_err();
+        assert!(err.contains("eval_step_tiny"), "{err}");
+        assert!(err.contains("tiny"), "{err}");
+    }
+
+    #[test]
+    fn model_entry_constructors_cover_contracts() {
+        let meta = crate::model::testutil::tiny_meta();
+        let np = meta.params.len();
+
+        let t = ArtifactEntry::train_step(&meta);
+        assert_eq!(t.name, "train_step_tiny");
+        assert_eq!(t.inputs.len(), 3 * np + 4);
+        assert_eq!(t.outputs.len(), 3 * np + 2);
+        assert_eq!(t.inputs[3 * np].dtype, DType::I32); // step
+        assert_eq!(t.inputs[3 * np + 1].dims,
+                   vec![meta.batch, meta.seq_len]);
+        assert!(t.model.is_some());
+
+        let e = ArtifactEntry::eval_step(&meta);
+        assert_eq!(e.inputs.len(), np + 2);
+        assert_eq!(e.outputs.len(), 2);
+        assert!(e.outputs.iter().all(|s| s.dims.is_empty()));
+
+        let s = ArtifactEntry::seq_nll(&meta);
+        assert_eq!(s.inputs.len(), np + 3);
+        assert_eq!(s.inputs[np + 2].dtype, DType::F32); // mask
+        assert_eq!(s.outputs[0].dims, vec![meta.batch]);
+
+        let c = ArtifactEntry::calib_step(&meta);
+        assert_eq!(c.inputs.len(), np + 9);
+        assert_eq!(c.outputs.len(), 8);
+        assert_eq!(c.outputs[3].dims,
+                   vec![meta.n_blocks, meta.d_ff, meta.d_ff]);
+        assert_eq!(c.outputs[4].dims,
+                   vec![meta.n_blocks, meta.d_model]);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! [`RuntimePool`] with work-stealing dispatch.
 
 pub mod backend;
+pub mod interp_model;
 pub mod manifest;
 pub mod pool;
 pub mod service;

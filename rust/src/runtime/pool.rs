@@ -27,7 +27,6 @@ use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
 
 use crate::runtime::backend::DefaultBackend;
 use crate::runtime::manifest::Manifest;
@@ -40,14 +39,25 @@ type Job = Box<dyn FnOnce(&Runtime) + Send + 'static>;
 struct PoolState {
     /// One deque per worker: owner pops the front, thieves the back.
     queues: Vec<Mutex<VecDeque<Job>>>,
-    /// Sleeping dispatchers park here between queue sweeps.
-    idle: Mutex<()>,
+    /// Submission sequence number — the wakeup protocol.  Bumped
+    /// under this mutex on every enqueue (and once at shutdown), with
+    /// `work_cv` notified while it is held.  A dispatcher reads the
+    /// counter *before* sweeping the queues and re-checks it under
+    /// the same mutex before sleeping: if any submit landed during
+    /// the sweep the counter moved, the wait is skipped, and the
+    /// sweep re-runs — so a wakeup can never be lost and idle workers
+    /// block indefinitely instead of polling on a timeout.
+    work_seq: Mutex<u64>,
     work_cv: Condvar,
     pending: Mutex<usize>,
     done_cv: Condvar,
     shutdown: AtomicBool,
     steals: AtomicU64,
     ran: Vec<AtomicU64>,
+    /// Empty sweeps per dispatcher (each one leads to a blocking
+    /// wait).  A parked pool accrues none — asserted by the
+    /// no-busy-wakeup test; the old 5 ms timed wait woke ~200x/s.
+    idle_sweeps: Vec<AtomicU64>,
 }
 
 pub struct RuntimePool {
@@ -84,13 +94,14 @@ impl RuntimePool {
         let n = runtimes.len();
         let state = Arc::new(PoolState {
             queues: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
-            idle: Mutex::new(()),
+            work_seq: Mutex::new(0),
             work_cv: Condvar::new(),
             pending: Mutex::new(0),
             done_cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
             steals: AtomicU64::new(0),
             ran: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            idle_sweeps: (0..n).map(|_| AtomicU64::new(0)).collect(),
         });
         let dispatchers = runtimes.iter().enumerate()
             .map(|(i, rt)| {
@@ -138,6 +149,16 @@ impl RuntimePool {
             .collect()
     }
 
+    /// Empty queue sweeps per worker — every entry is one dispatcher
+    /// iteration that found no job and went on to block on the
+    /// condvar.  A fully parked pool accrues none over time (the old
+    /// timed-wait dispatcher accrued ~200 per second per worker).
+    pub fn idle_sweeps(&self) -> Vec<u64> {
+        self.state.idle_sweeps.iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
     /// Per-worker service stats (device i at index i).  Named so it
     /// does not shadow `Runtime::stats()` through `Deref` — `.stats()`
     /// on a pool still reads the primary worker.
@@ -159,7 +180,11 @@ impl RuntimePool {
         self.state.queues[worker % self.devices()]
             .lock().unwrap()
             .push_back(job);
-        let _g = self.state.idle.lock().unwrap();
+        // Advance the submission counter under the wakeup mutex so a
+        // dispatcher mid-sweep re-checks instead of sleeping (see
+        // `PoolState::work_seq`).
+        let mut seq = self.state.work_seq.lock().unwrap();
+        *seq += 1;
         self.state.work_cv.notify_all();
     }
 
@@ -233,7 +258,10 @@ impl Drop for RuntimePool {
         self.wait();
         self.state.shutdown.store(true, Ordering::Release);
         {
-            let _g = self.state.idle.lock().unwrap();
+            // Bump the counter too: a dispatcher between its sweep
+            // and its wait skips the sleep and re-checks `shutdown`.
+            let mut seq = self.state.work_seq.lock().unwrap();
+            *seq += 1;
             self.state.work_cv.notify_all();
         }
         for h in self.dispatchers.drain(..) {
@@ -246,6 +274,11 @@ impl Drop for RuntimePool {
 fn dispatch_main(me: usize, rt: Runtime, state: Arc<PoolState>) {
     let n = state.queues.len();
     loop {
+        // Snapshot the submission counter *before* sweeping: any
+        // submit that lands mid-sweep moves it, and the pre-sleep
+        // re-check below turns the would-be lost wakeup into another
+        // sweep.
+        let seq_before = *state.work_seq.lock().unwrap();
         // Own queue first (FIFO), then steal from the other deques'
         // tails.
         let mut job = state.queues[me].lock().unwrap().pop_front();
@@ -276,13 +309,16 @@ fn dispatch_main(me: usize, rt: Runtime, state: Arc<PoolState>) {
                 if state.shutdown.load(Ordering::Acquire) {
                     break;
                 }
-                // Timed wait sidesteps lost-wakeup races between the
-                // empty sweep above and a concurrent submit; 5ms is
-                // noise next to layer-sized jobs.
-                let guard = state.idle.lock().unwrap();
-                let _ = state.work_cv
-                    .wait_timeout(guard, Duration::from_millis(5))
-                    .unwrap();
+                state.idle_sweeps[me].fetch_add(1, Ordering::Relaxed);
+                // Block until the next submit (or shutdown).  The
+                // counter re-check under the mutex closes the race
+                // with a submit that slipped in after the sweep; a
+                // spurious wake just falls through to another sweep.
+                let guard = state.work_seq.lock().unwrap();
+                if *guard == seq_before
+                    && !state.shutdown.load(Ordering::Acquire) {
+                    drop(state.work_cv.wait(guard).unwrap());
+                }
             }
         }
     }
@@ -293,6 +329,7 @@ mod tests {
     use super::*;
     use crate::runtime::backend::InterpBackend;
     use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
 
     fn empty_pool(n: usize) -> RuntimePool {
         let manifest = Arc::new(Manifest {
@@ -416,6 +453,39 @@ mod tests {
         }
         pool.wait();
         assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn idle_workers_block_instead_of_polling() {
+        let pool = empty_pool(3);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..6 {
+            let c = Arc::clone(&counter);
+            pool.submit(move |_rt| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 6);
+        // Give every dispatcher time to finish its post-batch empty
+        // sweep and park on the condvar.
+        std::thread::sleep(Duration::from_millis(50));
+        let before: u64 = pool.idle_sweeps().iter().sum();
+        std::thread::sleep(Duration::from_millis(300));
+        let after: u64 = pool.idle_sweeps().iter().sum();
+        // A parked pool must not wake at all; the old 5 ms timed wait
+        // accrued ~60 sweeps per worker over this window.  Allow a
+        // tiny slack for stray spurious condvar wakeups.
+        assert!(after - before <= 3,
+                "dispatchers busy-woke {} times while parked",
+                after - before);
+        // And they must still wake correctly for new work afterwards.
+        let c = Arc::clone(&counter);
+        pool.submit(move |_rt| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 7);
     }
 
     #[test]

@@ -11,9 +11,14 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::runtime::backend::InterpBackend;
-use crate::runtime::manifest::{ArtifactEntry, Manifest};
+use crate::runtime::manifest::{ArtifactEntry, Manifest, ModelMeta};
 use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeOptions};
+
+/// Row-chunk size of the swap artifacts fabricated by
+/// [`model_manifest`] (small enough that tiny-config layers exercise
+/// the multi-chunk path).
+pub const MODEL_SWAP_CHUNK_ROWS: usize = 64;
 
 /// Manifest holding interp-executable swap-step artifacts (k=1 and
 /// k=8, per-row + 2:4 patterns, impl "interp") and a layer-loss
@@ -34,6 +39,42 @@ pub fn swap_manifest(d: usize, chunk_rows: usize) -> Manifest {
         configs: Default::default(),
         artifacts,
     }
+}
+
+/// Manifest exposing the full artifact surface for one model config:
+/// the four model-execution kinds for `meta` plus swap-step (k=1 and
+/// k=8, per-row + 2:4 patterns, impl "interp") and layer-loss
+/// artifacts for every prunable width — all interp-executable, so the
+/// whole train → calibrate → prune → refine → evaluate cycle runs
+/// without `make artifacts`.
+pub fn model_manifest(meta: &ModelMeta) -> Manifest {
+    let mut artifacts = std::collections::BTreeMap::new();
+    let mut widths: Vec<usize> =
+        meta.prunable.iter().map(|p| p.d_in).collect();
+    widths.sort_unstable();
+    widths.dedup();
+    for &d in &widths {
+        for (tag, nm) in [("row", 0usize), ("nm2_4", 4)] {
+            for k in [1usize, 8] {
+                let e = ArtifactEntry::swap_step(
+                    d, MODEL_SWAP_CHUNK_ROWS, tag, nm, "interp", k);
+                artifacts.insert(e.name.clone(), e);
+            }
+        }
+        let ll = ArtifactEntry::layer_loss(d, MODEL_SWAP_CHUNK_ROWS);
+        artifacts.insert(ll.name.clone(), ll);
+    }
+    for e in [
+        ArtifactEntry::calib_step(meta),
+        ArtifactEntry::eval_step(meta),
+        ArtifactEntry::seq_nll(meta),
+        ArtifactEntry::train_step(meta),
+    ] {
+        artifacts.insert(e.name.clone(), e);
+    }
+    let mut configs = std::collections::BTreeMap::new();
+    configs.insert(meta.name.clone(), meta.clone());
+    Manifest { dir: PathBuf::from("."), configs, artifacts }
 }
 
 /// One service worker over [`InterpBackend`].

@@ -1,15 +1,24 @@
-//! End-to-end integration on the `tiny` config: train through the AOT
+//! End-to-end integration on the `tiny` config: train through the
 //! train-step artifact, calibrate, prune with Wanda, refine with
 //! SparseSwaps (offload), evaluate perplexity and zero-shot accuracy.
 //!
-//! Requires `make artifacts`; each test no-ops otherwise.
+//! Runs **by default** on an interp-backed pool over an in-memory
+//! manifest (`model::testutil::tiny_manifest`) — no `make artifacts`
+//! needed, so the whole paper pipeline is tier-1 coverage.  When an
+//! artifact directory exists (or `SPARSESWAPS_ARTIFACTS` points at
+//! one), the same tests drive the real AOT artifacts through PJRT
+//! instead.
+
+use std::sync::OnceLock;
 
 use sparseswaps::coordinator::{
     prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
 };
 use sparseswaps::data::{Dataset, Split};
 use sparseswaps::eval::{perplexity, zeroshot};
+use sparseswaps::model::testutil::tiny_manifest;
 use sparseswaps::model::{checkpoint, ParamStore};
+use sparseswaps::runtime::testutil::interp_pool;
 use sparseswaps::runtime::{Runtime, RuntimeOptions, RuntimePool};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
@@ -19,36 +28,72 @@ fn artifacts_dir() -> Option<std::path::PathBuf> {
     dir.join("manifest.json").exists().then_some(dir)
 }
 
-/// Two-device pool: serial stages use the primary worker (the handle
-/// derefs to it), offload refinement fans out across both.
-fn runtime() -> Option<RuntimePool> {
-    artifacts_dir().map(|dir| {
-        RuntimePool::start(&dir, 2, RuntimeOptions::default()).unwrap()
-    })
+/// A pool plus the swap-artifact impl tag its manifest carries ("xla"
+/// for real AOT artifacts, "interp" for the in-memory manifest).
+struct Harness {
+    pool: RuntimePool,
+    impl_name: &'static str,
 }
 
+impl Harness {
+    fn refiner(&self) -> Refiner {
+        Refiner::SparseSwapsOffload { impl_name: self.impl_name.into() }
+    }
+}
+
+fn harness_with(devices: usize) -> Harness {
+    match artifacts_dir() {
+        Some(dir) => Harness {
+            pool: RuntimePool::start(&dir, devices,
+                                     RuntimeOptions::default())
+                .unwrap(),
+            impl_name: "xla",
+        },
+        None => Harness {
+            pool: interp_pool(&tiny_manifest(), devices,
+                              RuntimeOptions::default()),
+            impl_name: "interp",
+        },
+    }
+}
+
+/// Two-device pool: serial stages use the primary worker (the handle
+/// derefs to it), offload refinement fans out across both.
+fn harness() -> Harness {
+    harness_with(2)
+}
+
+/// Train the tiny model once per process (training is deterministic,
+/// so every test sees the same weights) and assert the loss went
+/// down.  The dataset is rebuilt per call — it is cheap relative to
+/// training and not `Clone`.
 fn trained_tiny(rt: &Runtime) -> (ParamStore, Dataset) {
+    static TRAINED: OnceLock<ParamStore> = OnceLock::new();
     let meta = rt.manifest().config("tiny").unwrap().clone();
     let ds = Dataset::build(&meta, 42);
-    let mut store = ParamStore::init(&meta, meta.init_seed);
-    let cfg = TrainConfig { steps: 60, lr: 2e-3, n_batches: 12,
-                            log_every: 50 };
-    let report = train(rt, &mut store, &ds, &cfg).unwrap();
-    assert!(report.final_loss < report.initial_loss,
-            "training must reduce loss: {} -> {}",
-            report.initial_loss, report.final_loss);
+    let store = TRAINED.get_or_init(|| {
+        let mut store = ParamStore::init(&meta, meta.init_seed);
+        let cfg = TrainConfig { steps: 60, lr: 2e-3, n_batches: 12,
+                                log_every: 50 };
+        let report = train(rt, &mut store, &ds, &cfg).unwrap();
+        assert!(report.final_loss < report.initial_loss,
+                "training must reduce loss: {} -> {}",
+                report.initial_loss, report.final_loss);
+        store
+    }).clone();
     (store, ds)
 }
 
 #[test]
 fn train_prune_eval_full_cycle() {
-    let Some(rt) = runtime() else { return };
-    let (store, ds) = trained_tiny(&rt);
+    let h = harness();
+    let rt = &h.pool;
+    let (store, ds) = trained_tiny(rt);
     let meta = store.meta.clone();
 
     // Dense perplexity.
     let val = ds.batches(&meta, Split::Validation, 4);
-    let ppl_dense = perplexity(&rt, &store, &val).unwrap();
+    let ppl_dense = perplexity(rt, &store, &val).unwrap();
     assert!(ppl_dense.is_finite() && ppl_dense > 1.0);
 
     // Wanda warmstart at 50%, no refinement.
@@ -59,19 +104,20 @@ fn train_prune_eval_full_cycle() {
         sequential: true,
         ..Default::default()
     };
-    let (masks_w, report_w) = prune(&rt, &store, &ds, &cfg_wanda).unwrap();
-    let ppl_wanda = perplexity(&rt, &store.masked(&masks_w), &val).unwrap();
+    let (masks_w, report_w) = prune(rt, &store, &ds, &cfg_wanda).unwrap();
+    let ppl_wanda = perplexity(rt, &store.masked(&masks_w), &val).unwrap();
 
     // Same warmstart + SparseSwaps refinement.
     let cfg_ss = PruneConfig {
-        refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
+        refiner: h.refiner(),
         t_max: 25,
         ..cfg_wanda.clone()
     };
-    let (masks_s, report_s) = prune(&rt, &store, &ds, &cfg_ss).unwrap();
-    let ppl_ss = perplexity(&rt, &store.masked(&masks_s), &val).unwrap();
+    let (masks_s, report_s) = prune(rt, &store, &ds, &cfg_ss).unwrap();
+    let ppl_ss = perplexity(rt, &store.masked(&masks_s), &val).unwrap();
 
-    // Local error strictly improves layer-by-layer.
+    // Refined local error never exceeds the Wanda warmstart,
+    // layer-by-layer (the paper's monotone 1-swap descent).
     assert_eq!(report_s.layers.len(), meta.prunable.len());
     for l in &report_s.layers {
         assert!(l.loss_refined <= l.loss_warmstart * 1.0001 + 1e-6,
@@ -95,17 +141,28 @@ fn train_prune_eval_full_cycle() {
     for l in &report_w.layers {
         assert_eq!(l.loss_warmstart, l.loss_refined);
     }
+
+    // Machine-readable summary for the CI artifact (next to the
+    // kernel bench report).
+    let summary = format!(
+        "{{\n  \"backend\": \"{}\",\n  \"ppl_dense\": {ppl_dense},\n  \
+         \"ppl_wanda\": {ppl_wanda},\n  \"ppl_sparseswaps\": {ppl_ss},\n  \
+         \"mean_relative_reduction\": {red},\n  \"sparsity\": {sp}\n}}\n",
+        h.impl_name);
+    if std::fs::create_dir_all("reports").is_ok() {
+        let _ = std::fs::write("reports/e2e_summary.json", summary);
+    }
 }
 
 #[test]
 fn magnitude_warmstart_benefits_more() {
     // Table 2 / Table 4 shape: weaker warmstarts see larger relative
     // error reductions from SparseSwaps.
-    let Some(rt) = runtime() else { return };
-    let (store, ds) = trained_tiny(&rt);
+    let h = harness();
+    let (store, ds) = trained_tiny(&h.pool);
     let base = PruneConfig {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
-        refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
+        refiner: h.refiner(),
         t_max: 25,
         calib_batches: 4,
         ..Default::default()
@@ -118,8 +175,8 @@ fn magnitude_warmstart_benefits_more() {
         criterion: sparseswaps::pruning::Criterion::Wanda,
         ..base
     };
-    let (_, rep_mag) = prune(&rt, &store, &ds, &cfg_mag).unwrap();
-    let (_, rep_wanda) = prune(&rt, &store, &ds, &cfg_wanda).unwrap();
+    let (_, rep_mag) = prune(&h.pool, &store, &ds, &cfg_mag).unwrap();
+    let (_, rep_wanda) = prune(&h.pool, &store, &ds, &cfg_wanda).unwrap();
     let red_mag = rep_mag.mean_relative_reduction();
     let red_wanda = rep_wanda.mean_relative_reduction();
     assert!(red_mag > red_wanda * 0.8,
@@ -132,16 +189,16 @@ fn magnitude_warmstart_benefits_more() {
 
 #[test]
 fn nm_pattern_end_to_end() {
-    let Some(rt) = runtime() else { return };
-    let (store, ds) = trained_tiny(&rt);
+    let h = harness();
+    let (store, ds) = trained_tiny(&h.pool);
     let cfg = PruneConfig {
         pattern_kind: PatternKind::Nm { n: 2, m: 4 },
-        refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
+        refiner: h.refiner(),
         t_max: 10,
         calib_batches: 3,
         ..Default::default()
     };
-    let (masks, report) = prune(&rt, &store, &ds, &cfg).unwrap();
+    let (masks, report) = prune(&h.pool, &store, &ds, &cfg).unwrap();
     let sp = masks.overall_sparsity();
     assert!((sp - 0.5).abs() < 1e-6, "2:4 must be exactly 50%: {sp}");
     assert!(report.mean_relative_reduction() > 0.0);
@@ -149,23 +206,23 @@ fn nm_pattern_end_to_end() {
 
 #[test]
 fn dsnot_baseline_runs_and_preserves_pattern() {
-    let Some(rt) = runtime() else { return };
-    let (store, ds) = trained_tiny(&rt);
+    let h = harness();
+    let (store, ds) = trained_tiny(&h.pool);
     let cfg = PruneConfig {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
         refiner: Refiner::Dsnot,
         calib_batches: 3,
         ..Default::default()
     };
-    let (masks, report) = prune(&rt, &store, &ds, &cfg).unwrap();
+    let (masks, report) = prune(&h.pool, &store, &ds, &cfg).unwrap();
     assert!((masks.overall_sparsity() - 0.6).abs() < 0.02);
     assert_eq!(report.layers.len(), store.meta.prunable.len());
 }
 
 #[test]
 fn native_and_offload_engines_agree() {
-    let Some(rt) = runtime() else { return };
-    let (store, ds) = trained_tiny(&rt);
+    let h = harness();
+    let (store, ds) = trained_tiny(&h.pool);
     let base = PruneConfig {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
         t_max: 10,
@@ -174,21 +231,22 @@ fn native_and_offload_engines_agree() {
         ..Default::default()
     };
     let cfg_off = PruneConfig {
-        refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
+        refiner: h.refiner(),
         ..base.clone()
     };
     let cfg_nat = PruneConfig {
         refiner: Refiner::SparseSwapsNative,
         ..base
     };
-    let (_, rep_off) = prune(&rt, &store, &ds, &cfg_off).unwrap();
-    let (_, rep_nat) = prune(&rt, &store, &ds, &cfg_nat).unwrap();
+    let (_, rep_off) = prune(&h.pool, &store, &ds, &cfg_off).unwrap();
+    let (_, rep_nat) = prune(&h.pool, &store, &ds, &cfg_nat).unwrap();
     for (a, b) in rep_off.layers.iter().zip(&rep_nat.layers) {
         assert_eq!(a.name, b.name);
         // The engines evaluate the identical objective but in different
-        // precisions (f32 XLA vs f64 native), so near-zero dL values can
-        // cross the strict-decrease threshold differently; allow a small
-        // relative loss band and a small swap-count slack per layer.
+        // precisions (f32 offload reporting vs f64 native), so
+        // near-zero dL values can cross the strict-decrease threshold
+        // differently; allow a small relative loss band and a small
+        // swap-count slack per layer.
         let rel = (a.loss_refined - b.loss_refined).abs()
             / b.loss_refined.abs().max(1e-6);
         assert!(rel < 2e-2, "{}: offload {} vs native {}", a.name,
@@ -205,24 +263,21 @@ fn native_and_offload_engines_agree() {
 
 #[test]
 fn pooled_offload_masks_match_single_device() {
-    // The runtime-pool acceptance property on real artifacts: layer
-    // fan-out across devices must be bit-invisible in the masks.
-    let Some(dir) = artifacts_dir() else { return };
-    let rt1 = RuntimePool::start(&dir, 1, RuntimeOptions::default())
-        .unwrap();
-    let rt4 = RuntimePool::start(&dir, 4, RuntimeOptions::default())
-        .unwrap();
-    let (store, ds) = trained_tiny(&rt1);
+    // The runtime-pool acceptance property: layer fan-out across
+    // devices must be bit-invisible in the masks (interp or PJRT).
+    let h1 = harness_with(1);
+    let h4 = harness_with(4);
+    let (store, ds) = trained_tiny(&h1.pool);
     let cfg = PruneConfig {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
-        refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
+        refiner: h1.refiner(),
         t_max: 10,
         calib_batches: 3,
         sequential: false,
         ..Default::default()
     };
-    let (m1, _) = prune(&rt1, &store, &ds, &cfg).unwrap();
-    let (m4, _) = prune(&rt4, &store, &ds, &cfg).unwrap();
+    let (m1, _) = prune(&h1.pool, &store, &ds, &cfg).unwrap();
+    let (m4, _) = prune(&h4.pool, &store, &ds, &cfg).unwrap();
     for (a, b) in m1.masks.iter().zip(&m4.masks) {
         assert_eq!(a.data, b.data,
                    "pooled offload masks must be bit-identical to the \
@@ -232,10 +287,10 @@ fn pooled_offload_masks_match_single_device() {
 
 #[test]
 fn zero_shot_scoring_runs() {
-    let Some(rt) = runtime() else { return };
-    let (store, ds) = trained_tiny(&rt);
+    let h = harness();
+    let (store, ds) = trained_tiny(&h.pool);
     let tasks = zeroshot::build_tasks(&ds, store.meta.vocab, 24, 7);
-    let acc = zeroshot::accuracy(&rt, &store, &tasks).unwrap();
+    let acc = zeroshot::accuracy(&h.pool, &store, &tasks).unwrap();
     assert!((0.0..=1.0).contains(&acc));
     // A trained model should beat uniform chance on chain continuations
     // most of the time; keep a loose bound to avoid flakiness.
@@ -244,15 +299,16 @@ fn zero_shot_scoring_runs() {
 
 #[test]
 fn checkpoint_round_trip_through_pipeline() {
-    let Some(rt) = runtime() else { return };
-    let (store, ds) = trained_tiny(&rt);
+    let h = harness();
+    let rt = &h.pool;
+    let (store, ds) = trained_tiny(rt);
     let cfg = PruneConfig {
-        refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
+        refiner: h.refiner(),
         t_max: 5,
         calib_batches: 2,
         ..Default::default()
     };
-    let (masks, _) = prune(&rt, &store, &ds, &cfg).unwrap();
+    let (masks, _) = prune(rt, &store, &ds, &cfg).unwrap();
     let path = std::env::temp_dir().join("e2e_ckpt.ssck");
     checkpoint::save(&path, &store, Some(&masks)).unwrap();
     let (loaded, loaded_masks) =
@@ -260,25 +316,25 @@ fn checkpoint_round_trip_through_pipeline() {
     let loaded_masks = loaded_masks.unwrap();
     // Same ppl from the reloaded masked model.
     let val = ds.batches(&store.meta, Split::Validation, 2);
-    let p1 = perplexity(&rt, &store.masked(&masks), &val).unwrap();
-    let p2 = perplexity(&rt, &loaded.masked(&loaded_masks), &val).unwrap();
+    let p1 = perplexity(rt, &store.masked(&masks), &val).unwrap();
+    let p2 = perplexity(rt, &loaded.masked(&loaded_masks), &val).unwrap();
     assert!((p1 - p2).abs() < 1e-6);
     std::fs::remove_file(path).ok();
 }
 
 #[test]
 fn table3_checkpoints_snapshot_masks() {
-    let Some(rt) = runtime() else { return };
-    let (store, ds) = trained_tiny(&rt);
+    let h = harness();
+    let (store, ds) = trained_tiny(&h.pool);
     let cfg = PruneConfig {
-        refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
+        refiner: h.refiner(),
         t_max: 10,
         calib_batches: 2,
         checkpoints: vec![1, 5, 10],
         sequential: false,
         ..Default::default()
     };
-    let (final_masks, report) = prune(&rt, &store, &ds, &cfg).unwrap();
+    let (final_masks, report) = prune(&h.pool, &store, &ds, &cfg).unwrap();
     assert_eq!(report.snapshots.len(), 3);
     // Snapshot losses must be monotone non-increasing in iterations.
     let loss_of = |ms: &sparseswaps::model::MaskSet| -> f64 {
