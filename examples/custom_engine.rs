@@ -1,8 +1,11 @@
 //! Adding a refiner is a one-file change: implement `RefineEngine` and
 //! (to use it in the pipeline) register a constructor in
-//! `Refiner::engine`.  This example implements a deliberately simple
-//! surrogate refiner against the trait and compares it with the exact
-//! SparseSwaps engine on a synthetic layer — no AOT artifacts needed.
+//! `Refiner::shard_engine`.  This example implements a deliberately
+//! simple surrogate refiner against the trait and compares it with the
+//! exact SparseSwaps engine on a synthetic layer — no AOT artifacts
+//! needed.  The contract's work unit is a *row shard* (`refine_rows`
+//! over a row range); per-row refiners like this one implement it
+//! directly and whole-layer callers get the provided `refine`.
 //!
 //!   cargo run --release --example custom_engine
 
@@ -33,14 +36,15 @@ impl RefineEngine for GreedyMagnitudeSwap {
         "greedy-magnitude".into()
     }
 
-    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
-              _checkpoints: &[usize])
+    fn refine_rows(&self, ctx: &LayerContext,
+                   row_range: std::ops::Range<usize>, mask: &mut Matrix,
+                   _checkpoints: &[usize])
         -> Result<RefineOutcome, RefineError> {
         let (w, g) = (ctx.w, ctx.g);
-        let mut rows = Vec::with_capacity(w.rows);
-        for r in 0..w.rows {
+        let mut rows = Vec::with_capacity(row_range.len());
+        for (k, r) in row_range.enumerate() {
             let wr = w.row(r);
-            let mut m = mask.row(r).to_vec();
+            let mut m = mask.row(k).to_vec();
             let loss_before = row_loss(wr, &m, g);
             let mut loss = loss_before;
             let mut swaps = 0;
@@ -70,7 +74,7 @@ impl RefineEngine for GreedyMagnitudeSwap {
                     break;
                 }
             }
-            mask.row_mut(r).copy_from_slice(&m);
+            mask.row_mut(k).copy_from_slice(&m);
             rows.push(RowOutcome {
                 loss_before,
                 loss_after: loss,

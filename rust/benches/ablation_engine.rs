@@ -16,15 +16,26 @@
 //! cache hit rate and steal counts to the "pool" section of
 //! `reports/bench_kernels.json`.
 //!
-//! Part 3 (needs artifacts): the fused-XLA and Pallas offload engines
+//! Part 3 (artifact-free, always runs): the shard-granularity sweep —
+//! the native engine through the shared shard dispatch on a skewed
+//! synthetic block (one layer 4x the rows of the rest), comparing
+//! layer-granular scheduling against row shards.  Gates on bit-
+//! identical masks across granularities and reports rows/s plus the
+//! worker load-imbalance (max/mean busy time) to the "shards" section
+//! of `reports/bench_kernels.json`.
+//!
+//! Part 4 (needs artifacts): the fused-XLA and Pallas offload engines
 //! on their own artifact-width layer.
 mod common;
 
 use std::sync::Mutex;
 use std::time::Instant;
 
+use sparseswaps::coordinator::scheduler::{
+    refine_block, BlockSchedule, LayerWork,
+};
 use sparseswaps::coordinator::{
-    refine_layer_offload, OffloadConfig, OffloadEngine,
+    refine_layer_offload, OffloadConfig, OffloadEngine, Refiner,
 };
 use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
@@ -39,6 +50,7 @@ use sparseswaps::util::jsonlite::Json;
 use sparseswaps::util::kernels;
 use sparseswaps::util::prng::Rng;
 use sparseswaps::util::tensor::Matrix;
+use sparseswaps::util::threadpool::ThreadPool;
 
 fn record(table: &mut Table, engines_json: &mut Vec<Json>, label: &str,
           rows: usize, secs: f64, outcome: &LayerOutcome) -> f64 {
@@ -314,9 +326,140 @@ fn pool_section() {
               reports/bench_kernels.json (serial parity OK)");
 }
 
+/// Artifact-free shard-granularity sweep on a skewed synthetic block:
+/// one layer with 4x the rows of the rest pins a whole-layer worker
+/// while the others idle; row shards split it.  Exits non-zero if any
+/// granularity's masks diverge from the layer-granular schedule (the
+/// CI bench smoke job gates on this).
+fn shards_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let (d, base_rows, t_max) =
+        if quick { (64usize, 24usize, 8usize) } else { (256, 96, 20) };
+    let wide_rows = 4 * base_rows;
+    let n_small = 7usize;
+    let workers = 4usize;
+    let pattern = Pattern::PerRow { keep: d * 2 / 5 };
+    let mut rng = Rng::new(21);
+    let mut row_counts = vec![wide_rows];
+    row_counts.extend(vec![base_rows; n_small]);
+    let layers: Vec<(Matrix, Matrix, Matrix)> = row_counts.iter()
+        .map(|&rows| {
+            let x = Matrix::from_fn(2 * d, d, |_, _| rng.gaussian_f32());
+            let mut g = Matrix::zeros(d, d);
+            g.gram_accumulate_par(&x, 4);
+            let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+            let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                        pattern);
+            (w, g, warm)
+        })
+        .collect();
+    let total_rows: usize = row_counts.iter().sum();
+
+    let mut table = Table::new(
+        format!("Shard granularity — native engine, skewed block \
+                 (1x{wide_rows} + {n_small}x{base_rows} rows, d={d}, \
+                  {workers} workers, T_max={t_max})"),
+        &["granularity", "seconds", "rows/s", "imbalance (max/mean)",
+          "speedup vs layer"]);
+    let mut sweeps: Vec<Json> = Vec::new();
+    let mut reference: Option<Vec<Matrix>> = None;
+    let mut layer_secs = f64::NAN;
+    for (label, shard_rows) in
+        [("layer", usize::MAX), ("shard-adaptive", 0usize),
+         ("shard-16", 16)]
+    {
+        // Fresh pool per config so busy-time counters start at zero.
+        let tp = ThreadPool::new(workers);
+        let works: Vec<LayerWork> = layers.iter().enumerate()
+            .map(|(li, (w, g, warm))| LayerWork {
+                li,
+                label: format!("layer{li}"),
+                w: w.clone(),
+                g: g.as_gram(),
+                stats: None,
+                pattern,
+                warm: warm.clone(),
+                shard_align: 1,
+                gram_key: sparseswaps::coordinator::swaploop::
+                    next_refinement_id(),
+            })
+            .collect();
+        let plan = BlockSchedule {
+            t_max,
+            threads_per_shard: 1,
+            checkpoints: Vec::new(),
+            shard_rows,
+            serial: false,
+        };
+        let t0 = Instant::now();
+        let res = refine_block(&tp, &Refiner::SparseSwapsNative,
+                               &works, &plan)
+            .expect("native shard refinement");
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let busy = tp.busy_nanos();
+        let mean = busy.iter().sum::<u64>() as f64
+            / busy.len().max(1) as f64;
+        let imbalance = busy.iter().copied().max().unwrap_or(0) as f64
+            / mean.max(1.0);
+        let masks: Vec<Matrix> =
+            res.into_iter().map(|r| r.mask).collect();
+        match &reference {
+            None => {
+                layer_secs = secs;
+                reference = Some(masks);
+            }
+            Some(want) => {
+                for (li, (a, b)) in
+                    want.iter().zip(&masks).enumerate() {
+                    if a.data != b.data {
+                        eprintln!("[ablation_engine] PARITY FAILURE: \
+                                   {label} layer {li} mask diverged \
+                                   from the layer-granular schedule");
+                        std::process::exit(1);
+                    }
+                }
+            }
+        }
+        let rows_per_s = total_rows as f64 / secs;
+        let speedup = layer_secs / secs;
+        table.row(vec![
+            label.to_string(),
+            format!("{secs:.3}"),
+            format!("{rows_per_s:.0}"),
+            format!("{imbalance:.2}"),
+            format!("{speedup:.2}x"),
+        ]);
+        sweeps.push(Json::obj(vec![
+            ("granularity", Json::str(label)),
+            ("seconds", Json::num(secs)),
+            ("rows_per_s", Json::num(rows_per_s)),
+            ("imbalance_max_over_mean", Json::num(imbalance)),
+            ("speedup_vs_layer", Json::num(speedup)),
+        ]));
+    }
+    table.print();
+    let section = Json::obj(vec![
+        ("d", Json::num(d as f64)),
+        ("rows_wide", Json::num(wide_rows as f64)),
+        ("rows_small", Json::num(base_rows as f64)),
+        ("layers", Json::num((1 + n_small) as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("t_max", Json::num(t_max as f64)),
+        ("sweeps", Json::Arr(sweeps)),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "shards", section) {
+        eprintln!("[ablation_engine] FAILED writing bench_kernels: {e}");
+        std::process::exit(1);
+    }
+    println!("[ablation_engine] shards section written to \
+              reports/bench_kernels.json (granularity parity OK)");
+}
+
 fn main() {
     native_section();
     pool_section();
+    shards_section();
 
     // Offload engines (need AOT artifacts; their own layer at an
     // artifact width).

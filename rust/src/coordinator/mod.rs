@@ -1,12 +1,14 @@
-//! Layer-3 coordinator: the pruning pipeline (layer scheduler +
-//! calibration + warmstart + refinement through `RefineEngine`s), the
-//! offload swap engine, and the trainer that drives the AOT train-step
-//! artifact.
+//! Layer-3 coordinator: the pruning pipeline (shard-granular
+//! scheduling + calibration + warmstart + refinement through
+//! `RefineEngine`s), the shard scheduler itself, the offload swap
+//! engine, and the trainer that drives the AOT train-step artifact.
 
 pub mod pipeline;
+pub mod scheduler;
 pub mod swaploop;
 pub mod trainer;
 
 pub use pipeline::{prune, PatternKind, PruneConfig, PruneReport, Refiner};
+pub use scheduler::{refine_block, BlockSchedule, Scheduler, Shard};
 pub use swaploop::{refine_layer_offload, OffloadConfig, OffloadEngine};
 pub use trainer::{train, TrainConfig, TrainReport};

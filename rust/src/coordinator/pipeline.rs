@@ -10,16 +10,19 @@
 //!         offload or native, DSnoT, or none);
 //!       record exact per-layer loss before/after and apply the mask.
 //!
-//! Refinement is per-layer embarrassingly parallel (the paper's row
-//! decoupling extends across layers once the block's Gram statistics
-//! are fixed), so layers within a block are scheduled concurrently:
-//! runtime-free engines on the shared [`ThreadPool`] (row-thread
-//! budget split across the concurrent jobs), and the offload engine
-//! across the workers of the [`RuntimePool`] when it has more than
-//! one device — each layer job runs against its worker's own service
-//! thread and device-buffer cache.  Per-row results are independent
-//! of scheduling, so masks are bit-identical to the serial schedule
-//! either way.
+//! Refinement is embarrassingly parallel across rows *and* layers
+//! (the paper's row decoupling, once the block's Gram statistics are
+//! fixed), so the scheduling grain is the row *shard*
+//! ([`crate::coordinator::scheduler::Shard`]), not the layer: a block
+//! becomes one list of shards fanned across workers through the one
+//! [`refine_block`] dispatch path — host [`ThreadPool`] workers for
+//! the runtime-free engines, the [`RuntimePool`]'s device workers for
+//! the offload engine.  Adaptive sharding splits the long-tail layer
+//! (an MLP down-projection has ~4x the rows of an attention
+//! projection) across otherwise-idle workers.  Per-row results are
+//! independent of scheduling, so masks and snapshots are
+//! bit-identical to the whole-layer serial schedule for every shard
+//! size and worker count.
 //!
 //! One-shot mode instead calibrates once on the dense model and prunes
 //! every block from those statistics (Wanda-style; cheaper, slightly
@@ -29,19 +32,20 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::coordinator::scheduler::{
+    refine_block, BlockSchedule, LayerWork, Scheduler, ShardedLayer,
+    WorkerCtx,
+};
 use crate::coordinator::swaploop::OffloadEngine;
 use crate::data::{Dataset, Split};
 use crate::gram::{accumulate, GramStats};
 use crate::model::store::{MaskSet, ParamStore};
-use crate::pruning::dsnot::{DsnotEngine, FeatureStats};
-use crate::pruning::engine::{
-    LayerContext, NoopEngine, RefineEngine, RefineOutcome,
-};
+use crate::pruning::dsnot::DsnotEngine;
+use crate::pruning::engine::{NoopEngine, RefineEngine};
 use crate::pruning::error::relative_reduction;
 use crate::pruning::mask::{mask_from_scores, validate, Pattern};
 use crate::pruning::saliency::{self, Criterion};
 use crate::pruning::sparseswaps::NativeEngine;
-use crate::runtime::manifest::PrunableLayer;
 use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeError};
 use crate::util::threadpool::{default_threads, ThreadPool};
@@ -69,22 +73,35 @@ impl Refiner {
         }
     }
 
-    /// Engine construction — the pipeline's entire refiner dispatch.
-    /// Non-offload engines come from the single [`Self::local_engine`]
-    /// registry, so adding a refiner means one constructor line there.
-    pub fn engine<'a>(&self, rt: &'a Runtime)
-        -> Box<dyn RefineEngine + 'a> {
+    /// Engine construction for one shard job, bound to the worker the
+    /// scheduler placed it on.  Runtime-free engines delegate to the
+    /// single [`Self::local_engine`] registry (adding one means one
+    /// constructor line there); the offload engine binds to the
+    /// worker's runtime and the layer's shared Gram buffer key.
+    pub fn shard_engine<'a>(&self, worker: &WorkerCtx<'a>,
+                            gram_key: u64)
+        -> Result<Box<dyn RefineEngine + 'a>, String> {
         match self {
-            Refiner::SparseSwapsOffload { impl_name } =>
-                Box::new(OffloadEngine::new(rt, impl_name.clone())),
-            local => local.local_engine()
-                .expect("non-offload refiners are runtime-free"),
+            Refiner::SparseSwapsOffload { impl_name } => match worker {
+                WorkerCtx::Device(rt) => Ok(Box::new(
+                    OffloadEngine::with_gram_key(*rt,
+                                                 impl_name.clone(),
+                                                 gram_key))),
+                WorkerCtx::Host => Err(
+                    "offload refiner scheduled on a host worker \
+                     (needs a runtime-pool scheduler)".into()),
+            },
+            local => {
+                let engine: Box<dyn RefineEngine> = local
+                    .local_engine()
+                    .expect("non-offload refiners are runtime-free");
+                Ok(engine)
+            }
         }
     }
 
-    /// Runtime-free engine construction for pool workers; `None` for
-    /// engines that must stay on the scheduling thread (offload holds
-    /// the PJRT handle, which serialises execution anyway).
+    /// Runtime-free engine construction; `None` for engines that need
+    /// a device worker (offload holds the runtime handle).
     fn local_engine(&self) -> Option<Box<dyn RefineEngine + Send>> {
         match self {
             Refiner::None => Some(Box::new(NoopEngine)),
@@ -109,11 +126,17 @@ pub struct PruneConfig {
     /// Mask snapshots at these cumulative iteration counts (Table 3).
     pub checkpoints: Vec<usize>,
     pub threads: usize,
-    /// Schedule independent layers of a block concurrently:
+    /// Schedule independent row shards of a block concurrently:
     /// runtime-free engines on the thread pool, the offload engine
     /// across the runtime pool's device workers.  Masks are identical
-    /// either way; disable to get per-layer wall-clock timings.
+    /// either way; disable to get per-layer wall-clock timings
+    /// (shards then cover whole layers and dispatch one at a time).
     pub layer_parallel: bool,
+    /// Rows per refinement shard work unit; 0 = adaptive
+    /// (≈ block rows / (4 x workers), aligned per layer to the
+    /// offload chunk shape).  Masks and snapshots are bit-identical
+    /// for every value.
+    pub shard_rows: usize,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -154,6 +177,7 @@ impl Default for PruneConfig {
             checkpoints: Vec::new(),
             threads: default_threads(),
             layer_parallel: true,
+            shard_rows: 0,
         }
     }
 }
@@ -209,153 +233,16 @@ impl PruneReport {
     }
 }
 
-/// One layer's inputs.  Weights and mask are owned; the Gram matrix is
-/// a zero-copy [`GramView`] into the block's calibration stream stack,
-/// so scheduling a layer never materialises a d*d copy.  Jobs move to
-/// pool workers through the scoped submission API
-/// ([`ThreadPool::run_scoped`]), which is what lets them carry the
-/// borrow.
-struct LayerJob<'a> {
-    li: usize,
-    layer: PrunableLayer,
-    w: crate::util::tensor::Matrix,
-    g: crate::util::tensor::GramView<'a>,
-    stats: Option<FeatureStats>,
-    pattern: Pattern,
-    mask: crate::util::tensor::Matrix,
-}
-
-struct LayerResult {
-    li: usize,
-    pattern: Pattern,
-    mask: crate::util::tensor::Matrix,
-    outcome: RefineOutcome,
-    report: LayerReport,
-}
-
-/// Refine one prepared layer through an engine and assemble its report.
-fn refine_job(engine: &dyn RefineEngine, job: LayerJob<'_>, t_max: usize,
-              threads: usize, checkpoints: &[usize])
-    -> Result<LayerResult, String> {
-    let LayerJob { li, layer, w, g, stats, pattern, mut mask } = job;
-    let ctx = LayerContext {
-        w: &w,
-        g,
-        stats: stats.as_ref(),
-        pattern,
-        t_max,
-        threads,
-    };
-    let t0 = Instant::now();
-    let outcome = engine.refine(&ctx, &mut mask, checkpoints)
-        .map_err(|e| format!("{}: {e}", layer.name))?;
-    let seconds = t0.elapsed().as_secs_f64();
-    let report = LayerReport {
-        name: layer.name.clone(),
-        layer_type: layer.layer_type.clone(),
-        block: layer.block,
-        loss_warmstart: outcome.layer.total_before(),
-        loss_refined: outcome.layer.total_after(),
-        swaps: outcome.layer.total_swaps(),
-        rows_converged: outcome.layer.rows_converged(),
-        rows: layer.d_out,
-        seconds,
-    };
-    Ok(LayerResult { li, pattern, mask, outcome, report })
-}
-
-/// Refine a block's layers concurrently on the pool.  Each job builds
-/// its runtime-free engine; the row-thread budget is split across the
-/// concurrent jobs so a narrow block (fewer layers than cores) keeps
-/// the same total parallelism as the serial schedule.  Row results are
-/// independent of thread counts, so masks are identical either way.
-fn refine_block_parallel<'a>(pool: &ThreadPool, jobs: Vec<LayerJob<'a>>,
-                             refiner: &Refiner, t_max: usize,
-                             threads: usize, checkpoints: &[usize])
-    -> Result<Vec<LayerResult>, RuntimeError> {
-    let n_jobs = jobs.len();
-    let row_threads = (threads / n_jobs.max(1)).max(1);
-    let (tx, rx) = std::sync::mpsc::channel();
-    // Scoped submission: jobs borrow the block's Gram stream stack
-    // (zero-copy views), so they go through `run_scoped`, which blocks
-    // until every job has finished.
-    let mut scoped: Vec<Box<dyn FnOnce() + Send + 'a>> =
-        Vec::with_capacity(n_jobs);
-    for job in jobs {
-        let tx = tx.clone();
-        let refiner = refiner.clone();
-        let checkpoints = checkpoints.to_vec();
-        scoped.push(Box::new(move || {
-            let engine = refiner.local_engine()
-                .expect("offload engines are scheduled serially");
-            let res = refine_job(engine.as_ref(), job, t_max,
-                                 row_threads, &checkpoints);
-            let _ = tx.send(res);
-        }));
-    }
-    drop(tx);
-    pool.run_scoped(scoped);
-    collect_block_results(rx, n_jobs)
-}
-
-/// Drain a block's fan-in channel: surface the first failed job,
-/// detect jobs lost to worker panics (a panicked job is contained by
-/// its pool but sends no result — better an error than a silently
-/// incomplete mask set), and restore submission order.
-fn collect_block_results(
-    rx: std::sync::mpsc::Receiver<Result<LayerResult, String>>,
-    n_jobs: usize,
-) -> Result<Vec<LayerResult>, RuntimeError> {
-    let mut results = Vec::new();
-    for res in rx {
-        results.push(res.map_err(RuntimeError::Msg)?);
-    }
-    if results.len() != n_jobs {
-        return Err(RuntimeError::Msg(format!(
-            "layer refinement lost {} of {} jobs (worker panic)",
-            n_jobs - results.len(), n_jobs)));
-    }
-    results.sort_by_key(|r| r.li);
-    Ok(results)
-}
-
-/// Refine a block's layers concurrently across the runtime pool's
-/// workers (offload engine).  Each job builds an [`OffloadEngine`]
-/// bound to *its* worker's runtime, so artifact executions fan out
-/// over the devices while per-layer refinement — and therefore every
-/// mask — stays identical to the serial single-service schedule.
-fn refine_block_offload<'a>(pool: &RuntimePool, jobs: Vec<LayerJob<'a>>,
-                            impl_name: &str, t_max: usize,
-                            checkpoints: &[usize])
-    -> Result<Vec<LayerResult>, RuntimeError> {
-    let n_jobs = jobs.len();
-    let (tx, rx) = std::sync::mpsc::channel();
-    let mut scoped: Vec<Box<dyn FnOnce(&Runtime) + Send + 'a>> =
-        Vec::with_capacity(n_jobs);
-    for job in jobs {
-        let tx = tx.clone();
-        let impl_name = impl_name.to_string();
-        let checkpoints = checkpoints.to_vec();
-        scoped.push(Box::new(move |rt: &Runtime| {
-            let engine = OffloadEngine::new(rt, impl_name);
-            // Row parallelism lives inside the artifact; one host
-            // thread per layer job is the whole story.
-            let res = refine_job(&engine, job, t_max, 1, &checkpoints);
-            let _ = tx.send(res);
-        }));
-    }
-    drop(tx);
-    pool.run_scoped(scoped);
-    collect_block_results(rx, n_jobs)
-}
-
 /// Run the pruning pipeline.  `store` keeps its dense weights; the
 /// resulting masks are returned (apply with `store.masked(&masks)`).
 ///
 /// Serial stages (calibration, warmstarts) run on the pool's primary
-/// runtime; offload refinement fans layers out across all pool
-/// workers when `pool.devices() > 1` (disable with
-/// `layer_parallel: false` — masks are bit-identical either way).
+/// runtime; refinement goes through the one shard dispatch path
+/// ([`refine_block`]): row shards fan across the host thread pool
+/// (runtime-free engines) or the runtime pool's device workers
+/// (offload).  Masks and snapshots are bit-identical for every shard
+/// size and worker count (disable `layer_parallel` for per-layer
+/// wall-clock timings).
 pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
              cfg: &PruneConfig) -> Result<(MaskSet, PruneReport),
                                           RuntimeError> {
@@ -376,18 +263,39 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
             .map(|&cp| (cp, (0..n_layers).map(|_| None).collect()))
             .collect();
 
-    let use_thread_pool = cfg.layer_parallel && cfg.threads > 1
-        && cfg.refiner.local_engine().is_some();
-    let thread_pool = if use_thread_pool {
-        Some(ThreadPool::new(cfg.threads))
+    // One shard dispatch path for every refiner: the scheduler is the
+    // device pool for the offload engine and a host thread pool for
+    // the runtime-free engines; the shard plan does the rest.
+    let offload =
+        matches!(cfg.refiner, Refiner::SparseSwapsOffload { .. });
+    let host_workers = if cfg.layer_parallel {
+        cfg.threads.max(1)
     } else {
-        None
+        1
     };
-    let offload_impl = match &cfg.refiner {
-        Refiner::SparseSwapsOffload { impl_name }
-            if cfg.layer_parallel && pool.devices() > 1 =>
-            Some(impl_name.clone()),
-        _ => None,
+    let thread_pool = (!offload).then(|| ThreadPool::new(host_workers));
+    let sched: &dyn Scheduler = match &thread_pool {
+        Some(tp) => tp,
+        None => pool,
+    };
+    let plan = BlockSchedule {
+        t_max: cfg.t_max,
+        // Under a multi-worker scheduler parallelism comes from the
+        // shards themselves; the serial schedule keeps the engines'
+        // internal row threads instead.
+        threads_per_shard: if cfg.layer_parallel {
+            1
+        } else {
+            cfg.threads.max(1)
+        },
+        checkpoints: cfg.checkpoints.clone(),
+        shard_rows: if cfg.layer_parallel {
+            cfg.shard_rows
+        } else {
+            // Whole-layer shards keep per-layer timings meaningful.
+            usize::MAX
+        },
+        serial: !cfg.layer_parallel,
     };
 
     let blocks: Vec<usize> = (0..meta.n_blocks).collect();
@@ -418,50 +326,82 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
             .map(|(i, l)| (i, l.clone()))
             .collect();
 
-        // Warmstart every layer first (cheap, serial), then refine.
-        let mut jobs = Vec::with_capacity(layers.len());
+        // Warmstart every layer first (cheap, serial), then refine
+        // the whole block through the shard dispatch.
+        let mut works = Vec::with_capacity(layers.len());
         for (li, layer) in layers {
             let w = store.weight(&layer);
             let g = stats.gram_for(&layer);
             let pattern = cfg.pattern_kind.pattern_for(layer.d_in);
             let t0 = Instant::now();
             let scores = saliency::scores(cfg.criterion, &w, &g.diag());
-            let mask = mask_from_scores(&scores, pattern);
+            let warm = mask_from_scores(&scores, pattern);
             report.warmstart_seconds += t0.elapsed().as_secs_f64();
             let fstats = if cfg.refiner == Refiner::Dsnot {
                 Some(stats.feature_stats_for(&layer))
             } else {
                 None
             };
-            jobs.push(LayerJob {
-                li, layer, w, g, stats: fstats, pattern, mask,
+            // Adaptive shard sizes align to the offload chunk shape
+            // so no shard pays a padded half-chunk.
+            let shard_align = match &cfg.refiner {
+                Refiner::SparseSwapsOffload { impl_name } => rt
+                    .manifest()
+                    .find_swap_artifact(layer.d_in,
+                                        &pattern.artifact_tag(),
+                                        impl_name, 8)
+                    .map(|e| e.chunk_rows)
+                    .unwrap_or(1),
+                _ => 1,
+            };
+            works.push(LayerWork {
+                li,
+                label: layer.name.clone(),
+                w,
+                g,
+                stats: fstats,
+                pattern,
+                warm,
+                shard_align,
+                gram_key: crate::coordinator::swaploop::
+                    next_refinement_id(),
             });
         }
 
-        let results = if let Some(tp) = &thread_pool {
-            refine_block_parallel(tp, jobs, &cfg.refiner, cfg.t_max,
-                                  cfg.threads, &cfg.checkpoints)?
-        } else if let Some(impl_name) = &offload_impl {
-            refine_block_offload(pool, jobs, impl_name, cfg.t_max,
-                                 &cfg.checkpoints)?
-        } else {
-            let engine = cfg.refiner.engine(rt);
-            let mut out = Vec::with_capacity(jobs.len());
-            for job in jobs {
-                out.push(refine_job(engine.as_ref(), job, cfg.t_max,
-                                    cfg.threads, &cfg.checkpoints)
-                         .map_err(RuntimeError::Msg)?);
+        let results = refine_block(sched, &cfg.refiner, &works, &plan);
+
+        // Release the block's shared Gram buffers on every device
+        // before propagating any error (shards leave them resident
+        // for their siblings; the block is done — or dead — now, so
+        // the budget goes back to live layers either way).
+        if offload {
+            for work in &works {
+                for d in 0..pool.devices() {
+                    pool.runtime(d).invalidate(work.gram_key);
+                }
             }
-            out
-        };
+        }
+        let results = results?;
 
         for res in results {
-            let LayerResult { li, pattern, mask, outcome, report: lr } =
-                res;
-            report.refine_seconds += lr.seconds;
+            let ShardedLayer { li, mask, outcome, seconds, .. } = res;
+            let layer = &meta.prunable[li];
+            let pattern = cfg.pattern_kind.pattern_for(layer.d_in);
+            report.refine_seconds += seconds;
             validate(&mask, pattern)
                 .map_err(|e| RuntimeError::Msg(format!(
-                    "{}: {e}", lr.name)))?;
+                    "{}: {e}", layer.name)))?;
+            let lr = LayerReport {
+                name: layer.name.clone(),
+                layer_type: layer.layer_type.clone(),
+                block: layer.block,
+                loss_warmstart: outcome.layer.total_before(),
+                loss_refined: outcome.layer.total_after(),
+                swaps: outcome.layer.total_swaps(),
+                rows_converged: outcome.layer.rows_converged(),
+                rows: layer.d_out,
+                seconds,
+            };
             crate::log_debug!(
                 "prune[{}] {} loss {:.4} -> {:.4} ({:+.1}%)",
                 meta.name, lr.name, lr.loss_warmstart, lr.loss_refined,

@@ -1,0 +1,391 @@
+//! Shard-granular scheduling: the row-range work unit behind every
+//! refinement dispatch.
+//!
+//! The paper's tractability move — equal per-row sparsity decouples
+//! rows, so every row's 1-swap refinement is independent — means the
+//! scheduling grain does not have to be the layer.  Before this
+//! module the pipeline scheduled whole layers, so one wide layer (an
+//! MLP down-projection has ~4x the rows of an attention projection)
+//! pinned one worker while the rest drained and idled.  Now the work
+//! unit is a [`Shard`] — a contiguous row range of one layer — and a
+//! single [`refine_block`] dispatch path drives every engine on every
+//! substrate through the [`Scheduler`] trait: host
+//! [`ThreadPool`] workers for the runtime-free engines, and the
+//! [`RuntimePool`]'s device workers for the offload engine.
+//!
+//! Shard sizing is adaptive: the target is
+//! `total_rows / (SHARD_OVERSUB x workers)`, so the long-tail layer
+//! splits across otherwise-idle workers instead of serializing the
+//! block.  Row sharding cannot split an N:M block (blocks span
+//! *columns* within one row), so the only boundary that matters is
+//! the offload artifact's chunk shape, which adaptive sizing aligns
+//! to per layer.
+//!
+//! Because rows are independent, masks and checkpoint snapshots are
+//! bit-identical to the whole-layer schedule for every shard size and
+//! worker count — property-tested in `tests/shards.rs` and gated in
+//! the `ablation_engine` bench's "shards" sweep.
+
+use std::ops::Range;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::coordinator::pipeline::Refiner;
+use crate::pruning::dsnot::FeatureStats;
+use crate::pruning::engine::{
+    LayerContext, RefineEngine, RefineOutcome, SnapshotAssembler,
+};
+use crate::pruning::mask::Pattern;
+use crate::pruning::sparseswaps::LayerOutcome;
+use crate::runtime::pool::RuntimePool;
+use crate::runtime::service::{Runtime, RuntimeError};
+use crate::util::tensor::{GramView, Matrix};
+use crate::util::threadpool::ThreadPool;
+
+/// One schedulable work unit: a contiguous row range of one layer.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// Index into the scheduled block's layer list.
+    pub layer: usize,
+    /// Row range of that layer this unit refines.
+    pub rows: Range<usize>,
+}
+
+/// The worker a shard job landed on: a plain host thread (runtime-free
+/// engines), or a runtime-pool device worker whose service the
+/// offload engine executes against.
+#[derive(Clone, Copy)]
+pub enum WorkerCtx<'a> {
+    Host,
+    Device(&'a Runtime),
+}
+
+/// A queued shard job.  Boxed so both pool types move the same
+/// object; the [`WorkerCtx`] argument is how the dispatching pool
+/// tells the job what it may execute against.
+pub type ShardJob<'env> = Box<dyn FnOnce(WorkerCtx<'_>) + Send + 'env>;
+
+/// Anything that can run a batch of shard jobs to completion — the
+/// scheduling half of the one refinement dispatch path.  Both
+/// implementations run the batch *scoped* (the call returns only when
+/// every job finished), so jobs may borrow block-local state
+/// (zero-copy Gram views into the calibration stream stacks).
+pub trait Scheduler {
+    /// Worker count (adaptive shard sizing divides work by this).
+    fn workers(&self) -> usize;
+
+    /// Run every job to completion (scoped fork/join).
+    fn run_shards<'env>(&self, jobs: Vec<ShardJob<'env>>);
+
+    /// Cumulative nanoseconds each worker spent executing jobs —
+    /// max/mean across workers is the bench load-imbalance metric.
+    fn busy_nanos(&self) -> Vec<u64>;
+}
+
+impl Scheduler for ThreadPool {
+    fn workers(&self) -> usize {
+        self.size()
+    }
+
+    fn run_shards<'env>(&self, jobs: Vec<ShardJob<'env>>) {
+        let wrapped: Vec<Box<dyn FnOnce() + Send + 'env>> = jobs
+            .into_iter()
+            .map(|job| {
+                Box::new(move || job(WorkerCtx::Host))
+                    as Box<dyn FnOnce() + Send + 'env>
+            })
+            .collect();
+        self.run_scoped(wrapped);
+    }
+
+    fn busy_nanos(&self) -> Vec<u64> {
+        ThreadPool::busy_nanos(self)
+    }
+}
+
+impl Scheduler for RuntimePool {
+    fn workers(&self) -> usize {
+        self.devices()
+    }
+
+    fn run_shards<'env>(&self, jobs: Vec<ShardJob<'env>>) {
+        let wrapped: Vec<Box<dyn FnOnce(&Runtime) + Send + 'env>> = jobs
+            .into_iter()
+            .map(|job| {
+                Box::new(move |rt: &Runtime| {
+                    job(WorkerCtx::Device(rt))
+                })
+                    as Box<dyn FnOnce(&Runtime) + Send + 'env>
+            })
+            .collect();
+        self.run_scoped(wrapped);
+    }
+
+    fn busy_nanos(&self) -> Vec<u64> {
+        RuntimePool::busy_nanos(self)
+    }
+}
+
+/// Shards targeted per worker by adaptive sizing: enough slack that a
+/// 4x-wide long-tail layer splits across idle workers, few enough
+/// that per-shard setup (engine row state, the skip-bound table)
+/// stays noise next to the scan work.
+pub const SHARD_OVERSUB: usize = 4;
+
+/// Adaptive shard size over a block:
+/// `total_rows / (SHARD_OVERSUB x workers)`, at least 1.  Callers
+/// align the result up to a per-layer multiple (the offload chunk
+/// shape) before splitting.
+pub fn adaptive_shard_rows(total_rows: usize, workers: usize) -> usize {
+    total_rows
+        .div_ceil(SHARD_OVERSUB.max(1) * workers.max(1))
+        .max(1)
+}
+
+/// Split one layer's `rows` into [`Shard`]s of `size` rows, last one
+/// ragged.  `size` is clamped into `[1, rows]`; a zero-row layer
+/// still yields one empty shard so it produces a (trivial) result.
+pub fn split_rows(layer: usize, rows: usize, size: usize) -> Vec<Shard> {
+    if rows == 0 {
+        return vec![Shard { layer, rows: 0..0 }];
+    }
+    let size = size.clamp(1, rows);
+    let mut out = Vec::with_capacity(rows.div_ceil(size));
+    let mut lo = 0usize;
+    while lo < rows {
+        let hi = (lo + size).min(rows);
+        out.push(Shard { layer, rows: lo..hi });
+        lo = hi;
+    }
+    out
+}
+
+/// One layer's refinement inputs, shared by all of its shards.
+/// Weights and warmstart mask are owned; the Gram matrix is a
+/// zero-copy view into the block's calibration stream stack (shard
+/// jobs carry the borrow through the scoped submission APIs).
+pub struct LayerWork<'a> {
+    /// Caller's layer index (results are keyed by it).
+    pub li: usize,
+    /// Layer name for error messages.
+    pub label: String,
+    pub w: Matrix,
+    pub g: GramView<'a>,
+    pub stats: Option<FeatureStats>,
+    pub pattern: Pattern,
+    /// Warmstart mask; every shard copies its row range out of it.
+    pub warm: Matrix,
+    /// Preferred shard-size multiple (the offload artifact's
+    /// chunk_rows; 1 for host engines).  Only adaptive sizing
+    /// respects it — an explicit `BlockSchedule::shard_rows` is taken
+    /// literally (the shard-sweep tests rely on that).
+    pub shard_align: usize,
+    /// Shared device-buffer key for this layer's Gram tensor
+    /// (`coordinator::swaploop::next_refinement_id`, one per layer):
+    /// every shard of the layer reuses the same resident G on its
+    /// worker.  Ignored by host engines.  The caller releases the
+    /// buffer (`Runtime::invalidate`) once the layer is done.
+    pub gram_key: u64,
+}
+
+/// How [`refine_block`] drives one block.
+#[derive(Clone, Debug)]
+pub struct BlockSchedule {
+    /// Iteration budget per row (the paper's T_max).
+    pub t_max: usize,
+    /// Engine-internal row threads per shard job (1 under a
+    /// multi-worker scheduler — parallelism comes from shards).
+    pub threads_per_shard: usize,
+    /// Cumulative-iteration snapshot checkpoints (Table 3).
+    pub checkpoints: Vec<usize>,
+    /// Rows per shard; 0 = adaptive ([`adaptive_shard_rows`], aligned
+    /// per layer to `LayerWork::shard_align`).
+    pub shard_rows: usize,
+    /// Dispatch shards one at a time (per-layer wall-clock timings;
+    /// `--layer-parallel=false`).  Masks are identical either way.
+    pub serial: bool,
+}
+
+/// One layer's merged refinement result.
+pub struct ShardedLayer {
+    pub li: usize,
+    /// Final whole-layer mask.
+    pub mask: Matrix,
+    /// Per-row outcomes in row order plus whole-layer checkpoint
+    /// snapshots (merged by [`SnapshotAssembler`]).
+    pub outcome: RefineOutcome,
+    /// Summed shard refinement seconds (CPU seconds under a parallel
+    /// schedule, wall seconds under `serial`).
+    pub seconds: f64,
+    /// How many shards the layer was split into.
+    pub shards: usize,
+}
+
+struct ShardDone {
+    layer: usize,
+    rows: Range<usize>,
+    mask: Matrix,
+    outcome: RefineOutcome,
+    seconds: f64,
+}
+
+fn run_shard(refiner: &Refiner, wc: WorkerCtx<'_>, work: &LayerWork<'_>,
+             shard: &Shard, plan: &BlockSchedule)
+    -> Result<ShardDone, String> {
+    let engine = refiner.shard_engine(&wc, work.gram_key)
+        .map_err(|e| format!("{}: {e}", work.label))?;
+    let ctx = LayerContext {
+        w: &work.w,
+        g: work.g,
+        stats: work.stats.as_ref(),
+        pattern: work.pattern,
+        t_max: plan.t_max,
+        threads: plan.threads_per_shard,
+    };
+    let range = shard.rows.clone();
+    let mut mask = Matrix::zeros(range.len(), work.w.cols);
+    for (k, r) in range.clone().enumerate() {
+        mask.row_mut(k).copy_from_slice(work.warm.row(r));
+    }
+    let t0 = Instant::now();
+    let outcome = engine
+        .refine_rows(&ctx, range.clone(), &mut mask, &plan.checkpoints)
+        .map_err(|e| format!("{} rows {range:?}: {e}", work.label))?;
+    Ok(ShardDone {
+        layer: shard.layer,
+        rows: range,
+        mask,
+        outcome,
+        seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// THE refinement dispatch: shard every layer of a block, fan the
+/// shards across the scheduler's workers, and merge per-shard masks,
+/// outcomes and snapshots back per layer.  `pipeline::prune` routes
+/// every refiner through here (no native/offload split); the shard
+/// tests and the `ablation_engine` "shards" sweep call it directly.
+///
+/// Results come back in `works` order.
+pub fn refine_block(
+    sched: &dyn Scheduler,
+    refiner: &Refiner,
+    works: &[LayerWork<'_>],
+    plan: &BlockSchedule,
+) -> Result<Vec<ShardedLayer>, RuntimeError> {
+    let total_rows: usize = works.iter().map(|w| w.w.rows).sum();
+    let mut shards: Vec<Shard> = Vec::new();
+    for (wi, work) in works.iter().enumerate() {
+        let size = if plan.shard_rows != 0 {
+            plan.shard_rows
+        } else {
+            let t = adaptive_shard_rows(total_rows, sched.workers());
+            let a = work.shard_align.max(1);
+            t.div_ceil(a) * a
+        };
+        shards.extend(split_rows(wi, work.w.rows, size));
+    }
+    let n_shards = shards.len();
+    let (tx, rx) = mpsc::channel::<Result<ShardDone, String>>();
+    let mut jobs: Vec<ShardJob<'_>> = Vec::with_capacity(n_shards);
+    for shard in shards {
+        let tx = tx.clone();
+        // Shared borrows for 'env (like `works`): no per-shard clone
+        // of the refiner or the checkpoint list.
+        let work = &works[shard.layer];
+        jobs.push(Box::new(move |wc| {
+            let res = run_shard(refiner, wc, work, &shard, plan);
+            let _ = tx.send(res);
+        }));
+    }
+    drop(tx);
+    if plan.serial {
+        for job in jobs {
+            sched.run_shards(vec![job]);
+        }
+    } else {
+        sched.run_shards(jobs);
+    }
+    // Drain the fan-in channel: surface the first failed shard and
+    // detect shards lost to worker panics (a panicked job is
+    // contained by its pool but sends no result — better an error
+    // than a silently incomplete mask).
+    let mut done: Vec<ShardDone> = Vec::with_capacity(n_shards);
+    for res in rx {
+        done.push(res.map_err(RuntimeError::Msg)?);
+    }
+    if done.len() != n_shards {
+        return Err(RuntimeError::Msg(format!(
+            "shard refinement lost {} of {} jobs (worker panic)",
+            n_shards - done.len(), n_shards)));
+    }
+    let mut per_layer: Vec<Vec<ShardDone>> =
+        (0..works.len()).map(|_| Vec::new()).collect();
+    for s in done {
+        per_layer[s.layer].push(s);
+    }
+    let mut merged = Vec::with_capacity(works.len());
+    for (work, mut mine) in works.iter().zip(per_layer) {
+        mine.sort_by_key(|s| s.rows.start);
+        let n = mine.len();
+        let mut asm = SnapshotAssembler::new(work.w.rows, work.w.cols);
+        let mut rows_out = Vec::with_capacity(work.w.rows);
+        let mut seconds = 0.0;
+        for s in mine {
+            seconds += s.seconds;
+            rows_out.extend(s.outcome.layer.rows);
+            asm.add(s.rows, s.mask, s.outcome.snapshots);
+        }
+        let (mask, snapshots) = asm.finish().map_err(|e| {
+            RuntimeError::Msg(format!("{}: {e}", work.label))
+        })?;
+        merged.push(ShardedLayer {
+            li: work.li,
+            mask,
+            outcome: RefineOutcome {
+                layer: LayerOutcome { rows: rows_out },
+                snapshots,
+            },
+            seconds,
+            shards: n,
+        });
+    }
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ranges(shards: &[Shard]) -> Vec<(usize, usize)> {
+        shards.iter().map(|s| (s.rows.start, s.rows.end)).collect()
+    }
+
+    #[test]
+    fn split_rows_tiles_exactly_with_ragged_tail() {
+        let s = split_rows(2, 13, 5);
+        assert_eq!(ranges(&s), vec![(0, 5), (5, 10), (10, 13)]);
+        assert!(s.iter().all(|sh| sh.layer == 2));
+        // Oversized and zero sizes clamp.
+        assert_eq!(ranges(&split_rows(0, 7, usize::MAX)),
+                   vec![(0, 7)]);
+        assert_eq!(ranges(&split_rows(0, 3, 0)),
+                   vec![(0, 1), (1, 2), (2, 3)]);
+        // A zero-row layer still yields one (empty) shard.
+        assert_eq!(ranges(&split_rows(0, 0, 4)), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn adaptive_size_targets_oversubscription() {
+        // 1024 rows over 4 workers: 4x oversubscription -> 64 rows.
+        assert_eq!(adaptive_shard_rows(1024, 4), 64);
+        assert_eq!(adaptive_shard_rows(0, 4), 1);
+        assert_eq!(adaptive_shard_rows(5, 100), 1);
+        // The widest layer of a skewed block splits: one 512-row
+        // layer among 7 x 128 ends up in multiple shards.
+        let total = 512 + 7 * 128;
+        let size = adaptive_shard_rows(total, 4);
+        assert!(512 / size >= 4,
+                "wide layer must split across workers (size {size})");
+    }
+}

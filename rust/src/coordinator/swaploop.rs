@@ -41,11 +41,13 @@ use crate::runtime::service::{
 use crate::runtime::tensor_data::TensorData;
 use crate::util::tensor::Matrix;
 
-/// Monotone id distinguishing each offload refinement call's cached
-/// device buffers (the [`BufferKey`] "layer" coordinate).  Process-
-/// wide, so concurrent layers on different pool workers never
-/// collide even within one worker's cache.
-fn next_layer_id() -> u64 {
+/// Monotone id distinguishing cached device buffers (the
+/// [`BufferKey`] "layer" coordinate).  Process-wide, so concurrent
+/// refinements on different pool workers never collide even within
+/// one worker's cache.  The scheduler draws one per *layer* (shared
+/// Gram key across that layer's shards); each `refine_rows` call
+/// additionally draws its own for the shard-local W chunks.
+pub fn next_refinement_id() -> u64 {
     static NEXT: AtomicU64 = AtomicU64::new(1);
     NEXT.fetch_add(1, Ordering::Relaxed)
 }
@@ -75,15 +77,38 @@ struct RowState {
 ///
 /// Holds the runtime handle; `ctx.threads` is ignored because the PJRT
 /// service serialises artifact execution anyway (row parallelism lives
-/// *inside* the artifact).
+/// *inside* the artifact).  Implements the row-range contract: a
+/// shard packs only its own rows into chunks, and because per-row
+/// results are independent of chunk grouping (pad rows are provable
+/// no-ops), any shard plan lands on the whole-layer masks bit for
+/// bit.
 pub struct OffloadEngine<'rt> {
     rt: &'rt Runtime,
     impl_name: String,
+    /// Shared Gram buffer key for every shard of one layer (see
+    /// [`Self::with_gram_key`]); `None` = key G under the call's own
+    /// id and release it eagerly (standalone whole-layer callers).
+    gram_key: Option<u64>,
 }
 
 impl<'rt> OffloadEngine<'rt> {
     pub fn new(rt: &'rt Runtime, impl_name: impl Into<String>) -> Self {
-        Self { rt, impl_name: impl_name.into() }
+        Self { rt, impl_name: impl_name.into(), gram_key: None }
+    }
+
+    /// [`Self::new`] with a caller-assigned Gram buffer key
+    /// ([`next_refinement_id`], one per layer).  Shards of the same
+    /// layer then share the resident G on their worker — uploaded
+    /// once per (layer, device) instead of once per shard — while W
+    /// chunks stay under each call's own id (their rows differ per
+    /// shard, so sharing those keys would alias wrong data).  The
+    /// shared G is *not* eagerly invalidated (sibling shards may
+    /// still need it); the caller releases it when the layer is done,
+    /// or the LRU reclaims it.
+    pub fn with_gram_key(rt: &'rt Runtime,
+                         impl_name: impl Into<String>, key: u64)
+        -> Self {
+        Self { rt, impl_name: impl_name.into(), gram_key: Some(key) }
     }
 }
 
@@ -92,10 +117,15 @@ impl RefineEngine for OffloadEngine<'_> {
         format!("sparseswaps[{}]", self.impl_name)
     }
 
-    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
-              checkpoints: &[usize])
+    fn refine_rows(&self, ctx: &LayerContext,
+                   row_range: std::ops::Range<usize>, mask: &mut Matrix,
+                   checkpoints: &[usize])
         -> Result<RefineOutcome, RefineError> {
         let (w, g) = (ctx.w, ctx.g);
+        assert!(row_range.end <= w.rows);
+        let n_rows = row_range.len();
+        let r0 = row_range.start;
+        assert_eq!((mask.rows, mask.cols), (n_rows, w.cols));
         let d = w.cols;
         let tag = ctx.pattern.artifact_tag();
         let manifest = self.rt.manifest();
@@ -109,29 +139,35 @@ impl RefineEngine for OffloadEngine<'_> {
             .clone();
         assert_eq!(k8.chunk_rows, k1.chunk_rows);
         let chunk = k8.chunk_rows;
-        // One packing copy at the device boundary, made ONCE per
-        // refinement: G is keyed into the service's device-buffer
-        // cache and stays resident across every chunk of every
-        // segment (the old code re-packed and re-uploaded the d*d
-        // tensor per call).
-        let layer_id = next_layer_id();
+        // One packing copy at the device boundary: G is keyed into
+        // the service's device-buffer cache and stays resident across
+        // every chunk of every segment (the old code re-packed and
+        // re-uploaded the d*d tensor per call).  Under the scheduler,
+        // every shard of a layer carries the same `gram_key`, so G
+        // uploads once per (layer, device) no matter how the layer is
+        // sharded; W chunks stay under this call's own id (their rows
+        // differ per shard).
+        let layer_id = next_refinement_id();
+        let g_layer = self.gram_key.unwrap_or(layer_id);
         let g_data = Arc::new(TensorData::F32 {
             dims: vec![g.d, g.d],
             data: g.as_slice().to_vec(),
         });
         let g_key = BufferKey {
-            layer: layer_id,
+            layer: g_layer,
             tensor: "gram".into(),
             generation: 0,
         };
         // W chunks are constant while the active row set is;
         // convergence compaction bumps the generation, invalidating
         // the per-chunk uploads (and the host-side packed copies).
+        // Row indices here are shard-local (0..n_rows); only the
+        // weight reads offset by `r0` into the layer.
         let mut generation: u64 = 0;
-        let mut last_active: Vec<usize> = (0..w.rows).collect();
+        let mut last_active: Vec<usize> = (0..n_rows).collect();
         let mut w_chunks: Vec<Option<Arc<TensorData>>> = Vec::new();
 
-        let mut rows: Vec<RowState> = (0..w.rows).map(|_| RowState {
+        let mut rows: Vec<RowState> = (0..n_rows).map(|_| RowState {
             used: 0,
             converged: false,
             loss_before: f64::NAN,
@@ -172,7 +208,7 @@ impl RefineEngine for OffloadEngine<'_> {
                         let mut m = Matrix::zeros(chunk, d);
                         for (slot, &ri) in group.iter().enumerate() {
                             m.row_mut(slot)
-                                .copy_from_slice(w.row(ri));
+                                .copy_from_slice(w.row(r0 + ri));
                         }
                         let t = Arc::new(TensorData::from_matrix(&m));
                         w_chunks[gi] = Some(Arc::clone(&t));
@@ -230,9 +266,12 @@ impl RefineEngine for OffloadEngine<'_> {
             // Each call executes exactly `k` iterations per active row.
             Ok(k)
         });
-        // Release this refinement's resident buffers whether or not
-        // the drive succeeded; the LRU would reclaim them eventually,
-        // releasing now keeps the budget for live layers.
+        // Release this call's resident W chunks whether or not the
+        // drive succeeded; the LRU would reclaim them eventually,
+        // releasing now keeps the budget for live work.  A shared G
+        // stays resident for sibling shards (the scheduler's caller
+        // releases it when the layer is done); a call-local G shares
+        // `layer_id` and is released here with the chunks.
         self.rt.invalidate(layer_id);
         let snapshots = driven?;
 
@@ -245,7 +284,7 @@ impl RefineEngine for OffloadEngine<'_> {
             if r.loss_before.is_nan() {
                 // Both sentinels are always set together by the chunk
                 // loop, so this is the only recoverable state.
-                let l = row_loss(w.row(ri), mask.row(ri), g);
+                let l = row_loss(w.row(r0 + ri), mask.row(ri), g);
                 r.loss_before = l;
                 r.loss_after = l;
             }

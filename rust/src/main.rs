@@ -76,7 +76,7 @@ fn pool_args(args: &sparseswaps::util::cli::Args)
     let budget_mib: u64 = args.parse_num("device-mem-budget")?;
     let opts = RuntimeOptions {
         device_mem_budget: budget_mib.saturating_mul(1 << 20),
-        device: 0,
+        ..RuntimeOptions::default()
     };
     Ok((devices, opts))
 }
@@ -154,10 +154,14 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         .flag("threads", "0", "worker threads (0 = all cores)")
         .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd \
                                   (scalar for cross-arm parity testing)")
-        .bool_flag_on("layer-parallel", "refine independent layers of a \
-                                         block concurrently (thread pool \
-                                         for native/dsnot, runtime pool \
-                                         for offload)")
+        .bool_flag_on("layer-parallel", "refine independent row shards \
+                                         of a block concurrently (thread \
+                                         pool for native/dsnot, runtime \
+                                         pool for offload)")
+        .flag("shard-rows", "0", "rows per refinement shard work unit \
+                                  (0 = adaptive: block rows / (4 x \
+                                  workers)); masks are identical for \
+                                  every value")
         .flag("devices", "0", "offload runtime service workers \
                                (0 = all cores); >1 refines layers \
                                concurrently across devices")
@@ -201,6 +205,7 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         checkpoints: args.parse_list("checkpoints")?,
         threads,
         layer_parallel,
+        shard_rows: args.parse_num("shard-rows")?,
     };
     let t0 = std::time::Instant::now();
     let (masks, rep) = prune(&rt, &store, &ds, &cfg)?;
@@ -227,11 +232,13 @@ fn cmd_prune(argv: &[String]) -> CliResult {
     if ps.executions > 0 {
         println!("  runtime pool: {} device(s), {} artifact execs, \
                   buffer cache {}/{} hits ({:.0}%), {} evictions, \
-                  {:.1} MiB summed per-device peaks",
+                  {:.1} MiB summed per-device peaks, {} compiles \
+                  ({} adopted from the shared cache)",
                  rt.devices(), ps.executions, ps.cache_hits,
                  ps.cache_hits + ps.cache_misses,
                  100.0 * ps.cache_hit_rate(), ps.cache_evictions,
-                 ps.cache_peak_bytes as f64 / (1u64 << 20) as f64);
+                 ps.cache_peak_bytes as f64 / (1u64 << 20) as f64,
+                 ps.compiles, ps.compiles_shared);
     }
     Ok(())
 }

@@ -169,22 +169,26 @@ impl RefineEngine for DsnotEngine {
         "dsnot".into()
     }
 
-    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
-              _checkpoints: &[usize])
+    fn refine_rows(&self, ctx: &LayerContext,
+                   rows: std::ops::Range<usize>, mask: &mut Matrix,
+                   _checkpoints: &[usize])
         -> Result<RefineOutcome, RefineError> {
         let stats = ctx.stats.ok_or(RefineError::MissingInput(
             "per-feature calibration statistics (DSnoT)"))?;
         let (w, g) = (ctx.w, ctx.g);
-        assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+        assert!(rows.end <= w.rows);
+        let n_rows = rows.len();
+        let r0 = rows.start;
+        assert_eq!((mask.rows, mask.cols), (n_rows, w.cols));
         let nm_block = ctx.pattern.nm_block();
         let cfg = self.cfg;
-        let rows: Vec<(Vec<f32>, RowOutcome)> =
-            parallel_map(w.rows, ctx.threads.max(1), |r| {
-                let mut m = mask.row(r).to_vec();
-                let before = row_loss(w.row(r), &m, g);
-                let out = refine_row(w.row(r), &mut m, stats, nm_block,
-                                     &cfg);
-                let after = row_loss(w.row(r), &m, g);
+        let refined: Vec<(Vec<f32>, RowOutcome)> =
+            parallel_map(n_rows, ctx.threads.max(1), |k| {
+                let mut m = mask.row(k).to_vec();
+                let before = row_loss(w.row(r0 + k), &m, g);
+                let out = refine_row(w.row(r0 + k), &mut m, stats,
+                                     nm_block, &cfg);
+                let after = row_loss(w.row(r0 + k), &m, g);
                 (m, RowOutcome {
                     loss_before: before,
                     loss_after: after,
@@ -192,9 +196,9 @@ impl RefineEngine for DsnotEngine {
                     converged: out.cycles < cfg.max_cycles,
                 })
             });
-        let mut out_rows = Vec::with_capacity(w.rows);
-        for (r, (m, ro)) in rows.into_iter().enumerate() {
-            mask.row_mut(r).copy_from_slice(&m);
+        let mut out_rows = Vec::with_capacity(n_rows);
+        for (k, (m, ro)) in refined.into_iter().enumerate() {
+            mask.row_mut(k).copy_from_slice(&m);
             out_rows.push(ro);
         }
         Ok(RefineOutcome {

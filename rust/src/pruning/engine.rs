@@ -6,20 +6,25 @@
 //! checkpoint/snapshot bookkeeping was implemented twice (once in the
 //! native path, once — differently — in the offload swap loop).  Now:
 //!
-//!   * every refiner implements [`RefineEngine::refine`] over a borrowed
-//!     [`LayerContext`], so the pipeline schedules layers without
-//!     knowing which algorithm runs inside;
+//!   * every refiner implements [`RefineEngine::refine_rows`] over a
+//!     borrowed [`LayerContext`] and a *row range* — the shard work
+//!     unit — so the pipeline schedules row shards without knowing
+//!     which algorithm runs inside ([`RefineEngine::refine`] is the
+//!     whole-layer convenience form: one shard covering every row);
 //!   * segmented engines (native and offload SparseSwaps) drive their
 //!     iteration budget through [`drive_segments`], the one place that
 //!     knows how to split `t_max` at checkpoint boundaries and capture
-//!     mask snapshots;
+//!     mask snapshots; under sharding the driver runs once per shard
+//!     and [`SnapshotAssembler`] merges the per-shard snapshots back
+//!     into whole-layer masks;
 //!   * adding a refiner from related work (Frank-Wolfe relaxation,
 //!     learnable masks, ...) is a one-file change: implement the trait
-//!     and register a constructor in `Refiner::engine`
+//!     and register a constructor in `Refiner::shard_engine`
 //!     (`coordinator::pipeline`).  See `examples/custom_engine.rs`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
+use std::ops::Range;
 
 use crate::pruning::dsnot::FeatureStats;
 use crate::pruning::mask::Pattern;
@@ -86,15 +91,35 @@ pub struct RefineOutcome {
 }
 
 /// The uniform refiner contract.
+///
+/// The work unit is a *row shard*: a contiguous row range of one
+/// layer.  Because the paper enforces equal per-row sparsity, every
+/// row's refinement is independent, so implementations must produce
+/// identical per-row results for any row partition — that invariant
+/// is what lets the scheduler split a wide layer across workers with
+/// bit-identical masks (property-tested in `tests/shards.rs`).
 pub trait RefineEngine {
     /// Stable engine label for logs and reports.
     fn name(&self) -> String;
 
-    /// Refine `mask` in place under `ctx`, capturing snapshots at the
-    /// requested cumulative-iteration checkpoints.  Implementations
-    /// must keep `mask` valid for `ctx.pattern` at every step.
+    /// Refine rows `rows` of the layer under `ctx`, capturing
+    /// snapshots at the requested cumulative-iteration checkpoints.
+    /// `mask` is *shard-local*: `rows.len()` x `ctx.w.cols`, its row
+    /// `k` corresponding to layer row `rows.start + k`; the outcome's
+    /// per-row results and snapshots are shard-local too.
+    /// Implementations must keep every mask row valid for
+    /// `ctx.pattern` at every step (row sharding cannot split an N:M
+    /// block — blocks span columns within one row).
+    fn refine_rows(&self, ctx: &LayerContext, rows: Range<usize>,
+                   mask: &mut Matrix, checkpoints: &[usize])
+        -> Result<RefineOutcome, RefineError>;
+
+    /// Whole-layer refinement: one shard covering every row.
     fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
-              checkpoints: &[usize]) -> Result<RefineOutcome, RefineError>;
+              checkpoints: &[usize])
+        -> Result<RefineOutcome, RefineError> {
+        self.refine_rows(ctx, 0..ctx.w.rows, mask, checkpoints)
+    }
 }
 
 /// The checkpoint-segmentation driver — the only implementation of
@@ -144,6 +169,88 @@ where
     Ok(snapshots)
 }
 
+/// Merges per-shard refinement results back into whole-layer state:
+/// the final layer mask plus one whole-layer `Matrix` snapshot per
+/// checkpoint.  The per-layer `mask.clone()` bookkeeping the driver
+/// does cannot survive sharding as-is — each shard only ever saw its
+/// own rows — so this is the one place shard-local snapshots become
+/// model-shaped ones again.
+///
+/// A shard missing a checkpoint contributes its *final* mask there:
+/// either its engine never iterates (warmstart-only, DSnoT — empty
+/// snapshot maps, later backfilled by the pipeline), or every one of
+/// its rows converged before the checkpoint, in which case the rows
+/// were stationary from convergence on and the final mask is exactly
+/// what the whole-layer schedule would have recorded.
+pub struct SnapshotAssembler {
+    rows: usize,
+    cols: usize,
+    shards: Vec<(Range<usize>, Matrix, BTreeMap<usize, Matrix>)>,
+}
+
+impl SnapshotAssembler {
+    /// Assembler for one `rows` x `cols` layer.
+    pub fn new(rows: usize, cols: usize) -> SnapshotAssembler {
+        SnapshotAssembler { rows, cols, shards: Vec::new() }
+    }
+
+    /// Record one shard's final mask and checkpoint snapshots (`mask`
+    /// holds layer rows `rows`, shard-local shape).
+    pub fn add(&mut self, rows: Range<usize>, mask: Matrix,
+               snapshots: BTreeMap<usize, Matrix>) {
+        assert_eq!((mask.rows, mask.cols), (rows.len(), self.cols),
+                   "shard mask shape does not match its row range");
+        for snap in snapshots.values() {
+            assert_eq!((snap.rows, snap.cols), (rows.len(), self.cols),
+                       "shard snapshot shape does not match its range");
+        }
+        self.shards.push((rows, mask, snapshots));
+    }
+
+    /// Assemble, checking the shards tile `0..rows` exactly once.
+    /// Returns the final whole-layer mask and a whole-layer snapshot
+    /// per checkpoint seen by any shard.
+    pub fn finish(mut self)
+        -> Result<(Matrix, BTreeMap<usize, Matrix>), String> {
+        self.shards.sort_by_key(|(r, _, _)| r.start);
+        let mut next = 0usize;
+        for (r, _, _) in &self.shards {
+            if r.start != next {
+                return Err(format!(
+                    "shards do not tile the layer: expected row {next}, \
+                     got {}", r.start));
+            }
+            next = r.end;
+        }
+        if next != self.rows {
+            return Err(format!(
+                "shards cover {next} of {} layer rows", self.rows));
+        }
+        let copy_into = |dst: &mut Matrix, r: &Range<usize>,
+                         src: &Matrix| {
+            for (k, row) in r.clone().enumerate() {
+                dst.row_mut(row).copy_from_slice(src.row(k));
+            }
+        };
+        let mut mask = Matrix::zeros(self.rows, self.cols);
+        for (r, m, _) in &self.shards {
+            copy_into(&mut mask, r, m);
+        }
+        let cps: BTreeSet<usize> = self.shards.iter()
+            .flat_map(|(_, _, s)| s.keys().copied())
+            .collect();
+        let mut snapshots = BTreeMap::new();
+        for cp in cps {
+            let mut snap = Matrix::zeros(self.rows, self.cols);
+            for (r, m, s) in &self.shards {
+                copy_into(&mut snap, r, s.get(&cp).unwrap_or(m));
+            }
+            snapshots.insert(cp, snap);
+        }
+        Ok((mask, snapshots))
+    }
+}
+
 /// Warmstart-only "refiner": records the exact per-row loss and leaves
 /// the mask untouched.
 #[derive(Clone, Copy, Debug, Default)]
@@ -154,21 +261,25 @@ impl RefineEngine for NoopEngine {
         "none".into()
     }
 
-    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
-              _checkpoints: &[usize])
+    fn refine_rows(&self, ctx: &LayerContext, rows: Range<usize>,
+                   mask: &mut Matrix, _checkpoints: &[usize])
         -> Result<RefineOutcome, RefineError> {
-        let rows = crate::pruning::error::layer_row_losses(ctx.w, mask,
-                                                           ctx.g)
-            .into_iter()
-            .map(|l| RowOutcome {
-                loss_before: l,
-                loss_after: l,
-                swaps: 0,
-                converged: false,
+        assert!(rows.end <= ctx.w.rows);
+        assert_eq!((mask.rows, mask.cols), (rows.len(), ctx.w.cols));
+        let out = (0..rows.len())
+            .map(|k| {
+                let l = crate::pruning::error::row_loss(
+                    ctx.w.row(rows.start + k), mask.row(k), ctx.g);
+                RowOutcome {
+                    loss_before: l,
+                    loss_after: l,
+                    swaps: 0,
+                    converged: false,
+                }
             })
             .collect();
         Ok(RefineOutcome {
-            layer: LayerOutcome { rows },
+            layer: LayerOutcome { rows: out },
             snapshots: BTreeMap::new(),
         })
     }
@@ -245,6 +356,61 @@ mod tests {
         // Checkpoint 2 captured live; 15 backfilled with the final mask.
         assert_eq!(snaps[&2].data[0], 1.0);
         assert_eq!(snaps[&15].data[0], 1.0);
+    }
+
+    fn fill(rows: usize, cols: usize, v: f32) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| v)
+    }
+
+    #[test]
+    fn assembler_merges_shards_and_backfills_missing_checkpoints() {
+        let mut asm = SnapshotAssembler::new(5, 3);
+        // Shard 0..2 captured checkpoint 4; shard 2..5 converged early
+        // and returns no snapshot there — its final mask fills in.
+        let mut s0 = BTreeMap::new();
+        s0.insert(4usize, fill(2, 3, 1.0));
+        asm.add(0..2, fill(2, 3, 2.0), s0);
+        asm.add(2..5, fill(3, 3, 7.0), BTreeMap::new());
+        let (mask, snaps) = asm.finish().unwrap();
+        assert_eq!(mask.row(0), &[2.0; 3]);
+        assert_eq!(mask.row(4), &[7.0; 3]);
+        assert_eq!(snaps.len(), 1);
+        let snap = &snaps[&4];
+        assert_eq!(snap.row(1), &[1.0; 3]);
+        assert_eq!(snap.row(2), &[7.0; 3]);
+    }
+
+    #[test]
+    fn assembler_rejects_gaps_and_short_coverage() {
+        let mut asm = SnapshotAssembler::new(4, 2);
+        asm.add(0..1, fill(1, 2, 0.0), BTreeMap::new());
+        asm.add(2..4, fill(2, 2, 0.0), BTreeMap::new());
+        assert!(asm.finish().is_err());
+        let mut asm = SnapshotAssembler::new(4, 2);
+        asm.add(0..3, fill(3, 2, 0.0), BTreeMap::new());
+        assert!(asm.finish().is_err());
+    }
+
+    #[test]
+    fn noop_refines_rows_against_layer_offsets() {
+        let (w, g, mask, pattern) = instance();
+        let ctx = LayerContext {
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 5,
+            threads: 1,
+        };
+        // Shard rows 1..3: losses must match the whole-layer call.
+        let full = NoopEngine.refine(&ctx, &mut mask.clone(), &[])
+            .unwrap();
+        let mut shard = Matrix::zeros(2, w.cols);
+        shard.row_mut(0).copy_from_slice(mask.row(1));
+        shard.row_mut(1).copy_from_slice(mask.row(2));
+        let out = NoopEngine.refine_rows(&ctx, 1..3, &mut shard, &[])
+            .unwrap();
+        assert_eq!(out.layer.rows.len(), 2);
+        for k in 0..2 {
+            assert_eq!(out.layer.rows[k].loss_before,
+                       full.layer.rows[k + 1].loss_before);
+        }
     }
 
     #[test]

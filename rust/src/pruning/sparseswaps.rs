@@ -14,8 +14,10 @@
 //!   b_p = -2 w_p c_p + w_p^2 G_pp  (gain of reviving pruned p)
 //! so the inner loop is one multiply-add per pair — the same O(|U||P|)
 //! complexity the paper reports.  The inner loop itself runs through
-//! the runtime-dispatched kernel layer (`util::kernels::pair_scan_arm`:
-//! scalar, or AVX2 f64 lanes with exact first-wins argmin semantics).
+//! the runtime-dispatched kernel layer
+//! (`util::kernels::pair_scan_gather_arm`: scalar, or AVX2 f64 lanes
+//! gathering `G_up` straight from the f32 Gram row via `vgatherqps`,
+//! with exact first-wins argmin semantics either way).
 //!
 //! Two loop implementations share those semantics:
 //!
@@ -295,14 +297,15 @@ impl RowState {
 /// Slab-per-worker scratch for the pair scan: allocated once per
 /// worker when refinement starts and reused across every row *and*
 /// every checkpoint segment that worker processes (the old design
-/// reallocated per row per segment).
+/// reallocated per row per segment).  `G_up` is no longer packed at
+/// all — the inner scan gathers it straight from the f32 Gram row
+/// (`kernels::pair_scan_gather_arm`), dropping the per-kept-index
+/// f64 packing pass the old loop paid.
 struct Scratch {
     /// Separable Eq.-5 gain of reviving each pruned index.
     b: Vec<f64>,
     /// w_p as f64, packed over the pruned partition.
     wp: Vec<f64>,
-    /// G_up packed (and widened) over the scanned pruned range.
-    gp: Vec<f64>,
     /// Per-N:M-block minimum of `b` (skip bound); empty when
     /// unstructured.
     blk_min_b: Vec<f64>,
@@ -316,7 +319,6 @@ impl Scratch {
         Scratch {
             b: Vec::with_capacity(d),
             wp: Vec::with_capacity(d),
-            gp: Vec::with_capacity(d),
             blk_min_b: vec![0.0; nblocks],
             blk_wmax: vec![0.0; nblocks],
         }
@@ -398,11 +400,9 @@ fn best_swap_active(arm: Arm, w: &[f32], st: &RowState, g: GramView<'_>,
             if best.is_some() && au + min_b - cap - slack >= best_dl {
                 continue;
             }
-            let grow = g.row(u);
-            ws.gp.clear();
-            ws.gp.extend(pruned.iter().map(|&p| grow[p] as f64));
-            if let Some((dl, kp)) = kernels::pair_scan_arm(
-                arm, au, wu2, &ws.b, &ws.wp, &ws.gp, best_dl) {
+            if let Some((dl, kp)) = kernels::pair_scan_gather_arm(
+                arm, au, wu2, &ws.b, &ws.wp, g.row(u), pruned, best_dl)
+            {
                 best_dl = dl;
                 best = Some((u, pruned[kp]));
             }
@@ -428,13 +428,10 @@ fn best_swap_active(arm: Arm, w: &[f32], st: &RowState, g: GramView<'_>,
             if best.is_some() && au + min_b_blk - cap - slack >= best_dl {
                 continue;
             }
-            let grow = g.row(u);
-            ws.gp.clear();
-            ws.gp.extend(
-                pruned[lo..hi].iter().map(|&p| grow[p] as f64));
-            if let Some((dl, kp)) = kernels::pair_scan_arm(
-                arm, au, wu2, &ws.b[lo..hi], &ws.wp[lo..hi], &ws.gp,
-                best_dl) {
+            if let Some((dl, kp)) = kernels::pair_scan_gather_arm(
+                arm, au, wu2, &ws.b[lo..hi], &ws.wp[lo..hi], g.row(u),
+                &pruned[lo..hi], best_dl)
+            {
                 best_dl = dl;
                 best = Some((u, pruned[lo + kp]));
             }
@@ -467,7 +464,10 @@ fn advance_row(arm: Arm, w: &[f32], g: GramView<'_>, nm_block: usize,
 /// Row state persists across swaps and checkpoint segments (advanced
 /// in place — no per-segment clones), so driving Table-3 snapshots
 /// costs nothing beyond the mask copies, and the final losses are
-/// still recomputed from scratch (no drift).
+/// still recomputed from scratch (no drift).  Implements the
+/// row-range contract: rows are independent, so any shard of rows
+/// produces exactly the per-row results of the whole-layer run
+/// (`tests/shards.rs` sweeps this against the scheduler).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NativeEngine {
     /// Minimum improvement to accept a swap (paper uses 0 = strict).
@@ -482,11 +482,15 @@ impl RefineEngine for NativeEngine {
         "sparseswaps[native]".into()
     }
 
-    fn refine(&self, ctx: &LayerContext, mask: &mut Matrix,
-              checkpoints: &[usize])
+    fn refine_rows(&self, ctx: &LayerContext,
+                   rows: std::ops::Range<usize>, mask: &mut Matrix,
+                   checkpoints: &[usize])
         -> Result<RefineOutcome, RefineError> {
         let (w, g) = (ctx.w, ctx.g);
-        assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
+        assert!(rows.end <= w.rows);
+        let n_rows = rows.len();
+        let r0 = rows.start;
+        assert_eq!((mask.rows, mask.cols), (n_rows, w.cols));
         assert_eq!(g.d, w.cols);
         let d = w.cols;
         let nm_block = ctx.pattern.nm_block();
@@ -495,6 +499,10 @@ impl RefineEngine for NativeEngine {
         let arm = self.arm.unwrap_or_else(kernels::active);
         // Skip-bound table: max |G_uj| over the columns u's scan can
         // reach — its N:M block, or the whole row when unstructured.
+        // Indexed by column, so it is the same for every row shard
+        // (the one O(d^2) cost a shard pays regardless of its height;
+        // adaptive shard sizing keeps shards tall enough that it
+        // stays noise next to the O(rows * |U||P| * t) scan work).
         let gmax: Vec<f64> = parallel_map(d, threads, |u| {
             let (lo, hi) = if nm_block == 0 {
                 (0, d)
@@ -506,11 +514,12 @@ impl RefineEngine for NativeEngine {
                 .map(|&v| (v as f64).abs())
                 .fold(0.0, f64::max)
         });
-        let mut states: Vec<RowState> = parallel_map(w.rows, threads, |r| {
-            RowState::init(w.row(r), mask.row(r), g)
+        let mut states: Vec<RowState> = parallel_map(n_rows, threads,
+                                                     |k| {
+            RowState::init(w.row(r0 + k), mask.row(k), g)
         });
         // Slab-per-worker scratch, reused across checkpoint segments.
-        let n_workers = threads.min(w.rows.max(1));
+        let n_workers = threads.min(n_rows.max(1));
         let mut slabs: Vec<Scratch> = (0..n_workers)
             .map(|_| Scratch::new(d, nm_block))
             .collect();
@@ -519,8 +528,18 @@ impl RefineEngine for NativeEngine {
             if states.iter().all(|s| s.converged) {
                 return Ok(0);
             }
-            let chunk = w.rows.div_ceil(n_workers).max(1);
-            {
+            if n_workers == 1 {
+                // Shard-sized work unit under an external scheduler:
+                // no per-segment thread spawn, just the loop.
+                let slab = &mut slabs[0];
+                for (k, st) in states.iter_mut().enumerate() {
+                    if !st.converged {
+                        advance_row(arm, w.row(r0 + k), g, nm_block,
+                                    eps, &gmax, budget, st, slab);
+                    }
+                }
+            } else {
+                let chunk = n_rows.div_ceil(n_workers).max(1);
                 let gmax = &gmax;
                 std::thread::scope(|scope| {
                     for (ci, (sts, slab)) in states
@@ -530,7 +549,7 @@ impl RefineEngine for NativeEngine {
                     {
                         scope.spawn(move || {
                             for (k, st) in sts.iter_mut().enumerate() {
-                                let r = ci * chunk + k;
+                                let r = r0 + ci * chunk + k;
                                 if !st.converged {
                                     advance_row(arm, w.row(r), g,
                                                 nm_block, eps, gmax,
@@ -541,15 +560,15 @@ impl RefineEngine for NativeEngine {
                     }
                 });
             }
-            for (r, st) in states.iter().enumerate() {
-                mask.row_mut(r).copy_from_slice(&st.mask);
+            for (k, st) in states.iter().enumerate() {
+                mask.row_mut(k).copy_from_slice(&st.mask);
             }
             Ok(budget)
         })?;
         // Final losses recomputed from scratch (no accumulated drift),
         // exactly like the rescan loop.
-        let loss_after: Vec<f64> = parallel_map(w.rows, threads, |r| {
-            row_loss(w.row(r), mask.row(r), g)
+        let loss_after: Vec<f64> = parallel_map(n_rows, threads, |k| {
+            row_loss(w.row(r0 + k), mask.row(k), g)
         });
         let rows = states.iter().zip(&loss_after)
             .map(|(st, &la)| RowOutcome {
@@ -804,6 +823,33 @@ mod tests {
         }
         assert!(!out.snapshots.contains_key(&99));
         assert_eq!(out.snapshots[&20].data, segmented.data);
+    }
+
+    #[test]
+    fn refine_rows_matches_whole_layer_per_row() {
+        let (w, g, _) = instance(21, 48, 6, 24);
+        let pattern = Pattern::PerRow { keep: 9 };
+        let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+        let ctx = LayerContext {
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 15,
+            threads: 1,
+        };
+        let mut full = warm.clone();
+        NativeEngine::default().refine(&ctx, &mut full, &[]).unwrap();
+        // Rows 2..5 as one shard: bit-identical to the same rows of
+        // the whole-layer run (the row-decoupling invariant).
+        let mut shard = Matrix::zeros(3, w.cols);
+        for k in 0..3 {
+            shard.row_mut(k).copy_from_slice(warm.row(2 + k));
+        }
+        let out = NativeEngine::default()
+            .refine_rows(&ctx, 2..5, &mut shard, &[])
+            .unwrap();
+        assert_eq!(out.layer.rows.len(), 3);
+        for k in 0..3 {
+            assert_eq!(shard.row(k), full.row(2 + k), "row {k}");
+        }
     }
 
     #[test]

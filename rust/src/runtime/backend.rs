@@ -36,6 +36,24 @@ pub trait Backend {
     fn compile(&mut self, entry: &ArtifactEntry)
         -> Result<bool, RuntimeError>;
 
+    /// Serialize a compiled executable for cross-worker handoff
+    /// through the pool's shared compile cache.  Backends that cannot
+    /// serialize return `None` (the default) and every worker
+    /// compiles locally, exactly as before the cache existed.
+    fn export_compiled(&mut self, _entry: &ArtifactEntry)
+        -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Install an executable a sibling worker exported.  Returns
+    /// `true` when the handoff was accepted (the entry now counts as
+    /// compiled on this worker), `false` to fall back to a local
+    /// compile.
+    fn import_compiled(&mut self, _entry: &ArtifactEntry,
+                       _bytes: &[u8]) -> Result<bool, RuntimeError> {
+        Ok(false)
+    }
+
     /// Upload one host tensor into a device buffer.
     fn upload(&mut self, t: &TensorData)
         -> Result<Self::Buf, RuntimeError>;
@@ -114,6 +132,24 @@ impl Backend for InterpBackend {
             }
             other => Err(unknown_kind(other)),
         }
+    }
+
+    fn export_compiled(&mut self, entry: &ArtifactEntry)
+        -> Option<Vec<u8>> {
+        // The interp "executable" is just the validated entry, so the
+        // serialized form is an empty marker; import re-validates,
+        // standing in for deserialization.
+        self.compiled.contains(&entry.name).then(Vec::new)
+    }
+
+    fn import_compiled(&mut self, entry: &ArtifactEntry,
+                       _bytes: &[u8]) -> Result<bool, RuntimeError> {
+        // The marker carries no state, so installing == validating ==
+        // compiling.  Delegate to `compile` so a kind added there can
+        // never drift out of the import path (`Ok(false)` = already
+        // present = still accepted).
+        self.compile(entry)?;
+        Ok(true)
     }
 
     fn upload(&mut self, t: &TensorData)

@@ -1,0 +1,75 @@
+//! Cross-worker compile cache: serialized-executable handoff between
+//! the service workers of one [`crate::runtime::pool::RuntimePool`].
+//!
+//! Every pool worker owns its own backend and executables (non-`Send`
+//! device handles never cross threads), which used to mean every
+//! worker compiled every artifact from scratch — pool startup cost
+//! scaled with N.  Now the pool hands each worker one shared
+//! [`CompileCache`] through `RuntimeOptions::compile_cache`: the first
+//! worker to compile an artifact exports its serialized form
+//! (`Backend::export_compiled`), and later workers import it
+//! (`Backend::import_compiled`) instead of recompiling — counted by
+//! `ServiceStats::compiles_shared`.
+//!
+//! Backends that cannot serialize executables simply never export
+//! (the trait's defaults), and every worker falls back to a local
+//! compile exactly as before.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Shared store of serialized executables, keyed by artifact name.
+/// One per pool; all methods are `&self` (internally locked) so the
+/// handle clones freely across worker options.
+#[derive(Debug, Default)]
+pub struct CompileCache {
+    entries: Mutex<HashMap<String, Arc<Vec<u8>>>>,
+}
+
+impl CompileCache {
+    /// A fresh cache behind an [`Arc`], ready to clone into every
+    /// worker's `RuntimeOptions`.
+    pub fn shared() -> Arc<CompileCache> {
+        Arc::new(CompileCache::default())
+    }
+
+    /// Serialized executable for `artifact`, if any worker exported
+    /// one.
+    pub fn get(&self, artifact: &str) -> Option<Arc<Vec<u8>>> {
+        self.entries.lock().unwrap().get(artifact).cloned()
+    }
+
+    /// Store a serialized executable.  First write wins: compiles are
+    /// deterministic per manifest entry, so a racing second export is
+    /// redundant, not conflicting.
+    pub fn put(&self, artifact: &str, bytes: Vec<u8>) {
+        self.entries.lock().unwrap()
+            .entry(artifact.to_string())
+            .or_insert_with(|| Arc::new(bytes));
+    }
+
+    /// Number of cached executables.
+    pub fn len(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_write_wins_and_lookup_roundtrips() {
+        let cache = CompileCache::shared();
+        assert!(cache.is_empty());
+        assert!(cache.get("a").is_none());
+        cache.put("a", vec![1, 2, 3]);
+        cache.put("a", vec![9]);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(*cache.get("a").unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -16,6 +16,15 @@
 //! row-panel `syrk` behind [`Matrix::gram_accumulate`] — the interp
 //! path picks up the SIMD arms from PR 2 for free.
 //!
+//! Forward and backward are independent per batch row, so the hot
+//! loops fan out across the global thread pool: the projection/LM-head
+//! matmuls and `matmul_nn`/`accum_tn` adjoints split into contiguous
+//! row panels, and the O(l^2) attention stages run one job per
+//! sequence.  Every output row is written by exactly one worker with
+//! the same scalar code as the serial path, so losses and gradients
+//! are **bit-identical** for every thread count (asserted in
+//! `tests/interp_model.rs`).
+//!
 //! Entry points mirror the artifact signatures exactly (inputs in
 //! manifest order, outputs in declared order), so
 //! `runtime::backend::InterpBackend` can dispatch on
@@ -24,6 +33,7 @@
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::tensor_data::TensorData;
 use crate::util::tensor::{axpy, dot, Matrix};
+use crate::util::threadpool::{self, default_threads};
 
 const RMS_EPS: f32 = 1e-5;
 const ADAM_B1: f32 = 0.9;
@@ -91,56 +101,107 @@ fn unpack<'a>(meta: &ModelMeta, params: &[&'a TensorData])
 
 // --- kernel-backed matmul helpers ------------------------------------------
 
+/// Run `body(panel, lo, hi)` over contiguous row panels of `data`
+/// ([rows, width] row-major) on the global thread pool.  Every row is
+/// written by exactly one worker with the same scalar code as the
+/// serial path, so results are bit-identical for any `threads`.
+fn par_row_panels<F>(threads: usize, rows: usize, width: usize,
+                     data: &mut [f32], body: F)
+where
+    F: Fn(&mut [f32], usize, usize) + Sync,
+{
+    debug_assert_eq!(data.len(), rows * width);
+    let threads = threads.max(1).min(rows.max(1));
+    if threads <= 1 {
+        body(data, 0, rows);
+        return;
+    }
+    let chunk = rows.div_ceil(threads);
+    let body = &body;
+    let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+        Vec::with_capacity(threads);
+    let mut rest = data;
+    let mut lo = 0usize;
+    while lo < rows {
+        let here = chunk.min(rows - lo);
+        let (panel, tail) = rest.split_at_mut(here * width);
+        rest = tail;
+        let start = lo;
+        jobs.push(Box::new(move || body(panel, start, start + here)));
+        lo += here;
+    }
+    threadpool::global().run_scoped(jobs);
+}
+
 /// y = x @ w^T for a paper-layout weight w [d_out, d_in] given as a
 /// flat slice.  Rows of both operands are contiguous, so every entry
-/// is one kernel `dot`.
-fn matmul_nt(x: &Matrix, w: &[f32], d_out: usize) -> Matrix {
+/// is one kernel `dot`; output rows split across the pool.
+fn matmul_nt(x: &Matrix, w: &[f32], d_out: usize, threads: usize)
+    -> Matrix {
     let d_in = x.cols;
     assert_eq!(w.len(), d_out * d_in);
     let mut y = Matrix::zeros(x.rows, d_out);
-    for t in 0..x.rows {
-        let xr = x.row(t);
-        let yr = y.row_mut(t);
-        for (o, yo) in yr.iter_mut().enumerate() {
-            *yo = dot(xr, &w[o * d_in..(o + 1) * d_in]);
+    par_row_panels(threads, x.rows, d_out, &mut y.data,
+                   |panel, lo, hi| {
+        for t in lo..hi {
+            let xr = x.row(t);
+            let yr =
+                &mut panel[(t - lo) * d_out..(t - lo + 1) * d_out];
+            for (o, yo) in yr.iter_mut().enumerate() {
+                *yo = dot(xr, &w[o * d_in..(o + 1) * d_in]);
+            }
         }
-    }
+    });
     y
 }
 
 /// dx = dy @ w for w [d_out, d_in]: `axpy` accumulation over the
-/// contiguous weight rows (the adjoint of [`matmul_nt`] wrt x).
-fn matmul_nn(dy: &Matrix, w: &[f32], d_in: usize) -> Matrix {
+/// contiguous weight rows (the adjoint of [`matmul_nt`] wrt x),
+/// output rows split across the pool.
+fn matmul_nn(dy: &Matrix, w: &[f32], d_in: usize, threads: usize)
+    -> Matrix {
     let d_out = dy.cols;
     assert_eq!(w.len(), d_out * d_in);
     let mut dx = Matrix::zeros(dy.rows, d_in);
-    for t in 0..dy.rows {
-        let dyr = dy.row(t);
-        let dxr = dx.row_mut(t);
-        for (o, &a) in dyr.iter().enumerate() {
-            if a != 0.0 {
-                axpy(a, &w[o * d_in..(o + 1) * d_in], dxr);
+    par_row_panels(threads, dy.rows, d_in, &mut dx.data,
+                   |panel, lo, hi| {
+        for t in lo..hi {
+            let dyr = dy.row(t);
+            let dxr =
+                &mut panel[(t - lo) * d_in..(t - lo + 1) * d_in];
+            for (o, &a) in dyr.iter().enumerate() {
+                if a != 0.0 {
+                    axpy(a, &w[o * d_in..(o + 1) * d_in], dxr);
+                }
             }
         }
-    }
+    });
     dx
 }
 
 /// dw += dy^T @ x into a flat [d_out, d_in] gradient slice (the
-/// adjoint of [`matmul_nt`] wrt w).
-fn accum_tn(dw: &mut [f32], dy: &Matrix, x: &Matrix) {
+/// adjoint of [`matmul_nt`] wrt w), gradient rows split across the
+/// pool.  `t` stays the outer loop inside each panel, so every dw
+/// element accumulates its contributions in ascending-t order exactly
+/// like the serial pass — bit-identical for any split.
+fn accum_tn(dw: &mut [f32], dy: &Matrix, x: &Matrix, threads: usize) {
     assert_eq!(dw.len(), dy.cols * x.cols);
     assert_eq!(dy.rows, x.rows);
     let d_in = x.cols;
-    for t in 0..x.rows {
-        let xr = x.row(t);
-        let dyr = dy.row(t);
-        for (o, &a) in dyr.iter().enumerate() {
-            if a != 0.0 {
-                axpy(a, xr, &mut dw[o * d_in..(o + 1) * d_in]);
+    par_row_panels(threads, dy.cols, d_in, dw, |panel, o0, o1| {
+        for t in 0..x.rows {
+            let xr = x.row(t);
+            let dyr = dy.row(t);
+            for o in o0..o1 {
+                let a = dyr[o];
+                if a != 0.0 {
+                    axpy(a, xr,
+                         &mut panel[(o - o0) * d_in
+                                    ..(o - o0 + 1) * d_in]);
+                }
             }
         }
-    }
+    });
 }
 
 fn add_assign(a: &mut Matrix, b: &Matrix) {
@@ -287,8 +348,52 @@ fn check_dims(meta: &ModelMeta) -> Result<(usize, usize), String> {
     Ok((dm, hd))
 }
 
+/// Causal softmax attention for one sequence (batch row `bi`):
+/// scores -> softmax -> weighted V sum, writing this sequence's rows
+/// of `attn_out` (`attn_rows`, l x dm) and its `probs` matrices (one
+/// [l, l] per head).  One job per sequence on the pool; sequences are
+/// independent, so the parallel schedule is bit-identical to serial.
+#[allow(clippy::too_many_arguments)]
+fn attn_forward_seq(bi: usize, l: usize, hd: usize, scale: f32,
+                    q: &Matrix, k: &Matrix, v: &Matrix,
+                    probs_seq: &mut [Matrix], attn_rows: &mut [f32]) {
+    let dm = probs_seq.len() * hd;
+    let mut acc = vec![0.0f32; hd];
+    for (hh, pm) in probs_seq.iter_mut().enumerate() {
+        let c0 = hh * hd;
+        let c1 = c0 + hd;
+        for i in 0..l {
+            let qi = &q.row(bi * l + i)[c0..c1];
+            let pr = pm.row_mut(i);
+            let mut m = f32::NEG_INFINITY;
+            for (j, pj) in pr.iter_mut().enumerate().take(i + 1) {
+                let s = dot(qi, &k.row(bi * l + j)[c0..c1]) * scale;
+                *pj = s;
+                m = m.max(s);
+            }
+            let mut z = 0.0f32;
+            for pj in pr.iter_mut().take(i + 1) {
+                let e = (*pj - m).exp();
+                *pj = e;
+                z += e;
+            }
+            for pj in pr.iter_mut().take(i + 1) {
+                *pj /= z;
+            }
+        }
+        for i in 0..l {
+            let pr = pm.row(i);
+            acc.fill(0.0);
+            for (j, &pj) in pr.iter().enumerate().take(i + 1) {
+                axpy(pj, &v.row(bi * l + j)[c0..c1], &mut acc);
+            }
+            attn_rows[i * dm + c0..i * dm + c1].copy_from_slice(&acc);
+        }
+    }
+}
+
 fn forward(meta: &ModelMeta, p: &Params, tokens: &[i32], b: usize,
-           l: usize) -> Result<Forward, String> {
+           l: usize, threads: usize) -> Result<Forward, String> {
     let (dm, hd) = check_dims(meta)?;
     let (nh, dff, vocab) = (meta.n_heads, meta.d_ff, meta.vocab);
     let t_n = b * l;
@@ -314,67 +419,57 @@ fn forward(meta: &ModelMeta, p: &Params, tokens: &[i32], b: usize,
         let x_in = x;
         let (h, r_attn) = rmsnorm(&x_in, bp.attn_norm);
 
-        let mut q = matmul_nt(&h, bp.wq, dm);
-        let mut k = matmul_nt(&h, bp.wk, dm);
-        let v = matmul_nt(&h, bp.wv, dm);
+        let mut q = matmul_nt(&h, bp.wq, dm, threads);
+        let mut k = matmul_nt(&h, bp.wk, dm, threads);
+        let v = matmul_nt(&h, bp.wv, dm, threads);
         rope_in_place(&mut q, b, l, nh, hd, (&cos, &sin), 1.0);
         rope_in_place(&mut k, b, l, nh, hd, (&cos, &sin), 1.0);
 
-        let mut probs = Vec::with_capacity(b * nh);
+        let mut probs: Vec<Matrix> =
+            (0..b * nh).map(|_| Matrix::zeros(l, l)).collect();
         let mut attn_out = Matrix::zeros(t_n, dm);
-        let mut acc = vec![0.0f32; hd];
-        for bi in 0..b {
-            for hh in 0..nh {
-                let c0 = hh * hd;
-                let c1 = c0 + hd;
-                let mut pm = Matrix::zeros(l, l);
-                for i in 0..l {
-                    let qi = &q.row(bi * l + i)[c0..c1];
-                    let pr = pm.row_mut(i);
-                    let mut m = f32::NEG_INFINITY;
-                    for (j, pj) in pr.iter_mut().enumerate().take(i + 1) {
-                        let s = dot(qi, &k.row(bi * l + j)[c0..c1])
-                            * scale;
-                        *pj = s;
-                        m = m.max(s);
-                    }
-                    let mut z = 0.0f32;
-                    for pj in pr.iter_mut().take(i + 1) {
-                        let e = (*pj - m).exp();
-                        *pj = e;
-                        z += e;
-                    }
-                    for pj in pr.iter_mut().take(i + 1) {
-                        *pj /= z;
-                    }
+        // Degenerate shapes (l == 0): attention is a no-op, and
+        // chunks_mut(0) would panic — skip the fan-out entirely.
+        if l * dm > 0 {
+            // One job per sequence: row block bi*l..(bi+1)*l of
+            // attn_out and probs[bi*nh..(bi+1)*nh] are each written
+            // by exactly one worker.
+            let (q, k, v) = (&q, &k, &v);
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(b);
+            for (bi, (probs_seq, attn_rows)) in probs
+                .chunks_mut(nh)
+                .zip(attn_out.data.chunks_mut(l * dm))
+                .enumerate()
+            {
+                let job = move || attn_forward_seq(bi, l, hd, scale, q,
+                                                   k, v, probs_seq,
+                                                   attn_rows);
+                if threads <= 1 || b <= 1 {
+                    job();
+                } else {
+                    jobs.push(Box::new(job));
                 }
-                for i in 0..l {
-                    let pr = pm.row(i);
-                    acc.fill(0.0);
-                    for (j, &pj) in pr.iter().enumerate().take(i + 1) {
-                        axpy(pj, &v.row(bi * l + j)[c0..c1], &mut acc);
-                    }
-                    attn_out.row_mut(bi * l + i)[c0..c1]
-                        .copy_from_slice(&acc);
-                }
-                probs.push(pm);
+            }
+            if !jobs.is_empty() {
+                threadpool::global().run_scoped(jobs);
             }
         }
 
-        let proj = matmul_nt(&attn_out, bp.wo, dm);
+        let proj = matmul_nt(&attn_out, bp.wo, dm, threads);
         let mut x_mid = x_in.clone();
         add_assign(&mut x_mid, &proj);
 
         let (h2, r_mlp) = rmsnorm(&x_mid, bp.mlp_norm);
-        let gate = matmul_nt(&h2, bp.wg, dff);
-        let up = matmul_nt(&h2, bp.wu, dff);
+        let gate = matmul_nt(&h2, bp.wg, dff, threads);
+        let up = matmul_nt(&h2, bp.wu, dff, threads);
         let mut dmlp = Matrix::zeros(t_n, dff);
         for idx in 0..t_n * dff {
             let g = gate.data[idx];
             let sg = 1.0 / (1.0 + (-g).exp());
             dmlp.data[idx] = g * sg * up.data[idx];
         }
-        let down = matmul_nt(&dmlp, bp.wd, dm);
+        let down = matmul_nt(&dmlp, bp.wd, dm, threads);
         let mut x_out = x_mid.clone();
         add_assign(&mut x_out, &down);
 
@@ -386,7 +481,7 @@ fn forward(meta: &ModelMeta, p: &Params, tokens: &[i32], b: usize,
     }
 
     let (xf, r_final) = rmsnorm(&x, p.final_norm);
-    let logits = matmul_nt(&xf, p.lm_head, vocab);
+    let logits = matmul_nt(&xf, p.lm_head, vocab, threads);
     Ok(Forward { blocks, x_out: x, xf, r_final, logits })
 }
 
@@ -425,12 +520,51 @@ fn token_nll(logits: &Matrix, targets: &[i32])
 
 // --- backward --------------------------------------------------------------
 
+/// Attention backward for one sequence (batch row `bi`): writes this
+/// sequence's rows of dq/dk/dv from its cached probs and the rotated
+/// q/k/v.  One job per sequence on the pool, bit-identical to serial.
+#[allow(clippy::too_many_arguments)]
+fn attn_backward_seq(bi: usize, l: usize, nh: usize, hd: usize,
+                     scale: f32, q: &Matrix, k: &Matrix, v: &Matrix,
+                     probs_seq: &[Matrix], d_attn_out: &Matrix,
+                     dq_rows: &mut [f32], dk_rows: &mut [f32],
+                     dv_rows: &mut [f32]) {
+    let dm = nh * hd;
+    let mut dp_row = vec![0.0f32; l];
+    for (hh, pm) in probs_seq.iter().enumerate() {
+        let c0 = hh * hd;
+        let c1 = c0 + hd;
+        for i in 0..l {
+            let dout_i = &d_attn_out.row(bi * l + i)[c0..c1];
+            let pr = pm.row(i);
+            // dP and the softmax-jacobian inner product.
+            let mut dot_pp = 0.0f32;
+            for j in 0..=i {
+                let dp = dot(dout_i, &v.row(bi * l + j)[c0..c1]);
+                dp_row[j] = dp;
+                dot_pp += dp * pr[j];
+            }
+            for j in 0..=i {
+                axpy(pr[j], dout_i,
+                     &mut dv_rows[j * dm + c0..j * dm + c1]);
+                let ds = pr[j] * (dp_row[j] - dot_pp) * scale;
+                if ds != 0.0 {
+                    axpy(ds, &k.row(bi * l + j)[c0..c1],
+                         &mut dq_rows[i * dm + c0..i * dm + c1]);
+                    axpy(ds, &q.row(bi * l + i)[c0..c1],
+                         &mut dk_rows[j * dm + c0..j * dm + c1]);
+                }
+            }
+        }
+    }
+}
+
 /// Gradients of a scalar loss wrt every parameter tensor (manifest
 /// order), given dL/dlogits.  Mirrors `jax.grad` through the exact
 /// forward recomputed by [`forward`].
 fn backward(meta: &ModelMeta, p: &Params, fwd: &Forward,
-            dlogits: &Matrix, tokens: &[i32], b: usize, l: usize)
-    -> Vec<Vec<f32>> {
+            dlogits: &Matrix, tokens: &[i32], b: usize, l: usize,
+            threads: usize) -> Vec<Vec<f32>> {
     let (dm, hd) = (meta.d_model, meta.d_model / meta.n_heads);
     let (nh, dff, nb) = (meta.n_heads, meta.d_ff, meta.n_blocks);
     let scale = 1.0 / (hd as f32).sqrt();
@@ -441,21 +575,20 @@ fn backward(meta: &ModelMeta, p: &Params, fwd: &Forward,
     let i_final_norm = 1 + nb * 9;
     let i_lm_head = i_final_norm + 1;
 
-    accum_tn(&mut grads[i_lm_head], dlogits, &fwd.xf);
-    let dxf = matmul_nn(dlogits, p.lm_head, dm);
+    accum_tn(&mut grads[i_lm_head], dlogits, &fwd.xf, threads);
+    let dxf = matmul_nn(dlogits, p.lm_head, dm, threads);
     let mut dx = rmsnorm_backward(&fwd.x_out, p.final_norm,
                                   &fwd.r_final, &dxf,
                                   &mut grads[i_final_norm]);
 
-    let mut dp_row = vec![0.0f32; l];
     for bi_rev in (0..nb).rev() {
         let cache = &fwd.blocks[bi_rev];
         let bp = &p.blocks[bi_rev];
         let base = 1 + bi_rev * 9;
 
         // MLP: x_out = x_mid + (silu(gate) ⊙ up) @ wd^T.
-        let d_dmlp = matmul_nn(&dx, bp.wd, dff);
-        accum_tn(&mut grads[base + 8], &dx, &cache.dmlp);
+        let d_dmlp = matmul_nn(&dx, bp.wd, dff, threads);
+        accum_tn(&mut grads[base + 8], &dx, &cache.dmlp, threads);
         let mut dgate = Matrix::zeros(b * l, dff);
         let mut dup = Matrix::zeros(b * l, dff);
         for idx in 0..b * l * dff {
@@ -467,10 +600,10 @@ fn backward(meta: &ModelMeta, p: &Params, fwd: &Forward,
             dgate.data[idx] = dd * cache.up.data[idx] * dsilu;
             dup.data[idx] = dd * silu;
         }
-        accum_tn(&mut grads[base + 6], &dgate, &cache.h2);
-        accum_tn(&mut grads[base + 7], &dup, &cache.h2);
-        let mut dh2 = matmul_nn(&dgate, bp.wg, dm);
-        add_assign(&mut dh2, &matmul_nn(&dup, bp.wu, dm));
+        accum_tn(&mut grads[base + 6], &dgate, &cache.h2, threads);
+        accum_tn(&mut grads[base + 7], &dup, &cache.h2, threads);
+        let mut dh2 = matmul_nn(&dgate, bp.wg, dm, threads);
+        add_assign(&mut dh2, &matmul_nn(&dup, bp.wu, dm, threads));
         let dx_mid_norm = rmsnorm_backward(&cache.x_mid, bp.mlp_norm,
                                            &cache.r_mlp, &dh2,
                                            &mut grads[base + 5]);
@@ -478,49 +611,47 @@ fn backward(meta: &ModelMeta, p: &Params, fwd: &Forward,
         add_assign(&mut dx_mid, &dx_mid_norm);
 
         // Attention: x_mid = x_in + attn_out @ wo^T.
-        accum_tn(&mut grads[base + 4], &dx_mid, &cache.attn_out);
-        let d_attn_out = matmul_nn(&dx_mid, bp.wo, dm);
+        accum_tn(&mut grads[base + 4], &dx_mid, &cache.attn_out,
+                 threads);
+        let d_attn_out = matmul_nn(&dx_mid, bp.wo, dm, threads);
         let mut dq = Matrix::zeros(b * l, dm);
         let mut dk = Matrix::zeros(b * l, dm);
         let mut dv = Matrix::zeros(b * l, dm);
-        for bi in 0..b {
-            for hh in 0..nh {
-                let c0 = hh * hd;
-                let c1 = c0 + hd;
-                let pm = &cache.probs[bi * nh + hh];
-                for i in 0..l {
-                    let dout_i = &d_attn_out.row(bi * l + i)[c0..c1];
-                    let pr = pm.row(i);
-                    // dP and the softmax-jacobian inner product.
-                    let mut dot_pp = 0.0f32;
-                    for j in 0..=i {
-                        let dp = dot(dout_i,
-                                     &cache.v.row(bi * l + j)[c0..c1]);
-                        dp_row[j] = dp;
-                        dot_pp += dp * pr[j];
-                    }
-                    for j in 0..=i {
-                        axpy(pr[j], dout_i,
-                             &mut dv.row_mut(bi * l + j)[c0..c1]);
-                        let ds = pr[j] * (dp_row[j] - dot_pp) * scale;
-                        if ds != 0.0 {
-                            axpy(ds, &cache.k.row(bi * l + j)[c0..c1],
-                                 &mut dq.row_mut(bi * l + i)[c0..c1]);
-                            axpy(ds, &cache.q.row(bi * l + i)[c0..c1],
-                                 &mut dk.row_mut(bi * l + j)[c0..c1]);
-                        }
-                    }
+        // Same degenerate-shape guard as the forward pass.
+        if l * dm > 0 {
+            let (q, k, v) = (&cache.q, &cache.k, &cache.v);
+            let d_attn_out = &d_attn_out;
+            let probs_all = &cache.probs;
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(b);
+            for (bi, ((dq_rows, dk_rows), dv_rows)) in dq.data
+                .chunks_mut(l * dm)
+                .zip(dk.data.chunks_mut(l * dm))
+                .zip(dv.data.chunks_mut(l * dm))
+                .enumerate()
+            {
+                let probs_seq = &probs_all[bi * nh..(bi + 1) * nh];
+                let job = move || attn_backward_seq(
+                    bi, l, nh, hd, scale, q, k, v, probs_seq,
+                    d_attn_out, dq_rows, dk_rows, dv_rows);
+                if threads <= 1 || b <= 1 {
+                    job();
+                } else {
+                    jobs.push(Box::new(job));
                 }
+            }
+            if !jobs.is_empty() {
+                threadpool::global().run_scoped(jobs);
             }
         }
         rope_in_place(&mut dq, b, l, nh, hd, (&cos, &sin), -1.0);
         rope_in_place(&mut dk, b, l, nh, hd, (&cos, &sin), -1.0);
-        accum_tn(&mut grads[base + 1], &dq, &cache.h);
-        accum_tn(&mut grads[base + 2], &dk, &cache.h);
-        accum_tn(&mut grads[base + 3], &dv, &cache.h);
-        let mut dh = matmul_nn(&dq, bp.wq, dm);
-        add_assign(&mut dh, &matmul_nn(&dk, bp.wk, dm));
-        add_assign(&mut dh, &matmul_nn(&dv, bp.wv, dm));
+        accum_tn(&mut grads[base + 1], &dq, &cache.h, threads);
+        accum_tn(&mut grads[base + 2], &dk, &cache.h, threads);
+        accum_tn(&mut grads[base + 3], &dv, &cache.h, threads);
+        let mut dh = matmul_nn(&dq, bp.wq, dm, threads);
+        add_assign(&mut dh, &matmul_nn(&dk, bp.wk, dm, threads));
+        add_assign(&mut dh, &matmul_nn(&dv, bp.wv, dm, threads));
         let dx_in_norm = rmsnorm_backward(&cache.x_in, bp.attn_norm,
                                           &cache.r_attn, &dh,
                                           &mut grads[base]);
@@ -553,7 +684,8 @@ pub fn forward_logits(meta: &ModelMeta, params: &[&TensorData],
                       tokens: &TensorData) -> Result<Matrix, String> {
     let (b, l) = batch_dims(tokens, "tokens")?;
     let p = unpack(meta, params)?;
-    Ok(forward(meta, &p, tokens.as_i32()?, b, l)?.logits)
+    Ok(forward(meta, &p, tokens.as_i32()?, b, l, default_threads())?
+        .logits)
 }
 
 /// Mean token NLL over the batch (the training objective), f64.
@@ -562,7 +694,8 @@ pub fn mean_nll(meta: &ModelMeta, params: &[&TensorData],
     -> Result<f64, String> {
     let (b, l) = batch_dims(tokens, "tokens")?;
     let p = unpack(meta, params)?;
-    let fwd = forward(meta, &p, tokens.as_i32()?, b, l)?;
+    let fwd = forward(meta, &p, tokens.as_i32()?, b, l,
+                      default_threads())?;
     let (nll, _) = token_nll(&fwd.logits, targets.as_i32()?)?;
     Ok(nll.iter().map(|&x| x as f64).sum::<f64>() / (b * l) as f64)
 }
@@ -573,11 +706,22 @@ pub fn mean_nll(meta: &ModelMeta, params: &[&TensorData],
 pub fn loss_and_grads(meta: &ModelMeta, params: &[&TensorData],
                       tokens: &TensorData, targets: &TensorData)
     -> Result<(f64, Vec<Vec<f32>>), String> {
+    loss_and_grads_threads(meta, params, tokens, targets,
+                           default_threads())
+}
+
+/// [`loss_and_grads`] with an explicit worker count.  Results are
+/// bit-identical for every value — the hook the thread-invariance
+/// parity test drives.
+pub fn loss_and_grads_threads(meta: &ModelMeta, params: &[&TensorData],
+                              tokens: &TensorData,
+                              targets: &TensorData, threads: usize)
+    -> Result<(f64, Vec<Vec<f32>>), String> {
     let (b, l) = batch_dims(tokens, "tokens")?;
     let toks = tokens.as_i32()?;
     let tgts = targets.as_i32()?;
     let p = unpack(meta, params)?;
-    let fwd = forward(meta, &p, toks, b, l)?;
+    let fwd = forward(meta, &p, toks, b, l, threads)?;
     let (nll, probs) = token_nll(&fwd.logits, tgts)?;
     let loss = nll.iter().map(|&x| x as f64).sum::<f64>()
         / (b * l) as f64;
@@ -591,7 +735,7 @@ pub fn loss_and_grads(meta: &ModelMeta, params: &[&TensorData],
             *val /= t_n;
         }
     }
-    let grads = backward(meta, &p, &fwd, &dlogits, toks, b, l);
+    let grads = backward(meta, &p, &fwd, &dlogits, toks, b, l, threads);
     Ok((loss, grads))
 }
 
@@ -682,7 +826,8 @@ pub fn exec_eval_step(meta: &ModelMeta, inputs: &[&TensorData])
     let (params, rest) = inputs.split_at(np);
     let (b, l) = batch_dims(rest[0], "eval_step tokens")?;
     let p = unpack(meta, params)?;
-    let fwd = forward(meta, &p, rest[0].as_i32()?, b, l)?;
+    let fwd = forward(meta, &p, rest[0].as_i32()?, b, l,
+                      default_threads())?;
     let (nll, _) = token_nll(&fwd.logits, rest[1].as_i32()?)?;
     let sum = nll.iter().map(|&x| x as f64).sum::<f64>();
     Ok(vec![
@@ -708,7 +853,8 @@ pub fn exec_seq_nll(meta: &ModelMeta, inputs: &[&TensorData])
                            meta.name, mask.len(), b * l));
     }
     let p = unpack(meta, params)?;
-    let fwd = forward(meta, &p, rest[0].as_i32()?, b, l)?;
+    let fwd = forward(meta, &p, rest[0].as_i32()?, b, l,
+                      default_threads())?;
     let (nll, _) = token_nll(&fwd.logits, rest[1].as_i32()?)?;
     let rows: Vec<f32> = (0..b)
         .map(|bi| (0..l)
@@ -732,7 +878,8 @@ pub fn exec_calib_step(meta: &ModelMeta, inputs: &[&TensorData])
     let tokens_t = rest[0];
     let (b, l) = batch_dims(tokens_t, "calib_step tokens")?;
     let p = unpack(meta, params)?;
-    let fwd = forward(meta, &p, tokens_t.as_i32()?, b, l)?;
+    let fwd = forward(meta, &p, tokens_t.as_i32()?, b, l,
+                      default_threads())?;
 
     let mut grams: Vec<TensorData> =
         rest[1..5].iter().map(|t| (*t).clone()).collect();

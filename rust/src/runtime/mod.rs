@@ -6,6 +6,7 @@
 //! [`RuntimePool`] with work-stealing dispatch.
 
 pub mod backend;
+pub mod compile_cache;
 pub mod interp_model;
 pub mod manifest;
 pub mod pool;
@@ -14,6 +15,7 @@ pub mod tensor_data;
 pub mod testutil;
 
 pub use backend::{Backend, DefaultBackend, InterpBackend};
+pub use compile_cache::CompileCache;
 pub use manifest::{ArtifactEntry, Manifest, ModelMeta, PrunableLayer};
 pub use pool::RuntimePool;
 pub use service::{

@@ -54,6 +54,10 @@ struct PoolState {
     shutdown: AtomicBool,
     steals: AtomicU64,
     ran: Vec<AtomicU64>,
+    /// Nanoseconds each dispatcher spent executing jobs (load-balance
+    /// diagnostic: max/mean across workers is the shard bench's
+    /// imbalance metric).
+    busy: Vec<AtomicU64>,
     /// Empty sweeps per dispatcher (each one leads to a blocking
     /// wait).  A parked pool accrues none — asserted by the
     /// no-busy-wakeup test; the old 5 ms timed wait woke ~200x/s.
@@ -76,12 +80,17 @@ impl RuntimePool {
         -> Result<RuntimePool, RuntimeError> {
         let devices = devices.max(1);
         let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        // One shared compile cache per pool: the first worker to
+        // compile an artifact exports the executable, later workers
+        // import it instead of recompiling
+        // (`ServiceStats::compiles_shared`).
+        let opts = opts.with_shared_compile_cache();
         let mut runtimes = Vec::with_capacity(devices);
         for device in 0..devices {
             runtimes.push(Runtime::start_with_backend(
                 Arc::clone(&manifest),
                 DefaultBackend::new_default,
-                RuntimeOptions { device, ..opts })?);
+                RuntimeOptions { device, ..opts.clone() })?);
         }
         Ok(Self::from_runtimes(runtimes))
     }
@@ -101,6 +110,7 @@ impl RuntimePool {
             shutdown: AtomicBool::new(false),
             steals: AtomicU64::new(0),
             ran: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            busy: (0..n).map(|_| AtomicU64::new(0)).collect(),
             idle_sweeps: (0..n).map(|_| AtomicU64::new(0)).collect(),
         });
         let dispatchers = runtimes.iter().enumerate()
@@ -145,6 +155,15 @@ impl RuntimePool {
     /// Jobs completed per worker (dispatch fairness diagnostics).
     pub fn jobs_run(&self) -> Vec<u64> {
         self.state.ran.iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// Cumulative nanoseconds each worker spent executing jobs — the
+    /// load-balance diagnostic behind the shard bench's imbalance
+    /// metric (max/mean busy time across workers).
+    pub fn busy_nanos(&self) -> Vec<u64> {
+        self.state.busy.iter()
             .map(|c| c.load(Ordering::Relaxed))
             .collect()
     }
@@ -218,27 +237,54 @@ impl RuntimePool {
     /// Run a batch of *borrowing* jobs to completion on the pool
     /// (scoped fork/join), the same contract as
     /// `ThreadPool::run_scoped`: submits every job round-robin, then
-    /// blocks until all of them have finished, so jobs may capture
-    /// non-`'static` references (zero-copy Gram views into block
-    /// calibration state).
+    /// blocks until all of *this batch* has finished, so jobs may
+    /// capture non-`'static` references (zero-copy Gram views into
+    /// block calibration state).  Completion is tracked per batch,
+    /// not pool-wide, so concurrent scoped callers never convoy on
+    /// each other's jobs.
     pub fn run_scoped<'env>(
         &self,
         jobs: Vec<Box<dyn FnOnce(&Runtime) + Send + 'env>>,
     ) {
+        // Batch-local completion count, decremented by a drop guard
+        // so a panicking job (contained by its dispatcher) still
+        // counts down and the wait below cannot hang.
+        struct BatchGuard(Arc<(Mutex<usize>, Condvar)>);
+        impl Drop for BatchGuard {
+            fn drop(&mut self) {
+                let (lock, cv) = &*self.0;
+                let mut cnt = lock.lock().unwrap();
+                *cnt -= 1;
+                if *cnt == 0 {
+                    cv.notify_all();
+                }
+            }
+        }
+        let batch = Arc::new((Mutex::new(jobs.len()), Condvar::new()));
         for job in jobs {
-            // SAFETY: `wait()` below blocks until every job submitted
-            // here has completed (dispatcher panics are contained and
-            // still decrement the pending counter), so no job — and
-            // therefore no borrow it captures — outlives 'env.
+            // SAFETY: the batch wait below blocks until every job
+            // submitted here has completed (dispatcher panics are
+            // contained and the drop guard still counts down), so no
+            // job — and therefore no borrow it captures — outlives
+            // 'env.
             let job: Job = unsafe {
                 std::mem::transmute::<
                     Box<dyn FnOnce(&Runtime) + Send + 'env>, Job>(job)
             };
+            let guard = BatchGuard(Arc::clone(&batch));
+            let wrapped: Job = Box::new(move |rt: &Runtime| {
+                let _guard = guard;
+                job(rt);
+            });
             let w = self.next.fetch_add(1, Ordering::Relaxed)
                 % self.devices();
-            self.enqueue(w, job);
+            self.enqueue(w, wrapped);
         }
-        self.wait();
+        let (lock, cv) = &*batch;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cv.wait(cnt).unwrap();
+        }
     }
 }
 
@@ -296,8 +342,11 @@ fn dispatch_main(me: usize, rt: Runtime, state: Arc<PoolState>) {
             Some(job) => {
                 // Contain panics so a failing job can neither kill the
                 // dispatcher nor leave the pending counter stuck.
+                let t0 = std::time::Instant::now();
                 let _ = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| job(&rt)));
+                state.busy[me].fetch_add(
+                    t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 state.ran[me].fetch_add(1, Ordering::Relaxed);
                 let mut cnt = state.pending.lock().unwrap();
                 *cnt -= 1;

@@ -19,13 +19,14 @@
 //! service packs/unpacks at the boundary, so handles stay `Send` and
 //! several workers can form a `runtime::pool::RuntimePool`.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::runtime::backend::{Backend, DefaultBackend};
+use crate::runtime::compile_cache::CompileCache;
 use crate::runtime::manifest::{ArtifactEntry, Manifest};
 use crate::runtime::tensor_data::TensorData;
 
@@ -112,6 +113,11 @@ enum Request {
 pub struct ServiceStats {
     pub executions: u64,
     pub compiles: u64,
+    /// Executables adopted from the pool's shared compile cache
+    /// instead of compiled locally — the pool-startup diagnostic: a
+    /// healthy N-worker pool compiles each artifact once and imports
+    /// it N-1 times.
+    pub compiles_shared: u64,
     /// Backend execute time; since the backend API returns host
     /// tensors, output download/decompose is included here.
     pub exec_nanos: u64,
@@ -159,6 +165,7 @@ impl ServiceStats {
     pub fn merge(&mut self, o: &ServiceStats) {
         self.executions += o.executions;
         self.compiles += o.compiles;
+        self.compiles_shared += o.compiles_shared;
         self.exec_nanos += o.exec_nanos;
         self.pack_nanos += o.pack_nanos;
         self.unpack_nanos += o.unpack_nanos;
@@ -176,18 +183,41 @@ impl ServiceStats {
 pub const DEFAULT_DEVICE_MEM_BUDGET: u64 = 512 << 20;
 
 /// Options for starting one runtime service worker.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RuntimeOptions {
     /// Device-buffer cache budget in bytes; the LRU sweep reclaims
     /// beyond this after every call.  0 = unlimited.
     pub device_mem_budget: u64,
     /// Device index (pool worker id; 0 for a standalone runtime).
     pub device: usize,
+    /// Pool-wide compile cache: the first worker to compile an
+    /// artifact exports the serialized executable, later workers
+    /// import it instead of recompiling
+    /// ([`ServiceStats::compiles_shared`]).  `None` = every worker
+    /// compiles everything itself (standalone runtimes).
+    pub compile_cache: Option<Arc<CompileCache>>,
 }
 
 impl Default for RuntimeOptions {
     fn default() -> Self {
-        Self { device_mem_budget: DEFAULT_DEVICE_MEM_BUDGET, device: 0 }
+        Self {
+            device_mem_budget: DEFAULT_DEVICE_MEM_BUDGET,
+            device: 0,
+            compile_cache: None,
+        }
+    }
+}
+
+impl RuntimeOptions {
+    /// Ensure a compile cache is present (pool constructors call this
+    /// before fanning the options out to their workers, so every
+    /// worker of one pool shares one cache — the single place that
+    /// policy lives).
+    pub fn with_shared_compile_cache(mut self) -> RuntimeOptions {
+        if self.compile_cache.is_none() {
+            self.compile_cache = Some(CompileCache::shared());
+        }
+        self
     }
 }
 
@@ -243,15 +273,17 @@ impl Runtime {
     {
         let (tx, rx) = mpsc::channel::<Request>();
         let thread_manifest = Arc::clone(&manifest);
+        // `opts` moves onto the service thread; keep the id out here.
+        let device = opts.device;
         let handle = std::thread::Builder::new()
-            .name(format!("runtime-service-{}", opts.device))
+            .name(format!("runtime-service-{device}"))
             .spawn(move || service_main(rx, thread_manifest, factory,
                                         opts))
             .map_err(|e| RuntimeError::Msg(e.to_string()))?;
         Ok(Runtime {
             tx: tx.clone(),
             manifest,
-            device: opts.device,
+            device,
             _join: Arc::new(JoinGuard { tx, handle: Some(handle) }),
         })
     }
@@ -344,6 +376,11 @@ struct Service<B: Backend> {
     cache: HashMap<(u64, String), CachedBuf<B::Buf>>,
     tick: u64,
     stats: ServiceStats,
+    /// Artifacts this worker has ensured (compiled or imported).
+    compiled: HashSet<String>,
+    /// Pool-wide serialized-executable handoff (see
+    /// [`CompileCache`]).
+    shared_compiles: Option<Arc<CompileCache>>,
 }
 
 fn service_main<B, F>(rx: mpsc::Receiver<Request>, manifest: Arc<Manifest>,
@@ -384,6 +421,8 @@ where
         cache: HashMap::new(),
         tick: 0,
         stats: ServiceStats::default(),
+        compiled: HashSet::new(),
+        shared_compiles: opts.compile_cache,
     };
     for req in rx {
         match req {
@@ -411,11 +450,33 @@ impl<B: Backend> Service<B> {
 
     fn ensure_compiled(&mut self, entry: &ArtifactEntry)
         -> Result<(), RuntimeError> {
+        if self.compiled.contains(&entry.name) {
+            return Ok(());
+        }
+        // Adopt a sibling worker's executable when the pool's shared
+        // cache has one: compile cost is paid once per pool instead
+        // of once per worker.
+        if let Some(cache) = &self.shared_compiles {
+            if let Some(bytes) = cache.get(&entry.name) {
+                if self.backend.import_compiled(entry, &bytes)? {
+                    self.stats.compiles_shared += 1;
+                    self.compiled.insert(entry.name.clone());
+                    return Ok(());
+                }
+            }
+        }
         let t0 = Instant::now();
         if self.backend.compile(entry)? {
             self.stats.compiles += 1;
             self.stats.compile_nanos += t0.elapsed().as_nanos() as u64;
+            if let Some(cache) = &self.shared_compiles {
+                if let Some(bytes) = self.backend.export_compiled(entry)
+                {
+                    cache.put(&entry.name, bytes);
+                }
+            }
         }
+        self.compiled.insert(entry.name.clone());
         Ok(())
     }
 

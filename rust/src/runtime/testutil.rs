@@ -85,12 +85,15 @@ pub fn interp_runtime(manifest: &Manifest, opts: RuntimeOptions)
         .expect("start interp runtime")
 }
 
-/// A pool of `devices` interp workers over one manifest.
+/// A pool of `devices` interp workers over one manifest.  Mirrors
+/// `RuntimePool::start`: all workers share one compile cache, so
+/// each artifact compiles once per pool.
 pub fn interp_pool(manifest: &Manifest, devices: usize,
                    opts: RuntimeOptions) -> RuntimePool {
+    let opts = opts.with_shared_compile_cache();
     RuntimePool::from_runtimes(
         (0..devices.max(1))
             .map(|device| interp_runtime(
-                manifest, RuntimeOptions { device, ..opts }))
+                manifest, RuntimeOptions { device, ..opts.clone() }))
             .collect())
 }

@@ -215,6 +215,42 @@ pub fn pair_scan_arm(
     scalar::pair_scan(au, wu2, b, wp, gp, best)
 }
 
+/// [`pair_scan_arm`] with a fused gather: instead of consuming a
+/// packed f64 `gp` buffer, reads `G_up` straight out of the f32 Gram
+/// row at the pruned indices (`gp[i] = g_row[pruned[i]] as f64`).
+/// The f32 -> f64 widening is exact, so every `dl` rounds identically
+/// to the packed scan and the selected pair is bit-identical across
+/// all three paths (packed scalar, packed SIMD, gathered).  The simd
+/// arm uses AVX2 `vgatherqps`, which is what lets the engine drop the
+/// per-kept-index packing pass entirely.
+///
+/// Requires every `pruned[i] < g_row.len()` (mask indices of one
+/// row).
+pub fn pair_scan_gather_arm(
+    arm: Arm,
+    au: f64,
+    wu2: f64,
+    b: &[f64],
+    wp: &[f64],
+    g_row: &[f32],
+    pruned: &[usize],
+    best: f64,
+) -> Option<(f64, usize)> {
+    debug_assert_eq!(b.len(), wp.len());
+    debug_assert_eq!(b.len(), pruned.len());
+    debug_assert!(pruned.iter().all(|&p| p < g_row.len()));
+    #[cfg(target_arch = "x86_64")]
+    if arm == Arm::Simd && simd_available() {
+        // SAFETY: AVX2 presence verified at runtime; the caller
+        // guarantees every gathered index is in bounds.
+        return unsafe {
+            avx2::pair_scan_gather(au, wu2, b, wp, g_row, pruned, best)
+        };
+    }
+    let _ = arm;
+    scalar::pair_scan_gather(au, wu2, b, wp, g_row, pruned, best)
+}
+
 /// Cache-blocked matrix multiply `A * B` with packed B panels.
 /// The scalar arm reproduces the historic ikj loop bit-for-bit (same
 /// per-element accumulation order over k, same skip of zero A
@@ -478,6 +514,31 @@ mod scalar {
         }
         cur
     }
+
+    /// [`pair_scan`] reading `G_up` at the pruned indices instead of
+    /// from a packed buffer.  `g_row[p] as f64` is exact, so the
+    /// rounding sequence — and therefore the winner — is identical.
+    pub fn pair_scan_gather(
+        au: f64,
+        wu2: f64,
+        b: &[f64],
+        wp: &[f64],
+        g_row: &[f32],
+        pruned: &[usize],
+        best: f64,
+    ) -> Option<(f64, usize)> {
+        let mut cur: Option<(f64, usize)> = None;
+        let mut best_dl = best;
+        for i in 0..b.len() {
+            let gp = g_row[pruned[i]] as f64;
+            let dl = au + b[i] - wu2 * wp[i] * gp;
+            if dl < best_dl {
+                best_dl = dl;
+                cur = Some((dl, i));
+            }
+        }
+        cur
+    }
 }
 
 // --- AVX2/FMA arm -----------------------------------------------------------
@@ -681,6 +742,92 @@ mod avx2 {
         };
         while i < n {
             let dl = au + b[i] - wu2 * wp[i] * gp[i];
+            if dl < best_dl {
+                best_dl = dl;
+                cur = Some((dl, i));
+            }
+            i += 1;
+        }
+        cur
+    }
+
+    /// [`pair_scan`] with the `G_up` operand gathered from the f32
+    /// Gram row at the pruned indices (`vgatherqps`: 4 x i64 indices
+    /// loaded straight from the `&[usize]` partition, 4 gathered f32
+    /// lanes widened to f64).  The widening is exact and each `dl`
+    /// keeps the scalar rounding sequence, so the result is
+    /// bit-identical to `scalar::pair_scan_gather` — and to the packed
+    /// scans.
+    ///
+    /// SAFETY contract (caller): every `pruned[i] < g_row.len()`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pair_scan_gather(
+        au: f64,
+        wu2: f64,
+        b: &[f64],
+        wp: &[f64],
+        g_row: &[f32],
+        pruned: &[usize],
+        best: f64,
+    ) -> Option<(f64, usize)> {
+        debug_assert_eq!(b.len(), wp.len());
+        debug_assert_eq!(b.len(), pruned.len());
+        let n = b.len();
+        let mut i = 0usize;
+        let mut cur: Option<(f64, usize)> = None;
+        if n >= 8 {
+            let au_v = _mm256_set1_pd(au);
+            let wu2_v = _mm256_set1_pd(wu2);
+            let mut best_v = _mm256_set1_pd(best);
+            let mut idx_v = _mm256_set1_pd(-1.0);
+            let mut lane = _mm256_setr_pd(0.0, 1.0, 2.0, 3.0);
+            let four = _mm256_set1_pd(4.0);
+            while i + 4 <= n {
+                let bv = _mm256_loadu_pd(b.as_ptr().add(i));
+                let wv = _mm256_loadu_pd(wp.as_ptr().add(i));
+                // usize is 64-bit on x86-64, so four pruned indices
+                // load directly as the i64 gather offsets.
+                let off = _mm256_loadu_si256(
+                    pruned.as_ptr().add(i) as *const __m256i);
+                let g32 = _mm256_i64gather_ps::<4>(g_row.as_ptr(), off);
+                let gv = _mm256_cvtps_pd(g32);
+                // (au + b) - ((wu2 * wp) * gp): scalar rounding order.
+                let dl = _mm256_sub_pd(
+                    _mm256_add_pd(au_v, bv),
+                    _mm256_mul_pd(_mm256_mul_pd(wu2_v, wv), gv),
+                );
+                let lt = _mm256_cmp_pd::<_CMP_LT_OQ>(dl, best_v);
+                best_v = _mm256_blendv_pd(best_v, dl, lt);
+                idx_v = _mm256_blendv_pd(idx_v, lane, lt);
+                lane = _mm256_add_pd(lane, four);
+                i += 4;
+            }
+            let mut bests = [0.0f64; 4];
+            let mut idxs = [0.0f64; 4];
+            _mm256_storeu_pd(bests.as_mut_ptr(), best_v);
+            _mm256_storeu_pd(idxs.as_mut_ptr(), idx_v);
+            for l in 0..4 {
+                if idxs[l] < 0.0 {
+                    continue;
+                }
+                let (dl, kp) = (bests[l], idxs[l] as usize);
+                cur = match cur {
+                    Some((cd, ck))
+                        if !(dl < cd || (dl == cd && kp < ck)) =>
+                    {
+                        Some((cd, ck))
+                    }
+                    _ => Some((dl, kp)),
+                };
+            }
+        }
+        let mut best_dl = match cur {
+            Some((cd, _)) => cd,
+            None => best,
+        };
+        while i < n {
+            let gp = g_row[pruned[i]] as f64;
+            let dl = au + b[i] - wu2 * wp[i] * gp;
             if dl < best_dl {
                 best_dl = dl;
                 cur = Some((dl, i));
@@ -959,6 +1106,67 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn pair_scan_gather_matches_packed_bitwise() {
+        // The gathered scan must select the exact pair (value and
+        // index, bit-for-bit) that the packed scan selects, for every
+        // arm, on ragged sizes and sparse index sets.
+        let mut rng = Rng::new(13);
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 12, 31, 100] {
+            let d = 4 * n + 8;
+            let g_row: Vec<f32> =
+                (0..d).map(|_| rng.gaussian_f32()).collect();
+            // Strictly increasing sparse indices, like a pruned
+            // partition.
+            let mut pruned: Vec<usize> = Vec::with_capacity(n);
+            let mut at = rng.usize_below(4);
+            for _ in 0..n {
+                pruned.push(at.min(d - 1));
+                at += 1 + rng.usize_below(3);
+            }
+            let b: Vec<f64> =
+                (0..n).map(|_| rng.gaussian_f32() as f64).collect();
+            let wp: Vec<f64> =
+                (0..n).map(|_| rng.gaussian_f32() as f64).collect();
+            let gp: Vec<f64> =
+                pruned.iter().map(|&p| g_row[p] as f64).collect();
+            let (au, wu2) = (-0.7f64, 1.9f64);
+            for best in [f64::INFINITY, 0.0] {
+                let want = pair_scan_arm(Arm::Scalar, au, wu2, &b, &wp,
+                                         &gp, best);
+                for arm in arms() {
+                    let got = pair_scan_gather_arm(arm, au, wu2, &b,
+                                                   &wp, &g_row, &pruned,
+                                                   best);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some((gd, gi)), Some((wd, wi))) => {
+                            assert_eq!(gd.to_bits(), wd.to_bits(),
+                                       "n={n} arm={arm:?}");
+                            assert_eq!(gi, wi, "n={n} arm={arm:?}");
+                        }
+                        other => panic!("n={n} arm={arm:?}: {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_scan_gather_breaks_ties_by_first_index() {
+        let n = 11;
+        let b = vec![1.0f64; n];
+        let wp = vec![0.0f64; n];
+        let g_row = vec![0.5f32; 64];
+        let pruned: Vec<usize> = (0..n).map(|i| 3 * i).collect();
+        for arm in arms() {
+            let got = pair_scan_gather_arm(arm, -2.0, 1.0, &b, &wp,
+                                           &g_row, &pruned,
+                                           f64::INFINITY);
+            assert_eq!(got, Some((-1.0, 0)), "arm={arm:?}");
         }
     }
 

@@ -6,10 +6,11 @@
 //!   * [`parallel_chunks`] — scoped fork/join over an index range for
 //!     one-off data parallelism (gram reduction, eval batches).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
+use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
@@ -24,6 +25,7 @@ pub struct ThreadPool {
     sender: mpsc::Sender<Message>,
     queue_guard: Arc<Mutex<mpsc::Receiver<Message>>>,
     pending: Arc<(Mutex<usize>, std::sync::Condvar)>,
+    busy: Arc<Vec<AtomicU64>>,
 }
 
 impl ThreadPool {
@@ -32,10 +34,13 @@ impl ThreadPool {
         let (sender, receiver) = mpsc::channel::<Message>();
         let queue_guard = Arc::new(Mutex::new(receiver));
         let pending = Arc::new((Mutex::new(0usize), std::sync::Condvar::new()));
+        let busy: Arc<Vec<AtomicU64>> =
+            Arc::new((0..n).map(|_| AtomicU64::new(0)).collect());
         let mut workers = Vec::with_capacity(n);
-        for _ in 0..n {
+        for wi in 0..n {
             let rx = Arc::clone(&queue_guard);
             let pend = Arc::clone(&pending);
+            let busy = Arc::clone(&busy);
             workers.push(thread::spawn(move || loop {
                 let msg = {
                     let guard = rx.lock().unwrap();
@@ -48,8 +53,12 @@ impl ThreadPool {
                         // stuck (which would hang wait() forever).
                         // Callers that need the job's outcome observe it
                         // through the job's own channel, not the panic.
+                        let t0 = Instant::now();
                         let _ = std::panic::catch_unwind(
                             std::panic::AssertUnwindSafe(job));
+                        busy[wi].fetch_add(
+                            t0.elapsed().as_nanos() as u64,
+                            Ordering::Relaxed);
                         let (lock, cv) = &*pend;
                         let mut cnt = lock.lock().unwrap();
                         *cnt -= 1;
@@ -61,12 +70,21 @@ impl ThreadPool {
                 }
             }));
         }
-        Self { workers, sender, queue_guard, pending }
+        Self { workers, sender, queue_guard, pending, busy }
     }
 
     /// Number of worker threads.
     pub fn size(&self) -> usize {
         self.workers.len()
+    }
+
+    /// Cumulative nanoseconds each worker has spent inside jobs — the
+    /// load-balance diagnostic behind the shard bench's imbalance
+    /// metric (max/mean busy time across workers).
+    pub fn busy_nanos(&self) -> Vec<u64> {
+        self.busy.iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect()
     }
 
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
@@ -88,24 +106,54 @@ impl ThreadPool {
 
     /// Run a batch of *borrowing* jobs to completion on the pool
     /// (scoped fork/join): submits every job, then blocks until all of
-    /// them (and any other pending work) have finished, so the jobs
-    /// may capture non-`'static` references — e.g. zero-copy
+    /// *this batch* has finished, so the jobs may capture
+    /// non-`'static` references — e.g. zero-copy
     /// [`crate::util::tensor::GramView`]s into calibration state.
+    ///
+    /// Completion is tracked per batch, not pool-wide: concurrent
+    /// `run_scoped` callers on the shared [`global`] pool (several
+    /// runtime-service workers running interp matmuls, say) only wait
+    /// for their own jobs instead of convoying on each other's.
     pub fn run_scoped<'env>(&self,
                             jobs: Vec<Box<dyn FnOnce() + Send + 'env>>) {
+        // Batch-local completion count, decremented by a drop guard
+        // so a panicking job (contained by the worker) still counts
+        // down and the wait below cannot hang.
+        struct BatchGuard(Arc<(Mutex<usize>, std::sync::Condvar)>);
+        impl Drop for BatchGuard {
+            fn drop(&mut self) {
+                let (lock, cv) = &*self.0;
+                let mut cnt = lock.lock().unwrap();
+                *cnt -= 1;
+                if *cnt == 0 {
+                    cv.notify_all();
+                }
+            }
+        }
+        let batch = Arc::new((Mutex::new(jobs.len()),
+                              std::sync::Condvar::new()));
         for job in jobs {
-            // SAFETY: `wait()` below blocks until every job submitted
-            // here has completed (worker panics are contained and
-            // still decrement the pending counter), so no job —
-            // and therefore no borrow it captures — outlives 'env.
+            // SAFETY: the batch wait below blocks until every job
+            // submitted here has completed (worker panics are
+            // contained and the drop guard still counts down), so no
+            // job — and therefore no borrow it captures — outlives
+            // 'env.
             let job: Box<dyn FnOnce() + Send + 'static> = unsafe {
                 std::mem::transmute::<Box<dyn FnOnce() + Send + 'env>,
                                       Box<dyn FnOnce() + Send + 'static>>(
                     job)
             };
-            self.submit(job);
+            let guard = BatchGuard(Arc::clone(&batch));
+            self.submit(move || {
+                let _guard = guard;
+                job();
+            });
         }
-        self.wait();
+        let (lock, cv) = &*batch;
+        let mut cnt = lock.lock().unwrap();
+        while *cnt > 0 {
+            cnt = cv.wait(cnt).unwrap();
+        }
     }
 }
 
@@ -304,6 +352,58 @@ mod tests {
             global().run_scoped(jobs);
             assert_eq!(counter.load(Ordering::Relaxed), 8);
         }
+    }
+
+    #[test]
+    fn run_scoped_waits_per_batch_not_pool_wide() {
+        // A scoped batch must not convoy on another caller's jobs:
+        // with a free worker available, the fast batch returns while
+        // the slow batch is still running (the old pool-wide wait
+        // blocked until *all* pending jobs drained).
+        let pool = Arc::new(ThreadPool::new(3));
+        let p2 = Arc::clone(&pool);
+        let slow = thread::spawn(move || {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                vec![Box::new(|| {
+                    thread::sleep(std::time::Duration::from_millis(300));
+                })];
+            p2.run_scoped(jobs);
+        });
+        // Let the slow job occupy its worker first.
+        thread::sleep(std::time::Duration::from_millis(30));
+        let t0 = std::time::Instant::now();
+        let hit = AtomicU64::new(0);
+        {
+            let hit = &hit;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                vec![Box::new(move || {
+                    hit.fetch_add(1, Ordering::Relaxed);
+                })];
+            pool.run_scoped(jobs);
+        }
+        let fast = t0.elapsed();
+        assert_eq!(hit.load(Ordering::Relaxed), 1);
+        assert!(fast < std::time::Duration::from_millis(150),
+                "fast batch convoyed on the slow one: {fast:?}");
+        slow.join().unwrap();
+    }
+
+    #[test]
+    fn busy_nanos_accumulate_per_worker() {
+        let pool = ThreadPool::new(2);
+        assert_eq!(pool.busy_nanos(), vec![0, 0]);
+        for _ in 0..8 {
+            pool.submit(|| {
+                thread::sleep(std::time::Duration::from_millis(2));
+            });
+        }
+        pool.wait();
+        let busy = pool.busy_nanos();
+        assert_eq!(busy.len(), 2);
+        // 8 x 2ms across 2 workers: total at least ~8ms even with
+        // scheduling slop.
+        assert!(busy.iter().sum::<u64>() >= 8_000_000,
+                "busy nanos too low: {busy:?}");
     }
 
     #[test]

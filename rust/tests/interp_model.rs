@@ -28,6 +28,35 @@ fn token_batch(meta: &sparseswaps::runtime::ModelMeta, seed: u64)
 }
 
 #[test]
+fn batch_row_parallelism_is_bit_identical() {
+    // The interp forward/backward fan batch rows across the global
+    // thread pool; every output row is computed by the same scalar
+    // code on exactly one worker, so losses AND gradients must be
+    // bit-identical to the serial path.
+    let meta = meta_for(32, 16, 2, 32, 2, 8, 4);
+    let store = ParamStore::init(&meta, 9);
+    let (toks, tgts) = token_batch(&meta, 17);
+    let refs: Vec<&TensorData> = store.tensors.iter().collect();
+    let (l1, g1) = interp_model::loss_and_grads_threads(
+        &meta, &refs, &toks, &tgts, 1).unwrap();
+    for threads in [2usize, 4, 7] {
+        let (lt, gt) = interp_model::loss_and_grads_threads(
+            &meta, &refs, &toks, &tgts, threads).unwrap();
+        assert_eq!(l1.to_bits(), lt.to_bits(),
+                   "loss diverged at {threads} threads");
+        assert_eq!(g1.len(), gt.len());
+        for (pi, (a, b)) in g1.iter().zip(&gt).enumerate() {
+            assert_eq!(a.len(), b.len());
+            for (j, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "grad[{pi}][{j}] diverged at {threads} \
+                            threads");
+            }
+        }
+    }
+}
+
+#[test]
 fn train_step_gradients_match_finite_differences() {
     // 2-block config, small enough that 2 forwards per checked
     // coordinate stay cheap: vocab 32, dm 16 (head dim 8), dff 32,

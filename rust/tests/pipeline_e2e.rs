@@ -286,6 +286,48 @@ fn pooled_offload_masks_match_single_device() {
 }
 
 #[test]
+fn sharded_prune_matches_whole_layer_schedule() {
+    // The shard-dispatch acceptance property at pipeline level:
+    // masks AND checkpoint snapshots must be bit-identical between
+    // whole-layer shards and a deliberately awkward shard size, on
+    // both the offload and native engines.
+    let h = harness();
+    let (store, ds) = trained_tiny(&h.pool);
+    for refiner in [h.refiner(), Refiner::SparseSwapsNative] {
+        let base = PruneConfig {
+            pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
+            refiner,
+            t_max: 8,
+            calib_batches: 2,
+            sequential: false,
+            checkpoints: vec![2, 8],
+            ..Default::default()
+        };
+        let whole = PruneConfig {
+            shard_rows: usize::MAX,
+            ..base.clone()
+        };
+        let sharded = PruneConfig { shard_rows: 3, ..base };
+        let (m1, r1) = prune(&h.pool, &store, &ds, &whole).unwrap();
+        let (m2, r2) = prune(&h.pool, &store, &ds, &sharded).unwrap();
+        for (li, (a, b)) in m1.masks.iter().zip(&m2.masks).enumerate()
+        {
+            assert_eq!(a.data, b.data,
+                       "layer {li}: sharded mask diverged from the \
+                        whole-layer schedule");
+        }
+        assert_eq!(r1.snapshots.len(), r2.snapshots.len());
+        for (cp, snap) in &r1.snapshots {
+            let other = &r2.snapshots[cp];
+            for (a, b) in snap.masks.iter().zip(&other.masks) {
+                assert_eq!(a.data, b.data, "checkpoint {cp} snapshot \
+                                            diverged");
+            }
+        }
+    }
+}
+
+#[test]
 fn zero_shot_scoring_runs() {
     let h = harness();
     let (store, ds) = trained_tiny(&h.pool);

@@ -81,7 +81,7 @@ fn cache_hits_generation_bumps_and_explicit_invalidation() {
     let manifest = swap_manifest(d, chunk);
     let rt = interp_runtime(&manifest, RuntimeOptions {
         device_mem_budget: 0, // unlimited
-        device: 0,
+        ..RuntimeOptions::default()
     });
     let name = format!("layer_loss_d{d}");
     let w = TensorData::from_matrix(
@@ -133,7 +133,7 @@ fn cache_lru_eviction_respects_device_mem_budget() {
     // Budget fits one gram buffer but not two.
     let rt = interp_runtime(&manifest, RuntimeOptions {
         device_mem_budget: gram_bytes + gram_bytes / 2,
-        device: 0,
+        ..RuntimeOptions::default()
     });
     let name = format!("layer_loss_d{d}");
     let w = TensorData::from_matrix(
@@ -189,6 +189,30 @@ fn execute_cached_validates_signatures() {
                                             data: vec![0.0; 64] }),
     ]);
     assert!(dup.is_err());
+}
+
+#[test]
+fn pool_workers_share_one_compile_cache() {
+    let manifest = swap_manifest(8, 4);
+    let pool = interp_pool(&manifest, 3, RuntimeOptions::default());
+    for i in 0..3 {
+        pool.runtime(i).preload("layer_loss_d8").unwrap();
+    }
+    let total = pool.stats_total();
+    assert_eq!(total.compiles, 1,
+               "each artifact must compile once per pool");
+    assert_eq!(total.compiles_shared, 2,
+               "late workers must import the shared executable");
+    // Re-preloading on any worker is a local no-op (neither a compile
+    // nor another shared import).
+    pool.runtime(1).preload("layer_loss_d8").unwrap();
+    let total = pool.stats_total();
+    assert_eq!((total.compiles, total.compiles_shared), (1, 2));
+    // A standalone runtime (no shared cache) keeps compiling locally.
+    let rt = interp_runtime(&manifest, RuntimeOptions::default());
+    rt.preload("layer_loss_d8").unwrap();
+    let s = rt.stats();
+    assert_eq!((s.compiles, s.compiles_shared), (1, 0));
 }
 
 #[test]

@@ -1,0 +1,300 @@
+//! Shard-boundary semantics: masks AND checkpoint snapshots must be
+//! bit-identical to the whole-layer schedule for every shard size,
+//! engine, and worker/device count — the scheduling counterpart of
+//! the paper's row-decoupling assumption, and the invariant that lets
+//! `coordinator::scheduler::refine_block` split a wide layer across
+//! workers.
+//!
+//! Shard sizes swept: 1 (every row its own unit), a prime (7, so the
+//! tail is ragged almost everywhere), 0 (adaptive), and whole-layer;
+//! schedulers: host `ThreadPool`s at 1/3 workers for the native
+//! engine, interp `RuntimePool`s at 1/2/4 devices for the offload
+//! engine.
+
+use std::collections::BTreeMap;
+
+use sparseswaps::coordinator::scheduler::{
+    refine_block, BlockSchedule, LayerWork,
+};
+use sparseswaps::coordinator::Refiner;
+use sparseswaps::pruning::dsnot::FeatureStats;
+use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
+use sparseswaps::pruning::mask::{mask_from_scores, validate, Pattern};
+use sparseswaps::pruning::saliency;
+use sparseswaps::pruning::sparseswaps::NativeEngine;
+use sparseswaps::runtime::testutil::{interp_pool, swap_manifest};
+use sparseswaps::runtime::RuntimeOptions;
+use sparseswaps::util::proptest::{check, ensure};
+use sparseswaps::util::prng::Rng;
+use sparseswaps::util::tensor::Matrix;
+use sparseswaps::util::threadpool::ThreadPool;
+
+fn layer(rng: &mut Rng, rows: usize, d: usize, pattern: Pattern)
+    -> (Matrix, Matrix, Matrix) {
+    let x = Matrix::from_fn(2 * d, d, |_, _| rng.gaussian_f32());
+    let mut g = Matrix::zeros(d, d);
+    g.gram_accumulate(&x);
+    let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+    let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()), pattern);
+    (w, g, warm)
+}
+
+fn plan(t_max: usize, checkpoints: &[usize], shard_rows: usize)
+    -> BlockSchedule {
+    BlockSchedule {
+        t_max,
+        threads_per_shard: 1,
+        checkpoints: checkpoints.to_vec(),
+        shard_rows,
+        serial: false,
+    }
+}
+
+fn work<'a>(li: usize, w: &Matrix, g: &'a Matrix, warm: &Matrix,
+            pattern: Pattern, stats: Option<FeatureStats>,
+            align: usize) -> LayerWork<'a> {
+    LayerWork {
+        li,
+        label: format!("layer{li}"),
+        w: w.clone(),
+        g: g.as_gram(),
+        stats,
+        pattern,
+        warm: warm.clone(),
+        shard_align: align,
+        gram_key: sparseswaps::coordinator::swaploop::
+            next_refinement_id(),
+    }
+}
+
+fn assert_snapshots_equal(
+    want: &BTreeMap<usize, Matrix>, got: &BTreeMap<usize, Matrix>,
+    what: &str,
+) -> Result<(), String> {
+    ensure(want.len() == got.len(),
+           || format!("{what}: {} vs {} snapshots", got.len(),
+                      want.len()))?;
+    for (cp, snap) in want {
+        let g = got.get(cp)
+            .ok_or_else(|| format!("{what}: checkpoint {cp} missing"))?;
+        ensure(g.data == snap.data,
+               || format!("{what}: checkpoint {cp} snapshot diverged"))?;
+    }
+    Ok(())
+}
+
+#[test]
+fn native_shard_sweep_masks_and_snapshots_bit_identical() {
+    check("native shard sweep", 20, |gen| {
+        let d = *gen.choose(&[16usize, 24, 32]);
+        let rows = gen.usize_in(4, 30);
+        let pattern = if d % 4 == 0 && gen.rng.bool(0.4) {
+            Pattern::Nm { n: 2, m: 4 }
+        } else {
+            Pattern::PerRow { keep: gen.usize_in(1, d - 1) }
+        };
+        let t_max = gen.usize_in(2, 20);
+        let cps =
+            vec![1, gen.usize_in(1, t_max), t_max, t_max + 5];
+        let (w, g, warm) = layer(&mut gen.rng, rows, d, pattern);
+
+        // Whole-layer reference straight through the engine.
+        let ctx = LayerContext {
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+            threads: 1,
+        };
+        let mut ref_mask = warm.clone();
+        let ref_out = NativeEngine::default()
+            .refine(&ctx, &mut ref_mask, &cps)
+            .map_err(|e| e.to_string())?;
+
+        for shard_rows in [1usize, 7, 0, rows] {
+            for workers in [1usize, 3] {
+                let tp = ThreadPool::new(workers);
+                let works = vec![work(0, &w, &g, &warm, pattern, None,
+                                      1)];
+                let res = refine_block(
+                    &tp, &Refiner::SparseSwapsNative, &works,
+                    &plan(t_max, &cps, shard_rows))
+                    .map_err(|e| e.to_string())?;
+                let tag = format!(
+                    "shard_rows={shard_rows} workers={workers} \
+                     pattern={pattern:?} t_max={t_max}");
+                ensure(res.len() == 1, || format!("{tag}: results"))?;
+                validate(&res[0].mask, pattern)?;
+                ensure(res[0].mask.data == ref_mask.data,
+                       || format!("{tag}: mask diverged"))?;
+                ensure(res[0].outcome.layer.total_swaps()
+                       == ref_out.layer.total_swaps(),
+                       || format!("{tag}: swap counts diverged"))?;
+                assert_snapshots_equal(&ref_out.snapshots,
+                                       &res[0].outcome.snapshots,
+                                       &tag)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn offload_shard_sweep_masks_and_snapshots_bit_identical() {
+    let (rows, d, chunk) = (19usize, 32usize, 8usize);
+    let manifest = swap_manifest(d, chunk);
+    let refiner = Refiner::SparseSwapsOffload {
+        impl_name: "interp".into(),
+    };
+    let mut rng = Rng::new(31);
+    for pattern in [Pattern::PerRow { keep: 13 },
+                    Pattern::Nm { n: 2, m: 4 }] {
+        let (w, g, warm) = layer(&mut rng, rows, d, pattern);
+        let t_max = 14;
+        let cps = [2usize, 9, 14];
+
+        // Whole-layer reference on a single-device pool.
+        let serial = interp_pool(&manifest, 1, RuntimeOptions::default());
+        let ctx = LayerContext {
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+            threads: 1,
+        };
+        let mut ref_mask = warm.clone();
+        let ref_out = sparseswaps::coordinator::OffloadEngine::new(
+            serial.primary(), "interp")
+            .refine(&ctx, &mut ref_mask, &cps)
+            .unwrap();
+
+        for devices in [1usize, 2, 4] {
+            let pool = interp_pool(&manifest, devices,
+                                   RuntimeOptions::default());
+            for shard_rows in [1usize, 7, 0, rows] {
+                let works = vec![work(0, &w, &g, &warm, pattern, None,
+                                      chunk)];
+                let res = refine_block(&pool, &refiner, &works,
+                                       &plan(t_max, &cps, shard_rows))
+                    .unwrap();
+                let tag = format!(
+                    "devices={devices} shard_rows={shard_rows} \
+                     pattern={pattern:?}");
+                validate(&res[0].mask, pattern).unwrap();
+                assert_eq!(res[0].mask.data, ref_mask.data,
+                           "{tag}: mask diverged");
+                assert_eq!(res[0].outcome.layer.total_swaps(),
+                           ref_out.layer.total_swaps(), "{tag}");
+                assert_snapshots_equal(&ref_out.snapshots,
+                                       &res[0].outcome.snapshots, &tag)
+                    .unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_tail_shard_plan_covers_every_row() {
+    // rows % shard_size != 0: the tail shard is short, coverage must
+    // still be exact and results identical.
+    let (rows, d) = (13usize, 16usize);
+    let pattern = Pattern::PerRow { keep: 7 };
+    let mut rng = Rng::new(7);
+    let (w, g, warm) = layer(&mut rng, rows, d, pattern);
+    let ctx = LayerContext {
+        w: &w, g: g.as_gram(), stats: None, pattern, t_max: 10,
+        threads: 1,
+    };
+    let mut ref_mask = warm.clone();
+    NativeEngine::default().refine(&ctx, &mut ref_mask, &[]).unwrap();
+
+    let tp = ThreadPool::new(2);
+    let works = vec![work(0, &w, &g, &warm, pattern, None, 1)];
+    let res = refine_block(&tp, &Refiner::SparseSwapsNative, &works,
+                           &plan(10, &[], 5))
+        .unwrap();
+    // 13 rows at 5 per shard: 5 + 5 + 3.
+    assert_eq!(res[0].shards, 3);
+    assert_eq!(res[0].outcome.layer.rows.len(), rows);
+    assert_eq!(res[0].mask.data, ref_mask.data);
+}
+
+#[test]
+fn skewed_block_adaptive_sharding_matches_per_layer_reference() {
+    // One 4x-wide layer among narrow ones (the MLP down-projection
+    // shape): adaptive sharding must split it without changing any
+    // layer's mask.
+    let d = 16usize;
+    let pattern = Pattern::PerRow { keep: 6 };
+    let mut rng = Rng::new(11);
+    let row_counts = [24usize, 6, 6, 6];
+    let layers: Vec<(Matrix, Matrix, Matrix)> = row_counts.iter()
+        .map(|&rows| layer(&mut rng, rows, d, pattern))
+        .collect();
+    let mut refs = Vec::new();
+    for (w, g, warm) in &layers {
+        let ctx = LayerContext {
+            w, g: g.as_gram(), stats: None, pattern, t_max: 12,
+            threads: 1,
+        };
+        let mut m = warm.clone();
+        NativeEngine::default().refine(&ctx, &mut m, &[]).unwrap();
+        refs.push(m);
+    }
+    let tp = ThreadPool::new(4);
+    let works: Vec<LayerWork> = layers.iter().enumerate()
+        .map(|(li, (w, g, warm))| work(li, w, g, warm, pattern, None,
+                                       1))
+        .collect();
+    let res = refine_block(&tp, &Refiner::SparseSwapsNative, &works,
+                           &plan(12, &[], 0))
+        .unwrap();
+    // Adaptive target = 42 / (4 x 4) -> 3 rows: the wide layer splits.
+    assert!(res[0].shards >= 4,
+            "wide layer must split under adaptive sizing (got {})",
+            res[0].shards);
+    for (li, r) in res.iter().enumerate() {
+        assert_eq!(r.li, li);
+        assert_eq!(r.mask.data, refs[li].data, "layer {li}");
+    }
+}
+
+#[test]
+fn dsnot_and_noop_ride_the_same_dispatch_path() {
+    // Engines without iteration checkpoints go through the identical
+    // shard plan; sharding must not change their masks either.
+    let (rows, d) = (11usize, 24usize);
+    let pattern = Pattern::PerRow { keep: 10 };
+    let mut rng = Rng::new(3);
+    let x = Matrix::from_fn(64, d,
+                            |_, j| (j as f32 * 0.1 - 1.0)
+                                + 0.3 * rng.gaussian_f32());
+    let mut g = Matrix::zeros(d, d);
+    g.gram_accumulate(&x);
+    let mut sums = vec![0.0f32; d];
+    for t in 0..x.rows {
+        for j in 0..d {
+            sums[j] += x.at(t, j);
+        }
+    }
+    let stats = FeatureStats::from_gram(&g.diag(), &sums, x.rows);
+    let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+    let warm = mask_from_scores(&saliency::magnitude(&w), pattern);
+
+    for refiner in [Refiner::Dsnot, Refiner::None] {
+        let stats_for = |r: &Refiner| match r {
+            Refiner::Dsnot => Some(stats.clone()),
+            _ => None,
+        };
+        let tp = ThreadPool::new(3);
+        let whole = refine_block(
+            &tp, &refiner,
+            &[work(0, &w, &g, &warm, pattern, stats_for(&refiner),
+                   1)],
+            &plan(10, &[], rows))
+            .unwrap();
+        let sharded = refine_block(
+            &tp, &refiner,
+            &[work(0, &w, &g, &warm, pattern, stats_for(&refiner),
+                   1)],
+            &plan(10, &[], 4))
+            .unwrap();
+        assert_eq!(whole[0].mask.data, sharded[0].mask.data,
+                   "{refiner:?}");
+        validate(&sharded[0].mask, pattern).unwrap();
+    }
+}
