@@ -24,7 +24,15 @@
 //! worker load-imbalance (max/mean busy time) to the "shards" section
 //! of `reports/bench_kernels.json`.
 //!
-//! Part 4 (needs artifacts): the fused-XLA and Pallas offload engines
+//! Part 4 (artifact-free, always runs): the raw-speed wave-2 sweep —
+//! shared gmax skip-bound tables vs per-shard recompute (per kernel
+//! arm), key-only device-cache probes through the block scheduler,
+//! resident trainer state upload bytes vs the full-set baseline, and
+//! the f32 pair-scan arm against its f64 oracle.  Gates on
+//! bit-identical masks / bounded f32 drift and writes the "wave2"
+//! section of `reports/bench_kernels.json`.
+//!
+//! Part 5 (needs artifacts): the fused-XLA and Pallas offload engines
 //! on their own artifact-width layer.
 mod common;
 
@@ -35,15 +43,22 @@ use sparseswaps::coordinator::scheduler::{
     refine_block, BlockSchedule, LayerWork,
 };
 use sparseswaps::coordinator::{
-    refine_layer_offload, OffloadConfig, OffloadEngine, Refiner,
+    refine_layer_offload, train, OffloadConfig, OffloadEngine, Refiner,
+    TrainConfig,
 };
+use sparseswaps::data::{Dataset, Split};
+use sparseswaps::model::testutil::tiny_meta;
+use sparseswaps::model::ParamStore;
 use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
 use sparseswaps::pruning::saliency;
 use sparseswaps::pruning::sparseswaps::{
-    refine_layer_rescan, LayerOutcome, NativeEngine, SwapConfig,
+    gmax_table, refine_layer_rescan, LayerOutcome, NativeEngine,
+    SwapConfig,
 };
-use sparseswaps::runtime::testutil::{interp_pool, swap_manifest};
+use sparseswaps::runtime::testutil::{
+    interp_pool, interp_runtime, model_manifest, swap_manifest,
+};
 use sparseswaps::runtime::{Runtime, RuntimeOptions};
 use sparseswaps::util::benchlib::{merge_json_section, Table};
 use sparseswaps::util::jsonlite::Json;
@@ -128,6 +143,7 @@ fn native_section() {
             let ctx = LayerContext {
                 w: &w, g: g.as_gram(), stats: None, pattern, t_max,
                 threads,
+                gmax: None,
             };
             let mut mask = warm.clone();
             let t0 = Instant::now();
@@ -258,6 +274,7 @@ fn pool_section() {
                     let ctx = LayerContext {
                         w, g: g.as_gram(), stats: None, pattern,
                         t_max, threads: 1,
+                        gmax: None,
                     };
                     let mut mask = warm.clone();
                     OffloadEngine::new(rt, "interp")
@@ -456,10 +473,310 @@ fn shards_section() {
               reports/bench_kernels.json (granularity parity OK)");
 }
 
+/// Raw-speed wave-2 sweep (artifact-free): one subsection per wave-2
+/// optimisation, each gated on bit-identical masks (or bounded f32
+/// drift) with a non-zero exit on failure, all merged into the
+/// "wave2" section of `reports/bench_kernels.json` so the CI bench
+/// smoke job tracks the numbers per PR.
+fn wave2_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+
+    // -- gmax: shared skip-bound table vs per-shard recompute --------
+    let (d, rows, t_max) =
+        if quick { (64usize, 32usize, 8usize) } else { (384, 96, 12) };
+    let shard_rows = (rows / 16).max(1);
+    let mut rng = Rng::new(29);
+    let x = Matrix::from_fn(2 * d, d, |_, _| rng.gaussian_f32());
+    let mut g = Matrix::zeros(d, d);
+    g.gram_accumulate_par(&x, 4);
+    let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+    let pattern = Pattern::PerRow { keep: d * 2 / 5 };
+    let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()), pattern);
+
+    // Manual shard walk (the scheduler adds queueing noise; this
+    // isolates the per-shard gmax recompute cost itself).
+    let run = |arm: kernels::Arm, gmax: Option<&[f64]>| {
+        let engine = NativeEngine { eps: 0.0, arm: Some(arm) };
+        let mut mask = warm.clone();
+        let t0 = Instant::now();
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let r1 = (r0 + shard_rows).min(rows);
+            let ctx = LayerContext {
+                w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+                threads: 1, gmax,
+            };
+            let mut shard = Matrix::zeros(r1 - r0, d);
+            for r in r0..r1 {
+                shard.row_mut(r - r0).copy_from_slice(mask.row(r));
+            }
+            engine.refine_rows(&ctx, r0..r1, &mut shard, &[])
+                .expect("native refine_rows is infallible");
+            for r in r0..r1 {
+                mask.row_mut(r).copy_from_slice(shard.row(r - r0));
+            }
+            r0 = r1;
+        }
+        (mask, t0.elapsed().as_secs_f64().max(1e-9))
+    };
+
+    let tt0 = Instant::now();
+    let table_vals = gmax_table(g.as_gram(), pattern.nm_block(), 1);
+    let table_secs = tt0.elapsed().as_secs_f64();
+
+    let mut table = Table::new(
+        format!("Wave 2 — shared gmax table, {shard_rows}-row shards \
+                 ({rows}x{d}, T_max={t_max})"),
+        &["arm", "per-shard rows/s", "shared rows/s", "speedup"]);
+    let mut gmax_json: Vec<Json> = Vec::new();
+    for arm in kernels::arms() {
+        let (mask_local, secs_local) = run(arm, None);
+        let (mask_shared, secs_shared) = run(arm, Some(&table_vals));
+        if mask_local.data != mask_shared.data {
+            eprintln!("[ablation_engine] PARITY FAILURE: wave2 \
+                       shared-gmax mask diverged from per-shard \
+                       recompute on arm {}", arm.name());
+            std::process::exit(1);
+        }
+        // Charge the one-off table build to the shared timing so the
+        // speedup is end-to-end honest.
+        let shared_total = (secs_shared + table_secs).max(1e-9);
+        let local_rps = rows as f64 / secs_local;
+        let shared_rps = rows as f64 / shared_total;
+        let speedup = secs_local / shared_total;
+        table.row(vec![
+            arm.name().to_string(),
+            format!("{local_rps:.0}"),
+            format!("{shared_rps:.0}"),
+            format!("{speedup:.2}x"),
+        ]);
+        gmax_json.push(Json::obj(vec![
+            ("arm", Json::str(arm.name())),
+            ("per_shard_rows_per_s", Json::num(local_rps)),
+            ("shared_rows_per_s", Json::num(shared_rps)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    table.print();
+
+    // -- probes: key-only G lookups through the block scheduler ------
+    let (pd, chunk, prows, players, pt_max, devices) =
+        if quick { (64usize, 32usize, 256usize, 2usize, 6usize, 2usize) }
+        else { (128, 32, 512, 2, 10, 2) };
+    let manifest = swap_manifest(pd, chunk);
+    let ppattern = Pattern::PerRow { keep: pd * 2 / 5 };
+    let pwork: Vec<(Matrix, Matrix, Matrix)> = (0..players).map(|_| {
+        let x = Matrix::from_fn(2 * pd, pd, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(pd, pd);
+        g.gram_accumulate_par(&x, 4);
+        let w = Matrix::from_fn(prows, pd, |_, _| rng.gaussian_f32());
+        let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    ppattern);
+        (w, g, warm)
+    }).collect();
+    let make_works = || {
+        pwork.iter().enumerate()
+            .map(|(li, (w, g, warm))| LayerWork {
+                li,
+                label: format!("layer{li}"),
+                w: w.clone(),
+                g: g.as_gram(),
+                stats: None,
+                pattern: ppattern,
+                warm: warm.clone(),
+                shard_align: chunk,
+                gram_key: sparseswaps::coordinator::swaploop::
+                    next_refinement_id(),
+            })
+            .collect::<Vec<LayerWork>>()
+    };
+    let plan = BlockSchedule {
+        t_max: pt_max,
+        threads_per_shard: 1,
+        checkpoints: Vec::new(),
+        shard_rows: chunk,
+        serial: false,
+    };
+    let pool = interp_pool(&manifest, devices, RuntimeOptions::default());
+    let t0 = Instant::now();
+    let res = refine_block(
+        &pool,
+        &Refiner::SparseSwapsOffload { impl_name: "interp".into() },
+        &make_works(), &plan)
+        .expect("interp offload block refinement");
+    let psecs = t0.elapsed().as_secs_f64().max(1e-9);
+    let tp = ThreadPool::new(devices);
+    let nres = refine_block(&tp, &Refiner::SparseSwapsNative,
+                            &make_works(), &plan)
+        .expect("native block refinement");
+    for (li, (a, b)) in nres.iter().zip(&res).enumerate() {
+        if a.mask.data != b.mask.data {
+            eprintln!("[ablation_engine] PARITY FAILURE: wave2 \
+                       offload[interp] layer {li} mask diverged from \
+                       the native engine");
+            std::process::exit(1);
+        }
+    }
+    let pstats = pool.stats_total();
+    let n_shards: usize = res.iter().map(|r| r.shards).sum();
+    let g_host_bytes = pstats.probe_misses * (pd * pd * 4) as u64;
+    println!("wave2 probes: {}/{} G probes resident ({:.0}%), \
+              {} host-copy bytes over {} shards",
+             pstats.probe_hits,
+             pstats.probe_hits + pstats.probe_misses,
+             100.0 * pstats.probe_hit_rate(),
+             g_host_bytes, n_shards);
+    let probes_json = Json::obj(vec![
+        ("d", Json::num(pd as f64)),
+        ("layers", Json::num(players as f64)),
+        ("rows", Json::num(prows as f64)),
+        ("devices", Json::num(devices as f64)),
+        ("shards", Json::num(n_shards as f64)),
+        ("probe_hits", Json::num(pstats.probe_hits as f64)),
+        ("probe_misses", Json::num(pstats.probe_misses as f64)),
+        ("probe_hit_rate", Json::num(pstats.probe_hit_rate())),
+        ("g_host_bytes", Json::num(g_host_bytes as f64)),
+        ("g_host_bytes_per_shard",
+         Json::num(g_host_bytes as f64 / n_shards.max(1) as f64)),
+        ("rows_per_s",
+         Json::num((players * prows) as f64 / psecs)),
+    ]);
+
+    // -- trainer: resident state vs full-set re-upload ---------------
+    let meta = tiny_meta();
+    let tmanifest = model_manifest(&meta);
+    let rt = interp_runtime(&tmanifest, RuntimeOptions::default());
+    let ds = Dataset::build(&meta, 42);
+    let mut store = ParamStore::init(&meta, 3);
+    let tcfg = TrainConfig {
+        steps: if quick { 4 } else { 12 },
+        lr: 1e-3,
+        n_batches: 2,
+        log_every: 1_000_000,
+    };
+    let ps_bytes: u64 = store.tensors.iter()
+        .map(|t| t.byte_size() as u64).sum();
+    let batch_pairs = ds.batches(&meta, Split::Train, tcfg.n_batches);
+    let pair_bytes = (batch_pairs[0].0.byte_size()
+                      + batch_pairs[0].1.byte_size()) as u64;
+    let all_batch_bytes: u64 = batch_pairs.iter()
+        .map(|(t, g)| (t.byte_size() + g.byte_size()) as u64)
+        .sum();
+    let steps = tcfg.steps as u64;
+    let rep = train(&rt, &mut store, &ds, &tcfg).expect("interp train");
+    let measured = rt.stats().upload_bytes;
+    // Full-set baseline: params/m/v/step AND batch/lr shipped every
+    // step.  Returned-set model: batches and lr go up once; only the
+    // tensors the step returns (params/m/v/step) re-upload.
+    let naive = steps * (3 * ps_bytes + 4 + pair_bytes + 4);
+    let returned_set = steps * (3 * ps_bytes + 4) + all_batch_bytes + 4;
+    if measured >= naive {
+        eprintln!("[ablation_engine] PERF GATE FAILURE: wave2 trainer \
+                   uploaded {measured} B over {steps} steps, not below \
+                   the full-set baseline {naive} B");
+        std::process::exit(1);
+    }
+    println!("wave2 trainer uploads: {measured} B measured vs {naive} B \
+              full-set baseline ({returned_set} B returned-set model), \
+              final loss {:.3}", rep.final_loss);
+    let trainer_json = Json::obj(vec![
+        ("steps", Json::num(steps as f64)),
+        ("upload_bytes", Json::num(measured as f64)),
+        ("full_set_bytes", Json::num(naive as f64)),
+        ("returned_set_bytes", Json::num(returned_set as f64)),
+        ("final_loss", Json::num(rep.final_loss)),
+    ]);
+
+    // -- pair_scan_f32: per-arm throughput vs the f64 oracle ---------
+    let n = if quick { 4096usize } else { 65_536 };
+    let iters = if quick { 50u32 } else { 400 };
+    let b32: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+    let wp32: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+    let gp32: Vec<f32> =
+        (0..n).map(|_| 1.0 + rng.gaussian_f32().abs()).collect();
+    let b64: Vec<f64> = b32.iter().map(|&v| v as f64).collect();
+    let wp64: Vec<f64> = wp32.iter().map(|&v| v as f64).collect();
+    let gp64: Vec<f64> = gp32.iter().map(|&v| v as f64).collect();
+    let (au, wu2) = (0.3f32, -1.1f32);
+    let oracle = kernels::pair_scan_arm(
+        kernels::Arm::Scalar, au as f64, wu2 as f64, &b64, &wp64,
+        &gp64, f64::INFINITY)
+        .expect("non-empty scan");
+    let want32 = kernels::pair_scan_f32_arm(
+        kernels::Arm::Scalar, au, wu2, &b32, &wp32, &gp32,
+        f32::INFINITY)
+        .expect("non-empty scan");
+    let mut scan_json: Vec<Json> = Vec::new();
+    for arm in kernels::arms() {
+        let got = kernels::pair_scan_f32_arm(
+            arm, au, wu2, &b32, &wp32, &gp32, f32::INFINITY)
+            .expect("non-empty scan");
+        if got.0.to_bits() != want32.0.to_bits() || got.1 != want32.1 {
+            eprintln!("[ablation_engine] PARITY FAILURE: \
+                       pair_scan_f32[{}] diverged from the scalar f32 \
+                       arm", arm.name());
+            std::process::exit(1);
+        }
+        if (got.0 as f64 - oracle.0).abs()
+            > 1e-3 * oracle.0.abs().max(1.0) {
+            eprintln!("[ablation_engine] PARITY FAILURE: \
+                       pair_scan_f32[{}] drifted past 1e-3 of the f64 \
+                       oracle", arm.name());
+            std::process::exit(1);
+        }
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(kernels::pair_scan_f32_arm(
+                arm, au, wu2, &b32, &wp32, &gp32, f32::INFINITY));
+        }
+        let f32_secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(kernels::pair_scan_arm(
+                arm, au as f64, wu2 as f64, &b64, &wp64, &gp64,
+                f64::INFINITY));
+        }
+        let f64_secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let total = n as f64 * iters as f64;
+        scan_json.push(Json::obj(vec![
+            ("arm", Json::str(arm.name())),
+            ("f32_elems_per_s", Json::num(total / f32_secs)),
+            ("f64_elems_per_s", Json::num(total / f64_secs)),
+            ("f32_speedup", Json::num(f64_secs / f32_secs)),
+        ]));
+    }
+
+    let section = Json::obj(vec![
+        ("gmax", Json::obj(vec![
+            ("d", Json::num(d as f64)),
+            ("rows", Json::num(rows as f64)),
+            ("shard_rows", Json::num(shard_rows as f64)),
+            ("t_max", Json::num(t_max as f64)),
+            ("table_secs", Json::num(table_secs)),
+            ("arms", Json::Arr(gmax_json)),
+        ])),
+        ("probes", probes_json),
+        ("trainer", trainer_json),
+        ("pair_scan_f32", Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("arms", Json::Arr(scan_json)),
+        ])),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "wave2", section) {
+        eprintln!("[ablation_engine] FAILED writing bench_kernels: {e}");
+        std::process::exit(1);
+    }
+    println!("[ablation_engine] wave2 section written to \
+              reports/bench_kernels.json (gmax/probe/trainer/f32 \
+              parity OK)");
+}
+
 fn main() {
     native_section();
     pool_section();
     shards_section();
+    wave2_section();
 
     // Offload engines (need AOT artifacts; their own layer at an
     // artifact width).

@@ -36,7 +36,7 @@ use crate::pruning::engine::{
     LayerContext, RefineEngine, RefineOutcome, SnapshotAssembler,
 };
 use crate::pruning::mask::Pattern;
-use crate::pruning::sparseswaps::LayerOutcome;
+use crate::pruning::sparseswaps::{gmax_table, LayerOutcome};
 use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeError};
 use crate::util::tensor::{GramView, Matrix};
@@ -230,7 +230,7 @@ struct ShardDone {
 }
 
 fn run_shard(refiner: &Refiner, wc: WorkerCtx<'_>, work: &LayerWork<'_>,
-             shard: &Shard, plan: &BlockSchedule)
+             gmax: Option<&[f64]>, shard: &Shard, plan: &BlockSchedule)
     -> Result<ShardDone, String> {
     let engine = refiner.shard_engine(&wc, work.gram_key)
         .map_err(|e| format!("{}: {e}", work.label))?;
@@ -241,6 +241,7 @@ fn run_shard(refiner: &Refiner, wc: WorkerCtx<'_>, work: &LayerWork<'_>,
         pattern: work.pattern,
         t_max: plan.t_max,
         threads: plan.threads_per_shard,
+        gmax,
     };
     let range = shard.rows.clone();
     let mut mask = Matrix::zeros(range.len(), work.w.cols);
@@ -286,6 +287,20 @@ pub fn refine_block(
         shards.extend(split_rows(wi, work.w.rows, size));
     }
     let n_shards = shards.len();
+    // Shared skip-bound tables, one per layer: `gmax` depends only on
+    // (G, pattern), so computing it here and handing every shard a
+    // borrowed slice turns the native engine's O(d²) per-shard scan
+    // into a per-layer one (the jobs borrow the tables for 'env just
+    // like `works`).  Only the native engine consumes it; other
+    // refiners skip the cost entirely.
+    let gmax_tables: Vec<Option<Vec<f64>>> = works.iter()
+        .map(|work| {
+            matches!(refiner, Refiner::SparseSwapsNative).then(|| {
+                gmax_table(work.g, work.pattern.nm_block(),
+                           sched.workers())
+            })
+        })
+        .collect();
     let (tx, rx) = mpsc::channel::<Result<ShardDone, String>>();
     let mut jobs: Vec<ShardJob<'_>> = Vec::with_capacity(n_shards);
     for shard in shards {
@@ -293,8 +308,9 @@ pub fn refine_block(
         // Shared borrows for 'env (like `works`): no per-shard clone
         // of the refiner or the checkpoint list.
         let work = &works[shard.layer];
+        let gmax = gmax_tables[shard.layer].as_deref();
         jobs.push(Box::new(move |wc| {
-            let res = run_shard(refiner, wc, work, &shard, plan);
+            let res = run_shard(refiner, wc, work, gmax, &shard, plan);
             let _ = tx.send(res);
         }));
     }

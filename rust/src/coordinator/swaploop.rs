@@ -15,11 +15,14 @@
 //!     compacted out of the active set, so late iterations run on
 //!     ever-smaller chunks;
 //!   * the Gram tensor and the packed W chunks go through the
-//!     service's persistent device-buffer cache (`ExecInput::Cached`,
-//!     keyed by a per-refinement layer id): G uploads once per layer,
-//!     W chunks once per active-set generation, and only the mask
-//!     chunks — which change every call — travel per call.  This is
-//!     the transport analogue of the host-side `GramView`;
+//!     service's persistent device-buffer cache: G is addressed by a
+//!     key-only probe first (`ExecInput::CachedRef` — the d² host
+//!     copy is not even *built* while the buffer is resident) and
+//!     uploaded at most once per (layer, device) via the
+//!     `NotResident` retry; W chunks upload once per active-set
+//!     generation, and only the mask chunks — which change every
+//!     call — travel per call.  This is the transport analogue of
+//!     the host-side `GramView`;
 //!   * checkpoint segmentation (Table 3's "perplexity vs number of
 //!     1-swap iterations") is delegated to the shared
 //!     [`drive_segments`] driver, the same one the native engine uses —
@@ -139,20 +142,19 @@ impl RefineEngine for OffloadEngine<'_> {
             .clone();
         assert_eq!(k8.chunk_rows, k1.chunk_rows);
         let chunk = k8.chunk_rows;
-        // One packing copy at the device boundary: G is keyed into
-        // the service's device-buffer cache and stays resident across
-        // every chunk of every segment (the old code re-packed and
-        // re-uploaded the d*d tensor per call).  Under the scheduler,
-        // every shard of a layer carries the same `gram_key`, so G
-        // uploads once per (layer, device) no matter how the layer is
-        // sharded; W chunks stay under this call's own id (their rows
-        // differ per shard).
+        // G goes through the service's device-buffer cache under the
+        // scheduler-shared `gram_key`, so it uploads once per
+        // (layer, device) no matter how the layer is sharded.  The
+        // host copy is *lazy*: every call first sends a key-only
+        // probe (`ExecInput::CachedRef` — no d² host copy built, no
+        // data shipped), and only a `NotResident` miss (first shard
+        // on a device, or post-eviction) packs the d*d tensor and
+        // retries with the data attached.  Steady-state shards
+        // therefore pay zero G-copy bytes; W chunks stay under this
+        // call's own id (their rows differ per shard).
         let layer_id = next_refinement_id();
         let g_layer = self.gram_key.unwrap_or(layer_id);
-        let g_data = Arc::new(TensorData::F32 {
-            dims: vec![g.d, g.d],
-            data: g.as_slice().to_vec(),
-        });
+        let mut g_host: Option<Arc<TensorData>> = None;
         let g_key = BufferKey {
             layer: g_layer,
             tensor: "gram".into(),
@@ -222,21 +224,48 @@ impl RefineEngine for OffloadEngine<'_> {
                 for (slot, &ri) in group.iter().enumerate() {
                     mc.row_mut(slot).copy_from_slice(mask.row(ri));
                 }
-                let out = self.rt.execute_cached(&entry.name, vec![
-                    ExecInput::Cached {
-                        key: BufferKey {
-                            layer: layer_id,
-                            tensor: format!("w{gi}"),
-                            generation,
+                // Probe-then-upload: while `g_host` is unbuilt the G
+                // input is a key-only probe; the one failure mode
+                // (`NotResident`) packs the host copy and retries the
+                // same call with the data attached.  At most one
+                // retry per call — once built, `Cached` cannot miss
+                // that way again.
+                let out = loop {
+                    let g_input = match &g_host {
+                        Some(data) => ExecInput::Cached {
+                            key: g_key.clone(),
+                            data: Arc::clone(data),
                         },
-                        data: wc,
-                    },
-                    ExecInput::Inline(TensorData::from_matrix(&mc)),
-                    ExecInput::Cached {
-                        key: g_key.clone(),
-                        data: Arc::clone(&g_data),
-                    },
-                ]).map_err(|e| RefineError::Msg(e.to_string()))?;
+                        None => ExecInput::CachedRef {
+                            key: g_key.clone(),
+                        },
+                    };
+                    let res = self.rt.execute_cached(&entry.name, vec![
+                        ExecInput::Cached {
+                            key: BufferKey {
+                                layer: layer_id,
+                                tensor: format!("w{gi}"),
+                                generation,
+                            },
+                            data: Arc::clone(&wc),
+                        },
+                        ExecInput::Inline(TensorData::from_matrix(&mc)),
+                        g_input,
+                    ]);
+                    match res {
+                        Err(RuntimeError::NotResident(_))
+                            if g_host.is_none() =>
+                        {
+                            g_host = Some(Arc::new(TensorData::F32 {
+                                dims: vec![g.d, g.d],
+                                data: g.as_slice().to_vec(),
+                            }));
+                        }
+                        other => break other.map_err(|e| {
+                            RefineError::Msg(e.to_string())
+                        })?,
+                    }
+                };
                 let m_out = out[0].as_f32()
                     .map_err(|e| RefineError::Msg(e.to_string()))?;
                 let l_before = out[1].as_f32()
@@ -317,6 +346,7 @@ pub fn refine_layer_offload(
         pattern,
         t_max: cfg.t_max,
         threads: 1,
+        gmax: None,
     };
     let out = OffloadEngine::new(rt, cfg.impl_name.clone())
         .refine(&ctx, mask, checkpoints)

@@ -1,12 +1,26 @@
 //! Training loop: drives the `train_step_{cfg}` artifact (Adam + clip,
 //! built by jax.grad at AOT time) from Rust.  Python never runs here —
 //! optimizer state lives in host tensors threaded through executions.
+//!
+//! Every input rides the service's device-buffer cache
+//! (`ExecInput::Cached` under one per-`train()` key space): the batch
+//! tensors and the learning rate upload once and stay resident for
+//! the whole run (generation 0 — batches recur every `n_batches`
+//! steps), while params/m/v/step — the tensors the step actually
+//! returns — bump their generation each step, so exactly the
+//! returned-tensor set re-uploads per step and nothing else.  Before
+//! this the loop shipped *every* input inline every step
+//! (`ServiceStats::upload_bytes` is the wave-2 bench number that
+//! dropped).
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::{Dataset, Split};
 use crate::model::store::ParamStore;
-use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::service::{
+    BufferKey, ExecInput, Runtime, RuntimeError,
+};
 use crate::runtime::tensor_data::TensorData;
 
 #[derive(Clone, Debug)]
@@ -37,34 +51,71 @@ pub fn train(rt: &Runtime, store: &mut ParamStore, ds: &Dataset,
     let meta = store.meta.clone();
     let artifact = format!("train_step_{}", meta.name);
     let n_params = meta.params.len();
-    let batches = ds.batches(&meta, Split::Train, cfg.n_batches);
 
-    let mut m = ParamStore::zeros_like(&meta).tensors;
-    let mut v = ParamStore::zeros_like(&meta).tensors;
-    let mut step = TensorData::scalar_i32(0);
-    let lr = TensorData::scalar_f32(cfg.lr);
+    // One cache key space per train() call (unique process-wide, so
+    // concurrent trainers on one pool never collide); released at the
+    // end.  Batches and lr live at generation 0 forever — resident
+    // after their first use.  Params/m/v/step carry the step index as
+    // their generation: the step returns fresh host tensors, so the
+    // bump re-uploads exactly those and invalidates the stale
+    // buffers.
+    let train_id = crate::coordinator::swaploop::next_refinement_id();
+    let key = |tensor: String, generation: u64| BufferKey {
+        layer: train_id,
+        tensor,
+        generation,
+    };
+    let batches: Vec<(Arc<TensorData>, Arc<TensorData>)> =
+        ds.batches(&meta, Split::Train, cfg.n_batches)
+        .into_iter()
+        .map(|(t, g)| (Arc::new(t), Arc::new(g)))
+        .collect();
+    let arcs = |ts: Vec<TensorData>| -> Vec<Arc<TensorData>> {
+        ts.into_iter().map(Arc::new).collect()
+    };
+    // One host copy of the parameter set here; the store is written
+    // back on success only, so an error mid-run leaves it untouched.
+    let mut params = arcs(store.tensors.clone());
+    let mut m = arcs(ParamStore::zeros_like(&meta).tensors);
+    let mut v = arcs(ParamStore::zeros_like(&meta).tensors);
+    let mut step = Arc::new(TensorData::scalar_i32(0));
+    let lr = Arc::new(TensorData::scalar_f32(cfg.lr));
 
     let t0 = Instant::now();
     let mut report = TrainReport::default();
     for s in 0..cfg.steps {
-        let (tokens, targets) = &batches[s % batches.len()];
+        let gen = s as u64;
+        let bi = s % batches.len();
+        let (tokens, targets) = &batches[bi];
         let mut inputs = Vec::with_capacity(3 * n_params + 4);
-        inputs.extend(store.tensors.iter().cloned());
-        inputs.extend(m.iter().cloned());
-        inputs.extend(v.iter().cloned());
-        inputs.push(step.clone());
-        inputs.push(tokens.clone());
-        inputs.push(targets.clone());
-        inputs.push(lr.clone());
-        let mut out = rt.execute(&artifact, inputs)?;
+        let cached = |tensor: String, gen: u64, t: &Arc<TensorData>| {
+            ExecInput::Cached {
+                key: key(tensor, gen),
+                data: Arc::clone(t),
+            }
+        };
+        for (i, p) in params.iter().enumerate() {
+            inputs.push(cached(format!("p{i}"), gen, p));
+        }
+        for (i, t) in m.iter().enumerate() {
+            inputs.push(cached(format!("m{i}"), gen, t));
+        }
+        for (i, t) in v.iter().enumerate() {
+            inputs.push(cached(format!("v{i}"), gen, t));
+        }
+        inputs.push(cached("step".into(), gen, &step));
+        inputs.push(cached(format!("tok{bi}"), 0, tokens));
+        inputs.push(cached(format!("tgt{bi}"), 0, targets));
+        inputs.push(cached("lr".into(), 0, &lr));
+        let mut out = rt.execute_cached(&artifact, inputs)?;
         // outputs: params.., m.., v.., step, loss
         let loss = out.pop().unwrap().scalar_value()?;
-        step = out.pop().unwrap();
+        step = Arc::new(out.pop().unwrap());
         let vs = out.split_off(2 * n_params);
         let ms = out.split_off(n_params);
-        store.tensors = out;
-        m = ms;
-        v = vs;
+        params = arcs(out);
+        m = arcs(ms);
+        v = arcs(vs);
         if s == 0 {
             report.initial_loss = loss;
         }
@@ -75,6 +126,10 @@ pub fn train(rt: &Runtime, store: &mut ParamStore, ds: &Dataset,
         }
         report.final_loss = loss;
     }
+    store.tensors = params.into_iter()
+        .map(|p| Arc::try_unwrap(p).unwrap_or_else(|a| (*a).clone()))
+        .collect();
+    rt.invalidate(train_id);
     report.seconds = t0.elapsed().as_secs_f64();
     Ok(report)
 }

@@ -152,8 +152,9 @@ fn cmd_prune(argv: &[String]) -> CliResult {
                                   counts to snapshot (Table 3)")
         .flag("calib-batches", "8", "calibration batches")
         .flag("threads", "0", "worker threads (0 = all cores)")
-        .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd \
-                                  (scalar for cross-arm parity testing)")
+        .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd\
+                                  |avx512 (scalar for cross-arm parity \
+                                  testing)")
         .bool_flag_on("layer-parallel", "refine independent row shards \
                                          of a block concurrently (thread \
                                          pool for native/dsnot, runtime \
@@ -239,6 +240,11 @@ fn cmd_prune(argv: &[String]) -> CliResult {
                  100.0 * ps.cache_hit_rate(), ps.cache_evictions,
                  ps.cache_peak_bytes as f64 / (1u64 << 20) as f64,
                  ps.compiles, ps.compiles_shared);
+        println!("  key-only probes: {}/{} resident ({:.0}%), \
+                  {:.1} MiB uploaded",
+                 ps.probe_hits, ps.probe_hits + ps.probe_misses,
+                 100.0 * ps.probe_hit_rate(),
+                 ps.upload_bytes as f64 / (1u64 << 20) as f64);
     }
     Ok(())
 }
@@ -287,7 +293,8 @@ fn cmd_report(argv: &[String]) -> CliResult {
         .flag("model", "gpt-a", "model for single-model experiments")
         .flag("artifacts", "artifacts", "artifact directory")
         .flag("out", "reports/report.md", "markdown output (appended)")
-        .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd")
+        .flag("kernels", "auto",
+              "kernel dispatch arm: auto|scalar|simd|avx512")
         .flag("devices", "1", "offload runtime service workers \
                                (0 = all cores)")
         .flag("device-mem-budget", "512", "per-device buffer-cache \

@@ -308,6 +308,7 @@ mod tests {
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: Some(&stats), pattern,
             t_max: 0, threads: 2,
+            gmax: None,
         };
         let mut m_engine = warm.clone();
         let out = DsnotEngine::default()
@@ -328,6 +329,7 @@ mod tests {
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max: 0,
             threads: 1,
+            gmax: None,
         };
         assert!(DsnotEngine::default()
                 .refine(&ctx, &mut mask, &[]).is_err());

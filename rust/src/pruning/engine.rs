@@ -48,6 +48,15 @@ pub struct LayerContext<'a> {
     pub t_max: usize,
     /// Worker threads the engine may use internally.
     pub threads: usize,
+    /// Shared per-layer skip-bound table: `gmax[u]` = max |G_uj| over
+    /// column `u`'s scan scope (whole row unstructured, its N:M block
+    /// for [`Pattern::Nm`] — see `sparseswaps::gmax_table`).  The
+    /// table depends only on `g` and `pattern`, so the scheduler
+    /// computes it once per layer and every row shard borrows it;
+    /// `None` makes engines that want it compute their own (the
+    /// whole-layer convenience path).  Must have length `g.d` and
+    /// match `pattern`'s block size when present.
+    pub gmax: Option<&'a [f64]>,
 }
 
 /// Why a refinement call failed.
@@ -311,7 +320,7 @@ mod tests {
         let before = mask.clone();
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max: 10,
-            threads: 1,
+            threads: 1, gmax: None,
         };
         let out = NoopEngine.refine(&ctx, &mut mask, &[2, 5]).unwrap();
         assert_eq!(mask.data, before.data);
@@ -396,7 +405,7 @@ mod tests {
         let (w, g, mask, pattern) = instance();
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max: 5,
-            threads: 1,
+            threads: 1, gmax: None,
         };
         // Shard rows 1..3: losses must match the whole-layer call.
         let full = NoopEngine.refine(&ctx, &mut mask.clone(), &[])

@@ -232,6 +232,33 @@ pub fn refine_layer_rescan<'a>(w: &Matrix, mask: &mut Matrix,
     outcome
 }
 
+/// The Eq.-5 skip-bound table: `gmax[u]` = max |G_uj| over the
+/// columns u's scan can reach — its N:M block for block patterns, or
+/// the whole row when unstructured.  Indexed by *column*, so the
+/// table is identical for every row shard of a layer; the scheduler
+/// (`coordinator::scheduler::refine_block`) computes it once per
+/// layer and hands shards a borrowed slice through
+/// [`LayerContext::gmax`], turning the O(d²) scan from a per-shard
+/// cost into a per-layer one.  Standalone callers (whole-layer
+/// `refine`, tests) may leave `gmax: None` and the engine computes
+/// its own — bit-identical either way, since the table is a pure
+/// function of `(g, nm_block)`.
+pub fn gmax_table(g: GramView<'_>, nm_block: usize, threads: usize)
+    -> Vec<f64> {
+    let d = g.d;
+    parallel_map(d, threads.max(1), |u| {
+        let (lo, hi) = if nm_block == 0 {
+            (0, d)
+        } else {
+            let blk = u / nm_block;
+            (blk * nm_block, ((blk + 1) * nm_block).min(d))
+        };
+        g.row(u)[lo..hi].iter()
+            .map(|&v| (v as f64).abs())
+            .fold(0.0, f64::max)
+    })
+}
+
 // --- incremental active-set engine ------------------------------------------
 
 /// Persistent per-row state of the incremental engine: the mask row,
@@ -497,23 +524,23 @@ impl RefineEngine for NativeEngine {
         let threads = ctx.threads.max(1);
         let eps = self.eps;
         let arm = self.arm.unwrap_or_else(kernels::active);
-        // Skip-bound table: max |G_uj| over the columns u's scan can
-        // reach — its N:M block, or the whole row when unstructured.
-        // Indexed by column, so it is the same for every row shard
-        // (the one O(d^2) cost a shard pays regardless of its height;
-        // adaptive shard sizing keeps shards tall enough that it
-        // stays noise next to the O(rows * |U||P| * t) scan work).
-        let gmax: Vec<f64> = parallel_map(d, threads, |u| {
-            let (lo, hi) = if nm_block == 0 {
-                (0, d)
-            } else {
-                let blk = u / nm_block;
-                (blk * nm_block, ((blk + 1) * nm_block).min(d))
-            };
-            g.row(u)[lo..hi].iter()
-                .map(|&v| (v as f64).abs())
-                .fold(0.0, f64::max)
-        });
+        // Skip-bound table (see `gmax_table`): borrowed from the
+        // context when the scheduler computed it once for the whole
+        // layer, else computed here — the one O(d^2) cost of this
+        // call either way, and a pure function of (g, nm_block), so
+        // the borrowed and local paths are bit-identical.
+        let gmax_local: Vec<f64>;
+        let gmax: &[f64] = match ctx.gmax {
+            Some(t) => {
+                assert_eq!(t.len(), d,
+                           "shared gmax table length != layer width");
+                t
+            }
+            None => {
+                gmax_local = gmax_table(g, nm_block, threads);
+                &gmax_local
+            }
+        };
         let mut states: Vec<RowState> = parallel_map(n_rows, threads,
                                                      |k| {
             RowState::init(w.row(r0 + k), mask.row(k), g)
@@ -535,12 +562,11 @@ impl RefineEngine for NativeEngine {
                 for (k, st) in states.iter_mut().enumerate() {
                     if !st.converged {
                         advance_row(arm, w.row(r0 + k), g, nm_block,
-                                    eps, &gmax, budget, st, slab);
+                                    eps, gmax, budget, st, slab);
                     }
                 }
             } else {
                 let chunk = n_rows.div_ceil(n_workers).max(1);
-                let gmax = &gmax;
                 std::thread::scope(|scope| {
                     for (ci, (sts, slab)) in states
                         .chunks_mut(chunk)
@@ -600,6 +626,7 @@ pub fn refine_layer<'a>(w: &Matrix, mask: &mut Matrix,
         pattern,
         t_max: cfg.t_max,
         threads,
+        gmax: None,
     };
     NativeEngine { eps: cfg.eps, arm: None }
         .refine(&ctx, mask, &[])
@@ -775,7 +802,7 @@ mod tests {
                                         pattern);
             let ctx = LayerContext {
                 w: &w, g: g.as_gram(), stats: None, pattern,
-                t_max: 25, threads: 2,
+                t_max: 25, threads: 2, gmax: None,
             };
             let mut reference: Option<(Vec<f32>, usize)> = None;
             for arm in kernels::arms() {
@@ -805,7 +832,7 @@ mod tests {
                                     pattern);
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max: 20,
-            threads: 1,
+            threads: 1, gmax: None,
         };
         let mut plain = warm.clone();
         NativeEngine::default().refine(&ctx, &mut plain, &[]).unwrap();
@@ -833,7 +860,7 @@ mod tests {
                                     pattern);
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max: 15,
-            threads: 1,
+            threads: 1, gmax: None,
         };
         let mut full = warm.clone();
         NativeEngine::default().refine(&ctx, &mut full, &[]).unwrap();
@@ -860,7 +887,7 @@ mod tests {
                                     pattern);
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max: 0,
-            threads: 1,
+            threads: 1, gmax: None,
         };
         let mut mask = warm.clone();
         let out = NativeEngine::default()

@@ -12,7 +12,11 @@
 //!     reuses the buffer (no re-pack, no re-upload); a bumped
 //!     generation invalidates the stale buffer; an LRU sweep bounded
 //!     by [`RuntimeOptions::device_mem_budget`] reclaims memory after
-//!     each call.  Hit/miss/eviction counters surface through
+//!     each call.  [`ExecInput::CachedRef`] is the key-only probe
+//!     form: it names a resident buffer without shipping any host
+//!     data, failing fast with [`RuntimeError::NotResident`] when the
+//!     buffer is gone so the caller can re-send the data-attached
+//!     form.  Hit/miss/eviction/probe counters surface through
 //!     [`ServiceStats`].
 //!
 //! Executions exchange [`TensorData`] (plain `Vec`s + dims); the
@@ -34,6 +38,12 @@ use crate::runtime::tensor_data::TensorData;
 pub enum RuntimeError {
     Msg(String),
     Xla(String),
+    /// A key-only probe ([`ExecInput::CachedRef`]) named a buffer that
+    /// is not resident at the requested generation.  The call failed
+    /// *before* any upload or execution; the caller retries with the
+    /// full [`ExecInput::Cached`] form (data attached) — see
+    /// `OffloadEngine` for the canonical probe-then-upload loop.
+    NotResident(BufferKey),
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -41,6 +51,10 @@ impl std::fmt::Display for RuntimeError {
         match self {
             RuntimeError::Msg(s) => write!(f, "runtime: {s}"),
             RuntimeError::Xla(s) => write!(f, "xla: {s}"),
+            RuntimeError::NotResident(k) => write!(
+                f,
+                "runtime: buffer ({}, {:?}, gen {}) not resident",
+                k.layer, k.tensor, k.generation),
         }
     }
 }
@@ -79,13 +93,35 @@ pub enum ExecInput {
     /// without a round-trip back to the caller; `Arc` keeps that
     /// cheap.
     Cached { key: BufferKey, data: Arc<TensorData> },
+    /// Key-only probe: use the resident buffer under `key`, shipping
+    /// *no host data at all*.  A hit counts as
+    /// [`ServiceStats::probe_hits`] and behaves exactly like a
+    /// `Cached` hit; a miss fails the whole call with
+    /// [`RuntimeError::NotResident`] *before* anything is uploaded or
+    /// executed ([`ServiceStats::probe_misses`]), and the caller
+    /// retries with `Cached`.  This is what lets a steady-state shard
+    /// skip even *building* the d² host copy of a layer's Gram matrix
+    /// when the buffer is already on the device.
+    CachedRef { key: BufferKey },
 }
 
 impl ExecInput {
-    fn data(&self) -> &TensorData {
+    /// Host data carried by this input (`None` for key-only probes,
+    /// which by construction ship nothing).
+    fn data(&self) -> Option<&TensorData> {
         match self {
-            ExecInput::Inline(t) => t,
-            ExecInput::Cached { data, .. } => data,
+            ExecInput::Inline(t) => Some(t),
+            ExecInput::Cached { data, .. } => Some(data),
+            ExecInput::CachedRef { .. } => None,
+        }
+    }
+
+    /// Cache key named by this input, if any.
+    fn key(&self) -> Option<&BufferKey> {
+        match self {
+            ExecInput::Inline(_) => None,
+            ExecInput::Cached { key, .. }
+            | ExecInput::CachedRef { key } => Some(key),
         }
     }
 }
@@ -140,6 +176,20 @@ pub struct ServiceStats {
     pub cache_bytes: u64,
     /// High-water mark of `cache_bytes`.
     pub cache_peak_bytes: u64,
+    /// Key-only probes ([`ExecInput::CachedRef`]) that found their
+    /// buffer resident — each one is a d²-scale host copy the caller
+    /// never had to build or ship.  Kept separate from `cache_hits`
+    /// (which counts `Cached` lookups, data attached) so probe
+    /// traffic never inflates [`Self::cache_hit_rate`].
+    pub probe_hits: u64,
+    /// Key-only probes that missed; the call failed with
+    /// [`RuntimeError::NotResident`] and the caller re-sent the data.
+    pub probe_misses: u64,
+    /// Host bytes actually shipped to the backend: inline inputs
+    /// every call plus cacheable uploads on `Cached` misses.  Probe
+    /// and cache hits add nothing here — this is the number the
+    /// wave-2 bench watches drop.
+    pub upload_bytes: u64,
 }
 
 impl ServiceStats {
@@ -147,13 +197,26 @@ impl ServiceStats {
         self.exec_nanos as f64 / 1e9
     }
 
-    /// Cache hit rate over all cacheable lookups (0 when none ran).
+    /// Cache hit rate over all `Cached` (data-attached) lookups only
+    /// (0 when none ran).  Key-only probes are deliberately excluded
+    /// — counting a probe hit here too would double-count one
+    /// resident-buffer reuse across two rates.
     pub fn cache_hit_rate(&self) -> f64 {
         let total = self.cache_hits + self.cache_misses;
         if total == 0 {
             0.0
         } else {
             self.cache_hits as f64 / total as f64
+        }
+    }
+
+    /// Probe hit rate over all key-only lookups (0 when none ran).
+    pub fn probe_hit_rate(&self) -> f64 {
+        let total = self.probe_hits + self.probe_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.probe_hits as f64 / total as f64
         }
     }
 
@@ -176,6 +239,9 @@ impl ServiceStats {
         self.cache_invalidations += o.cache_invalidations;
         self.cache_bytes += o.cache_bytes;
         self.cache_peak_bytes += o.cache_peak_bytes;
+        self.probe_hits += o.probe_hits;
+        self.probe_misses += o.probe_misses;
+        self.upload_bytes += o.upload_bytes;
     }
 }
 
@@ -317,7 +383,11 @@ impl Runtime {
                 entry.inputs.len(), inputs.len())));
         }
         for (i, (t, sig)) in inputs.iter().zip(&entry.inputs).enumerate() {
-            t.data().check_sig(sig, &format!("{artifact} input {i}"))?;
+            // Key-only probes carry no host data to check; the
+            // resident buffer was validated when it was uploaded.
+            if let Some(data) = t.data() {
+                data.check_sig(sig, &format!("{artifact} input {i}"))?;
+            }
         }
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx.send(Request::Exec {
@@ -502,6 +572,7 @@ impl<B: Backend> Service<B> {
         let buf = self.backend.upload(data)?;
         self.stats.pack_nanos += t0.elapsed().as_nanos() as u64;
         self.stats.cache_misses += 1;
+        self.stats.upload_bytes += data.byte_size() as u64;
         let bytes = data.byte_size() as u64;
         self.tick += 1;
         self.cache.insert(mk, CachedBuf {
@@ -559,17 +630,41 @@ impl<B: Backend> Service<B> {
         // Duplicate cache keys within one call would both resolve to
         // the single surviving buffer in phase 2 (the second upload
         // replaces the first) — reject instead of executing with
-        // wrong data.
+        // wrong data.  Key-only probes count too: a CachedRef
+        // aliasing a Cached upload is the same footgun.
         for (i, a) in inputs.iter().enumerate() {
-            if let ExecInput::Cached { key: ka, .. } = a {
+            if let Some(ka) = a.key() {
                 for b in &inputs[i + 1..] {
-                    if let ExecInput::Cached { key: kb, .. } = b {
+                    if let Some(kb) = b.key() {
                         if ka.layer == kb.layer && ka.tensor == kb.tensor
                         {
                             return Err(RuntimeError::Msg(format!(
                                 "{artifact}: duplicate cached input \
                                  key ({}, {:?})", ka.layer, ka.tensor)));
                         }
+                    }
+                }
+            }
+        }
+
+        // Phase 0: key-only probes.  Checked before *anything* is
+        // uploaded so a miss costs one round-trip and no work — the
+        // caller falls back to the data-attached form.  A hit acts
+        // like a Cached hit (LRU touch) but is counted separately so
+        // probe traffic never skews the upload-cache hit rate.
+        for inp in &inputs {
+            if let ExecInput::CachedRef { key } = inp {
+                let mk = (key.layer, key.tensor.clone());
+                match self.cache.get_mut(&mk) {
+                    Some(c) if c.generation == key.generation => {
+                        self.tick += 1;
+                        c.last_used = self.tick;
+                        self.stats.probe_hits += 1;
+                    }
+                    _ => {
+                        self.stats.probe_misses += 1;
+                        return Err(RuntimeError::NotResident(
+                            key.clone()));
                     }
                 }
             }
@@ -588,6 +683,7 @@ impl<B: Backend> Service<B> {
         for inp in &inputs {
             if let ExecInput::Inline(t) = inp {
                 temps.push(self.backend.upload(t)?);
+                self.stats.upload_bytes += t.byte_size() as u64;
             }
         }
         self.stats.pack_nanos += t0.elapsed().as_nanos() as u64;
@@ -602,7 +698,8 @@ impl<B: Backend> Service<B> {
                     refs.push(&temps[ti]);
                     ti += 1;
                 }
-                ExecInput::Cached { key, .. } => {
+                ExecInput::Cached { key, .. }
+                | ExecInput::CachedRef { key } => {
                     let mk = (key.layer, key.tensor.clone());
                     refs.push(&self.cache[&mk].buf);
                 }

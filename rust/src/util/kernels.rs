@@ -1,7 +1,7 @@
 //! Runtime-dispatched SIMD kernel layer — the single compute substrate
 //! under every inner-loop operation of Algorithm 1.
 //!
-//! Two dispatch arms:
+//! Three dispatch arms:
 //!
 //!   * `scalar` — the portable baseline.  Bit-identical to the
 //!     pre-kernel-layer code (`dot` keeps the 4-lane unrolled
@@ -11,27 +11,39 @@
 //!   * `simd` — AVX2/FMA via `std::arch`, available on x86-64 hosts
 //!     that report both features at runtime
 //!     (`is_x86_feature_detected!`).
+//!   * `avx512` — 512-bit lanes for `dot`, `axpy`, the matmul/syrk
+//!     microkernel and the gathered pair scan, on hosts that
+//!     additionally report `avx512f`.  Ops without a dedicated
+//!     512-bit body (packed `pair_scan`, `axpy_dot`) run their AVX2
+//!     sibling — the engine's hot path is the gather variant, so the
+//!     packed scan stays a test/bench oracle.
 //!
 //! The active arm is chosen once per process through a `OnceLock`:
-//! `--kernels=scalar|simd|auto` (CLI) or the `SPARSESWAPS_KERNELS`
-//! environment variable override auto-detection; parity tests and
-//! benches bypass the global and call the `*_arm` variants directly.
+//! `--kernels=scalar|simd|avx512|auto` (CLI) or the
+//! `SPARSESWAPS_KERNELS` environment variable override
+//! auto-detection; parity tests and benches bypass the global and
+//! call the `*_arm` variants directly.
 //!
 //! Determinism guarantees (relied on by the property tests and the
 //! engine parity oracle):
 //!
 //!   * every kernel is deterministic for a fixed arm and input;
-//!   * `axpy` and `axpy_dot`'s update are elementwise mul+add in BOTH
+//!   * `axpy` and `axpy_dot`'s update are elementwise mul+add in ALL
 //!     arms (no FMA contraction), so the Eq.-6 correlation state — and
 //!     therefore every swap decision and mask — is bit-identical
 //!     across arms;
-//!   * `pair_scan` evaluates the separable Eq.-5 delta with the exact
-//!     scalar rounding sequence in both arms and resolves argmin ties
-//!     by first (lowest) index, matching the scalar loop's strict
-//!     `dl < best` first-wins semantics;
+//!   * `pair_scan` / `pair_scan_gather` evaluate the separable Eq.-5
+//!     delta with the exact scalar rounding sequence in every arm and
+//!     resolve argmin ties by first (lowest) index, matching the
+//!     scalar loop's strict `dl < best` first-wins semantics — lane
+//!     width (4 on AVX2, 8 on AVX-512) never changes the winner;
 //!   * `dot`, `matmul` and `syrk` may use FMA and a different
-//!     reduction shape on the `simd` arm; results agree with `scalar`
-//!     to relative 1e-4 on realistic inputs (property-tested).
+//!     reduction shape on the wide arms; results agree with `scalar`
+//!     to relative 1e-4 on realistic inputs (property-tested);
+//!   * `pair_scan_f32` trades the exact-f64 accumulation for f32 and
+//!     is therefore NOT on the mask-deciding path — the f64 scan
+//!     stays wired as its parity oracle in the tests and the bench
+//!     gate, and the engine keeps f64.
 
 use std::sync::OnceLock;
 
@@ -42,6 +54,7 @@ use crate::util::tensor::Matrix;
 pub enum Arm {
     Scalar,
     Simd,
+    Avx512,
 }
 
 impl Arm {
@@ -49,6 +62,7 @@ impl Arm {
         match self {
             Arm::Scalar => "scalar",
             Arm::Simd => "simd",
+            Arm::Avx512 => "avx512",
         }
     }
 }
@@ -63,34 +77,64 @@ pub fn simd_available() -> bool {
     false
 }
 
-/// Best arm this host supports.
+/// The avx512 arm keeps AVX2/FMA as its fallback tier for ops without
+/// a 512-bit body, so it requires the full `simd` feature set too.
+#[cfg(target_arch = "x86_64")]
+pub fn avx512_available() -> bool {
+    simd_available() && is_x86_feature_detected!("avx512f")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+pub fn avx512_available() -> bool {
+    false
+}
+
+/// Best (widest) arm this host supports.
 pub fn detect() -> Arm {
-    if simd_available() {
+    if avx512_available() {
+        Arm::Avx512
+    } else if simd_available() {
         Arm::Simd
     } else {
         Arm::Scalar
     }
 }
 
-/// Every arm usable on this host (scalar always; simd when detected).
-/// Parity tests and benches sweep this list.
+/// Every arm usable on this host (scalar always; wider arms when
+/// detected).  Parity tests and benches sweep this list.
 pub fn arms() -> Vec<Arm> {
     let mut out = vec![Arm::Scalar];
     if simd_available() {
         out.push(Arm::Simd);
     }
+    if avx512_available() {
+        out.push(Arm::Avx512);
+    }
     out
+}
+
+/// Downgrade `arm` to the widest tier this host actually supports —
+/// the resolved value is safe to hand to the unchecked dispatchers
+/// ([`fma_axpy_inner`] and the panel kernels).
+fn resolve(arm: Arm) -> Arm {
+    match arm {
+        Arm::Avx512 if avx512_available() => Arm::Avx512,
+        Arm::Scalar => Arm::Scalar,
+        _ if simd_available() => Arm::Simd,
+        _ => Arm::Scalar,
+    }
 }
 
 static ACTIVE: OnceLock<Arm> = OnceLock::new();
 
 /// The process-wide arm, selected once: `select()` wins if called
-/// before first use, then `SPARSESWAPS_KERNELS=scalar|simd`, then
-/// runtime detection.
+/// before first use, then `SPARSESWAPS_KERNELS=scalar|simd|avx512`,
+/// then runtime detection.
 pub fn active() -> Arm {
     *ACTIVE.get_or_init(|| match std::env::var("SPARSESWAPS_KERNELS") {
         Ok(v) if v == "scalar" => Arm::Scalar,
         Ok(v) if v == "simd" && simd_available() => Arm::Simd,
+        Ok(v) if v == "avx512" && avx512_available() => Arm::Avx512,
         _ => detect(),
     })
 }
@@ -113,9 +157,18 @@ pub fn select(name: &str) -> Result<Arm, String> {
             }
             Arm::Simd
         }
+        "avx512" => {
+            if !avx512_available() {
+                return Err("AVX-512 kernels unavailable on this host \
+                            (needs x86-64 with AVX2, FMA and AVX512F)"
+                    .into());
+            }
+            Arm::Avx512
+        }
         other => {
             return Err(format!(
-                "unknown kernel arm {other:?} (want auto|scalar|simd)"
+                "unknown kernel arm {other:?} \
+                 (want auto|scalar|simd|avx512)"
             ))
         }
     };
@@ -141,9 +194,11 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
 
 pub fn dot_arm(arm: Arm, a: &[f32], b: &[f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
-    if arm == Arm::Simd && simd_available() {
-        // SAFETY: AVX2+FMA presence verified at runtime.
-        return unsafe { avx2::dot(a, b) };
+    match resolve(arm) {
+        // SAFETY: feature presence verified by `resolve`.
+        Arm::Avx512 => return unsafe { avx512::dot(a, b) },
+        Arm::Simd => return unsafe { avx2::dot(a, b) },
+        Arm::Scalar => {}
     }
     let _ = arm;
     scalar::dot(a, b)
@@ -157,10 +212,11 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
 
 pub fn axpy_arm(arm: Arm, alpha: f32, x: &[f32], y: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
-    if arm == Arm::Simd && simd_available() {
-        // SAFETY: AVX2 presence verified at runtime.
-        unsafe { avx2::axpy(alpha, x, y) };
-        return;
+    match resolve(arm) {
+        // SAFETY: feature presence verified by `resolve`.
+        Arm::Avx512 => return unsafe { avx512::axpy(alpha, x, y) },
+        Arm::Simd => return unsafe { avx2::axpy(alpha, x, y) },
+        Arm::Scalar => {}
     }
     let _ = arm;
     scalar::axpy(alpha, x, y)
@@ -183,8 +239,11 @@ pub fn axpy_dot(alpha: f32, x: &[f32], y: &mut [f32]) -> f32 {
 
 pub fn axpy_dot_arm(arm: Arm, alpha: f32, x: &[f32], y: &mut [f32]) -> f32 {
     #[cfg(target_arch = "x86_64")]
-    if arm == Arm::Simd && simd_available() {
-        // SAFETY: AVX2+FMA presence verified at runtime.
+    if resolve(arm) != Arm::Scalar {
+        // No dedicated 512-bit body: the avx512 arm runs its AVX2
+        // fallback tier here (update half stays elementwise mul+add,
+        // so bit-identity across arms is preserved either way).
+        // SAFETY: AVX2+FMA presence verified by `resolve`.
         return unsafe { avx2::axpy_dot(alpha, x, y) };
     }
     let _ = arm;
@@ -207,8 +266,11 @@ pub fn pair_scan_arm(
     best: f64,
 ) -> Option<(f64, usize)> {
     #[cfg(target_arch = "x86_64")]
-    if arm == Arm::Simd && simd_available() {
-        // SAFETY: AVX2 presence verified at runtime.
+    if resolve(arm) != Arm::Scalar {
+        // The engine's hot path is the gather variant; the packed scan
+        // keeps a single AVX2 body that the avx512 arm reuses (same
+        // bit-exact result at any lane width).
+        // SAFETY: AVX2 presence verified by `resolve`.
         return unsafe { avx2::pair_scan(au, wu2, b, wp, gp, best) };
     }
     let _ = arm;
@@ -240,15 +302,71 @@ pub fn pair_scan_gather_arm(
     debug_assert_eq!(b.len(), pruned.len());
     debug_assert!(pruned.iter().all(|&p| p < g_row.len()));
     #[cfg(target_arch = "x86_64")]
-    if arm == Arm::Simd && simd_available() {
-        // SAFETY: AVX2 presence verified at runtime; the caller
+    match resolve(arm) {
+        // SAFETY: feature presence verified by `resolve`; the caller
         // guarantees every gathered index is in bounds.
-        return unsafe {
-            avx2::pair_scan_gather(au, wu2, b, wp, g_row, pruned, best)
-        };
+        Arm::Avx512 => {
+            return unsafe {
+                avx512::pair_scan_gather(au, wu2, b, wp, g_row, pruned,
+                                         best)
+            }
+        }
+        Arm::Simd => {
+            return unsafe {
+                avx2::pair_scan_gather(au, wu2, b, wp, g_row, pruned,
+                                       best)
+            }
+        }
+        Arm::Scalar => {}
     }
     let _ = arm;
     scalar::pair_scan_gather(au, wu2, b, wp, g_row, pruned, best)
+}
+
+/// f32-accumulation sibling of the Eq.-5 pair scan: identical
+/// formula, ties and first-wins semantics, but every term and the
+/// running best stay in f32.  One f32 FLOP per lane instead of f64
+/// doubles the lanes per vector (16 on AVX-512) — but f32 rounding
+/// can pick a different winner when two candidates are closer than
+/// ~1e-7 relative, so this is NOT used on the mask-deciding path: the
+/// engine keeps the exact-f64 scan, which also serves as this
+/// function's parity oracle in the property tests and the bench gate.
+#[inline]
+pub fn pair_scan_f32(
+    au: f32,
+    wu2: f32,
+    b: &[f32],
+    wp: &[f32],
+    gp: &[f32],
+    best: f32,
+) -> Option<(f32, usize)> {
+    pair_scan_f32_arm(active(), au, wu2, b, wp, gp, best)
+}
+
+/// [`pair_scan_f32`] on an explicit arm.  The scalar and avx512
+/// bodies compute each `dl` with the identical f32 rounding sequence,
+/// so the selected pair is bit-identical across arms; the simd arm
+/// has no dedicated body and runs the scalar one.
+pub fn pair_scan_f32_arm(
+    arm: Arm,
+    au: f32,
+    wu2: f32,
+    b: &[f32],
+    wp: &[f32],
+    gp: &[f32],
+    best: f32,
+) -> Option<(f32, usize)> {
+    debug_assert_eq!(b.len(), wp.len());
+    debug_assert_eq!(b.len(), gp.len());
+    #[cfg(target_arch = "x86_64")]
+    if resolve(arm) == Arm::Avx512 {
+        // SAFETY: AVX512F presence verified by `resolve`.
+        return unsafe {
+            avx512::pair_scan_f32(au, wu2, b, wp, gp, best)
+        };
+    }
+    let _ = arm;
+    scalar::pair_scan_f32(au, wu2, b, wp, gp, best)
 }
 
 /// Cache-blocked matrix multiply `A * B` with packed B panels.
@@ -285,10 +403,10 @@ pub fn matmul_arm_par(arm: Arm, a: &Matrix, b: &Matrix, threads: usize)
     if n == 0 || k == 0 || m == 0 {
         return out;
     }
-    let use_simd = arm == Arm::Simd && simd_available();
+    let arm = resolve(arm);
     let n_threads = threads.max(1).min(n);
     if n_threads <= 1 {
-        matmul_panel(use_simd, a, b, &mut out.data, 0, n);
+        matmul_panel(arm, a, b, &mut out.data, 0, n);
         return out;
     }
     let chunk = n.div_ceil(n_threads);
@@ -302,7 +420,7 @@ pub fn matmul_arm_par(arm: Arm, a: &Matrix, b: &Matrix, threads: usize)
         rest = tail;
         let lo = i0;
         jobs.push(Box::new(move || {
-            matmul_panel(use_simd, a, b, panel, lo, lo + rows_here)
+            matmul_panel(arm, a, b, panel, lo, lo + rows_here)
         }));
         i0 += rows_here;
     }
@@ -311,9 +429,10 @@ pub fn matmul_arm_par(arm: Arm, a: &Matrix, b: &Matrix, threads: usize)
 }
 
 /// Compute output rows [i0, i1) into `panel` (the corresponding
-/// contiguous row slice of C) with a private B pack buffer.
+/// contiguous row slice of C) with a private B pack buffer.  `arm`
+/// must already be resolved.
 fn matmul_panel(
-    use_simd: bool,
+    arm: Arm,
     a: &Matrix,
     b: &Matrix,
     panel: &mut [f32],
@@ -344,7 +463,7 @@ fn matmul_panel(
                         continue;
                     }
                     let brow = &pack[kk * jw..kk * jw + jw];
-                    fma_axpy_inner(use_simd, av, brow, crow);
+                    fma_axpy_inner(arm, av, brow, crow);
                 }
             }
             kc += kw;
@@ -353,16 +472,25 @@ fn matmul_panel(
     }
 }
 
-/// Inner microkernel of matmul/syrk: `y += a * x`, FMA on the simd arm.
+/// Inner microkernel of matmul/syrk: `y += a * x`, FMA on the wide
+/// arms.  `arm` must already be resolved ([`resolve`]) — the wide
+/// branches dispatch without re-checking feature presence.
 #[inline]
-fn fma_axpy_inner(use_simd: bool, alpha: f32, x: &[f32], y: &mut [f32]) {
+fn fma_axpy_inner(arm: Arm, alpha: f32, x: &[f32], y: &mut [f32]) {
     #[cfg(target_arch = "x86_64")]
-    if use_simd {
-        // SAFETY: `use_simd` is only true after runtime detection.
-        unsafe { avx2::fma_axpy(alpha, x, y) };
-        return;
+    match arm {
+        // SAFETY: `resolve` only yields a wide arm after detection.
+        Arm::Avx512 => {
+            unsafe { avx512::fma_axpy(alpha, x, y) };
+            return;
+        }
+        Arm::Simd => {
+            unsafe { avx2::fma_axpy(alpha, x, y) };
+            return;
+        }
+        Arm::Scalar => {}
     }
-    let _ = use_simd;
+    let _ = arm;
     scalar::axpy(alpha, x, y);
 }
 
@@ -384,10 +512,10 @@ pub fn syrk_arm(arm: Arm, g: &mut Matrix, x: &Matrix, threads: usize) {
     if d == 0 {
         return;
     }
-    let use_simd = arm == Arm::Simd && simd_available();
+    let arm = resolve(arm);
     let n_threads = threads.max(1).min(d);
     if n_threads <= 1 {
-        syrk_panel(use_simd, &mut g.data, 0, d, d, x);
+        syrk_panel(arm, &mut g.data, 0, d, d, x);
     } else {
         let chunk = d.div_ceil(n_threads);
         let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
@@ -400,7 +528,7 @@ pub fn syrk_arm(arm: Arm, g: &mut Matrix, x: &Matrix, threads: usize) {
             rest = tail;
             let lo = i0;
             jobs.push(Box::new(move || {
-                syrk_panel(use_simd, panel, lo, lo + rows_here, d, x)
+                syrk_panel(arm, panel, lo, lo + rows_here, d, x)
             }));
             i0 += rows_here;
         }
@@ -415,9 +543,10 @@ pub fn syrk_arm(arm: Arm, g: &mut Matrix, x: &Matrix, threads: usize) {
 }
 
 /// Accumulate rows [i0, i1) of the upper triangle into `panel` (the
-/// corresponding contiguous row slice of G).
+/// corresponding contiguous row slice of G).  `arm` must already be
+/// resolved.
 fn syrk_panel(
-    use_simd: bool,
+    arm: Arm,
     panel: &mut [f32],
     i0: usize,
     i1: usize,
@@ -432,7 +561,7 @@ fn syrk_panel(
             if xi == 0.0 {
                 continue;
             }
-            fma_axpy_inner(use_simd, xi, &xr[i..], &mut grow[i..]);
+            fma_axpy_inner(arm, xi, &xr[i..], &mut grow[i..]);
         }
     }
 }
@@ -504,6 +633,30 @@ mod scalar {
         debug_assert_eq!(b.len(), wp.len());
         debug_assert_eq!(b.len(), gp.len());
         let mut cur: Option<(f64, usize)> = None;
+        let mut best_dl = best;
+        for i in 0..b.len() {
+            let dl = au + b[i] - wu2 * wp[i] * gp[i];
+            if dl < best_dl {
+                best_dl = dl;
+                cur = Some((dl, i));
+            }
+        }
+        cur
+    }
+
+    /// f32-accumulation scan: same shape as [`pair_scan`], every term
+    /// in f32.  The avx512 body computes per-element identically, so
+    /// results are bit-identical across f32 arms — but NOT to the f64
+    /// scan, which is the oracle it is tested against.
+    pub fn pair_scan_f32(
+        au: f32,
+        wu2: f32,
+        b: &[f32],
+        wp: &[f32],
+        gp: &[f32],
+        best: f32,
+    ) -> Option<(f32, usize)> {
+        let mut cur: Option<(f32, usize)> = None;
         let mut best_dl = best;
         for i in 0..b.len() {
             let dl = au + b[i] - wu2 * wp[i] * gp[i];
@@ -838,6 +991,279 @@ mod avx2 {
     }
 }
 
+// --- AVX-512 arm ------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx512 {
+    use std::arch::x86_64::*;
+
+    /// Deterministic lane reduction: spill and sum in fixed order.
+    #[inline]
+    unsafe fn hsum_ps(v: __m512) -> f32 {
+        let mut lanes = [0.0f32; 16];
+        _mm512_storeu_ps(lanes.as_mut_ptr(), v);
+        let mut s = 0.0f32;
+        for l in lanes {
+            s += l;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm512_setzero_ps();
+        let mut acc1 = _mm512_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm512_fmadd_ps(
+                _mm512_loadu_ps(pa.add(i)),
+                _mm512_loadu_ps(pb.add(i)),
+                acc0,
+            );
+            acc1 = _mm512_fmadd_ps(
+                _mm512_loadu_ps(pa.add(i + 16)),
+                _mm512_loadu_ps(pb.add(i + 16)),
+                acc1,
+            );
+            i += 32;
+        }
+        while i + 16 <= n {
+            acc0 = _mm512_fmadd_ps(
+                _mm512_loadu_ps(pa.add(i)),
+                _mm512_loadu_ps(pb.add(i)),
+                acc0,
+            );
+            i += 16;
+        }
+        let mut s = hsum_ps(_mm512_add_ps(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Elementwise mul+add — deliberately NOT fused, so every element
+    /// rounds exactly like the scalar and AVX2 arms and the Eq.-6
+    /// correlation state stays bit-identical across all three.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let av = _mm512_set1_ps(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let prod = _mm512_mul_ps(av, _mm512_loadu_ps(px.add(i)));
+            let sum = _mm512_add_ps(_mm512_loadu_ps(py.add(i)), prod);
+            _mm512_storeu_ps(py.add(i), sum);
+            i += 16;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// Fused microkernel for matmul/syrk accumulation (FMA allowed).
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn fma_axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let av = _mm512_set1_ps(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let acc = _mm512_fmadd_ps(
+                av,
+                _mm512_loadu_ps(px.add(i)),
+                _mm512_loadu_ps(py.add(i)),
+            );
+            _mm512_storeu_ps(py.add(i), acc);
+            i += 16;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    /// [`super::avx2::pair_scan_gather`] widened to 8 f64 lanes: one
+    /// `vgatherqps` pulls 8 f32 Gram entries through 8 i64 indices
+    /// loaded straight from the `&[usize]` partition, widened exactly
+    /// to f64.  Per-lane running best with first-wins blend masks,
+    /// then the same lexicographic (dl, index) lane reduction — so
+    /// the selected pair is bit-identical to the scalar and AVX2
+    /// scans.
+    ///
+    /// SAFETY contract (caller): every `pruned[i] < g_row.len()`.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn pair_scan_gather(
+        au: f64,
+        wu2: f64,
+        b: &[f64],
+        wp: &[f64],
+        g_row: &[f32],
+        pruned: &[usize],
+        best: f64,
+    ) -> Option<(f64, usize)> {
+        debug_assert_eq!(b.len(), wp.len());
+        debug_assert_eq!(b.len(), pruned.len());
+        let n = b.len();
+        let mut i = 0usize;
+        let mut cur: Option<(f64, usize)> = None;
+        if n >= 16 {
+            let au_v = _mm512_set1_pd(au);
+            let wu2_v = _mm512_set1_pd(wu2);
+            let mut best_v = _mm512_set1_pd(best);
+            let mut idx_v = _mm512_set1_pd(-1.0);
+            let mut lane =
+                _mm512_setr_pd(0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0);
+            let eight = _mm512_set1_pd(8.0);
+            while i + 8 <= n {
+                let bv = _mm512_loadu_pd(b.as_ptr().add(i));
+                let wv = _mm512_loadu_pd(wp.as_ptr().add(i));
+                // usize is 64-bit on x86-64, so eight pruned indices
+                // load directly as the i64 gather offsets.
+                let off = _mm512_loadu_epi64(
+                    pruned.as_ptr().add(i) as *const i64);
+                let g32 = _mm512_i64gather_ps::<4>(
+                    off, g_row.as_ptr() as *const u8);
+                let gv = _mm512_cvtps_pd(g32);
+                // (au + b) - ((wu2 * wp) * gp): scalar rounding order.
+                let dl = _mm512_sub_pd(
+                    _mm512_add_pd(au_v, bv),
+                    _mm512_mul_pd(_mm512_mul_pd(wu2_v, wv), gv),
+                );
+                let lt = _mm512_cmp_pd_mask::<_CMP_LT_OQ>(dl, best_v);
+                best_v = _mm512_mask_blend_pd(lt, best_v, dl);
+                idx_v = _mm512_mask_blend_pd(lt, idx_v, lane);
+                lane = _mm512_add_pd(lane, eight);
+                i += 8;
+            }
+            let mut bests = [0.0f64; 8];
+            let mut idxs = [0.0f64; 8];
+            _mm512_storeu_pd(bests.as_mut_ptr(), best_v);
+            _mm512_storeu_pd(idxs.as_mut_ptr(), idx_v);
+            // Lane l's best index is the first in that lane's
+            // subsequence; the lexicographic (dl, idx) reduction then
+            // recovers the global first-wins winner.
+            for l in 0..8 {
+                if idxs[l] < 0.0 {
+                    continue;
+                }
+                let (dl, kp) = (bests[l], idxs[l] as usize);
+                cur = match cur {
+                    Some((cd, ck))
+                        if !(dl < cd || (dl == cd && kp < ck)) =>
+                    {
+                        Some((cd, ck))
+                    }
+                    _ => Some((dl, kp)),
+                };
+            }
+        }
+        let mut best_dl = match cur {
+            Some((cd, _)) => cd,
+            None => best,
+        };
+        while i < n {
+            let gp = g_row[pruned[i]] as f64;
+            let dl = au + b[i] - wu2 * wp[i] * gp;
+            if dl < best_dl {
+                best_dl = dl;
+                cur = Some((dl, i));
+            }
+            i += 1;
+        }
+        cur
+    }
+
+    /// f32-accumulation Eq.-5 scan, 16 lanes per step.  Each `dl`
+    /// follows the exact `scalar::pair_scan_f32` rounding sequence
+    /// (no FMA), so the winner is bit-identical to the scalar f32
+    /// body.  Lane indices are tracked as f32 — exact below 2^24,
+    /// far above any layer width this scan sees.
+    #[target_feature(enable = "avx512f")]
+    pub unsafe fn pair_scan_f32(
+        au: f32,
+        wu2: f32,
+        b: &[f32],
+        wp: &[f32],
+        gp: &[f32],
+        best: f32,
+    ) -> Option<(f32, usize)> {
+        debug_assert_eq!(b.len(), wp.len());
+        debug_assert_eq!(b.len(), gp.len());
+        let n = b.len();
+        let mut i = 0usize;
+        let mut cur: Option<(f32, usize)> = None;
+        if n >= 32 {
+            let au_v = _mm512_set1_ps(au);
+            let wu2_v = _mm512_set1_ps(wu2);
+            let mut best_v = _mm512_set1_ps(best);
+            let mut idx_v = _mm512_set1_ps(-1.0);
+            let mut lane = _mm512_setr_ps(
+                0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0,
+                11.0, 12.0, 13.0, 14.0, 15.0,
+            );
+            let sixteen = _mm512_set1_ps(16.0);
+            while i + 16 <= n {
+                let bv = _mm512_loadu_ps(b.as_ptr().add(i));
+                let wv = _mm512_loadu_ps(wp.as_ptr().add(i));
+                let gv = _mm512_loadu_ps(gp.as_ptr().add(i));
+                // (au + b) - ((wu2 * wp) * gp): scalar rounding order.
+                let dl = _mm512_sub_ps(
+                    _mm512_add_ps(au_v, bv),
+                    _mm512_mul_ps(_mm512_mul_ps(wu2_v, wv), gv),
+                );
+                let lt = _mm512_cmp_ps_mask::<_CMP_LT_OQ>(dl, best_v);
+                best_v = _mm512_mask_blend_ps(lt, best_v, dl);
+                idx_v = _mm512_mask_blend_ps(lt, idx_v, lane);
+                lane = _mm512_add_ps(lane, sixteen);
+                i += 16;
+            }
+            let mut bests = [0.0f32; 16];
+            let mut idxs = [0.0f32; 16];
+            _mm512_storeu_ps(bests.as_mut_ptr(), best_v);
+            _mm512_storeu_ps(idxs.as_mut_ptr(), idx_v);
+            for l in 0..16 {
+                if idxs[l] < 0.0 {
+                    continue;
+                }
+                let (dl, kp) = (bests[l], idxs[l] as usize);
+                cur = match cur {
+                    Some((cd, ck))
+                        if !(dl < cd || (dl == cd && kp < ck)) =>
+                    {
+                        Some((cd, ck))
+                    }
+                    _ => Some((dl, kp)),
+                };
+            }
+        }
+        let mut best_dl = match cur {
+            Some((cd, _)) => cd,
+            None => best,
+        };
+        while i < n {
+            let dl = au + b[i] - wu2 * wp[i] * gp[i];
+            if dl < best_dl {
+                best_dl = dl;
+                cur = Some((dl, i));
+            }
+            i += 1;
+        }
+        cur
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -894,17 +1320,16 @@ mod tests {
 
     #[test]
     fn dot_arms_agree() {
-        if !simd_available() {
-            return;
-        }
-        for n in [1usize, 5, 8, 15, 16, 17, 100, 1023] {
+        for n in [1usize, 5, 8, 15, 16, 17, 31, 32, 33, 100, 1023] {
             let (a, b) = vecs(100 + n as u64, n);
             let s = dot_arm(Arm::Scalar, &a, &b);
-            let v = dot_arm(Arm::Simd, &a, &b);
-            assert!(
-                (s - v).abs() <= 1e-4 * s.abs().max(1.0),
-                "n={n}: scalar {s} vs simd {v}"
-            );
+            for arm in arms() {
+                let v = dot_arm(arm, &a, &b);
+                assert!(
+                    (s - v).abs() <= 1e-4 * s.abs().max(1.0),
+                    "n={n} arm={arm:?}: scalar {s} vs {v}"
+                );
+            }
         }
     }
 
@@ -1167,6 +1592,78 @@ mod tests {
                                            &g_row, &pruned,
                                            f64::INFINITY);
             assert_eq!(got, Some((-1.0, 0)), "arm={arm:?}");
+        }
+    }
+
+    #[test]
+    fn pair_scan_f32_arms_bit_identical() {
+        // Scalar-f32 vs avx512-f32 (when present) must pick the same
+        // pair bit-for-bit: the wide body keeps the per-element f32
+        // rounding sequence and first-wins lane reduction.
+        let mut rng = Rng::new(21);
+        for n in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 100, 257] {
+            let b: Vec<f32> = (0..n).map(|_| rng.gaussian_f32()).collect();
+            let wp: Vec<f32> =
+                (0..n).map(|_| rng.gaussian_f32()).collect();
+            let gp: Vec<f32> =
+                (0..n).map(|_| rng.gaussian_f32()).collect();
+            let (au, wu2) = (0.3f32, -1.1f32);
+            for best in [f32::INFINITY, 0.0] {
+                let want = pair_scan_f32_arm(Arm::Scalar, au, wu2, &b,
+                                             &wp, &gp, best);
+                for arm in arms() {
+                    let got = pair_scan_f32_arm(arm, au, wu2, &b, &wp,
+                                                &gp, best);
+                    match (got, want) {
+                        (None, None) => {}
+                        (Some((gd, gi)), Some((wd, wi))) => {
+                            assert_eq!(gd.to_bits(), wd.to_bits(),
+                                       "n={n} arm={arm:?}");
+                            assert_eq!(gi, wi, "n={n} arm={arm:?}");
+                        }
+                        other => panic!("n={n} arm={arm:?}: {other:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pair_scan_f32_tracks_f64_oracle() {
+        // The f32 scan is not bit-exact against the f64 scan — that's
+        // the point of keeping f64 on the mask path — but its best
+        // delta must track the oracle's to f32 precision on
+        // well-separated inputs.
+        let mut rng = Rng::new(22);
+        for n in [1usize, 9, 33, 64, 200] {
+            let b64: Vec<f64> =
+                (0..n).map(|_| rng.gaussian_f32() as f64).collect();
+            let wp64: Vec<f64> =
+                (0..n).map(|_| rng.gaussian_f32() as f64).collect();
+            let gp64: Vec<f64> =
+                (0..n).map(|_| rng.gaussian_f32() as f64).collect();
+            let b32: Vec<f32> = b64.iter().map(|&v| v as f32).collect();
+            let wp32: Vec<f32> =
+                wp64.iter().map(|&v| v as f32).collect();
+            let gp32: Vec<f32> =
+                gp64.iter().map(|&v| v as f32).collect();
+            let (au, wu2) = (0.3f64, -1.1f64);
+            let want = pair_scan_arm(Arm::Scalar, au, wu2, &b64, &wp64,
+                                     &gp64, f64::INFINITY)
+                .expect("n >= 1 with infinite best always selects");
+            for arm in arms() {
+                let got = pair_scan_f32_arm(arm, au as f32, wu2 as f32,
+                                            &b32, &wp32, &gp32,
+                                            f32::INFINITY)
+                    .expect("f32 scan selects too");
+                assert!(
+                    (got.0 as f64 - want.0).abs()
+                        <= 1e-4 * want.0.abs().max(1.0),
+                    "n={n} arm={arm:?}: f32 {} vs f64 {}",
+                    got.0,
+                    want.0
+                );
+            }
         }
     }
 

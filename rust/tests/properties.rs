@@ -250,6 +250,7 @@ fn prop_checkpoint_segmentation_is_exact() {
         let ctx = LayerContext {
             w: &inst.w, g: inst.g.as_gram(), stats: None,
             pattern: inst.pattern, t_max, threads: 1,
+            gmax: None,
         };
         let mut plain = warm.clone();
         NativeEngine::default().refine(&ctx, &mut plain, &[])
@@ -398,6 +399,7 @@ fn prop_engine_masks_identical_across_arms() {
             let ctx = LayerContext {
                 w: &inst.w, g: inst.g.as_gram(), stats: None,
                 pattern: inst.pattern, t_max, threads: 1,
+                gmax: None,
             };
             let mut mask = warm.clone();
             let out = engine.refine(&ctx, &mut mask, &[])
@@ -446,6 +448,7 @@ fn prop_block_skip_bound_never_skips_argmin() {
             let ctx = LayerContext {
                 w: &w, g: g.as_gram(), stats: None, pattern,
                 t_max: cfg.t_max, threads: 1,
+                gmax: None,
             };
             let mut mask = warm.clone();
             let out = engine.refine(&ctx, &mut mask, &[])

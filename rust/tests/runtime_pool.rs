@@ -18,7 +18,8 @@ use sparseswaps::runtime::testutil::{
     interp_pool, interp_runtime, swap_manifest,
 };
 use sparseswaps::runtime::{
-    BufferKey, ExecInput, Runtime, RuntimeOptions, TensorData,
+    BufferKey, ExecInput, Runtime, RuntimeError, RuntimeOptions,
+    TensorData,
 };
 use sparseswaps::util::proptest::{check, ensure};
 use sparseswaps::util::prng::Rng;
@@ -123,6 +124,91 @@ fn cache_hits_generation_bumps_and_explicit_invalidation() {
     assert_eq!((s.cache_hits, s.cache_misses, s.cache_invalidations),
                (1, 3, 2));
     assert_eq!(s.cache_peak_bytes, (d * d * 4) as u64);
+}
+
+#[test]
+fn key_only_probes_hit_miss_and_stay_bit_identical() {
+    let (d, chunk) = (8usize, 4usize);
+    let manifest = swap_manifest(d, chunk);
+    let rt = interp_runtime(&manifest, RuntimeOptions::default());
+    let name = format!("layer_loss_d{d}");
+    let mut rng = Rng::new(31);
+    let x = Matrix::from_fn(2 * d, d, |_, _| rng.gaussian_f32());
+    let mut gm = Matrix::zeros(d, d);
+    gm.gram_accumulate(&x);
+    let w = TensorData::from_matrix(
+        &Matrix::from_fn(chunk, d, |_, _| rng.gaussian_f32()));
+    let mask = TensorData::from_matrix(&Matrix::from_fn(
+        chunk, d, |i, j| if (i + j) % 3 == 0 { 0.0 } else { 1.0 }));
+    let g = Arc::new(TensorData::from_matrix(&gm));
+    let key = |generation: u64| BufferKey {
+        layer: 3, tensor: "gram".into(), generation,
+    };
+    let exec = |g_input: ExecInput| {
+        rt.execute_cached(&name, vec![
+            ExecInput::Inline(w.clone()),
+            ExecInput::Inline(mask.clone()),
+            g_input,
+        ])
+    };
+
+    // Probe before anything is resident: structured NotResident, no
+    // upload, no execution — and NOT counted as a data-path miss.
+    let err = exec(ExecInput::CachedRef { key: key(0) }).unwrap_err();
+    assert!(matches!(err, RuntimeError::NotResident(_)), "{err}");
+    let s = rt.stats();
+    assert_eq!((s.probe_hits, s.probe_misses), (0, 1));
+    assert_eq!((s.cache_hits, s.cache_misses), (0, 0));
+    assert_eq!(s.executions, 0);
+
+    // Data-attached upload, then a key-only probe, then a plain
+    // Cached re-execution: all three must produce bit-identical
+    // outputs (the probe path feeds the very same device buffer).
+    let out_up = exec(ExecInput::Cached {
+        key: key(0), data: Arc::clone(&g),
+    }).unwrap();
+    let out_probe = exec(ExecInput::CachedRef { key: key(0) }).unwrap();
+    let out_cached = exec(ExecInput::Cached {
+        key: key(0), data: Arc::clone(&g),
+    }).unwrap();
+    let out_inline = rt.execute(&name, vec![
+        w.clone(), mask.clone(), (*g).clone(),
+    ]).unwrap();
+    let bits = |outs: &[TensorData]| -> Vec<Vec<u32>> {
+        outs.iter()
+            .map(|t| t.as_f32().unwrap().iter()
+                 .map(|v| v.to_bits()).collect())
+            .collect()
+    };
+    let want = bits(&out_up);
+    assert_eq!(bits(&out_probe), want, "probe-hit output diverged");
+    assert_eq!(bits(&out_cached), want, "cached-hit output diverged");
+    assert_eq!(bits(&out_inline), want, "inline output diverged");
+    let s = rt.stats();
+    assert_eq!((s.probe_hits, s.probe_misses), (1, 1));
+    // The probe hit must not inflate the data-path hit counters: one
+    // upload miss + exactly one Cached hit.
+    assert_eq!((s.cache_hits, s.cache_misses), (1, 1));
+
+    // A generation bump makes the resident buffer stale for probes
+    // too: key-only addressing of the new generation misses until the
+    // caller retries with data attached.
+    let err = exec(ExecInput::CachedRef { key: key(1) }).unwrap_err();
+    assert!(matches!(err, RuntimeError::NotResident(_)), "{err}");
+    let out_bumped = exec(ExecInput::Cached {
+        key: key(1), data: Arc::clone(&g),
+    }).unwrap();
+    assert_eq!(bits(&out_bumped), want);
+    let s = rt.stats();
+    assert_eq!((s.probe_hits, s.probe_misses), (1, 2));
+    assert_eq!((s.cache_hits, s.cache_misses, s.cache_invalidations),
+               (1, 2, 1));
+    // Upload accounting: the inline W/mask pairs travel every call
+    // (5 executions), G only on its two generation uploads plus the
+    // one all-inline call.
+    let wm_bytes = (2 * chunk * d * 4) as u64;
+    let g_bytes = (d * d * 4) as u64;
+    assert_eq!(s.upload_bytes, 5 * wm_bytes + 3 * g_bytes);
 }
 
 #[test]
@@ -236,6 +322,7 @@ fn pooled_offload_masks_bit_identical_to_serial() {
             let ctx = LayerContext {
                 w, g: g.as_gram(), stats: None, pattern, t_max,
                 threads: 1,
+                gmax: None,
             };
             let mut mask = warm.clone();
             OffloadEngine::new(serial.primary(), "interp")
@@ -255,6 +342,7 @@ fn pooled_offload_masks_bit_identical_to_serial() {
                     let ctx = LayerContext {
                         w, g: g.as_gram(), stats: None, pattern,
                         t_max, threads: 1,
+                        gmax: None,
                     };
                     let mut mask = warm.clone();
                     OffloadEngine::new(rt, "interp")
@@ -299,6 +387,7 @@ fn offload_engine_snapshots_match_across_schedules() {
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max: 16,
             threads: 1,
+            gmax: None,
         };
         let mut mask = warm.clone();
         let out = OffloadEngine::new(rt, "interp")

@@ -21,7 +21,7 @@ use sparseswaps::pruning::dsnot::FeatureStats;
 use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::mask::{mask_from_scores, validate, Pattern};
 use sparseswaps::pruning::saliency;
-use sparseswaps::pruning::sparseswaps::NativeEngine;
+use sparseswaps::pruning::sparseswaps::{gmax_table, NativeEngine};
 use sparseswaps::runtime::testutil::{interp_pool, swap_manifest};
 use sparseswaps::runtime::RuntimeOptions;
 use sparseswaps::util::proptest::{check, ensure};
@@ -102,6 +102,7 @@ fn native_shard_sweep_masks_and_snapshots_bit_identical() {
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max,
             threads: 1,
+            gmax: None,
         };
         let mut ref_mask = warm.clone();
         let ref_out = NativeEngine::default()
@@ -155,6 +156,7 @@ fn offload_shard_sweep_masks_and_snapshots_bit_identical() {
         let ctx = LayerContext {
             w: &w, g: g.as_gram(), stats: None, pattern, t_max,
             threads: 1,
+            gmax: None,
         };
         let mut ref_mask = warm.clone();
         let ref_out = sparseswaps::coordinator::OffloadEngine::new(
@@ -188,6 +190,87 @@ fn offload_shard_sweep_masks_and_snapshots_bit_identical() {
 }
 
 #[test]
+fn shared_gmax_table_matches_per_shard_recompute() {
+    // The per-layer skip-bound table is a pure function of
+    // (G, nm_block): handing every shard one borrowed table must land
+    // on the same masks as each shard recomputing its own — for
+    // unstructured scans (whole-row maxima) and N:M (per-block
+    // maxima) alike, at every shard size.
+    let (rows, d, t_max) = (13usize, 16usize, 12usize);
+    let mut rng = Rng::new(17);
+    for pattern in [Pattern::PerRow { keep: 7 },
+                    Pattern::Nm { n: 2, m: 4 }] {
+        let (w, g, warm) = layer(&mut rng, rows, d, pattern);
+        let table = gmax_table(g.as_gram(), pattern.nm_block(), 3);
+        assert_eq!(table.len(), d);
+
+        // Whole-layer reference (computes its own local table).
+        let ctx = LayerContext {
+            w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+            threads: 1,
+            gmax: None,
+        };
+        let mut ref_mask = warm.clone();
+        NativeEngine::default()
+            .refine(&ctx, &mut ref_mask, &[])
+            .unwrap();
+
+        // Manual shard loop through the row-range contract, with and
+        // without the shared table.
+        let refine_sharded = |gmax: Option<&[f64]>, shard_rows: usize| {
+            let mut mask = warm.clone();
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let r1 = (r0 + shard_rows).min(rows);
+                let ctx = LayerContext {
+                    w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+                    threads: 1,
+                    gmax,
+                };
+                let mut shard = Matrix::zeros(r1 - r0, d);
+                for r in r0..r1 {
+                    shard.row_mut(r - r0).copy_from_slice(mask.row(r));
+                }
+                NativeEngine::default()
+                    .refine_rows(&ctx, r0..r1, &mut shard, &[])
+                    .unwrap();
+                for r in r0..r1 {
+                    mask.row_mut(r).copy_from_slice(shard.row(r - r0));
+                }
+                r0 = r1;
+            }
+            mask
+        };
+        for shard_rows in [1usize, 7, rows] {
+            let local = refine_sharded(None, shard_rows);
+            let shared = refine_sharded(Some(&table), shard_rows);
+            assert_eq!(local.data, shared.data,
+                       "{pattern:?} shard_rows={shard_rows}: shared \
+                        table changed a mask");
+            assert_eq!(shared.data, ref_mask.data,
+                       "{pattern:?} shard_rows={shard_rows}: sharded \
+                        diverged from whole-layer");
+            validate(&shared, pattern).unwrap();
+        }
+
+        // The scheduler path computes the table once per layer and
+        // lends it to every shard; it must land on the identical
+        // masks at every plan, adaptive included.
+        let tp = ThreadPool::new(3);
+        for shard_rows in [1usize, 7, 0, rows] {
+            let works = vec![work(0, &w, &g, &warm, pattern, None, 1)];
+            let res = refine_block(
+                &tp, &Refiner::SparseSwapsNative, &works,
+                &plan(t_max, &[], shard_rows))
+                .unwrap();
+            assert_eq!(res[0].mask.data, ref_mask.data,
+                       "{pattern:?} shard_rows={shard_rows}: scheduler \
+                        shared-gmax mask diverged");
+        }
+    }
+}
+
+#[test]
 fn ragged_tail_shard_plan_covers_every_row() {
     // rows % shard_size != 0: the tail shard is short, coverage must
     // still be exact and results identical.
@@ -198,6 +281,7 @@ fn ragged_tail_shard_plan_covers_every_row() {
     let ctx = LayerContext {
         w: &w, g: g.as_gram(), stats: None, pattern, t_max: 10,
         threads: 1,
+        gmax: None,
     };
     let mut ref_mask = warm.clone();
     NativeEngine::default().refine(&ctx, &mut ref_mask, &[]).unwrap();
@@ -230,6 +314,7 @@ fn skewed_block_adaptive_sharding_matches_per_layer_reference() {
         let ctx = LayerContext {
             w, g: g.as_gram(), stats: None, pattern, t_max: 12,
             threads: 1,
+            gmax: None,
         };
         let mut m = warm.clone();
         NativeEngine::default().refine(&ctx, &mut m, &[]).unwrap();
