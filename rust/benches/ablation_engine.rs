@@ -32,7 +32,14 @@
 //! bit-identical masks / bounded f32 drift and writes the "wave2"
 //! section of `reports/bench_kernels.json`.
 //!
-//! Part 5 (needs artifacts): the fused-XLA and Pallas offload engines
+//! Part 5 (artifact-free, always runs): the fault-recovery sweep —
+//! the offload[interp] block refinement under the deterministic fault
+//! harness (one worker killed mid-run plus a bounded transient
+//! storm).  Gates on the faulted run completing with masks
+//! bit-identical to the fault-free run and reports the recovery
+//! overhead to the "faults" section of `reports/bench_kernels.json`.
+//!
+//! Part 6 (needs artifacts): the fused-XLA and Pallas offload engines
 //! on their own artifact-width layer.
 mod common;
 
@@ -57,9 +64,10 @@ use sparseswaps::pruning::sparseswaps::{
     SwapConfig,
 };
 use sparseswaps::runtime::testutil::{
-    interp_pool, interp_runtime, model_manifest, swap_manifest,
+    faulty_interp_pool, interp_pool, interp_runtime, model_manifest,
+    swap_manifest,
 };
-use sparseswaps::runtime::{Runtime, RuntimeOptions};
+use sparseswaps::runtime::{FaultPlan, Runtime, RuntimeOptions};
 use sparseswaps::util::benchlib::{merge_json_section, Table};
 use sparseswaps::util::jsonlite::Json;
 use sparseswaps::util::kernels;
@@ -407,6 +415,7 @@ fn shards_section() {
             checkpoints: Vec::new(),
             shard_rows,
             serial: false,
+            max_retries: 2,
         };
         let t0 = Instant::now();
         let res = refine_block(&tp, &Refiner::SparseSwapsNative,
@@ -596,6 +605,7 @@ fn wave2_section() {
         checkpoints: Vec::new(),
         shard_rows: chunk,
         serial: false,
+        max_retries: 2,
     };
     let pool = interp_pool(&manifest, devices, RuntimeOptions::default());
     let t0 = Instant::now();
@@ -772,11 +782,136 @@ fn wave2_section() {
               parity OK)");
 }
 
+/// Artifact-free fault-recovery sweep: the offload[interp] block
+/// refinement under the deterministic fault harness — device 1 killed
+/// mid-run plus a bounded transient storm on the survivor.  Exits
+/// non-zero unless the faulted run completes, its masks are
+/// bit-identical to the fault-free run, and the plan actually forced
+/// retries + a quarantine (the CI bench smoke job gates on this).
+fn faults_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let (d, chunk, rows, layers, t_max, devices) =
+        if quick { (64usize, 32usize, 128usize, 2usize, 6usize, 2usize) }
+        else { (128, 32, 256, 4, 10, 2) };
+    let manifest = swap_manifest(d, chunk);
+    let pattern = Pattern::PerRow { keep: d * 2 / 5 };
+    let mut rng = Rng::new(17);
+    let work: Vec<(Matrix, Matrix, Matrix)> = (0..layers).map(|_| {
+        let x = Matrix::from_fn(2 * d, d, |_, _| rng.gaussian_f32());
+        let mut g = Matrix::zeros(d, d);
+        g.gram_accumulate_par(&x, 4);
+        let w = Matrix::from_fn(rows, d, |_, _| rng.gaussian_f32());
+        let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
+                                    pattern);
+        (w, g, warm)
+    }).collect();
+    let make_works = || {
+        work.iter().enumerate()
+            .map(|(li, (w, g, warm))| LayerWork {
+                li,
+                label: format!("layer{li}"),
+                w: w.clone(),
+                g: g.as_gram(),
+                stats: None,
+                pattern,
+                warm: warm.clone(),
+                shard_align: chunk,
+                gram_key: sparseswaps::coordinator::swaploop::
+                    next_refinement_id(),
+            })
+            .collect::<Vec<LayerWork>>()
+    };
+    let plan = BlockSchedule {
+        t_max,
+        threads_per_shard: 1,
+        checkpoints: Vec::new(),
+        shard_rows: chunk,
+        serial: false,
+        max_retries: 8,
+    };
+    let refiner =
+        Refiner::SparseSwapsOffload { impl_name: "interp".into() };
+
+    let pool = interp_pool(&manifest, devices, RuntimeOptions::default());
+    let t0 = Instant::now();
+    let clean = refine_block(&pool, &refiner, &make_works(), &plan)
+        .expect("clean interp block refinement");
+    let clean_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    // `max_faults=1` keeps the survivor below the quarantine
+    // threshold, so completion on device 0 is guaranteed with
+    // `max_retries` above the total fault supply.
+    let fplan = FaultPlan::parse(
+        "seed=7;rate=0.05;max_faults=1;kill=1;kill_after=2")
+        .expect("bench fault plan");
+    let fpool = faulty_interp_pool(&manifest, devices,
+                                   RuntimeOptions::default(), &fplan);
+    let t0 = Instant::now();
+    let faulted = refine_block(&fpool, &refiner, &make_works(), &plan)
+        .unwrap_or_else(|e| {
+            eprintln!("[ablation_engine] RECOVERY FAILURE: faulted \
+                       block refinement did not complete: {e}");
+            std::process::exit(1);
+        });
+    let fault_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    for (li, (a, b)) in clean.iter().zip(&faulted).enumerate() {
+        if a.mask.data != b.mask.data {
+            eprintln!("[ablation_engine] PARITY FAILURE: faulted \
+                       layer {li} mask diverged from the fault-free \
+                       run");
+            std::process::exit(1);
+        }
+    }
+    let retries = fpool.shard_retries();
+    let quarantined = fpool.workers_quarantined();
+    if retries == 0 || quarantined == 0 {
+        eprintln!("[ablation_engine] RECOVERY FAILURE: the fault plan \
+                   injected nothing (retries {retries}, quarantined \
+                   {quarantined})");
+        std::process::exit(1);
+    }
+    let total_rows = (layers * rows) as f64;
+    let clean_rps = total_rows / clean_secs;
+    let fault_rps = total_rows / fault_secs;
+    let overhead_pct = 100.0 * (fault_secs / clean_secs - 1.0);
+    let mut table = Table::new(
+        format!("Fault recovery — offload[interp], 1 worker killed + \
+                 transient storm ({layers} layers x {rows}x{d}, \
+                 T_max={t_max})"),
+        &["run", "seconds", "rows/s", "shard retries", "quarantined"]);
+    table.row(vec!["clean".into(), format!("{clean_secs:.3}"),
+                   format!("{clean_rps:.0}"), "0".into(), "0".into()]);
+    table.row(vec!["faulted".into(), format!("{fault_secs:.3}"),
+                   format!("{fault_rps:.0}"), retries.to_string(),
+                   quarantined.to_string()]);
+    table.print();
+    let section = Json::obj(vec![
+        ("d", Json::num(d as f64)),
+        ("rows", Json::num(rows as f64)),
+        ("layers", Json::num(layers as f64)),
+        ("devices", Json::num(devices as f64)),
+        ("t_max", Json::num(t_max as f64)),
+        ("rows_per_s_clean", Json::num(clean_rps)),
+        ("rows_per_s_faulted", Json::num(fault_rps)),
+        ("recovery_overhead_pct", Json::num(overhead_pct)),
+        ("shard_retries", Json::num(retries as f64)),
+        ("workers_quarantined", Json::num(quarantined as f64)),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "faults", section) {
+        eprintln!("[ablation_engine] FAILED writing bench_kernels: {e}");
+        std::process::exit(1);
+    }
+    println!("[ablation_engine] faults section written to \
+              reports/bench_kernels.json (recovery parity OK)");
+}
+
 fn main() {
     native_section();
     pool_section();
     shards_section();
     wave2_section();
+    faults_section();
 
     // Offload engines (need AOT artifacts; their own layer at an
     // artifact width).

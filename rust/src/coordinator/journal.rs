@@ -1,0 +1,343 @@
+//! Resumable prune runs: a per-block mask journal.
+//!
+//! The paper's central property — 1-swap refinement warmstarts from
+//! *any* valid mask — makes crash recovery structurally cheap: a
+//! partially refined model is itself a valid warmstart, so a prune
+//! run that died between blocks can resume from its last journaled
+//! block instead of starting over.  After each block the pipeline
+//! appends that block's refined layer masks here; `prune --resume`
+//! reloads them, skips the completed blocks (including their
+//! sequential recalibration passes), and continues.  Sequential
+//! recalibration is a deterministic function of (weights, masks,
+//! calibration seed), so a resumed run's remaining blocks are
+//! bit-identical to an uninterrupted run's — property-tested in
+//! `tests/faults.rs`.
+//!
+//! Layout under the journal directory:
+//!
+//!   meta.json            {"version", "fingerprint", "model",
+//!                         "n_blocks"}
+//!   block_<b>.ssjb       magic "SSJB" | u32 version | u32 fingerprint
+//!                        | u32 block | u32 n_layers | per layer:
+//!                        u32 layer_index | u32 rows | u32 cols |
+//!                        f32 LE payload | u32 crc32 trailer
+//!
+//! The fingerprint is a CRC32 over every config knob that changes the
+//! refined masks ([`config_fingerprint`]); resuming under a different
+//! config is rejected rather than silently mixing two runs' masks.
+//! Mask snapshots (`--checkpoints`) are *not* journaled: a resumed
+//! run restores final masks for completed blocks but re-records
+//! snapshots only for the blocks it refines itself.
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::pipeline::PruneConfig;
+use crate::model::checkpoint::crc32;
+use crate::runtime::service::RuntimeError;
+use crate::util::jsonlite::Json;
+use crate::util::tensor::Matrix;
+
+const MAGIC: &[u8; 4] = b"SSJB";
+const VERSION: u32 = 1;
+
+fn err(e: impl std::fmt::Display) -> RuntimeError {
+    RuntimeError::Msg(format!("journal: {e}"))
+}
+
+/// CRC32 over every config knob that changes the refined masks.  A
+/// resume under a different fingerprint is rejected: the journaled
+/// masks would be a different run's.  Wall-clock knobs (threads,
+/// shard size, retry budget) are deliberately excluded — masks are
+/// bit-identical across them.
+pub fn config_fingerprint(model: &str, cfg: &PruneConfig) -> u32 {
+    let key = format!(
+        "model={};criterion={};pattern={};refiner={};t_max={};\
+         calib={};sequential={};checkpoints={:?}",
+        model, cfg.criterion.name(), cfg.pattern_kind.label(),
+        cfg.refiner.label(), cfg.t_max, cfg.calib_batches,
+        cfg.sequential, cfg.checkpoints);
+    crc32(key.as_bytes())
+}
+
+/// One prune run's journal directory handle.
+pub struct Journal {
+    dir: PathBuf,
+    fingerprint: u32,
+}
+
+impl Journal {
+    /// Start a fresh journal: wipes stale block files from any prior
+    /// run in `dir` and writes `meta.json`.
+    pub fn create(dir: impl AsRef<Path>, model: &str, n_blocks: usize,
+                  fingerprint: u32) -> Result<Journal, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).map_err(err)?;
+        for entry in std::fs::read_dir(&dir).map_err(err)? {
+            let path = entry.map_err(err)?.path();
+            let name = path.file_name()
+                .and_then(|n| n.to_str())
+                .unwrap_or("");
+            if name.starts_with("block_") && name.ends_with(".ssjb") {
+                std::fs::remove_file(&path).map_err(err)?;
+            }
+        }
+        let meta = Json::obj(vec![
+            ("version", Json::num(VERSION as f64)),
+            ("fingerprint", Json::num(fingerprint as f64)),
+            ("model", Json::str(model)),
+            ("n_blocks", Json::num(n_blocks as f64)),
+        ]);
+        std::fs::write(dir.join("meta.json"), format!("{meta}\n"))
+            .map_err(err)?;
+        Ok(Journal { dir, fingerprint })
+    }
+
+    /// Open an existing journal for `--resume`, validating that it
+    /// was written under the same config fingerprint.
+    pub fn open_resume(dir: impl AsRef<Path>, fingerprint: u32)
+        -> Result<Journal, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            err(format!(
+                "no journal to resume at {}: {e}", meta_path.display()))
+        })?;
+        let meta = Json::parse(&text).map_err(err)?;
+        let stored = meta.get("fingerprint")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| err("meta.json lacks a fingerprint"))?
+            as u32;
+        if stored != fingerprint {
+            return Err(err(format!(
+                "journal fingerprint mismatch (journal {stored:#x}, \
+                 config {fingerprint:#x}): the journaled masks were \
+                 produced under a different prune config")));
+        }
+        Ok(Journal { dir, fingerprint })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn block_path(&self, b: usize) -> PathBuf {
+        self.dir.join(format!("block_{b}.ssjb"))
+    }
+
+    /// Journal one completed block's refined masks, keyed by the
+    /// model-wide prunable-layer index.  Written via a temp file +
+    /// rename so a crash mid-write never leaves a truncated block
+    /// file behind (the CRC trailer catches torn writes that slip
+    /// through anyway).
+    pub fn record_block(&self, b: usize,
+                        layer_masks: &[(usize, &Matrix)])
+        -> Result<(), RuntimeError> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.fingerprint.to_le_bytes());
+        buf.extend_from_slice(&(b as u32).to_le_bytes());
+        buf.extend_from_slice(
+            &(layer_masks.len() as u32).to_le_bytes());
+        for (li, m) in layer_masks {
+            buf.extend_from_slice(&(*li as u32).to_le_bytes());
+            buf.extend_from_slice(&(m.rows as u32).to_le_bytes());
+            buf.extend_from_slice(&(m.cols as u32).to_le_bytes());
+            for &x in &m.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let crc = crc32(&buf);
+        buf.extend_from_slice(&crc.to_le_bytes());
+        let tmp = self.dir.join(format!("block_{b}.ssjb.tmp"));
+        let mut f = std::fs::File::create(&tmp).map_err(err)?;
+        f.write_all(&buf).map_err(err)?;
+        drop(f);
+        std::fs::rename(&tmp, self.block_path(b)).map_err(err)?;
+        Ok(())
+    }
+
+    /// Block indices with a journaled block file, sorted.  Validity
+    /// (CRC, fingerprint) is checked by [`Journal::load_block`].
+    pub fn completed_blocks(&self) -> Vec<usize> {
+        let mut out: Vec<usize> = Vec::new();
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return out;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(b) = name.strip_prefix("block_")
+                .and_then(|s| s.strip_suffix(".ssjb"))
+                .and_then(|s| s.parse::<usize>().ok()) {
+                out.push(b);
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Load one journaled block's `(layer_index, mask)` list.
+    pub fn load_block(&self, b: usize)
+        -> Result<Vec<(usize, Matrix)>, RuntimeError> {
+        let path = self.block_path(b);
+        let mut buf = Vec::new();
+        std::fs::File::open(&path)
+            .and_then(|mut f| f.read_to_end(&mut buf))
+            .map_err(|e| err(format!("{}: {e}", path.display())))?;
+        if buf.len() < 24 || &buf[..4] != MAGIC {
+            return Err(err(format!("{}: bad magic", path.display())));
+        }
+        let stored_crc = u32::from_le_bytes(
+            buf[buf.len() - 4..].try_into().unwrap());
+        let actual = crc32(&buf[..buf.len() - 4]);
+        if stored_crc != actual {
+            return Err(err(format!(
+                "{}: crc mismatch (stored {stored_crc:#x}, computed \
+                 {actual:#x})", path.display())));
+        }
+        let body = &buf[..buf.len() - 4];
+        let mut pos = 4usize;
+        let mut u32_at = |p: &mut usize| -> Result<u32, RuntimeError> {
+            if *p + 4 > body.len() {
+                return Err(err(format!(
+                    "{}: truncated", path.display())));
+            }
+            let v = u32::from_le_bytes(
+                body[*p..*p + 4].try_into().unwrap());
+            *p += 4;
+            Ok(v)
+        };
+        let version = u32_at(&mut pos)?;
+        if version != VERSION {
+            return Err(err(format!(
+                "{}: unsupported version {version}", path.display())));
+        }
+        let fp = u32_at(&mut pos)?;
+        if fp != self.fingerprint {
+            return Err(err(format!(
+                "{}: fingerprint mismatch", path.display())));
+        }
+        let block = u32_at(&mut pos)? as usize;
+        if block != b {
+            return Err(err(format!(
+                "{}: holds block {block}, expected {b}",
+                path.display())));
+        }
+        let n_layers = u32_at(&mut pos)? as usize;
+        let mut out = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let li = u32_at(&mut pos)? as usize;
+            let rows = u32_at(&mut pos)? as usize;
+            let cols = u32_at(&mut pos)? as usize;
+            let n = rows * cols;
+            if pos + n * 4 > body.len() {
+                return Err(err(format!(
+                    "{}: truncated payload", path.display())));
+            }
+            let data: Vec<f32> = body[pos..pos + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            pos += n * 4;
+            out.push((li, Matrix::from_vec(rows, cols, data)));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("ssjb_test_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&dir).ok();
+        dir
+    }
+
+    fn mask(rows: usize, cols: usize, bias: f32) -> Matrix {
+        Matrix::from_fn(rows, cols, |r, c| {
+            if (r + c) % 2 == 0 { 1.0 } else { bias }
+        })
+    }
+
+    #[test]
+    fn round_trip_blocks() {
+        let dir = tmp_dir("roundtrip");
+        let j = Journal::create(&dir, "tiny", 2, 0xABCD).unwrap();
+        assert!(j.completed_blocks().is_empty());
+        let m0 = mask(8, 6, 0.0);
+        let m1 = mask(4, 6, 0.0);
+        j.record_block(0, &[(0, &m0), (3, &m1)]).unwrap();
+        assert_eq!(j.completed_blocks(), vec![0]);
+        let got = j.load_block(0).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 0);
+        assert_eq!(got[0].1.data, m0.data);
+        assert_eq!(got[1].0, 3);
+        assert_eq!(got[1].1.data, m1.data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resume_validates_fingerprint() {
+        let dir = tmp_dir("fingerprint");
+        Journal::create(&dir, "tiny", 2, 7).unwrap();
+        assert!(Journal::open_resume(&dir, 7).is_ok());
+        let e = Journal::open_resume(&dir, 8).unwrap_err();
+        assert!(e.to_string().contains("fingerprint mismatch"),
+                "unexpected error: {e}");
+        let missing = tmp_dir("fingerprint_missing");
+        let e = Journal::open_resume(&missing, 7).unwrap_err();
+        assert!(e.to_string().contains("no journal to resume"),
+                "unexpected error: {e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn create_wipes_stale_blocks() {
+        let dir = tmp_dir("wipe");
+        let j = Journal::create(&dir, "tiny", 2, 1).unwrap();
+        j.record_block(1, &[(0, &mask(4, 4, 0.0))]).unwrap();
+        let j2 = Journal::create(&dir, "tiny", 2, 1).unwrap();
+        assert!(j2.completed_blocks().is_empty(),
+                "create must wipe stale block files");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let dir = tmp_dir("corrupt");
+        let j = Journal::create(&dir, "tiny", 1, 9).unwrap();
+        j.record_block(0, &[(0, &mask(6, 4, 0.0))]).unwrap();
+        let path = dir.join("block_0.ssjb");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let e = j.load_block(0).unwrap_err();
+        assert!(e.to_string().contains("crc mismatch"),
+                "unexpected error: {e}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprint_tracks_mask_changing_knobs() {
+        let cfg = PruneConfig::default();
+        let a = config_fingerprint("tiny", &cfg);
+        assert_eq!(a, config_fingerprint("tiny", &cfg));
+        let mut other = cfg.clone();
+        other.t_max = cfg.t_max + 1;
+        assert_ne!(a, config_fingerprint("tiny", &other));
+        assert_ne!(a, config_fingerprint("tiny2", &cfg));
+        // Wall-clock knobs do not change masks, so they must not
+        // change the fingerprint either.
+        let mut sharded = cfg.clone();
+        sharded.shard_rows = 17;
+        sharded.threads = 3;
+        assert_eq!(a, config_fingerprint("tiny", &sharded));
+    }
+}

@@ -30,8 +30,10 @@
 //! this respect and the ablation benches compare them.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Instant;
 
+use crate::coordinator::journal::{config_fingerprint, Journal};
 use crate::coordinator::scheduler::{
     refine_block, BlockSchedule, LayerWork, Scheduler, ShardedLayer,
     WorkerCtx,
@@ -137,6 +139,26 @@ pub struct PruneConfig {
     /// offload chunk shape).  Masks and snapshots are bit-identical
     /// for every value.
     pub shard_rows: usize,
+    /// Per-shard redispatch budget for transient worker failures
+    /// ([`BlockSchedule::max_retries`]; deterministic failures never
+    /// retry).
+    pub max_shard_retries: usize,
+    /// Journal directory for resumable runs: after each block the
+    /// refined masks land in `<dir>/block_<b>.ssjb`
+    /// ([`crate::coordinator::journal`]).  `None` disables
+    /// journaling (and resume).
+    pub journal: Option<PathBuf>,
+    /// Resume from the journal instead of starting fresh: completed
+    /// blocks' masks are restored and skipped (including their
+    /// sequential recalibration); refinement continues at the first
+    /// unjournaled block.  Rejected if the journal was written under
+    /// a different config fingerprint.
+    pub resume: bool,
+    /// Test hook: stop cleanly after journaling this block,
+    /// simulating a crash between blocks (the resume tests drive the
+    /// kill-then-`--resume` path through this under plain
+    /// `cargo test`).
+    pub halt_after_block: Option<usize>,
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -178,6 +200,10 @@ impl Default for PruneConfig {
             threads: default_threads(),
             layer_parallel: true,
             shard_rows: 0,
+            max_shard_retries: 2,
+            journal: None,
+            resume: false,
+            halt_after_block: None,
         }
     }
 }
@@ -243,6 +269,17 @@ impl PruneReport {
 /// (offload).  Masks and snapshots are bit-identical for every shard
 /// size and worker count (disable `layer_parallel` for per-layer
 /// wall-clock timings).
+///
+/// Fault tolerance: transiently failed shards are redispatched (up to
+/// `PruneConfig::max_shard_retries` per shard, on a different worker
+/// where possible); if every device worker ends up quarantined the
+/// run degrades to the native host refiner instead of aborting.  With
+/// `PruneConfig::journal` set, each block's refined masks are
+/// journaled so an interrupted run can resume
+/// (`PruneConfig::resume`) with bit-identical results.  A resumed
+/// run's report covers only the blocks it refined itself, and
+/// snapshots are re-recorded only for those blocks (restored blocks
+/// contribute their *final* masks to the backfill).
 pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
              cfg: &PruneConfig) -> Result<(MaskSet, PruneReport),
                                           RuntimeError> {
@@ -296,7 +333,49 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
             usize::MAX
         },
         serial: !cfg.layer_parallel,
+        max_retries: cfg.max_shard_retries,
     };
+
+    // Resumable runs: journal each block's refined masks, and on
+    // `--resume` restore the completed blocks instead of recomputing
+    // them.  The restored masks reproduce the exact model state the
+    // interrupted run had, so the remaining blocks' sequential
+    // recalibration — and therefore their masks — are bit-identical
+    // to an uninterrupted run's.
+    let fingerprint = config_fingerprint(&meta.name, cfg);
+    let journal = match &cfg.journal {
+        Some(dir) if cfg.resume =>
+            Some(Journal::open_resume(dir, fingerprint)?),
+        Some(dir) => Some(Journal::create(dir, &meta.name,
+                                          meta.n_blocks, fingerprint)?),
+        None if cfg.resume => {
+            return Err(RuntimeError::Msg(
+                "resume requires a journal directory".into()));
+        }
+        None => None,
+    };
+    let mut completed: Vec<usize> = Vec::new();
+    if cfg.resume {
+        let j = journal.as_ref().expect("resume checked above");
+        for b in j.completed_blocks() {
+            for (li, mask) in j.load_block(b)? {
+                masks.masks[li] = mask;
+            }
+            completed.push(b);
+        }
+        crate::log_debug!(
+            "prune[{}] resume: restored {} journaled block(s)",
+            meta.name, completed.len());
+    }
+
+    // Graceful degradation: when every device worker has been
+    // quarantined the offload path cannot make progress, so the rest
+    // of the run falls back to the native host engine (bit-identical
+    // masks for the interp backend; gated in the wave-2 bench for the
+    // offload parity in general).
+    let native = Refiner::SparseSwapsNative;
+    let mut degraded = false;
+    let mut fallback_pool: Option<ThreadPool> = None;
 
     let blocks: Vec<usize> = (0..meta.n_blocks).collect();
     let mut stats_oneshot: Option<GramStats> = None;
@@ -307,6 +386,9 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
     }
 
     for &b in &blocks {
+        if completed.contains(&b) {
+            continue;
+        }
         // Borrow (never clone) the Gram statistics: layer jobs hold
         // zero-copy views into this block's stream stacks.
         let stats_block;
@@ -345,7 +427,8 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
             // Adaptive shard sizes align to the offload chunk shape
             // so no shard pays a padded half-chunk.
             let shard_align = match &cfg.refiner {
-                Refiner::SparseSwapsOffload { impl_name } => rt
+                Refiner::SparseSwapsOffload { impl_name }
+                    if !degraded => rt
                     .manifest()
                     .find_swap_artifact(layer.d_in,
                                         &pattern.artifact_tag(),
@@ -368,20 +451,43 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
             });
         }
 
-        let results = refine_block(sched, &cfg.refiner, &works, &plan);
+        let (refiner_b, sched_b): (&Refiner, &dyn Scheduler) =
+            if degraded {
+                (&native,
+                 fallback_pool.as_ref().expect("degraded pool built"))
+            } else {
+                (&cfg.refiner, sched)
+            };
+        let results = refine_block(sched_b, refiner_b, &works, &plan);
 
         // Release the block's shared Gram buffers on every device
         // before propagating any error (shards leave them resident
         // for their siblings; the block is done — or dead — now, so
         // the budget goes back to live layers either way).
-        if offload {
+        if offload && !degraded {
             for work in &works {
                 for d in 0..pool.devices() {
                     pool.runtime(d).invalidate(work.gram_key);
                 }
             }
         }
-        let results = results?;
+        let results = match results {
+            Ok(r) => r,
+            Err(e) if offload && !degraded
+                && pool.workers_quarantined()
+                    >= pool.devices() as u64 => {
+                eprintln!(
+                    "prune: all {} device worker(s) quarantined \
+                     ({e}); degrading to the native host refiner",
+                    pool.devices());
+                degraded = true;
+                fallback_pool = Some(ThreadPool::new(host_workers));
+                refine_block(
+                    fallback_pool.as_ref().expect("just built"),
+                    &native, &works, &plan)?
+            }
+            Err(e) => return Err(e),
+        };
 
         for res in results {
             let ShardedLayer { li, mask, outcome, seconds, .. } = res;
@@ -413,6 +519,19 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
             }
             masks.masks[li] = mask;
             report.layers.push(lr);
+        }
+
+        if let Some(j) = &journal {
+            let layer_masks: Vec<_> = works.iter()
+                .map(|w| (w.li, &masks.masks[w.li]))
+                .collect();
+            j.record_block(b, &layer_masks)?;
+        }
+        if cfg.halt_after_block == Some(b) {
+            crate::log_debug!(
+                "prune[{}] halting after block {b} (test hook)",
+                meta.name);
+            break;
         }
     }
 

@@ -25,6 +25,18 @@
 //! bit-identical to the whole-layer schedule for every shard size and
 //! worker count — property-tested in `tests/shards.rs` and gated in
 //! the `ablation_engine` bench's "shards" sweep.
+//!
+//! The shard is also the *recovery* grain: [`refine_block`] collects
+//! per-shard outcomes instead of aborting on the first loss, and
+//! redispatches transiently failed shards (dead worker, evicted
+//! buffers — `RefineError::is_transient`) up to
+//! [`BlockSchedule::max_retries`] times, hinting the pool away from
+//! the worker that just failed.  Outcomes feed the [`RuntimePool`]
+//! quarantine ledger through [`Scheduler::report_outcome`]; once
+//! every worker is quarantined the block aborts with a recognizable
+//! error and the pipeline degrades to the native host path.  Retried
+//! runs stay bit-identical (each attempt re-copies its warmstart rows
+//! — property-tested in `tests/faults.rs`).
 
 use std::ops::Range;
 use std::sync::mpsc;
@@ -33,7 +45,8 @@ use std::time::Instant;
 use crate::coordinator::pipeline::Refiner;
 use crate::pruning::dsnot::FeatureStats;
 use crate::pruning::engine::{
-    LayerContext, RefineEngine, RefineOutcome, SnapshotAssembler,
+    LayerContext, RefineEngine, RefineError, RefineOutcome,
+    SnapshotAssembler,
 };
 use crate::pruning::mask::Pattern;
 use crate::pruning::sparseswaps::{gmax_table, LayerOutcome};
@@ -77,6 +90,31 @@ pub trait Scheduler {
     /// Run every job to completion (scoped fork/join).
     fn run_shards<'env>(&self, jobs: Vec<ShardJob<'env>>);
 
+    /// [`run_shards`] with a best-effort placement hint: spread the
+    /// jobs over workers *not* listed in `avoid` — the retry path's
+    /// "redispatch on a different worker".  The default (host pool)
+    /// ignores the hint: host threads do not fail independently.
+    ///
+    /// [`run_shards`]: Scheduler::run_shards
+    fn run_shards_avoiding<'env>(&self, jobs: Vec<ShardJob<'env>>,
+                                 _avoid: &[usize]) {
+        self.run_shards(jobs);
+    }
+
+    /// Record one shard outcome for the worker health ledger.  The
+    /// default is a no-op; [`RuntimePool`] feeds its quarantine
+    /// streaks from this.
+    fn report_outcome(&self, _worker: usize, _ok: bool) {}
+
+    /// Currently quarantined worker indices (always empty for the
+    /// host pool).
+    fn quarantined(&self) -> Vec<usize> {
+        Vec::new()
+    }
+
+    /// Count one shard redispatch (surfaced through pool stats).
+    fn note_shard_retry(&self) {}
+
     /// Cumulative nanoseconds each worker spent executing jobs —
     /// max/mean across workers is the bench load-imbalance metric.
     fn busy_nanos(&self) -> Vec<u64>;
@@ -109,6 +147,11 @@ impl Scheduler for RuntimePool {
     }
 
     fn run_shards<'env>(&self, jobs: Vec<ShardJob<'env>>) {
+        Scheduler::run_shards_avoiding(self, jobs, &[]);
+    }
+
+    fn run_shards_avoiding<'env>(&self, jobs: Vec<ShardJob<'env>>,
+                                 avoid: &[usize]) {
         let wrapped: Vec<Box<dyn FnOnce(&Runtime) + Send + 'env>> = jobs
             .into_iter()
             .map(|job| {
@@ -118,7 +161,19 @@ impl Scheduler for RuntimePool {
                     as Box<dyn FnOnce(&Runtime) + Send + 'env>
             })
             .collect();
-        self.run_scoped(wrapped);
+        self.run_scoped_avoiding(wrapped, avoid);
+    }
+
+    fn report_outcome(&self, worker: usize, ok: bool) {
+        self.report_worker_outcome(worker, ok);
+    }
+
+    fn quarantined(&self) -> Vec<usize> {
+        self.quarantined_workers()
+    }
+
+    fn note_shard_retry(&self) {
+        RuntimePool::note_shard_retry(self);
     }
 
     fn busy_nanos(&self) -> Vec<u64> {
@@ -204,6 +259,11 @@ pub struct BlockSchedule {
     /// Dispatch shards one at a time (per-layer wall-clock timings;
     /// `--layer-parallel=false`).  Masks are identical either way.
     pub serial: bool,
+    /// Redispatch budget per shard for *transient* failures (dead
+    /// worker, evicted buffers): a shard may run `1 + max_retries`
+    /// times before the block aborts.  Deterministic failures
+    /// (`RefineError::is_transient` == false) never retry.
+    pub max_retries: usize,
 }
 
 /// One layer's merged refinement result.
@@ -229,11 +289,20 @@ struct ShardDone {
     seconds: f64,
 }
 
+/// One shard attempt's fan-in record: which shard, which worker ran
+/// it (`usize::MAX` = host/unknown), and how it went.  The worker id
+/// feeds the quarantine ledger and the redispatch-elsewhere hint.
+struct ShardReport {
+    idx: usize,
+    worker: usize,
+    res: Result<ShardDone, RefineError>,
+}
+
 fn run_shard(refiner: &Refiner, wc: WorkerCtx<'_>, work: &LayerWork<'_>,
              gmax: Option<&[f64]>, shard: &Shard, plan: &BlockSchedule)
-    -> Result<ShardDone, String> {
+    -> Result<ShardDone, RefineError> {
     let engine = refiner.shard_engine(&wc, work.gram_key)
-        .map_err(|e| format!("{}: {e}", work.label))?;
+        .map_err(RefineError::Msg)?;
     let ctx = LayerContext {
         w: &work.w,
         g: work.g,
@@ -249,9 +318,12 @@ fn run_shard(refiner: &Refiner, wc: WorkerCtx<'_>, work: &LayerWork<'_>,
         mask.row_mut(k).copy_from_slice(work.warm.row(r));
     }
     let t0 = Instant::now();
+    // Propagate the engine error as-is: the retry loop classifies by
+    // variant (`is_transient`), and the report site adds the
+    // layer/rows context without erasing it.
     let outcome = engine
-        .refine_rows(&ctx, range.clone(), &mut mask, &plan.checkpoints)
-        .map_err(|e| format!("{} rows {range:?}: {e}", work.label))?;
+        .refine_rows(&ctx, range.clone(), &mut mask,
+                     &plan.checkpoints)?;
     Ok(ShardDone {
         layer: shard.layer,
         rows: range,
@@ -301,43 +373,122 @@ pub fn refine_block(
             })
         })
         .collect();
-    let (tx, rx) = mpsc::channel::<Result<ShardDone, String>>();
-    let mut jobs: Vec<ShardJob<'_>> = Vec::with_capacity(n_shards);
-    for shard in shards {
-        let tx = tx.clone();
-        // Shared borrows for 'env (like `works`): no per-shard clone
-        // of the refiner or the checkpoint list.
-        let work = &works[shard.layer];
-        let gmax = gmax_tables[shard.layer].as_deref();
-        jobs.push(Box::new(move |wc| {
-            let res = run_shard(refiner, wc, work, gmax, &shard, plan);
-            let _ = tx.send(res);
-        }));
-    }
-    drop(tx);
-    if plan.serial {
-        for job in jobs {
-            sched.run_shards(vec![job]);
+    // Retry state, indexed by shard: resolved results, failed-attempt
+    // counts, and the worker each shard last failed on (the
+    // redispatch-elsewhere hint; `usize::MAX` = unknown/host).
+    let mut done: Vec<Option<ShardDone>> =
+        (0..n_shards).map(|_| None).collect();
+    let mut attempts = vec![0usize; n_shards];
+    let mut avoid_worker = vec![usize::MAX; n_shards];
+    let mut pending: Vec<usize> = (0..n_shards).collect();
+    // Each round dispatches the pending shards, classifies every
+    // outcome, and requeues the transient failures (quarantine and
+    // retry budget permitting).  Rows are independent and warmstart
+    // state is copied per attempt, so a redispatched shard recomputes
+    // exactly what the clean run would — retried runs stay
+    // bit-identical (property-tested in `tests/faults.rs`).
+    while !pending.is_empty() {
+        let round = std::mem::take(&mut pending);
+        let (tx, rx) = mpsc::channel::<ShardReport>();
+        let mut jobs: Vec<ShardJob<'_>> =
+            Vec::with_capacity(round.len());
+        for &idx in &round {
+            let tx = tx.clone();
+            // Shared borrows for 'env (like `works`): no per-shard
+            // clone of the refiner or the checkpoint list.
+            let shard = &shards[idx];
+            let work = &works[shard.layer];
+            let gmax = gmax_tables[shard.layer].as_deref();
+            jobs.push(Box::new(move |wc| {
+                let worker = match wc {
+                    WorkerCtx::Device(rt) => rt.device(),
+                    WorkerCtx::Host => usize::MAX,
+                };
+                let res =
+                    run_shard(refiner, wc, work, gmax, shard, plan);
+                let _ = tx.send(ShardReport { idx, worker, res });
+            }));
         }
-    } else {
-        sched.run_shards(jobs);
-    }
-    // Drain the fan-in channel: surface the first failed shard and
-    // detect shards lost to worker panics (a panicked job is
-    // contained by its pool but sends no result — better an error
-    // than a silently incomplete mask).
-    let mut done: Vec<ShardDone> = Vec::with_capacity(n_shards);
-    for res in rx {
-        done.push(res.map_err(RuntimeError::Msg)?);
-    }
-    if done.len() != n_shards {
-        return Err(RuntimeError::Msg(format!(
-            "shard refinement lost {} of {} jobs (worker panic)",
-            n_shards - done.len(), n_shards)));
+        drop(tx);
+        let avoid: Vec<usize> = round.iter()
+            .map(|&idx| avoid_worker[idx])
+            .filter(|&w| w != usize::MAX)
+            .collect();
+        if plan.serial {
+            for job in jobs {
+                sched.run_shards(vec![job]);
+            }
+        } else if avoid.is_empty() {
+            sched.run_shards(jobs);
+        } else {
+            sched.run_shards_avoiding(jobs, &avoid);
+        }
+        // Classify the round.  A shard lost to a worker panic is
+        // contained by its pool but sends no report — it is retried
+        // like a transient failure (better than a silently incomplete
+        // mask, and the pool already counted the panic against the
+        // worker's quarantine streak).
+        let mut seen = vec![false; n_shards];
+        let mut retryable: Vec<(usize, String)> = Vec::new();
+        for report in rx {
+            seen[report.idx] = true;
+            let shard = &shards[report.idx];
+            let label = &works[shard.layer].label;
+            match report.res {
+                Ok(d) => {
+                    sched.report_outcome(report.worker, true);
+                    done[report.idx] = Some(d);
+                }
+                Err(e) if e.is_transient() => {
+                    sched.report_outcome(report.worker, false);
+                    avoid_worker[report.idx] = report.worker;
+                    retryable.push((report.idx, format!(
+                        "{} rows {:?}: {e}", label, shard.rows)));
+                }
+                // Deterministic failure: a retry would recompute the
+                // same error, so abort the block immediately.
+                Err(e) => {
+                    return Err(RuntimeError::Msg(format!(
+                        "{} rows {:?}: {e}", label, shard.rows)));
+                }
+            }
+        }
+        for &idx in &round {
+            if !seen[idx] {
+                let shard = &shards[idx];
+                retryable.push((idx, format!(
+                    "{} rows {:?}: shard lost (worker panic)",
+                    works[shard.layer].label, shard.rows)));
+            }
+        }
+        if retryable.is_empty() {
+            continue;
+        }
+        // With every worker quarantined no retry can land on healthy
+        // hardware — surface that state (the pipeline reads the pool's
+        // quarantine counters to decide on native degradation) before
+        // burning the retry budget on a doomed redispatch.
+        let q = sched.quarantined().len();
+        if q > 0 && q >= sched.workers() {
+            let (_, why) = &retryable[0];
+            return Err(RuntimeError::Msg(format!(
+                "all {q} workers quarantined; last failure: {why}")));
+        }
+        for (idx, why) in retryable {
+            attempts[idx] += 1;
+            if attempts[idx] > plan.max_retries {
+                return Err(RuntimeError::Msg(format!(
+                    "shard retry budget exhausted after {} attempts: \
+                     {why}", attempts[idx])));
+            }
+            sched.note_shard_retry();
+            pending.push(idx);
+        }
     }
     let mut per_layer: Vec<Vec<ShardDone>> =
         (0..works.len()).map(|_| Vec::new()).collect();
-    for s in done {
+    for d in done {
+        let s = d.expect("every shard resolved or the block aborted");
         per_layer[s.layer].push(s);
     }
     let mut merged = Vec::with_capacity(works.len());

@@ -55,6 +55,17 @@ pub fn next_refinement_id() -> u64 {
     NEXT.fetch_add(1, Ordering::Relaxed)
 }
 
+/// Lower a runtime failure into the engine error space, preserving
+/// the transient/deterministic classification the shard retry loop
+/// keys on (a plain `e.to_string()` into `Msg` would erase it).
+fn refine_err(e: RuntimeError) -> RefineError {
+    if e.is_transient() {
+        RefineError::Transient(e.to_string())
+    } else {
+        RefineError::Msg(e.to_string())
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct OffloadConfig {
     /// "xla" (fused, CPU fast path) or "pallas" (L1 kernel variant).
@@ -261,9 +272,7 @@ impl RefineEngine for OffloadEngine<'_> {
                                 data: g.as_slice().to_vec(),
                             }));
                         }
-                        other => break other.map_err(|e| {
-                            RefineError::Msg(e.to_string())
-                        })?,
+                        other => break other.map_err(refine_err)?,
                     }
                 };
                 let m_out = out[0].as_f32()
@@ -350,7 +359,11 @@ pub fn refine_layer_offload(
     };
     let out = OffloadEngine::new(rt, cfg.impl_name.clone())
         .refine(&ctx, mask, checkpoints)
-        .map_err(|e| RuntimeError::Msg(e.to_string()))?;
+        .map_err(|e| if e.is_transient() {
+            RuntimeError::Transient(e.to_string())
+        } else {
+            RuntimeError::Msg(e.to_string())
+        })?;
     Ok((out.layer, out.snapshots))
 }
 

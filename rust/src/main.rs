@@ -171,6 +171,19 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         .flag("seed", "42", "dataset seed")
         .bool_flag("oneshot", "single dense calibration pass \
                               (default: sequential per block)")
+        .flag("max-shard-retries", "2", "redispatches per shard for \
+                                         transient worker failures")
+        .flag("quarantine-after", "2", "consecutive shard failures \
+                                        before a worker is \
+                                        quarantined (0 = never)")
+        .flag("journal", "reports/prune_journal",
+              "mask journal directory for resumable runs (\"\" \
+               disables journaling)")
+        .bool_flag("resume", "resume from the journal: restore \
+                              completed blocks and continue")
+        .flag("fault-plan", "", "deterministic fault-injection spec \
+                                 (e.g. \"seed=7;rate=0.05;kill=1\"); \
+                                 also SPARSESWAPS_FAULTS")
         .flag("artifacts", "artifacts", "artifact directory")
         .flag("out", "runs/pruned.ssck", "output checkpoint (with masks)");
     let args = spec.parse(argv)?;
@@ -185,8 +198,18 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         Refiner::SparseSwapsOffload { .. } if layer_parallel => devices,
         _ => 1,
     };
-    let rt = RuntimePool::start(args.get("artifacts"), devices, opts)
-        .map_err(|e| e.to_string())?;
+    let fault_plan = match args.get("fault-plan") {
+        "" => sparseswaps::runtime::FaultPlan::from_env()?,
+        spec => Some(sparseswaps::runtime::FaultPlan::parse(spec)?),
+    };
+    let rt = match fault_plan {
+        Some(plan) => RuntimePool::start_with_faults(
+            args.get("artifacts"), devices, opts, plan),
+        None => RuntimePool::start(args.get("artifacts"), devices,
+                                   opts),
+    }
+    .map_err(|e| e.to_string())?;
+    rt.set_quarantine_after(args.parse_num("quarantine-after")?);
     let meta = rt.manifest().config(args.get("config"))?.clone();
     let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;
     let ds = Dataset::build(&meta, args.parse_num("seed")?);
@@ -207,6 +230,13 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         threads,
         layer_parallel,
         shard_rows: args.parse_num("shard-rows")?,
+        max_shard_retries: args.parse_num("max-shard-retries")?,
+        journal: match args.get("journal") {
+            "" => None,
+            dir => Some(std::path::PathBuf::from(dir)),
+        },
+        resume: args.get_bool("resume"),
+        halt_after_block: None,
     };
     let t0 = std::time::Instant::now();
     let (masks, rep) = prune(&rt, &store, &ds, &cfg)?;
@@ -245,6 +275,11 @@ fn cmd_prune(argv: &[String]) -> CliResult {
                  ps.probe_hits, ps.probe_hits + ps.probe_misses,
                  100.0 * ps.probe_hit_rate(),
                  ps.upload_bytes as f64 / (1u64 << 20) as f64);
+    }
+    if ps.shard_retries > 0 || ps.workers_quarantined > 0 {
+        println!("  fault recovery: {} shard retries, {} worker(s) \
+                  quarantined",
+                 ps.shard_retries, ps.workers_quarantined);
     }
     Ok(())
 }

@@ -66,6 +66,10 @@ pub enum RefineError {
     Msg(String),
     /// The [`LayerContext`] lacks an input this engine requires.
     MissingInput(&'static str),
+    /// Worker-tied failure (dead runtime worker, evicted buffers):
+    /// the same rows can succeed on another worker, so the shard
+    /// scheduler redispatches these and only these.
+    Transient(String),
 }
 
 impl fmt::Display for RefineError {
@@ -74,7 +78,18 @@ impl fmt::Display for RefineError {
             RefineError::Msg(s) => write!(f, "refine: {s}"),
             RefineError::MissingInput(what) =>
                 write!(f, "refine: missing input: {what}"),
+            RefineError::Transient(s) =>
+                write!(f, "refine (transient): {s}"),
         }
+    }
+}
+
+impl RefineError {
+    /// True when a retry on a different worker can fix this failure
+    /// (see `RuntimeError::is_transient`, which this mirrors at the
+    /// engine layer).
+    pub fn is_transient(&self) -> bool {
+        matches!(self, RefineError::Transient(_))
     }
 }
 

@@ -26,6 +26,17 @@ pub struct CompileCache {
     entries: Mutex<HashMap<String, Arc<Vec<u8>>>>,
 }
 
+/// Lock recovering from poisoning.  Every critical section here is a
+/// single map lookup or insert that leaves the map valid at every
+/// instant, so a poisoned lock only means some *worker* thread
+/// panicked while holding it — never that the map is torn.
+/// Propagating the poison would make every surviving worker fall back
+/// to a local compile (or die), turning one contained panic into a
+/// pool-wide slowdown.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 impl CompileCache {
     /// A fresh cache behind an [`Arc`], ready to clone into every
     /// worker's `RuntimeOptions`.
@@ -36,21 +47,21 @@ impl CompileCache {
     /// Serialized executable for `artifact`, if any worker exported
     /// one.
     pub fn get(&self, artifact: &str) -> Option<Arc<Vec<u8>>> {
-        self.entries.lock().unwrap().get(artifact).cloned()
+        relock(&self.entries).get(artifact).cloned()
     }
 
     /// Store a serialized executable.  First write wins: compiles are
     /// deterministic per manifest entry, so a racing second export is
     /// redundant, not conflicting.
     pub fn put(&self, artifact: &str, bytes: Vec<u8>) {
-        self.entries.lock().unwrap()
+        relock(&self.entries)
             .entry(artifact.to_string())
             .or_insert_with(|| Arc::new(bytes));
     }
 
     /// Number of cached executables.
     pub fn len(&self) -> usize {
-        self.entries.lock().unwrap().len()
+        relock(&self.entries).len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -71,5 +82,24 @@ mod tests {
         cache.put("a", vec![9]);
         assert_eq!(cache.len(), 1);
         assert_eq!(*cache.get("a").unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn cache_survives_poisoned_lock() {
+        let cache = CompileCache::shared();
+        cache.put("a", vec![1]);
+        // Poison the entries lock by panicking while holding it; the
+        // cache must stay readable and writable for the surviving
+        // workers.
+        let c2 = Arc::clone(&cache);
+        let _ = std::thread::spawn(move || {
+            let _g = c2.entries.lock().unwrap();
+            panic!("poison cache lock");
+        })
+        .join();
+        assert!(cache.entries.is_poisoned());
+        assert_eq!(*cache.get("a").unwrap(), vec![1]);
+        cache.put("b", vec![2]);
+        assert_eq!(cache.len(), 2);
     }
 }

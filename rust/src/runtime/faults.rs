@@ -1,0 +1,380 @@
+//! Deterministic fault injection for the runtime layer.
+//!
+//! [`FaultyBackend`] wraps any [`Backend`] and injects failures into
+//! `execute` on a seeded per-device schedule, so every recovery path —
+//! shard retry, worker quarantine, offload→native degradation — runs
+//! under plain `cargo test -q` with no real hardware faults.  Fault
+//! modes:
+//!
+//! - **transient** (`rate=`): the call fails with
+//!   [`RuntimeError::Transient`]; the shard retries on another worker.
+//! - **storm** (`storm=`): the call fails with
+//!   [`RuntimeError::NotResident`], exercising the engine's
+//!   probe-miss retry *and* the shard-retry path once host data is
+//!   already attached.
+//! - **panic** (`panic=`, `kill=`): the call panics, unwinding the
+//!   service thread — total worker death.  Every later call on that
+//!   device observes a channel-closed [`RuntimeError::Transient`].
+//! - **fail-nth** (`nth=`): the nth eligible call on each device
+//!   fails transiently, exactly once — a deterministic smoke fault.
+//!
+//! Schedules are deterministic per device: each wrapper forks its own
+//! [`Rng`] from `(seed, device)`, so the fault sequence depends only
+//! on the call index on that device, never on cross-device
+//! interleaving.  Faults apply to the swap artifact kinds only by
+//! default (`kinds=all` widens them), keeping calibration and
+//! training clean so tests can target the refinement recovery paths.
+
+use crate::runtime::backend::Backend;
+use crate::runtime::manifest::ArtifactEntry;
+use crate::runtime::service::{BufferKey, RuntimeError};
+use crate::runtime::tensor_data::TensorData;
+use crate::util::prng::Rng;
+
+/// Parsed fault schedule.  Built from a spec string
+/// (`seed=42;rate=0.05;kill=1;kill_after=2`) via [`FaultPlan::parse`]
+/// or the `SPARSESWAPS_FAULTS` environment variable via
+/// [`FaultPlan::from_env`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// PRNG seed; each device forks its own stream from it.
+    pub seed: u64,
+    /// Per-call probability of a transient execute failure.
+    pub exec_fail_rate: f64,
+    /// Per-call probability of a `NotResident` storm failure.
+    pub storm_rate: f64,
+    /// Per-call probability of a panic (kills the service thread).
+    pub panic_rate: f64,
+    /// Fail the nth eligible call (1-based) on every device, once.
+    pub fail_nth: Option<u64>,
+    /// Devices whose service thread is killed by a panic...
+    pub kill_workers: Vec<usize>,
+    /// ...after this many eligible calls have succeeded there.
+    pub kill_after: u64,
+    /// Cap on randomly injected (rate/storm/panic) faults per device.
+    /// Bounds the worst case so a retry storm cannot starve a run:
+    /// with `max_retries` above `devices * max_faults`, completion is
+    /// guaranteed.  `None` = unbounded.
+    pub max_faults: Option<u64>,
+    /// Fault every artifact kind, not just `swap_step`/`layer_loss`.
+    pub all_kinds: bool,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 42,
+            exec_fail_rate: 0.0,
+            storm_rate: 0.0,
+            panic_rate: 0.0,
+            fail_nth: None,
+            kill_workers: Vec::new(),
+            kill_after: 0,
+            max_faults: None,
+            all_kinds: false,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `key=value;key=value` spec.  Keys: `seed`, `rate`,
+    /// `storm`, `panic` (probabilities in [0, 1]), `nth`,
+    /// `kill` (comma-separated device list), `kill_after`,
+    /// `max_faults`, `kinds` (`swap` | `all`).
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        fn num<T: std::str::FromStr>(k: &str, v: &str)
+            -> Result<T, String> {
+            v.trim().parse().map_err(
+                |_| format!("fault plan: bad value for {k}: {v:?}"))
+        }
+        let mut plan = FaultPlan::default();
+        for part in spec.split(';').map(str::trim)
+            .filter(|s| !s.is_empty())
+        {
+            let (k, v) = part.split_once('=').ok_or_else(
+                || format!("fault plan: expected key=value, \
+                            got {part:?}"))?;
+            match k.trim() {
+                "seed" => plan.seed = num(k, v)?,
+                "rate" => plan.exec_fail_rate = num(k, v)?,
+                "storm" => plan.storm_rate = num(k, v)?,
+                "panic" => plan.panic_rate = num(k, v)?,
+                "nth" => plan.fail_nth = Some(num(k, v)?),
+                "kill_after" => plan.kill_after = num(k, v)?,
+                "max_faults" => plan.max_faults = Some(num(k, v)?),
+                "kill" => {
+                    plan.kill_workers = v.split(',')
+                        .map(|w| num("kill", w))
+                        .collect::<Result<_, _>>()?;
+                }
+                "kinds" => match v.trim() {
+                    "all" => plan.all_kinds = true,
+                    "swap" => plan.all_kinds = false,
+                    other => return Err(format!(
+                        "fault plan: kinds must be swap|all, \
+                         got {other:?}")),
+                },
+                other => return Err(format!(
+                    "fault plan: unknown key {other:?}")),
+            }
+        }
+        for (k, p) in [("rate", plan.exec_fail_rate),
+                       ("storm", plan.storm_rate),
+                       ("panic", plan.panic_rate)] {
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!(
+                    "fault plan: {k} must be in [0, 1], got {p}"));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read `SPARSESWAPS_FAULTS`; `Ok(None)` when unset or empty.
+    pub fn from_env() -> Result<Option<FaultPlan>, String> {
+        match std::env::var("SPARSESWAPS_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Self::parse(&s).map(Some),
+            _ => Ok(None),
+        }
+    }
+
+    /// True when any fault mode is configured.
+    pub fn is_active(&self) -> bool {
+        self.exec_fail_rate > 0.0
+            || self.storm_rate > 0.0
+            || self.panic_rate > 0.0
+            || self.fail_nth.is_some()
+            || !self.kill_workers.is_empty()
+    }
+}
+
+enum Fault {
+    Transient,
+    Storm,
+    Panic,
+}
+
+/// [`Backend`] wrapper injecting the plan's faults into `execute`.
+/// Everything else delegates untouched.
+pub struct FaultyBackend<B: Backend> {
+    inner: B,
+    plan: FaultPlan,
+    device: usize,
+    rng: Rng,
+    /// Eligible execute calls observed on this device (drives
+    /// `fail_nth` / `kill_after`).
+    calls: u64,
+    /// Randomly injected faults so far (capped by `max_faults`).
+    injected: u64,
+}
+
+impl<B: Backend> FaultyBackend<B> {
+    pub fn new(inner: B, plan: FaultPlan, device: usize) -> Self {
+        let rng = Rng::new(plan.seed).fork(device as u64 + 1);
+        FaultyBackend { inner, plan, device, rng, calls: 0, injected: 0 }
+    }
+
+    fn eligible(&self, entry: &ArtifactEntry) -> bool {
+        self.plan.all_kinds
+            || matches!(entry.kind.as_str(), "swap_step" | "layer_loss")
+    }
+
+    fn fault_for(&mut self, entry: &ArtifactEntry) -> Option<Fault> {
+        if !self.eligible(entry) {
+            return None;
+        }
+        self.calls += 1;
+        if self.plan.kill_workers.contains(&self.device)
+            && self.calls > self.plan.kill_after
+        {
+            return Some(Fault::Panic);
+        }
+        if Some(self.calls) == self.plan.fail_nth {
+            return Some(Fault::Transient);
+        }
+        if self.plan.max_faults.is_some_and(|m| self.injected >= m) {
+            return None;
+        }
+        let fault = if self.plan.panic_rate > 0.0
+            && self.rng.bool(self.plan.panic_rate)
+        {
+            Fault::Panic
+        } else if self.plan.storm_rate > 0.0
+            && self.rng.bool(self.plan.storm_rate)
+        {
+            Fault::Storm
+        } else if self.plan.exec_fail_rate > 0.0
+            && self.rng.bool(self.plan.exec_fail_rate)
+        {
+            Fault::Transient
+        } else {
+            return None;
+        };
+        self.injected += 1;
+        Some(fault)
+    }
+}
+
+impl<B: Backend> Backend for FaultyBackend<B> {
+    type Buf = B::Buf;
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn compile(&mut self, entry: &ArtifactEntry)
+        -> Result<bool, RuntimeError> {
+        self.inner.compile(entry)
+    }
+
+    fn export_compiled(&mut self, entry: &ArtifactEntry)
+        -> Option<Vec<u8>> {
+        self.inner.export_compiled(entry)
+    }
+
+    fn import_compiled(&mut self, entry: &ArtifactEntry, bytes: &[u8])
+        -> Result<bool, RuntimeError> {
+        self.inner.import_compiled(entry, bytes)
+    }
+
+    fn upload(&mut self, t: &TensorData) -> Result<Self::Buf, RuntimeError> {
+        self.inner.upload(t)
+    }
+
+    fn execute(&mut self, entry: &ArtifactEntry, inputs: &[&Self::Buf])
+        -> Result<Vec<TensorData>, RuntimeError> {
+        match self.fault_for(entry) {
+            Some(Fault::Panic) => panic!(
+                "fault injection: killing device {} in {}",
+                self.device, entry.name),
+            Some(Fault::Storm) => {
+                return Err(RuntimeError::NotResident(BufferKey {
+                    layer: 0,
+                    tensor: "fault-storm".into(),
+                    generation: 0,
+                }));
+            }
+            Some(Fault::Transient) => {
+                return Err(RuntimeError::Transient(format!(
+                    "fault injection: device {} call {} ({})",
+                    self.device, self.calls, entry.name)));
+            }
+            None => {}
+        }
+        self.inner.execute(entry, inputs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::InterpBackend;
+
+    fn swap_entry() -> ArtifactEntry {
+        ArtifactEntry::layer_loss(8, 4)
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let plan = FaultPlan::parse(
+            "seed=7; rate=0.05; storm=0.1; panic=0.01; nth=3; \
+             kill=1,2; kill_after=4; max_faults=5; kinds=all")
+            .unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.exec_fail_rate, 0.05);
+        assert_eq!(plan.storm_rate, 0.1);
+        assert_eq!(plan.panic_rate, 0.01);
+        assert_eq!(plan.fail_nth, Some(3));
+        assert_eq!(plan.kill_workers, vec![1, 2]);
+        assert_eq!(plan.kill_after, 4);
+        assert_eq!(plan.max_faults, Some(5));
+        assert!(plan.all_kinds);
+        assert!(plan.is_active());
+    }
+
+    #[test]
+    fn parse_rejects_junk() {
+        assert!(FaultPlan::parse("rate").is_err());
+        assert!(FaultPlan::parse("rate=lots").is_err());
+        assert!(FaultPlan::parse("rate=1.5").is_err());
+        assert!(FaultPlan::parse("frobnicate=1").is_err());
+        assert!(FaultPlan::parse("kinds=some").is_err());
+    }
+
+    #[test]
+    fn empty_plan_is_inactive_and_injects_nothing() {
+        let plan = FaultPlan::parse("").unwrap();
+        assert_eq!(plan, FaultPlan::default());
+        assert!(!plan.is_active());
+        let mut fb = FaultyBackend::new(InterpBackend::new(), plan, 0);
+        let e = swap_entry();
+        for _ in 0..64 {
+            assert!(fb.fault_for(&e).is_none());
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_per_device() {
+        let plan =
+            FaultPlan::parse("seed=9;rate=0.3;storm=0.2").unwrap();
+        let e = swap_entry();
+        let draw = |device: usize| -> Vec<u8> {
+            let mut fb = FaultyBackend::new(
+                InterpBackend::new(), plan.clone(), device);
+            (0..200).map(|_| match fb.fault_for(&e) {
+                None => 0,
+                Some(Fault::Transient) => 1,
+                Some(Fault::Storm) => 2,
+                Some(Fault::Panic) => 3,
+            }).collect()
+        };
+        // Same (seed, device) → same schedule; sibling devices differ.
+        assert_eq!(draw(0), draw(0));
+        assert_eq!(draw(1), draw(1));
+        assert_ne!(draw(0), draw(1));
+        assert!(draw(0).iter().any(|&f| f != 0));
+    }
+
+    #[test]
+    fn swap_kinds_only_by_default() {
+        let plan = FaultPlan::parse("rate=1.0").unwrap();
+        let mut fb =
+            FaultyBackend::new(InterpBackend::new(), plan, 0);
+        let mut calib = swap_entry();
+        calib.kind = "calib_step".into();
+        assert!(fb.fault_for(&calib).is_none());
+        assert!(fb.fault_for(&swap_entry()).is_some());
+
+        let plan = FaultPlan::parse("rate=1.0;kinds=all").unwrap();
+        let mut fb = FaultyBackend::new(InterpBackend::new(), plan, 0);
+        assert!(fb.fault_for(&calib).is_some());
+    }
+
+    #[test]
+    fn kill_fires_only_on_listed_device_after_budget() {
+        let plan =
+            FaultPlan::parse("kill=1;kill_after=2").unwrap();
+        let e = swap_entry();
+        let mut survivor =
+            FaultyBackend::new(InterpBackend::new(), plan.clone(), 0);
+        for _ in 0..8 {
+            assert!(survivor.fault_for(&e).is_none());
+        }
+        let mut victim = FaultyBackend::new(InterpBackend::new(), plan, 1);
+        assert!(victim.fault_for(&e).is_none());
+        assert!(victim.fault_for(&e).is_none());
+        assert!(matches!(victim.fault_for(&e), Some(Fault::Panic)));
+        assert!(matches!(victim.fault_for(&e), Some(Fault::Panic)));
+    }
+
+    #[test]
+    fn max_faults_caps_random_injection() {
+        let plan =
+            FaultPlan::parse("rate=1.0;max_faults=3").unwrap();
+        let e = swap_entry();
+        let mut fb = FaultyBackend::new(InterpBackend::new(), plan, 0);
+        let injected = (0..32)
+            .filter(|_| fb.fault_for(&e).is_some())
+            .count();
+        assert_eq!(injected, 3);
+    }
+}

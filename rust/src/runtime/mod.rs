@@ -7,6 +7,7 @@
 
 pub mod backend;
 pub mod compile_cache;
+pub mod faults;
 pub mod interp_model;
 pub mod manifest;
 pub mod pool;
@@ -16,6 +17,7 @@ pub mod testutil;
 
 pub use backend::{Backend, DefaultBackend, InterpBackend};
 pub use compile_cache::CompileCache;
+pub use faults::{FaultPlan, FaultyBackend};
 pub use manifest::{ArtifactEntry, Manifest, ModelMeta, PrunableLayer};
 pub use pool::RuntimePool;
 pub use service::{

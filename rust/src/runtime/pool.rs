@@ -22,6 +22,19 @@
 //! pooled masks are bit-identical to the serial schedule (property-
 //! tested in `tests/runtime_pool.rs`; gated in the bench smoke CI
 //! job).
+//!
+//! Fault tolerance: the pool tracks per-worker consecutive-failure
+//! streaks ([`RuntimePool::report_worker_outcome`], fed by the shard
+//! scheduler) and **quarantines** a worker after
+//! [`DEFAULT_QUARANTINE_AFTER`] failures in a row — it stops popping
+//! or stealing work, placement redirects around it, and its deque
+//! drains to the survivors through the normal steal path.  If *every*
+//! worker ends up quarantined the dispatchers keep draining anyway
+//! (jobs fail fast on the dead runtimes and report back through the
+//! scheduler), so scoped batches always terminate and the caller gets
+//! a clean all-quarantined error instead of a deadlock.  Recovery
+//! counters surface through [`RuntimePool::stats_total`]
+//! (`shard_retries`, `workers_quarantined`).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -29,12 +42,28 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use crate::runtime::backend::DefaultBackend;
+use crate::runtime::faults::{FaultPlan, FaultyBackend};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::service::{
     Runtime, RuntimeError, RuntimeOptions, ServiceStats,
 };
 
 type Job = Box<dyn FnOnce(&Runtime) + Send + 'static>;
+
+/// Consecutive shard failures on one worker before it is quarantined
+/// (tunable via [`RuntimePool::set_quarantine_after`]; 0 disables).
+pub const DEFAULT_QUARANTINE_AFTER: u64 = 2;
+
+/// Lock recovering from poisoning.  Every critical section in this
+/// module performs single-step mutations (push/pop/counter bump) that
+/// leave the guarded state valid at every instant, and job panics are
+/// contained by `catch_unwind` before they can unwind through one —
+/// so a poisoned lock only means *some* thread panicked elsewhere,
+/// never that the data is torn.  Propagating the poison would wedge
+/// every surviving worker instead of just the thread that died.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 struct PoolState {
     /// One deque per worker: owner pops the front, thieves the back.
@@ -62,6 +91,53 @@ struct PoolState {
     /// wait).  A parked pool accrues none — asserted by the
     /// no-busy-wakeup test; the old 5 ms timed wait woke ~200x/s.
     idle_sweeps: Vec<AtomicU64>,
+    /// Quarantined workers take no new work (see module docs).
+    quarantined: Vec<AtomicBool>,
+    /// Consecutive shard failures per worker; success resets.
+    fail_streak: Vec<AtomicU64>,
+    /// Failure streak that trips quarantine (0 = never).
+    quarantine_after: AtomicU64,
+    /// Shard dispatches re-run after a transient failure (bumped by
+    /// the scheduler via [`RuntimePool::note_shard_retry`]).
+    shard_retries: AtomicU64,
+}
+
+impl PoolState {
+    fn is_quarantined(&self, w: usize) -> bool {
+        self.quarantined[w].load(Ordering::Relaxed)
+    }
+
+    fn all_quarantined(&self) -> bool {
+        self.quarantined.iter().all(|q| q.load(Ordering::Relaxed))
+    }
+
+    /// Record one shard outcome on `worker`; out-of-range ids (the
+    /// scheduler's unknown-worker sentinel) are ignored.
+    fn report(&self, worker: usize, ok: bool) {
+        let Some(streak) = self.fail_streak.get(worker) else {
+            return;
+        };
+        if ok {
+            streak.store(0, Ordering::Relaxed);
+            return;
+        }
+        let failures = streak.fetch_add(1, Ordering::Relaxed) + 1;
+        let k = self.quarantine_after.load(Ordering::Relaxed);
+        if k > 0
+            && failures >= k
+            && !self.quarantined[worker].swap(true, Ordering::Relaxed)
+        {
+            eprintln!(
+                "runtime-pool: quarantining worker {worker} after \
+                 {failures} consecutive failures");
+            // Wake every dispatcher: survivors drain the quarantined
+            // deque through the steal path (or the all-quarantined
+            // escape hatch engages — see `dispatch_main`).
+            let mut seq = relock(&self.work_seq);
+            *seq += 1;
+            self.work_cv.notify_all();
+        }
+    }
 }
 
 pub struct RuntimePool {
@@ -95,6 +171,28 @@ impl RuntimePool {
         Ok(Self::from_runtimes(runtimes))
     }
 
+    /// Like [`RuntimePool::start`], wrapping every worker's backend in
+    /// a [`FaultyBackend`] driving the given deterministic fault plan
+    /// (the `--fault-plan` / `SPARSESWAPS_FAULTS` surface).
+    pub fn start_with_faults(
+        artifact_dir: impl AsRef<std::path::Path>, devices: usize,
+        opts: RuntimeOptions, plan: FaultPlan)
+        -> Result<RuntimePool, RuntimeError> {
+        let devices = devices.max(1);
+        let manifest = Arc::new(Manifest::load(artifact_dir)?);
+        let opts = opts.with_shared_compile_cache();
+        let mut runtimes = Vec::with_capacity(devices);
+        for device in 0..devices {
+            let plan = plan.clone();
+            runtimes.push(Runtime::start_with_backend(
+                Arc::clone(&manifest),
+                move || Ok(FaultyBackend::new(
+                    DefaultBackend::new_default()?, plan, device)),
+                RuntimeOptions { device, ..opts.clone() })?);
+        }
+        Ok(Self::from_runtimes(runtimes))
+    }
+
     /// Wrap externally constructed runtime handles (tests and benches
     /// inject interp- or mock-backed workers here; see
     /// `runtime::testutil`).
@@ -112,6 +210,11 @@ impl RuntimePool {
             ran: (0..n).map(|_| AtomicU64::new(0)).collect(),
             busy: (0..n).map(|_| AtomicU64::new(0)).collect(),
             idle_sweeps: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            quarantined: (0..n).map(|_| AtomicBool::new(false))
+                .collect(),
+            fail_streak: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            quarantine_after: AtomicU64::new(DEFAULT_QUARANTINE_AFTER),
+            shard_retries: AtomicU64::new(0),
         });
         let dispatchers = runtimes.iter().enumerate()
             .map(|(i, rt)| {
@@ -185,24 +288,82 @@ impl RuntimePool {
         self.runtimes.iter().map(|r| r.stats()).collect()
     }
 
-    /// All workers' counters folded together.
+    /// All workers' counters folded together, plus the pool-level
+    /// recovery counters (per-service stats leave those at 0).
     pub fn stats_total(&self) -> ServiceStats {
         let mut total = ServiceStats::default();
         for s in self.worker_stats() {
             total.merge(&s);
         }
+        total.shard_retries = self.shard_retries();
+        total.workers_quarantined = self.workers_quarantined();
         total
     }
 
+    /// Consecutive-failure streak that trips quarantine (default
+    /// [`DEFAULT_QUARANTINE_AFTER`]; 0 disables quarantine).
+    pub fn set_quarantine_after(&self, k: u64) {
+        self.state.quarantine_after.store(k, Ordering::Relaxed);
+    }
+
+    /// Record one shard outcome on `worker` (out-of-range ids — the
+    /// scheduler's host/unknown sentinel — are ignored).  A success
+    /// resets the worker's consecutive-failure streak; enough
+    /// failures in a row quarantine it: the worker stops taking or
+    /// stealing work and placement redirects around it, so its deque
+    /// drains to the survivors.
+    pub fn report_worker_outcome(&self, worker: usize, ok: bool) {
+        self.state.report(worker, ok);
+    }
+
+    /// Indices of currently quarantined workers.
+    pub fn quarantined_workers(&self) -> Vec<usize> {
+        (0..self.devices())
+            .filter(|&w| self.state.is_quarantined(w))
+            .collect()
+    }
+
+    /// Number of currently quarantined workers.
+    pub fn workers_quarantined(&self) -> u64 {
+        self.quarantined_workers().len() as u64
+    }
+
+    /// Count one shard redispatch (surfaced via [`stats_total`]).
+    ///
+    /// [`stats_total`]: RuntimePool::stats_total
+    pub fn note_shard_retry(&self) {
+        self.state.shard_retries.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn shard_retries(&self) -> u64 {
+        self.state.shard_retries.load(Ordering::Relaxed)
+    }
+
+    /// Placement target honoring quarantine: the first healthy worker
+    /// at or after `preferred`.  With every worker quarantined the
+    /// preferred target is kept — the dispatchers' escape hatch keeps
+    /// draining (jobs fail fast) so batches cannot deadlock while the
+    /// scheduler aborts the run.
+    fn eligible_worker(&self, preferred: usize) -> usize {
+        let n = self.devices();
+        let p = preferred % n;
+        for k in 0..n {
+            let c = (p + k) % n;
+            if !self.state.is_quarantined(c) {
+                return c;
+            }
+        }
+        p
+    }
+
     fn enqueue(&self, worker: usize, job: Job) {
-        *self.state.pending.lock().unwrap() += 1;
-        self.state.queues[worker % self.devices()]
-            .lock().unwrap()
-            .push_back(job);
+        *relock(&self.state.pending) += 1;
+        let w = self.eligible_worker(worker);
+        relock(&self.state.queues[w]).push_back(job);
         // Advance the submission counter under the wakeup mutex so a
         // dispatcher mid-sweep re-checks instead of sleeping (see
         // `PoolState::work_seq`).
-        let mut seq = self.state.work_seq.lock().unwrap();
+        let mut seq = relock(&self.state.work_seq);
         *seq += 1;
         self.state.work_cv.notify_all();
     }
@@ -228,9 +389,10 @@ impl RuntimePool {
 
     /// Block until every submitted job has finished.
     pub fn wait(&self) {
-        let mut cnt = self.state.pending.lock().unwrap();
+        let mut cnt = relock(&self.state.pending);
         while *cnt > 0 {
-            cnt = self.state.done_cv.wait(cnt).unwrap();
+            cnt = self.state.done_cv.wait(cnt)
+                .unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -246,6 +408,37 @@ impl RuntimePool {
         &self,
         jobs: Vec<Box<dyn FnOnce(&Runtime) + Send + 'env>>,
     ) {
+        self.run_scoped_avoiding(jobs, &[]);
+    }
+
+    /// [`run_scoped`] with a placement hint: jobs are spread over the
+    /// healthy workers *not* listed in `avoid` — the shard scheduler's
+    /// retry-on-a-different-worker path.  Best effort on two counts:
+    /// with no other healthy worker the hint is dropped rather than
+    /// failing, and an idle avoided worker may still *steal* the job
+    /// (benign: results are bit-identical on any worker; the hint
+    /// only dodges likely-unhealthy ones).
+    ///
+    /// [`run_scoped`]: RuntimePool::run_scoped
+    pub fn run_scoped_avoiding<'env>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce(&Runtime) + Send + 'env>>,
+        avoid: &[usize],
+    ) {
+        let n = self.devices();
+        let healthy: Vec<usize> = (0..n)
+            .filter(|&w| !self.state.is_quarantined(w))
+            .collect();
+        let preferred: Vec<usize> = healthy.iter().copied()
+            .filter(|w| !avoid.contains(w))
+            .collect();
+        let targets: Vec<usize> = if !preferred.is_empty() {
+            preferred
+        } else if !healthy.is_empty() {
+            healthy
+        } else {
+            (0..n).collect()
+        };
         // Batch-local completion count, decremented by a drop guard
         // so a panicking job (contained by its dispatcher) still
         // counts down and the wait below cannot hang.
@@ -253,7 +446,10 @@ impl RuntimePool {
         impl Drop for BatchGuard {
             fn drop(&mut self) {
                 let (lock, cv) = &*self.0;
-                let mut cnt = lock.lock().unwrap();
+                // Recover from poisoning: the count stays valid (the
+                // only mutation is this decrement) and refusing would
+                // hang the batch wait below forever.
+                let mut cnt = relock(lock);
                 *cnt -= 1;
                 if *cnt == 0 {
                     cv.notify_all();
@@ -276,14 +472,14 @@ impl RuntimePool {
                 let _guard = guard;
                 job(rt);
             });
-            let w = self.next.fetch_add(1, Ordering::Relaxed)
-                % self.devices();
+            let w = targets[self.next.fetch_add(1, Ordering::Relaxed)
+                            % targets.len()];
             self.enqueue(w, wrapped);
         }
         let (lock, cv) = &*batch;
-        let mut cnt = lock.lock().unwrap();
+        let mut cnt = relock(lock);
         while *cnt > 0 {
-            cnt = cv.wait(cnt).unwrap();
+            cnt = cv.wait(cnt).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -306,7 +502,7 @@ impl Drop for RuntimePool {
         {
             // Bump the counter too: a dispatcher between its sweep
             // and its wait skips the sleep and re-checks `shutdown`.
-            let mut seq = self.state.work_seq.lock().unwrap();
+            let mut seq = relock(&self.state.work_seq);
             *seq += 1;
             self.state.work_cv.notify_all();
         }
@@ -324,14 +520,27 @@ fn dispatch_main(me: usize, rt: Runtime, state: Arc<PoolState>) {
         // submit that lands mid-sweep moves it, and the pre-sleep
         // re-check below turns the would-be lost wakeup into another
         // sweep.
-        let seq_before = *state.work_seq.lock().unwrap();
+        let seq_before = *relock(&state.work_seq);
+        // A quarantined dispatcher takes no work — not even its own
+        // deque, which drains to the survivors through their steal
+        // path.  Escape hatch: with EVERY worker quarantined it keeps
+        // draining anyway (jobs fail fast on the dead runtime and
+        // report back), so scoped batches still terminate and the
+        // scheduler aborts with a clean all-quarantined error instead
+        // of deadlocking.
+        let sidelined =
+            state.is_quarantined(me) && !state.all_quarantined();
         // Own queue first (FIFO), then steal from the other deques'
         // tails.
-        let mut job = state.queues[me].lock().unwrap().pop_front();
-        if job.is_none() {
+        let mut job = if sidelined {
+            None
+        } else {
+            relock(&state.queues[me]).pop_front()
+        };
+        if job.is_none() && !sidelined {
             for k in 1..n {
                 let victim = (me + k) % n;
-                job = state.queues[victim].lock().unwrap().pop_back();
+                job = relock(&state.queues[victim]).pop_back();
                 if job.is_some() {
                     state.steals.fetch_add(1, Ordering::Relaxed);
                     break;
@@ -343,12 +552,18 @@ fn dispatch_main(me: usize, rt: Runtime, state: Arc<PoolState>) {
                 // Contain panics so a failing job can neither kill the
                 // dispatcher nor leave the pending counter stuck.
                 let t0 = std::time::Instant::now();
-                let _ = std::panic::catch_unwind(
+                let result = std::panic::catch_unwind(
                     std::panic::AssertUnwindSafe(|| job(&rt)));
+                if result.is_err() {
+                    // A panicked job never reaches the scheduler's
+                    // outcome report, so count the failure here for
+                    // quarantine purposes.
+                    state.report(me, false);
+                }
                 state.busy[me].fetch_add(
                     t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
                 state.ran[me].fetch_add(1, Ordering::Relaxed);
-                let mut cnt = state.pending.lock().unwrap();
+                let mut cnt = relock(&state.pending);
                 *cnt -= 1;
                 if *cnt == 0 {
                     state.done_cv.notify_all();
@@ -363,10 +578,11 @@ fn dispatch_main(me: usize, rt: Runtime, state: Arc<PoolState>) {
                 // counter re-check under the mutex closes the race
                 // with a submit that slipped in after the sweep; a
                 // spurious wake just falls through to another sweep.
-                let guard = state.work_seq.lock().unwrap();
+                let guard = relock(&state.work_seq);
                 if *guard == seq_before
                     && !state.shutdown.load(Ordering::Acquire) {
-                    drop(state.work_cv.wait(guard).unwrap());
+                    drop(state.work_cv.wait(guard)
+                        .unwrap_or_else(|e| e.into_inner()));
                 }
             }
         }
@@ -535,6 +751,94 @@ mod tests {
         });
         pool.wait();
         assert_eq!(counter.load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn quarantined_worker_jobs_complete_on_survivors() {
+        let pool = empty_pool(2);
+        pool.set_quarantine_after(1);
+        pool.report_worker_outcome(0, false);
+        assert_eq!(pool.quarantined_workers(), vec![0]);
+        assert_eq!(pool.workers_quarantined(), 1);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        for _ in 0..8 {
+            let seen = Arc::clone(&seen);
+            // Pin to the quarantined worker: placement must redirect
+            // (and any job that still lands in deque 0 must drain via
+            // the survivor's steal path).
+            pool.submit_to(0, move |rt| {
+                seen.lock().unwrap().push(rt.device());
+            });
+        }
+        pool.wait();
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen.len(), 8);
+        assert!(seen.iter().all(|&d| d == 1),
+                "jobs ran on quarantined worker: {:?}", *seen);
+    }
+
+    #[test]
+    fn all_workers_quarantined_still_drains_scoped_batches() {
+        let pool = empty_pool(2);
+        pool.set_quarantine_after(1);
+        pool.report_worker_outcome(0, false);
+        pool.report_worker_outcome(1, false);
+        assert_eq!(pool.workers_quarantined(), 2);
+        // Escape hatch: with nobody healthy the dispatchers keep
+        // draining so batches terminate instead of deadlocking.
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move |_rt| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn success_resets_failure_streak() {
+        let pool = empty_pool(2);
+        pool.set_quarantine_after(2);
+        pool.report_worker_outcome(0, false);
+        pool.report_worker_outcome(0, true);
+        pool.report_worker_outcome(0, false);
+        assert!(pool.quarantined_workers().is_empty(),
+                "interleaved success must reset the streak");
+        pool.report_worker_outcome(0, false);
+        assert_eq!(pool.quarantined_workers(), vec![0]);
+        // The scheduler's unknown-worker sentinel is a no-op.
+        pool.report_worker_outcome(usize::MAX, false);
+        assert_eq!(pool.workers_quarantined(), 1);
+    }
+
+    #[test]
+    fn stats_and_pool_survive_poisoned_locks() {
+        let pool = empty_pool(2);
+        pool.note_shard_retry();
+        // Poison the two hottest locks by panicking while holding
+        // their guards; `relock` recovery must keep the pool live.
+        for _ in 0..2 {
+            let state = Arc::clone(&pool.state);
+            let _ = std::thread::spawn(move || {
+                let _g1 = state.pending.lock().unwrap();
+                let _g2 = state.work_seq.lock().unwrap();
+                panic!("poison pool locks");
+            })
+            .join();
+        }
+        assert!(pool.state.pending.is_poisoned());
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let c = Arc::clone(&counter);
+            pool.submit(move |_rt| {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 8);
+        assert_eq!(pool.stats_total().shard_retries, 1);
     }
 
     #[test]

@@ -44,6 +44,12 @@ pub enum RuntimeError {
     /// full [`ExecInput::Cached`] form (data attached) — see
     /// `OffloadEngine` for the canonical probe-then-upload loop.
     NotResident(BufferKey),
+    /// Failure tied to the worker, not the work: a dead service
+    /// thread, a lost reply, a backend that failed to come up.  The
+    /// same call can succeed on another worker, so the shard
+    /// scheduler retries these (and only these — see
+    /// [`RuntimeError::is_transient`]).
+    Transient(String),
 }
 
 impl std::fmt::Display for RuntimeError {
@@ -55,7 +61,23 @@ impl std::fmt::Display for RuntimeError {
                 f,
                 "runtime: buffer ({}, {:?}, gen {}) not resident",
                 k.layer, k.tensor, k.generation),
+            RuntimeError::Transient(s) => {
+                write!(f, "runtime (transient): {s}")
+            }
         }
+    }
+}
+
+impl RuntimeError {
+    /// True for failures a retry on a different worker can fix:
+    /// worker death (`Transient`) and evicted device buffers
+    /// (`NotResident`).  Deterministic failures — manifest parse
+    /// errors, shape mismatches, backend rejections — stay
+    /// non-transient so the retry loop never spins on them.
+    pub fn is_transient(&self) -> bool {
+        matches!(self,
+                 RuntimeError::Transient(_)
+                 | RuntimeError::NotResident(_))
     }
 }
 
@@ -190,6 +212,13 @@ pub struct ServiceStats {
     /// and cache hits add nothing here — this is the number the
     /// wave-2 bench watches drop.
     pub upload_bytes: u64,
+    /// Shard dispatches re-run after a transient failure.  Counted at
+    /// the pool, not per service — per-worker stats report 0 and
+    /// `RuntimePool::stats_total` injects the pool total.
+    pub shard_retries: u64,
+    /// Workers currently quarantined after consecutive failures
+    /// (pool-level, like `shard_retries`).
+    pub workers_quarantined: u64,
 }
 
 impl ServiceStats {
@@ -242,6 +271,8 @@ impl ServiceStats {
         self.probe_hits += o.probe_hits;
         self.probe_misses += o.probe_misses;
         self.upload_bytes += o.upload_bytes;
+        self.shard_retries += o.shard_retries;
+        self.workers_quarantined += o.workers_quarantined;
     }
 }
 
@@ -394,9 +425,9 @@ impl Runtime {
             artifact: artifact.to_string(),
             inputs,
             reply: reply_tx,
-        }).map_err(|_| RuntimeError::Msg("service stopped".into()))?;
+        }).map_err(|_| RuntimeError::Transient("service stopped".into()))?;
         reply_rx.recv()
-            .map_err(|_| RuntimeError::Msg("service dropped reply".into()))?
+            .map_err(|_| RuntimeError::Transient("service dropped reply".into()))?
     }
 
     /// Compile an artifact ahead of first use.
@@ -406,9 +437,9 @@ impl Runtime {
         self.tx.send(Request::Preload {
             artifact: artifact.to_string(),
             reply: reply_tx,
-        }).map_err(|_| RuntimeError::Msg("service stopped".into()))?;
+        }).map_err(|_| RuntimeError::Transient("service stopped".into()))?;
         reply_rx.recv()
-            .map_err(|_| RuntimeError::Msg("service dropped reply".into()))?
+            .map_err(|_| RuntimeError::Transient("service dropped reply".into()))?
     }
 
     pub fn stats(&self) -> ServiceStats {
@@ -462,16 +493,18 @@ where
     let backend = match factory() {
         Ok(b) => b,
         Err(e) => {
-            // Fail every request with the construction error.
+            // Fail every request with the construction error.  A
+            // sibling worker's backend may have come up fine, so this
+            // is a worker-tied (transient) failure, not a job one.
             let msg = format!("backend init failed: {e}");
             for req in rx {
                 match req {
                     Request::Exec { reply, .. } => {
-                        let _ = reply.send(Err(RuntimeError::Msg(
+                        let _ = reply.send(Err(RuntimeError::Transient(
                             msg.clone())));
                     }
                     Request::Preload { reply, .. } => {
-                        let _ = reply.send(Err(RuntimeError::Msg(
+                        let _ = reply.send(Err(RuntimeError::Transient(
                             msg.clone())));
                     }
                     Request::Stats { reply } => {

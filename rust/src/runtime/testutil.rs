@@ -11,6 +11,7 @@ use std::path::PathBuf;
 use std::sync::Arc;
 
 use crate::runtime::backend::InterpBackend;
+use crate::runtime::faults::{FaultPlan, FaultyBackend};
 use crate::runtime::manifest::{ArtifactEntry, Manifest, ModelMeta};
 use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeOptions};
@@ -95,5 +96,26 @@ pub fn interp_pool(manifest: &Manifest, devices: usize,
         (0..devices.max(1))
             .map(|device| interp_runtime(
                 manifest, RuntimeOptions { device, ..opts.clone() }))
+            .collect())
+}
+
+/// [`interp_pool`] with every worker's backend wrapped in a
+/// [`FaultyBackend`] driving `plan` — the test/bench surface for the
+/// recovery paths (mirrors `RuntimePool::start_with_faults`).
+pub fn faulty_interp_pool(manifest: &Manifest, devices: usize,
+                          opts: RuntimeOptions, plan: &FaultPlan)
+    -> RuntimePool {
+    let opts = opts.with_shared_compile_cache();
+    RuntimePool::from_runtimes(
+        (0..devices.max(1))
+            .map(|device| {
+                let plan = plan.clone();
+                Runtime::start_with_backend(
+                    Arc::new(manifest.clone()),
+                    move || Ok(FaultyBackend::new(
+                        InterpBackend::new(), plan, device)),
+                    RuntimeOptions { device, ..opts.clone() })
+                    .expect("start faulty interp runtime")
+            })
             .collect())
 }

@@ -14,6 +14,18 @@ use std::time::Instant;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
 
+/// Lock recovering from poisoning.  Every critical section in this
+/// module performs a single-step mutation (counter bump/decrement,
+/// queue recv) that leaves the guarded state valid at every instant,
+/// and job panics are contained by `catch_unwind` before they can
+/// unwind through one — so a poisoned lock only means *some* thread
+/// panicked elsewhere, never that the data is torn.  Propagating the
+/// poison would wedge every surviving worker (and hang `wait`)
+/// instead of just the thread that died.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 enum Message {
     Run(Job),
     Shutdown,
@@ -43,7 +55,7 @@ impl ThreadPool {
             let busy = Arc::clone(&busy);
             workers.push(thread::spawn(move || loop {
                 let msg = {
-                    let guard = rx.lock().unwrap();
+                    let guard = relock(&rx);
                     guard.recv()
                 };
                 match msg {
@@ -60,7 +72,7 @@ impl ThreadPool {
                             t0.elapsed().as_nanos() as u64,
                             Ordering::Relaxed);
                         let (lock, cv) = &*pend;
-                        let mut cnt = lock.lock().unwrap();
+                        let mut cnt = relock(lock);
                         *cnt -= 1;
                         if *cnt == 0 {
                             cv.notify_all();
@@ -90,7 +102,7 @@ impl ThreadPool {
     pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
         {
             let (lock, _) = &*self.pending;
-            *lock.lock().unwrap() += 1;
+            *relock(lock) += 1;
         }
         self.sender.send(Message::Run(Box::new(f))).expect("pool closed");
     }
@@ -98,9 +110,9 @@ impl ThreadPool {
     /// Block until every submitted job has finished.
     pub fn wait(&self) {
         let (lock, cv) = &*self.pending;
-        let mut cnt = lock.lock().unwrap();
+        let mut cnt = relock(lock);
         while *cnt > 0 {
-            cnt = cv.wait(cnt).unwrap();
+            cnt = cv.wait(cnt).unwrap_or_else(|e| e.into_inner());
         }
     }
 
@@ -123,7 +135,10 @@ impl ThreadPool {
         impl Drop for BatchGuard {
             fn drop(&mut self) {
                 let (lock, cv) = &*self.0;
-                let mut cnt = lock.lock().unwrap();
+                // Recover from poisoning: the count stays valid (the
+                // only mutation is this decrement) and refusing would
+                // hang the batch wait below forever.
+                let mut cnt = relock(lock);
                 *cnt -= 1;
                 if *cnt == 0 {
                     cv.notify_all();
@@ -150,9 +165,9 @@ impl ThreadPool {
             });
         }
         let (lock, cv) = &*batch;
-        let mut cnt = lock.lock().unwrap();
+        let mut cnt = relock(lock);
         while *cnt > 0 {
-            cnt = cv.wait(cnt).unwrap();
+            cnt = cv.wait(cnt).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -309,6 +324,29 @@ mod tests {
             });
         }
         // wait() must not hang, and the workers must keep serving.
+        pool.wait();
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn pool_survives_poisoned_pending_lock() {
+        let pool = ThreadPool::new(2);
+        // Poison the pending lock by panicking while holding it;
+        // `relock` recovery must keep submit/wait working.
+        let pend = Arc::clone(&pool.pending);
+        let _ = thread::spawn(move || {
+            let _g = pend.0.lock().unwrap();
+            panic!("poison pending lock");
+        })
+        .join();
+        assert!(pool.pending.0.is_poisoned());
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            });
+        }
         pool.wait();
         assert_eq!(counter.load(Ordering::Relaxed), 10);
     }

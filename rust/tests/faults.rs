@@ -1,0 +1,256 @@
+//! Fault-tolerance integration tests: shard retry, worker quarantine,
+//! offload→native degradation and journal-based resume, all driven by
+//! the deterministic fault-injection harness
+//! (`runtime::faults::FaultyBackend`) over interp-backed pools — no
+//! real hardware faults, no flaky timing.
+//!
+//! The recovery invariant under test everywhere: per-row refinement
+//! results are independent of *where* they ran, so any run that
+//! completes — through retries, around quarantined workers, resumed
+//! from a journal — must produce masks and snapshots bit-identical to
+//! an undisturbed run.
+
+use std::path::PathBuf;
+
+use sparseswaps::coordinator::{prune, PatternKind, PruneConfig, Refiner};
+use sparseswaps::data::Dataset;
+use sparseswaps::model::testutil::tiny_manifest;
+use sparseswaps::model::{MaskSet, ParamStore};
+use sparseswaps::pruning::RefineError;
+use sparseswaps::runtime::testutil::{faulty_interp_pool, interp_pool};
+use sparseswaps::runtime::{
+    BufferKey, FaultPlan, RuntimeError, RuntimeOptions, RuntimePool,
+};
+
+/// Untrained tiny model + dataset (pruning is deterministic in the
+/// weights; the recovery invariants do not need a trained model).
+fn tiny_setup(pool: &RuntimePool) -> (ParamStore, Dataset) {
+    let meta = pool.manifest().config("tiny").unwrap().clone();
+    let ds = Dataset::build(&meta, 42);
+    let store = ParamStore::init(&meta, meta.init_seed);
+    (store, ds)
+}
+
+fn base_cfg() -> PruneConfig {
+    PruneConfig {
+        pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
+        refiner: Refiner::SparseSwapsOffload {
+            impl_name: "interp".into(),
+        },
+        t_max: 8,
+        calib_batches: 2,
+        sequential: false,
+        ..Default::default()
+    }
+}
+
+fn assert_masks_eq(a: &MaskSet, b: &MaskSet, what: &str) {
+    for (li, (x, y)) in a.masks.iter().zip(&b.masks).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: layer {li} mask diverged");
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ssfault_test_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn transiency_classification_is_exact() {
+    // Only worker-tied failures may be redispatched; result-shape or
+    // input errors would fail identically anywhere and must abort.
+    let nr = RuntimeError::NotResident(BufferKey {
+        layer: 7,
+        tensor: "gram".into(),
+        generation: 0,
+    });
+    assert!(nr.is_transient());
+    assert!(RuntimeError::Transient("worker died".into())
+        .is_transient());
+    assert!(!RuntimeError::Msg("bad shape".into()).is_transient());
+    assert!(!RuntimeError::Xla("compile failed".into()).is_transient());
+
+    assert!(RefineError::Transient("lost reply".into()).is_transient());
+    assert!(!RefineError::Msg("bad input".into()).is_transient());
+    assert!(!RefineError::MissingInput("gram").is_transient());
+}
+
+#[test]
+fn transient_faults_leave_masks_bit_identical() {
+    // The first eligible call on each device fails (`nth=1`), plus a
+    // bounded storm of random transient + NotResident faults.  Every
+    // failed shard redispatches; the completed run must be
+    // indistinguishable from the fault-free one in masks *and*
+    // checkpoint snapshots.
+    let manifest = tiny_manifest();
+    let clean = interp_pool(&manifest, 2, RuntimeOptions::default());
+    let plan = FaultPlan::parse(
+        "seed=11;nth=1;rate=0.05;storm=0.05;max_faults=2")
+        .unwrap();
+    let faulty = faulty_interp_pool(&manifest, 2,
+                                    RuntimeOptions::default(), &plan);
+    // Keep this test about the retry path alone; quarantine has its
+    // own tests below.
+    faulty.set_quarantine_after(100);
+    let (store, ds) = tiny_setup(&clean);
+    let cfg = PruneConfig {
+        checkpoints: vec![2, 8],
+        // Above devices x max_faults, so completion is guaranteed.
+        max_shard_retries: 8,
+        ..base_cfg()
+    };
+    let (m_clean, r_clean) = prune(&clean, &store, &ds, &cfg).unwrap();
+    let (m_faulty, r_faulty) =
+        prune(&faulty, &store, &ds, &cfg).unwrap();
+    assert_masks_eq(&m_clean, &m_faulty, "transient-fault run");
+    assert_eq!(r_clean.snapshots.len(), r_faulty.snapshots.len());
+    for (cp, snap) in &r_clean.snapshots {
+        assert_masks_eq(snap, &r_faulty.snapshots[cp],
+                        &format!("checkpoint {cp} snapshot"));
+    }
+    assert!(faulty.shard_retries() >= 1,
+            "fail-nth must force at least one shard retry");
+    assert_eq!(faulty.workers_quarantined(), 0);
+}
+
+#[test]
+fn killed_worker_is_quarantined_and_the_run_completes() {
+    // Device 1's service thread panics mid-run (total worker death);
+    // random transient faults ride along on the survivor.
+    // `max_faults=1` keeps the survivor's failure streak below the
+    // quarantine threshold, so exactly the dead worker quarantines
+    // and the run finishes on device 0 with bit-identical masks.
+    let manifest = tiny_manifest();
+    let clean = interp_pool(&manifest, 2, RuntimeOptions::default());
+    let plan = FaultPlan::parse(
+        "seed=5;rate=0.05;max_faults=1;kill=1;kill_after=2")
+        .unwrap();
+    let faulty = faulty_interp_pool(&manifest, 2,
+                                    RuntimeOptions::default(), &plan);
+    let (store, ds) = tiny_setup(&clean);
+    let cfg = PruneConfig { max_shard_retries: 8, ..base_cfg() };
+    let (m_clean, _) = prune(&clean, &store, &ds, &cfg).unwrap();
+    let (m_faulty, _) = prune(&faulty, &store, &ds, &cfg).unwrap();
+    assert_masks_eq(&m_clean, &m_faulty, "killed-worker run");
+    assert_eq!(faulty.quarantined_workers(), vec![1]);
+    assert!(faulty.shard_retries() >= 1,
+            "the dying worker's shards must have been redispatched");
+}
+
+#[test]
+fn all_workers_quarantined_degrades_to_native() {
+    // Both device workers die on their first swap call; calibration
+    // (never faulted by the default swap-kinds plan) still succeeds,
+    // so the pipeline reaches refinement, quarantines everything and
+    // falls back to the native host engine instead of aborting.  The
+    // degraded run must equal a straight native-refiner run.
+    let manifest = tiny_manifest();
+    let plan = FaultPlan::parse("kill=0,1;kill_after=0").unwrap();
+    let faulty = faulty_interp_pool(&manifest, 2,
+                                    RuntimeOptions::default(), &plan);
+    let clean = interp_pool(&manifest, 2, RuntimeOptions::default());
+    let (store, ds) = tiny_setup(&clean);
+    let cfg = PruneConfig { max_shard_retries: 6, ..base_cfg() };
+    let (m_degraded, _) = prune(&faulty, &store, &ds, &cfg).unwrap();
+    assert_eq!(faulty.workers_quarantined(), 2);
+
+    let cfg_native = PruneConfig {
+        refiner: Refiner::SparseSwapsNative,
+        ..cfg
+    };
+    let (m_native, _) =
+        prune(&clean, &store, &ds, &cfg_native).unwrap();
+    assert_masks_eq(&m_degraded, &m_native, "degraded run");
+}
+
+#[test]
+fn resumed_run_reproduces_uninterrupted_masks() {
+    // Sequential mode is the interesting case: block 1's
+    // recalibration depends on block 0's masks, so resume must
+    // restore them exactly for the remaining blocks to match.
+    let manifest = tiny_manifest();
+    let pool = interp_pool(&manifest, 1, RuntimeOptions::default());
+    let (store, ds) = tiny_setup(&pool);
+    // The full run journals into the repo-relative reports dir (same
+    // idiom as the e2e summary): CI uploads it as the prune-journal
+    // artifact, so a real journal is inspectable per PR.
+    let dir_full = PathBuf::from("reports/prune_journal");
+    let cfg_full = PruneConfig {
+        refiner: Refiner::SparseSwapsNative,
+        sequential: true,
+        t_max: 6,
+        journal: Some(dir_full.clone()),
+        ..base_cfg()
+    };
+    let (m_full, _) = prune(&pool, &store, &ds, &cfg_full).unwrap();
+
+    // "Crash" between blocks via the halt hook, then resume.
+    let dir = tmp_dir("resume");
+    let cfg_halt = PruneConfig {
+        journal: Some(dir.clone()),
+        halt_after_block: Some(0),
+        ..cfg_full.clone()
+    };
+    let (_, r_halt) = prune(&pool, &store, &ds, &cfg_halt).unwrap();
+    assert!(r_halt.layers.iter().all(|l| l.block == 0));
+
+    let cfg_resume = PruneConfig {
+        resume: true,
+        halt_after_block: None,
+        ..cfg_halt
+    };
+    let (m_res, r_res) = prune(&pool, &store, &ds, &cfg_resume).unwrap();
+    assert!(!r_res.layers.is_empty());
+    assert!(r_res.layers.iter().all(|l| l.block == 1),
+            "resume must skip the journaled block");
+    assert_masks_eq(&m_full, &m_res, "resumed run");
+    // Leave `dir_full` in place for the CI artifact upload.
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_rejects_bad_journals() {
+    let manifest = tiny_manifest();
+    let pool = interp_pool(&manifest, 1, RuntimeOptions::default());
+    let (store, ds) = tiny_setup(&pool);
+    let dir = tmp_dir("fpr");
+    let cfg = PruneConfig {
+        refiner: Refiner::SparseSwapsNative,
+        t_max: 6,
+        journal: Some(dir.clone()),
+        halt_after_block: Some(0),
+        ..base_cfg()
+    };
+    prune(&pool, &store, &ds, &cfg).unwrap();
+
+    // Any mask-affecting knob changes the fingerprint; resuming under
+    // it must be refused, not silently mixed.
+    let cfg_other = PruneConfig {
+        t_max: 7,
+        resume: true,
+        halt_after_block: None,
+        ..cfg.clone()
+    };
+    let err = prune(&pool, &store, &ds, &cfg_other).unwrap_err();
+    assert!(err.to_string().contains("fingerprint mismatch"),
+            "unexpected error: {err}");
+
+    // Resume without any journal on disk.
+    let cfg_empty = PruneConfig {
+        journal: Some(tmp_dir("missing")),
+        t_max: 6,
+        ..cfg_other.clone()
+    };
+    let err = prune(&pool, &store, &ds, &cfg_empty).unwrap_err();
+    assert!(err.to_string().contains("no journal to resume"),
+            "unexpected error: {err}");
+
+    // Resume without a journal directory configured at all.
+    let cfg_nodir = PruneConfig { journal: None, ..cfg_empty };
+    let err = prune(&pool, &store, &ds, &cfg_nodir).unwrap_err();
+    assert!(err.to_string().contains("resume requires"),
+            "unexpected error: {err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -47,6 +47,7 @@ fn plan(t_max: usize, checkpoints: &[usize], shard_rows: usize)
         checkpoints: checkpoints.to_vec(),
         shard_rows,
         serial: false,
+        max_retries: 2,
     }
 }
 
