@@ -8,7 +8,8 @@
 //!   (SPARSESWAPS_E2E_CONFIG=tiny for a fast run)
 
 use sparseswaps::coordinator::{
-    prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
+    train, MaskSpec, PatternKind, PruneSession, Refiner, RunOptions,
+    TrainConfig,
 };
 use sparseswaps::data::{Dataset, Split};
 use sparseswaps::eval::{perplexity, zeroshot};
@@ -55,7 +56,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let acc_dense = zeroshot::accuracy(&rt, &store, &tasks)?;
 
     // 3. Prune: Wanda warmstart at 60%, then SparseSwaps refinement.
-    let base = PruneConfig {
+    // Both specs run through one session over (pool, store, dataset).
+    let mut session = PruneSession::new(&rt, &store, &ds,
+                                        RunOptions::default());
+    let base = MaskSpec {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
         refiner: Refiner::None,
         t_max: 50,
@@ -63,17 +67,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         sequential: true,
         ..Default::default()
     };
-    let (masks_w, _) = prune(&rt, &store, &ds, &base)?;
+    let (masks_w, _) = session.prune(&base)?;
     let wanda_store = store.masked(&masks_w);
     let ppl_w = perplexity(&rt, &wanda_store, &val)?;
     let acc_w = zeroshot::accuracy(&rt, &wanda_store, &tasks)?;
 
-    let cfg_ss = PruneConfig {
+    let spec_ss = MaskSpec {
         refiner: Refiner::SparseSwapsOffload { impl_name: "xla".into() },
         ..base
     };
     let t0 = std::time::Instant::now();
-    let (masks_s, rep) = prune(&rt, &store, &ds, &cfg_ss)?;
+    let (masks_s, rep) = session.prune(&spec_ss)?;
     let prune_secs = t0.elapsed().as_secs_f64();
     let ss_store = store.masked(&masks_s);
     let ppl_s = perplexity(&rt, &ss_store, &val)?;

@@ -5,7 +5,8 @@
 //!   (SPARSESWAPS_E2E_CONFIG=tiny for a fast run)
 
 use sparseswaps::coordinator::{
-    prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
+    train, MaskSpec, PatternKind, PruneSession, Refiner, RunOptions,
+    TrainConfig,
 };
 use sparseswaps::data::{Dataset, Split};
 use sparseswaps::eval::perplexity;
@@ -30,10 +31,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("{:<14} {:>14} {:>14} {:>12}", "pattern", "wanda ppl",
              "+sparseswaps", "err. reduced");
 
+    let mut session = PruneSession::new(&rt, &store, &ds,
+                                        RunOptions::default());
     for pattern in [PatternKind::Unstructured { sparsity: 0.5 },
                     PatternKind::Nm { n: 2, m: 4 },
                     PatternKind::Nm { n: 4, m: 8 }] {
-        let base = PruneConfig {
+        let base = MaskSpec {
             pattern_kind: pattern,
             refiner: Refiner::None,
             t_max: 25,
@@ -41,15 +44,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             sequential: true,
             ..Default::default()
         };
-        let (masks_w, _) = prune(&rt, &store, &ds, &base)?;
+        let (masks_w, _) = session.prune(&base)?;
         let ppl_w = perplexity(&rt, &store.masked(&masks_w), &val)?;
-        let cfg = PruneConfig {
+        let spec = MaskSpec {
             refiner: Refiner::SparseSwapsOffload {
                 impl_name: "xla".into(),
             },
             ..base
         };
-        let (masks_s, rep) = prune(&rt, &store, &ds, &cfg)?;
+        let (masks_s, rep) = session.prune(&spec)?;
         let ppl_s = perplexity(&rt, &store.masked(&masks_s), &val)?;
         println!("{:<14} {:>14.3} {:>14.3} {:>11.1}%",
                  pattern.label(), ppl_w, ppl_s,

@@ -6,7 +6,8 @@
 //!   make artifacts && cargo run --release --example warmstart_compare
 
 use sparseswaps::coordinator::{
-    prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
+    train, MaskSpec, PatternKind, PruneSession, Refiner, RunOptions,
+    TrainConfig,
 };
 use sparseswaps::data::Dataset;
 use sparseswaps::model::ParamStore;
@@ -29,8 +30,12 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     println!("{:<12} {:>16} {:>16} {:>16}", "warmstart",
              "warmstart loss", "dsnot loss", "sparseswaps loss");
     let mut reductions = Vec::new();
+    // One session: all nine one-shot runs share a single dense
+    // calibration pass instead of recomputing the Grams per run.
+    let mut session = PruneSession::new(&rt, &store, &ds,
+                                        RunOptions::default());
     for crit in [Criterion::Magnitude, Criterion::Wanda, Criterion::Ria] {
-        let base = PruneConfig {
+        let base = MaskSpec {
             criterion: crit,
             pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
             refiner: Refiner::None,
@@ -39,11 +44,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             sequential: false,
             ..Default::default()
         };
-        let (_, rep_warm) = prune(&rt, &store, &ds, &base)?;
-        let (_, rep_dsnot) = prune(&rt, &store, &ds, &PruneConfig {
+        let (_, rep_warm) = session.prune(&base)?;
+        let (_, rep_dsnot) = session.prune(&MaskSpec {
             refiner: Refiner::Dsnot, ..base.clone()
         })?;
-        let (_, rep_ss) = prune(&rt, &store, &ds, &PruneConfig {
+        let (_, rep_ss) = session.prune(&MaskSpec {
             refiner: Refiner::SparseSwapsOffload {
                 impl_name: "xla".into(),
             },

@@ -39,7 +39,15 @@
 //! bit-identical to the fault-free run and reports the recovery
 //! overhead to the "faults" section of `reports/bench_kernels.json`.
 //!
-//! Part 6 (needs artifacts): the fused-XLA and Pallas offload engines
+//! Part 6 (artifact-free, always runs): the sparsity-sweep gate —
+//! the warm-started curve through one `PruneSession` vs a cold
+//! fresh-session prune per grid point.  Gates on the warm sweep
+//! paying exactly one calibration pass and coming in at least 2x
+//! faster than cold-per-point at equal-or-better refined loss, and
+//! writes `reports/sweep.json` (the CI curve artifact) plus the
+//! "sweep" section of `reports/bench_kernels.json`.
+//!
+//! Part 7 (needs artifacts): the fused-XLA and Pallas offload engines
 //! on their own artifact-width layer.
 mod common;
 
@@ -50,13 +58,15 @@ use sparseswaps::coordinator::scheduler::{
     refine_block, BlockSchedule, LayerWork,
 };
 use sparseswaps::coordinator::{
-    refine_layer_offload, train, OffloadConfig, OffloadEngine, Refiner,
-    TrainConfig,
+    refine_layer_offload, sweep, train, MaskSpec, OffloadConfig,
+    OffloadEngine, PatternKind, PruneSession, Refiner, RunOptions,
+    SweepConfig, TrainConfig,
 };
 use sparseswaps::data::{Dataset, Split};
-use sparseswaps::model::testutil::tiny_meta;
+use sparseswaps::model::testutil::{tiny_manifest, tiny_meta};
 use sparseswaps::model::ParamStore;
 use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
+use sparseswaps::pruning::Criterion;
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
 use sparseswaps::pruning::saliency;
 use sparseswaps::pruning::sparseswaps::{
@@ -906,12 +916,160 @@ fn faults_section() {
               reports/bench_kernels.json (recovery parity OK)");
 }
 
+/// Artifact-free sparsity-sweep gate: the warm-started curve through
+/// one session vs a cold fresh-session prune per grid point.  The
+/// warm sweep pays one calibration pass for the whole curve while
+/// cold-per-point pays one per level, so at calibration-dominated
+/// sizes the sweep must come in at least 2x faster — and every warm
+/// point's refined loss must stay within 5% of the cold run's, with
+/// the chain head (no inherited mask on either arm) exactly equal.
+/// Exits non-zero on any violation (the CI bench smoke job gates on
+/// this) and leaves `reports/sweep.json` behind as the CI curve
+/// artifact.
+fn sweep_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let (t_max, calib_batches) =
+        if quick { (4usize, 8usize) } else { (8, 8) };
+    let pool = interp_pool(&tiny_manifest(), 1,
+                           RuntimeOptions::default());
+    let meta = pool.manifest().config("tiny").unwrap().clone();
+    let ds = Dataset::build(&meta, 42);
+    let store = ParamStore::init(&meta, meta.init_seed);
+
+    let cfg = SweepConfig {
+        levels: vec![
+            PatternKind::Unstructured { sparsity: 0.4 },
+            PatternKind::Unstructured { sparsity: 0.55 },
+            PatternKind::Unstructured { sparsity: 0.7 },
+        ],
+        criteria: vec![Criterion::Wanda],
+        refiners: vec![Refiner::SparseSwapsNative],
+        t_max,
+        calib_batches,
+        warm_start: true,
+        cold_compare: false,
+        eval_ppl: true,
+        val_batches: 2,
+        out: Some("reports/sweep.json".into()),
+    };
+    let mut session = PruneSession::new(&pool, &store, &ds,
+                                        RunOptions::default());
+    let warm = sweep::sweep(&mut session, &cfg)
+        .expect("warm sweep over interp");
+    if warm.calibrations != 1 {
+        eprintln!("[ablation_engine] PERF GATE FAILURE: warm sweep \
+                   paid {} calibration passes, expected 1",
+                  warm.calibrations);
+        std::process::exit(1);
+    }
+    let warm_secs = warm.prune_seconds().max(1e-9);
+
+    // Cold baseline: a fresh session per grid point, timed including
+    // its own calibration pass — what running each point standalone
+    // costs.  Specs are built from the same grid walk the sweep uses.
+    let mut cold: Vec<(f64, f64)> = Vec::new();
+    for (criterion, refiner, level) in sweep::points(&cfg) {
+        let spec = MaskSpec {
+            criterion,
+            pattern_kind: level,
+            refiner,
+            t_max,
+            calib_batches,
+            sequential: false,
+            checkpoints: Vec::new(),
+        };
+        let t0 = Instant::now();
+        let (_, rep) = PruneSession::new(&pool, &store, &ds,
+                                         RunOptions::default())
+            .prune(&spec)
+            .expect("cold per-point prune");
+        cold.push((t0.elapsed().as_secs_f64(),
+                   rep.total_refined_loss()));
+    }
+    let cold_total: f64 = cold.iter().map(|(s, _)| s).sum();
+    let speedup = cold_total / warm_secs;
+
+    let mut table = Table::new(
+        format!("Sparsity sweep — warm chain vs cold per point \
+                 (tiny, wanda+native, T_max={t_max}, \
+                 {calib_batches} calib batches)"),
+        &["point", "warm s", "cold s", "warm loss", "cold loss",
+          "swaps", "warm from"]);
+    let mut points_json: Vec<Json> = Vec::new();
+    for (w, (cold_secs, cold_loss)) in warm.points.iter().zip(&cold) {
+        if w.refined_loss > cold_loss * 1.05 {
+            eprintln!("[ablation_engine] PERF GATE FAILURE: sweep \
+                       point {} warm refined loss {} exceeds the \
+                       cold run's {} by more than 5%",
+                      w.key, w.refined_loss, cold_loss);
+            std::process::exit(1);
+        }
+        table.row(vec![
+            w.key.clone(),
+            format!("{:.3}", w.seconds),
+            format!("{cold_secs:.3}"),
+            format!("{:.1}", w.refined_loss),
+            format!("{cold_loss:.1}"),
+            w.swaps.to_string(),
+            w.warm_from.clone().unwrap_or_else(|| "-".into()),
+        ]);
+        points_json.push(Json::obj(vec![
+            ("key", Json::str(w.key.as_str())),
+            ("target_sparsity", Json::num(w.target_sparsity)),
+            ("warm_seconds", Json::num(w.seconds)),
+            ("cold_seconds", Json::num(*cold_secs)),
+            ("warm_refined_loss", Json::num(w.refined_loss)),
+            ("cold_refined_loss", Json::num(*cold_loss)),
+            ("swaps", Json::num(w.swaps as f64)),
+        ]));
+    }
+    // Both arms start the first level from a cold warmstart, and the
+    // pipeline is deterministic — any drift there is a real bug, not
+    // a tolerance question.
+    if warm.points[0].refined_loss != cold[0].1 {
+        eprintln!("[ablation_engine] PARITY FAILURE: chain-head \
+                   refined loss {} diverged from the cold run's {}",
+                  warm.points[0].refined_loss, cold[0].1);
+        std::process::exit(1);
+    }
+    if speedup < 2.0 {
+        eprintln!("[ablation_engine] PERF GATE FAILURE: warm sweep \
+                   {warm_secs:.3}s vs cold-per-point \
+                   {cold_total:.3}s is only {speedup:.2}x, below the \
+                   2x gate");
+        std::process::exit(1);
+    }
+    table.print();
+    println!("sweep: 1 calibration for {} points, {speedup:.2}x vs \
+              cold-per-point",
+             warm.points.len());
+
+    let section = Json::obj(vec![
+        ("t_max", Json::num(t_max as f64)),
+        ("calib_batches", Json::num(calib_batches as f64)),
+        ("points", Json::Arr(points_json)),
+        ("calibrations_warm", Json::num(warm.calibrations as f64)),
+        ("warm_prune_seconds", Json::num(warm_secs)),
+        ("cold_total_seconds", Json::num(cold_total)),
+        ("speedup_warm_vs_cold", Json::num(speedup)),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "sweep", section) {
+        eprintln!("[ablation_engine] FAILED writing bench_kernels: {e}");
+        std::process::exit(1);
+    }
+    println!("[ablation_engine] sweep section written to \
+              reports/bench_kernels.json (warm-vs-cold gates OK; \
+              curve at reports/sweep.json)");
+}
+
 fn main() {
     native_section();
     pool_section();
     shards_section();
     wave2_section();
     faults_section();
+    sweep_section();
 
     // Offload engines (need AOT artifacts; their own layer at an
     // artifact width).

@@ -32,7 +32,7 @@
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::pipeline::PruneConfig;
+use crate::coordinator::pipeline::MaskSpec;
 use crate::model::checkpoint::crc32;
 use crate::runtime::service::RuntimeError;
 use crate::util::jsonlite::Json;
@@ -45,19 +45,30 @@ fn err(e: impl std::fmt::Display) -> RuntimeError {
     RuntimeError::Msg(format!("journal: {e}"))
 }
 
-/// CRC32 over every config knob that changes the refined masks.  A
-/// resume under a different fingerprint is rejected: the journaled
-/// masks would be a different run's.  Wall-clock knobs (threads,
-/// shard size, retry budget) are deliberately excluded — masks are
-/// bit-identical across them.
-pub fn config_fingerprint(model: &str, cfg: &PruneConfig) -> u32 {
-    let key = format!(
+/// The fingerprint's preimage: one field per [`MaskSpec`] knob.  The
+/// mask-affecting knobs *are* the `MaskSpec` fields now, so the
+/// struct is the single source of truth instead of a hand-maintained
+/// knob list — but the serialized key (field order, names, label
+/// formats) is a compatibility surface: journals written by earlier
+/// versions resume only if this string is byte-identical for the same
+/// knobs.  `fingerprint_domain_is_pinned` locks it.
+pub fn fingerprint_key(model: &str, spec: &MaskSpec) -> String {
+    format!(
         "model={};criterion={};pattern={};refiner={};t_max={};\
          calib={};sequential={};checkpoints={:?}",
-        model, cfg.criterion.name(), cfg.pattern_kind.label(),
-        cfg.refiner.label(), cfg.t_max, cfg.calib_batches,
-        cfg.sequential, cfg.checkpoints);
-    crc32(key.as_bytes())
+        model, spec.criterion.name(), spec.pattern_kind.label(),
+        spec.refiner.label(), spec.t_max, spec.calib_batches,
+        spec.sequential, spec.checkpoints)
+}
+
+/// CRC32 over every config knob that changes the refined masks —
+/// exactly the [`MaskSpec`] fields.  A resume under a different
+/// fingerprint is rejected: the journaled masks would be a different
+/// run's.  Wall-clock knobs ([`crate::coordinator::RunOptions`]:
+/// threads, shard size, retry budget) are structurally excluded —
+/// masks are bit-identical across them.
+pub fn config_fingerprint(model: &str, spec: &MaskSpec) -> u32 {
+    crc32(fingerprint_key(model, spec).as_bytes())
 }
 
 /// One prune run's journal directory handle.
@@ -326,18 +337,49 @@ mod tests {
 
     #[test]
     fn fingerprint_tracks_mask_changing_knobs() {
-        let cfg = PruneConfig::default();
-        let a = config_fingerprint("tiny", &cfg);
-        assert_eq!(a, config_fingerprint("tiny", &cfg));
-        let mut other = cfg.clone();
-        other.t_max = cfg.t_max + 1;
+        let spec = MaskSpec::default();
+        let a = config_fingerprint("tiny", &spec);
+        assert_eq!(a, config_fingerprint("tiny", &spec));
+        let mut other = spec.clone();
+        other.t_max = spec.t_max + 1;
         assert_ne!(a, config_fingerprint("tiny", &other));
-        assert_ne!(a, config_fingerprint("tiny2", &cfg));
-        // Wall-clock knobs do not change masks, so they must not
-        // change the fingerprint either.
-        let mut sharded = cfg.clone();
-        sharded.shard_rows = 17;
-        sharded.threads = 3;
-        assert_eq!(a, config_fingerprint("tiny", &sharded));
+        assert_ne!(a, config_fingerprint("tiny2", &spec));
+        let mut seq = spec.clone();
+        seq.sequential = !spec.sequential;
+        assert_ne!(a, config_fingerprint("tiny", &seq));
+    }
+
+    #[test]
+    fn fingerprint_domain_is_pinned() {
+        // Compatibility pin: journals written before the
+        // MaskSpec/RunOptions split hashed this exact string, so the
+        // key serialization must never drift — existing journals keep
+        // resuming only while it is byte-identical.  Wall-clock knobs
+        // (threads, shard size, retries) live in `RunOptions` and are
+        // structurally absent.
+        let spec = MaskSpec::default();
+        assert_eq!(
+            fingerprint_key("tiny", &spec),
+            "model=tiny;criterion=wanda;pattern=60%;\
+             refiner=sparseswaps[xla];t_max=100;calib=8;\
+             sequential=true;checkpoints=[]");
+        let spec = MaskSpec {
+            criterion: crate::pruning::saliency::Criterion::Magnitude,
+            pattern_kind:
+                crate::coordinator::pipeline::PatternKind::Nm {
+                    n: 2, m: 4,
+                },
+            refiner:
+                crate::coordinator::pipeline::Refiner::SparseSwapsNative,
+            t_max: 25,
+            calib_batches: 4,
+            sequential: false,
+            checkpoints: vec![2, 8],
+        };
+        assert_eq!(
+            fingerprint_key("gpt-a", &spec),
+            "model=gpt-a;criterion=magnitude;pattern=2:4;\
+             refiner=sparseswaps[native];t_max=25;calib=4;\
+             sequential=false;checkpoints=[2, 8]");
     }
 }

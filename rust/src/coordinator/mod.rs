@@ -1,17 +1,24 @@
 //! Layer-3 coordinator: the pruning pipeline (shard-granular
 //! scheduling + calibration + warmstart + refinement through
-//! `RefineEngine`s), the shard scheduler itself, the per-block mask
-//! journal behind `prune --resume`, the offload swap engine, and the
-//! trainer that drives the AOT train-step artifact.
+//! `RefineEngine`s, behind the `PruneSession` job-spec API), the
+//! sparsity-sweep harness (warm-started mask continuation over a
+//! level × criterion × refiner grid), the shard scheduler itself, the
+//! per-block mask journal behind `prune --resume`, the offload swap
+//! engine, and the trainer that drives the AOT train-step artifact.
 
 pub mod journal;
 pub mod pipeline;
 pub mod scheduler;
 pub mod swaploop;
+pub mod sweep;
 pub mod trainer;
 
-pub use journal::{config_fingerprint, Journal};
-pub use pipeline::{prune, PatternKind, PruneConfig, PruneReport, Refiner};
+pub use journal::{config_fingerprint, fingerprint_key, Journal};
+pub use pipeline::{
+    LayerReport, MaskSpec, PatternKind, PruneReport, PruneSession,
+    Refiner, RunOptions,
+};
 pub use scheduler::{refine_block, BlockSchedule, Scheduler, Shard};
 pub use swaploop::{refine_layer_offload, OffloadConfig, OffloadEngine};
+pub use sweep::{SweepConfig, SweepPoint, SweepReport};
 pub use trainer::{train, TrainConfig, TrainReport};

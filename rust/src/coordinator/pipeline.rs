@@ -5,7 +5,7 @@
 //!       Gram streams for the block's layers;
 //!     for each prunable layer:
 //!       warmstart mask (magnitude / Wanda / RIA — computed natively
-//!         from W and diag(G));
+//!         from W and diag(G), or tightened from an inherited mask);
 //!       refinement through the layer's [`RefineEngine`] (SparseSwaps
 //!         offload or native, DSnoT, or none);
 //!       record exact per-layer loss before/after and apply the mask.
@@ -28,6 +28,17 @@
 //! every block from those statistics (Wanda-style; cheaper, slightly
 //! worse).  Both modes exist because the paper's baselines differ in
 //! this respect and the ablation benches compare them.
+//!
+//! The job-spec API splits what used to be one 14-field config in two:
+//! [`MaskSpec`] holds exactly the knobs that determine the resulting
+//! masks (and therefore the journal fingerprint domain —
+//! [`crate::coordinator::journal::config_fingerprint`] hashes a
+//! `MaskSpec` directly), while [`RunOptions`] holds the wall-clock
+//! knobs (threads, shards, retries, journaling) that never change a
+//! mask bit.  [`PruneSession`] owns the long-lived half of a run —
+//! pool, store, dataset and cached one-shot calibration statistics —
+//! so callers that walk many specs over one model (the sparsity-sweep
+//! harness, the report tables) calibrate once and prune per spec.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -45,11 +56,14 @@ use crate::model::store::{MaskSet, ParamStore};
 use crate::pruning::dsnot::DsnotEngine;
 use crate::pruning::engine::{NoopEngine, RefineEngine};
 use crate::pruning::error::relative_reduction;
-use crate::pruning::mask::{mask_from_scores, validate, Pattern};
+use crate::pruning::mask::{
+    mask_from_scores, tighten_mask, validate, Pattern,
+};
 use crate::pruning::saliency::{self, Criterion};
 use crate::pruning::sparseswaps::NativeEngine;
 use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeError};
+use crate::util::cli::{JournalFlags, PoolFlags};
 use crate::util::threadpool::{default_threads, ThreadPool};
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -115,8 +129,75 @@ impl Refiner {
     }
 }
 
-#[derive(Clone, Debug)]
-pub struct PruneConfig {
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PatternKind {
+    Unstructured { sparsity: f64 },
+    Nm { n: usize, m: usize },
+}
+
+impl PatternKind {
+    pub fn pattern_for(&self, d_in: usize) -> Pattern {
+        match *self {
+            PatternKind::Unstructured { sparsity } =>
+                Pattern::per_row_sparsity(d_in, sparsity),
+            PatternKind::Nm { n, m } => Pattern::Nm { n, m },
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            PatternKind::Unstructured { sparsity } =>
+                format!("{:.0}%", sparsity * 100.0),
+            PatternKind::Nm { n, m } => format!("{n}:{m}"),
+        }
+    }
+
+    /// Collision-proof key for merged JSON sections.  `label()` alone
+    /// prints `"50%"` for unstructured and `"2:4"` for N:M — two
+    /// different masks at the same sparsity — so point keys carry the
+    /// kind too.
+    pub fn key(&self) -> String {
+        match *self {
+            PatternKind::Unstructured { .. } =>
+                format!("unstructured:{}", self.label()),
+            PatternKind::Nm { .. } => format!("nm:{}", self.label()),
+        }
+    }
+
+    /// Target sparsity as a fraction (an N:M pattern keeps n of every
+    /// m weights).  Grid ordering and warm-chain eligibility key off
+    /// this.
+    pub fn sparsity(&self) -> f64 {
+        match *self {
+            PatternKind::Unstructured { sparsity } => sparsity,
+            PatternKind::Nm { n, m } => 1.0 - n as f64 / m as f64,
+        }
+    }
+
+    /// Parse a CLI pattern token: a sparsity (`0.6`, `60%`) or an
+    /// N:M spec (`2:4`).
+    pub fn parse(s: &str) -> Result<PatternKind, String> {
+        if let Some(Pattern::Nm { n, m }) = Pattern::parse(s) {
+            return Ok(PatternKind::Nm { n, m });
+        }
+        let v: f64 = s.trim_end_matches('%').parse().map_err(|_| {
+            format!("bad pattern {s:?}: want e.g. 0.6 or 2:4")
+        })?;
+        let sparsity = if v > 1.0 { v / 100.0 } else { v };
+        if !(0.0..1.0).contains(&sparsity) {
+            return Err(format!("sparsity {sparsity} out of range"));
+        }
+        Ok(PatternKind::Unstructured { sparsity })
+    }
+}
+
+/// The mask-affecting half of a pruning job: two runs over the same
+/// model with equal `MaskSpec`s produce bit-identical masks, whatever
+/// their [`RunOptions`].  This is exactly the journal fingerprint
+/// domain ([`config_fingerprint`] hashes these fields and nothing
+/// else).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MaskSpec {
     pub criterion: Criterion,
     pub pattern_kind: PatternKind,
     pub refiner: Refiner,
@@ -127,6 +208,29 @@ pub struct PruneConfig {
     pub sequential: bool,
     /// Mask snapshots at these cumulative iteration counts (Table 3).
     pub checkpoints: Vec<usize>,
+}
+
+impl Default for MaskSpec {
+    fn default() -> Self {
+        Self {
+            criterion: Criterion::Wanda,
+            pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
+            refiner: Refiner::SparseSwapsOffload {
+                impl_name: "xla".into(),
+            },
+            t_max: 100,
+            calib_batches: 8,
+            sequential: true,
+            checkpoints: Vec::new(),
+        }
+    }
+}
+
+/// The wall-clock half of a pruning job: scheduling, retry and
+/// journaling knobs.  None of these change a single mask bit — the
+/// shard-parity and fault-recovery tests pin that invariant.
+#[derive(Clone, Debug)]
+pub struct RunOptions {
     pub threads: usize,
     /// Schedule independent row shards of a block concurrently:
     /// runtime-free engines on the thread pool, the offload engine
@@ -161,42 +265,9 @@ pub struct PruneConfig {
     pub halt_after_block: Option<usize>,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum PatternKind {
-    Unstructured { sparsity: f64 },
-    Nm { n: usize, m: usize },
-}
-
-impl PatternKind {
-    pub fn pattern_for(&self, d_in: usize) -> Pattern {
-        match *self {
-            PatternKind::Unstructured { sparsity } =>
-                Pattern::per_row_sparsity(d_in, sparsity),
-            PatternKind::Nm { n, m } => Pattern::Nm { n, m },
-        }
-    }
-
-    pub fn label(&self) -> String {
-        match *self {
-            PatternKind::Unstructured { sparsity } =>
-                format!("{:.0}%", sparsity * 100.0),
-            PatternKind::Nm { n, m } => format!("{n}:{m}"),
-        }
-    }
-}
-
-impl Default for PruneConfig {
+impl Default for RunOptions {
     fn default() -> Self {
         Self {
-            criterion: Criterion::Wanda,
-            pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
-            refiner: Refiner::SparseSwapsOffload {
-                impl_name: "xla".into(),
-            },
-            t_max: 100,
-            calib_batches: 8,
-            sequential: true,
-            checkpoints: Vec::new(),
             threads: default_threads(),
             layer_parallel: true,
             shard_rows: 0,
@@ -204,6 +275,27 @@ impl Default for PruneConfig {
             journal: None,
             resume: false,
             halt_after_block: None,
+        }
+    }
+}
+
+impl RunOptions {
+    /// Build from the shared CLI flag blocks
+    /// ([`crate::util::cli::PoolFlags`] /
+    /// [`crate::util::cli::JournalFlags`]); per-command knobs
+    /// (`layer_parallel`, `shard_rows`, `halt_after_block`) keep
+    /// their defaults and are overridden by the caller.
+    pub fn from_flags(pool: &PoolFlags, journal: &JournalFlags)
+        -> RunOptions {
+        RunOptions {
+            threads: match pool.threads {
+                0 => default_threads(),
+                t => t,
+            },
+            max_shard_retries: journal.max_shard_retries,
+            journal: journal.journal.clone(),
+            resume: journal.resume,
+            ..RunOptions::default()
         }
     }
 }
@@ -230,6 +322,8 @@ impl LayerReport {
 #[derive(Clone, Debug, Default)]
 pub struct PruneReport {
     pub layers: Vec<LayerReport>,
+    /// Calibration seconds actually spent by this run: 0 when the
+    /// session served the one-shot Gram statistics from its cache.
     pub calib_seconds: f64,
     /// Summed per-layer refinement time (CPU seconds under the
     /// layer-parallel schedule, wall seconds under the serial one).
@@ -259,35 +353,166 @@ impl PruneReport {
     }
 }
 
-/// Run the pruning pipeline.  `store` keeps its dense weights; the
-/// resulting masks are returned (apply with `store.masked(&masks)`).
+/// A pruning session: the one entry point to the pipeline, shared by
+/// `sparseswaps prune`, `sparseswaps sweep` and the e2e harness.  It
+/// borrows the long-lived run state — runtime pool, dense weights,
+/// dataset — and owns the calibration cache, so walking many
+/// [`MaskSpec`]s over one model (a sparsity sweep, a report table)
+/// builds the stack once and calibrates once per distinct one-shot
+/// budget instead of once per grid point.
+///
+/// `store` keeps its dense weights; each [`Self::prune`] returns the
+/// masks (apply with `store.masked(&masks)`).
 ///
 /// Serial stages (calibration, warmstarts) run on the pool's primary
 /// runtime; refinement goes through the one shard dispatch path
 /// ([`refine_block`]): row shards fan across the host thread pool
 /// (runtime-free engines) or the runtime pool's device workers
 /// (offload).  Masks and snapshots are bit-identical for every shard
-/// size and worker count (disable `layer_parallel` for per-layer
-/// wall-clock timings).
+/// size and worker count (disable `RunOptions::layer_parallel` for
+/// per-layer wall-clock timings).
 ///
 /// Fault tolerance: transiently failed shards are redispatched (up to
-/// `PruneConfig::max_shard_retries` per shard, on a different worker
+/// `RunOptions::max_shard_retries` per shard, on a different worker
 /// where possible); if every device worker ends up quarantined the
 /// run degrades to the native host refiner instead of aborting.  With
-/// `PruneConfig::journal` set, each block's refined masks are
-/// journaled so an interrupted run can resume
-/// (`PruneConfig::resume`) with bit-identical results.  A resumed
-/// run's report covers only the blocks it refined itself, and
-/// snapshots are re-recorded only for those blocks (restored blocks
-/// contribute their *final* masks to the backfill).
-pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
-             cfg: &PruneConfig) -> Result<(MaskSet, PruneReport),
-                                          RuntimeError> {
+/// `RunOptions::journal` set, each block's refined masks are
+/// journaled so an interrupted run can resume (`RunOptions::resume`)
+/// with bit-identical results.  A resumed run's report covers only
+/// the blocks it refined itself, and snapshots are re-recorded only
+/// for those blocks (restored blocks contribute their *final* masks
+/// to the backfill).
+pub struct PruneSession<'a> {
+    pool: &'a RuntimePool,
+    store: &'a ParamStore,
+    ds: &'a Dataset,
+    /// Wall-clock knobs; a pub field so callers (the fault tests, the
+    /// sweep driver) can adjust scheduling between `prune` calls
+    /// without rebuilding the session.
+    pub run: RunOptions,
+    /// Cached one-shot Gram statistics, keyed by the calibration
+    /// budget they were accumulated under.  `accumulate` is
+    /// deterministic, so serving a spec from this cache is
+    /// bit-identical to recomputing.
+    dense_stats: Option<(usize, GramStats)>,
+    calibrations: usize,
+}
+
+impl<'a> PruneSession<'a> {
+    pub fn new(pool: &'a RuntimePool, store: &'a ParamStore,
+               ds: &'a Dataset, run: RunOptions) -> Self {
+        Self { pool, store, ds, run, dense_stats: None,
+               calibrations: 0 }
+    }
+
+    pub fn pool(&self) -> &'a RuntimePool {
+        self.pool
+    }
+
+    pub fn store(&self) -> &'a ParamStore {
+        self.store
+    }
+
+    pub fn dataset(&self) -> &'a Dataset {
+        self.ds
+    }
+
+    /// Calibration passes this session has paid for (dense one-shot
+    /// accumulations plus sequential per-block recalibrations).  The
+    /// sweep harness asserts this stays at 1 across a one-shot grid.
+    pub fn calibrations(&self) -> usize {
+        self.calibrations
+    }
+
+    /// Run the pruning pipeline for one job spec, warmstarting from
+    /// saliency scores alone.
+    pub fn prune(&mut self, spec: &MaskSpec)
+        -> Result<(MaskSet, PruneReport), RuntimeError> {
+        self.prune_from(spec, None)
+    }
+
+    /// Run the pipeline warm-started from an inherited mask set
+    /// (typically the previous sweep level's refined masks): each
+    /// layer's starting mask is `tighten_mask(prev, scores, pattern)`
+    /// — the lowest-saliency kept weights are pruned down to the new
+    /// pattern's budget — instead of a fresh `mask_from_scores`.  The
+    /// journal restore path already proves arbitrary partial masks
+    /// are valid refinement warmstarts; this is the same contract.
+    ///
+    /// Warm continuations cannot be journaled or resumed: the journal
+    /// fingerprint covers the [`MaskSpec`] but not the inherited
+    /// mask, so a resumed continuation could silently mix chains.
+    pub fn prune_from(&mut self, spec: &MaskSpec,
+                      warm: Option<&MaskSet>)
+        -> Result<(MaskSet, PruneReport), RuntimeError> {
+        if warm.is_some()
+            && (self.run.journal.is_some() || self.run.resume) {
+            return Err(RuntimeError::Msg(
+                "warm-started continuation runs cannot be journaled \
+                 or resumed (the journal fingerprint does not cover \
+                 the inherited mask)".into()));
+        }
+        if let Some(prev) = warm {
+            let want = self.store.meta.prunable.len();
+            if prev.masks.len() != want {
+                return Err(RuntimeError::Msg(format!(
+                    "warm mask set has {} layer masks, model has \
+                     {want}", prev.masks.len())));
+            }
+        }
+        // One-shot Gram statistics are a pure function of
+        // (store, calib_batches): cache them across specs.
+        // Sequential mode recalibrates per block inside `prune_impl`
+        // by design and bypasses the cache.
+        let mut calib_pre = 0.0;
+        if !spec.sequential {
+            let cached = matches!(&self.dense_stats,
+                                  Some((n, _)) if *n
+                                      == spec.calib_batches);
+            if !cached {
+                let calib = self.ds.batches(&self.store.meta,
+                                            Split::Calibration,
+                                            spec.calib_batches);
+                let t0 = Instant::now();
+                let stats = accumulate(self.pool.primary(),
+                                       self.store, &calib)?;
+                calib_pre = t0.elapsed().as_secs_f64();
+                self.calibrations += 1;
+                self.dense_stats = Some((spec.calib_batches, stats));
+            }
+        }
+        let dense = self.dense_stats.as_ref()
+            .filter(|_| !spec.sequential)
+            .map(|(_, s)| s);
+        let mut seq_calibs = 0;
+        let out = prune_impl(self.pool, self.store, self.ds, spec,
+                             &self.run, warm, dense, calib_pre,
+                             &mut seq_calibs);
+        self.calibrations += seq_calibs;
+        out
+    }
+}
+
+/// The pipeline body.  Private: every caller goes through
+/// [`PruneSession`], so there is exactly one prune entry path.
+#[allow(clippy::too_many_arguments)]
+fn prune_impl(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
+              spec: &MaskSpec, run: &RunOptions,
+              warm_from: Option<&MaskSet>, dense: Option<&GramStats>,
+              calib_pre: f64, calibrations: &mut usize)
+    -> Result<(MaskSet, PruneReport), RuntimeError> {
     let rt: &Runtime = pool.primary();
     let meta = store.meta.clone();
-    let calib = ds.batches(&meta, Split::Calibration, cfg.calib_batches);
+    // Sequential mode rebuilds its calibration batches here; one-shot
+    // mode received the session's cached dense statistics.
+    let calib = spec.sequential.then(|| {
+        ds.batches(&meta, Split::Calibration, spec.calib_batches)
+    });
     let mut masks = MaskSet::all_ones(&meta);
-    let mut report = PruneReport::default();
+    let mut report = PruneReport {
+        calib_seconds: calib_pre,
+        ..PruneReport::default()
+    };
     // Snapshot capture is tracked explicitly per (checkpoint, layer):
     // `None` means "not captured yet" and is backfilled with the final
     // layer mask at the end.  (The old implementation used "mask is
@@ -296,7 +521,7 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
     let n_layers = meta.prunable.len();
     let mut captured: BTreeMap<usize,
                                Vec<Option<crate::util::tensor::Matrix>>> =
-        cfg.checkpoints.iter()
+        spec.checkpoints.iter()
             .map(|&cp| (cp, (0..n_layers).map(|_| None).collect()))
             .collect();
 
@@ -304,9 +529,9 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
     // device pool for the offload engine and a host thread pool for
     // the runtime-free engines; the shard plan does the rest.
     let offload =
-        matches!(cfg.refiner, Refiner::SparseSwapsOffload { .. });
-    let host_workers = if cfg.layer_parallel {
-        cfg.threads.max(1)
+        matches!(spec.refiner, Refiner::SparseSwapsOffload { .. });
+    let host_workers = if run.layer_parallel {
+        run.threads.max(1)
     } else {
         1
     };
@@ -316,24 +541,24 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
         None => pool,
     };
     let plan = BlockSchedule {
-        t_max: cfg.t_max,
+        t_max: spec.t_max,
         // Under a multi-worker scheduler parallelism comes from the
         // shards themselves; the serial schedule keeps the engines'
         // internal row threads instead.
-        threads_per_shard: if cfg.layer_parallel {
+        threads_per_shard: if run.layer_parallel {
             1
         } else {
-            cfg.threads.max(1)
+            run.threads.max(1)
         },
-        checkpoints: cfg.checkpoints.clone(),
-        shard_rows: if cfg.layer_parallel {
-            cfg.shard_rows
+        checkpoints: spec.checkpoints.clone(),
+        shard_rows: if run.layer_parallel {
+            run.shard_rows
         } else {
             // Whole-layer shards keep per-layer timings meaningful.
             usize::MAX
         },
-        serial: !cfg.layer_parallel,
-        max_retries: cfg.max_shard_retries,
+        serial: !run.layer_parallel,
+        max_retries: run.max_shard_retries,
     };
 
     // Resumable runs: journal each block's refined masks, and on
@@ -342,20 +567,20 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
     // interrupted run had, so the remaining blocks' sequential
     // recalibration — and therefore their masks — are bit-identical
     // to an uninterrupted run's.
-    let fingerprint = config_fingerprint(&meta.name, cfg);
-    let journal = match &cfg.journal {
-        Some(dir) if cfg.resume =>
+    let fingerprint = config_fingerprint(&meta.name, spec);
+    let journal = match &run.journal {
+        Some(dir) if run.resume =>
             Some(Journal::open_resume(dir, fingerprint)?),
         Some(dir) => Some(Journal::create(dir, &meta.name,
                                           meta.n_blocks, fingerprint)?),
-        None if cfg.resume => {
+        None if run.resume => {
             return Err(RuntimeError::Msg(
                 "resume requires a journal directory".into()));
         }
         None => None,
     };
     let mut completed: Vec<usize> = Vec::new();
-    if cfg.resume {
+    if run.resume {
         let j = journal.as_ref().expect("resume checked above");
         for b in j.completed_blocks() {
             for (li, mask) in j.load_block(b)? {
@@ -378,13 +603,6 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
     let mut fallback_pool: Option<ThreadPool> = None;
 
     let blocks: Vec<usize> = (0..meta.n_blocks).collect();
-    let mut stats_oneshot: Option<GramStats> = None;
-    if !cfg.sequential {
-        let t0 = Instant::now();
-        stats_oneshot = Some(accumulate(rt, store, &calib)?);
-        report.calib_seconds += t0.elapsed().as_secs_f64();
-    }
-
     for &b in &blocks {
         if completed.contains(&b) {
             continue;
@@ -392,15 +610,17 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
         // Borrow (never clone) the Gram statistics: layer jobs hold
         // zero-copy views into this block's stream stacks.
         let stats_block;
-        let stats: &GramStats = if cfg.sequential {
+        let stats: &GramStats = if spec.sequential {
             // Recalibrate with everything pruned so far applied.
             let t0 = Instant::now();
             let masked = store.masked(&masks);
-            stats_block = accumulate(rt, &masked, &calib)?;
+            let batches = calib.as_ref().expect("sequential batches");
+            stats_block = accumulate(rt, &masked, batches)?;
             report.calib_seconds += t0.elapsed().as_secs_f64();
+            *calibrations += 1;
             &stats_block
         } else {
-            stats_oneshot.as_ref().expect("one-shot stats computed")
+            dense.expect("one-shot stats provided by the session")
         };
 
         let layers: Vec<_> = meta.prunable.iter().enumerate()
@@ -414,19 +634,27 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
         for (li, layer) in layers {
             let w = store.weight(&layer);
             let g = stats.gram_for(&layer);
-            let pattern = cfg.pattern_kind.pattern_for(layer.d_in);
+            let pattern = spec.pattern_kind.pattern_for(layer.d_in);
             let t0 = Instant::now();
-            let scores = saliency::scores(cfg.criterion, &w, &g.diag());
-            let warm = mask_from_scores(&scores, pattern);
+            let scores = saliency::scores(spec.criterion, &w,
+                                          &g.diag());
+            // A warm continuation inherits the previous level's
+            // refined mask, tightened to the new pattern's budget;
+            // a cold run warmstarts from the scores alone.
+            let warm = match warm_from {
+                Some(prev) =>
+                    tighten_mask(&prev.masks[li], &scores, pattern),
+                None => mask_from_scores(&scores, pattern),
+            };
             report.warmstart_seconds += t0.elapsed().as_secs_f64();
-            let fstats = if cfg.refiner == Refiner::Dsnot {
+            let fstats = if spec.refiner == Refiner::Dsnot {
                 Some(stats.feature_stats_for(&layer))
             } else {
                 None
             };
             // Adaptive shard sizes align to the offload chunk shape
             // so no shard pays a padded half-chunk.
-            let shard_align = match &cfg.refiner {
+            let shard_align = match &spec.refiner {
                 Refiner::SparseSwapsOffload { impl_name }
                     if !degraded => rt
                     .manifest()
@@ -456,7 +684,7 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
                 (&native,
                  fallback_pool.as_ref().expect("degraded pool built"))
             } else {
-                (&cfg.refiner, sched)
+                (&spec.refiner, sched)
             };
         let results = refine_block(sched_b, refiner_b, &works, &plan);
 
@@ -492,7 +720,7 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
         for res in results {
             let ShardedLayer { li, mask, outcome, seconds, .. } = res;
             let layer = &meta.prunable[li];
-            let pattern = cfg.pattern_kind.pattern_for(layer.d_in);
+            let pattern = spec.pattern_kind.pattern_for(layer.d_in);
             report.refine_seconds += seconds;
             validate(&mask, pattern)
                 .map_err(|e| RuntimeError::Msg(format!(
@@ -527,7 +755,7 @@ pub fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
                 .collect();
             j.record_block(b, &layer_masks)?;
         }
-        if cfg.halt_after_block == Some(b) {
+        if run.halt_after_block == Some(b) {
             crate::log_debug!(
                 "prune[{}] halting after block {b} (test hook)",
                 meta.name);
@@ -571,6 +799,29 @@ mod tests {
         assert_eq!(pk.pattern_for(64), Pattern::PerRow { keep: 32 });
         let nm = PatternKind::Nm { n: 2, m: 4 };
         assert_eq!(nm.pattern_for(64), Pattern::Nm { n: 2, m: 4 });
+    }
+
+    #[test]
+    fn pattern_keys_disambiguate_equal_sparsity() {
+        // label() alone collides: both masks are 50% sparse.
+        let un = PatternKind::Unstructured { sparsity: 0.5 };
+        let nm = PatternKind::Nm { n: 2, m: 4 };
+        assert_eq!(un.sparsity(), nm.sparsity());
+        assert_eq!(un.key(), "unstructured:50%");
+        assert_eq!(nm.key(), "nm:2:4");
+        assert_ne!(un.key(), nm.key());
+    }
+
+    #[test]
+    fn pattern_parse_round_trips() {
+        assert_eq!(PatternKind::parse("0.6").unwrap(),
+                   PatternKind::Unstructured { sparsity: 0.6 });
+        assert_eq!(PatternKind::parse("60%").unwrap(),
+                   PatternKind::Unstructured { sparsity: 0.6 });
+        assert_eq!(PatternKind::parse("2:4").unwrap(),
+                   PatternKind::Nm { n: 2, m: 4 });
+        assert!(PatternKind::parse("junk").is_err());
+        assert!(PatternKind::parse("1.0").is_err());
     }
 
     #[test]

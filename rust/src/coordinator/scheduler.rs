@@ -335,9 +335,10 @@ fn run_shard(refiner: &Refiner, wc: WorkerCtx<'_>, work: &LayerWork<'_>,
 
 /// THE refinement dispatch: shard every layer of a block, fan the
 /// shards across the scheduler's workers, and merge per-shard masks,
-/// outcomes and snapshots back per layer.  `pipeline::prune` routes
-/// every refiner through here (no native/offload split); the shard
-/// tests and the `ablation_engine` "shards" sweep call it directly.
+/// outcomes and snapshots back per layer.  The `PruneSession`
+/// pipeline routes every refiner through here (no native/offload
+/// split); the shard tests and the `ablation_engine` "shards" sweep
+/// call it directly.
 ///
 /// Results come back in `works` order.
 pub fn refine_block(

@@ -1,0 +1,389 @@
+//! The sparsity-sweep harness: ppl-vs-sparsity curves as warm-started
+//! mask continuations.
+//!
+//! The paper's central operational property — 1-swap refinement
+//! warmstarts from *any* valid mask — makes a sparsity curve a chain
+//! of short continuations rather than independent solves: the level-s
+//! refined mask, tightened to s+δ by pruning its lowest-saliency kept
+//! weights per row ([`crate::pruning::mask::tighten_mask`]), is a
+//! near-converged warmstart for the next level.  Reference sweep
+//! scripts instead rerun model load + calibration per point in shell
+//! loops; here one [`PruneSession`] is built once, the one-shot Gram
+//! statistics are accumulated once, and every grid point is one
+//! `prune_from` call.
+//!
+//! The grid is `(criterion × refiner × levels)` with levels sorted
+//! ascending by sparsity ([`points`]; deterministic, stable for
+//! equal-sparsity entries such as unstructured-50% vs 2:4).  Each
+//! `(criterion, refiner)` pair forms one warm chain; a level whose
+//! sparsity is below its predecessor's (possible when an N:M entry
+//! interleaves) restarts the chain cold rather than "tightening"
+//! upward.
+//!
+//! Per point the report records ppl, per-layer error, swaps, rows/s
+//! and — with `cold_compare` — the same spec refined from a cold
+//! warmstart mask, so the curve artifact (`reports/sweep.json`)
+//! carries the warm-vs-cold timing and loss deltas the bench gate
+//! asserts on.
+
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::coordinator::pipeline::{
+    MaskSpec, PatternKind, PruneSession, Refiner,
+};
+use crate::data::Split;
+use crate::eval::perplexity;
+use crate::model::store::MaskSet;
+use crate::pruning::saliency::Criterion;
+use crate::runtime::service::RuntimeError;
+use crate::util::jsonlite::Json;
+
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    /// Grid levels: sparsity fractions and/or N:M patterns.
+    pub levels: Vec<PatternKind>,
+    pub criteria: Vec<Criterion>,
+    pub refiners: Vec<Refiner>,
+    pub t_max: usize,
+    pub calib_batches: usize,
+    /// Warm-start each level from the previous refined mask
+    /// (tightened); disable to refine every point cold.
+    pub warm_start: bool,
+    /// Additionally refine every warm-started point from a cold
+    /// warmstart mask (same session, so calibration is still shared)
+    /// and record the timing/loss delta per point.
+    pub cold_compare: bool,
+    /// Evaluate masked-model perplexity per point.
+    pub eval_ppl: bool,
+    pub val_batches: usize,
+    /// Curve artifact path (`reports/sweep.json`); `None` skips the
+    /// write.
+    pub out: Option<PathBuf>,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        Self {
+            levels: vec![
+                PatternKind::Unstructured { sparsity: 0.4 },
+                PatternKind::Unstructured { sparsity: 0.5 },
+                PatternKind::Unstructured { sparsity: 0.6 },
+            ],
+            criteria: vec![Criterion::Wanda],
+            refiners: vec![Refiner::SparseSwapsNative],
+            t_max: 10,
+            calib_batches: 4,
+            warm_start: true,
+            cold_compare: false,
+            eval_ppl: false,
+            val_batches: 4,
+            out: None,
+        }
+    }
+}
+
+/// Collision-proof point key for merged JSON: criterion, refiner and
+/// the *kinded* pattern key, so unstructured-50% and 2:4 stay
+/// distinct.
+pub fn point_key(criterion: Criterion, refiner: &Refiner,
+                 pattern: PatternKind) -> String {
+    format!("{}|{}|{}", criterion.name(), refiner.label(),
+            pattern.key())
+}
+
+/// The grid in iteration order: criterion-major, then refiner, then
+/// levels stable-sorted ascending by target sparsity (equal-sparsity
+/// levels keep their configured order).  Deterministic: two calls on
+/// the same config yield the same sequence, so merged sweep JSON and
+/// warm chains are reproducible.
+pub fn points(cfg: &SweepConfig)
+    -> Vec<(Criterion, Refiner, PatternKind)> {
+    let mut levels = cfg.levels.clone();
+    levels.sort_by(|a, b| {
+        a.sparsity().partial_cmp(&b.sparsity())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut out = Vec::with_capacity(
+        cfg.criteria.len() * cfg.refiners.len() * levels.len());
+    for &criterion in &cfg.criteria {
+        for refiner in &cfg.refiners {
+            for &level in &levels {
+                out.push((criterion, refiner.clone(), level));
+            }
+        }
+    }
+    out
+}
+
+/// One grid point's results.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub key: String,
+    pub criterion: &'static str,
+    pub refiner: String,
+    pub pattern: String,
+    pub pattern_key: String,
+    pub target_sparsity: f64,
+    pub achieved_sparsity: f64,
+    pub ppl: Option<f64>,
+    pub warmstart_loss: f64,
+    pub refined_loss: f64,
+    pub mean_relative_reduction: f64,
+    pub swaps: usize,
+    pub rows: usize,
+    /// Prune wall seconds for this point (includes the one shared
+    /// calibration pass on the first point that needs it; excludes
+    /// ppl eval).
+    pub seconds: f64,
+    pub rows_per_s: f64,
+    /// Key of the point whose refined mask warm-started this one
+    /// (`None` for cold chain heads).
+    pub warm_from: Option<String>,
+    /// `cold_compare` arm: same spec refined from a cold warmstart.
+    pub cold_seconds: Option<f64>,
+    pub cold_refined_loss: Option<f64>,
+    /// Per-layer `(name, warmstart_loss, refined_loss)`.
+    pub layers: Vec<(String, f64, f64)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct SweepReport {
+    pub model: String,
+    pub points: Vec<SweepPoint>,
+    /// Calibration passes the whole sweep paid for (the headline
+    /// number: 1 for a one-shot grid, however many points it has).
+    pub calibrations: usize,
+    pub seconds: f64,
+}
+
+impl SweepReport {
+    pub fn to_json(&self) -> Json {
+        let points = self.points.iter().map(|p| {
+            let opt = |v: Option<f64>| match v {
+                Some(x) => Json::num(x),
+                None => Json::Null,
+            };
+            let layers = p.layers.iter().map(|(name, w, r)| {
+                Json::obj(vec![
+                    ("name", Json::str(name.as_str())),
+                    ("warmstart_loss", Json::num(*w)),
+                    ("refined_loss", Json::num(*r)),
+                ])
+            }).collect();
+            Json::obj(vec![
+                ("key", Json::str(p.key.as_str())),
+                ("criterion", Json::str(p.criterion)),
+                ("refiner", Json::str(p.refiner.as_str())),
+                ("pattern", Json::str(p.pattern.as_str())),
+                ("pattern_key", Json::str(p.pattern_key.as_str())),
+                ("target_sparsity", Json::num(p.target_sparsity)),
+                ("achieved_sparsity", Json::num(p.achieved_sparsity)),
+                ("ppl", opt(p.ppl)),
+                ("warmstart_loss", Json::num(p.warmstart_loss)),
+                ("refined_loss", Json::num(p.refined_loss)),
+                ("mean_relative_reduction",
+                 Json::num(p.mean_relative_reduction)),
+                ("swaps", Json::num(p.swaps as f64)),
+                ("rows", Json::num(p.rows as f64)),
+                ("seconds", Json::num(p.seconds)),
+                ("rows_per_s", Json::num(p.rows_per_s)),
+                ("warm_from", match &p.warm_from {
+                    Some(k) => Json::str(k.as_str()),
+                    None => Json::Null,
+                }),
+                ("cold_seconds", opt(p.cold_seconds)),
+                ("cold_refined_loss", opt(p.cold_refined_loss)),
+                ("layers", Json::Arr(layers)),
+            ])
+        }).collect();
+        Json::obj(vec![
+            ("model", Json::str(self.model.as_str())),
+            ("calibrations", Json::num(self.calibrations as f64)),
+            ("seconds", Json::num(self.seconds)),
+            ("points", Json::Arr(points)),
+        ])
+    }
+
+    pub fn write(&self, path: &Path) -> Result<(), RuntimeError> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).map_err(|e| {
+                RuntimeError::Msg(format!("sweep report: {e}"))
+            })?;
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+            .map_err(|e| RuntimeError::Msg(format!(
+                "sweep report {}: {e}", path.display())))
+    }
+
+    /// Sum of per-point prune seconds (the warm arm's wall-clock,
+    /// excluding ppl eval).
+    pub fn prune_seconds(&self) -> f64 {
+        self.points.iter().map(|p| p.seconds).sum()
+    }
+}
+
+/// Walk the sweep grid over one session.  Every point dispatches
+/// through [`PruneSession::prune_from`]; warm chains run per
+/// `(criterion, refiner)` pair.  Sweeps are never journaled (warm
+/// continuations have no stable fingerprint), so the session must
+/// not carry journal/resume options.
+pub fn sweep(session: &mut PruneSession, cfg: &SweepConfig)
+    -> Result<SweepReport, RuntimeError> {
+    if session.run.journal.is_some() || session.run.resume {
+        return Err(RuntimeError::Msg(
+            "sweep runs cannot be journaled or resumed: warm-started \
+             continuations are not covered by the journal \
+             fingerprint".into()));
+    }
+    if cfg.levels.is_empty() || cfg.criteria.is_empty()
+        || cfg.refiners.is_empty() {
+        return Err(RuntimeError::Msg(
+            "sweep grid is empty (need >=1 level, criterion and \
+             refiner)".into()));
+    }
+    let meta = session.store().meta.clone();
+    let val = cfg.eval_ppl.then(|| {
+        session.dataset().batches(&meta, Split::Validation,
+                                  cfg.val_batches)
+    });
+    let t_all = Instant::now();
+    let grid = points(cfg);
+    let mut out: Vec<SweepPoint> = Vec::with_capacity(grid.len());
+    // One warm chain per (criterion, refiner): the previous level's
+    // refined masks plus enough context to label and gate the
+    // continuation.
+    let mut chain: Option<(Criterion, Refiner, f64, String,
+                           MaskSet)> = None;
+    for (criterion, refiner, level) in grid {
+        let same_chain = matches!(&chain, Some((c, r, ..))
+                                  if *c == criterion && *r == refiner);
+        if !same_chain {
+            chain = None;
+        }
+        let spec = MaskSpec {
+            criterion,
+            pattern_kind: level,
+            refiner: refiner.clone(),
+            t_max: cfg.t_max,
+            calib_batches: cfg.calib_batches,
+            sequential: false,
+            checkpoints: Vec::new(),
+        };
+        // Warm-start only when continuing to equal-or-higher
+        // sparsity; a chain can only tighten.
+        let warm_from = match &chain {
+            Some((_, _, s, key, masks))
+                if cfg.warm_start
+                    && *s <= level.sparsity() + 1e-9 =>
+                Some((key.clone(), masks)),
+            _ => None,
+        };
+        let key = point_key(criterion, &refiner, level);
+        crate::log_debug!("sweep[{}] {} (warm from {:?})", meta.name,
+                          key, warm_from.as_ref().map(|(k, _)| k));
+        let t0 = Instant::now();
+        let (masks, rep) = session.prune_from(
+            &spec, warm_from.as_ref().map(|(_, m)| *m))?;
+        let seconds = t0.elapsed().as_secs_f64();
+        let (cold_seconds, cold_refined_loss) =
+            if cfg.cold_compare && warm_from.is_some() {
+                let tc = Instant::now();
+                let (_, cold) = session.prune(&spec)?;
+                (Some(tc.elapsed().as_secs_f64()),
+                 Some(cold.total_refined_loss()))
+            } else {
+                (None, None)
+            };
+        let ppl = match &val {
+            Some(batches) => Some(perplexity(
+                session.pool().primary(),
+                &session.store().masked(&masks), batches)?),
+            None => None,
+        };
+        let rows: usize = rep.layers.iter().map(|l| l.rows).sum();
+        out.push(SweepPoint {
+            key: key.clone(),
+            criterion: criterion.name(),
+            refiner: refiner.label(),
+            pattern: level.label(),
+            pattern_key: level.key(),
+            target_sparsity: level.sparsity(),
+            achieved_sparsity: masks.overall_sparsity(),
+            ppl,
+            warmstart_loss: rep.total_warmstart_loss(),
+            refined_loss: rep.total_refined_loss(),
+            mean_relative_reduction: rep.mean_relative_reduction(),
+            swaps: rep.layers.iter().map(|l| l.swaps).sum(),
+            rows,
+            seconds,
+            rows_per_s: if seconds > 0.0 {
+                rows as f64 / seconds
+            } else {
+                0.0
+            },
+            warm_from: warm_from.map(|(k, _)| k),
+            cold_seconds,
+            cold_refined_loss,
+            layers: rep.layers.iter()
+                .map(|l| (l.name.clone(), l.loss_warmstart,
+                          l.loss_refined))
+                .collect(),
+        });
+        chain = Some((criterion, refiner, level.sparsity(), key,
+                      masks));
+    }
+    let report = SweepReport {
+        model: meta.name.clone(),
+        points: out,
+        calibrations: session.calibrations(),
+        seconds: t_all.elapsed().as_secs_f64(),
+    };
+    if let Some(path) = &cfg.out {
+        report.write(path)?;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_criterion_major_and_sparsity_sorted() {
+        let cfg = SweepConfig {
+            levels: vec![
+                PatternKind::Unstructured { sparsity: 0.6 },
+                PatternKind::Nm { n: 2, m: 4 },
+                PatternKind::Unstructured { sparsity: 0.5 },
+                PatternKind::Unstructured { sparsity: 0.3 },
+            ],
+            criteria: vec![Criterion::Wanda, Criterion::Magnitude],
+            refiners: vec![Refiner::None,
+                           Refiner::SparseSwapsNative],
+            ..SweepConfig::default()
+        };
+        let grid = points(&cfg);
+        assert_eq!(grid, points(&cfg), "grid order must be \
+                                        deterministic");
+        assert_eq!(grid.len(), 2 * 2 * 4);
+        // Levels ascend by sparsity within each chain; the stable
+        // sort keeps the configured order for the equal-sparsity
+        // pair (2:4 listed before unstructured 50%).
+        let chain: Vec<String> = grid[..4].iter()
+            .map(|(_, _, p)| p.key())
+            .collect();
+        assert_eq!(chain, vec!["unstructured:30%", "nm:2:4",
+                               "unstructured:50%",
+                               "unstructured:60%"]);
+        // Criterion-major: the first half is all-Wanda.
+        assert!(grid[..8].iter()
+                .all(|(c, ..)| *c == Criterion::Wanda));
+        // Point keys are unique across the grid (the kinded pattern
+        // key disambiguates 2:4 from unstructured 50%).
+        let keys: std::collections::BTreeSet<String> = grid.iter()
+            .map(|(c, r, p)| point_key(*c, r, *p))
+            .collect();
+        assert_eq!(keys.len(), grid.len());
+    }
+}

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   train    train a zoo model through the AOT train-step artifact
 //!   prune    run the pruning pipeline (warmstart + refinement)
+//!   sweep    ppl-vs-sparsity curves via warm-started mask continuation
 //!   eval     perplexity + zero-shot accuracy of a checkpoint
 //!   report   regenerate a paper table/figure (table1..table5, fig1, fig2)
 //!   inspect  list manifest artifacts and model configs
@@ -10,7 +11,8 @@
 use std::process::ExitCode;
 
 use sparseswaps::coordinator::{
-    prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
+    sweep, train, MaskSpec, PatternKind, PruneSession, Refiner,
+    RunOptions, SweepConfig, TrainConfig,
 };
 use sparseswaps::data::{Dataset, Split};
 use sparseswaps::eval::{perplexity, zeroshot};
@@ -18,7 +20,8 @@ use sparseswaps::model::{checkpoint, ParamStore};
 use sparseswaps::pruning::Criterion;
 use sparseswaps::report;
 use sparseswaps::runtime::{Runtime, RuntimeOptions, RuntimePool};
-use sparseswaps::util::cli::ArgSpec;
+use sparseswaps::util::benchlib::Table;
+use sparseswaps::util::cli::{ArgSpec, JournalFlags, PoolFlags};
 use sparseswaps::util::logging;
 
 fn main() -> ExitCode {
@@ -32,6 +35,7 @@ fn main() -> ExitCode {
     let result = match cmd.as_str() {
         "train" => cmd_train(rest),
         "prune" => cmd_prune(rest),
+        "sweep" => cmd_sweep(rest),
         "eval" => cmd_eval(rest),
         "report" => cmd_report(rest),
         "inspect" => cmd_inspect(rest),
@@ -56,8 +60,8 @@ type CliResult = Result<(), Box<dyn std::error::Error>>;
 
 fn top_usage() -> String {
     "sparseswaps — LLM pruning mask refinement (Zimmer et al., 2025)\n\n\
-     USAGE:\n  sparseswaps <train|prune|eval|report|analyze|inspect> \
-     [FLAGS]\n\n\
+     USAGE:\n  sparseswaps \
+     <train|prune|sweep|eval|report|analyze|inspect> [FLAGS]\n\n\
      Run `sparseswaps <cmd> --help` for per-command flags.\n".into()
 }
 
@@ -65,20 +69,63 @@ fn runtime(args: &sparseswaps::util::cli::Args) -> Result<Runtime, String> {
     Runtime::start(args.get("artifacts")).map_err(|e| e.to_string())
 }
 
-/// Pool options from the shared `--devices` / `--device-mem-budget`
-/// flags (0 devices = all cores; budget in MiB, 0 = unlimited).
-fn pool_args(args: &sparseswaps::util::cli::Args)
-    -> Result<(usize, RuntimeOptions), Box<dyn std::error::Error>> {
-    let devices = match args.parse_num::<usize>("devices")? {
+/// Worker count + runtime options from the shared pool flag block
+/// (0 devices = all cores; budget in MiB, 0 = unlimited).
+fn pool_opts(pf: &PoolFlags) -> (usize, RuntimeOptions) {
+    let devices = match pf.devices {
         0 => sparseswaps::util::threadpool::default_threads(),
         n => n,
     };
-    let budget_mib: u64 = args.parse_num("device-mem-budget")?;
     let opts = RuntimeOptions {
-        device_mem_budget: budget_mib.saturating_mul(1 << 20),
+        device_mem_budget: pf.device_mem_budget_mib
+            .saturating_mul(1 << 20),
         ..RuntimeOptions::default()
     };
-    Ok((devices, opts))
+    (devices, opts)
+}
+
+/// Start a runtime pool honoring the shared journal/fault flag block
+/// (fault plan, quarantine threshold).
+fn start_pool(artifacts: &str, devices: usize, opts: RuntimeOptions,
+              jf: &JournalFlags)
+    -> Result<RuntimePool, Box<dyn std::error::Error>> {
+    let fault_plan = match jf.fault_plan.as_str() {
+        "" => sparseswaps::runtime::FaultPlan::from_env()?,
+        spec => Some(sparseswaps::runtime::FaultPlan::parse(spec)?),
+    };
+    let rt = match fault_plan {
+        Some(plan) => RuntimePool::start_with_faults(artifacts, devices,
+                                                     opts, plan),
+        None => RuntimePool::start(artifacts, devices, opts),
+    }
+    .map_err(|e| e.to_string())?;
+    rt.set_quarantine_after(jf.quarantine_after);
+    Ok(rt)
+}
+
+fn print_pool_stats(rt: &RuntimePool) {
+    let ps = rt.stats_total();
+    if ps.executions > 0 {
+        println!("  runtime pool: {} device(s), {} artifact execs, \
+                  buffer cache {}/{} hits ({:.0}%), {} evictions, \
+                  {:.1} MiB summed per-device peaks, {} compiles \
+                  ({} adopted from the shared cache)",
+                 rt.devices(), ps.executions, ps.cache_hits,
+                 ps.cache_hits + ps.cache_misses,
+                 100.0 * ps.cache_hit_rate(), ps.cache_evictions,
+                 ps.cache_peak_bytes as f64 / (1u64 << 20) as f64,
+                 ps.compiles, ps.compiles_shared);
+        println!("  key-only probes: {}/{} resident ({:.0}%), \
+                  {:.1} MiB uploaded",
+                 ps.probe_hits, ps.probe_hits + ps.probe_misses,
+                 100.0 * ps.probe_hit_rate(),
+                 ps.upload_bytes as f64 / (1u64 << 20) as f64);
+    }
+    if ps.shard_retries > 0 || ps.workers_quarantined > 0 {
+        println!("  fault recovery: {} shard retries, {} worker(s) \
+                  quarantined",
+                 ps.shard_retries, ps.workers_quarantined);
+    }
 }
 
 fn cmd_train(argv: &[String]) -> CliResult {
@@ -111,20 +158,6 @@ fn cmd_train(argv: &[String]) -> CliResult {
     Ok(())
 }
 
-fn parse_pattern(s: &str) -> Result<PatternKind, String> {
-    if let Some(sparseswaps::pruning::Pattern::Nm { n, m }) =
-        sparseswaps::pruning::Pattern::parse(s) {
-        return Ok(PatternKind::Nm { n, m });
-    }
-    let v: f64 = s.trim_end_matches('%').parse()
-        .map_err(|_| format!("bad pattern {s:?}: want e.g. 0.6 or 2:4"))?;
-    let sparsity = if v > 1.0 { v / 100.0 } else { v };
-    if !(0.0..1.0).contains(&sparsity) {
-        return Err(format!("sparsity {sparsity} out of range"));
-    }
-    Ok(PatternKind::Unstructured { sparsity })
-}
-
 fn parse_refiner(s: &str, engine: &str) -> Result<Refiner, String> {
     match s {
         "none" => Ok(Refiner::None),
@@ -139,6 +172,10 @@ fn parse_refiner(s: &str, engine: &str) -> Result<Refiner, String> {
     }
 }
 
+fn parse_criterion(s: &str) -> Result<Criterion, String> {
+    Criterion::parse(s).ok_or_else(|| format!("bad criterion {s:?}"))
+}
+
 fn cmd_prune(argv: &[String]) -> CliResult {
     let spec = ArgSpec::new("sparseswaps prune", "run the pruning pipeline")
         .flag("config", "gpt-a", "model config name")
@@ -151,10 +188,6 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         .flag("checkpoints", "", "comma-separated cumulative iteration \
                                   counts to snapshot (Table 3)")
         .flag("calib-batches", "8", "calibration batches")
-        .flag("threads", "0", "worker threads (0 = all cores)")
-        .flag("kernels", "auto", "kernel dispatch arm: auto|scalar|simd\
-                                  |avx512 (scalar for cross-arm parity \
-                                  testing)")
         .bool_flag_on("layer-parallel", "refine independent row shards \
                                          of a block concurrently (thread \
                                          pool for native/dsnot, runtime \
@@ -163,34 +196,20 @@ fn cmd_prune(argv: &[String]) -> CliResult {
                                   (0 = adaptive: block rows / (4 x \
                                   workers)); masks are identical for \
                                   every value")
-        .flag("devices", "0", "offload runtime service workers \
-                               (0 = all cores); >1 refines layers \
-                               concurrently across devices")
-        .flag("device-mem-budget", "512", "per-device buffer-cache \
-                                           budget in MiB (0 = unlimited)")
         .flag("seed", "42", "dataset seed")
         .bool_flag("oneshot", "single dense calibration pass \
                               (default: sequential per block)")
-        .flag("max-shard-retries", "2", "redispatches per shard for \
-                                         transient worker failures")
-        .flag("quarantine-after", "2", "consecutive shard failures \
-                                        before a worker is \
-                                        quarantined (0 = never)")
-        .flag("journal", "reports/prune_journal",
-              "mask journal directory for resumable runs (\"\" \
-               disables journaling)")
-        .bool_flag("resume", "resume from the journal: restore \
-                              completed blocks and continue")
-        .flag("fault-plan", "", "deterministic fault-injection spec \
-                                 (e.g. \"seed=7;rate=0.05;kill=1\"); \
-                                 also SPARSESWAPS_FAULTS")
         .flag("artifacts", "artifacts", "artifact directory")
-        .flag("out", "runs/pruned.ssck", "output checkpoint (with masks)");
+        .flag("out", "runs/pruned.ssck", "output checkpoint (with masks)")
+        .pool_flags("0")
+        .journal_flags("reports/prune_journal");
     let args = spec.parse(argv)?;
-    sparseswaps::util::kernels::select(args.get("kernels"))?;
+    let pf = args.pool_flags()?;
+    let jf = args.journal_flags()?;
+    sparseswaps::util::kernels::select(&pf.kernels)?;
     let refiner = parse_refiner(args.get("refine"), args.get("engine"))?;
     let layer_parallel = args.get_bool("layer-parallel");
-    let (devices, opts) = pool_args(&args)?;
+    let (devices, opts) = pool_opts(&pf);
     // Only the offload engine with layer-parallel scheduling can use
     // more than one worker; everything else runs on the primary, so
     // don't spawn (and later compile on) idle service threads.
@@ -198,52 +217,31 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         Refiner::SparseSwapsOffload { .. } if layer_parallel => devices,
         _ => 1,
     };
-    let fault_plan = match args.get("fault-plan") {
-        "" => sparseswaps::runtime::FaultPlan::from_env()?,
-        spec => Some(sparseswaps::runtime::FaultPlan::parse(spec)?),
-    };
-    let rt = match fault_plan {
-        Some(plan) => RuntimePool::start_with_faults(
-            args.get("artifacts"), devices, opts, plan),
-        None => RuntimePool::start(args.get("artifacts"), devices,
-                                   opts),
-    }
-    .map_err(|e| e.to_string())?;
-    rt.set_quarantine_after(args.parse_num("quarantine-after")?);
+    let rt = start_pool(args.get("artifacts"), devices, opts, &jf)?;
     let meta = rt.manifest().config(args.get("config"))?.clone();
     let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;
     let ds = Dataset::build(&meta, args.parse_num("seed")?);
-    let threads = match args.parse_num::<usize>("threads")? {
-        0 => sparseswaps::util::threadpool::default_threads(),
-        t => t,
-    };
-    let cfg = PruneConfig {
-        criterion: Criterion::parse(args.get("criterion"))
-            .ok_or_else(|| format!("bad criterion {:?}",
-                                   args.get("criterion")))?,
-        pattern_kind: parse_pattern(args.get("pattern"))?,
+    let spec = MaskSpec {
+        criterion: parse_criterion(args.get("criterion"))?,
+        pattern_kind: PatternKind::parse(args.get("pattern"))?,
         refiner,
         t_max: args.parse_num("tmax")?,
         calib_batches: args.parse_num("calib-batches")?,
         sequential: !args.get_bool("oneshot"),
         checkpoints: args.parse_list("checkpoints")?,
-        threads,
+    };
+    let run = RunOptions {
         layer_parallel,
         shard_rows: args.parse_num("shard-rows")?,
-        max_shard_retries: args.parse_num("max-shard-retries")?,
-        journal: match args.get("journal") {
-            "" => None,
-            dir => Some(std::path::PathBuf::from(dir)),
-        },
-        resume: args.get_bool("resume"),
-        halt_after_block: None,
+        ..RunOptions::from_flags(&pf, &jf)
     };
     let t0 = std::time::Instant::now();
-    let (masks, rep) = prune(&rt, &store, &ds, &cfg)?;
+    let mut session = PruneSession::new(&rt, &store, &ds, run);
+    let (masks, rep) = session.prune(&spec)?;
     checkpoint::save(args.get("out"), &store, Some(&masks))?;
     println!("pruned {} [{} warmstart, {} refiner, {}, {} kernels]:",
-             meta.name, cfg.criterion.name(), cfg.refiner.label(),
-             cfg.pattern_kind.label(),
+             meta.name, spec.criterion.name(), spec.refiner.label(),
+             spec.pattern_kind.label(),
              sparseswaps::util::kernels::active().name());
     println!("  layers: {}  sparsity: {:.2}%  total swaps: {}",
              rep.layers.len(), 100.0 * masks.overall_sparsity(),
@@ -259,28 +257,116 @@ fn cmd_prune(argv: &[String]) -> CliResult {
                  rep.snapshots.len(),
                  rep.snapshots.keys().collect::<Vec<_>>());
     }
-    let ps = rt.stats_total();
-    if ps.executions > 0 {
-        println!("  runtime pool: {} device(s), {} artifact execs, \
-                  buffer cache {}/{} hits ({:.0}%), {} evictions, \
-                  {:.1} MiB summed per-device peaks, {} compiles \
-                  ({} adopted from the shared cache)",
-                 rt.devices(), ps.executions, ps.cache_hits,
-                 ps.cache_hits + ps.cache_misses,
-                 100.0 * ps.cache_hit_rate(), ps.cache_evictions,
-                 ps.cache_peak_bytes as f64 / (1u64 << 20) as f64,
-                 ps.compiles, ps.compiles_shared);
-        println!("  key-only probes: {}/{} resident ({:.0}%), \
-                  {:.1} MiB uploaded",
-                 ps.probe_hits, ps.probe_hits + ps.probe_misses,
-                 100.0 * ps.probe_hit_rate(),
-                 ps.upload_bytes as f64 / (1u64 << 20) as f64);
+    print_pool_stats(&rt);
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> CliResult {
+    let spec = ArgSpec::new(
+        "sparseswaps sweep",
+        "ppl-vs-sparsity curves: calibrate once, walk a level x \
+         criterion x refiner grid with warm-started mask continuation")
+        .flag("config", "gpt-a", "model config name")
+        .required_flag("checkpoint", "input checkpoint (.ssck)")
+        .flag("grid", "0.3,0.5,0.6,0.7",
+              "comma-separated levels: sparsities (0.5, 60%) and/or \
+               N:M patterns (2:4)")
+        .flag("criteria", "wanda", "comma-separated warmstart \
+                                    criteria: magnitude|wanda|ria")
+        .flag("refiners", "sparseswaps", "comma-separated refiners: \
+                                          none|dsnot|sparseswaps")
+        .flag("engine", "xla", "sparseswaps engine: xla|pallas|native")
+        .flag("tmax", "25", "max 1-swap iterations per row (T_max)")
+        .flag("calib-batches", "8", "calibration batches (one dense \
+                                     pass shared by the whole grid)")
+        .flag("val-batches", "4", "validation batches for per-point \
+                                   perplexity (0 skips eval)")
+        .bool_flag_on("warm-start", "warm-start each level from the \
+                                     previous refined mask (=false \
+                                     refines every point cold)")
+        .bool_flag("cold-compare", "also refine each warm-started \
+                                    point from a cold warmstart and \
+                                    record the timing/loss delta")
+        .flag("seed", "42", "dataset seed")
+        .flag("out", "reports/sweep.json", "sweep curve artifact path")
+        .flag("artifacts", "artifacts", "artifact directory")
+        .pool_flags("0")
+        .journal_flags("");
+    let args = spec.parse(argv)?;
+    let pf = args.pool_flags()?;
+    let jf = args.journal_flags()?;
+    sparseswaps::util::kernels::select(&pf.kernels)?;
+    let mut levels = Vec::new();
+    for tok in args.get("grid").split(',').filter(|s| !s.is_empty()) {
+        levels.push(PatternKind::parse(tok.trim())?);
     }
-    if ps.shard_retries > 0 || ps.workers_quarantined > 0 {
-        println!("  fault recovery: {} shard retries, {} worker(s) \
-                  quarantined",
-                 ps.shard_retries, ps.workers_quarantined);
+    let mut criteria = Vec::new();
+    for tok in args.get("criteria").split(',')
+        .filter(|s| !s.is_empty()) {
+        criteria.push(parse_criterion(tok.trim())?);
     }
+    let mut refiners = Vec::new();
+    for tok in args.get("refiners").split(',')
+        .filter(|s| !s.is_empty()) {
+        refiners.push(parse_refiner(tok.trim(), args.get("engine"))?);
+    }
+    let (devices, opts) = pool_opts(&pf);
+    let devices = if refiners.iter().any(
+        |r| matches!(r, Refiner::SparseSwapsOffload { .. })) {
+        devices
+    } else {
+        1
+    };
+    let rt = start_pool(args.get("artifacts"), devices, opts, &jf)?;
+    let meta = rt.manifest().config(args.get("config"))?.clone();
+    let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;
+    let ds = Dataset::build(&meta, args.parse_num("seed")?);
+    let val_batches: usize = args.parse_num("val-batches")?;
+    let cfg = SweepConfig {
+        levels,
+        criteria,
+        refiners,
+        t_max: args.parse_num("tmax")?,
+        calib_batches: args.parse_num("calib-batches")?,
+        warm_start: args.get_bool("warm-start"),
+        cold_compare: args.get_bool("cold-compare"),
+        eval_ppl: val_batches > 0,
+        val_batches,
+        out: Some(std::path::PathBuf::from(args.get("out"))),
+    };
+    // The journal flag block rides along for fault/quarantine knobs,
+    // but sweeps themselves are never journaled (sweep() rejects it).
+    let mut session = PruneSession::new(&rt, &store, &ds,
+                                        RunOptions::from_flags(&pf,
+                                                               &jf));
+    let rep = sweep::sweep(&mut session, &cfg)?;
+    let mut table = Table::new(
+        &format!("sparsity sweep — {} ({} kernels)", meta.name,
+                 sparseswaps::util::kernels::active().name()),
+        &["point", "sparsity", "ppl", "refined loss", "swaps",
+          "rows/s", "seconds", "warm"]);
+    for p in &rep.points {
+        table.row(vec![
+            p.key.clone(),
+            format!("{:.1}%", 100.0 * p.achieved_sparsity),
+            match p.ppl {
+                Some(v) => format!("{v:.3}"),
+                None => "-".into(),
+            },
+            format!("{:.4}", p.refined_loss),
+            p.swaps.to_string(),
+            format!("{:.0}", p.rows_per_s),
+            format!("{:.2}", p.seconds),
+            if p.warm_from.is_some() { "warm".into() }
+            else { "cold".into() },
+        ]);
+    }
+    table.print();
+    println!("swept {} point(s) in {:.1}s with {} calibration \
+              pass(es); curve written to {}",
+             rep.points.len(), rep.seconds, rep.calibrations,
+             args.get("out"));
+    print_pool_stats(&rt);
     Ok(())
 }
 
@@ -328,16 +414,12 @@ fn cmd_report(argv: &[String]) -> CliResult {
         .flag("model", "gpt-a", "model for single-model experiments")
         .flag("artifacts", "artifacts", "artifact directory")
         .flag("out", "reports/report.md", "markdown output (appended)")
-        .flag("kernels", "auto",
-              "kernel dispatch arm: auto|scalar|simd|avx512")
-        .flag("devices", "1", "offload runtime service workers \
-                               (0 = all cores)")
-        .flag("device-mem-budget", "512", "per-device buffer-cache \
-                                           budget in MiB (0 = unlimited)")
-        .bool_flag("quick", "tiny model, reduced budgets");
+        .bool_flag("quick", "tiny model, reduced budgets")
+        .pool_flags("1");
     let args = spec.parse(argv)?;
-    sparseswaps::util::kernels::select(args.get("kernels"))?;
-    let (devices, opts) = pool_args(&args)?;
+    let pf = args.pool_flags()?;
+    sparseswaps::util::kernels::select(&pf.kernels)?;
+    let (devices, opts) = pool_opts(&pf);
     let rt = RuntimePool::start(args.get("artifacts"), devices, opts)
         .map_err(|e| e.to_string())?;
     let quick = args.get_bool("quick")

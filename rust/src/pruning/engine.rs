@@ -2,7 +2,7 @@
 //! refiner, plus the crate's single checkpoint-segmentation driver.
 //!
 //! Before this module existed every refiner was an arm of a large
-//! `match` inside `coordinator::pipeline::prune()`, and the Table-3
+//! `match` inside the coordinator prune pipeline, and the Table-3
 //! checkpoint/snapshot bookkeeping was implemented twice (once in the
 //! native path, once — differently — in the offload swap loop).  Now:
 //!

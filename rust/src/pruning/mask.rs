@@ -114,6 +114,72 @@ pub fn mask_from_scores(scores: &Matrix, pattern: Pattern) -> Matrix {
     mask
 }
 
+/// Rank candidate indices for one row/block: previously-kept entries
+/// first, then by descending score, then by index.  Filling a keep
+/// budget from this order prunes the lowest-score *kept* weights when
+/// tightening and backfills the highest-score *pruned* weights when
+/// loosening.
+fn rank_kept_then_score(idx: &mut [usize], srow: &[f32],
+                        prow: &[f32]) {
+    idx.sort_by(|&a, &b| {
+        (prow[b] != 0.0).cmp(&(prow[a] != 0.0))
+            .then(srow[b].partial_cmp(&srow[a])
+                .unwrap_or(std::cmp::Ordering::Equal))
+            .then(a.cmp(&b))
+    });
+}
+
+/// Derive a mask satisfying `pattern` from a previous (typically
+/// looser) mask: per row (or per N:M block), candidates are ranked
+/// kept-first, then by score, then by index, and the pattern's budget
+/// is filled from the top.  Tightening from sparsity s to s' > s thus
+/// prunes exactly the lowest-saliency kept weights — the sweep
+/// harness's warm-started mask continuation.  The result is always an
+/// exact `pattern` mask, even across kinds (per-row -> N:M), it is
+/// deterministic, and it reproduces `prev` whenever `prev` already
+/// satisfies `pattern`.
+pub fn tighten_mask(prev: &Matrix, scores: &Matrix, pattern: Pattern)
+    -> Matrix {
+    assert_eq!((prev.rows, prev.cols), (scores.rows, scores.cols),
+               "tighten_mask: mask/score shape mismatch");
+    let (rows, cols) = (scores.rows, scores.cols);
+    let mut mask = Matrix::zeros(rows, cols);
+    match pattern {
+        Pattern::PerRow { keep } => {
+            let keep = keep.min(cols);
+            let mut idx: Vec<usize> = Vec::with_capacity(cols);
+            for r in 0..rows {
+                idx.clear();
+                idx.extend(0..cols);
+                rank_kept_then_score(&mut idx, scores.row(r),
+                                     prev.row(r));
+                let mrow = mask.row_mut(r);
+                for &j in idx.iter().take(keep) {
+                    mrow[j] = 1.0;
+                }
+            }
+        }
+        Pattern::Nm { n, m } => {
+            assert!(cols % m == 0,
+                    "d_in {cols} not divisible by N:M block {m}");
+            for r in 0..rows {
+                let srow = scores.row(r);
+                let prow = prev.row(r);
+                let mrow = mask.row_mut(r);
+                for b in 0..cols / m {
+                    let lo = b * m;
+                    let mut idx: Vec<usize> = (lo..lo + m).collect();
+                    rank_kept_then_score(&mut idx, srow, prow);
+                    for &j in idx.iter().take(n) {
+                        mrow[j] = 1.0;
+                    }
+                }
+            }
+        }
+    }
+    mask
+}
+
 /// Check that `mask` is binary and satisfies `pattern` exactly.
 pub fn validate(mask: &Matrix, pattern: Pattern) -> Result<(), String> {
     for (i, &v) in mask.data.iter().enumerate() {
@@ -231,5 +297,62 @@ mod tests {
         let s = Matrix::zeros(1, 6);
         let m = mask_from_scores(&s, Pattern::PerRow { keep: 2 });
         assert_eq!(m.row(0), &[1., 1., 0., 0., 0., 0.]);
+    }
+
+    #[test]
+    fn tighten_prunes_lowest_score_kept_weights() {
+        let s = scores();
+        let loose = mask_from_scores(&s, Pattern::PerRow { keep: 5 });
+        let tight = tighten_mask(&loose, &s,
+                                 Pattern::PerRow { keep: 3 });
+        validate(&tight, Pattern::PerRow { keep: 3 }).unwrap();
+        // Tightening keeps a subset of the previously-kept weights...
+        for (t, l) in tight.data.iter().zip(&loose.data) {
+            assert!(*t <= *l, "tightening resurrected a pruned weight");
+        }
+        // ...and exactly the top-score subset: equal to a cold mask
+        // at the tighter budget when the loose mask was score-built.
+        let cold = mask_from_scores(&s, Pattern::PerRow { keep: 3 });
+        assert_eq!(tight.data, cold.data);
+    }
+
+    #[test]
+    fn tighten_is_identity_on_a_conforming_mask() {
+        let s = scores();
+        // An arbitrary (non-top-score) conforming mask must survive
+        // unchanged: kept entries outrank all pruned entries.
+        let mut prev = Matrix::zeros(2, 8);
+        for r in 0..2 {
+            for j in [0, 2, 5] {
+                prev.row_mut(r)[j] = 1.0;
+            }
+        }
+        let again = tighten_mask(&prev, &s, Pattern::PerRow { keep: 3 });
+        assert_eq!(again.data, prev.data);
+    }
+
+    #[test]
+    fn loosening_backfills_highest_score_pruned_weights() {
+        let s = scores();
+        let tight = mask_from_scores(&s, Pattern::PerRow { keep: 2 });
+        let loose = tighten_mask(&tight, &s,
+                                 Pattern::PerRow { keep: 4 });
+        validate(&loose, Pattern::PerRow { keep: 4 }).unwrap();
+        for (l, t) in loose.data.iter().zip(&tight.data) {
+            assert!(*l >= *t, "loosening dropped a kept weight");
+        }
+    }
+
+    #[test]
+    fn tighten_crosses_pattern_kinds() {
+        // Unstructured 50% -> 2:4: the result must be an exact N:M
+        // mask, preferring previously-kept weights inside each block.
+        let s = scores();
+        let row = mask_from_scores(&s, Pattern::PerRow { keep: 4 });
+        let nm = tighten_mask(&row, &s, Pattern::Nm { n: 2, m: 4 });
+        validate(&nm, Pattern::Nm { n: 2, m: 4 }).unwrap();
+        let again = tighten_mask(&row, &s, Pattern::Nm { n: 2, m: 4 });
+        assert_eq!(nm.data, again.data, "tighten_mask must be \
+                                         deterministic");
     }
 }

@@ -11,7 +11,8 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::coordinator::{
-    prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
+    train, MaskSpec, PatternKind, PruneReport, PruneSession, Refiner,
+    RunOptions, TrainConfig,
 };
 use crate::data::{Dataset, Split};
 use crate::eval::{perplexity, zeroshot};
@@ -118,16 +119,25 @@ impl Ctx {
         Ok((store, ds))
     }
 
-    fn base_prune(&self) -> PruneConfig {
-        PruneConfig {
+    fn base_spec(&self) -> MaskSpec {
+        MaskSpec {
             t_max: self.t_max(),
             calib_batches: self.calib_batches(),
             sequential: false, // shared grams across method comparisons
-            // Layer-parallel scheduling is mask-identical to serial
-            // (pipeline invariant), so the experiment grids keep it on.
-            layer_parallel: true,
             ..Default::default()
         }
+    }
+
+    /// One-off prune through a fresh `PruneSession`.  Grid cells that
+    /// touch a model once go through here; chains of specs on one
+    /// model build their own session so the dense calibration pass is
+    /// shared.  Layer-parallel scheduling (the `RunOptions` default)
+    /// is mask-identical to serial — a pipeline invariant — so the
+    /// experiment grids keep it on.
+    fn prune(&self, store: &ParamStore, ds: &Dataset, spec: &MaskSpec)
+        -> Result<(MaskSet, PruneReport), RuntimeError> {
+        PruneSession::new(&self.rt, store, ds, RunOptions::default())
+            .prune(spec)
     }
 
     fn eval_model(&self, store: &ParamStore, ds: &Dataset,
@@ -189,13 +199,13 @@ pub fn table1(ctx: &Ctx) -> Result<(Table, Table), RuntimeError> {
             let mut acc_row = vec![label.to_string(), pattern.label()];
             for name in &zoo {
                 let (store, ds) = ctx.model(name)?;
-                let cfg = PruneConfig {
+                let spec = MaskSpec {
                     criterion: *crit,
                     pattern_kind: pattern,
                     refiner: refiner.clone(),
-                    ..ctx.base_prune()
+                    ..ctx.base_spec()
                 };
-                let (masks, _) = prune(&ctx.rt, &store, &ds, &cfg)?;
+                let (masks, _) = ctx.prune(&store, &ds, &spec)?;
                 let (ppl, acc) = ctx.eval_model(&store, &ds,
                                                 Some(&masks))?;
                 ppl_row.push(format!("{ppl:.2}"));
@@ -231,14 +241,14 @@ pub fn table2(ctx: &Ctx) -> Result<Table, RuntimeError> {
                                format!("{:.0}%", sparsity * 100.0)];
             for name in &zoo {
                 let (store, ds) = ctx.model(name)?;
-                let cfg = PruneConfig {
+                let spec = MaskSpec {
                     criterion: Criterion::Magnitude,
                     pattern_kind:
                         PatternKind::Unstructured { sparsity },
                     refiner: refiner.clone(),
-                    ..ctx.base_prune()
+                    ..ctx.base_spec()
                 };
-                let (masks, _) = prune(&ctx.rt, &store, &ds, &cfg)?;
+                let (masks, _) = ctx.prune(&store, &ds, &spec)?;
                 let (ppl, _) = ctx.eval_model(&store, &ds, Some(&masks))?;
                 row.push(format!("{ppl:.2}"));
             }
@@ -268,25 +278,28 @@ pub fn table3(ctx: &Ctx, model: &str)
         &hdr);
 
     let (store, ds) = ctx.model(model)?;
+    // All four runs share one calibration pass through the session.
+    let mut session = PruneSession::new(&ctx.rt, &store, &ds,
+                                        RunOptions::default());
     for sparsity in [0.5, 0.6] {
-        let cfg = PruneConfig {
+        let spec = MaskSpec {
             pattern_kind: PatternKind::Unstructured { sparsity },
             refiner: Refiner::SparseSwapsOffload {
                 impl_name: "xla".into(),
             },
             t_max: *iters.last().unwrap(),
             checkpoints: iters.clone(),
-            ..ctx.base_prune()
+            ..ctx.base_spec()
         };
         // Warmstart-only run for the 0-iteration column.
-        let cfg0 = PruneConfig { refiner: Refiner::None,
-                                 checkpoints: vec![], ..cfg.clone() };
-        let (masks0, rep0) = prune(&ctx.rt, &store, &ds, &cfg0)?;
+        let spec0 = MaskSpec { refiner: Refiner::None,
+                               checkpoints: vec![], ..spec.clone() };
+        let (masks0, rep0) = session.prune(&spec0)?;
         let (ppl0, _) = ctx.eval_model(&store, &ds, Some(&masks0))?;
         let base_losses: Vec<f64> = rep0.layers.iter()
             .map(|l| l.loss_warmstart).collect();
 
-        let (_, rep) = prune(&ctx.rt, &store, &ds, &cfg)?;
+        let (_, rep) = session.prune(&spec)?;
         let mut err_row = vec![format!("{:.0}%", sparsity * 100.0),
                                "Error reduction (%)".to_string(),
                                "0.00".to_string()];
@@ -297,7 +310,7 @@ pub fn table3(ctx: &Ctx, model: &str)
             let snap = &rep.snapshots[&it];
             // Mean per-layer relative reduction vs warmstart, recomputed
             // exactly (native Gram-form loss) under the snapshot mask.
-            let red = checkpoint_reductions(ctx, &store, &ds, &cfg,
+            let red = checkpoint_reductions(ctx, &store, &ds, &spec,
                                             snap, &base_losses)?;
             err_row.push(format!("{:.2}", 100.0 * red));
             let (ppl, _) = ctx.eval_model(&store, &ds, Some(snap))?;
@@ -312,11 +325,11 @@ pub fn table3(ctx: &Ctx, model: &str)
 /// Mean per-layer relative error reduction of `snap` vs warmstart
 /// losses, recomputed exactly from fresh gram statistics.
 fn checkpoint_reductions(ctx: &Ctx, store: &ParamStore, ds: &Dataset,
-                         cfg: &PruneConfig, snap: &MaskSet,
+                         spec: &MaskSpec, snap: &MaskSet,
                          base_losses: &[f64])
     -> Result<f64, RuntimeError> {
     let calib = ds.batches(&store.meta, Split::Calibration,
-                           cfg.calib_batches);
+                           spec.calib_batches);
     let stats = crate::gram::accumulate(&ctx.rt, store, &calib)?;
     let mut total = 0.0;
     let n = store.meta.prunable.len();
@@ -348,15 +361,15 @@ pub fn table4(ctx: &Ctx) -> Result<Table, RuntimeError> {
         let mut row = vec![label.to_string()];
         for name in &zoo {
             let (store, ds) = ctx.model(name)?;
-            let cfg = PruneConfig {
+            let spec = MaskSpec {
                 criterion: crit,
                 pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
                 refiner: Refiner::SparseSwapsOffload {
                     impl_name: "xla".into(),
                 },
-                ..ctx.base_prune()
+                ..ctx.base_spec()
             };
-            let (_, rep) = prune(&ctx.rt, &store, &ds, &cfg)?;
+            let (_, rep) = ctx.prune(&store, &ds, &spec)?;
             row.push(pct(rep.mean_relative_reduction()));
         }
         t.row(row);
@@ -382,7 +395,7 @@ pub fn table5(ctx: &Ctx, model: &str) -> Result<Table, RuntimeError> {
     let (store, ds) = ctx.model(model)?;
     let mut row = vec!["seconds".to_string()];
     for &tm in &tmaxes {
-        let cfg = PruneConfig {
+        let spec = MaskSpec {
             pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
             refiner: if tm == 0 { Refiner::None } else {
                 Refiner::SparseSwapsNative
@@ -390,10 +403,13 @@ pub fn table5(ctx: &Ctx, model: &str) -> Result<Table, RuntimeError> {
             // Engines handle t_max == 0 gracefully now; no .max(1)
             // workaround needed.
             t_max: tm,
-            ..ctx.base_prune()
+            ..ctx.base_spec()
         };
         let t0 = Instant::now();
-        let (masks, _) = prune(&ctx.rt, &store, &ds, &cfg)?;
+        // Fresh session per point: each column times the *full*
+        // pipeline (calibration included), as the paper's linear-
+        // overhead claim is about end-to-end wall-clock.
+        let (masks, _) = ctx.prune(&store, &ds, &spec)?;
         let _ = ctx.eval_model(&store, &ds, Some(&masks))?;
         row.push(format!("{:.1}", t0.elapsed().as_secs_f64()));
     }
@@ -408,12 +424,12 @@ pub fn table5(ctx: &Ctx, model: &str) -> Result<Table, RuntimeError> {
 pub fn fig1(ctx: &Ctx, model: &str)
     -> Result<(Table, String), RuntimeError> {
     let (store, ds) = ctx.model(model)?;
-    let cfg = PruneConfig {
+    let spec = MaskSpec {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
         refiner: Refiner::SparseSwapsNative,
-        ..ctx.base_prune()
+        ..ctx.base_spec()
     };
-    let (_, rep) = prune(&ctx.rt, &store, &ds, &cfg)?;
+    let (_, rep) = ctx.prune(&store, &ds, &spec)?;
 
     let layer_types = ["attn.q_proj", "attn.k_proj", "attn.v_proj",
                        "attn.o_proj", "mlp.gate_proj", "mlp.up_proj",
@@ -479,14 +495,14 @@ pub fn fig2(ctx: &Ctx, model: &str)
                                format!("{:.0}%", sparsity * 100.0)];
             let mut vals = Vec::new();
             for &n in &sample_counts {
-                let cfg = PruneConfig {
+                let spec = MaskSpec {
                     pattern_kind:
                         PatternKind::Unstructured { sparsity },
                     refiner: refiner.clone(),
                     calib_batches: n,
-                    ..ctx.base_prune()
+                    ..ctx.base_spec()
                 };
-                let (masks, _) = prune(&ctx.rt, &store, &ds, &cfg)?;
+                let (masks, _) = ctx.prune(&store, &ds, &spec)?;
                 let (ppl, _) = ctx.eval_model(&store, &ds, Some(&masks))?;
                 row.push(format!("{ppl:.2}"));
                 vals.push(ppl);

@@ -233,6 +233,101 @@ impl Args {
     }
 }
 
+/// Parsed values of the pool/backend flag block shared by `prune`,
+/// `sweep` and `report` ([`ArgSpec::pool_flags`]).
+#[derive(Clone, Debug)]
+pub struct PoolFlags {
+    pub kernels: String,
+    /// Raw `--devices` value (0 = all cores; resolution to a worker
+    /// count is the caller's).
+    pub devices: usize,
+    pub device_mem_budget_mib: u64,
+    /// Raw `--threads` value (0 = all cores).
+    pub threads: usize,
+}
+
+/// Parsed values of the journaling + fault-recovery flag block shared
+/// by `prune` and `sweep` ([`ArgSpec::journal_flags`]).
+#[derive(Clone, Debug)]
+pub struct JournalFlags {
+    pub max_shard_retries: usize,
+    pub quarantine_after: u64,
+    pub journal: Option<std::path::PathBuf>,
+    pub resume: bool,
+    /// Raw fault-injection spec ("" = none); parsed by the caller —
+    /// the runtime layer owns `FaultPlan` and this module stays
+    /// dependency-free.
+    pub fault_plan: String,
+}
+
+impl ArgSpec {
+    /// Register the pool/backend flag block shared by the pruning
+    /// subcommands (`--kernels`, `--devices`, `--device-mem-budget`,
+    /// `--threads`), so `prune`, `sweep` and `report` cannot drift.
+    /// Parse with [`Args::pool_flags`].
+    pub fn pool_flags(self, devices_default: &'static str) -> Self {
+        self.flag("kernels", "auto", "kernel dispatch arm: auto|\
+                                      scalar|simd|avx512 (scalar for \
+                                      cross-arm parity testing)")
+            .flag("devices", devices_default,
+                  "offload runtime service workers (0 = all cores); \
+                   >1 refines layers concurrently across devices")
+            .flag("device-mem-budget", "512",
+                  "per-device buffer-cache budget in MiB \
+                   (0 = unlimited)")
+            .flag("threads", "0", "worker threads (0 = all cores)")
+    }
+
+    /// Register the journaling + fault-recovery flag block
+    /// (`--max-shard-retries`, `--quarantine-after`, `--journal`,
+    /// `--resume`, `--fault-plan`).  Parse with
+    /// [`Args::journal_flags`].
+    pub fn journal_flags(self, journal_default: &'static str) -> Self {
+        self.flag("max-shard-retries", "2",
+                  "redispatches per shard for transient worker \
+                   failures")
+            .flag("quarantine-after", "2",
+                  "consecutive shard failures before a worker is \
+                   quarantined (0 = never)")
+            .flag("journal", journal_default,
+                  "mask journal directory for resumable runs (\"\" \
+                   disables journaling)")
+            .bool_flag("resume", "resume from the journal: restore \
+                                  completed blocks and continue")
+            .flag("fault-plan", "", "deterministic fault-injection \
+                                     spec (e.g. \
+                                     \"seed=7;rate=0.05;kill=1\"); \
+                                     also SPARSESWAPS_FAULTS")
+    }
+}
+
+impl Args {
+    /// Parse the [`ArgSpec::pool_flags`] block.
+    pub fn pool_flags(&self) -> Result<PoolFlags, CliError> {
+        Ok(PoolFlags {
+            kernels: self.get("kernels").to_string(),
+            devices: self.parse_num("devices")?,
+            device_mem_budget_mib: self.parse_num(
+                "device-mem-budget")?,
+            threads: self.parse_num("threads")?,
+        })
+    }
+
+    /// Parse the [`ArgSpec::journal_flags`] block.
+    pub fn journal_flags(&self) -> Result<JournalFlags, CliError> {
+        Ok(JournalFlags {
+            max_shard_retries: self.parse_num("max-shard-retries")?,
+            quarantine_after: self.parse_num("quarantine-after")?,
+            journal: match self.get("journal") {
+                "" => None,
+                dir => Some(std::path::PathBuf::from(dir)),
+            },
+            resume: self.get_bool("resume"),
+            fault_plan: self.get("fault-plan").to_string(),
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +393,33 @@ mod tests {
         let s = ArgSpec::new("t", "x").bool_flag("on", "y");
         let a = s.parse(&argv(&["--on=false"])).unwrap();
         assert!(!a.get_bool("on"));
+    }
+
+    #[test]
+    fn shared_flag_blocks_register_and_parse() {
+        let s = ArgSpec::new("t", "x")
+            .pool_flags("0")
+            .journal_flags("reports/j");
+        let a = s.parse(&argv(&["--devices", "3", "--threads=2",
+                                "--journal", "", "--resume"]))
+            .unwrap();
+        let pf = a.pool_flags().unwrap();
+        assert_eq!(pf.kernels, "auto");
+        assert_eq!(pf.devices, 3);
+        assert_eq!(pf.device_mem_budget_mib, 512);
+        assert_eq!(pf.threads, 2);
+        let jf = a.journal_flags().unwrap();
+        assert_eq!(jf.max_shard_retries, 2);
+        assert_eq!(jf.quarantine_after, 2);
+        assert_eq!(jf.journal, None, "--journal \"\" disables");
+        assert!(jf.resume);
+        assert_eq!(jf.fault_plan, "");
+        // Defaults flow through untouched.
+        let b = ArgSpec::new("t", "x").pool_flags("1")
+            .journal_flags("reports/j").parse(&[]).unwrap();
+        assert_eq!(b.pool_flags().unwrap().devices, 1);
+        assert_eq!(b.journal_flags().unwrap().journal,
+                   Some(std::path::PathBuf::from("reports/j")));
     }
 
     #[test]

@@ -12,7 +12,10 @@
 
 use std::path::PathBuf;
 
-use sparseswaps::coordinator::{prune, PatternKind, PruneConfig, Refiner};
+use sparseswaps::coordinator::{
+    MaskSpec, PatternKind, PruneReport, PruneSession, Refiner,
+    RunOptions,
+};
 use sparseswaps::data::Dataset;
 use sparseswaps::model::testutil::tiny_manifest;
 use sparseswaps::model::{MaskSet, ParamStore};
@@ -31,8 +34,8 @@ fn tiny_setup(pool: &RuntimePool) -> (ParamStore, Dataset) {
     (store, ds)
 }
 
-fn base_cfg() -> PruneConfig {
-    PruneConfig {
+fn base_spec() -> MaskSpec {
+    MaskSpec {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
         refiner: Refiner::SparseSwapsOffload {
             impl_name: "interp".into(),
@@ -42,6 +45,14 @@ fn base_cfg() -> PruneConfig {
         sequential: false,
         ..Default::default()
     }
+}
+
+/// One prune through a fresh session — fault runs each get their own
+/// session so retry/quarantine state never leaks between arms.
+fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
+         spec: &MaskSpec, run: RunOptions)
+    -> Result<(MaskSet, PruneReport), RuntimeError> {
+    PruneSession::new(pool, store, ds, run).prune(spec)
 }
 
 fn assert_masks_eq(a: &MaskSet, b: &MaskSet, what: &str) {
@@ -95,15 +106,16 @@ fn transient_faults_leave_masks_bit_identical() {
     // own tests below.
     faulty.set_quarantine_after(100);
     let (store, ds) = tiny_setup(&clean);
-    let cfg = PruneConfig {
+    let spec = MaskSpec {
         checkpoints: vec![2, 8],
-        // Above devices x max_faults, so completion is guaranteed.
-        max_shard_retries: 8,
-        ..base_cfg()
+        ..base_spec()
     };
-    let (m_clean, r_clean) = prune(&clean, &store, &ds, &cfg).unwrap();
+    // Above devices x max_faults, so completion is guaranteed.
+    let run = RunOptions { max_shard_retries: 8, ..Default::default() };
+    let (m_clean, r_clean) =
+        prune(&clean, &store, &ds, &spec, run.clone()).unwrap();
     let (m_faulty, r_faulty) =
-        prune(&faulty, &store, &ds, &cfg).unwrap();
+        prune(&faulty, &store, &ds, &spec, run).unwrap();
     assert_masks_eq(&m_clean, &m_faulty, "transient-fault run");
     assert_eq!(r_clean.snapshots.len(), r_faulty.snapshots.len());
     for (cp, snap) in &r_clean.snapshots {
@@ -130,9 +142,11 @@ fn killed_worker_is_quarantined_and_the_run_completes() {
     let faulty = faulty_interp_pool(&manifest, 2,
                                     RuntimeOptions::default(), &plan);
     let (store, ds) = tiny_setup(&clean);
-    let cfg = PruneConfig { max_shard_retries: 8, ..base_cfg() };
-    let (m_clean, _) = prune(&clean, &store, &ds, &cfg).unwrap();
-    let (m_faulty, _) = prune(&faulty, &store, &ds, &cfg).unwrap();
+    let spec = base_spec();
+    let run = RunOptions { max_shard_retries: 8, ..Default::default() };
+    let (m_clean, _) =
+        prune(&clean, &store, &ds, &spec, run.clone()).unwrap();
+    let (m_faulty, _) = prune(&faulty, &store, &ds, &spec, run).unwrap();
     assert_masks_eq(&m_clean, &m_faulty, "killed-worker run");
     assert_eq!(faulty.quarantined_workers(), vec![1]);
     assert!(faulty.shard_retries() >= 1,
@@ -152,16 +166,18 @@ fn all_workers_quarantined_degrades_to_native() {
                                     RuntimeOptions::default(), &plan);
     let clean = interp_pool(&manifest, 2, RuntimeOptions::default());
     let (store, ds) = tiny_setup(&clean);
-    let cfg = PruneConfig { max_shard_retries: 6, ..base_cfg() };
-    let (m_degraded, _) = prune(&faulty, &store, &ds, &cfg).unwrap();
+    let spec = base_spec();
+    let run = RunOptions { max_shard_retries: 6, ..Default::default() };
+    let (m_degraded, _) =
+        prune(&faulty, &store, &ds, &spec, run.clone()).unwrap();
     assert_eq!(faulty.workers_quarantined(), 2);
 
-    let cfg_native = PruneConfig {
+    let spec_native = MaskSpec {
         refiner: Refiner::SparseSwapsNative,
-        ..cfg
+        ..spec
     };
     let (m_native, _) =
-        prune(&clean, &store, &ds, &cfg_native).unwrap();
+        prune(&clean, &store, &ds, &spec_native, run).unwrap();
     assert_masks_eq(&m_degraded, &m_native, "degraded run");
 }
 
@@ -173,35 +189,40 @@ fn resumed_run_reproduces_uninterrupted_masks() {
     let manifest = tiny_manifest();
     let pool = interp_pool(&manifest, 1, RuntimeOptions::default());
     let (store, ds) = tiny_setup(&pool);
+    let spec = MaskSpec {
+        refiner: Refiner::SparseSwapsNative,
+        sequential: true,
+        t_max: 6,
+        ..base_spec()
+    };
     // The full run journals into the repo-relative reports dir (same
     // idiom as the e2e summary): CI uploads it as the prune-journal
     // artifact, so a real journal is inspectable per PR.
     let dir_full = PathBuf::from("reports/prune_journal");
-    let cfg_full = PruneConfig {
-        refiner: Refiner::SparseSwapsNative,
-        sequential: true,
-        t_max: 6,
+    let run_full = RunOptions {
         journal: Some(dir_full.clone()),
-        ..base_cfg()
+        ..Default::default()
     };
-    let (m_full, _) = prune(&pool, &store, &ds, &cfg_full).unwrap();
+    let (m_full, _) = prune(&pool, &store, &ds, &spec, run_full).unwrap();
 
-    // "Crash" between blocks via the halt hook, then resume.
+    // "Crash" between blocks via the halt hook, then resume.  The
+    // spec is untouched — interrupting and resuming are run options.
     let dir = tmp_dir("resume");
-    let cfg_halt = PruneConfig {
+    let run_halt = RunOptions {
         journal: Some(dir.clone()),
         halt_after_block: Some(0),
-        ..cfg_full.clone()
+        ..Default::default()
     };
-    let (_, r_halt) = prune(&pool, &store, &ds, &cfg_halt).unwrap();
+    let (_, r_halt) = prune(&pool, &store, &ds, &spec, run_halt).unwrap();
     assert!(r_halt.layers.iter().all(|l| l.block == 0));
 
-    let cfg_resume = PruneConfig {
+    let run_resume = RunOptions {
+        journal: Some(dir.clone()),
         resume: true,
-        halt_after_block: None,
-        ..cfg_halt
+        ..Default::default()
     };
-    let (m_res, r_res) = prune(&pool, &store, &ds, &cfg_resume).unwrap();
+    let (m_res, r_res) =
+        prune(&pool, &store, &ds, &spec, run_resume).unwrap();
     assert!(!r_res.layers.is_empty());
     assert!(r_res.layers.iter().all(|l| l.block == 1),
             "resume must skip the journaled block");
@@ -216,40 +237,44 @@ fn resume_rejects_bad_journals() {
     let pool = interp_pool(&manifest, 1, RuntimeOptions::default());
     let (store, ds) = tiny_setup(&pool);
     let dir = tmp_dir("fpr");
-    let cfg = PruneConfig {
+    let spec = MaskSpec {
         refiner: Refiner::SparseSwapsNative,
         t_max: 6,
+        ..base_spec()
+    };
+    let run_first = RunOptions {
         journal: Some(dir.clone()),
         halt_after_block: Some(0),
-        ..base_cfg()
+        ..Default::default()
     };
-    prune(&pool, &store, &ds, &cfg).unwrap();
+    prune(&pool, &store, &ds, &spec, run_first).unwrap();
 
     // Any mask-affecting knob changes the fingerprint; resuming under
     // it must be refused, not silently mixed.
-    let cfg_other = PruneConfig {
-        t_max: 7,
+    let spec_other = MaskSpec { t_max: 7, ..spec.clone() };
+    let run_resume = RunOptions {
+        journal: Some(dir.clone()),
         resume: true,
-        halt_after_block: None,
-        ..cfg.clone()
+        ..Default::default()
     };
-    let err = prune(&pool, &store, &ds, &cfg_other).unwrap_err();
+    let err = prune(&pool, &store, &ds, &spec_other,
+                    run_resume.clone()).unwrap_err();
     assert!(err.to_string().contains("fingerprint mismatch"),
             "unexpected error: {err}");
 
     // Resume without any journal on disk.
-    let cfg_empty = PruneConfig {
+    let run_empty = RunOptions {
         journal: Some(tmp_dir("missing")),
-        t_max: 6,
-        ..cfg_other.clone()
+        ..run_resume
     };
-    let err = prune(&pool, &store, &ds, &cfg_empty).unwrap_err();
+    let err = prune(&pool, &store, &ds, &spec, run_empty).unwrap_err();
     assert!(err.to_string().contains("no journal to resume"),
             "unexpected error: {err}");
 
     // Resume without a journal directory configured at all.
-    let cfg_nodir = PruneConfig { journal: None, ..cfg_empty };
-    let err = prune(&pool, &store, &ds, &cfg_nodir).unwrap_err();
+    let run_nodir = RunOptions { journal: None, resume: true,
+                                 ..Default::default() };
+    let err = prune(&pool, &store, &ds, &spec, run_nodir).unwrap_err();
     assert!(err.to_string().contains("resume requires"),
             "unexpected error: {err}");
     std::fs::remove_dir_all(&dir).ok();

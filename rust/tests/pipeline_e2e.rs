@@ -12,14 +12,17 @@
 use std::sync::OnceLock;
 
 use sparseswaps::coordinator::{
-    prune, train, PatternKind, PruneConfig, Refiner, TrainConfig,
+    train, MaskSpec, PatternKind, PruneReport, PruneSession, Refiner,
+    RunOptions, TrainConfig,
 };
 use sparseswaps::data::{Dataset, Split};
 use sparseswaps::eval::{perplexity, zeroshot};
 use sparseswaps::model::testutil::tiny_manifest;
-use sparseswaps::model::{checkpoint, ParamStore};
+use sparseswaps::model::{checkpoint, MaskSet, ParamStore};
 use sparseswaps::runtime::testutil::interp_pool;
-use sparseswaps::runtime::{Runtime, RuntimeOptions, RuntimePool};
+use sparseswaps::runtime::{
+    Runtime, RuntimeError, RuntimeOptions, RuntimePool,
+};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
     let dir = std::path::PathBuf::from(
@@ -63,6 +66,16 @@ fn harness() -> Harness {
     harness_with(2)
 }
 
+/// One-off prune through a fresh session with default run options —
+/// the common case here; tests that tweak `RunOptions` (shard sizes)
+/// build their own `PruneSession`.
+fn prune(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
+         spec: &MaskSpec)
+    -> Result<(MaskSet, PruneReport), RuntimeError> {
+    PruneSession::new(pool, store, ds, RunOptions::default())
+        .prune(spec)
+}
+
 /// Train the tiny model once per process (training is deterministic,
 /// so every test sees the same weights) and assert the loss went
 /// down.  The dataset is rebuilt per call — it is cheap relative to
@@ -97,7 +110,7 @@ fn train_prune_eval_full_cycle() {
     assert!(ppl_dense.is_finite() && ppl_dense > 1.0);
 
     // Wanda warmstart at 50%, no refinement.
-    let cfg_wanda = PruneConfig {
+    let cfg_wanda = MaskSpec {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
         refiner: Refiner::None,
         calib_batches: 4,
@@ -108,7 +121,7 @@ fn train_prune_eval_full_cycle() {
     let ppl_wanda = perplexity(rt, &store.masked(&masks_w), &val).unwrap();
 
     // Same warmstart + SparseSwaps refinement.
-    let cfg_ss = PruneConfig {
+    let cfg_ss = MaskSpec {
         refiner: h.refiner(),
         t_max: 25,
         ..cfg_wanda.clone()
@@ -160,18 +173,18 @@ fn magnitude_warmstart_benefits_more() {
     // error reductions from SparseSwaps.
     let h = harness();
     let (store, ds) = trained_tiny(&h.pool);
-    let base = PruneConfig {
+    let base = MaskSpec {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
         refiner: h.refiner(),
         t_max: 25,
         calib_batches: 4,
         ..Default::default()
     };
-    let cfg_mag = PruneConfig {
+    let cfg_mag = MaskSpec {
         criterion: sparseswaps::pruning::Criterion::Magnitude,
         ..base.clone()
     };
-    let cfg_wanda = PruneConfig {
+    let cfg_wanda = MaskSpec {
         criterion: sparseswaps::pruning::Criterion::Wanda,
         ..base
     };
@@ -191,7 +204,7 @@ fn magnitude_warmstart_benefits_more() {
 fn nm_pattern_end_to_end() {
     let h = harness();
     let (store, ds) = trained_tiny(&h.pool);
-    let cfg = PruneConfig {
+    let cfg = MaskSpec {
         pattern_kind: PatternKind::Nm { n: 2, m: 4 },
         refiner: h.refiner(),
         t_max: 10,
@@ -208,7 +221,7 @@ fn nm_pattern_end_to_end() {
 fn dsnot_baseline_runs_and_preserves_pattern() {
     let h = harness();
     let (store, ds) = trained_tiny(&h.pool);
-    let cfg = PruneConfig {
+    let cfg = MaskSpec {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
         refiner: Refiner::Dsnot,
         calib_batches: 3,
@@ -223,18 +236,18 @@ fn dsnot_baseline_runs_and_preserves_pattern() {
 fn native_and_offload_engines_agree() {
     let h = harness();
     let (store, ds) = trained_tiny(&h.pool);
-    let base = PruneConfig {
+    let base = MaskSpec {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
         t_max: 10,
         calib_batches: 3,
         sequential: false, // same grams for both runs
         ..Default::default()
     };
-    let cfg_off = PruneConfig {
+    let cfg_off = MaskSpec {
         refiner: h.refiner(),
         ..base.clone()
     };
-    let cfg_nat = PruneConfig {
+    let cfg_nat = MaskSpec {
         refiner: Refiner::SparseSwapsNative,
         ..base
     };
@@ -268,7 +281,7 @@ fn pooled_offload_masks_match_single_device() {
     let h1 = harness_with(1);
     let h4 = harness_with(4);
     let (store, ds) = trained_tiny(&h1.pool);
-    let cfg = PruneConfig {
+    let cfg = MaskSpec {
         pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
         refiner: h1.refiner(),
         t_max: 10,
@@ -294,7 +307,7 @@ fn sharded_prune_matches_whole_layer_schedule() {
     let h = harness();
     let (store, ds) = trained_tiny(&h.pool);
     for refiner in [h.refiner(), Refiner::SparseSwapsNative] {
-        let base = PruneConfig {
+        let spec = MaskSpec {
             pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
             refiner,
             t_max: 8,
@@ -303,13 +316,15 @@ fn sharded_prune_matches_whole_layer_schedule() {
             checkpoints: vec![2, 8],
             ..Default::default()
         };
-        let whole = PruneConfig {
-            shard_rows: usize::MAX,
-            ..base.clone()
-        };
-        let sharded = PruneConfig { shard_rows: 3, ..base };
-        let (m1, r1) = prune(&h.pool, &store, &ds, &whole).unwrap();
-        let (m2, r2) = prune(&h.pool, &store, &ds, &sharded).unwrap();
+        // Shard size is a run option, not part of the mask spec:
+        // same spec, two schedules.
+        let whole = RunOptions { shard_rows: usize::MAX,
+                                 ..Default::default() };
+        let sharded = RunOptions { shard_rows: 3, ..Default::default() };
+        let (m1, r1) = PruneSession::new(&h.pool, &store, &ds, whole)
+            .prune(&spec).unwrap();
+        let (m2, r2) = PruneSession::new(&h.pool, &store, &ds, sharded)
+            .prune(&spec).unwrap();
         for (li, (a, b)) in m1.masks.iter().zip(&m2.masks).enumerate()
         {
             assert_eq!(a.data, b.data,
@@ -344,7 +359,7 @@ fn checkpoint_round_trip_through_pipeline() {
     let h = harness();
     let rt = &h.pool;
     let (store, ds) = trained_tiny(rt);
-    let cfg = PruneConfig {
+    let cfg = MaskSpec {
         refiner: h.refiner(),
         t_max: 5,
         calib_batches: 2,
@@ -368,7 +383,7 @@ fn checkpoint_round_trip_through_pipeline() {
 fn table3_checkpoints_snapshot_masks() {
     let h = harness();
     let (store, ds) = trained_tiny(&h.pool);
-    let cfg = PruneConfig {
+    let cfg = MaskSpec {
         refiner: h.refiner(),
         t_max: 10,
         calib_batches: 2,

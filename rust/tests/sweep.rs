@@ -1,0 +1,232 @@
+//! Sweep-harness integration tests over interp-backed pools: warm
+//! continuation quality vs cold refinement, deterministic grid order,
+//! session calibration sharing, and the journal/warm-start exclusion.
+//!
+//! Tolerances are deliberately loose where trajectories may differ
+//! (warm vs cold explore different 1-swap basins); exact equality is
+//! asserted only where the pipeline guarantees it (session reuse,
+//! grid order).
+
+use std::path::PathBuf;
+
+use sparseswaps::coordinator::sweep::{point_key, points, sweep};
+use sparseswaps::coordinator::{
+    MaskSpec, PatternKind, PruneSession, Refiner, RunOptions,
+    SweepConfig,
+};
+use sparseswaps::data::Dataset;
+use sparseswaps::model::testutil::tiny_manifest;
+use sparseswaps::model::{MaskSet, ParamStore};
+use sparseswaps::pruning::Criterion;
+use sparseswaps::runtime::testutil::interp_pool;
+use sparseswaps::runtime::{RuntimeOptions, RuntimePool};
+use sparseswaps::util::jsonlite::Json;
+
+fn tiny_setup(pool: &RuntimePool) -> (ParamStore, Dataset) {
+    let meta = pool.manifest().config("tiny").unwrap().clone();
+    let ds = Dataset::build(&meta, 42);
+    let store = ParamStore::init(&meta, meta.init_seed);
+    (store, ds)
+}
+
+fn base_cfg() -> SweepConfig {
+    SweepConfig {
+        levels: vec![
+            PatternKind::Unstructured { sparsity: 0.4 },
+            PatternKind::Unstructured { sparsity: 0.5 },
+            PatternKind::Unstructured { sparsity: 0.6 },
+        ],
+        criteria: vec![Criterion::Wanda],
+        refiners: vec![Refiner::SparseSwapsNative],
+        t_max: 8,
+        calib_batches: 2,
+        warm_start: true,
+        cold_compare: false,
+        eval_ppl: false,
+        val_batches: 2,
+        out: None,
+    }
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("ss_sweep_test_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn warm_sweep_matches_cold_error_and_calibrates_once() {
+    let pool = interp_pool(&tiny_manifest(), 1,
+                           RuntimeOptions::default());
+    let (store, ds) = tiny_setup(&pool);
+
+    let out = tmp_path("curve.json");
+    let warm_cfg = SweepConfig { out: Some(out.clone()), ..base_cfg() };
+    let mut warm_session =
+        PruneSession::new(&pool, &store, &ds, RunOptions::default());
+    let warm = sweep(&mut warm_session, &warm_cfg).unwrap();
+
+    let cold_cfg = SweepConfig { warm_start: false, ..base_cfg() };
+    let mut cold_session =
+        PruneSession::new(&pool, &store, &ds, RunOptions::default());
+    let cold = sweep(&mut cold_session, &cold_cfg).unwrap();
+
+    // One-shot grids pay for exactly one calibration pass, however
+    // many points they have.
+    assert_eq!(warm.calibrations, 1);
+    assert_eq!(cold.calibrations, 1);
+    assert_eq!(warm.points.len(), 3);
+    assert_eq!(cold.points.len(), 3);
+
+    // Chain heads start cold; every later level continues warm.
+    assert!(warm.points[0].warm_from.is_none());
+    assert!(warm.points[1..].iter().all(|p| p.warm_from.is_some()));
+    assert!(cold.points.iter().all(|p| p.warm_from.is_none()));
+
+    // The chain head has no inherited mask in either arm, so the
+    // deterministic pipeline must agree exactly there.
+    assert_eq!(warm.points[0].refined_loss, cold.points[0].refined_loss);
+
+    for (w, c) in warm.points.iter().zip(&cold.points) {
+        assert_eq!(w.key, c.key);
+        assert!((w.achieved_sparsity - w.target_sparsity).abs() < 0.02,
+                "{}: achieved {} vs target {}", w.key,
+                w.achieved_sparsity, w.target_sparsity);
+        // Warm continuation must land within a small band of the
+        // cold refinement's error (usually at or below it: the warm
+        // mask already descended at the previous level).
+        assert!(w.refined_loss <= c.refined_loss * 1.05,
+                "{}: warm loss {} vs cold {}", w.key, w.refined_loss,
+                c.refined_loss);
+        // Monotone 1-swap descent holds regardless of the start.
+        assert!(w.refined_loss
+                <= w.warmstart_loss * 1.0001 + 1e-9);
+    }
+
+    // The curve artifact is valid JSON carrying the whole grid.
+    let text = std::fs::read_to_string(&out).unwrap();
+    let json = Json::parse(&text).unwrap();
+    assert_eq!(json.get("model").and_then(|m| m.as_str()),
+               Some("tiny"));
+    assert_eq!(json.get("calibrations").and_then(|c| c.as_f64()),
+               Some(1.0));
+    match json.get("points") {
+        Some(Json::Arr(pts)) => {
+            assert_eq!(pts.len(), 3);
+            for (p, rep) in pts.iter().zip(&warm.points) {
+                assert_eq!(p.get("key").and_then(|k| k.as_str()),
+                           Some(rep.key.as_str()));
+            }
+        }
+        other => panic!("points missing from sweep.json: {other:?}"),
+    }
+    std::fs::remove_file(&out).ok();
+}
+
+#[test]
+fn grid_walk_matches_points_order_and_keys_are_unique() {
+    // Equal-sparsity levels (2:4 vs unstructured 50%) must neither
+    // collide in keys nor reorder between runs; the report's point
+    // sequence is exactly `points(&cfg)`.
+    let pool = interp_pool(&tiny_manifest(), 1,
+                           RuntimeOptions::default());
+    let (store, ds) = tiny_setup(&pool);
+    let cfg = SweepConfig {
+        levels: vec![
+            PatternKind::Nm { n: 2, m: 4 },
+            PatternKind::Unstructured { sparsity: 0.5 },
+            PatternKind::Unstructured { sparsity: 0.6 },
+        ],
+        criteria: vec![Criterion::Wanda, Criterion::Magnitude],
+        refiners: vec![Refiner::None],
+        ..base_cfg()
+    };
+    let mut session =
+        PruneSession::new(&pool, &store, &ds, RunOptions::default());
+    let rep = sweep(&mut session, &cfg).unwrap();
+    let expected: Vec<String> = points(&cfg).iter()
+        .map(|(c, r, p)| point_key(*c, r, *p))
+        .collect();
+    let got: Vec<String> =
+        rep.points.iter().map(|p| p.key.clone()).collect();
+    assert_eq!(got, expected);
+    let unique: std::collections::BTreeSet<&String> = got.iter()
+        .collect();
+    assert_eq!(unique.len(), got.len(),
+               "2:4 and 50% unstructured must not collide");
+    // 2:4 sits at the same target sparsity as unstructured 50% but
+    // keeps its own kinded key.
+    assert!(got.iter().any(|k| k.ends_with("nm:2:4")));
+    assert!(got.iter().any(|k| k.ends_with("unstructured:50%")));
+}
+
+#[test]
+fn session_reuse_is_bit_identical_and_calibrates_once() {
+    // The cold arm of a sweep reuses one session across specs; masks
+    // must be bit-identical to fresh-session runs (the cached Gram
+    // statistics are the same accumulation, reused not recomputed).
+    let pool = interp_pool(&tiny_manifest(), 1,
+                           RuntimeOptions::default());
+    let (store, ds) = tiny_setup(&pool);
+    let specs: Vec<MaskSpec> = [0.5, 0.6].iter().map(|&s| MaskSpec {
+        pattern_kind: PatternKind::Unstructured { sparsity: s },
+        refiner: Refiner::SparseSwapsNative,
+        t_max: 6,
+        calib_batches: 2,
+        sequential: false,
+        ..Default::default()
+    }).collect();
+
+    let mut shared =
+        PruneSession::new(&pool, &store, &ds, RunOptions::default());
+    let shared_masks: Vec<MaskSet> = specs.iter()
+        .map(|spec| shared.prune(spec).unwrap().0)
+        .collect();
+    assert_eq!(shared.calibrations(), 1,
+               "the second spec must reuse the cached Gram stats");
+
+    for (spec, masks) in specs.iter().zip(&shared_masks) {
+        let (fresh, _) =
+            PruneSession::new(&pool, &store, &ds,
+                              RunOptions::default())
+                .prune(spec).unwrap();
+        for (li, (a, b)) in
+            masks.masks.iter().zip(&fresh.masks).enumerate() {
+            assert_eq!(a.data, b.data,
+                       "layer {li}: shared-session mask diverged \
+                        from the fresh-session run");
+        }
+    }
+}
+
+#[test]
+fn warm_continuations_and_sweeps_reject_journaling() {
+    let pool = interp_pool(&tiny_manifest(), 1,
+                           RuntimeOptions::default());
+    let (store, ds) = tiny_setup(&pool);
+    let meta = store.meta.clone();
+    let run = RunOptions {
+        journal: Some(tmp_path("journal")),
+        ..Default::default()
+    };
+
+    // Direct warm continuation under a journal.
+    let spec = MaskSpec {
+        refiner: Refiner::SparseSwapsNative,
+        t_max: 2,
+        calib_batches: 2,
+        sequential: false,
+        ..Default::default()
+    };
+    let warm = MaskSet::all_ones(&meta);
+    let err = PruneSession::new(&pool, &store, &ds, run.clone())
+        .prune_from(&spec, Some(&warm))
+        .unwrap_err();
+    assert!(err.to_string().contains("journal"),
+            "unexpected error: {err}");
+
+    // Whole sweep on a journaled session.
+    let mut session = PruneSession::new(&pool, &store, &ds, run);
+    let err = sweep(&mut session, &base_cfg()).unwrap_err();
+    assert!(err.to_string().contains("journaled"),
+            "unexpected error: {err}");
+}
