@@ -101,8 +101,8 @@ fn main() {
     let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()), pattern);
     let warm_loss = layer_loss(&w, &warm, &g);
     let ctx = LayerContext {
-        w: &w, g: g.as_gram(), stats: None, pattern, t_max: 50,
-        threads: 1,
+        w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 50,
+        threads: 1, gmax: None,
     };
 
     println!("layer {d_out}x{d_in}, 60% per-row sparsity \

@@ -75,8 +75,8 @@ fn main() {
     // Same engine through the uniform RefineEngine trait, capturing
     // mask snapshots after 1, 5 and 25 swaps/row (paper Table 3).
     let ctx = LayerContext {
-        w: &w, g: g.as_gram(), stats: None, pattern, t_max: 100,
-        threads: 4,
+        w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 100,
+        threads: 4, gmax: None,
     };
     let mut mask2 = warm_mask.clone();
     let out = NativeEngine::default()

@@ -47,7 +47,15 @@
 //! writes `reports/sweep.json` (the CI curve artifact) plus the
 //! "sweep" section of `reports/bench_kernels.json`.
 //!
-//! Part 7 (needs artifacts): the fused-XLA and Pallas offload engines
+//! Part 7 (artifact-free, always runs): the out-of-core streaming
+//! gate — the staged streamed pipeline (weights leased per block from
+//! a checkpoint, block b+1 prefetched while block b refines) vs the
+//! fully-resident baseline on a deep skewed model.  Gates on bitwise
+//! mask parity, accounted peak residency within the 2-block staging
+//! bound, and streamed wall clock under 1.15x resident, and writes
+//! the "stream" section of `reports/bench_kernels.json`.
+//!
+//! Part 8 (needs artifacts): the fused-XLA and Pallas offload engines
 //! on their own artifact-width layer.
 mod common;
 
@@ -63,8 +71,9 @@ use sparseswaps::coordinator::{
     SweepConfig, TrainConfig,
 };
 use sparseswaps::data::{Dataset, Split};
-use sparseswaps::model::testutil::{tiny_manifest, tiny_meta};
-use sparseswaps::model::ParamStore;
+use sparseswaps::model::testutil::{meta_for, tiny_manifest, tiny_meta};
+use sparseswaps::model::{checkpoint, ParamStore, StreamingStore,
+                         WeightStore};
 use sparseswaps::pruning::engine::{LayerContext, RefineEngine};
 use sparseswaps::pruning::Criterion;
 use sparseswaps::pruning::mask::{mask_from_scores, Pattern};
@@ -159,8 +168,8 @@ fn native_section() {
         for threads in [1usize, 4] {
             let engine = NativeEngine { eps: 0.0, arm: Some(arm) };
             let ctx = LayerContext {
-                w: &w, g: g.as_gram(), stats: None, pattern, t_max,
-                threads,
+                w: w.view(), g: g.as_gram(), stats: None, pattern,
+                t_max, threads,
                 gmax: None,
             };
             let mut mask = warm.clone();
@@ -290,8 +299,8 @@ fn pool_section() {
             .map(|((w, g, warm), slot)| {
                 Box::new(move |rt: &Runtime| {
                     let ctx = LayerContext {
-                        w, g: g.as_gram(), stats: None, pattern,
-                        t_max, threads: 1,
+                        w: w.view(), g: g.as_gram(), stats: None,
+                        pattern, t_max, threads: 1,
                         gmax: None,
                     };
                     let mut mask = warm.clone();
@@ -409,7 +418,7 @@ fn shards_section() {
             .map(|(li, (w, g, warm))| LayerWork {
                 li,
                 label: format!("layer{li}"),
-                w: w.clone(),
+                w: w.view(),
                 g: g.as_gram(),
                 stats: None,
                 pattern,
@@ -522,8 +531,8 @@ fn wave2_section() {
         while r0 < rows {
             let r1 = (r0 + shard_rows).min(rows);
             let ctx = LayerContext {
-                w: &w, g: g.as_gram(), stats: None, pattern, t_max,
-                threads: 1, gmax,
+                w: w.view(), g: g.as_gram(), stats: None, pattern,
+                t_max, threads: 1, gmax,
             };
             let mut shard = Matrix::zeros(r1 - r0, d);
             for r in r0..r1 {
@@ -598,7 +607,7 @@ fn wave2_section() {
             .map(|(li, (w, g, warm))| LayerWork {
                 li,
                 label: format!("layer{li}"),
-                w: w.clone(),
+                w: w.view(),
                 g: g.as_gram(),
                 stats: None,
                 pattern: ppattern,
@@ -820,7 +829,7 @@ fn faults_section() {
             .map(|(li, (w, g, warm))| LayerWork {
                 li,
                 label: format!("layer{li}"),
-                w: w.clone(),
+                w: w.view(),
                 g: g.as_gram(),
                 stats: None,
                 pattern,
@@ -1063,6 +1072,153 @@ fn sweep_section() {
               curve at reports/sweep.json)");
 }
 
+/// Artifact-free out-of-core streaming gate: the staged streamed
+/// pipeline (prefetch block b+1's weights and Gram accumulation while
+/// block b refines) vs the fully-resident baseline on a deep skewed
+/// model (d_ff = 4x d_model, so the MLP layers dominate each block).
+/// Exits non-zero if any streamed mask diverges bitwise from the
+/// resident run, if the store's accounted peak exceeds the 2-block
+/// staging bound (globals + 2x the largest block), or if the streamed
+/// wall clock lands at or past 1.15x the resident run (the prefetch
+/// stage must hide the disk + Gram latency).  Writes the "stream"
+/// section of `reports/bench_kernels.json`.
+fn stream_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let (d_model, d_ff, n_blocks, t_max) =
+        if quick { (32usize, 128usize, 4usize, 4usize) }
+        else { (48, 192, 6, 8) };
+    let meta = meta_for(96, d_model, 2, d_ff, n_blocks, 16, 2);
+    let manifest = model_manifest(&meta);
+    let pool = interp_pool(&manifest, 1, RuntimeOptions::default());
+    let ds = Dataset::build(&meta, 42);
+    let store = ParamStore::init(&meta, 5);
+    let spec = MaskSpec {
+        criterion: Criterion::Wanda,
+        pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
+        refiner: Refiner::SparseSwapsNative,
+        t_max,
+        calib_batches: 2,
+        sequential: false,
+        checkpoints: Vec::new(),
+    };
+
+    let t0 = Instant::now();
+    let (resident_masks, resident_rep) =
+        PruneSession::new(&pool, &store, &ds, RunOptions::default())
+            .prune(&spec)
+            .expect("resident prune");
+    let resident_secs = t0.elapsed().as_secs_f64().max(1e-9);
+
+    let path = std::env::temp_dir().join(format!(
+        "sparseswaps_stream_bench_{}.ssck", std::process::id()));
+    checkpoint::save(&path, &store, None)
+        .expect("write streaming checkpoint");
+    let sstore = StreamingStore::open(&path, &meta, 0)
+        .expect("open streaming store");
+    let t0 = Instant::now();
+    let (stream_masks, stream_rep) =
+        PruneSession::new(&pool, &sstore, &ds, RunOptions::default())
+            .prune(&spec)
+            .expect("streamed prune");
+    let stream_secs = t0.elapsed().as_secs_f64().max(1e-9);
+    let stats = sstore.stats();
+    std::fs::remove_file(&path).ok();
+
+    for (li, (a, b)) in resident_masks.masks.iter()
+        .zip(&stream_masks.masks).enumerate()
+    {
+        if a.data != b.data {
+            eprintln!("[ablation_engine] PARITY FAILURE: streamed \
+                       layer {li} mask diverged from the resident \
+                       store");
+            std::process::exit(1);
+        }
+    }
+    let bytes_of = |i: usize| -> usize {
+        meta.params[i].1.iter().product::<usize>() * 4
+    };
+    let globals_bytes: usize =
+        [0usize, 1 + n_blocks * 9, 2 + n_blocks * 9].iter()
+            .map(|&i| bytes_of(i)).sum();
+    let max_block_bytes = (0..n_blocks)
+        .map(|b| (1 + b * 9..1 + (b + 1) * 9)
+            .map(bytes_of).sum::<usize>())
+        .max()
+        .unwrap_or(0);
+    let total_bytes: usize =
+        (0..meta.params.len()).map(bytes_of).sum();
+    let bound = globals_bytes + 2 * max_block_bytes;
+    if stats.peak_bytes > bound {
+        eprintln!("[ablation_engine] PERF GATE FAILURE: streamed peak \
+                   residency {} B exceeds the 2-block staging bound \
+                   {} B (globals {globals_bytes} + 2 x \
+                   {max_block_bytes})", stats.peak_bytes, bound);
+        std::process::exit(1);
+    }
+    let overhead = stream_secs / resident_secs;
+    if overhead >= 1.15 {
+        eprintln!("[ablation_engine] PERF GATE FAILURE: streamed wall \
+                   {stream_secs:.3}s is {overhead:.2}x the resident \
+                   run's {resident_secs:.3}s, at or past the 1.15x \
+                   gate");
+        std::process::exit(1);
+    }
+
+    let mib = |b: usize| b as f64 / (1u64 << 20) as f64;
+    let mut table = Table::new(
+        format!("Out-of-core streaming — staged vs resident \
+                 ({n_blocks} blocks, d_model={d_model}, d_ff={d_ff}, \
+                 T_max={t_max})"),
+        &["store", "seconds", "calib s", "refine s", "peak MiB",
+          "tensor loads"]);
+    table.row(vec![
+        "resident".into(),
+        format!("{resident_secs:.3}"),
+        format!("{:.3}", resident_rep.calib_seconds),
+        format!("{:.3}", resident_rep.refine_seconds),
+        format!("{:.2}", mib(total_bytes)),
+        "0".into(),
+    ]);
+    table.row(vec![
+        "streamed".into(),
+        format!("{stream_secs:.3}"),
+        format!("{:.3}", stream_rep.calib_seconds),
+        format!("{:.3}", stream_rep.refine_seconds),
+        format!("{:.2}", mib(stats.peak_bytes)),
+        stats.loads.to_string(),
+    ]);
+    table.print();
+    println!("stream: peak {:.2} MiB of a {:.2} MiB model \
+              ({:.0}% saved), {overhead:.2}x resident wall",
+             mib(stats.peak_bytes), mib(total_bytes),
+             100.0 * (1.0 - stats.peak_bytes as f64
+                      / total_bytes.max(1) as f64));
+
+    let section = Json::obj(vec![
+        ("d_model", Json::num(d_model as f64)),
+        ("d_ff", Json::num(d_ff as f64)),
+        ("blocks", Json::num(n_blocks as f64)),
+        ("t_max", Json::num(t_max as f64)),
+        ("resident_seconds", Json::num(resident_secs)),
+        ("stream_seconds", Json::num(stream_secs)),
+        ("stream_overhead", Json::num(overhead)),
+        ("model_bytes", Json::num(total_bytes as f64)),
+        ("peak_bytes", Json::num(stats.peak_bytes as f64)),
+        ("bound_bytes", Json::num(bound as f64)),
+        ("loads", Json::num(stats.loads as f64)),
+        ("loaded_bytes", Json::num(stats.loaded_bytes as f64)),
+        ("releases", Json::num(stats.releases as f64)),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "stream", section) {
+        eprintln!("[ablation_engine] FAILED writing bench_kernels: {e}");
+        std::process::exit(1);
+    }
+    println!("[ablation_engine] stream section written to \
+              reports/bench_kernels.json (staged-vs-resident parity \
+              and 2-block residency OK)");
+}
+
 fn main() {
     native_section();
     pool_section();
@@ -1070,6 +1226,7 @@ fn main() {
     wave2_section();
     faults_section();
     sweep_section();
+    stream_section();
 
     // Offload engines (need AOT artifacts; their own layer at an
     // artifact width).

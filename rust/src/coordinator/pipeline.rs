@@ -29,6 +29,23 @@
 //! worse).  Both modes exist because the paper's baselines differ in
 //! this respect and the ablation benches compare them.
 //!
+//! The pipeline talks to parameters through the block-granular
+//! [`WeightStore`] trait rather than the flat in-memory tensor list.
+//! With a [`crate::model::weight_store::ResidentStore`] nothing
+//! changes; with a [`crate::model::weight_store::StreamingStore`]
+//! (`--stream-weights`) the run becomes a **staged stream**: the
+//! calibration residual streams are embedded once
+//! ([`GramStream::start`]), and while block `b` refines on the
+//! schedulers, a prefetch stage leases block `b+1` from disk — and in
+//! one-shot mode also accumulates its Gram statistics — so peak host
+//! memory is O(2 blocks) plus the residual streams, never the
+//! checkpoint size.  Refined (and journal-restored) blocks are
+//! released as the stream passes them.  Per-row refinement depends
+//! only on (W, G, spec), and the `embed`+`calib_block` artifacts are
+//! bit-identical to the stacked `calib_step`, so streamed masks and
+//! snapshots match the resident store bit-for-bit for every engine,
+//! backend and shard size.
+//!
 //! The job-spec API splits what used to be one 14-field config in two:
 //! [`MaskSpec`] holds exactly the knobs that determine the resulting
 //! masks (and therefore the journal fingerprint domain —
@@ -51,8 +68,9 @@ use crate::coordinator::scheduler::{
 };
 use crate::coordinator::swaploop::OffloadEngine;
 use crate::data::{Dataset, Split};
-use crate::gram::{accumulate, GramStats};
+use crate::gram::{accumulate, BlockStats, GramStats, GramStream};
 use crate::model::store::{MaskSet, ParamStore};
+use crate::model::weight_store::{BlockLease, StoreError, WeightStore};
 use crate::pruning::dsnot::DsnotEngine;
 use crate::pruning::engine::{NoopEngine, RefineEngine};
 use crate::pruning::error::relative_reduction;
@@ -61,9 +79,12 @@ use crate::pruning::mask::{
 };
 use crate::pruning::saliency::{self, Criterion};
 use crate::pruning::sparseswaps::NativeEngine;
+use crate::runtime::manifest::{ModelMeta, PrunableLayer};
 use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::tensor_data::TensorData;
 use crate::util::cli::{JournalFlags, PoolFlags};
+use crate::util::tensor::{Matrix, MatrixView};
 use crate::util::threadpool::{default_threads, ThreadPool};
 
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -384,7 +405,7 @@ impl PruneReport {
 /// to the backfill).
 pub struct PruneSession<'a> {
     pool: &'a RuntimePool,
-    store: &'a ParamStore,
+    store: &'a dyn WeightStore,
     ds: &'a Dataset,
     /// Wall-clock knobs; a pub field so callers (the fault tests, the
     /// sweep driver) can adjust scheduling between `prune` calls
@@ -399,7 +420,7 @@ pub struct PruneSession<'a> {
 }
 
 impl<'a> PruneSession<'a> {
-    pub fn new(pool: &'a RuntimePool, store: &'a ParamStore,
+    pub fn new(pool: &'a RuntimePool, store: &'a dyn WeightStore,
                ds: &'a Dataset, run: RunOptions) -> Self {
         Self { pool, store, ds, run, dense_stats: None,
                calibrations: 0 }
@@ -409,8 +430,17 @@ impl<'a> PruneSession<'a> {
         self.pool
     }
 
-    pub fn store(&self) -> &'a ParamStore {
+    pub fn store(&self) -> &'a dyn WeightStore {
         self.store
+    }
+
+    /// The full in-memory store, for stages that need whole-model
+    /// access (perplexity evaluation, `store.masked` materialisation).
+    /// Errors when the weights live out of core.
+    pub fn resident_store(&self) -> Result<&'a ParamStore, RuntimeError> {
+        self.store.as_resident().ok_or_else(|| RuntimeError::Msg(
+            "this stage needs the full model resident; it is not \
+             available with --stream-weights".into()))
     }
 
     pub fn dataset(&self) -> &'a Dataset {
@@ -453,7 +483,7 @@ impl<'a> PruneSession<'a> {
                  the inherited mask)".into()));
         }
         if let Some(prev) = warm {
-            let want = self.store.meta.prunable.len();
+            let want = self.store.meta().prunable.len();
             if prev.masks.len() != want {
                 return Err(RuntimeError::Msg(format!(
                     "warm mask set has {} layer masks, model has \
@@ -463,22 +493,27 @@ impl<'a> PruneSession<'a> {
         // One-shot Gram statistics are a pure function of
         // (store, calib_batches): cache them across specs.
         // Sequential mode recalibrates per block inside `prune_impl`
-        // by design and bypasses the cache.
+        // by design and bypasses the cache; a streaming store cannot
+        // hold whole-model statistics resident, so its one-shot runs
+        // accumulate per block inside the staged stream instead.
         let mut calib_pre = 0.0;
         if !spec.sequential {
-            let cached = matches!(&self.dense_stats,
-                                  Some((n, _)) if *n
-                                      == spec.calib_batches);
-            if !cached {
-                let calib = self.ds.batches(&self.store.meta,
-                                            Split::Calibration,
-                                            spec.calib_batches);
-                let t0 = Instant::now();
-                let stats = accumulate(self.pool.primary(),
-                                       self.store, &calib)?;
-                calib_pre = t0.elapsed().as_secs_f64();
-                self.calibrations += 1;
-                self.dense_stats = Some((spec.calib_batches, stats));
+            if let Some(resident) = self.store.as_resident() {
+                let cached = matches!(&self.dense_stats,
+                                      Some((n, _)) if *n
+                                          == spec.calib_batches);
+                if !cached {
+                    let calib = self.ds.batches(self.store.meta(),
+                                                Split::Calibration,
+                                                spec.calib_batches);
+                    let t0 = Instant::now();
+                    let stats = accumulate(self.pool.primary(),
+                                           resident, &calib)?;
+                    calib_pre = t0.elapsed().as_secs_f64();
+                    self.calibrations += 1;
+                    self.dense_stats =
+                        Some((spec.calib_batches, stats));
+                }
             }
         }
         let dense = self.dense_stats.as_ref()
@@ -493,23 +528,221 @@ impl<'a> PruneSession<'a> {
     }
 }
 
+/// Where one block's weights live for its refinement stage: the whole
+/// resident store, or the block's lease from a streaming store.  Per-
+/// row refinement sees identical bytes either way.
+enum BlockWeights<'w> {
+    Resident(&'w ParamStore),
+    Lease(&'w BlockLease),
+}
+
+impl<'w> BlockWeights<'w> {
+    fn weight(&self, layer: &PrunableLayer) -> MatrixView<'w> {
+        match *self {
+            BlockWeights::Resident(s) => s.weight(layer),
+            BlockWeights::Lease(l) => l.weight(layer),
+        }
+    }
+}
+
+fn store_err(e: StoreError) -> RuntimeError {
+    RuntimeError::Msg(format!("weight store: {e}"))
+}
+
+/// The per-block refine stage shared by the resident and the streamed
+/// drivers: warmstart, shard dispatch (with quarantine degradation),
+/// result folding and journaling for one block.  The drivers differ
+/// only in where weights and Gram statistics come from and what
+/// happens to them afterwards.
+struct BlockStage<'s> {
+    pool: &'s RuntimePool,
+    meta: &'s ModelMeta,
+    spec: &'s MaskSpec,
+    plan: BlockSchedule,
+    offload: bool,
+    host_workers: usize,
+    thread_pool: Option<ThreadPool>,
+    native: Refiner,
+    degraded: bool,
+    fallback_pool: Option<ThreadPool>,
+    journal: Option<Journal>,
+    warm_from: Option<&'s MaskSet>,
+    masks: MaskSet,
+    report: PruneReport,
+    captured: BTreeMap<usize, Vec<Option<Matrix>>>,
+}
+
+impl BlockStage<'_> {
+    /// Warmstart and refine block `b` from the given weights and Gram
+    /// statistics, fold the results into masks/report/snapshots, and
+    /// journal the block.  Per-row results depend only on (W, G,
+    /// spec), so both drivers produce bit-identical masks.
+    fn refine_one(&mut self, b: usize, weights: BlockWeights<'_>,
+                  stats: &GramStats) -> Result<(), RuntimeError> {
+        let rt = self.pool.primary();
+        let spec = self.spec;
+        let layers: Vec<_> = self.meta.prunable.iter().enumerate()
+            .filter(|(_, l)| l.block == b)
+            .map(|(i, l)| (i, l.clone()))
+            .collect();
+
+        // Warmstart every layer first (cheap, serial), then refine
+        // the whole block through the shard dispatch.
+        let mut works = Vec::with_capacity(layers.len());
+        for (li, layer) in layers {
+            let w = weights.weight(&layer);
+            let g = stats.gram_for(&layer);
+            let pattern = spec.pattern_kind.pattern_for(layer.d_in);
+            let t0 = Instant::now();
+            let scores = saliency::scores(spec.criterion, w,
+                                          &g.diag());
+            // A warm continuation inherits the previous level's
+            // refined mask, tightened to the new pattern's budget;
+            // a cold run warmstarts from the scores alone.
+            let warm = match self.warm_from {
+                Some(prev) =>
+                    tighten_mask(&prev.masks[li], &scores, pattern),
+                None => mask_from_scores(&scores, pattern),
+            };
+            self.report.warmstart_seconds +=
+                t0.elapsed().as_secs_f64();
+            let fstats = if spec.refiner == Refiner::Dsnot {
+                Some(stats.feature_stats_for(&layer))
+            } else {
+                None
+            };
+            // Adaptive shard sizes align to the offload chunk shape
+            // so no shard pays a padded half-chunk.
+            let shard_align = match &spec.refiner {
+                Refiner::SparseSwapsOffload { impl_name }
+                    if !self.degraded => rt
+                    .manifest()
+                    .find_swap_artifact(layer.d_in,
+                                        &pattern.artifact_tag(),
+                                        impl_name, 8)
+                    .map(|e| e.chunk_rows)
+                    .unwrap_or(1),
+                _ => 1,
+            };
+            works.push(LayerWork {
+                li,
+                label: layer.name.clone(),
+                w,
+                g,
+                stats: fstats,
+                pattern,
+                warm,
+                shard_align,
+                gram_key: crate::coordinator::swaploop::
+                    next_refinement_id(),
+            });
+        }
+
+        let (refiner_b, sched_b): (&Refiner, &dyn Scheduler) =
+            if self.degraded {
+                (&self.native,
+                 self.fallback_pool.as_ref()
+                     .expect("degraded pool built"))
+            } else if let Some(tp) = &self.thread_pool {
+                (&spec.refiner, tp)
+            } else {
+                (&spec.refiner, self.pool)
+            };
+        let results = refine_block(sched_b, refiner_b, &works,
+                                   &self.plan);
+
+        // Release the block's shared Gram buffers on every device
+        // before propagating any error (shards leave them resident
+        // for their siblings; the block is done — or dead — now, so
+        // the budget goes back to live layers either way).
+        if self.offload && !self.degraded {
+            for work in &works {
+                for d in 0..self.pool.devices() {
+                    self.pool.runtime(d).invalidate(work.gram_key);
+                }
+            }
+        }
+        let results = match results {
+            Ok(r) => r,
+            Err(e) if self.offload && !self.degraded
+                && self.pool.workers_quarantined()
+                    >= self.pool.devices() as u64 => {
+                eprintln!(
+                    "prune: all {} device worker(s) quarantined \
+                     ({e}); degrading to the native host refiner",
+                    self.pool.devices());
+                self.degraded = true;
+                self.fallback_pool =
+                    Some(ThreadPool::new(self.host_workers));
+                refine_block(
+                    self.fallback_pool.as_ref().expect("just built"),
+                    &self.native, &works, &self.plan)?
+            }
+            Err(e) => return Err(e),
+        };
+
+        for res in results {
+            let ShardedLayer { li, mask, outcome, seconds, .. } = res;
+            let layer = &self.meta.prunable[li];
+            let pattern = spec.pattern_kind.pattern_for(layer.d_in);
+            self.report.refine_seconds += seconds;
+            validate(&mask, pattern)
+                .map_err(|e| RuntimeError::Msg(format!(
+                    "{}: {e}", layer.name)))?;
+            let lr = LayerReport {
+                name: layer.name.clone(),
+                layer_type: layer.layer_type.clone(),
+                block: layer.block,
+                loss_warmstart: outcome.layer.total_before(),
+                loss_refined: outcome.layer.total_after(),
+                swaps: outcome.layer.total_swaps(),
+                rows_converged: outcome.layer.rows_converged(),
+                rows: layer.d_out,
+                seconds,
+            };
+            crate::log_debug!(
+                "prune[{}] {} loss {:.4} -> {:.4} ({:+.1}%)",
+                self.meta.name, lr.name, lr.loss_warmstart,
+                lr.loss_refined, -100.0 * lr.relative_reduction());
+            for (cp, snap) in outcome.snapshots {
+                if let Some(slots) = self.captured.get_mut(&cp) {
+                    slots[li] = Some(snap);
+                }
+            }
+            self.masks.masks[li] = mask;
+            self.report.layers.push(lr);
+        }
+
+        if let Some(j) = &self.journal {
+            let layer_masks: Vec<_> = works.iter()
+                .map(|w| (w.li, &self.masks.masks[w.li]))
+                .collect();
+            j.record_block(b, &layer_masks)?;
+        }
+        Ok(())
+    }
+}
+
 /// The pipeline body.  Private: every caller goes through
 /// [`PruneSession`], so there is exactly one prune entry path.
 #[allow(clippy::too_many_arguments)]
-fn prune_impl(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
-              spec: &MaskSpec, run: &RunOptions,
+fn prune_impl(pool: &RuntimePool, store: &dyn WeightStore,
+              ds: &Dataset, spec: &MaskSpec, run: &RunOptions,
               warm_from: Option<&MaskSet>, dense: Option<&GramStats>,
               calib_pre: f64, calibrations: &mut usize)
     -> Result<(MaskSet, PruneReport), RuntimeError> {
     let rt: &Runtime = pool.primary();
-    let meta = store.meta.clone();
-    // Sequential mode rebuilds its calibration batches here; one-shot
-    // mode received the session's cached dense statistics.
-    let calib = spec.sequential.then(|| {
+    let meta = store.meta().clone();
+    // Sequential mode rebuilds its calibration batches here; resident
+    // one-shot mode received the session's cached dense statistics; a
+    // streaming store accumulates per block inside the staged stream,
+    // so it needs the batches in one-shot mode too.
+    let streaming = store.as_resident().is_none();
+    let calib = (spec.sequential || streaming).then(|| {
         ds.batches(&meta, Split::Calibration, spec.calib_batches)
     });
     let mut masks = MaskSet::all_ones(&meta);
-    let mut report = PruneReport {
+    let report = PruneReport {
         calib_seconds: calib_pre,
         ..PruneReport::default()
     };
@@ -519,8 +752,7 @@ fn prune_impl(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
     // all-ones" as the not-captured sentinel, which clobbered
     // legitimately dense snapshots.)
     let n_layers = meta.prunable.len();
-    let mut captured: BTreeMap<usize,
-                               Vec<Option<crate::util::tensor::Matrix>>> =
+    let captured: BTreeMap<usize, Vec<Option<Matrix>>> =
         spec.checkpoints.iter()
             .map(|&cp| (cp, (0..n_layers).map(|_| None).collect()))
             .collect();
@@ -536,10 +768,6 @@ fn prune_impl(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
         1
     };
     let thread_pool = (!offload).then(|| ThreadPool::new(host_workers));
-    let sched: &dyn Scheduler = match &thread_pool {
-        Some(tp) => tp,
-        None => pool,
-    };
     let plan = BlockSchedule {
         t_max: spec.t_max,
         // Under a multi-worker scheduler parallelism comes from the
@@ -593,175 +821,74 @@ fn prune_impl(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
             meta.name, completed.len());
     }
 
-    // Graceful degradation: when every device worker has been
-    // quarantined the offload path cannot make progress, so the rest
-    // of the run falls back to the native host engine (bit-identical
-    // masks for the interp backend; gated in the wave-2 bench for the
-    // offload parity in general).
-    let native = Refiner::SparseSwapsNative;
-    let mut degraded = false;
-    let mut fallback_pool: Option<ThreadPool> = None;
+    // Graceful degradation state lives in the stage: when every
+    // device worker has been quarantined the offload path cannot make
+    // progress, so the rest of the run falls back to the native host
+    // engine (bit-identical masks for the interp backend; gated in
+    // the wave-2 bench for the offload parity in general).
+    let mut stage = BlockStage {
+        pool,
+        meta: &meta,
+        spec,
+        plan,
+        offload,
+        host_workers,
+        thread_pool,
+        native: Refiner::SparseSwapsNative,
+        degraded: false,
+        fallback_pool: None,
+        journal,
+        warm_from,
+        masks,
+        report,
+        captured,
+    };
 
-    let blocks: Vec<usize> = (0..meta.n_blocks).collect();
-    for &b in &blocks {
-        if completed.contains(&b) {
-            continue;
-        }
-        // Borrow (never clone) the Gram statistics: layer jobs hold
-        // zero-copy views into this block's stream stacks.
-        let stats_block;
-        let stats: &GramStats = if spec.sequential {
-            // Recalibrate with everything pruned so far applied.
-            let t0 = Instant::now();
-            let masked = store.masked(&masks);
-            let batches = calib.as_ref().expect("sequential batches");
-            stats_block = accumulate(rt, &masked, batches)?;
-            report.calib_seconds += t0.elapsed().as_secs_f64();
-            *calibrations += 1;
-            &stats_block
-        } else {
-            dense.expect("one-shot stats provided by the session")
-        };
-
-        let layers: Vec<_> = meta.prunable.iter().enumerate()
-            .filter(|(_, l)| l.block == b)
-            .map(|(i, l)| (i, l.clone()))
-            .collect();
-
-        // Warmstart every layer first (cheap, serial), then refine
-        // the whole block through the shard dispatch.
-        let mut works = Vec::with_capacity(layers.len());
-        for (li, layer) in layers {
-            let w = store.weight(&layer);
-            let g = stats.gram_for(&layer);
-            let pattern = spec.pattern_kind.pattern_for(layer.d_in);
-            let t0 = Instant::now();
-            let scores = saliency::scores(spec.criterion, &w,
-                                          &g.diag());
-            // A warm continuation inherits the previous level's
-            // refined mask, tightened to the new pattern's budget;
-            // a cold run warmstarts from the scores alone.
-            let warm = match warm_from {
-                Some(prev) =>
-                    tighten_mask(&prev.masks[li], &scores, pattern),
-                None => mask_from_scores(&scores, pattern),
-            };
-            report.warmstart_seconds += t0.elapsed().as_secs_f64();
-            let fstats = if spec.refiner == Refiner::Dsnot {
-                Some(stats.feature_stats_for(&layer))
-            } else {
-                None
-            };
-            // Adaptive shard sizes align to the offload chunk shape
-            // so no shard pays a padded half-chunk.
-            let shard_align = match &spec.refiner {
-                Refiner::SparseSwapsOffload { impl_name }
-                    if !degraded => rt
-                    .manifest()
-                    .find_swap_artifact(layer.d_in,
-                                        &pattern.artifact_tag(),
-                                        impl_name, 8)
-                    .map(|e| e.chunk_rows)
-                    .unwrap_or(1),
-                _ => 1,
-            };
-            works.push(LayerWork {
-                li,
-                label: layer.name.clone(),
-                w,
-                g,
-                stats: fstats,
-                pattern,
-                warm,
-                shard_align,
-                gram_key: crate::coordinator::swaploop::
-                    next_refinement_id(),
-            });
-        }
-
-        let (refiner_b, sched_b): (&Refiner, &dyn Scheduler) =
-            if degraded {
-                (&native,
-                 fallback_pool.as_ref().expect("degraded pool built"))
-            } else {
-                (&spec.refiner, sched)
-            };
-        let results = refine_block(sched_b, refiner_b, &works, &plan);
-
-        // Release the block's shared Gram buffers on every device
-        // before propagating any error (shards leave them resident
-        // for their siblings; the block is done — or dead — now, so
-        // the budget goes back to live layers either way).
-        if offload && !degraded {
-            for work in &works {
-                for d in 0..pool.devices() {
-                    pool.runtime(d).invalidate(work.gram_key);
+    match store.as_resident() {
+        Some(resident) => {
+            for b in 0..meta.n_blocks {
+                if completed.contains(&b) {
+                    continue;
+                }
+                // Borrow (never clone) the Gram statistics: layer
+                // jobs hold zero-copy views into this block's stream
+                // stacks.
+                let stats_block;
+                let stats: &GramStats = if spec.sequential {
+                    // Recalibrate with everything pruned so far
+                    // applied.
+                    let t0 = Instant::now();
+                    let masked = resident.masked(&stage.masks);
+                    let batches =
+                        calib.as_ref().expect("sequential batches");
+                    stats_block = accumulate(rt, &masked, batches)?;
+                    stage.report.calib_seconds +=
+                        t0.elapsed().as_secs_f64();
+                    *calibrations += 1;
+                    &stats_block
+                } else {
+                    dense.expect(
+                        "one-shot stats provided by the session")
+                };
+                stage.refine_one(b, BlockWeights::Resident(resident),
+                                 stats)?;
+                if run.halt_after_block == Some(b) {
+                    crate::log_debug!(
+                        "prune[{}] halting after block {b} \
+                         (test hook)",
+                        meta.name);
+                    break;
                 }
             }
         }
-        let results = match results {
-            Ok(r) => r,
-            Err(e) if offload && !degraded
-                && pool.workers_quarantined()
-                    >= pool.devices() as u64 => {
-                eprintln!(
-                    "prune: all {} device worker(s) quarantined \
-                     ({e}); degrading to the native host refiner",
-                    pool.devices());
-                degraded = true;
-                fallback_pool = Some(ThreadPool::new(host_workers));
-                refine_block(
-                    fallback_pool.as_ref().expect("just built"),
-                    &native, &works, &plan)?
-            }
-            Err(e) => return Err(e),
-        };
-
-        for res in results {
-            let ShardedLayer { li, mask, outcome, seconds, .. } = res;
-            let layer = &meta.prunable[li];
-            let pattern = spec.pattern_kind.pattern_for(layer.d_in);
-            report.refine_seconds += seconds;
-            validate(&mask, pattern)
-                .map_err(|e| RuntimeError::Msg(format!(
-                    "{}: {e}", layer.name)))?;
-            let lr = LayerReport {
-                name: layer.name.clone(),
-                layer_type: layer.layer_type.clone(),
-                block: layer.block,
-                loss_warmstart: outcome.layer.total_before(),
-                loss_refined: outcome.layer.total_after(),
-                swaps: outcome.layer.total_swaps(),
-                rows_converged: outcome.layer.rows_converged(),
-                rows: layer.d_out,
-                seconds,
-            };
-            crate::log_debug!(
-                "prune[{}] {} loss {:.4} -> {:.4} ({:+.1}%)",
-                meta.name, lr.name, lr.loss_warmstart, lr.loss_refined,
-                -100.0 * lr.relative_reduction());
-            for (cp, snap) in outcome.snapshots {
-                if let Some(slots) = captured.get_mut(&cp) {
-                    slots[li] = Some(snap);
-                }
-            }
-            masks.masks[li] = mask;
-            report.layers.push(lr);
-        }
-
-        if let Some(j) = &journal {
-            let layer_masks: Vec<_> = works.iter()
-                .map(|w| (w.li, &masks.masks[w.li]))
-                .collect();
-            j.record_block(b, &layer_masks)?;
-        }
-        if run.halt_after_block == Some(b) {
-            crate::log_debug!(
-                "prune[{}] halting after block {b} (test hook)",
-                meta.name);
-            break;
+        None => {
+            let batches =
+                calib.as_ref().expect("streaming batches built");
+            run_streamed(store, &meta, spec, run, batches,
+                         &completed, &mut stage, calibrations)?;
         }
     }
+    let BlockStage { masks, mut report, captured, .. } = stage;
 
     // Each snapshot covers layers only up to its capture point; fill the
     // never-captured slots with the final masks so every snapshot is a
@@ -777,6 +904,175 @@ fn prune_impl(pool: &RuntimePool, store: &ParamStore, ds: &Dataset,
         report.snapshots.insert(cp, snapshot);
     }
     Ok((masks, report))
+}
+
+/// One prefetch step of the one-shot staged stream: lease block `b`
+/// and run its calibration forward — accumulating Gram statistics
+/// unless the block was journal-restored (`skip`), in which case the
+/// residual streams just advance through it.
+fn fetch_oneshot(store: &dyn WeightStore, rt: &Runtime,
+                 stream: &mut GramStream, meta: &ModelMeta, b: usize,
+                 skip: bool)
+    -> Result<(BlockLease, Option<BlockStats>, f64), RuntimeError> {
+    let lease = store.lease_block(b).map_err(store_err)?;
+    let t0 = Instant::now();
+    let params = lease.block_params(meta, b, None);
+    let stats = if skip {
+        stream.push_block(rt, &params)?;
+        None
+    } else {
+        Some(stream.accumulate_and_push(rt, &params)?)
+    };
+    Ok((lease, stats, t0.elapsed().as_secs_f64()))
+}
+
+/// The staged streaming driver: weights are leased per block from the
+/// out-of-core store, Gram statistics come from the incremental
+/// [`GramStream`], and while block `b` refines a scoped prefetch
+/// thread readies block `b+1` — its disk lease, and in one-shot mode
+/// its Gram accumulation too (sequential statistics depend on block
+/// `b`'s refined mask, so only the lease overlaps there).  Every
+/// block — refined or journal-restored — is released once the stream
+/// passes it, so peak weight residency is two blocks (plus the
+/// globals, released right after the embed stage).
+#[allow(clippy::too_many_arguments)]
+fn run_streamed(store: &dyn WeightStore, meta: &ModelMeta,
+                spec: &MaskSpec, run: &RunOptions,
+                calib: &[(TensorData, TensorData)],
+                completed: &[usize], stage: &mut BlockStage<'_>,
+                calibrations: &mut usize)
+    -> Result<(), RuntimeError> {
+    let rt: &Runtime = stage.pool.primary();
+    // Embed the calibration batches from the leased globals, then
+    // release them: from here on only the residual streams plus at
+    // most two leased blocks are resident.
+    let t0 = Instant::now();
+    let globals = store.lease_globals().map_err(store_err)?;
+    let mut stream = GramStream::start(rt, meta, globals.tensor(0),
+                                       calib)?;
+    drop(globals);
+    store.release_globals();
+    stage.report.calib_seconds += t0.elapsed().as_secs_f64();
+    if !spec.sequential {
+        // The whole one-shot stream is one dense calibration pass.
+        *calibrations += 1;
+    }
+
+    if spec.sequential {
+        let mut next_lease: Option<BlockLease> = None;
+        for b in 0..meta.n_blocks {
+            let lease = match next_lease.take() {
+                Some(l) => l,
+                None => store.lease_block(b).map_err(store_err)?,
+            };
+            if completed.contains(&b) {
+                // Journal-restored block: advance the residual
+                // streams through its restored masks, then release it
+                // like a refined block.
+                let t0 = Instant::now();
+                stream.push_block(rt, &lease.block_params(
+                    meta, b, Some(&stage.masks)))?;
+                stage.report.calib_seconds +=
+                    t0.elapsed().as_secs_f64();
+                store.release_block(b);
+                continue;
+            }
+            // Peek the block's statistics against its *dense* weights
+            // without advancing — exactly what the resident driver's
+            // whole-model recalibration sees at this block's input.
+            let t0 = Instant::now();
+            let bs = stream.accumulate_block(
+                rt, &lease.block_params(meta, b, None))?;
+            stage.report.calib_seconds += t0.elapsed().as_secs_f64();
+            *calibrations += 1;
+            let mut stats = GramStats::hollow(meta);
+            stats.tokens = stream.tokens;
+            stats.batches = stream.batches;
+            stats.set_block(b, bs);
+            // Refine block b while a prefetch thread leases block
+            // b+1's weights from disk.
+            next_lease = std::thread::scope(
+                |s| -> Result<Option<BlockLease>, RuntimeError> {
+                let handle = (b + 1 < meta.n_blocks).then(|| {
+                    s.spawn(move || store.lease_block(b + 1))
+                });
+                stage.refine_one(b, BlockWeights::Lease(&lease),
+                                 &stats)?;
+                match handle {
+                    Some(h) => h.join()
+                        .map_err(|_| RuntimeError::Msg(
+                            "prefetch stage panicked".into()))?
+                        .map(Some).map_err(store_err),
+                    None => Ok(None),
+                }
+            })?;
+            // Advance the residual streams through the block with its
+            // refined mask applied, then drop it from host memory.
+            let t0 = Instant::now();
+            stream.push_block(rt, &lease.block_params(
+                meta, b, Some(&stage.masks)))?;
+            stage.report.calib_seconds += t0.elapsed().as_secs_f64();
+            store.release_block(b);
+            if run.halt_after_block == Some(b) {
+                crate::log_debug!(
+                    "prune[{}] halting after block {b} (test hook)",
+                    meta.name);
+                break;
+            }
+        }
+    } else {
+        let mut next: Option<(BlockLease, Option<BlockStats>, f64)> =
+            None;
+        for b in 0..meta.n_blocks {
+            let skip = completed.contains(&b);
+            let (lease, bstats, secs) = match next.take() {
+                Some(pre) => pre,
+                None => fetch_oneshot(store, rt, &mut stream, meta,
+                                      b, skip)?,
+            };
+            stage.report.calib_seconds += secs;
+            if let Some(bs) = bstats {
+                let mut stats = GramStats::hollow(meta);
+                stats.tokens = stream.tokens;
+                stats.batches = stream.batches;
+                stats.set_block(b, bs);
+                // Refine block b while the prefetch thread leases
+                // block b+1 *and* runs its Gram accumulation (one-
+                // shot statistics never depend on refined masks).
+                next = std::thread::scope(
+                    |s| -> Result<Option<(BlockLease,
+                                          Option<BlockStats>, f64)>,
+                                  RuntimeError> {
+                    let handle = (b + 1 < meta.n_blocks).then(|| {
+                        let rt2 = rt.clone();
+                        let stream = &mut stream;
+                        let skip_next =
+                            completed.contains(&(b + 1));
+                        s.spawn(move || fetch_oneshot(
+                            store, &rt2, stream, meta, b + 1,
+                            skip_next))
+                    });
+                    stage.refine_one(b, BlockWeights::Lease(&lease),
+                                     &stats)?;
+                    match handle {
+                        Some(h) => h.join()
+                            .map_err(|_| RuntimeError::Msg(
+                                "prefetch stage panicked".into()))?
+                            .map(Some),
+                        None => Ok(None),
+                    }
+                })?;
+            }
+            store.release_block(b);
+            if !skip && run.halt_after_block == Some(b) {
+                crate::log_debug!(
+                    "prune[{}] halting after block {b} (test hook)",
+                    meta.name);
+                break;
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

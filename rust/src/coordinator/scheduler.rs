@@ -52,7 +52,7 @@ use crate::pruning::mask::Pattern;
 use crate::pruning::sparseswaps::{gmax_table, LayerOutcome};
 use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeError};
-use crate::util::tensor::{GramView, Matrix};
+use crate::util::tensor::{GramView, Matrix, MatrixView};
 use crate::util::threadpool::ThreadPool;
 
 /// One schedulable work unit: a contiguous row range of one layer.
@@ -216,15 +216,16 @@ pub fn split_rows(layer: usize, rows: usize, size: usize) -> Vec<Shard> {
 }
 
 /// One layer's refinement inputs, shared by all of its shards.
-/// Weights and warmstart mask are owned; the Gram matrix is a
-/// zero-copy view into the block's calibration stream stack (shard
-/// jobs carry the borrow through the scoped submission APIs).
+/// The warmstart mask is owned; weights and the Gram matrix are
+/// zero-copy views — into the weight store (or a block lease) and the
+/// block's calibration stats respectively (shard jobs carry the
+/// borrows through the scoped submission APIs).
 pub struct LayerWork<'a> {
     /// Caller's layer index (results are keyed by it).
     pub li: usize,
     /// Layer name for error messages.
     pub label: String,
-    pub w: Matrix,
+    pub w: MatrixView<'a>,
     pub g: GramView<'a>,
     pub stats: Option<FeatureStats>,
     pub pattern: Pattern,
@@ -304,7 +305,7 @@ fn run_shard(refiner: &Refiner, wc: WorkerCtx<'_>, work: &LayerWork<'_>,
     let engine = refiner.shard_engine(&wc, work.gram_key)
         .map_err(RefineError::Msg)?;
     let ctx = LayerContext {
-        w: &work.w,
+        w: work.w,
         g: work.g,
         stats: work.stats.as_ref(),
         pattern: work.pattern,

@@ -349,7 +349,7 @@ pub fn refine_layer_offload(
     pattern: Pattern, cfg: &OffloadConfig, checkpoints: &[usize],
 ) -> Result<(LayerOutcome, BTreeMap<usize, Matrix>), RuntimeError> {
     let ctx = LayerContext {
-        w,
+        w: w.view(),
         g: g.as_gram(),
         stats: None,
         pattern,

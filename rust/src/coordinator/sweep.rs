@@ -35,6 +35,7 @@ use crate::coordinator::pipeline::{
 use crate::data::Split;
 use crate::eval::perplexity;
 use crate::model::store::MaskSet;
+use crate::model::weight_store::WeightStore;
 use crate::pruning::saliency::Criterion;
 use crate::runtime::service::RuntimeError;
 use crate::util::jsonlite::Json;
@@ -242,7 +243,12 @@ pub fn sweep(session: &mut PruneSession, cfg: &SweepConfig)
             "sweep grid is empty (need >=1 level, criterion and \
              refiner)".into()));
     }
-    let meta = session.store().meta.clone();
+    if cfg.eval_ppl && session.store().as_resident().is_none() {
+        return Err(RuntimeError::Msg(
+            "sweep ppl evaluation needs the full model resident; \
+             drop the eval or --stream-weights".into()));
+    }
+    let meta = session.store().meta().clone();
     let val = cfg.eval_ppl.then(|| {
         session.dataset().batches(&meta, Split::Validation,
                                   cfg.val_batches)
@@ -298,7 +304,7 @@ pub fn sweep(session: &mut PruneSession, cfg: &SweepConfig)
         let ppl = match &val {
             Some(batches) => Some(perplexity(
                 session.pool().primary(),
-                &session.store().masked(&masks), batches)?),
+                &session.resident_store()?.masked(&masks), batches)?),
             None => None,
         };
         let rows: usize = rep.layers.iter().map(|l| l.rows).sum();

@@ -73,11 +73,11 @@ pub fn train(rt: &Runtime, store: &mut ParamStore, ds: &Dataset,
     let arcs = |ts: Vec<TensorData>| -> Vec<Arc<TensorData>> {
         ts.into_iter().map(Arc::new).collect()
     };
-    // One host copy of the parameter set here; the store is written
+    // The store's tensors are already Arc-shared; the store is written
     // back on success only, so an error mid-run leaves it untouched.
-    let mut params = arcs(store.tensors.clone());
-    let mut m = arcs(ParamStore::zeros_like(&meta).tensors);
-    let mut v = arcs(ParamStore::zeros_like(&meta).tensors);
+    let mut params = store.tensors.clone();
+    let mut m = ParamStore::zeros_like(&meta).tensors;
+    let mut v = ParamStore::zeros_like(&meta).tensors;
     let mut step = Arc::new(TensorData::scalar_i32(0));
     let lr = Arc::new(TensorData::scalar_f32(cfg.lr));
 
@@ -126,9 +126,7 @@ pub fn train(rt: &Runtime, store: &mut ParamStore, ds: &Dataset,
         }
         report.final_loss = loss;
     }
-    store.tensors = params.into_iter()
-        .map(|p| Arc::try_unwrap(p).unwrap_or_else(|a| (*a).clone()))
-        .collect();
+    store.tensors = params;
     rt.invalidate(train_id);
     report.seconds = t0.elapsed().as_secs_f64();
     Ok(report)

@@ -1,12 +1,23 @@
 //! Calibration: streaming Gram-matrix accumulation through the
-//! `calib_step_{cfg}` artifact.
+//! `calib_step_{cfg}` / `embed_{cfg}` / `calib_block_{cfg}` artifacts.
 //!
-//! The artifact runs the model forward on one calibration batch and adds
+//! The artifacts run the model forward on calibration batches and add
 //! X^T X (plus feature sums) for each of the four activation streams of
 //! every block (Sec 2.1.2: G accumulates on-the-fly; raw activations are
-//! never materialised host-side).  The coordinator threads the stat
-//! tensors through successive executions and slices per-layer Gram
-//! matrices out at the end.
+//! never materialised host-side).  Stats are stored per block so the
+//! staged pipeline can release a block's Grams the moment its
+//! refinement finishes — `GramView` borrows end with the block.
+//!
+//! Two accumulation drivers share the same math:
+//!
+//! * the resident path executes `calib_step` (all blocks per batch)
+//!   and splits the stacked outputs into per-block stats — a bit-copy;
+//! * [`GramStream`] executes `embed` once per batch and `calib_block`
+//!   per (block, batch), threading the residual stream between blocks,
+//!   so only one block's weights need be resident at a time.
+//!
+//! Both orders accumulate each (block, stream) Gram over batches in
+//! batch order, so the two paths are bit-identical.
 
 pub mod analysis;
 
@@ -20,13 +31,51 @@ use crate::util::tensor::GramView;
 /// Stream order must match `calib_step`'s argument order (aot.py).
 pub const STREAMS: [&str; 4] = ["qkv", "o", "gu", "down"];
 
+fn stream_index(stream: &str) -> usize {
+    STREAMS.iter().position(|s| *s == stream)
+        .unwrap_or_else(|| panic!("unknown stream {stream}"))
+}
+
+fn stream_width(meta: &ModelMeta, stream: &str) -> usize {
+    if stream == "down" { meta.d_ff } else { meta.d_model }
+}
+
+/// One block's calibration statistics: a Gram matrix [d, d] and a
+/// feature-sum vector [d] per activation stream, in [`STREAMS`] order.
+#[derive(Clone, Debug)]
+pub struct BlockStats {
+    grams: Vec<TensorData>,
+    sums: Vec<TensorData>,
+}
+
+impl BlockStats {
+    pub fn zeros(meta: &ModelMeta) -> BlockStats {
+        let grams = STREAMS.iter().map(|s| {
+            let d = stream_width(meta, s);
+            TensorData::F32 { dims: vec![d, d], data: vec![0.0; d * d] }
+        }).collect();
+        let sums = STREAMS.iter().map(|s| {
+            let d = stream_width(meta, s);
+            TensorData::F32 { dims: vec![d], data: vec![0.0; d] }
+        }).collect();
+        BlockStats { grams, sums }
+    }
+
+    /// Host bytes held by the stat tensors.
+    pub fn byte_size(&self) -> usize {
+        self.grams.iter().chain(self.sums.iter())
+            .map(|t| t.byte_size()).sum()
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct GramStats {
     pub meta: ModelMeta,
-    /// Gram stacks per stream: tensors of dims [n_blocks, d, d].
-    grams: Vec<TensorData>,
-    /// Feature-sum stacks per stream: dims [n_blocks, d].
-    sums: Vec<TensorData>,
+    /// Per-block stat slots; `None` once released (or not yet set, for
+    /// hollow stats the streamed pipeline fills via [`set_block`]).
+    ///
+    /// [`set_block`]: GramStats::set_block
+    blocks: Vec<Option<BlockStats>>,
     /// Total calibration tokens accumulated.
     pub tokens: usize,
     /// Batches consumed.
@@ -35,69 +84,107 @@ pub struct GramStats {
 
 impl GramStats {
     pub fn zeros(meta: &ModelMeta) -> GramStats {
-        let nb = meta.n_blocks;
-        let width = |s: &str| if s == "down" { meta.d_ff }
-                              else { meta.d_model };
-        let grams = STREAMS.iter().map(|s| {
-            let d = width(s);
-            TensorData::F32 { dims: vec![nb, d, d],
-                              data: vec![0.0; nb * d * d] }
-        }).collect();
-        let sums = STREAMS.iter().map(|s| {
-            let d = width(s);
-            TensorData::F32 { dims: vec![nb, d], data: vec![0.0; nb * d] }
-        }).collect();
-        GramStats { meta: meta.clone(), grams, sums, tokens: 0, batches: 0 }
+        let blocks = (0..meta.n_blocks)
+            .map(|_| Some(BlockStats::zeros(meta))).collect();
+        GramStats { meta: meta.clone(), blocks, tokens: 0, batches: 0 }
     }
 
-    fn stream_index(stream: &str) -> usize {
-        STREAMS.iter().position(|s| *s == stream)
-            .unwrap_or_else(|| panic!("unknown stream {stream}"))
+    /// Stats with every block slot empty — the streamed pipeline fills
+    /// blocks one at a time as the prefetch stage produces them.
+    pub fn hollow(meta: &ModelMeta) -> GramStats {
+        GramStats {
+            meta: meta.clone(),
+            blocks: (0..meta.n_blocks).map(|_| None).collect(),
+            tokens: 0,
+            batches: 0,
+        }
     }
 
-    fn stream_width(&self, stream: &str) -> usize {
-        if stream == "down" { self.meta.d_ff } else { self.meta.d_model }
+    /// Install one block's stats (streamed accumulation).
+    pub fn set_block(&mut self, block: usize, stats: BlockStats) {
+        self.blocks[block] = Some(stats);
+    }
+
+    /// Drop one block's stats, returning the host bytes freed.
+    /// Releasing an absent block is a no-op.
+    pub fn release_block(&mut self, block: usize) -> usize {
+        self.blocks[block].take().map_or(0, |s| s.byte_size())
+    }
+
+    pub fn block_resident(&self, block: usize) -> bool {
+        self.blocks[block].is_some()
+    }
+
+    /// Host bytes currently held across all resident blocks.
+    pub fn resident_bytes(&self) -> usize {
+        self.blocks.iter().flatten().map(|s| s.byte_size()).sum()
+    }
+
+    fn block(&self, layer: &PrunableLayer) -> &BlockStats {
+        self.blocks[layer.block].as_ref().unwrap_or_else(|| panic!(
+            "gram stats for block {} are not resident \
+             (released or not yet accumulated)", layer.block))
     }
 
     /// Gram matrix for one prunable layer: a zero-copy [`GramView`]
-    /// into its stream stack (no d*d materialisation — at LLM widths
-    /// the old per-access copy was 16M floats per layer).
+    /// into its block's stream tensor (no d*d materialisation — at LLM
+    /// widths the old per-access copy was 16M floats per layer).
     pub fn gram_for(&self, layer: &PrunableLayer) -> GramView<'_> {
-        let si = Self::stream_index(&layer.stream);
-        let d = self.stream_width(&layer.stream);
+        let si = stream_index(&layer.stream);
+        let d = stream_width(&self.meta, &layer.stream);
         assert_eq!(d, layer.d_in);
-        let data = self.grams[si].as_f32().unwrap();
-        let offset = layer.block * d * d;
-        GramView::new(&data[offset..offset + d * d], d)
+        GramView::new(self.block(layer).grams[si].as_f32().unwrap(), d)
     }
 
-    /// Gram diagonal for one layer, sliced with stride d directly from
-    /// the stream stack (O(d) work — never materialises the d*d Gram).
+    /// Gram diagonal for one layer (O(d) work — never materialises
+    /// the d*d Gram).
     pub fn diag_for(&self, layer: &PrunableLayer) -> Vec<f32> {
-        let si = Self::stream_index(&layer.stream);
-        let d = self.stream_width(&layer.stream);
+        let si = stream_index(&layer.stream);
+        let d = stream_width(&self.meta, &layer.stream);
         assert_eq!(d, layer.d_in);
-        let data = self.grams[si].as_f32().unwrap();
-        let offset = layer.block * d * d;
-        (0..d).map(|i| data[offset + i * d + i]).collect()
+        let data = self.block(layer).grams[si].as_f32().unwrap();
+        (0..d).map(|i| data[i * d + i]).collect()
     }
 
     /// DSnoT feature statistics for one layer (diagonal + feature
     /// sums only; no Gram copy).
     pub fn feature_stats_for(&self, layer: &PrunableLayer) -> FeatureStats {
-        let si = Self::stream_index(&layer.stream);
-        let d = self.stream_width(&layer.stream);
-        let sums = self.sums[si].as_f32().unwrap();
-        let offset = layer.block * d;
-        FeatureStats::from_gram(&self.diag_for(layer),
-                                &sums[offset..offset + d], self.tokens)
+        let si = stream_index(&layer.stream);
+        let sums = self.block(layer).sums[si].as_f32().unwrap();
+        FeatureStats::from_gram(&self.diag_for(layer), sums, self.tokens)
+    }
+}
+
+/// Stacked accumulator driving the resident `calib_step_{cfg}`
+/// artifact: all-block Gram stacks [nb, d, d] threaded through
+/// successive executions, split into per-block [`BlockStats`] at the
+/// end.  The split is a bit-copy — the per-(block, stream)
+/// accumulation order is exactly the pre-split behaviour.
+struct StackedAcc {
+    grams: Vec<TensorData>,
+    sums: Vec<TensorData>,
+}
+
+impl StackedAcc {
+    fn zeros(meta: &ModelMeta) -> StackedAcc {
+        let nb = meta.n_blocks;
+        let grams = STREAMS.iter().map(|s| {
+            let d = stream_width(meta, s);
+            TensorData::F32 { dims: vec![nb, d, d],
+                              data: vec![0.0; nb * d * d] }
+        }).collect();
+        let sums = STREAMS.iter().map(|s| {
+            let d = stream_width(meta, s);
+            TensorData::F32 { dims: vec![nb, d], data: vec![0.0; nb * d] }
+        }).collect();
+        StackedAcc { grams, sums }
     }
 
-    /// Run one calibration batch through the artifact, updating stats.
-    pub fn accumulate_batch(&mut self, rt: &Runtime, store: &ParamStore,
-                            tokens: &TensorData)
-        -> Result<(), RuntimeError> {
-        let artifact = format!("calib_step_{}", self.meta.name);
+    /// Run one calibration batch through `calib_step`, updating the
+    /// stacks.
+    fn accumulate_batch(&mut self, rt: &Runtime, store: &ParamStore,
+                        tokens: &TensorData) -> Result<(), RuntimeError> {
+        let artifact = format!("calib_step_{}", store.meta.name);
         let mut inputs = store.tensor_args();
         inputs.push(tokens.clone());
         inputs.extend(self.grams.iter().cloned());
@@ -111,9 +198,33 @@ impl GramStats {
         for s in self.sums.iter_mut() {
             *s = it.next().unwrap();
         }
-        self.tokens += self.meta.tokens_per_batch();
-        self.batches += 1;
         Ok(())
+    }
+
+    /// Split the stacks into per-block stats.
+    fn into_stats(self, meta: &ModelMeta, tokens: usize, batches: usize)
+        -> GramStats {
+        let nb = meta.n_blocks;
+        let blocks = (0..nb).map(|b| {
+            let grams = STREAMS.iter().enumerate().map(|(si, s)| {
+                let d = stream_width(meta, s);
+                let data = self.grams[si].as_f32().unwrap();
+                TensorData::F32 {
+                    dims: vec![d, d],
+                    data: data[b * d * d..(b + 1) * d * d].to_vec(),
+                }
+            }).collect();
+            let sums = STREAMS.iter().enumerate().map(|(si, s)| {
+                let d = stream_width(meta, s);
+                let data = self.sums[si].as_f32().unwrap();
+                TensorData::F32 {
+                    dims: vec![d],
+                    data: data[b * d..(b + 1) * d].to_vec(),
+                }
+            }).collect();
+            Some(BlockStats { grams, sums })
+        }).collect();
+        GramStats { meta: meta.clone(), blocks, tokens, batches }
     }
 }
 
@@ -122,11 +233,128 @@ impl GramStats {
 pub fn accumulate(rt: &Runtime, store: &ParamStore,
                   batches: &[(TensorData, TensorData)])
     -> Result<GramStats, RuntimeError> {
-    let mut stats = GramStats::zeros(&store.meta);
+    let mut acc = StackedAcc::zeros(&store.meta);
     for (tokens, _) in batches {
-        stats.accumulate_batch(rt, store, tokens)?;
+        acc.accumulate_batch(rt, store, tokens)?;
     }
-    Ok(stats)
+    Ok(acc.into_stats(&store.meta,
+                      batches.len() * store.meta.tokens_per_batch(),
+                      batches.len()))
+}
+
+/// Streamed calibration driver over the `embed_{cfg}` /
+/// `calib_block_{cfg}` artifacts.
+///
+/// Holds one residual-stream tensor per calibration batch and advances
+/// them block by block, so Gram accumulation for block b+1 overlaps
+/// block b's refinement and only O(1) blocks of weights need be
+/// resident (the out-of-core pipeline's prefetch stage).  Per block
+/// the caller can:
+///
+/// * [`accumulate_and_push`]: stats + advance in one forward (one-shot
+///   mode, where calibration is dense everywhere);
+/// * [`accumulate_block`]: stats WITHOUT advancing (sequential mode
+///   peeks a block's dense stats, refines, then pushes masked);
+/// * [`push_block`]: advance without stats (journal-restored blocks,
+///   sequential push with the refined mask applied).
+///
+/// [`accumulate_and_push`]: GramStream::accumulate_and_push
+/// [`accumulate_block`]: GramStream::accumulate_block
+/// [`push_block`]: GramStream::push_block
+pub struct GramStream {
+    meta: ModelMeta,
+    /// Residual stream h ([b*l, d_model]) per calibration batch.
+    hs: Vec<TensorData>,
+    /// Calibration tokens represented by `hs`.
+    pub tokens: usize,
+    /// Calibration batches represented by `hs`.
+    pub batches: usize,
+}
+
+impl GramStream {
+    /// Embed every calibration batch (`embed_{cfg}`), initialising the
+    /// residual streams at the block-0 input.  `tok_emb` is the
+    /// embedding tensor (param index 0) — leased, so the caller can
+    /// release the globals right after.
+    pub fn start(rt: &Runtime, meta: &ModelMeta, tok_emb: &TensorData,
+                 batches: &[(TensorData, TensorData)])
+        -> Result<GramStream, RuntimeError> {
+        let artifact = format!("embed_{}", meta.name);
+        let mut hs = Vec::with_capacity(batches.len());
+        for (tokens, _) in batches {
+            let out = rt.execute(&artifact,
+                                 vec![tok_emb.clone(), tokens.clone()])?;
+            hs.push(out.into_iter().next().expect("embed returns h"));
+        }
+        Ok(GramStream {
+            meta: meta.clone(),
+            hs,
+            tokens: batches.len() * meta.tokens_per_batch(),
+            batches: batches.len(),
+        })
+    }
+
+    /// Host bytes held by the residual streams.
+    pub fn byte_size(&self) -> usize {
+        self.hs.iter().map(|h| h.byte_size()).sum()
+    }
+
+    fn run_block(&mut self, rt: &Runtime, params: &[TensorData],
+                 accum: bool, commit: bool)
+        -> Result<Option<BlockStats>, RuntimeError> {
+        assert_eq!(params.len(), 9,
+                   "calib_block takes the block's nine tensors");
+        let artifact = format!("calib_block_{}", self.meta.name);
+        let mut stats = BlockStats::zeros(&self.meta);
+        let flag = TensorData::scalar_i32(accum as i32);
+        for h in self.hs.iter_mut() {
+            let mut inputs = Vec::with_capacity(19);
+            inputs.extend(params.iter().cloned());
+            inputs.push(h.clone());
+            inputs.push(flag.clone());
+            inputs.extend(stats.grams.iter().cloned());
+            inputs.extend(stats.sums.iter().cloned());
+            let out = rt.execute(&artifact, inputs)?;
+            assert_eq!(out.len(), 9);
+            let mut it = out.into_iter();
+            for g in stats.grams.iter_mut() {
+                *g = it.next().unwrap();
+            }
+            for s in stats.sums.iter_mut() {
+                *s = it.next().unwrap();
+            }
+            let h_out = it.next().unwrap();
+            if commit {
+                *h = h_out;
+            }
+        }
+        Ok(if accum { Some(stats) } else { None })
+    }
+
+    /// Accumulate one block's stats and advance the residual streams
+    /// through it, in a single forward per batch.
+    pub fn accumulate_and_push(&mut self, rt: &Runtime,
+                               params: &[TensorData])
+        -> Result<BlockStats, RuntimeError> {
+        Ok(self.run_block(rt, params, true, true)?
+               .expect("accumulating run returns stats"))
+    }
+
+    /// Accumulate one block's stats from the current residual streams
+    /// without advancing them.
+    pub fn accumulate_block(&mut self, rt: &Runtime,
+                            params: &[TensorData])
+        -> Result<BlockStats, RuntimeError> {
+        Ok(self.run_block(rt, params, true, false)?
+               .expect("accumulating run returns stats"))
+    }
+
+    /// Advance the residual streams through one block without
+    /// accumulating stats.
+    pub fn push_block(&mut self, rt: &Runtime, params: &[TensorData])
+        -> Result<(), RuntimeError> {
+        self.run_block(rt, params, false, true).map(|_| ())
+    }
 }
 
 #[cfg(test)]
@@ -138,11 +366,12 @@ mod tests {
     fn zeros_layout() {
         let meta = tiny_meta();
         let stats = GramStats::zeros(&meta);
-        assert_eq!(stats.grams.len(), 4);
-        assert_eq!(stats.grams[0].dims(),
-                   &[meta.n_blocks, meta.d_model, meta.d_model]);
-        assert_eq!(stats.grams[3].dims(),
-                   &[meta.n_blocks, meta.d_ff, meta.d_ff]);
+        for b in 0..meta.n_blocks {
+            assert!(stats.block_resident(b));
+            let bs = stats.blocks[b].as_ref().unwrap();
+            assert_eq!(bs.grams[0].dims(), &[meta.d_model, meta.d_model]);
+            assert_eq!(bs.grams[3].dims(), &[meta.d_ff, meta.d_ff]);
+        }
         for layer in &meta.prunable {
             let g = stats.gram_for(layer);
             assert_eq!(g.d, layer.d_in);
@@ -155,8 +384,8 @@ mod tests {
         let meta = tiny_meta();
         let mut stats = GramStats::zeros(&meta);
         // Mark block 1's qkv gram with a sentinel.
-        let d = meta.d_model;
-        stats.grams[0].as_f32_mut().unwrap()[d * d] = 42.0;
+        stats.blocks[1].as_mut().unwrap().grams[0]
+            .as_f32_mut().unwrap()[0] = 42.0;
         let l_b0 = meta.prunable.iter()
             .find(|l| l.block == 0 && l.stream == "qkv").unwrap();
         let l_b1 = meta.prunable.iter()
@@ -171,7 +400,8 @@ mod tests {
         let mut stats = GramStats::zeros(&meta);
         // Fill block 0's qkv gram with distinguishable values.
         let d = meta.d_model;
-        for (i, v) in stats.grams[0].as_f32_mut().unwrap()[..d * d]
+        for (i, v) in stats.blocks[0].as_mut().unwrap().grams[0]
+            .as_f32_mut().unwrap()[..d * d]
             .iter_mut()
             .enumerate()
         {
@@ -180,5 +410,25 @@ mod tests {
         let layer = meta.prunable.iter()
             .find(|l| l.block == 0 && l.stream == "qkv").unwrap();
         assert_eq!(stats.diag_for(layer), stats.gram_for(layer).diag());
+    }
+
+    #[test]
+    fn release_and_hollow_accounting() {
+        let meta = tiny_meta();
+        let mut stats = GramStats::zeros(&meta);
+        let per_block = BlockStats::zeros(&meta).byte_size();
+        assert_eq!(stats.resident_bytes(), meta.n_blocks * per_block);
+        let freed = stats.release_block(0);
+        assert_eq!(freed, per_block);
+        assert!(!stats.block_resident(0));
+        assert_eq!(stats.release_block(0), 0);
+        assert_eq!(stats.resident_bytes(),
+                   (meta.n_blocks - 1) * per_block);
+
+        let mut hollow = GramStats::hollow(&meta);
+        assert_eq!(hollow.resident_bytes(), 0);
+        hollow.set_block(1, BlockStats::zeros(&meta));
+        assert!(hollow.block_resident(1) && !hollow.block_resident(0));
+        assert_eq!(hollow.resident_bytes(), per_block);
     }
 }

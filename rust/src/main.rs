@@ -16,7 +16,8 @@ use sparseswaps::coordinator::{
 };
 use sparseswaps::data::{Dataset, Split};
 use sparseswaps::eval::{perplexity, zeroshot};
-use sparseswaps::model::{checkpoint, ParamStore};
+use sparseswaps::model::{checkpoint, ParamStore, StreamingStore,
+                         WeightStore};
 use sparseswaps::pruning::Criterion;
 use sparseswaps::report;
 use sparseswaps::runtime::{Runtime, RuntimeOptions, RuntimePool};
@@ -199,6 +200,14 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         .flag("seed", "42", "dataset seed")
         .bool_flag("oneshot", "single dense calibration pass \
                               (default: sequential per block)")
+        .bool_flag("stream-weights", "stream weights per block from \
+                                      the checkpoint instead of \
+                                      loading the whole model \
+                                      (out-of-core; masks are \
+                                      bit-identical)")
+        .flag("host-mem-budget", "0", "host memory budget for \
+                                       streamed weights in MiB \
+                                       (0 = unlimited)")
         .flag("artifacts", "artifacts", "artifact directory")
         .flag("out", "runs/pruned.ssck", "output checkpoint (with masks)")
         .pool_flags("0")
@@ -219,7 +228,6 @@ fn cmd_prune(argv: &[String]) -> CliResult {
     };
     let rt = start_pool(args.get("artifacts"), devices, opts, &jf)?;
     let meta = rt.manifest().config(args.get("config"))?.clone();
-    let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;
     let ds = Dataset::build(&meta, args.parse_num("seed")?);
     let spec = MaskSpec {
         criterion: parse_criterion(args.get("criterion"))?,
@@ -236,9 +244,25 @@ fn cmd_prune(argv: &[String]) -> CliResult {
         ..RunOptions::from_flags(&pf, &jf)
     };
     let t0 = std::time::Instant::now();
-    let mut session = PruneSession::new(&rt, &store, &ds, run);
-    let (masks, rep) = session.prune(&spec)?;
-    checkpoint::save(args.get("out"), &store, Some(&masks))?;
+    let streaming = args.get_bool("stream-weights");
+    let budget = args.parse_num::<usize>("host-mem-budget")?
+        .saturating_mul(1 << 20);
+    let (masks, rep, mem) = if streaming {
+        let store = StreamingStore::open(args.get("checkpoint"), &meta,
+                                         budget)?;
+        let mut session = PruneSession::new(&rt, &store, &ds, run);
+        let (masks, rep) = session.prune(&spec)?;
+        checkpoint::save_streaming(args.get("out"), &store,
+                                   Some(&masks))?;
+        (masks, rep, store.stats())
+    } else {
+        let (store, _) = checkpoint::load(args.get("checkpoint"),
+                                          &meta)?;
+        let mut session = PruneSession::new(&rt, &store, &ds, run);
+        let (masks, rep) = session.prune(&spec)?;
+        checkpoint::save(args.get("out"), &store, Some(&masks))?;
+        (masks, rep, store.stats())
+    };
     println!("pruned {} [{} warmstart, {} refiner, {}, {} kernels]:",
              meta.name, spec.criterion.name(), spec.refiner.label(),
              spec.pattern_kind.label(),
@@ -252,6 +276,12 @@ fn cmd_prune(argv: &[String]) -> CliResult {
     println!("  time: {:.1}s (calib {:.1}s, refine {:.1}s); saved {}",
              t0.elapsed().as_secs_f64(), rep.calib_seconds,
              rep.refine_seconds, args.get("out"));
+    let mib = |b: usize| b as f64 / (1u64 << 20) as f64;
+    println!("  host memory [{}]: {:.1} MiB peak weights, {} tensor \
+              loads ({:.1} MiB read from disk), {} block releases",
+             if streaming { "streamed" } else { "resident" },
+             mib(mem.peak_bytes), mem.loads, mib(mem.loaded_bytes),
+             mem.releases);
     if !rep.snapshots.is_empty() {
         println!("  snapshots: {} checkpoint masks captured at {:?}",
                  rep.snapshots.len(),

@@ -6,17 +6,31 @@
 //!     u32 ndims | u64 dims[] | payload bytes
 //!   u32 n_masks  | per mask: u32 rows | u32 cols | payload f32
 //!   u32 crc32 of everything before it
+//!
+//! Two access paths share the format:
+//!   * [`save`]/[`load`] materialise a whole [`ParamStore`] (resident
+//!     path).
+//!   * [`CheckpointReader`] validates the file once (chunked CRC +
+//!     header scan, O(chunk) memory) and then serves individual
+//!     tensors by byte offset — the backing for
+//!     `model::weight_store::StreamingStore`.  [`save_streaming`]
+//!     writes the identical byte layout from any
+//!     [`WeightStore`](crate::model::weight_store::WeightStore),
+//!     leasing one block at a time.
 
-use std::io::{Read, Write};
-use std::path::Path;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 use crate::model::store::{MaskSet, ParamStore};
+use crate::model::weight_store::WeightStore;
 use crate::runtime::manifest::ModelMeta;
 use crate::runtime::tensor_data::TensorData;
 use crate::util::tensor::Matrix;
 
 const MAGIC: &[u8; 4] = b"SSCK";
 const VERSION: u32 = 1;
+/// Chunk size for the streaming CRC pass (bounds reader memory).
+const CRC_CHUNK: usize = 1 << 20;
 
 #[derive(Debug)]
 pub enum CheckpointError {
@@ -62,32 +76,194 @@ fn crc32_table() -> [u32; 256] {
     table
 }
 
-pub fn crc32(data: &[u8]) -> u32 {
+/// Incremental CRC32 state update: feed chunks in order, starting from
+/// [`CRC_INIT`]; finalise with `^ CRC_INIT`.
+fn crc32_update(mut state: u32, data: &[u8]) -> u32 {
     static TABLE: std::sync::OnceLock<[u32; 256]> =
         std::sync::OnceLock::new();
     let table = TABLE.get_or_init(crc32_table);
-    let mut c = 0xFFFF_FFFFu32;
     for &b in data {
-        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        state = table[((state ^ b as u32) & 0xFF) as usize]
+            ^ (state >> 8);
     }
-    c ^ 0xFFFF_FFFF
+    state
+}
+
+const CRC_INIT: u32 = 0xFFFF_FFFF;
+
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_update(CRC_INIT, data) ^ CRC_INIT
 }
 
 // --- serialisation ----------------------------------------------------------
 
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
+/// Write sink that folds every byte into a running CRC32 so the
+/// trailing checksum never needs the whole file in memory.
+struct CrcWriter<W: Write> {
+    sink: W,
+    crc: u32,
 }
 
-impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
-        if self.pos + n > self.buf.len() {
-            return Err(CheckpointError::Format("truncated file".into()));
+impl<W: Write> CrcWriter<W> {
+    fn new(sink: W) -> CrcWriter<W> {
+        CrcWriter { sink, crc: CRC_INIT }
+    }
+
+    fn bytes(&mut self, data: &[u8]) -> Result<(), CheckpointError> {
+        self.crc = crc32_update(self.crc, data);
+        self.sink.write_all(data)?;
+        Ok(())
+    }
+
+    fn u8(&mut self, v: u8) -> Result<(), CheckpointError> {
+        self.bytes(&[v])
+    }
+
+    fn u32(&mut self, v: u32) -> Result<(), CheckpointError> {
+        self.bytes(&v.to_le_bytes())
+    }
+
+    fn string(&mut self, s: &str) -> Result<(), CheckpointError> {
+        self.u32(s.len() as u32)?;
+        self.bytes(s.as_bytes())
+    }
+
+    /// Append the checksum (not itself checksummed) and flush.
+    fn finish(mut self) -> Result<(), CheckpointError> {
+        let crc = self.crc ^ CRC_INIT;
+        self.sink.write_all(&crc.to_le_bytes())?;
+        self.sink.flush()?;
+        Ok(())
+    }
+}
+
+fn f32_bytes(data: &[f32]) -> &[u8] {
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    }
+}
+
+fn tensor_bytes(t: &TensorData) -> (&[usize], u8, &[u8]) {
+    match t {
+        TensorData::F32 { dims, data } => (dims, 0, f32_bytes(data)),
+        TensorData::I32 { dims, data } => (dims, 1, unsafe {
+            std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                       data.len() * 4)
+        }),
+    }
+}
+
+fn write_tensor<W: Write>(w: &mut CrcWriter<W>, name: &str,
+                          t: &TensorData) -> Result<(), CheckpointError> {
+    w.string(name)?;
+    let (dims, dtype, payload) = tensor_bytes(t);
+    w.u8(dtype)?;
+    w.u32(dims.len() as u32)?;
+    for &d in dims {
+        w.bytes(&(d as u64).to_le_bytes())?;
+    }
+    w.bytes(payload)
+}
+
+fn write_masks<W: Write>(w: &mut CrcWriter<W>, masks: Option<&MaskSet>)
+    -> Result<(), CheckpointError> {
+    match masks {
+        Some(ms) => {
+            w.u32(ms.masks.len() as u32)?;
+            for m in &ms.masks {
+                w.u32(m.rows as u32)?;
+                w.u32(m.cols as u32)?;
+                w.bytes(f32_bytes(&m.data))?;
+            }
         }
-        let s = &self.buf[self.pos..self.pos + n];
+        None => w.u32(0)?,
+    }
+    Ok(())
+}
+
+fn open_writer(path: &Path)
+    -> Result<CrcWriter<BufWriter<std::fs::File>>, CheckpointError> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    Ok(CrcWriter::new(BufWriter::new(std::fs::File::create(path)?)))
+}
+
+pub fn save(path: impl AsRef<Path>, store: &ParamStore,
+            masks: Option<&MaskSet>) -> Result<(), CheckpointError> {
+    let mut w = open_writer(path.as_ref())?;
+    w.bytes(MAGIC)?;
+    w.u32(VERSION)?;
+    w.string(&store.meta.name)?;
+    w.u32(store.tensors.len() as u32)?;
+    for ((name, _), t) in store.meta.params.iter().zip(&store.tensors) {
+        write_tensor(&mut w, name, t)?;
+    }
+    write_masks(&mut w, masks)?;
+    w.finish()
+}
+
+/// [`save`] through the block-lease interface: one block of tensors is
+/// resident at a time, so an out-of-core store round-trips to disk
+/// without ever materialising the full parameter set.  Byte-identical
+/// to [`save`] of the equivalent resident store.
+pub fn save_streaming(path: impl AsRef<Path>, store: &dyn WeightStore,
+                      masks: Option<&MaskSet>)
+    -> Result<(), CheckpointError> {
+    let meta = store.meta().clone();
+    let mut w = open_writer(path.as_ref())?;
+    w.bytes(MAGIC)?;
+    w.u32(VERSION)?;
+    w.string(&meta.name)?;
+    w.u32(meta.params.len() as u32)?;
+    let globals = store.lease_globals()
+        .map_err(|e| CheckpointError::Format(e.to_string()))?;
+    let i_final_norm = 1 + meta.n_blocks * 9;
+    write_tensor(&mut w, &meta.params[0].0, globals.tensor(0))?;
+    for b in 0..meta.n_blocks {
+        let lease = store.lease_block(b)
+            .map_err(|e| CheckpointError::Format(e.to_string()))?;
+        for i in (1 + b * 9)..(1 + (b + 1) * 9) {
+            write_tensor(&mut w, &meta.params[i].0, lease.tensor(i))?;
+        }
+        drop(lease);
+        store.release_block(b);
+    }
+    for i in [i_final_norm, i_final_norm + 1] {
+        write_tensor(&mut w, &meta.params[i].0, globals.tensor(i))?;
+    }
+    drop(globals);
+    store.release_globals();
+    write_masks(&mut w, masks)?;
+    w.finish()
+}
+
+// --- lazy reader ------------------------------------------------------------
+
+/// Buffered cursor over the checkpoint file that tracks its absolute
+/// position, for the header scan.
+struct FileCursor {
+    f: BufReader<std::fs::File>,
+    pos: u64,
+}
+
+impl FileCursor {
+    fn take(&mut self, n: usize) -> Result<Vec<u8>, CheckpointError> {
+        let mut buf = vec![0u8; n];
+        self.f.read_exact(&mut buf).map_err(|e| match e.kind() {
+            std::io::ErrorKind::UnexpectedEof =>
+                CheckpointError::Format("truncated file".into()),
+            _ => CheckpointError::Io(e),
+        })?;
+        self.pos += n as u64;
+        Ok(buf)
+    }
+
+    fn skip(&mut self, n: u64) -> Result<(), CheckpointError> {
+        self.f.seek_relative(n as i64)?;
         self.pos += n;
-        Ok(s)
+        Ok(())
     }
 
     fn u32(&mut self) -> Result<u32, CheckpointError> {
@@ -100,170 +276,189 @@ impl<'a> Cursor<'a> {
 
     fn string(&mut self) -> Result<String, CheckpointError> {
         let n = self.u32()? as usize;
-        String::from_utf8(self.take(n)?.to_vec())
+        String::from_utf8(self.take(n)?)
             .map_err(|e| CheckpointError::Format(e.to_string()))
     }
 }
 
-fn push_u32(buf: &mut Vec<u8>, v: u32) {
-    buf.extend_from_slice(&v.to_le_bytes());
+fn f32_from_le(payload: &[u8]) -> Vec<f32> {
+    payload.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
 }
 
-fn push_string(buf: &mut Vec<u8>, s: &str) {
-    push_u32(buf, s.len() as u32);
-    buf.extend_from_slice(s.as_bytes());
+/// Validated handle on a `.ssck` file that loads tensors on demand.
+///
+/// `open` makes two bounded-memory passes: a chunked CRC sweep over the
+/// whole file, then a header scan that records each tensor's payload
+/// offset (skipping the payload bytes) and eagerly decodes the small
+/// trailing mask section.  [`load_tensor`](Self::load_tensor) then
+/// reads exactly one tensor's bytes per call, so peak reader memory is
+/// one tensor, not one checkpoint.
+pub struct CheckpointReader {
+    path: PathBuf,
+    pub meta: ModelMeta,
+    /// (payload byte offset, dtype tag) per manifest tensor.
+    offsets: Vec<(u64, u8)>,
+    masks: Option<MaskSet>,
 }
 
-fn tensor_bytes(t: &TensorData) -> (&[usize], u8, &[u8]) {
-    match t {
-        TensorData::F32 { dims, data } => (dims, 0, unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8,
-                                       data.len() * 4)
-        }),
-        TensorData::I32 { dims, data } => (dims, 1, unsafe {
-            std::slice::from_raw_parts(data.as_ptr() as *const u8,
-                                       data.len() * 4)
-        }),
-    }
-}
-
-pub fn save(path: impl AsRef<Path>, store: &ParamStore,
-            masks: Option<&MaskSet>) -> Result<(), CheckpointError> {
-    let mut buf: Vec<u8> = Vec::new();
-    buf.extend_from_slice(MAGIC);
-    push_u32(&mut buf, VERSION);
-    push_string(&mut buf, &store.meta.name);
-    push_u32(&mut buf, store.tensors.len() as u32);
-    for ((name, _), t) in store.meta.params.iter().zip(&store.tensors) {
-        push_string(&mut buf, name);
-        let (dims, dtype, payload) = tensor_bytes(t);
-        buf.push(dtype);
-        push_u32(&mut buf, dims.len() as u32);
-        for &d in dims {
-            buf.extend_from_slice(&(d as u64).to_le_bytes());
+impl CheckpointReader {
+    pub fn open(path: impl AsRef<Path>, meta: &ModelMeta)
+        -> Result<CheckpointReader, CheckpointError> {
+        let path = path.as_ref().to_path_buf();
+        let mut f = std::fs::File::open(&path)?;
+        let len = f.metadata()?.len();
+        if len < 8 {
+            return Err(CheckpointError::Format("truncated file".into()));
         }
-        buf.extend_from_slice(payload);
-    }
-    match masks {
-        Some(ms) => {
-            push_u32(&mut buf, ms.masks.len() as u32);
-            for m in &ms.masks {
-                push_u32(&mut buf, m.rows as u32);
-                push_u32(&mut buf, m.cols as u32);
-                buf.extend_from_slice(unsafe {
-                    std::slice::from_raw_parts(
-                        m.data.as_ptr() as *const u8, m.data.len() * 4)
-                });
+
+        // Pass 1: chunked CRC over everything before the trailing u32.
+        let body = len - 4;
+        let mut state = CRC_INIT;
+        let mut remaining = body;
+        let mut chunk = vec![0u8; CRC_CHUNK];
+        while remaining > 0 {
+            let here = remaining.min(CRC_CHUNK as u64) as usize;
+            f.read_exact(&mut chunk[..here])?;
+            state = crc32_update(state, &chunk[..here]);
+            remaining -= here as u64;
+        }
+        let mut crc_bytes = [0u8; 4];
+        f.read_exact(&mut crc_bytes)?;
+        let stored_crc = u32::from_le_bytes(crc_bytes);
+        let actual = state ^ CRC_INIT;
+        if stored_crc != actual {
+            return Err(CheckpointError::Format(format!(
+                "crc mismatch: stored {stored_crc:#x}, \
+                 computed {actual:#x}")));
+        }
+
+        // Pass 2: header scan.
+        f.seek(SeekFrom::Start(0))?;
+        let mut cur = FileCursor { f: BufReader::new(f), pos: 0 };
+        if &cur.take(4)?[..] != MAGIC {
+            return Err(CheckpointError::Format("bad magic".into()));
+        }
+        let version = cur.u32()?;
+        if version != VERSION {
+            return Err(CheckpointError::Format(format!(
+                "unsupported version {version}")));
+        }
+        let cfg_name = cur.string()?;
+        if cfg_name != meta.name {
+            return Err(CheckpointError::Format(format!(
+                "checkpoint is for config {cfg_name:?}, expected {:?}",
+                meta.name)));
+        }
+        let n_tensors = cur.u32()? as usize;
+        if n_tensors != meta.params.len() {
+            return Err(CheckpointError::Format(format!(
+                "checkpoint has {n_tensors} tensors, manifest \
+                 expects {}", meta.params.len())));
+        }
+        let mut offsets = Vec::with_capacity(n_tensors);
+        for (name, want_dims) in &meta.params {
+            let got_name = cur.string()?;
+            if &got_name != name {
+                return Err(CheckpointError::Format(format!(
+                    "tensor order mismatch: got {got_name:?}, \
+                     want {name:?}")));
             }
+            let dtype = cur.take(1)?[0];
+            if dtype > 1 {
+                return Err(CheckpointError::Format(format!(
+                    "unknown dtype tag {dtype}")));
+            }
+            let ndims = cur.u32()? as usize;
+            let mut dims = Vec::with_capacity(ndims);
+            for _ in 0..ndims {
+                dims.push(cur.u64()? as usize);
+            }
+            if &dims != want_dims {
+                return Err(CheckpointError::Format(format!(
+                    "{name}: dims {dims:?} != manifest {want_dims:?}")));
+            }
+            let n: usize = dims.iter().product();
+            offsets.push((cur.pos, dtype));
+            if cur.pos + (n * 4) as u64 > body {
+                return Err(CheckpointError::Format(
+                    "truncated file".into()));
+            }
+            cur.skip((n * 4) as u64)?;
         }
-        None => push_u32(&mut buf, 0),
+        let n_masks = cur.u32()? as usize;
+        let masks = if n_masks > 0 {
+            if n_masks != meta.prunable.len() {
+                return Err(CheckpointError::Format(format!(
+                    "checkpoint has {n_masks} masks, expected {}",
+                    meta.prunable.len())));
+            }
+            let mut ms = Vec::with_capacity(n_masks);
+            for layer in &meta.prunable {
+                let rows = cur.u32()? as usize;
+                let cols = cur.u32()? as usize;
+                if (rows, cols) != (layer.d_out, layer.d_in) {
+                    return Err(CheckpointError::Format(format!(
+                        "mask shape {rows}x{cols} != layer {}x{}",
+                        layer.d_out, layer.d_in)));
+                }
+                let payload = cur.take(rows * cols * 4)?;
+                ms.push(Matrix::from_vec(rows, cols,
+                                         f32_from_le(&payload)));
+            }
+            Some(MaskSet { masks: ms })
+        } else {
+            None
+        };
+        Ok(CheckpointReader {
+            path,
+            meta: meta.clone(),
+            offsets,
+            masks,
+        })
     }
-    let crc = crc32(&buf);
-    push_u32(&mut buf, crc);
-    if let Some(dir) = path.as_ref().parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    let mut f = std::fs::File::create(path)?;
-    f.write_all(&buf)?;
-    Ok(())
-}
 
-pub fn load(path: impl AsRef<Path>, meta: &ModelMeta)
-    -> Result<(ParamStore, Option<MaskSet>), CheckpointError> {
-    let mut buf = Vec::new();
-    std::fs::File::open(path)?.read_to_end(&mut buf)?;
-    if buf.len() < 8 || &buf[..4] != MAGIC {
-        return Err(CheckpointError::Format("bad magic".into()));
+    /// Masks stored alongside the params, decoded eagerly at `open`.
+    pub fn masks(&self) -> Option<&MaskSet> {
+        self.masks.as_ref()
     }
-    let stored_crc = u32::from_le_bytes(
-        buf[buf.len() - 4..].try_into().unwrap());
-    let actual = crc32(&buf[..buf.len() - 4]);
-    if stored_crc != actual {
-        return Err(CheckpointError::Format(format!(
-            "crc mismatch: stored {stored_crc:#x}, computed {actual:#x}")));
+
+    pub fn take_masks(&mut self) -> Option<MaskSet> {
+        self.masks.take()
     }
-    let mut cur = Cursor { buf: &buf[..buf.len() - 4], pos: 4 };
-    let version = cur.u32()?;
-    if version != VERSION {
-        return Err(CheckpointError::Format(format!(
-            "unsupported version {version}")));
-    }
-    let cfg_name = cur.string()?;
-    if cfg_name != meta.name {
-        return Err(CheckpointError::Format(format!(
-            "checkpoint is for config {cfg_name:?}, expected {:?}",
-            meta.name)));
-    }
-    let n_tensors = cur.u32()? as usize;
-    if n_tensors != meta.params.len() {
-        return Err(CheckpointError::Format(format!(
-            "checkpoint has {n_tensors} tensors, manifest expects {}",
-            meta.params.len())));
-    }
-    let mut tensors = Vec::with_capacity(n_tensors);
-    for (name, want_dims) in &meta.params {
-        let got_name = cur.string()?;
-        if &got_name != name {
-            return Err(CheckpointError::Format(format!(
-                "tensor order mismatch: got {got_name:?}, want {name:?}")));
-        }
-        let dtype = cur.take(1)?[0];
-        let ndims = cur.u32()? as usize;
-        let mut dims = Vec::with_capacity(ndims);
-        for _ in 0..ndims {
-            dims.push(cur.u64()? as usize);
-        }
-        if &dims != want_dims {
-            return Err(CheckpointError::Format(format!(
-                "{name}: dims {dims:?} != manifest {want_dims:?}")));
-        }
+
+    /// Read one tensor's payload from disk.  Stateless (opens its own
+    /// handle), so concurrent loads from different threads are safe.
+    pub fn load_tensor(&self, param_index: usize)
+        -> Result<TensorData, CheckpointError> {
+        let (offset, dtype) = self.offsets[param_index];
+        let dims = self.meta.params[param_index].1.clone();
         let n: usize = dims.iter().product();
-        let payload = cur.take(n * 4)?;
-        let tensor = match dtype {
-            0 => TensorData::F32 {
-                dims,
-                data: payload.chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect(),
-            },
-            1 => TensorData::I32 {
+        let mut f = std::fs::File::open(&self.path)?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut payload = vec![0u8; n * 4];
+        f.read_exact(&mut payload)?;
+        Ok(match dtype {
+            0 => TensorData::F32 { dims, data: f32_from_le(&payload) },
+            _ => TensorData::I32 {
                 dims,
                 data: payload.chunks_exact(4)
                     .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
                     .collect(),
             },
-            other => return Err(CheckpointError::Format(format!(
-                "unknown dtype tag {other}"))),
-        };
-        tensors.push(tensor);
+        })
     }
-    let n_masks = cur.u32()? as usize;
-    let masks = if n_masks > 0 {
-        if n_masks != meta.prunable.len() {
-            return Err(CheckpointError::Format(format!(
-                "checkpoint has {n_masks} masks, expected {}",
-                meta.prunable.len())));
-        }
-        let mut ms = Vec::with_capacity(n_masks);
-        for layer in &meta.prunable {
-            let rows = cur.u32()? as usize;
-            let cols = cur.u32()? as usize;
-            if (rows, cols) != (layer.d_out, layer.d_in) {
-                return Err(CheckpointError::Format(format!(
-                    "mask shape {rows}x{cols} != layer {}x{}",
-                    layer.d_out, layer.d_in)));
-            }
-            let payload = cur.take(rows * cols * 4)?;
-            ms.push(Matrix::from_vec(rows, cols,
-                payload.chunks_exact(4)
-                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-                    .collect()));
-        }
-        Some(MaskSet { masks: ms })
-    } else {
-        None
-    };
-    Ok((ParamStore { meta: meta.clone(), tensors }, masks))
+}
+
+pub fn load(path: impl AsRef<Path>, meta: &ModelMeta)
+    -> Result<(ParamStore, Option<MaskSet>), CheckpointError> {
+    let mut reader = CheckpointReader::open(path, meta)?;
+    let tensors = (0..meta.params.len())
+        .map(|i| reader.load_tensor(i))
+        .collect::<Result<Vec<_>, _>>()?;
+    let masks = reader.take_masks();
+    Ok((ParamStore::from_tensors(meta, tensors), masks))
 }
 
 #[cfg(test)]
@@ -277,6 +472,13 @@ mod tests {
         assert_eq!(crc32(b""), 0);
         assert_eq!(crc32(b"123456789"), 0xCBF43926);
         assert_eq!(crc32(b"hello"), 0x3610A686);
+        // Incremental chunked update matches the one-shot digest.
+        let data = b"incremental crc must chunk cleanly";
+        let mut state = CRC_INIT;
+        for chunk in data.chunks(7) {
+            state = crc32_update(state, chunk);
+        }
+        assert_eq!(state ^ CRC_INIT, crc32(data));
     }
 
     #[test]
@@ -300,7 +502,7 @@ mod tests {
         let mut masks = MaskSet::all_ones(&meta);
         for (i, layer) in meta.prunable.iter().enumerate() {
             let w = store.weight(layer);
-            let scores = crate::pruning::saliency::magnitude(&w);
+            let scores = crate::pruning::saliency::magnitude(w);
             masks.masks[i] = mask_from_scores(
                 &scores, Pattern::PerRow { keep: layer.d_in / 2 });
         }
@@ -339,5 +541,38 @@ mod tests {
         other.name = "other".into();
         assert!(load(&path, &other).is_err());
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn reader_serves_single_tensors() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 5);
+        let path = std::env::temp_dir().join("ssck_test_reader.ssck");
+        save(&path, &store, None).unwrap();
+        let reader = CheckpointReader::open(&path, &meta).unwrap();
+        assert!(reader.masks().is_none());
+        // Out-of-order single-tensor loads round-trip exactly.
+        for i in (0..meta.params.len()).rev() {
+            let t = reader.load_tensor(i).unwrap();
+            assert_eq!(&t, store.tensors[i].as_ref(),
+                       "tensor {i} mismatch");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn save_streaming_is_byte_identical() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 5);
+        let mut masks = MaskSet::all_ones(&meta);
+        masks.masks[0].data.fill(0.0);
+        let p_res = std::env::temp_dir().join("ssck_test_res.ssck");
+        let p_str = std::env::temp_dir().join("ssck_test_str.ssck");
+        save(&p_res, &store, Some(&masks)).unwrap();
+        save_streaming(&p_str, &store, Some(&masks)).unwrap();
+        assert_eq!(std::fs::read(&p_res).unwrap(),
+                   std::fs::read(&p_str).unwrap());
+        std::fs::remove_file(p_res).ok();
+        std::fs::remove_file(p_str).ok();
     }
 }

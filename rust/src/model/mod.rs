@@ -1,8 +1,12 @@
 //! Model-side substrates: the flat parameter store the artifacts
-//! consume, checkpoint io, and shared test fixtures.
+//! consume, block-granular weight leasing, checkpoint io, and shared
+//! test fixtures.
 
 pub mod checkpoint;
 pub mod store;
 pub mod testutil;
+pub mod weight_store;
 
 pub use store::{MaskSet, ParamStore};
+pub use weight_store::{BlockLease, ResidentStore, StoreError,
+                       StoreStats, StreamingStore, WeightStore};

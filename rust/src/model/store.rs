@@ -1,16 +1,25 @@
 //! Parameter store: the flat, manifest-ordered list of model tensors the
 //! HLO artifacts consume, plus typed access to prunable weight matrices.
+//!
+//! Tensors are held behind `Arc` so [`ParamStore::masked`] is
+//! copy-on-write: only the prunable weights it actually zeroes are
+//! duplicated, the norms / embeddings / head stay shared with the
+//! source store.  [`ParamStore::weight`] hands out a zero-copy
+//! [`MatrixView`] over the stored payload.
+
+use std::sync::Arc;
 
 use crate::runtime::manifest::{ModelMeta, PrunableLayer};
 use crate::runtime::tensor_data::TensorData;
 use crate::util::prng::Rng;
-use crate::util::tensor::Matrix;
+use crate::util::tensor::{Matrix, MatrixView};
 
 #[derive(Clone, Debug)]
 pub struct ParamStore {
     pub meta: ModelMeta,
-    /// One tensor per manifest `params` entry, same order.
-    pub tensors: Vec<TensorData>,
+    /// One tensor per manifest `params` entry, same order.  `Arc` so
+    /// masking / leasing share unchanged tensors instead of cloning.
+    pub tensors: Vec<Arc<TensorData>>,
 }
 
 impl ParamStore {
@@ -23,15 +32,18 @@ impl ParamStore {
         let tensors = meta.params.iter().map(|(name, dims)| {
             let n: usize = dims.iter().product();
             if name.ends_with("_norm") {
-                TensorData::F32 { dims: dims.clone(), data: vec![1.0; n] }
+                Arc::new(TensorData::F32 {
+                    dims: dims.clone(),
+                    data: vec![1.0; n],
+                })
             } else {
                 let fan_in = *dims.last().unwrap() as f32;
                 let scale = fan_in.powf(-0.5);
-                TensorData::F32 {
+                Arc::new(TensorData::F32 {
                     dims: dims.clone(),
                     data: (0..n).map(|_| rng.gaussian_f32() * scale)
                         .collect(),
-                }
+                })
             }
         }).collect();
         ParamStore { meta: meta.clone(), tensors }
@@ -40,45 +52,64 @@ impl ParamStore {
     pub fn zeros_like(meta: &ModelMeta) -> ParamStore {
         let tensors = meta.params.iter().map(|(_, dims)| {
             let n: usize = dims.iter().product();
-            TensorData::F32 { dims: dims.clone(), data: vec![0.0; n] }
+            Arc::new(TensorData::F32 {
+                dims: dims.clone(),
+                data: vec![0.0; n],
+            })
         }).collect();
         ParamStore { meta: meta.clone(), tensors }
+    }
+
+    /// Rebuild a store from owned tensors (manifest order).
+    pub fn from_tensors(meta: &ModelMeta, tensors: Vec<TensorData>)
+        -> ParamStore {
+        ParamStore {
+            meta: meta.clone(),
+            tensors: tensors.into_iter().map(Arc::new).collect(),
+        }
     }
 
     pub fn total_elements(&self) -> usize {
         self.tensors.iter().map(|t| t.element_count()).sum()
     }
 
-    /// Weight matrix of a prunable layer ([d_out, d_in] paper layout).
-    pub fn weight(&self, layer: &PrunableLayer) -> Matrix {
+    /// Zero-copy weight matrix view of a prunable layer ([d_out, d_in]
+    /// paper layout).
+    pub fn weight(&self, layer: &PrunableLayer) -> MatrixView<'_> {
         let t = &self.tensors[layer.param_index];
-        let data = t.as_f32().expect("weights are f32").to_vec();
-        Matrix::from_vec(layer.d_out, layer.d_in, data)
+        MatrixView::new(t.as_f32().expect("weights are f32"),
+                        layer.d_out, layer.d_in)
     }
 
     pub fn set_weight(&mut self, layer: &PrunableLayer, w: &Matrix) {
         assert_eq!((w.rows, w.cols), (layer.d_out, layer.d_in));
-        let t = &mut self.tensors[layer.param_index];
+        let t = Arc::make_mut(&mut self.tensors[layer.param_index]);
         t.as_f32_mut().expect("weights are f32")
             .copy_from_slice(&w.data);
     }
 
     /// A copy of the store with every prunable weight masked (W ⊙ M).
+    /// Copy-on-write: only the prunable tensors are duplicated, every
+    /// other tensor is shared with `self`.
     pub fn masked(&self, masks: &MaskSet) -> ParamStore {
-        let mut out = self.clone();
+        let mut tensors = self.tensors.clone();
         for (layer, mask) in self.meta.prunable.iter().zip(&masks.masks) {
-            let t = &mut out.tensors[layer.param_index];
-            let data = t.as_f32_mut().unwrap();
-            for (v, &m) in data.iter_mut().zip(&mask.data) {
-                *v *= m;
-            }
+            let src = self.tensors[layer.param_index]
+                .as_f32().expect("weights are f32");
+            let data: Vec<f32> = src.iter().zip(&mask.data)
+                .map(|(&v, &m)| v * m)
+                .collect();
+            tensors[layer.param_index] = Arc::new(TensorData::F32 {
+                dims: self.tensors[layer.param_index].dims().to_vec(),
+                data,
+            });
         }
-        out
+        ParamStore { meta: self.meta.clone(), tensors }
     }
 
     /// Flat clone of all tensors (artifact argument prefix).
     pub fn tensor_args(&self) -> Vec<TensorData> {
-        self.tensors.clone()
+        self.tensors.iter().map(|t| (**t).clone()).collect()
     }
 }
 
@@ -139,7 +170,7 @@ mod tests {
         let meta = tiny_meta();
         let mut store = ParamStore::init(&meta, 3);
         let layer = meta.prunable[0].clone();
-        let mut w = store.weight(&layer);
+        let mut w = store.weight(&layer).to_matrix();
         w.set(0, 0, 42.0);
         store.set_weight(&layer, &w);
         assert_eq!(store.weight(&layer).at(0, 0), 42.0);
@@ -153,11 +184,31 @@ mod tests {
         masks.masks[0].data.fill(0.0);
         let masked = store.masked(&masks);
         let layer = &meta.prunable[0];
-        assert!(masked.weight(layer).data.iter().all(|&v| v == 0.0));
+        assert!(masked.weight(layer).as_slice().iter()
+                .all(|&v| v == 0.0));
         // Other layers untouched.
         let other = &meta.prunable[1];
-        assert_eq!(masked.weight(other).data, store.weight(other).data);
+        assert_eq!(masked.weight(other).as_slice(),
+                   store.weight(other).as_slice());
         assert!(masks.overall_sparsity() > 0.0);
+    }
+
+    #[test]
+    fn masked_is_copy_on_write() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 3);
+        let masks = MaskSet::all_ones(&meta);
+        let masked = store.masked(&masks);
+        let prunable: std::collections::BTreeSet<usize> =
+            meta.prunable.iter().map(|l| l.param_index).collect();
+        for (i, (a, b)) in
+            store.tensors.iter().zip(&masked.tensors).enumerate() {
+            if prunable.contains(&i) {
+                assert!(!Arc::ptr_eq(a, b), "tensor {i} must be copied");
+            } else {
+                assert!(Arc::ptr_eq(a, b), "tensor {i} must be shared");
+            }
+        }
     }
 
     #[test]

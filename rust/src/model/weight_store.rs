@@ -1,0 +1,506 @@
+//! Block-granular weight access: the [`WeightStore`] trait.
+//!
+//! The paper's layer-wise mask selection only ever needs one
+//! transformer block's weights resident at a time, so the pipeline
+//! talks to parameters through block **leases** instead of a flat
+//! in-memory tensor list:
+//!
+//! * [`ResidentStore`] (= [`ParamStore`]) serves leases as free `Arc`
+//!   clones of its in-memory tensors — the behaviour every existing
+//!   caller had, unchanged.
+//! * [`StreamingStore`] backs tensors with the on-disk `.ssck`
+//!   checkpoint: a lease faults the block's nine tensors in from disk,
+//!   `release_block` drops them, and [`StoreStats`] keeps byte-accurate
+//!   residency accounting against the `--host-mem-budget` flag.
+//!
+//! Leases hand out zero-copy [`MatrixView`]s, so refinement borrows
+//! weight rows straight out of the lease for exactly the block's
+//! lifetime — the same invariant `GramStats` now enforces for Gram
+//! borrows.
+
+use std::sync::{Arc, Mutex};
+
+use crate::model::checkpoint::{CheckpointError, CheckpointReader};
+use crate::model::store::{MaskSet, ParamStore};
+use crate::runtime::manifest::{ModelMeta, PrunableLayer};
+use crate::runtime::tensor_data::TensorData;
+use crate::util::tensor::MatrixView;
+
+#[derive(Debug)]
+pub enum StoreError {
+    Checkpoint(CheckpointError),
+    /// Leasing would push accounted residency past `--host-mem-budget`.
+    OverBudget { needed: usize, resident: usize, budget: usize },
+}
+
+impl std::fmt::Display for StoreError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StoreError::Checkpoint(e) => write!(f, "checkpoint: {e}"),
+            StoreError::OverBudget { needed, resident, budget } => write!(
+                f,
+                "host memory budget exceeded: lease of {needed} B on \
+                 top of {resident} B resident would pass the budget of \
+                 {budget} B (raise --host-mem-budget)"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Checkpoint(e) => Some(e),
+            StoreError::OverBudget { .. } => None,
+        }
+    }
+}
+
+impl From<CheckpointError> for StoreError {
+    fn from(e: CheckpointError) -> Self {
+        StoreError::Checkpoint(e)
+    }
+}
+
+/// Byte-accurate residency accounting for a [`WeightStore`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Bytes of parameter data the store currently holds resident.
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes` over the store's lifetime.
+    pub peak_bytes: usize,
+    /// Tensors faulted in from disk (0 for a resident store).
+    pub loads: usize,
+    /// Total bytes read from disk across all loads.
+    pub loaded_bytes: usize,
+    /// `release_block`/`release_globals` calls that actually freed data.
+    pub releases: usize,
+    /// Residency budget in bytes (0 = unlimited).
+    pub budget: usize,
+}
+
+/// A leased span of manifest tensors: one transformer block's nine
+/// parameters, or the three globals (token embedding, final norm, LM
+/// head).  Holding the lease keeps the tensors alive; views borrowed
+/// from it must end before the block is released.
+pub struct BlockLease {
+    /// `(manifest param index, tensor)` pairs, ascending index.
+    tensors: Vec<(usize, Arc<TensorData>)>,
+}
+
+impl BlockLease {
+    fn new(tensors: Vec<(usize, Arc<TensorData>)>) -> BlockLease {
+        BlockLease { tensors }
+    }
+
+    pub fn tensor(&self, param_index: usize) -> &TensorData {
+        self.arc(param_index).as_ref()
+    }
+
+    pub fn arc(&self, param_index: usize) -> &Arc<TensorData> {
+        self.tensors.iter()
+            .find(|(i, _)| *i == param_index)
+            .map(|(_, t)| t)
+            .unwrap_or_else(|| panic!(
+                "param {param_index} is not part of this lease"))
+    }
+
+    /// Zero-copy weight view of a prunable layer inside this lease.
+    pub fn weight(&self, layer: &PrunableLayer) -> MatrixView<'_> {
+        MatrixView::new(
+            self.tensor(layer.param_index).as_f32()
+                .expect("weights are f32"),
+            layer.d_out, layer.d_in)
+    }
+
+    pub fn byte_size(&self) -> usize {
+        self.tensors.iter().map(|(_, t)| t.byte_size()).sum()
+    }
+
+    /// Block `b`'s nine tensors in manifest order — the `calib_block`
+    /// input prefix — with prunable weights masked (W ⊙ M) when
+    /// `masks` is given (sequential-mode stream pushes).
+    pub fn block_params(&self, meta: &ModelMeta, b: usize,
+                        masks: Option<&MaskSet>) -> Vec<TensorData> {
+        block_range(meta, b).map(|i| {
+            let t = self.tensor(i);
+            if let Some(ms) = masks {
+                if let Some(li) = meta.prunable.iter()
+                    .position(|l| l.param_index == i) {
+                    let data = t.as_f32().expect("weights are f32")
+                        .iter().zip(&ms.masks[li].data)
+                        .map(|(&v, &m)| v * m)
+                        .collect();
+                    return TensorData::F32 {
+                        dims: t.dims().to_vec(),
+                        data,
+                    };
+                }
+            }
+            t.clone()
+        }).collect()
+    }
+}
+
+fn block_range(meta: &ModelMeta, b: usize) -> std::ops::Range<usize> {
+    assert!(b < meta.n_blocks,
+            "block {b} out of range ({} blocks)", meta.n_blocks);
+    (1 + b * 9)..(1 + (b + 1) * 9)
+}
+
+fn global_indices(meta: &ModelMeta) -> [usize; 3] {
+    let i_final_norm = 1 + meta.n_blocks * 9;
+    [0, i_final_norm, i_final_norm + 1]
+}
+
+/// Block-granular access to model parameters.  `Sync` so a prefetch
+/// stage can lease block `b+1` while block `b` refines.
+pub trait WeightStore: Sync {
+    fn meta(&self) -> &ModelMeta;
+
+    /// Lease one transformer block's nine parameter tensors.
+    fn lease_block(&self, b: usize) -> Result<BlockLease, StoreError>;
+
+    /// Lease the token embedding, final norm and LM head.
+    fn lease_globals(&self) -> Result<BlockLease, StoreError>;
+
+    /// Drop the store's resident copy of block `b` (no-op when the
+    /// store is resident anyway).  Outstanding leases stay valid; the
+    /// next `lease_block(b)` faults the data back in.
+    fn release_block(&self, _b: usize) {}
+
+    fn release_globals(&self) {}
+
+    fn stats(&self) -> StoreStats;
+
+    /// True when tensors live out of core and residency is bounded by
+    /// leases rather than the checkpoint size.
+    fn out_of_core(&self) -> bool {
+        false
+    }
+
+    /// The full in-memory store, when this is a resident store.
+    fn as_resident(&self) -> Option<&ParamStore> {
+        None
+    }
+}
+
+/// Today's in-memory store is the resident implementation: leases are
+/// `Arc` clones, releases are no-ops, and the whole parameter set
+/// counts as permanently resident.
+pub type ResidentStore = ParamStore;
+
+impl WeightStore for ParamStore {
+    fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    fn lease_block(&self, b: usize) -> Result<BlockLease, StoreError> {
+        Ok(BlockLease::new(block_range(&self.meta, b)
+            .map(|i| (i, self.tensors[i].clone()))
+            .collect()))
+    }
+
+    fn lease_globals(&self) -> Result<BlockLease, StoreError> {
+        Ok(BlockLease::new(global_indices(&self.meta).iter()
+            .map(|&i| (i, self.tensors[i].clone()))
+            .collect()))
+    }
+
+    fn stats(&self) -> StoreStats {
+        let bytes: usize =
+            self.tensors.iter().map(|t| t.byte_size()).sum();
+        StoreStats {
+            resident_bytes: bytes,
+            peak_bytes: bytes,
+            ..StoreStats::default()
+        }
+    }
+
+    fn as_resident(&self) -> Option<&ParamStore> {
+        Some(self)
+    }
+}
+
+struct StreamState {
+    /// Faulted-in tensors per block (index = block).
+    blocks: Vec<Option<Vec<Arc<TensorData>>>>,
+    globals: Option<Vec<Arc<TensorData>>>,
+    stats: StoreStats,
+}
+
+/// Out-of-core store backed by a validated `.ssck` checkpoint: every
+/// lease faults its tensors in from disk (once, until released), so
+/// peak host memory follows the lease pattern — O(2 blocks) under the
+/// staged pipeline — instead of the checkpoint size.
+pub struct StreamingStore {
+    reader: CheckpointReader,
+    state: Mutex<StreamState>,
+}
+
+impl StreamingStore {
+    /// Open a checkpoint for streaming.  `budget_bytes` caps accounted
+    /// residency (0 = unlimited); a lease that would pass it fails
+    /// with [`StoreError::OverBudget`] instead of loading.
+    pub fn open(path: impl AsRef<std::path::Path>, meta: &ModelMeta,
+                budget_bytes: usize)
+        -> Result<StreamingStore, StoreError> {
+        let reader = CheckpointReader::open(path, meta)?;
+        let n_blocks = meta.n_blocks;
+        Ok(StreamingStore {
+            reader,
+            state: Mutex::new(StreamState {
+                blocks: (0..n_blocks).map(|_| None).collect(),
+                globals: None,
+                stats: StoreStats {
+                    budget: budget_bytes,
+                    ..StoreStats::default()
+                },
+            }),
+        })
+    }
+
+    /// Masks stored alongside the checkpoint params, if any.
+    pub fn masks(&self) -> Option<&MaskSet> {
+        self.reader.masks()
+    }
+
+    fn lease_indices(&self, indices: &[usize])
+        -> Result<Vec<Arc<TensorData>>, StoreError> {
+        let meta = &self.reader.meta;
+        let needed: usize = indices.iter()
+            .map(|&i| {
+                let n: usize = meta.params[i].1.iter().product();
+                n * 4
+            })
+            .sum();
+        let stats = {
+            let st = self.state.lock().unwrap();
+            st.stats
+        };
+        if stats.budget > 0
+            && stats.resident_bytes + needed > stats.budget {
+            return Err(StoreError::OverBudget {
+                needed,
+                resident: stats.resident_bytes,
+                budget: stats.budget,
+            });
+        }
+        // Disk reads happen outside the lock; the racing prefetcher
+        // and refiner lease different blocks, so double-loading is not
+        // a correctness concern and the budget check above is the only
+        // gate.
+        let tensors = indices.iter()
+            .map(|&i| self.reader.load_tensor(i).map(Arc::new))
+            .collect::<Result<Vec<_>, _>>()?;
+        let mut st = self.state.lock().unwrap();
+        st.stats.loads += tensors.len();
+        st.stats.loaded_bytes += needed;
+        st.stats.resident_bytes += needed;
+        st.stats.peak_bytes =
+            st.stats.peak_bytes.max(st.stats.resident_bytes);
+        Ok(tensors)
+    }
+
+    fn release_entry(&self, slot: fn(&mut StreamState)
+                                     -> &mut Option<Vec<Arc<TensorData>>>) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(tensors) = slot(&mut st).take() {
+            let bytes: usize =
+                tensors.iter().map(|t| t.byte_size()).sum();
+            st.stats.resident_bytes -= bytes;
+            st.stats.releases += 1;
+        }
+    }
+}
+
+impl WeightStore for StreamingStore {
+    fn meta(&self) -> &ModelMeta {
+        &self.reader.meta
+    }
+
+    fn lease_block(&self, b: usize) -> Result<BlockLease, StoreError> {
+        let indices: Vec<usize> =
+            block_range(&self.reader.meta, b).collect();
+        {
+            let st = self.state.lock().unwrap();
+            if let Some(cached) = &st.blocks[b] {
+                return Ok(BlockLease::new(
+                    indices.iter().copied()
+                        .zip(cached.iter().cloned())
+                        .collect()));
+            }
+        }
+        let tensors = self.lease_indices(&indices)?;
+        let lease = BlockLease::new(
+            indices.iter().copied().zip(tensors.iter().cloned())
+                .collect());
+        self.state.lock().unwrap().blocks[b] = Some(tensors);
+        Ok(lease)
+    }
+
+    fn lease_globals(&self) -> Result<BlockLease, StoreError> {
+        let indices = global_indices(&self.reader.meta);
+        {
+            let st = self.state.lock().unwrap();
+            if let Some(cached) = &st.globals {
+                return Ok(BlockLease::new(
+                    indices.iter().copied()
+                        .zip(cached.iter().cloned())
+                        .collect()));
+            }
+        }
+        let tensors = self.lease_indices(&indices)?;
+        let lease = BlockLease::new(
+            indices.iter().copied().zip(tensors.iter().cloned())
+                .collect());
+        self.state.lock().unwrap().globals = Some(tensors);
+        Ok(lease)
+    }
+
+    fn release_block(&self, b: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(tensors) = st.blocks[b].take() {
+            let bytes: usize =
+                tensors.iter().map(|t| t.byte_size()).sum();
+            st.stats.resident_bytes -= bytes;
+            st.stats.releases += 1;
+        }
+    }
+
+    fn release_globals(&self) {
+        self.release_entry(|st| &mut st.globals);
+    }
+
+    fn stats(&self) -> StoreStats {
+        self.state.lock().unwrap().stats
+    }
+
+    fn out_of_core(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::checkpoint;
+    use crate::model::testutil::tiny_meta;
+
+    fn saved_store(tag: &str) -> (ModelMeta, ParamStore,
+                                  std::path::PathBuf) {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 5);
+        let path = std::env::temp_dir()
+            .join(format!("ssck_ws_{tag}.ssck"));
+        checkpoint::save(&path, &store, None).unwrap();
+        (meta, store, path)
+    }
+
+    #[test]
+    fn resident_leases_share_tensors() {
+        let meta = tiny_meta();
+        let store = ParamStore::init(&meta, 5);
+        let lease = store.lease_block(0).unwrap();
+        for i in 1..10 {
+            assert!(Arc::ptr_eq(lease.arc(i), &store.tensors[i]));
+        }
+        let globals = store.lease_globals().unwrap();
+        assert!(Arc::ptr_eq(globals.arc(0), &store.tensors[0]));
+        assert!(!store.out_of_core());
+        assert!(store.as_resident().is_some());
+        let stats = store.stats();
+        assert_eq!(stats.loads, 0);
+        assert_eq!(stats.resident_bytes,
+                   store.tensors.iter()
+                       .map(|t| t.byte_size())
+                       .sum::<usize>());
+    }
+
+    #[test]
+    fn streaming_lease_matches_resident_bitwise() {
+        let (meta, store, path) = saved_store("bits");
+        let ss = StreamingStore::open(&path, &meta, 0).unwrap();
+        for b in 0..meta.n_blocks {
+            let lease = ss.lease_block(b).unwrap();
+            for i in (1 + b * 9)..(1 + (b + 1) * 9) {
+                assert_eq!(lease.tensor(i), store.tensors[i].as_ref());
+            }
+            for layer in meta.prunable.iter()
+                .filter(|l| l.block == b) {
+                assert_eq!(lease.weight(layer).as_slice(),
+                           store.weight(layer).as_slice());
+            }
+            ss.release_block(b);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn stats_account_bytes_exactly() {
+        let (meta, _store, path) = saved_store("bytes");
+        let ss = StreamingStore::open(&path, &meta, 0).unwrap();
+        let block_bytes: usize = (1..10)
+            .map(|i| {
+                let n: usize = meta.params[i].1.iter().product();
+                n * 4
+            })
+            .sum();
+        assert_eq!(ss.stats().resident_bytes, 0);
+
+        let lease0 = ss.lease_block(0).unwrap();
+        assert_eq!(lease0.byte_size(), block_bytes);
+        let s = ss.stats();
+        assert_eq!(s.resident_bytes, block_bytes);
+        assert_eq!(s.loads, 9);
+        assert_eq!(s.loaded_bytes, block_bytes);
+
+        // Re-leasing a resident block is free.
+        let again = ss.lease_block(0).unwrap();
+        assert!(Arc::ptr_eq(lease0.arc(1), again.arc(1)));
+        assert_eq!(ss.stats().loads, 9);
+
+        let _lease1 = ss.lease_block(1).unwrap();
+        let s = ss.stats();
+        assert_eq!(s.resident_bytes, 2 * block_bytes);
+        assert_eq!(s.peak_bytes, 2 * block_bytes);
+
+        ss.release_block(0);
+        let s = ss.stats();
+        assert_eq!(s.resident_bytes, block_bytes);
+        assert_eq!(s.peak_bytes, 2 * block_bytes);
+        assert_eq!(s.releases, 1);
+        // Releasing an already-released block changes nothing.
+        ss.release_block(0);
+        assert_eq!(ss.stats().releases, 1);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn over_budget_lease_rejected() {
+        let (meta, _store, path) = saved_store("budget");
+        let block_bytes: usize = (1..10)
+            .map(|i| {
+                let n: usize = meta.params[i].1.iter().product();
+                n * 4
+            })
+            .sum();
+        // Budget fits one block but not two.
+        let ss = StreamingStore::open(&path, &meta,
+                                      block_bytes + block_bytes / 2)
+            .unwrap();
+        let _lease0 = ss.lease_block(0).unwrap();
+        match ss.lease_block(1) {
+            Err(StoreError::OverBudget { needed, resident, budget }) => {
+                assert_eq!(needed, block_bytes);
+                assert_eq!(resident, block_bytes);
+                assert_eq!(budget, block_bytes + block_bytes / 2);
+            }
+            other => panic!("expected OverBudget, got {:?}",
+                            other.map(|_| "lease")),
+        }
+        // Releasing block 0 makes room again.
+        ss.release_block(0);
+        assert!(ss.lease_block(1).is_ok());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -306,7 +306,7 @@ mod tests {
         refine_layer(&w, &mut m_legacy, &stats, pattern,
                      &DsnotConfig::default());
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: Some(&stats), pattern,
+            w: w.view(), g: g.as_gram(), stats: Some(&stats), pattern,
             t_max: 0, threads: 2,
             gmax: None,
         };
@@ -327,7 +327,7 @@ mod tests {
         let pattern = Pattern::PerRow { keep: 10 };
         let mut mask = mask_from_scores(&saliency::magnitude(&w), pattern);
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 0,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 0,
             threads: 1,
             gmax: None,
         };

@@ -29,13 +29,15 @@ use std::ops::Range;
 use crate::pruning::dsnot::FeatureStats;
 use crate::pruning::mask::Pattern;
 use crate::pruning::sparseswaps::{LayerOutcome, RowOutcome};
-use crate::util::tensor::{GramView, Matrix};
+use crate::util::tensor::{GramView, Matrix, MatrixView};
 
 /// Everything a refiner may consume for one layer.  Borrowed, so the
 /// pipeline stays free to schedule layers concurrently.
 pub struct LayerContext<'a> {
-    /// Dense weights, [d_out, d_in] (the paper's row-major layout).
-    pub w: &'a Matrix,
+    /// Dense weights, [d_out, d_in] (the paper's row-major layout): a
+    /// zero-copy view into the parameter store or a weight-block
+    /// lease, so refinement never duplicates the weight payload.
+    pub w: MatrixView<'a>,
     /// Gram matrix of the layer's input stream, [d_in, d_in]: a
     /// zero-copy view into the calibration stream stack (or into a
     /// square `Matrix` via [`Matrix::as_gram`]).
@@ -334,7 +336,7 @@ mod tests {
         let (w, g, mut mask, pattern) = instance();
         let before = mask.clone();
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 10,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 10,
             threads: 1, gmax: None,
         };
         let out = NoopEngine.refine(&ctx, &mut mask, &[2, 5]).unwrap();
@@ -419,7 +421,7 @@ mod tests {
     fn noop_refines_rows_against_layer_offsets() {
         let (w, g, mask, pattern) = instance();
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 5,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 5,
             threads: 1, gmax: None,
         };
         // Shard rows 1..3: losses must match the whole-layer call.

@@ -2,7 +2,7 @@
 //!   L_i(m) = (w_i - m_i ⊙ w_i)^T G (w_i - m_i ⊙ w_i)        (Sec 2.1.2)
 //! and the correlation vector c = G((1-m) ⊙ w)                (Sec 2.1.3).
 
-use crate::util::tensor::{dot, GramView, Matrix};
+use crate::util::tensor::{dot, GramView, Matrix, MatrixView};
 
 /// Correlation vector c for one row: c = G q with q = (1-m) ⊙ w.
 /// `g` may be a borrowed [`GramView`] (zero-copy stream-stack slice)
@@ -45,16 +45,20 @@ pub fn row_loss<'a>(w: &[f32], m: &[f32],
 }
 
 /// Per-row losses for a full layer. Returns one loss per row of `w`.
-pub fn layer_row_losses<'a>(w: &Matrix, mask: &Matrix,
-                            g: impl Into<GramView<'a>>) -> Vec<f64> {
+/// `w` may be a borrowed [`MatrixView`] (a weight leased from a
+/// `WeightStore`) or a `&Matrix`.
+pub fn layer_row_losses<'a, 'b>(w: impl Into<MatrixView<'b>>,
+                                mask: &Matrix,
+                                g: impl Into<GramView<'a>>) -> Vec<f64> {
+    let w = w.into();
     assert_eq!((w.rows, w.cols), (mask.rows, mask.cols));
     let g = g.into();
     (0..w.rows).map(|r| row_loss(w.row(r), mask.row(r), g)).collect()
 }
 
 /// Total layer loss  ||W X - (M ⊙ W) X||_F^2  (Eq. 1).
-pub fn layer_loss<'a>(w: &Matrix, mask: &Matrix,
-                      g: impl Into<GramView<'a>>) -> f64 {
+pub fn layer_loss<'a, 'b>(w: impl Into<MatrixView<'b>>, mask: &Matrix,
+                          g: impl Into<GramView<'a>>) -> f64 {
     layer_row_losses(w, mask, g).iter().sum()
 }
 

@@ -5,7 +5,7 @@
 //! formulation, Sec 2.1.2), so warmstarts are computed natively without
 //! touching PJRT.
 
-use crate::util::tensor::Matrix;
+use crate::util::tensor::{Matrix, MatrixView};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Criterion {
@@ -36,13 +36,16 @@ impl Criterion {
 
 /// |W_ij| — the data-free baseline the paper shows degrades badly on
 /// transformers (Table 2).
-pub fn magnitude(w: &Matrix) -> Matrix {
+pub fn magnitude<'a>(w: impl Into<MatrixView<'a>>) -> Matrix {
+    let w = w.into();
     Matrix::from_vec(w.rows, w.cols,
-                     w.data.iter().map(|v| v.abs()).collect())
+                     w.as_slice().iter().map(|v| v.abs()).collect())
 }
 
 /// Wanda: |W_ij| * ||X_j||_2 = |W_ij| * sqrt(G_jj)  (Sun et al., 2024).
-pub fn wanda(w: &Matrix, gram_diag: &[f32]) -> Matrix {
+pub fn wanda<'a>(w: impl Into<MatrixView<'a>>, gram_diag: &[f32])
+    -> Matrix {
+    let w = w.into();
     assert_eq!(w.cols, gram_diag.len());
     let norms: Vec<f32> =
         gram_diag.iter().map(|&g| g.max(0.0).sqrt()).collect();
@@ -52,7 +55,9 @@ pub fn wanda(w: &Matrix, gram_diag: &[f32]) -> Matrix {
 /// RIA with the paper's default a = 0.5:
 ///   RIA_ij = (|W_ij| / sum_k |W_ik|  +  |W_ij| / sum_k |W_kj|)
 ///            * (||X_j||_2)^a
-pub fn ria(w: &Matrix, gram_diag: &[f32], a: f32) -> Matrix {
+pub fn ria<'a>(w: impl Into<MatrixView<'a>>, gram_diag: &[f32], a: f32)
+    -> Matrix {
+    let w = w.into();
     assert_eq!(w.cols, gram_diag.len());
     let mut row_sums = vec![0.0f32; w.rows];
     let mut col_sums = vec![0.0f32; w.cols];
@@ -75,8 +80,9 @@ pub fn ria(w: &Matrix, gram_diag: &[f32], a: f32) -> Matrix {
 }
 
 /// Dispatch on criterion.
-pub fn scores(criterion: Criterion, w: &Matrix, gram_diag: &[f32])
-    -> Matrix {
+pub fn scores<'a>(criterion: Criterion, w: impl Into<MatrixView<'a>>,
+                  gram_diag: &[f32]) -> Matrix {
+    let w = w.into();
     match criterion {
         Criterion::Magnitude => magnitude(w),
         Criterion::Wanda => wanda(w, gram_diag),

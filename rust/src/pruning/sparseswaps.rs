@@ -48,7 +48,7 @@ use crate::pruning::engine::{
 use crate::pruning::error::{corr_vector, row_loss, row_loss_with_corr};
 use crate::pruning::mask::Pattern;
 use crate::util::kernels::{self, Arm};
-use crate::util::tensor::{axpy, GramView, Matrix};
+use crate::util::tensor::{axpy, GramView, Matrix, MatrixView};
 use crate::util::threadpool::parallel_map;
 
 #[derive(Clone, Copy, Debug)]
@@ -615,12 +615,12 @@ impl RefineEngine for NativeEngine {
 /// "fully parallelizable across rows" claim).  Delegates to the
 /// incremental [`NativeEngine`]; bit-identical to
 /// [`refine_layer_rescan`].
-pub fn refine_layer<'a>(w: &Matrix, mask: &mut Matrix,
+pub fn refine_layer<'a>(w: impl Into<MatrixView<'a>>, mask: &mut Matrix,
                         g: impl Into<GramView<'a>>, pattern: Pattern,
                         cfg: &SwapConfig, threads: usize)
     -> LayerOutcome {
     let ctx = LayerContext {
-        w,
+        w: w.into(),
         g: g.into(),
         stats: None,
         pattern,
@@ -801,7 +801,7 @@ mod tests {
             let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
                                         pattern);
             let ctx = LayerContext {
-                w: &w, g: g.as_gram(), stats: None, pattern,
+                w: w.view(), g: g.as_gram(), stats: None, pattern,
                 t_max: 25, threads: 2, gmax: None,
             };
             let mut reference: Option<(Vec<f32>, usize)> = None;
@@ -831,7 +831,7 @@ mod tests {
         let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
                                     pattern);
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 20,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 20,
             threads: 1, gmax: None,
         };
         let mut plain = warm.clone();
@@ -859,7 +859,7 @@ mod tests {
         let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
                                     pattern);
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 15,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 15,
             threads: 1, gmax: None,
         };
         let mut full = warm.clone();
@@ -886,7 +886,7 @@ mod tests {
         let warm = mask_from_scores(&saliency::wanda(&w, &g.diag()),
                                     pattern);
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 0,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 0,
             threads: 1, gmax: None,
         };
         let mut mask = warm.clone();

@@ -337,7 +337,7 @@ fn checkpoint_reductions(ctx: &Ctx, store: &ParamStore, ds: &Dataset,
         let w = store.weight(layer);
         let g = stats.gram_for(layer);
         let after = crate::pruning::error::layer_loss(
-            &w, &snap.masks[li], g);
+            w, &snap.masks[li], g);
         total += crate::pruning::error::relative_reduction(
             base_losses[li], after);
     }

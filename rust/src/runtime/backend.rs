@@ -89,8 +89,8 @@ fn model_meta(entry: &ArtifactEntry) -> Result<&ModelMeta, RuntimeError> {
 /// Pure-Rust interpreter of every artifact kind: the refinement kinds
 /// (`swap_step`, `layer_loss`) via the same reference ops as the
 /// native engine (`pruning::sparseswaps::refine_row`), and the
-/// model-execution kinds (`calib_step`, `eval_step`, `seq_nll`,
-/// `train_step`) via `runtime::interp_model`'s tiny-GPT
+/// model-execution kinds (`calib_step`, `calib_block`, `embed`,
+/// `eval_step`, `seq_nll`, `train_step`) via `runtime::interp_model`'s tiny-GPT
 /// forward/backward — so the whole pipeline (train → calibrate →
 /// prune → refine → evaluate) runs, and is testable and benchable,
 /// without a PJRT toolchain or `make artifacts`.
@@ -126,7 +126,8 @@ impl Backend for InterpBackend {
         match entry.kind.as_str() {
             "swap_step" | "layer_loss" =>
                 Ok(self.compiled.insert(entry.name.clone())),
-            "calib_step" | "eval_step" | "seq_nll" | "train_step" => {
+            "calib_step" | "calib_block" | "embed" | "eval_step"
+            | "seq_nll" | "train_step" => {
                 model_meta(entry)?;
                 Ok(self.compiled.insert(entry.name.clone()))
             }
@@ -163,6 +164,10 @@ impl Backend for InterpBackend {
             "swap_step" => exec_swap_step(entry, inputs),
             "layer_loss" => exec_layer_loss(entry, inputs),
             "calib_step" => interp_model::exec_calib_step(
+                model_meta(entry)?, inputs).map_err(RuntimeError::Msg),
+            "calib_block" => interp_model::exec_calib_block(
+                model_meta(entry)?, inputs).map_err(RuntimeError::Msg),
+            "embed" => interp_model::exec_embed(
                 model_meta(entry)?, inputs).map_err(RuntimeError::Msg),
             "eval_step" => interp_model::exec_eval_step(
                 model_meta(entry)?, inputs).map_err(RuntimeError::Msg),

@@ -392,16 +392,17 @@ fn attn_forward_seq(bi: usize, l: usize, hd: usize, scale: f32,
     }
 }
 
-fn forward(meta: &ModelMeta, p: &Params, tokens: &[i32], b: usize,
-           l: usize, threads: usize) -> Result<Forward, String> {
-    let (dm, hd) = check_dims(meta)?;
-    let (nh, dff, vocab) = (meta.n_heads, meta.d_ff, meta.vocab);
+/// Token-embedding lookup: the [b*l, d_model] residual-stream seed.
+/// Shared by [`forward`] and `exec_embed`, so the streamed
+/// calibration path starts from bit-identical activations.
+fn embed_tokens(meta: &ModelMeta, tok_emb: &[f32], tokens: &[i32],
+                b: usize, l: usize) -> Result<Matrix, String> {
+    let (dm, vocab) = (meta.d_model, meta.vocab);
     let t_n = b * l;
     if tokens.len() != t_n {
         return Err(format!("{}: expected {t_n} tokens, got {}",
                            meta.name, tokens.len()));
     }
-
     let mut x = Matrix::zeros(t_n, dm);
     for (t, &id) in tokens.iter().enumerate() {
         let id = id as usize;
@@ -409,74 +410,96 @@ fn forward(meta: &ModelMeta, p: &Params, tokens: &[i32], b: usize,
             return Err(format!("{}: token id {id} >= vocab {vocab}",
                                meta.name));
         }
-        x.row_mut(t).copy_from_slice(&p.tok_emb[id * dm..(id + 1) * dm]);
+        x.row_mut(t).copy_from_slice(&tok_emb[id * dm..(id + 1) * dm]);
+    }
+    Ok(x)
+}
+
+/// One transformer block's forward pass, consuming the residual
+/// stream `x_in` and returning the full activation cache plus the
+/// next residual stream.  Shared by [`forward`] and
+/// `exec_calib_block`, so per-block streamed execution propagates
+/// activations bit-identically to the whole-model pass.
+#[allow(clippy::too_many_arguments)]
+fn block_forward(meta: &ModelMeta, bp: &BlockParams<'_>, x_in: Matrix,
+                 b: usize, l: usize, tables: (&[f32], &[f32]),
+                 threads: usize) -> (BlockCache, Matrix) {
+    let (dm, nh, dff) = (meta.d_model, meta.n_heads, meta.d_ff);
+    let hd = dm / nh;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let t_n = b * l;
+    let (h, r_attn) = rmsnorm(&x_in, bp.attn_norm);
+
+    let mut q = matmul_nt(&h, bp.wq, dm, threads);
+    let mut k = matmul_nt(&h, bp.wk, dm, threads);
+    let v = matmul_nt(&h, bp.wv, dm, threads);
+    rope_in_place(&mut q, b, l, nh, hd, tables, 1.0);
+    rope_in_place(&mut k, b, l, nh, hd, tables, 1.0);
+
+    let mut probs: Vec<Matrix> =
+        (0..b * nh).map(|_| Matrix::zeros(l, l)).collect();
+    let mut attn_out = Matrix::zeros(t_n, dm);
+    // Degenerate shapes (l == 0): attention is a no-op, and
+    // chunks_mut(0) would panic — skip the fan-out entirely.
+    if l * dm > 0 {
+        // One job per sequence: row block bi*l..(bi+1)*l of
+        // attn_out and probs[bi*nh..(bi+1)*nh] are each written
+        // by exactly one worker.
+        let (q, k, v) = (&q, &k, &v);
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(b);
+        for (bi, (probs_seq, attn_rows)) in probs
+            .chunks_mut(nh)
+            .zip(attn_out.data.chunks_mut(l * dm))
+            .enumerate()
+        {
+            let job = move || attn_forward_seq(bi, l, hd, scale, q,
+                                               k, v, probs_seq,
+                                               attn_rows);
+            if threads <= 1 || b <= 1 {
+                job();
+            } else {
+                jobs.push(Box::new(job));
+            }
+        }
+        if !jobs.is_empty() {
+            threadpool::global().run_scoped(jobs);
+        }
     }
 
+    let proj = matmul_nt(&attn_out, bp.wo, dm, threads);
+    let mut x_mid = x_in.clone();
+    add_assign(&mut x_mid, &proj);
+
+    let (h2, r_mlp) = rmsnorm(&x_mid, bp.mlp_norm);
+    let gate = matmul_nt(&h2, bp.wg, dff, threads);
+    let up = matmul_nt(&h2, bp.wu, dff, threads);
+    let mut dmlp = Matrix::zeros(t_n, dff);
+    for idx in 0..t_n * dff {
+        let g = gate.data[idx];
+        let sg = 1.0 / (1.0 + (-g).exp());
+        dmlp.data[idx] = g * sg * up.data[idx];
+    }
+    let down = matmul_nt(&dmlp, bp.wd, dm, threads);
+    let mut x_out = x_mid.clone();
+    add_assign(&mut x_out, &down);
+
+    (BlockCache {
+        x_in, h, r_attn, q, k, v, probs, attn_out, x_mid, h2,
+        r_mlp, gate, up, dmlp,
+    }, x_out)
+}
+
+fn forward(meta: &ModelMeta, p: &Params, tokens: &[i32], b: usize,
+           l: usize, threads: usize) -> Result<Forward, String> {
+    let (_, hd) = check_dims(meta)?;
+    let mut x = embed_tokens(meta, p.tok_emb, tokens, b, l)?;
     let (cos, sin) = rope_tables(l, hd / 2, meta.rope_theta as f32);
-    let scale = 1.0 / (hd as f32).sqrt();
     let mut blocks = Vec::with_capacity(meta.n_blocks);
     for bp in &p.blocks {
-        let x_in = x;
-        let (h, r_attn) = rmsnorm(&x_in, bp.attn_norm);
-
-        let mut q = matmul_nt(&h, bp.wq, dm, threads);
-        let mut k = matmul_nt(&h, bp.wk, dm, threads);
-        let v = matmul_nt(&h, bp.wv, dm, threads);
-        rope_in_place(&mut q, b, l, nh, hd, (&cos, &sin), 1.0);
-        rope_in_place(&mut k, b, l, nh, hd, (&cos, &sin), 1.0);
-
-        let mut probs: Vec<Matrix> =
-            (0..b * nh).map(|_| Matrix::zeros(l, l)).collect();
-        let mut attn_out = Matrix::zeros(t_n, dm);
-        // Degenerate shapes (l == 0): attention is a no-op, and
-        // chunks_mut(0) would panic — skip the fan-out entirely.
-        if l * dm > 0 {
-            // One job per sequence: row block bi*l..(bi+1)*l of
-            // attn_out and probs[bi*nh..(bi+1)*nh] are each written
-            // by exactly one worker.
-            let (q, k, v) = (&q, &k, &v);
-            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
-                Vec::with_capacity(b);
-            for (bi, (probs_seq, attn_rows)) in probs
-                .chunks_mut(nh)
-                .zip(attn_out.data.chunks_mut(l * dm))
-                .enumerate()
-            {
-                let job = move || attn_forward_seq(bi, l, hd, scale, q,
-                                                   k, v, probs_seq,
-                                                   attn_rows);
-                if threads <= 1 || b <= 1 {
-                    job();
-                } else {
-                    jobs.push(Box::new(job));
-                }
-            }
-            if !jobs.is_empty() {
-                threadpool::global().run_scoped(jobs);
-            }
-        }
-
-        let proj = matmul_nt(&attn_out, bp.wo, dm, threads);
-        let mut x_mid = x_in.clone();
-        add_assign(&mut x_mid, &proj);
-
-        let (h2, r_mlp) = rmsnorm(&x_mid, bp.mlp_norm);
-        let gate = matmul_nt(&h2, bp.wg, dff, threads);
-        let up = matmul_nt(&h2, bp.wu, dff, threads);
-        let mut dmlp = Matrix::zeros(t_n, dff);
-        for idx in 0..t_n * dff {
-            let g = gate.data[idx];
-            let sg = 1.0 / (1.0 + (-g).exp());
-            dmlp.data[idx] = g * sg * up.data[idx];
-        }
-        let down = matmul_nt(&dmlp, bp.wd, dm, threads);
-        let mut x_out = x_mid.clone();
-        add_assign(&mut x_out, &down);
-
-        blocks.push(BlockCache {
-            x_in, h, r_attn, q, k, v, probs, attn_out, x_mid, h2,
-            r_mlp, gate, up, dmlp,
-        });
+        let (cache, x_out) =
+            block_forward(meta, bp, x, b, l, (&cos, &sin), threads);
+        blocks.push(cache);
         x = x_out;
     }
 
@@ -886,41 +909,134 @@ pub fn exec_calib_step(meta: &ModelMeta, inputs: &[&TensorData])
     let mut sums: Vec<TensorData> =
         rest[5..9].iter().map(|t| (*t).clone()).collect();
     for (bi, cache) in fwd.blocks.iter().enumerate() {
-        // gram::STREAMS order: qkv, o, gu, down.
-        let streams: [(&Matrix, usize); 4] = [
-            (&cache.h, meta.d_model),
-            (&cache.attn_out, meta.d_model),
-            (&cache.h2, meta.d_model),
-            (&cache.dmlp, meta.d_ff),
-        ];
-        for (si, (x, d)) in streams.iter().enumerate() {
-            let d = *d;
-            let gd = grams[si].as_f32_mut()?;
-            let off = bi * d * d;
-            if gd.len() < off + d * d {
-                return Err(format!(
-                    "calib_step_{}: gram stack {si} too small for \
-                     block {bi} width {d}", meta.name));
-            }
-            let mut g_mat =
-                Matrix::from_vec(d, d, gd[off..off + d * d].to_vec());
-            g_mat.gram_accumulate(x);
-            gd[off..off + d * d].copy_from_slice(&g_mat.data);
-
-            let sd = sums[si].as_f32_mut()?;
-            let soff = bi * d;
-            if sd.len() < soff + d {
-                return Err(format!(
-                    "calib_step_{}: sum stack {si} too small for \
-                     block {bi} width {d}", meta.name));
-            }
-            for t in 0..x.rows {
-                axpy(1.0, x.row(t), &mut sd[soff..soff + d]);
-            }
-        }
+        accumulate_block_stats(meta, cache, &mut grams, &mut sums, bi,
+                               "calib_step")?;
     }
     let mut out = grams;
     out.extend(sums);
+    Ok(out)
+}
+
+/// Fold one block's four capture streams into Gram / feature-sum
+/// tensors at stack offset `bi` (0 for the per-block `calib_block`
+/// tensors).  Shared by `exec_calib_step` and `exec_calib_block` so
+/// the stacked and streamed accumulation orders are bit-identical.
+fn accumulate_block_stats(meta: &ModelMeta, cache: &BlockCache,
+                          grams: &mut [TensorData],
+                          sums: &mut [TensorData], bi: usize,
+                          what: &str) -> Result<(), String> {
+    // gram::STREAMS order: qkv, o, gu, down.
+    let streams: [(&Matrix, usize); 4] = [
+        (&cache.h, meta.d_model),
+        (&cache.attn_out, meta.d_model),
+        (&cache.h2, meta.d_model),
+        (&cache.dmlp, meta.d_ff),
+    ];
+    for (si, (x, d)) in streams.iter().enumerate() {
+        let d = *d;
+        let gd = grams[si].as_f32_mut()?;
+        let off = bi * d * d;
+        if gd.len() < off + d * d {
+            return Err(format!(
+                "{what}_{}: gram stack {si} too small for \
+                 block {bi} width {d}", meta.name));
+        }
+        let mut g_mat =
+            Matrix::from_vec(d, d, gd[off..off + d * d].to_vec());
+        g_mat.gram_accumulate(x);
+        gd[off..off + d * d].copy_from_slice(&g_mat.data);
+
+        let sd = sums[si].as_f32_mut()?;
+        let soff = bi * d;
+        if sd.len() < soff + d {
+            return Err(format!(
+                "{what}_{}: sum stack {si} too small for \
+                 block {bi} width {d}", meta.name));
+        }
+        for t in 0..x.rows {
+            axpy(1.0, x.row(t), &mut sd[soff..soff + d]);
+        }
+    }
+    Ok(())
+}
+
+/// `embed_{cfg}`: token-embedding lookup — stage 0 of the streamed
+/// calibration pipeline.  Inputs (tok_emb, tokens); one output, the
+/// residual stream h [b*l, d_model].
+pub fn exec_embed(meta: &ModelMeta, inputs: &[&TensorData])
+    -> Result<Vec<TensorData>, String> {
+    if inputs.len() != 2 {
+        return Err(format!("embed_{}: expected 2 inputs, got {}",
+                           meta.name, inputs.len()));
+    }
+    check_dims(meta)?;
+    let tok_emb = inputs[0].as_f32()?;
+    let (b, l) = batch_dims(inputs[1], "embed tokens")?;
+    let x = embed_tokens(meta, tok_emb, inputs[1].as_i32()?, b, l)?;
+    Ok(vec![TensorData::F32 {
+        dims: vec![b * l, meta.d_model],
+        data: x.data,
+    }])
+}
+
+/// `calib_block_{cfg}`: one block's forward pass over a resident
+/// residual stream, optionally folding the block's four capture
+/// streams into per-block Gram / feature-sum tensors.  Inputs (the
+/// block's nine params, h_in, accum i32 — 0 propagates only — four
+/// Grams, four sums); outputs (four Grams, four sums, h_out).  The
+/// streamed-calibration workhorse: running it per block over the
+/// `exec_embed` output reproduces `exec_calib_step` bit-for-bit.
+pub fn exec_calib_block(meta: &ModelMeta, inputs: &[&TensorData])
+    -> Result<Vec<TensorData>, String> {
+    if inputs.len() != 19 {
+        return Err(format!("calib_block_{}: expected 19 inputs, \
+                            got {}", meta.name, inputs.len()));
+    }
+    let (dm, hd) = check_dims(meta)?;
+    let (b, l) = (meta.batch, meta.seq_len);
+    let f = |i: usize| -> Result<&[f32], String> {
+        inputs[i].as_f32()
+            .map_err(|e| format!("calib_block_{} input {i}: {e}",
+                                 meta.name))
+    };
+    let bp = BlockParams {
+        attn_norm: f(0)?,
+        wq: f(1)?,
+        wk: f(2)?,
+        wv: f(3)?,
+        wo: f(4)?,
+        mlp_norm: f(5)?,
+        wg: f(6)?,
+        wu: f(7)?,
+        wd: f(8)?,
+    };
+    let h_in = inputs[9].as_f32()?;
+    if h_in.len() != b * l * dm {
+        return Err(format!(
+            "calib_block_{}: h_in has {} elements, want {}",
+            meta.name, h_in.len(), b * l * dm));
+    }
+    let accum = inputs[10].as_i32()?.first().copied()
+        .ok_or("calib_block: empty accum tensor")? != 0;
+    let x_in = Matrix::from_vec(b * l, dm, h_in.to_vec());
+    let (cos, sin) = rope_tables(l, hd / 2, meta.rope_theta as f32);
+    let (cache, x_out) = block_forward(meta, &bp, x_in, b, l,
+                                       (&cos, &sin),
+                                       default_threads());
+    let mut grams: Vec<TensorData> =
+        inputs[11..15].iter().map(|t| (*t).clone()).collect();
+    let mut sums: Vec<TensorData> =
+        inputs[15..19].iter().map(|t| (*t).clone()).collect();
+    if accum {
+        accumulate_block_stats(meta, &cache, &mut grams, &mut sums, 0,
+                               "calib_block")?;
+    }
+    let mut out = grams;
+    out.extend(sums);
+    out.push(TensorData::F32 {
+        dims: vec![b * l, dm],
+        data: x_out.data,
+    });
     Ok(out)
 }
 
@@ -952,7 +1068,8 @@ mod tests {
     #[test]
     fn forward_shapes_and_finite() {
         let (meta, store, toks, _) = toy();
-        let refs: Vec<&TensorData> = store.tensors.iter().collect();
+        let refs: Vec<&TensorData> =
+            store.tensors.iter().map(|t| t.as_ref()).collect();
         let logits = forward_logits(&meta, &refs, &toks).unwrap();
         assert_eq!((logits.rows, logits.cols),
                    (meta.batch * meta.seq_len, meta.vocab));
@@ -964,7 +1081,8 @@ mod tests {
         // Random init at fan-in scale produces near-uniform logits, so
         // the mean NLL starts close to ln(vocab).
         let (meta, store, toks, tgts) = toy();
-        let refs: Vec<&TensorData> = store.tensors.iter().collect();
+        let refs: Vec<&TensorData> =
+            store.tensors.iter().map(|t| t.as_ref()).collect();
         let loss = mean_nll(&meta, &refs, &toks, &tgts).unwrap();
         let uniform = (meta.vocab as f64).ln();
         assert!((loss - uniform).abs() < 1.0,
@@ -1029,9 +1147,9 @@ mod tests {
         let (meta, store, toks, tgts) = toy();
         let np = meta.param_count();
         let zeros = ParamStore::zeros_like(&meta);
-        let mut inputs: Vec<TensorData> = store.tensors.clone();
-        inputs.extend(zeros.tensors.iter().cloned());
-        inputs.extend(zeros.tensors.iter().cloned());
+        let mut inputs: Vec<TensorData> = store.tensor_args();
+        inputs.extend(zeros.tensor_args());
+        inputs.extend(zeros.tensor_args());
         inputs.push(TensorData::scalar_i32(0));
         inputs.push(toks);
         inputs.push(tgts);
@@ -1056,9 +1174,9 @@ mod tests {
         let (meta, store, toks, tgts) = toy();
         let np = meta.param_count();
         let zeros = ParamStore::zeros_like(&meta);
-        let mut params = store.tensors.clone();
-        let mut m = zeros.tensors.clone();
-        let mut v = zeros.tensors;
+        let mut params = store.tensor_args();
+        let mut m = zeros.tensor_args();
+        let mut v = zeros.tensor_args();
         let mut step = TensorData::scalar_i32(0);
         let lr = TensorData::scalar_f32(5e-3);
         let mut first = f64::NAN;
@@ -1097,7 +1215,8 @@ mod tests {
             .iter()
             .map(TensorData::zeros)
             .collect();
-        let mut inputs: Vec<&TensorData> = store.tensors.iter().collect();
+        let mut inputs: Vec<&TensorData> =
+            store.tensors.iter().map(|t| t.as_ref()).collect();
         inputs.push(&toks);
         inputs.extend(stats.iter());
         let out = exec_calib_step(&meta, &inputs).unwrap();
@@ -1114,7 +1233,8 @@ mod tests {
         let s1 = diag_sum(&out[0], meta.n_blocks, meta.d_model);
         assert!(s1 > 0.0);
         stats = out;
-        let mut inputs: Vec<&TensorData> = store.tensors.iter().collect();
+        let mut inputs: Vec<&TensorData> =
+            store.tensors.iter().map(|t| t.as_ref()).collect();
         inputs.push(&toks);
         inputs.extend(stats.iter());
         let out2 = exec_calib_step(&meta, &inputs).unwrap();
@@ -1126,10 +1246,84 @@ mod tests {
     }
 
     #[test]
+    fn embed_plus_calib_blocks_match_calib_step_bitwise() {
+        let (meta, store, toks, _) = toy();
+        let np = meta.param_count();
+
+        // Resident reference: one whole-model calib_step.
+        let entry = crate::runtime::manifest::ArtifactEntry::calib_step(
+            &meta);
+        let stats: Vec<TensorData> = entry.inputs[np + 1..]
+            .iter()
+            .map(TensorData::zeros)
+            .collect();
+        let mut inputs: Vec<&TensorData> =
+            store.tensors.iter().map(|t| t.as_ref()).collect();
+        inputs.push(&toks);
+        inputs.extend(stats.iter());
+        let reference = exec_calib_step(&meta, &inputs).unwrap();
+
+        // Streamed path: embed, then one calib_block per block with
+        // per-block zero stats, threading h through.
+        let emb_in = vec![store.tensors[0].as_ref(), &toks];
+        let mut h = exec_embed(&meta, &emb_in).unwrap()
+            .pop().unwrap();
+        let cb = crate::runtime::manifest::ArtifactEntry::calib_block(
+            &meta);
+        let widths = [meta.d_model, meta.d_model, meta.d_model,
+                      meta.d_ff];
+        let one = TensorData::scalar_i32(1);
+        for b in 0..meta.n_blocks {
+            let zeros: Vec<TensorData> = cb.inputs[11..19].iter()
+                .map(TensorData::zeros)
+                .collect();
+            let mut cb_in: Vec<&TensorData> =
+                store.tensors[1 + b * 9..1 + (b + 1) * 9]
+                    .iter().map(|t| t.as_ref()).collect();
+            cb_in.push(&h);
+            cb_in.push(&one);
+            cb_in.extend(zeros.iter());
+            let mut out = exec_calib_block(&meta, &cb_in).unwrap();
+            let h_out = out.pop().unwrap();
+            // Per-block grams/sums equal the matching slab of the
+            // stacked reference, bit for bit.
+            for (si, d) in widths.iter().enumerate() {
+                let g_ref = reference[si].as_f32().unwrap();
+                let g_blk = out[si].as_f32().unwrap();
+                assert_eq!(g_blk, &g_ref[b * d * d..(b + 1) * d * d],
+                           "gram stream {si} block {b}");
+                let s_ref = reference[4 + si].as_f32().unwrap();
+                let s_blk = out[4 + si].as_f32().unwrap();
+                assert_eq!(s_blk, &s_ref[b * d..(b + 1) * d],
+                           "sum stream {si} block {b}");
+            }
+            h = h_out;
+        }
+
+        // accum = 0 propagates h without touching the stats.
+        let zero = TensorData::scalar_i32(0);
+        let zeros: Vec<TensorData> = cb.inputs[11..19].iter()
+            .map(TensorData::zeros)
+            .collect();
+        let emb_in = vec![store.tensors[0].as_ref(), &toks];
+        let h0 = exec_embed(&meta, &emb_in).unwrap().pop().unwrap();
+        let mut cb_in: Vec<&TensorData> = store.tensors[1..10]
+            .iter().map(|t| t.as_ref()).collect();
+        cb_in.push(&h0);
+        cb_in.push(&zero);
+        cb_in.extend(zeros.iter());
+        let out = exec_calib_block(&meta, &cb_in).unwrap();
+        for t in &out[..8] {
+            assert!(t.as_f32().unwrap().iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
     fn seq_nll_masks_rows_independently() {
         let (meta, store, toks, tgts) = toy();
         let (b, l) = (meta.batch, meta.seq_len);
-        let mut inputs: Vec<&TensorData> = store.tensors.iter().collect();
+        let mut inputs: Vec<&TensorData> =
+            store.tensors.iter().map(|t| t.as_ref()).collect();
         inputs.push(&toks);
         inputs.push(&tgts);
         let full = TensorData::F32 { dims: vec![b, l],

@@ -56,15 +56,17 @@ impl TensorSig {
 /// rejects anything else at parse time — an unknown or missing kind
 /// used to default to `""` and only surface later as an opaque
 /// backend "unsupported kind" error.
-pub const ARTIFACT_KINDS: [&str; 6] = [
-    "swap_step", "layer_loss", "calib_step", "eval_step", "seq_nll",
-    "train_step",
+pub const ARTIFACT_KINDS: [&str; 8] = [
+    "swap_step", "layer_loss", "calib_step", "calib_block", "embed",
+    "eval_step", "seq_nll", "train_step",
 ];
 
 /// The subset of [`ARTIFACT_KINDS`] that executes the model itself
 /// and therefore needs a resolvable `config` (a [`ModelMeta`]).
-pub const MODEL_KINDS: [&str; 4] =
-    ["calib_step", "eval_step", "seq_nll", "train_step"];
+pub const MODEL_KINDS: [&str; 6] = [
+    "calib_step", "calib_block", "embed", "eval_step", "seq_nll",
+    "train_step",
+];
 
 #[derive(Clone, Debug)]
 pub struct ArtifactEntry {
@@ -240,6 +242,58 @@ impl ArtifactEntry {
         }
         inputs.extend(stats.iter().cloned());
         Self::model_entry("calib_step", meta, inputs, stats)
+    }
+
+    /// The embed contract (streamed calibration, stage 0): inputs
+    /// (tok_emb [vocab, d_model], tokens [b, l] i32), one output — the
+    /// flattened token embeddings h [b*l, d_model].
+    pub fn embed(meta: &ModelMeta) -> ArtifactEntry {
+        let inputs = vec![
+            TensorSig { dims: meta.params[0].1.clone(),
+                        dtype: DType::F32 },
+            tokens_sig(meta),
+        ];
+        let outputs = vec![h_sig(meta)];
+        Self::model_entry("embed", meta, inputs, outputs)
+    }
+
+    /// The per-block calib contract (streamed calibration): inputs
+    /// (the block's nine param tensors in manifest order, h_in
+    /// [b*l, d_model], accum i32 [] — 1 accumulates the Gram streams,
+    /// 0 only propagates — four per-block Grams [d, d] and four
+    /// feature sums [d] in `gram::STREAMS` order) and outputs (the
+    /// four Grams, the four sums, h_out [b*l, d_model]).  One
+    /// artifact serves every block: all blocks share shapes.
+    pub fn calib_block(meta: &ModelMeta) -> ArtifactEntry {
+        let widths = [meta.d_model, meta.d_model, meta.d_model,
+                      meta.d_ff];
+        let mut inputs: Vec<TensorSig> = meta.params[1..10].iter()
+            .map(|(_, dims)| TensorSig { dims: dims.clone(),
+                                         dtype: DType::F32 })
+            .collect();
+        inputs.push(h_sig(meta));
+        inputs.push(scalar_sig(DType::I32));
+        let mut stats = Vec::with_capacity(8);
+        for d in widths {
+            stats.push(TensorSig { dims: vec![d, d],
+                                   dtype: DType::F32 });
+        }
+        for d in widths {
+            stats.push(TensorSig { dims: vec![d], dtype: DType::F32 });
+        }
+        inputs.extend(stats.iter().cloned());
+        let mut outputs = stats;
+        outputs.push(h_sig(meta));
+        Self::model_entry("calib_block", meta, inputs, outputs)
+    }
+}
+
+/// Residual-stream activation signature [b*l, d_model] shared by the
+/// streamed-calibration artifacts.
+fn h_sig(meta: &ModelMeta) -> TensorSig {
+    TensorSig {
+        dims: vec![meta.batch * meta.seq_len, meta.d_model],
+        dtype: DType::F32,
     }
 }
 
@@ -627,6 +681,23 @@ mod tests {
                    vec![meta.n_blocks, meta.d_ff, meta.d_ff]);
         assert_eq!(c.outputs[4].dims,
                    vec![meta.n_blocks, meta.d_model]);
+
+        let n = meta.batch * meta.seq_len;
+        let em = ArtifactEntry::embed(&meta);
+        assert_eq!(em.name, "embed_tiny");
+        assert_eq!(em.inputs.len(), 2);
+        assert_eq!(em.inputs[0].dims, meta.params[0].1);
+        assert_eq!(em.inputs[1].dtype, DType::I32);
+        assert_eq!(em.outputs[0].dims, vec![n, meta.d_model]);
+
+        let cb = ArtifactEntry::calib_block(&meta);
+        assert_eq!(cb.inputs.len(), 9 + 2 + 8);
+        assert_eq!(cb.outputs.len(), 9);
+        assert_eq!(cb.inputs[9].dims, vec![n, meta.d_model]); // h_in
+        assert_eq!(cb.inputs[10].dtype, DType::I32); // accum
+        assert_eq!(cb.outputs[3].dims, vec![meta.d_ff, meta.d_ff]);
+        assert_eq!(cb.outputs[8].dims, vec![n, meta.d_model]); // h_out
+        assert!(cb.model.is_some());
     }
 
     #[test]

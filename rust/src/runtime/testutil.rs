@@ -43,7 +43,8 @@ pub fn swap_manifest(d: usize, chunk_rows: usize) -> Manifest {
 }
 
 /// Manifest exposing the full artifact surface for one model config:
-/// the four model-execution kinds for `meta` plus swap-step (k=1 and
+/// the model-execution kinds for `meta` (including the streamed
+/// `embed`/`calib_block` pair) plus swap-step (k=1 and
 /// k=8, per-row + 2:4 patterns, impl "interp") and layer-loss
 /// artifacts for every prunable width — all interp-executable, so the
 /// whole train → calibrate → prune → refine → evaluate cycle runs
@@ -67,6 +68,8 @@ pub fn model_manifest(meta: &ModelMeta) -> Manifest {
     }
     for e in [
         ArtifactEntry::calib_step(meta),
+        ArtifactEntry::calib_block(meta),
+        ArtifactEntry::embed(meta),
         ArtifactEntry::eval_step(meta),
         ArtifactEntry::seq_nll(meta),
         ArtifactEntry::train_step(meta),

@@ -76,6 +76,11 @@ impl Matrix {
         GramView::new(&self.data, self.rows)
     }
 
+    /// Zero-copy [`MatrixView`] of this matrix.
+    pub fn view(&self) -> MatrixView<'_> {
+        MatrixView::new(&self.data, self.rows, self.cols)
+    }
+
     pub fn transpose(&self) -> Matrix {
         let mut out = Matrix::zeros(self.cols, self.rows);
         for i in 0..self.rows {
@@ -197,6 +202,54 @@ impl<'a> GramView<'a> {
 impl<'a> From<&'a Matrix> for GramView<'a> {
     fn from(m: &'a Matrix) -> GramView<'a> {
         m.as_gram()
+    }
+}
+
+/// Borrowed, zero-copy view of a rectangular row-major matrix: a
+/// `rows * cols` window into a backing buffer (a [`Matrix`], or a
+/// weight tensor leased from a `WeightStore` block).  `Copy`, so the
+/// refiners pass it by value; rows borrow from the backing store and
+/// are never cloned.
+#[derive(Clone, Copy, Debug)]
+pub struct MatrixView<'a> {
+    data: &'a [f32],
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl<'a> MatrixView<'a> {
+    pub fn new(data: &'a [f32], rows: usize, cols: usize) -> MatrixView<'a> {
+        assert_eq!(data.len(), rows * cols, "matrix view must be rows*cols");
+        MatrixView { data, rows, cols }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// The full contiguous rows*cols backing slice (row-major).
+    pub fn as_slice(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Owned copy — only for callers that must outlive the backing
+    /// store (snapshots, warm-start mutation); the saliency and swap
+    /// paths never need it.
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix::from_vec(self.rows, self.cols, self.data.to_vec())
+    }
+}
+
+impl<'a> From<&'a Matrix> for MatrixView<'a> {
+    fn from(m: &'a Matrix) -> MatrixView<'a> {
+        m.view()
     }
 }
 
@@ -346,6 +399,27 @@ mod tests {
         assert_eq!(v.at(0, 0), 1.0);
         assert_eq!(v.at(1, 1), 4.0);
         assert_eq!(v.matvec(&[1.0, 1.0]), vec![3.0, 7.0]);
+    }
+
+    #[test]
+    fn matrix_view_addresses_rect() {
+        let m = Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f32);
+        let v = m.view();
+        assert_eq!((v.rows, v.cols), (2, 3));
+        assert_eq!(v.at(1, 2), 5.0);
+        assert_eq!(v.row(1), &[3.0, 4.0, 5.0]);
+        assert_eq!(v.as_slice(), &m.data[..]);
+        assert_eq!(v.to_matrix(), m);
+    }
+
+    #[test]
+    fn matrix_view_slices_a_stack() {
+        // Two stacked 2x2 tensors in one buffer; the view addresses
+        // the second without copying.
+        let stack = vec![0.0f32, 0.0, 0.0, 0.0, 1.0, 2.0, 3.0, 4.0];
+        let v = MatrixView::new(&stack[4..8], 2, 2);
+        assert_eq!(v.at(0, 1), 2.0);
+        assert_eq!(v.row(1), &[3.0, 4.0]);
     }
 
     #[test]

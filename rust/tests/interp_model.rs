@@ -36,7 +36,8 @@ fn batch_row_parallelism_is_bit_identical() {
     let meta = meta_for(32, 16, 2, 32, 2, 8, 4);
     let store = ParamStore::init(&meta, 9);
     let (toks, tgts) = token_batch(&meta, 17);
-    let refs: Vec<&TensorData> = store.tensors.iter().collect();
+    let refs: Vec<&TensorData> =
+        store.tensors.iter().map(|t| t.as_ref()).collect();
     let (l1, g1) = interp_model::loss_and_grads_threads(
         &meta, &refs, &toks, &tgts, 1).unwrap();
     for threads in [2usize, 4, 7] {
@@ -64,7 +65,8 @@ fn train_step_gradients_match_finite_differences() {
     let meta = meta_for(32, 16, 2, 32, 2, 8, 2);
     let store = ParamStore::init(&meta, 3);
     let (toks, tgts) = token_batch(&meta, 5);
-    let refs: Vec<&TensorData> = store.tensors.iter().collect();
+    let refs: Vec<&TensorData> =
+        store.tensors.iter().map(|t| t.as_ref()).collect();
     let (loss, grads) =
         interp_model::loss_and_grads(&meta, &refs, &toks, &tgts)
             .unwrap();
@@ -84,8 +86,10 @@ fn train_step_gradients_match_finite_differences() {
         let fd = {
             let probe = |delta: f32| -> f64 {
                 let mut tensors = store.tensors.clone();
-                tensors[pi].as_f32_mut().unwrap()[j] += delta;
-                let refs: Vec<&TensorData> = tensors.iter().collect();
+                std::sync::Arc::make_mut(&mut tensors[pi])
+                    .as_f32_mut().unwrap()[j] += delta;
+                let refs: Vec<&TensorData> =
+                    tensors.iter().map(|t| t.as_ref()).collect();
                 interp_model::mean_nll(&meta, &refs, &toks, &tgts)
                     .unwrap()
             };
@@ -110,7 +114,8 @@ fn eval_step_nll_matches_hand_rolled_softmax() {
     let meta = meta_for(3, 4, 2, 8, 1, 4, 1);
     let store = ParamStore::init(&meta, 9);
     let (toks, tgts) = token_batch(&meta, 2);
-    let refs: Vec<&TensorData> = store.tensors.iter().collect();
+    let refs: Vec<&TensorData> =
+        store.tensors.iter().map(|t| t.as_ref()).collect();
     let logits =
         interp_model::forward_logits(&meta, &refs, &toks).unwrap();
     assert_eq!((logits.rows, logits.cols),

@@ -248,7 +248,7 @@ fn prop_checkpoint_segmentation_is_exact() {
         let cps = vec![gen.usize_in(1, t_max), gen.usize_in(1, t_max),
                        t_max + gen.usize_in(1, 10)];
         let ctx = LayerContext {
-            w: &inst.w, g: inst.g.as_gram(), stats: None,
+            w: inst.w.view(), g: inst.g.as_gram(), stats: None,
             pattern: inst.pattern, t_max, threads: 1,
             gmax: None,
         };
@@ -397,7 +397,7 @@ fn prop_engine_masks_identical_across_arms() {
         for arm in [Arm::Scalar, Arm::Simd] {
             let engine = NativeEngine { eps: 0.0, arm: Some(arm) };
             let ctx = LayerContext {
-                w: &inst.w, g: inst.g.as_gram(), stats: None,
+                w: inst.w.view(), g: inst.g.as_gram(), stats: None,
                 pattern: inst.pattern, t_max, threads: 1,
                 gmax: None,
             };
@@ -446,7 +446,7 @@ fn prop_block_skip_bound_never_skips_argmin() {
         for arm in kernels::arms() {
             let engine = NativeEngine { eps: 0.0, arm: Some(arm) };
             let ctx = LayerContext {
-                w: &w, g: g.as_gram(), stats: None, pattern,
+                w: w.view(), g: g.as_gram(), stats: None, pattern,
                 t_max: cfg.t_max, threads: 1,
                 gmax: None,
             };

@@ -320,8 +320,8 @@ fn pooled_offload_masks_bit_identical_to_serial() {
         let mut serial_masks = Vec::with_capacity(n_layers);
         for (w, g, warm) in &layers {
             let ctx = LayerContext {
-                w, g: g.as_gram(), stats: None, pattern, t_max,
-                threads: 1,
+                w: w.view(), g: g.as_gram(), stats: None, pattern,
+                t_max, threads: 1,
                 gmax: None,
             };
             let mut mask = warm.clone();
@@ -340,8 +340,8 @@ fn pooled_offload_masks_bit_identical_to_serial() {
             .map(|((w, g, warm), slot)| {
                 Box::new(move |rt: &Runtime| {
                     let ctx = LayerContext {
-                        w, g: g.as_gram(), stats: None, pattern,
-                        t_max, threads: 1,
+                        w: w.view(), g: g.as_gram(), stats: None,
+                        pattern, t_max, threads: 1,
                         gmax: None,
                     };
                     let mut mask = warm.clone();
@@ -385,7 +385,8 @@ fn offload_engine_snapshots_match_across_schedules() {
     let checkpoints = [2usize, 9, 16];
     let run = |rt: &Runtime| {
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max: 16,
+            w: w.view(), g: g.as_gram(), stats: None, pattern,
+            t_max: 16,
             threads: 1,
             gmax: None,
         };

@@ -51,13 +51,13 @@ fn plan(t_max: usize, checkpoints: &[usize], shard_rows: usize)
     }
 }
 
-fn work<'a>(li: usize, w: &Matrix, g: &'a Matrix, warm: &Matrix,
+fn work<'a>(li: usize, w: &'a Matrix, g: &'a Matrix, warm: &Matrix,
             pattern: Pattern, stats: Option<FeatureStats>,
             align: usize) -> LayerWork<'a> {
     LayerWork {
         li,
         label: format!("layer{li}"),
-        w: w.clone(),
+        w: w.view(),
         g: g.as_gram(),
         stats,
         pattern,
@@ -101,7 +101,7 @@ fn native_shard_sweep_masks_and_snapshots_bit_identical() {
 
         // Whole-layer reference straight through the engine.
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max,
             threads: 1,
             gmax: None,
         };
@@ -155,7 +155,7 @@ fn offload_shard_sweep_masks_and_snapshots_bit_identical() {
         // Whole-layer reference on a single-device pool.
         let serial = interp_pool(&manifest, 1, RuntimeOptions::default());
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max,
             threads: 1,
             gmax: None,
         };
@@ -207,7 +207,7 @@ fn shared_gmax_table_matches_per_shard_recompute() {
 
         // Whole-layer reference (computes its own local table).
         let ctx = LayerContext {
-            w: &w, g: g.as_gram(), stats: None, pattern, t_max,
+            w: w.view(), g: g.as_gram(), stats: None, pattern, t_max,
             threads: 1,
             gmax: None,
         };
@@ -224,8 +224,8 @@ fn shared_gmax_table_matches_per_shard_recompute() {
             while r0 < rows {
                 let r1 = (r0 + shard_rows).min(rows);
                 let ctx = LayerContext {
-                    w: &w, g: g.as_gram(), stats: None, pattern, t_max,
-                    threads: 1,
+                    w: w.view(), g: g.as_gram(), stats: None, pattern,
+                    t_max, threads: 1,
                     gmax,
                 };
                 let mut shard = Matrix::zeros(r1 - r0, d);
@@ -280,7 +280,7 @@ fn ragged_tail_shard_plan_covers_every_row() {
     let mut rng = Rng::new(7);
     let (w, g, warm) = layer(&mut rng, rows, d, pattern);
     let ctx = LayerContext {
-        w: &w, g: g.as_gram(), stats: None, pattern, t_max: 10,
+        w: w.view(), g: g.as_gram(), stats: None, pattern, t_max: 10,
         threads: 1,
         gmax: None,
     };
@@ -313,7 +313,8 @@ fn skewed_block_adaptive_sharding_matches_per_layer_reference() {
     let mut refs = Vec::new();
     for (w, g, warm) in &layers {
         let ctx = LayerContext {
-            w, g: g.as_gram(), stats: None, pattern, t_max: 12,
+            w: w.view(), g: g.as_gram(), stats: None, pattern,
+            t_max: 12,
             threads: 1,
             gmax: None,
         };

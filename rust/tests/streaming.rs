@@ -1,0 +1,274 @@
+//! Out-of-core streaming integration tests: the staged streamed
+//! pipeline (weights leased per block from a `.ssck` checkpoint via
+//! `StreamingStore`, Gram statistics from the incremental per-block
+//! stream) must be bit-invisible next to the fully-resident store —
+//! identical masks and snapshots for every engine, shard size and
+//! calibration mode, including journal-resumed runs — while holding
+//! at most two blocks of weights resident.
+//!
+//! Everything runs on an interp-backed pool over the in-memory tiny
+//! manifest, so the whole streamed path is tier-1 coverage.
+
+use std::path::PathBuf;
+
+use sparseswaps::coordinator::{
+    MaskSpec, PatternKind, PruneReport, PruneSession, Refiner,
+    RunOptions,
+};
+use sparseswaps::data::Dataset;
+use sparseswaps::model::testutil::tiny_manifest;
+use sparseswaps::model::{
+    checkpoint, MaskSet, ParamStore, StreamingStore, WeightStore,
+};
+use sparseswaps::runtime::testutil::interp_pool;
+use sparseswaps::runtime::{RuntimeError, RuntimeOptions, RuntimePool};
+
+/// Untrained tiny model + dataset (pruning is deterministic in the
+/// weights) and its checkpoint on disk for the streaming store.
+fn setup(tag: &str) -> (RuntimePool, ParamStore, Dataset, PathBuf) {
+    let pool = interp_pool(&tiny_manifest(), 1,
+                           RuntimeOptions::default());
+    let meta = pool.manifest().config("tiny").unwrap().clone();
+    let ds = Dataset::build(&meta, 42);
+    let store = ParamStore::init(&meta, meta.init_seed);
+    let path = std::env::temp_dir().join(format!(
+        "ssstream_test_{tag}_{}.ssck", std::process::id()));
+    checkpoint::save(&path, &store, None).unwrap();
+    (pool, store, ds, path)
+}
+
+fn prune_with(pool: &RuntimePool, store: &dyn WeightStore,
+              ds: &Dataset, spec: &MaskSpec, run: RunOptions)
+    -> Result<(MaskSet, PruneReport), RuntimeError> {
+    PruneSession::new(pool, store, ds, run).prune(spec)
+}
+
+fn assert_masks_eq(a: &MaskSet, b: &MaskSet, what: &str) {
+    for (li, (x, y)) in a.masks.iter().zip(&b.masks).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: layer {li} mask diverged");
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("ssstream_test_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+#[test]
+fn streamed_masks_match_resident_across_engines_and_shards() {
+    let (pool, store, ds, path) = setup("parity");
+    let meta = store.meta.clone();
+    // (refiner, sequential, shard_rows): every engine in both
+    // calibration modes, plus an awkward shard size on the native
+    // engine (shard scheduling is orthogonal to the weight store).
+    let offload = || Refiner::SparseSwapsOffload {
+        impl_name: "interp".into(),
+    };
+    let combos: Vec<(Refiner, bool, usize)> = vec![
+        (Refiner::SparseSwapsNative, false, 0),
+        (Refiner::SparseSwapsNative, true, 0),
+        (Refiner::SparseSwapsNative, false, 3),
+        (offload(), false, 0),
+        (offload(), true, 0),
+        (Refiner::Dsnot, false, 0),
+        (Refiner::Dsnot, true, 0),
+    ];
+    for (refiner, sequential, shard_rows) in combos {
+        let what = format!("{}/{}/shard{shard_rows}", refiner.label(),
+                           if sequential { "seq" } else { "oneshot" });
+        let spec = MaskSpec {
+            pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
+            refiner,
+            t_max: 6,
+            calib_batches: 2,
+            sequential,
+            checkpoints: vec![2, 6],
+            ..Default::default()
+        };
+        let run = RunOptions { shard_rows, ..Default::default() };
+        let (m_res, r_res) =
+            prune_with(&pool, &store, &ds, &spec, run.clone())
+                .unwrap();
+        let sstore = StreamingStore::open(&path, &meta, 0).unwrap();
+        let (m_str, r_str) =
+            prune_with(&pool, &sstore, &ds, &spec, run).unwrap();
+        assert_masks_eq(&m_res, &m_str, &what);
+        assert_eq!(r_res.snapshots.len(), r_str.snapshots.len(),
+                   "{what}: snapshot count diverged");
+        for (cp, snap) in &r_res.snapshots {
+            assert_masks_eq(snap, &r_str.snapshots[cp],
+                            &format!("{what}: checkpoint {cp}"));
+        }
+        // The streamed layer reports carry the same refinement
+        // trajectory, not just the same end state.
+        for (a, b) in r_res.layers.iter().zip(&r_str.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.swaps, b.swaps,
+                       "{what}: {} swap count diverged", a.name);
+            assert_eq!(a.loss_refined, b.loss_refined,
+                       "{what}: {} refined loss diverged", a.name);
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn streamed_resume_reproduces_uninterrupted_masks() {
+    // Sequential is the interesting mode: block 1's statistics pass
+    // through block 0's restored masks, so resume must push the
+    // journaled masks through the residual stream exactly.  The
+    // one-shot staged stream resumes too (restored blocks advance the
+    // stream densely without re-accumulating).
+    let (pool, store, ds, path) = setup("resume");
+    let meta = store.meta.clone();
+    for sequential in [true, false] {
+        let spec = MaskSpec {
+            pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
+            refiner: Refiner::SparseSwapsNative,
+            t_max: 6,
+            calib_batches: 2,
+            sequential,
+            ..Default::default()
+        };
+        let (m_full, _) = prune_with(&pool, &store, &ds, &spec,
+                                     RunOptions::default())
+            .unwrap();
+
+        let tag = if sequential { "seq" } else { "oneshot" };
+        let dir = tmp_dir(&format!("resume_{tag}"));
+        let sstore = StreamingStore::open(&path, &meta, 0).unwrap();
+        let run_halt = RunOptions {
+            journal: Some(dir.clone()),
+            halt_after_block: Some(0),
+            ..Default::default()
+        };
+        let (_, r_halt) =
+            prune_with(&pool, &sstore, &ds, &spec, run_halt).unwrap();
+        assert!(r_halt.layers.iter().all(|l| l.block == 0),
+                "{tag}: halted run must stop after block 0");
+
+        let sstore = StreamingStore::open(&path, &meta, 0).unwrap();
+        let run_resume = RunOptions {
+            journal: Some(dir.clone()),
+            resume: true,
+            ..Default::default()
+        };
+        let (m_res, r_res) =
+            prune_with(&pool, &sstore, &ds, &spec, run_resume)
+                .unwrap();
+        assert!(r_res.layers.iter().all(|l| l.block == 1),
+                "{tag}: resume must skip the journaled block");
+        assert_masks_eq(&m_full, &m_res,
+                        &format!("streamed {tag} resume"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn store_stats_account_bytes_exactly_through_a_prune() {
+    let (pool, store, ds, path) = setup("stats");
+    let meta = store.meta.clone();
+    let bytes_of = |i: usize| -> usize {
+        meta.params[i].1.iter().product::<usize>() * 4
+    };
+    let n = meta.n_blocks;
+    let globals_bytes: usize = [0usize, 1 + n * 9, 2 + n * 9].iter()
+        .map(|&i| bytes_of(i)).sum();
+    let max_block_bytes = (0..n)
+        .map(|b| (1 + b * 9..1 + (b + 1) * 9)
+            .map(bytes_of).sum::<usize>())
+        .max().unwrap();
+    let total_bytes: usize =
+        (0..meta.params.len()).map(bytes_of).sum();
+
+    let spec = MaskSpec {
+        pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
+        refiner: Refiner::SparseSwapsNative,
+        t_max: 4,
+        calib_batches: 2,
+        sequential: false,
+        ..Default::default()
+    };
+    let sstore = StreamingStore::open(&path, &meta, 0).unwrap();
+    let (masks, _) = prune_with(&pool, &sstore, &ds, &spec,
+                                RunOptions::default()).unwrap();
+    let stats = sstore.stats();
+    // One-shot streams lease every tensor exactly once: the 3 globals
+    // plus 9 params per block, totalling the whole model's bytes.
+    assert_eq!(stats.loads, 3 + 9 * n, "tensor load count");
+    assert_eq!(stats.loaded_bytes, total_bytes, "bytes read from disk");
+    // Peak residency stays within the staged 2-block bound (globals
+    // are released before the first block leases, so the high-water
+    // mark is whichever is larger), and everything is released once
+    // the stream passes it.
+    assert!(stats.peak_bytes >= max_block_bytes);
+    assert!(stats.peak_bytes <= globals_bytes.max(2 * max_block_bytes),
+            "peak {} above the 2-block bound (globals {}, 2-block {})",
+            stats.peak_bytes, globals_bytes, 2 * max_block_bytes);
+    assert!(stats.peak_bytes < total_bytes,
+            "streaming never holds the whole model");
+    assert_eq!(stats.resident_bytes, 0,
+               "all leases released after the prune");
+    assert_eq!(stats.releases, n + 1, "per-block releases + globals");
+
+    // The streamed output checkpoint round-trips: re-leased weights
+    // and the refined masks land byte-identical to the resident save.
+    let out = std::env::temp_dir().join(format!(
+        "ssstream_test_stats_out_{}.ssck", std::process::id()));
+    checkpoint::save_streaming(&out, &sstore, Some(&masks)).unwrap();
+    let (loaded, loaded_masks) = checkpoint::load(&out, &meta).unwrap();
+    for (i, (a, b)) in store.tensors.iter().zip(&loaded.tensors)
+        .enumerate()
+    {
+        assert_eq!(a.as_f32().unwrap(), b.as_f32().unwrap(),
+                   "tensor {i} diverged through save_streaming");
+    }
+    assert_masks_eq(&masks, &loaded_masks.unwrap(),
+                    "save_streaming masks");
+    std::fs::remove_file(&out).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn over_budget_streamed_prune_is_rejected() {
+    let (pool, store, ds, path) = setup("budget");
+    let meta = store.meta.clone();
+    let bytes_of = |i: usize| -> usize {
+        meta.params[i].1.iter().product::<usize>() * 4
+    };
+    let n = meta.n_blocks;
+    let globals_bytes: usize = [0usize, 1 + n * 9, 2 + n * 9].iter()
+        .map(|&i| bytes_of(i)).sum();
+    let max_block_bytes = (0..n)
+        .map(|b| (1 + b * 9..1 + (b + 1) * 9)
+            .map(bytes_of).sum::<usize>())
+        .max().unwrap();
+    let spec = MaskSpec {
+        pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
+        refiner: Refiner::SparseSwapsNative,
+        t_max: 4,
+        calib_batches: 2,
+        sequential: false,
+        ..Default::default()
+    };
+    // Enough for the globals and one block, not for the two-block
+    // staging overlap: the prefetch lease must be refused and the
+    // prune must surface the budget error instead of thrashing.
+    let budget = globals_bytes.max(max_block_bytes)
+        + max_block_bytes / 2;
+    let sstore = StreamingStore::open(&path, &meta, budget).unwrap();
+    let err = prune_with(&pool, &sstore, &ds, &spec,
+                         RunOptions::default()).unwrap_err();
+    assert!(err.to_string().contains("budget"),
+            "unexpected error: {err}");
+
+    // A budget that fits the staged overlap succeeds outright.
+    let budget = globals_bytes.max(2 * max_block_bytes);
+    let sstore = StreamingStore::open(&path, &meta, budget).unwrap();
+    prune_with(&pool, &sstore, &ds, &spec, RunOptions::default())
+        .unwrap();
+    std::fs::remove_file(&path).ok();
+}
