@@ -55,7 +55,16 @@
 //! bound, and streamed wall clock under 1.15x resident, and writes
 //! the "stream" section of `reports/bench_kernels.json`.
 //!
-//! Part 8 (needs artifacts): the fused-XLA and Pallas offload engines
+//! Part 8 (artifact-free, always runs): the pooled-calibration gate —
+//! the striped Gram accumulation and fanned perplexity eval across
+//! 1/2/4 device workers vs the serial baseline.  Gates on bit-
+//! identical Grams, refined masks and ppl at every device count, on
+//! the resident-accumulator upload bytes matching the tokens-only
+//! steady-state model exactly, and on the 4-device wall coming in
+//! under 0.9x serial; writes the "calib" section of
+//! `reports/bench_kernels.json`.
+//!
+//! Part 9 (needs artifacts): the fused-XLA and Pallas offload engines
 //! on their own artifact-width layer.
 mod common;
 
@@ -71,6 +80,10 @@ use sparseswaps::coordinator::{
     SweepConfig, TrainConfig,
 };
 use sparseswaps::data::{Dataset, Split};
+use sparseswaps::eval::{perplexity, perplexity_pool};
+use sparseswaps::gram::{
+    accumulate, accumulate_pool, expected_upload_bytes, STREAMS,
+};
 use sparseswaps::model::testutil::{meta_for, tiny_manifest, tiny_meta};
 use sparseswaps::model::{checkpoint, ParamStore, StreamingStore,
                          WeightStore};
@@ -1219,6 +1232,177 @@ fn stream_section() {
               and 2-block residency OK)");
 }
 
+/// Pooled calibration & eval vs the serial baseline.  Exits non-zero
+/// on any Gram/mask/ppl divergence across device counts, on upload
+/// bytes past the tokens-only steady-state model, or on the 4-device
+/// calibration wall at or past 0.9x serial.
+fn calib_section() {
+    let quick = std::env::var("SPARSESWAPS_QUICK").is_ok();
+    let n_blocks = if quick { 4usize } else { 6 };
+    let meta = meta_for(96, 48, 2, 192, n_blocks, 16, 2);
+    let manifest = model_manifest(&meta);
+    let ds = Dataset::build(&meta, 42);
+    let store = ParamStore::init(&meta, 5);
+    let n_batches = 12usize;
+    let calib = ds.batches(&meta, Split::Calibration, n_batches);
+
+    // Min-of-two walls: the first pass per pool also pays artifact
+    // compilation, the second is the steady state we gate on.
+    let serial_pool = interp_pool(&manifest, 1, RuntimeOptions::default());
+    let mut serial_secs = f64::INFINITY;
+    let mut baseline = None;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        let s = accumulate(serial_pool.primary(), &store, &calib)
+            .expect("serial calibration");
+        serial_secs = serial_secs.min(t0.elapsed().as_secs_f64());
+        baseline.get_or_insert(s);
+    }
+    let serial_secs = serial_secs.max(1e-9);
+    let baseline = baseline.unwrap();
+
+    let mut table = Table::new(
+        format!("Pooled calibration — striped fan-out vs serial \
+                 ({n_blocks} blocks, d_model=48, d_ff=192, \
+                 {n_batches} batches)"),
+        &["devices", "seconds", "speedup", "MiB up", "MiB down",
+          "probes resident"]);
+    table.row(vec![
+        "serial".into(), format!("{serial_secs:.3}"), "1.00x".into(),
+        "-".into(), "-".into(), "-".into(),
+    ]);
+    let mut pooled_json: Vec<Json> = Vec::new();
+    let mut wall4 = f64::INFINITY;
+    for devices in [1usize, 2, 4] {
+        let pool = interp_pool(&manifest, devices,
+                               RuntimeOptions::default());
+        let mut secs = f64::INFINITY;
+        let mut stats = None;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            let s = accumulate_pool(&pool, &store, &calib)
+                .expect("pooled calibration");
+            secs = secs.min(t0.elapsed().as_secs_f64());
+            stats.get_or_insert(s);
+        }
+        let secs = secs.max(1e-9);
+        let stats = stats.unwrap();
+        if devices == 4 {
+            wall4 = secs;
+        }
+        for block in 0..n_blocks {
+            for si in 0..STREAMS.len() {
+                if baseline.stream_gram(block, si)
+                       != stats.stream_gram(block, si)
+                   || baseline.stream_sum(block, si)
+                       != stats.stream_sum(block, si) {
+                    eprintln!("[ablation_engine] PARITY FAILURE: \
+                               {devices}-device Gram stats diverged \
+                               from serial (block {block}, stream \
+                               {})", STREAMS[si]);
+                    std::process::exit(1);
+                }
+            }
+        }
+        let t = &stats.traffic;
+        let expected = expected_upload_bytes(&store, devices, &calib);
+        if t.upload_bytes > expected {
+            eprintln!("[ablation_engine] PERF GATE FAILURE: \
+                       {devices}-device calibration uploaded {} B, \
+                       past the tokens-only steady-state model's \
+                       {expected} B — resident accumulators are \
+                       re-uploading", t.upload_bytes);
+            std::process::exit(1);
+        }
+        let mib = |b: u64| b as f64 / (1u64 << 20) as f64;
+        table.row(vec![
+            format!("{devices}"),
+            format!("{secs:.3}"),
+            format!("{:.2}x", serial_secs / secs),
+            format!("{:.2}", mib(t.upload_bytes)),
+            format!("{:.2}", mib(t.download_bytes)),
+            format!("{}/{}", t.probe_hits,
+                    t.probe_hits + t.probe_misses),
+        ]);
+        pooled_json.push(Json::obj(vec![
+            ("devices", Json::num(devices as f64)),
+            ("seconds", Json::num(secs)),
+            ("speedup", Json::num(serial_secs / secs)),
+            ("upload_bytes", Json::num(t.upload_bytes as f64)),
+            ("expected_upload_bytes", Json::num(expected as f64)),
+            ("download_bytes", Json::num(t.download_bytes as f64)),
+            ("probe_hit_rate", Json::num(t.probe_hit_rate())),
+        ]));
+    }
+    table.print();
+    if wall4 >= 0.9 * serial_secs {
+        eprintln!("[ablation_engine] PERF GATE FAILURE: 4-device \
+                   calibration wall {wall4:.3}s is not under 0.9x \
+                   the serial {serial_secs:.3}s");
+        std::process::exit(1);
+    }
+
+    // Refined masks must ride the same decomposition: a pooled prune
+    // must reproduce the serial masks bit-for-bit.
+    let spec = MaskSpec {
+        criterion: Criterion::Wanda,
+        pattern_kind: PatternKind::Unstructured { sparsity: 0.6 },
+        refiner: Refiner::SparseSwapsNative,
+        t_max: 4,
+        calib_batches: 3,
+        sequential: false,
+        checkpoints: Vec::new(),
+    };
+    let (serial_masks, _) =
+        PruneSession::new(&serial_pool, &store, &ds,
+                          RunOptions::default())
+            .prune(&spec).expect("serial prune");
+    let pool4 = interp_pool(&manifest, 4, RuntimeOptions::default());
+    let (pooled_masks, _) =
+        PruneSession::new(&pool4, &store, &ds, RunOptions::default())
+            .prune(&spec).expect("pooled prune");
+    for (li, (a, b)) in serial_masks.masks.iter()
+        .zip(&pooled_masks.masks).enumerate()
+    {
+        if a.data != b.data {
+            eprintln!("[ablation_engine] PARITY FAILURE: 4-device \
+                       layer {li} mask diverged from the serial \
+                       prune");
+            std::process::exit(1);
+        }
+    }
+
+    // Fanned eval must reduce to the serial ppl bit-for-bit.
+    let val = ds.batches(&meta, Split::Validation, 5);
+    let serial_ppl = perplexity(serial_pool.primary(), &store, &val)
+        .expect("serial ppl");
+    let pooled_ppl = perplexity_pool(&pool4, &store, &val)
+        .expect("pooled ppl");
+    if serial_ppl.to_bits() != pooled_ppl.to_bits() {
+        eprintln!("[ablation_engine] PARITY FAILURE: 4-device ppl \
+                   {pooled_ppl} diverged from serial {serial_ppl}");
+        std::process::exit(1);
+    }
+
+    let section = Json::obj(vec![
+        ("d_model", Json::num(48.0)),
+        ("d_ff", Json::num(192.0)),
+        ("blocks", Json::num(n_blocks as f64)),
+        ("batches", Json::num(n_batches as f64)),
+        ("serial_seconds", Json::num(serial_secs)),
+        ("pooled", Json::Arr(pooled_json)),
+        ("ppl", Json::num(serial_ppl)),
+    ]);
+    if let Err(e) = merge_json_section("reports/bench_kernels.json",
+                                       "calib", section) {
+        eprintln!("[ablation_engine] FAILED writing bench_kernels: {e}");
+        std::process::exit(1);
+    }
+    println!("[ablation_engine] calib section written to \
+              reports/bench_kernels.json (pooled Gram/mask/ppl \
+              parity and resident-upload accounting OK)");
+}
+
 fn main() {
     native_section();
     pool_section();
@@ -1227,6 +1411,7 @@ fn main() {
     faults_section();
     sweep_section();
     stream_section();
+    calib_section();
 
     // Offload engines (need AOT artifacts; their own layer at an
     // artifact width).

@@ -68,7 +68,7 @@ use crate::coordinator::scheduler::{
 };
 use crate::coordinator::swaploop::OffloadEngine;
 use crate::data::{Dataset, Split};
-use crate::gram::{accumulate, BlockStats, GramStats, GramStream};
+use crate::gram::{accumulate_pool, BlockStats, GramStats, GramStream};
 use crate::model::store::{MaskSet, ParamStore};
 use crate::model::weight_store::{BlockLease, StoreError, WeightStore};
 use crate::pruning::dsnot::DsnotEngine;
@@ -81,7 +81,7 @@ use crate::pruning::saliency::{self, Criterion};
 use crate::pruning::sparseswaps::NativeEngine;
 use crate::runtime::manifest::{ModelMeta, PrunableLayer};
 use crate::runtime::pool::RuntimePool;
-use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::service::{PhaseTraffic, RuntimeError};
 use crate::runtime::tensor_data::TensorData;
 use crate::util::cli::{JournalFlags, PoolFlags};
 use crate::util::tensor::{Matrix, MatrixView};
@@ -350,6 +350,13 @@ pub struct PruneReport {
     /// layer-parallel schedule, wall seconds under the serial one).
     pub refine_seconds: f64,
     pub warmstart_seconds: f64,
+    /// Runtime traffic attributable to this run's calibration passes
+    /// (uploads, downloads, cache probes), merged across the pool's
+    /// workers.  Zero when the session served cached one-shot
+    /// statistics.  Under the streamed one-shot driver the prefetch
+    /// stage overlaps refinement on the same device workers, so this
+    /// can include concurrently scheduled refinement traffic there.
+    pub calib_traffic: PhaseTraffic,
     /// Mask snapshots per checkpoint (whole-model MaskSets).
     pub snapshots: BTreeMap<usize, MaskSet>,
 }
@@ -497,6 +504,7 @@ impl<'a> PruneSession<'a> {
         // hold whole-model statistics resident, so its one-shot runs
         // accumulate per block inside the staged stream instead.
         let mut calib_pre = 0.0;
+        let mut traffic_pre = PhaseTraffic::default();
         if !spec.sequential {
             if let Some(resident) = self.store.as_resident() {
                 let cached = matches!(&self.dense_stats,
@@ -507,9 +515,10 @@ impl<'a> PruneSession<'a> {
                                                 Split::Calibration,
                                                 spec.calib_batches);
                     let t0 = Instant::now();
-                    let stats = accumulate(self.pool.primary(),
-                                           resident, &calib)?;
+                    let stats = accumulate_pool(self.pool, resident,
+                                                &calib)?;
                     calib_pre = t0.elapsed().as_secs_f64();
+                    traffic_pre = stats.traffic;
                     self.calibrations += 1;
                     self.dense_stats =
                         Some((spec.calib_batches, stats));
@@ -522,7 +531,7 @@ impl<'a> PruneSession<'a> {
         let mut seq_calibs = 0;
         let out = prune_impl(self.pool, self.store, self.ds, spec,
                              &self.run, warm, dense, calib_pre,
-                             &mut seq_calibs);
+                             traffic_pre, &mut seq_calibs);
         self.calibrations += seq_calibs;
         out
     }
@@ -729,9 +738,9 @@ impl BlockStage<'_> {
 fn prune_impl(pool: &RuntimePool, store: &dyn WeightStore,
               ds: &Dataset, spec: &MaskSpec, run: &RunOptions,
               warm_from: Option<&MaskSet>, dense: Option<&GramStats>,
-              calib_pre: f64, calibrations: &mut usize)
+              calib_pre: f64, traffic_pre: PhaseTraffic,
+              calibrations: &mut usize)
     -> Result<(MaskSet, PruneReport), RuntimeError> {
-    let rt: &Runtime = pool.primary();
     let meta = store.meta().clone();
     // Sequential mode rebuilds its calibration batches here; resident
     // one-shot mode received the session's cached dense statistics; a
@@ -744,6 +753,7 @@ fn prune_impl(pool: &RuntimePool, store: &dyn WeightStore,
     let mut masks = MaskSet::all_ones(&meta);
     let report = PruneReport {
         calib_seconds: calib_pre,
+        calib_traffic: traffic_pre,
         ..PruneReport::default()
     };
     // Snapshot capture is tracked explicitly per (checkpoint, layer):
@@ -861,9 +871,12 @@ fn prune_impl(pool: &RuntimePool, store: &dyn WeightStore,
                     let masked = resident.masked(&stage.masks);
                     let batches =
                         calib.as_ref().expect("sequential batches");
-                    stats_block = accumulate(rt, &masked, batches)?;
+                    stats_block = accumulate_pool(pool, &masked,
+                                                  batches)?;
                     stage.report.calib_seconds +=
                         t0.elapsed().as_secs_f64();
+                    stage.report.calib_traffic
+                        .merge(&stats_block.traffic);
                     *calibrations += 1;
                     &stats_block
                 } else {
@@ -910,18 +923,17 @@ fn prune_impl(pool: &RuntimePool, store: &dyn WeightStore,
 /// and run its calibration forward — accumulating Gram statistics
 /// unless the block was journal-restored (`skip`), in which case the
 /// residual streams just advance through it.
-fn fetch_oneshot(store: &dyn WeightStore, rt: &Runtime,
-                 stream: &mut GramStream, meta: &ModelMeta, b: usize,
-                 skip: bool)
+fn fetch_oneshot(store: &dyn WeightStore, stream: &mut GramStream,
+                 meta: &ModelMeta, b: usize, skip: bool)
     -> Result<(BlockLease, Option<BlockStats>, f64), RuntimeError> {
     let lease = store.lease_block(b).map_err(store_err)?;
     let t0 = Instant::now();
     let params = lease.block_params(meta, b, None);
     let stats = if skip {
-        stream.push_block(rt, &params)?;
+        stream.push_block(&params)?;
         None
     } else {
-        Some(stream.accumulate_and_push(rt, &params)?)
+        Some(stream.accumulate_and_push(&params)?)
     };
     Ok((lease, stats, t0.elapsed().as_secs_f64()))
 }
@@ -942,14 +954,17 @@ fn run_streamed(store: &dyn WeightStore, meta: &ModelMeta,
                 completed: &[usize], stage: &mut BlockStage<'_>,
                 calibrations: &mut usize)
     -> Result<(), RuntimeError> {
-    let rt: &Runtime = stage.pool.primary();
     // Embed the calibration batches from the leased globals, then
     // release them: from here on only the residual streams plus at
-    // most two leased blocks are resident.
+    // most two leased blocks are resident.  The stream fans its batch
+    // stripes over the pool's healthy workers; the decomposition is
+    // device-count independent, so streamed masks keep matching the
+    // resident store bit-for-bit at any pool size.
     let t0 = Instant::now();
     let globals = store.lease_globals().map_err(store_err)?;
-    let mut stream = GramStream::start(rt, meta, globals.tensor(0),
-                                       calib)?;
+    let workers = stage.pool.healthy_runtimes();
+    let mut stream = GramStream::start(&workers, meta,
+                                       globals.tensor(0), calib)?;
     drop(globals);
     store.release_globals();
     stage.report.calib_seconds += t0.elapsed().as_secs_f64();
@@ -970,7 +985,7 @@ fn run_streamed(store: &dyn WeightStore, meta: &ModelMeta,
                 // streams through its restored masks, then release it
                 // like a refined block.
                 let t0 = Instant::now();
-                stream.push_block(rt, &lease.block_params(
+                stream.push_block(&lease.block_params(
                     meta, b, Some(&stage.masks)))?;
                 stage.report.calib_seconds +=
                     t0.elapsed().as_secs_f64();
@@ -982,7 +997,7 @@ fn run_streamed(store: &dyn WeightStore, meta: &ModelMeta,
             // whole-model recalibration sees at this block's input.
             let t0 = Instant::now();
             let bs = stream.accumulate_block(
-                rt, &lease.block_params(meta, b, None))?;
+                &lease.block_params(meta, b, None))?;
             stage.report.calib_seconds += t0.elapsed().as_secs_f64();
             *calibrations += 1;
             let mut stats = GramStats::hollow(meta);
@@ -1009,7 +1024,7 @@ fn run_streamed(store: &dyn WeightStore, meta: &ModelMeta,
             // Advance the residual streams through the block with its
             // refined mask applied, then drop it from host memory.
             let t0 = Instant::now();
-            stream.push_block(rt, &lease.block_params(
+            stream.push_block(&lease.block_params(
                 meta, b, Some(&stage.masks)))?;
             stage.report.calib_seconds += t0.elapsed().as_secs_f64();
             store.release_block(b);
@@ -1027,8 +1042,8 @@ fn run_streamed(store: &dyn WeightStore, meta: &ModelMeta,
             let skip = completed.contains(&b);
             let (lease, bstats, secs) = match next.take() {
                 Some(pre) => pre,
-                None => fetch_oneshot(store, rt, &mut stream, meta,
-                                      b, skip)?,
+                None => fetch_oneshot(store, &mut stream, meta, b,
+                                      skip)?,
             };
             stage.report.calib_seconds += secs;
             if let Some(bs) = bstats {
@@ -1044,13 +1059,11 @@ fn run_streamed(store: &dyn WeightStore, meta: &ModelMeta,
                                           Option<BlockStats>, f64)>,
                                   RuntimeError> {
                     let handle = (b + 1 < meta.n_blocks).then(|| {
-                        let rt2 = rt.clone();
                         let stream = &mut stream;
                         let skip_next =
                             completed.contains(&(b + 1));
                         s.spawn(move || fetch_oneshot(
-                            store, &rt2, stream, meta, b + 1,
-                            skip_next))
+                            store, stream, meta, b + 1, skip_next))
                     });
                     stage.refine_one(b, BlockWeights::Lease(&lease),
                                      &stats)?;
@@ -1072,6 +1085,7 @@ fn run_streamed(store: &dyn WeightStore, meta: &ModelMeta,
             }
         }
     }
+    stage.report.calib_traffic.merge(&stream.traffic());
     Ok(())
 }
 

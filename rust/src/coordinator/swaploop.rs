@@ -29,7 +29,6 @@
 //!     this module only decides how far one artifact call advances.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::pruning::engine::{
@@ -50,9 +49,12 @@ use crate::util::tensor::Matrix;
 /// one worker's cache.  The scheduler draws one per *layer* (shared
 /// Gram key across that layer's shards); each `refine_rows` call
 /// additionally draws its own for the shard-local W chunks.
+///
+/// Delegates to the runtime-layer allocator so calibration and eval
+/// drivers (which key weights and resident accumulators the same way)
+/// share the one id space.
 pub fn next_refinement_id() -> u64 {
-    static NEXT: AtomicU64 = AtomicU64::new(1);
-    NEXT.fetch_add(1, Ordering::Relaxed)
+    crate::runtime::service::next_buffer_layer_id()
 }
 
 /// Lower a runtime failure into the engine error space, preserving

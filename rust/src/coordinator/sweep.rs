@@ -33,7 +33,7 @@ use crate::coordinator::pipeline::{
     MaskSpec, PatternKind, PruneSession, Refiner,
 };
 use crate::data::Split;
-use crate::eval::perplexity;
+use crate::eval::perplexity_pool;
 use crate::model::store::MaskSet;
 use crate::model::weight_store::WeightStore;
 use crate::pruning::saliency::Criterion;
@@ -302,8 +302,8 @@ pub fn sweep(session: &mut PruneSession, cfg: &SweepConfig)
                 (None, None)
             };
         let ppl = match &val {
-            Some(batches) => Some(perplexity(
-                session.pool().primary(),
+            Some(batches) => Some(perplexity_pool(
+                session.pool(),
                 &session.resident_store()?.masked(&masks), batches)?),
             None => None,
         };

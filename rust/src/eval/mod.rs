@@ -1,24 +1,211 @@
 //! Evaluation harness: perplexity (WikiText stand-in) and synthetic
 //! zero-shot accuracy (EleutherAI-suite stand-in).
+//!
+//! Both evaluators run as `RuntimePool` workloads: eval items (ppl
+//! batches, zero-shot sequence chunks) fan round-robin across the
+//! pool's healthy workers with the weight tensors cached per device
+//! (shipped once, then key-only [`ExecInput::CachedRef`] probes), and
+//! the per-item results reduce on the host in ascending item order.
+//! Each item's numbers are computed independently — no cross-item f32
+//! chain — so the f64 NLL reduction is bit-identical for any device
+//! count, serial included (the serial path runs the same driver over
+//! a one-worker set).
 
 pub mod zeroshot;
 
+use std::sync::Arc;
+
 use crate::model::store::ParamStore;
-use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::pool::RuntimePool;
+use crate::runtime::service::{
+    next_buffer_layer_id, BufferKey, ExecInput, Runtime, RuntimeError,
+};
 use crate::runtime::tensor_data::TensorData;
 
-/// Perplexity of `store` over held-out batches: exp(total_nll / tokens).
-pub fn perplexity(rt: &Runtime, store: &ParamStore,
-                  batches: &[(TensorData, TensorData)])
+/// Residency retries per worker before a batch gives up on the cached
+/// protocol (covers weights evicted by a tiny device budget).
+const RESIDENT_ATTEMPTS: usize = 4;
+
+/// Execute `artifact` once per item, fanning items across `workers`
+/// round-robin (item i → worker i mod n).  Every call's inputs are the
+/// store's weight tensors followed by the item's inline tail
+/// (tokens/targets/mask); weights upload once per worker and are
+/// probed key-only afterwards, so steady-state items ship only their
+/// own tensors.  Items are independent, so results are returned in
+/// item order regardless of which worker produced them — the caller's
+/// ordered reduction sees the same sequence at any device count.
+/// Transient worker faults re-run the item on the next healthy worker
+/// (weights attached) and feed the pool's quarantine accounting.
+pub(crate) fn fan_indexed(workers: &[Runtime],
+                          pool: Option<&RuntimePool>,
+                          store: &ParamStore, artifact: &str,
+                          items: &[Vec<TensorData>])
+    -> Result<Vec<Vec<TensorData>>, RuntimeError> {
+    assert!(!workers.is_empty(), "eval needs at least one worker");
+    let n = workers.len();
+    let weights_id = next_buffer_layer_id();
+
+    // One call in the cached-weight protocol.  `attached` ships the
+    // weights (first call per worker, or after a residency miss).
+    let call = |rt: &Runtime, item: &[TensorData], attached: bool|
+        -> Result<Vec<TensorData>, RuntimeError> {
+        let mut inputs: Vec<ExecInput> =
+            Vec::with_capacity(store.tensors.len() + item.len());
+        for (pi, p) in store.tensors.iter().enumerate() {
+            let key = BufferKey {
+                layer: weights_id,
+                tensor: format!("p{pi}"),
+                generation: 0,
+            };
+            inputs.push(if attached {
+                ExecInput::Cached { key, data: Arc::clone(p) }
+            } else {
+                ExecInput::CachedRef { key }
+            });
+        }
+        inputs.extend(item.iter().cloned().map(ExecInput::Inline));
+        rt.execute_cached(artifact, inputs)
+    };
+
+    // Phase 1: each worker walks its own item subset.  A transient
+    // worker failure abandons the rest of that worker's items to the
+    // fallback phase instead of spinning on a dead service.
+    type WorkerOut = (Vec<(usize, Vec<TensorData>)>,
+                      Option<RuntimeError>);
+    let per_worker: Vec<WorkerOut> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..n).map(|w| {
+            let ids: Vec<usize> = (w..items.len()).step_by(n).collect();
+            let rt = workers[w].clone();
+            let call = &call;
+            scope.spawn(move || {
+                let mut done = Vec::with_capacity(ids.len());
+                let mut attached = true;
+                let mut residency_misses = 0usize;
+                let mut pos = 0usize;
+                while pos < ids.len() {
+                    let i = ids[pos];
+                    match call(&rt, &items[i], attached) {
+                        Ok(out) => {
+                            done.push((i, out));
+                            attached = false;
+                            pos += 1;
+                        }
+                        Err(RuntimeError::NotResident(_))
+                            if residency_misses < RESIDENT_ATTEMPTS => {
+                            residency_misses += 1;
+                            attached = true;
+                        }
+                        Err(e) => return (done, Some(e)),
+                    }
+                }
+                (done, None)
+            })
+        }).collect();
+        handles.into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| (
+                Vec::new(),
+                Some(RuntimeError::Msg("eval worker panicked".into())))))
+            .collect()
+    });
+
+    let mut slots: Vec<Option<Vec<TensorData>>> =
+        (0..items.len()).map(|_| None).collect();
+    let mut failed_workers = vec![false; n];
+    let mut first_err: Option<RuntimeError> = None;
+    for (w, (done, err)) in per_worker.into_iter().enumerate() {
+        let ran = !done.is_empty();
+        for (i, out) in done {
+            slots[i] = Some(out);
+        }
+        if let Some(e) = err {
+            failed_workers[w] = true;
+            if let Some(p) = pool {
+                p.report_worker_outcome(workers[w].device(), false);
+            }
+            if !e.is_transient() {
+                // Deterministic failure: no worker can fix it.
+                first_err = Some(first_err.unwrap_or(e));
+            }
+        } else if ran {
+            // A worker with zero items ran nothing — no outcome.
+            if let Some(p) = pool {
+                p.report_worker_outcome(workers[w].device(), true);
+            }
+        }
+    }
+    if let Some(e) = first_err {
+        for w in workers {
+            w.invalidate(weights_id);
+        }
+        return Err(e);
+    }
+
+    // Phase 2: items stranded by a failed worker retry on the
+    // surviving workers with the weights attached.
+    let alive: Vec<usize> =
+        (0..n).filter(|&w| !failed_workers[w]).collect();
+    let mut next_alive = 0usize;
+    for i in 0..slots.len() {
+        if slots[i].is_some() {
+            continue;
+        }
+        let mut attempts = 0usize;
+        loop {
+            if alive.is_empty() || attempts > alive.len() {
+                for w in workers {
+                    w.invalidate(weights_id);
+                }
+                return Err(RuntimeError::Transient(
+                    "eval item failed on every healthy worker".into()));
+            }
+            let w = alive[next_alive % alive.len()];
+            next_alive += 1;
+            match call(&workers[w], &items[i], true) {
+                Ok(out) => {
+                    slots[i] = Some(out);
+                    if let Some(p) = pool {
+                        p.note_shard_retry();
+                    }
+                    break;
+                }
+                Err(e) if e.is_transient() => attempts += 1,
+                Err(e) => {
+                    for w in workers {
+                        w.invalidate(weights_id);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+    }
+    for w in workers {
+        w.invalidate(weights_id);
+    }
+    Ok(slots.into_iter().map(|s| s.expect("every item filled"))
+        .collect())
+}
+
+fn perplexity_workers(workers: &[Runtime], pool: Option<&RuntimePool>,
+                      store: &ParamStore,
+                      batches: &[(TensorData, TensorData)])
     -> Result<f64, RuntimeError> {
     let artifact = format!("eval_step_{}", store.meta.name);
+    let items: Vec<Vec<TensorData>> = batches.iter()
+        .map(|(tokens, targets)| vec![tokens.clone(), targets.clone()])
+        .collect();
+    let outs = fan_indexed(workers, pool, store, &artifact, &items)?;
     let mut nll = 0.0f64;
     let mut count = 0.0f64;
-    for (tokens, targets) in batches {
-        let mut inputs = store.tensor_args();
-        inputs.push(tokens.clone());
-        inputs.push(targets.clone());
-        let out = rt.execute(&artifact, inputs)?;
+    // Ordered f64 reduction in ascending batch index — the other half
+    // of the any-device-count bit-identity contract.
+    for out in &outs {
+        if out.len() != 2 {
+            return Err(RuntimeError::BadOutputArity {
+                artifact: artifact.clone(),
+                expected: 2,
+                got: out.len(),
+            });
+        }
         nll += out[0].scalar_value()?;
         count += out[1].scalar_value()?;
     }
@@ -28,10 +215,30 @@ pub fn perplexity(rt: &Runtime, store: &ParamStore,
     Ok((nll / count).exp())
 }
 
+/// Perplexity of `store` over held-out batches: exp(total_nll /
+/// tokens), on a single runtime worker.  Redefined onto the fan +
+/// ordered-reduce driver, so the result is bit-identical to
+/// [`perplexity_pool`] at any device count.
+pub fn perplexity(rt: &Runtime, store: &ParamStore,
+                  batches: &[(TensorData, TensorData)])
+    -> Result<f64, RuntimeError> {
+    perplexity_workers(std::slice::from_ref(rt), None, store, batches)
+}
+
+/// [`perplexity`] fanned across a pool's healthy workers with an
+/// ordered f64 NLL reduction.
+pub fn perplexity_pool(pool: &RuntimePool, store: &ParamStore,
+                       batches: &[(TensorData, TensorData)])
+    -> Result<f64, RuntimeError> {
+    perplexity_workers(&pool.healthy_runtimes(), Some(pool), store,
+                       batches)
+}
+
 #[cfg(test)]
 mod tests {
-    // Runtime-dependent tests live in rust/tests/pipeline_e2e.rs; here we
-    // only check the ppl arithmetic contract via a tiny helper.
+    // Runtime-dependent tests live in rust/tests/pipeline_e2e.rs and
+    // rust/tests/calib.rs; here we only check the ppl arithmetic
+    // contract via a tiny helper.
     #[test]
     fn ppl_formula() {
         let nll = 2.0f64 * 100.0;

@@ -10,7 +10,9 @@
 //! NLL wins.  Chance accuracy is 25%.
 
 use crate::data::Dataset;
+use crate::eval::fan_indexed;
 use crate::model::store::ParamStore;
+use crate::runtime::pool::RuntimePool;
 use crate::runtime::service::{Runtime, RuntimeError};
 use crate::runtime::tensor_data::TensorData;
 use crate::util::prng::Rng;
@@ -110,8 +112,12 @@ pub fn pick_best(nlls: &[f64]) -> Option<usize> {
 /// Summed choice-span NLL per (task, choice), batched through the
 /// `seq_nll_{cfg}` artifact.  Sequences longer than seq_len + 1 keep
 /// their tail (the choice span must survive the truncation); the mask
-/// window is shifted accordingly.
-pub fn score_tasks(rt: &Runtime, store: &ParamStore, tasks: &[Task])
+/// window is shifted accordingly.  Chunks fan across `workers` with
+/// the weight tensors device-cached; each (task, choice) cell is
+/// written exactly once from its own chunk's output, so the score
+/// table is identical at any device count.
+fn score_tasks_workers(workers: &[Runtime], pool: Option<&RuntimePool>,
+                       store: &ParamStore, tasks: &[Task])
     -> Result<Vec<Vec<f64>>, RuntimeError> {
     let meta = &store.meta;
     let artifact = format!("seq_nll_{}", meta.name);
@@ -135,8 +141,9 @@ pub fn score_tasks(rt: &Runtime, store: &ParamStore, tasks: &[Task])
             });
         }
     }
-    let mut nlls = vec![vec![f64::INFINITY; N_CHOICES]; tasks.len()];
-    for chunk in seqs.chunks(b) {
+    let chunks: Vec<&[Seq]> = seqs.chunks(b).collect();
+    let mut items = Vec::with_capacity(chunks.len());
+    for chunk in &chunks {
         let mut tokens = vec![0i32; b * l];
         let mut targets = vec![0i32; b * l];
         let mut mask = vec![0.0f32; b * l];
@@ -159,17 +166,42 @@ pub fn score_tasks(rt: &Runtime, store: &ParamStore, tasks: &[Task])
                 mask[row * l + t] = 1.0;
             }
         }
-        let mut inputs = store.tensor_args();
-        inputs.push(TensorData::I32 { dims: vec![b, l], data: tokens });
-        inputs.push(TensorData::I32 { dims: vec![b, l], data: targets });
-        inputs.push(TensorData::F32 { dims: vec![b, l], data: mask });
-        let out = rt.execute(&artifact, inputs)?;
+        items.push(vec![
+            TensorData::I32 { dims: vec![b, l], data: tokens },
+            TensorData::I32 { dims: vec![b, l], data: targets },
+            TensorData::F32 { dims: vec![b, l], data: mask },
+        ]);
+    }
+    let outs = fan_indexed(workers, pool, store, &artifact, &items)?;
+    let mut nlls = vec![vec![f64::INFINITY; N_CHOICES]; tasks.len()];
+    for (chunk, out) in chunks.iter().zip(&outs) {
+        if out.is_empty() {
+            return Err(RuntimeError::BadOutputArity {
+                artifact: artifact.clone(),
+                expected: 1,
+                got: 0,
+            });
+        }
         let vals = out[0].as_f32()?;
         for (row, s) in chunk.iter().enumerate() {
             nlls[s.task][s.choice] = vals[row] as f64;
         }
     }
     Ok(nlls)
+}
+
+/// [`score_tasks_workers`] on a single runtime worker.
+pub fn score_tasks(rt: &Runtime, store: &ParamStore, tasks: &[Task])
+    -> Result<Vec<Vec<f64>>, RuntimeError> {
+    score_tasks_workers(std::slice::from_ref(rt), None, store, tasks)
+}
+
+/// [`score_tasks`] fanned across a pool's healthy workers.
+pub fn score_tasks_pool(pool: &RuntimePool, store: &ParamStore,
+                        tasks: &[Task])
+    -> Result<Vec<Vec<f64>>, RuntimeError> {
+    score_tasks_workers(&pool.healthy_runtimes(), Some(pool), store,
+                        tasks)
 }
 
 /// Score tasks with the model; returns accuracy in [0, 1].  A task
@@ -179,11 +211,22 @@ pub fn score_tasks(rt: &Runtime, store: &ParamStore, tasks: &[Task])
 pub fn accuracy(rt: &Runtime, store: &ParamStore, tasks: &[Task])
     -> Result<f64, RuntimeError> {
     let nlls = score_tasks(rt, store, tasks)?;
+    Ok(accuracy_from_scores(tasks, &nlls))
+}
+
+/// [`accuracy`] with scoring fanned across a pool's healthy workers.
+pub fn accuracy_pool(pool: &RuntimePool, store: &ParamStore,
+                     tasks: &[Task]) -> Result<f64, RuntimeError> {
+    let nlls = score_tasks_pool(pool, store, tasks)?;
+    Ok(accuracy_from_scores(tasks, &nlls))
+}
+
+fn accuracy_from_scores(tasks: &[Task], nlls: &[Vec<f64>]) -> f64 {
     let correct = tasks.iter()
-        .zip(&nlls)
+        .zip(nlls)
         .filter(|(t, scores)| pick_best(scores) == Some(t.gold))
         .count();
-    Ok(correct as f64 / tasks.len().max(1) as f64)
+    correct as f64 / tasks.len().max(1) as f64
 }
 
 #[cfg(test)]

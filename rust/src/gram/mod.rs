@@ -8,28 +8,73 @@
 //! staged pipeline can release a block's Grams the moment its
 //! refinement finishes — `GramView` borrows end with the block.
 //!
-//! Two accumulation drivers share the same math:
+//! # The striped accumulation contract
 //!
-//! * the resident path executes `calib_step` (all blocks per batch)
-//!   and splits the stacked outputs into per-block stats — a bit-copy;
-//! * [`GramStream`] executes `embed` once per batch and `calib_block`
-//!   per (block, batch), threading the residual stream between blocks,
-//!   so only one block's weights need be resident at a time.
+//! f32 addition is not associative, so "sum the batches in whatever
+//! order the devices finish" would make the Grams — and therefore the
+//! refined masks — depend on the device count.  Instead *every* driver
+//! (serial or pooled, stacked or streamed) decomposes the batch list
+//! into the same [`CALIB_STRIPES`] fixed stripes: stripe `s` holds
+//! batches `s, s + CALIB_STRIPES, ...`, accumulated in ascending batch
+//! order as one device-side chain, and the stripe partials are reduced
+//! on the host in ascending stripe order.  The decomposition is a
+//! constant of the math, independent of how many workers happen to
+//! execute the stripes, so Grams are **bit-identical for any device
+//! count** — the same invariant style `refine_block` gives shard
+//! schedules.  The stacked (`calib_step`) and streamed
+//! (`embed`/`calib_block`) orders share the decomposition, so the two
+//! paths stay bit-identical to each other as well.
 //!
-//! Both orders accumulate each (block, stream) Gram over batches in
-//! batch order, so the two paths are bit-identical.
+//! # Resident accumulators
+//!
+//! Within a stripe the running Gram/sum stacks never round-trip to the
+//! host: the first batch uploads zeros inline and *retains* the
+//! outputs in the device-buffer cache ([`Runtime::execute_retained`],
+//! generation = batch index within the stripe); steady-state batches
+//! name them back as key-only [`ExecInput::CachedRef`] probes and
+//! upload only their token tensor (weights are cached under a per-pass
+//! key and probed the same way); the stripe's last batch retains
+//! nothing, so its outputs *are* the final download.  An evicted
+//! accumulator (`RuntimeError::NotResident`) restarts the stripe, and
+//! after repeated residency failures the stripe falls back to the
+//! host-carried inline form — same adds in the same order, so the
+//! result is bit-identical either way, just slower.
 
 pub mod analysis;
+
+use std::sync::Arc;
 
 use crate::model::store::ParamStore;
 use crate::pruning::dsnot::FeatureStats;
 use crate::runtime::manifest::{ModelMeta, PrunableLayer};
-use crate::runtime::service::{Runtime, RuntimeError};
+use crate::runtime::pool::RuntimePool;
+use crate::runtime::service::{
+    next_buffer_layer_id, BufferKey, ExecInput, PhaseTraffic, Runtime,
+    RuntimeError, ServiceStats,
+};
 use crate::runtime::tensor_data::TensorData;
 use crate::util::tensor::GramView;
 
 /// Stream order must match `calib_step`'s argument order (aot.py).
 pub const STREAMS: [&str; 4] = ["qkv", "o", "gu", "down"];
+
+/// Fixed stripe count of the deterministic batch decomposition (see
+/// the module doc).  A constant, *not* a function of the worker count
+/// and not CLI-tunable: it is mask-affecting, so changing it would
+/// silently invalidate every journal fingerprint and golden curve.
+/// Device counts 1/2/4 all divide it, so each worker owns a whole
+/// number of stripes at the counts the benches gate.
+pub const CALIB_STRIPES: usize = 4;
+
+/// Residency-mode attempts per stripe before falling back to the
+/// host-carried inline form (covers an accumulator evicted by a tiny
+/// device budget — retrying resident would just evict again).
+const RESIDENT_ATTEMPTS: usize = 2;
+
+/// Accumulator tensor roles within a stripe's buffer-key namespace,
+/// in `calib_step` / `calib_block` output order.
+const ACC_TENSORS: [&str; 8] =
+    ["g0", "g1", "g2", "g3", "s0", "s1", "s2", "s3"];
 
 fn stream_index(stream: &str) -> usize {
     STREAMS.iter().position(|s| *s == stream)
@@ -38,6 +83,40 @@ fn stream_index(stream: &str) -> usize {
 
 fn stream_width(meta: &ModelMeta, stream: &str) -> usize {
     if stream == "down" { meta.d_ff } else { meta.d_model }
+}
+
+/// Batch indices belonging to stripe `s` of an `n`-batch run, in the
+/// ascending order the stripe's device chain consumes them.
+fn stripe_batches(n: usize, s: usize) -> impl Iterator<Item = usize> {
+    (s..n).step_by(CALIB_STRIPES)
+}
+
+/// Driver-side output-arity check: the service already validates
+/// against the manifest, but the drivers additionally pin the counts
+/// their split logic assumes, so a malformed calib artifact fails
+/// loudly instead of corrupting stats.
+fn expect_arity(artifact: &str, expected: usize, got: usize)
+    -> Result<(), RuntimeError> {
+    if got != expected {
+        return Err(RuntimeError::BadOutputArity {
+            artifact: artifact.to_string(),
+            expected,
+            got,
+        });
+    }
+    Ok(())
+}
+
+/// Elementwise f32 `a += b` over one stat tensor pair (the host side
+/// of the cross-stripe reduction; the add order is part of the
+/// bit-identity contract).
+fn add_tensor(a: &mut TensorData, b: &TensorData) {
+    let dst = a.as_f32_mut().expect("stat tensors are f32");
+    let src = b.as_f32().expect("stat tensors are f32");
+    assert_eq!(dst.len(), src.len(), "stripe partial shape mismatch");
+    for (x, y) in dst.iter_mut().zip(src) {
+        *x += *y;
+    }
 }
 
 /// One block's calibration statistics: a Gram matrix [d, d] and a
@@ -66,6 +145,17 @@ impl BlockStats {
         self.grams.iter().chain(self.sums.iter())
             .map(|t| t.byte_size()).sum()
     }
+
+    /// Fold another stripe's partial into this one (ascending stripe
+    /// order — see the module doc's determinism contract).
+    fn add_assign(&mut self, o: &BlockStats) {
+        for (a, b) in self.grams.iter_mut().zip(&o.grams) {
+            add_tensor(a, b);
+        }
+        for (a, b) in self.sums.iter_mut().zip(&o.sums) {
+            add_tensor(a, b);
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -80,13 +170,22 @@ pub struct GramStats {
     pub tokens: usize,
     /// Batches consumed.
     pub batches: usize,
+    /// Host/device traffic of the accumulation pass that produced
+    /// these stats (zero for hollow/zeros stats filled elsewhere).
+    pub traffic: PhaseTraffic,
 }
 
 impl GramStats {
     pub fn zeros(meta: &ModelMeta) -> GramStats {
         let blocks = (0..meta.n_blocks)
             .map(|_| Some(BlockStats::zeros(meta))).collect();
-        GramStats { meta: meta.clone(), blocks, tokens: 0, batches: 0 }
+        GramStats {
+            meta: meta.clone(),
+            blocks,
+            tokens: 0,
+            batches: 0,
+            traffic: PhaseTraffic::default(),
+        }
     }
 
     /// Stats with every block slot empty — the streamed pipeline fills
@@ -97,6 +196,7 @@ impl GramStats {
             blocks: (0..meta.n_blocks).map(|_| None).collect(),
             tokens: 0,
             batches: 0,
+            traffic: PhaseTraffic::default(),
         }
     }
 
@@ -124,6 +224,21 @@ impl GramStats {
         self.blocks[layer.block].as_ref().unwrap_or_else(|| panic!(
             "gram stats for block {} are not resident \
              (released or not yet accumulated)", layer.block))
+    }
+
+    /// Raw Gram data of one (block, stream) pair — the exact-identity
+    /// surface the pooled-vs-serial tests compare bitwise.
+    pub fn stream_gram(&self, block: usize, si: usize) -> &[f32] {
+        self.blocks[block].as_ref()
+            .unwrap_or_else(|| panic!("block {block} not resident"))
+            .grams[si].as_f32().unwrap()
+    }
+
+    /// Raw feature-sum data of one (block, stream) pair.
+    pub fn stream_sum(&self, block: usize, si: usize) -> &[f32] {
+        self.blocks[block].as_ref()
+            .unwrap_or_else(|| panic!("block {block} not resident"))
+            .sums[si].as_f32().unwrap()
     }
 
     /// Gram matrix for one prunable layer: a zero-copy [`GramView`]
@@ -155,11 +270,11 @@ impl GramStats {
     }
 }
 
-/// Stacked accumulator driving the resident `calib_step_{cfg}`
-/// artifact: all-block Gram stacks [nb, d, d] threaded through
-/// successive executions, split into per-block [`BlockStats`] at the
-/// end.  The split is a bit-copy — the per-(block, stream)
-/// accumulation order is exactly the pre-split behaviour.
+/// Stacked accumulator state for the resident `calib_step_{cfg}`
+/// artifact: all-block Gram stacks [nb, d, d], split into per-block
+/// [`BlockStats`] at the end.  The split is a bit-copy — the
+/// per-(block, stream) accumulation order is exactly the pre-split
+/// behaviour.
 struct StackedAcc {
     grams: Vec<TensorData>,
     sums: Vec<TensorData>,
@@ -180,8 +295,28 @@ impl StackedAcc {
         StackedAcc { grams, sums }
     }
 
-    /// Run one calibration batch through `calib_step`, updating the
-    /// stacks.
+    /// Host bytes of the eight stacked tensors (the tests' byte model
+    /// for one stripe's zero upload / final download).
+    pub(crate) fn stacked_byte_size(meta: &ModelMeta) -> usize {
+        let acc = StackedAcc::zeros(meta);
+        acc.grams.iter().chain(acc.sums.iter())
+            .map(|t| t.byte_size()).sum()
+    }
+
+    /// Fold another stripe's partial into this one.
+    fn add_assign(&mut self, o: &StackedAcc) {
+        for (a, b) in self.grams.iter_mut().zip(&o.grams) {
+            add_tensor(a, b);
+        }
+        for (a, b) in self.sums.iter_mut().zip(&o.sums) {
+            add_tensor(a, b);
+        }
+    }
+
+    /// Run one calibration batch through `calib_step` with every
+    /// tensor round-tripping through the host — the fallback arm of
+    /// the stripe driver (and bit-identical to the resident arm: same
+    /// adds, same order).
     fn accumulate_batch(&mut self, rt: &Runtime, store: &ParamStore,
                         tokens: &TensorData) -> Result<(), RuntimeError> {
         let artifact = format!("calib_step_{}", store.meta.name);
@@ -190,7 +325,7 @@ impl StackedAcc {
         inputs.extend(self.grams.iter().cloned());
         inputs.extend(self.sums.iter().cloned());
         let out = rt.execute(&artifact, inputs)?;
-        assert_eq!(out.len(), 8);
+        expect_arity(&artifact, 8, out.len())?;
         let mut it = out.into_iter();
         for g in self.grams.iter_mut() {
             *g = it.next().unwrap();
@@ -199,6 +334,17 @@ impl StackedAcc {
             *s = it.next().unwrap();
         }
         Ok(())
+    }
+
+    /// Build a partial from the eight outputs of a stripe's final
+    /// `calib_step` call.
+    fn from_outputs(artifact: &str, out: Vec<TensorData>)
+        -> Result<StackedAcc, RuntimeError> {
+        expect_arity(artifact, 8, out.len())?;
+        let mut it = out.into_iter();
+        let grams = (0..4).map(|_| it.next().unwrap()).collect();
+        let sums = (0..4).map(|_| it.next().unwrap()).collect();
+        Ok(StackedAcc { grams, sums })
     }
 
     /// Split the stacks into per-block stats.
@@ -224,22 +370,289 @@ impl StackedAcc {
             }).collect();
             Some(BlockStats { grams, sums })
         }).collect();
-        GramStats { meta: meta.clone(), blocks, tokens, batches }
+        GramStats {
+            meta: meta.clone(),
+            blocks,
+            tokens,
+            batches,
+            traffic: PhaseTraffic::default(),
+        }
     }
 }
 
+/// Outcome of one stripe's execution: the partial, plus the worker
+/// outcomes the calling thread reports back to the pool (stripe
+/// threads never touch the pool directly).
+struct StripeRun<T> {
+    result: Result<T, RuntimeError>,
+    /// (worker index, ok) events in occurrence order.
+    outcomes: Vec<(usize, bool)>,
+    retries: u64,
+}
+
+/// Retry harness shared by every stripe driver: run `attempt` on the
+/// stripe's preferred worker, rotating to the next worker on transient
+/// failures and dropping to the inline (non-resident) form after
+/// repeated residency failures.  Every arm recomputes the stripe from
+/// its immutable inputs, so the partial is bit-identical no matter
+/// which arm finally succeeds.
+fn run_stripe_with_retry<T>(
+    workers: &[Runtime], stripe: usize,
+    mut attempt: impl FnMut(&Runtime, bool) -> Result<T, RuntimeError>)
+    -> StripeRun<T> {
+    let n = workers.len();
+    let mut wi = stripe % n;
+    let mut resident_failures = 0usize;
+    let mut worker_failures = 0usize;
+    let mut outcomes = Vec::new();
+    let mut retries = 0u64;
+    let result = loop {
+        let resident = resident_failures < RESIDENT_ATTEMPTS;
+        match attempt(&workers[wi], resident) {
+            Ok(v) => {
+                outcomes.push((workers[wi].device(), true));
+                break Ok(v);
+            }
+            Err(RuntimeError::NotResident(_)) if resident => {
+                // Evicted mid-stripe; the chain state was device-only,
+                // so restart the stripe (same worker — residency, not
+                // the worker, is the suspect).
+                resident_failures += 1;
+                retries += 1;
+            }
+            Err(e) if e.is_transient() && worker_failures + 1 < n + 2 => {
+                outcomes.push((workers[wi].device(), false));
+                worker_failures += 1;
+                retries += 1;
+                wi = (wi + 1) % n;
+            }
+            Err(e) => break Err(e),
+        }
+    };
+    StripeRun { result, outcomes, retries }
+}
+
+/// Execute one stacked stripe (ascending batch order, device-resident
+/// chain) on one worker.  `resident = false` is the host-round-trip
+/// fallback arm.
+fn stacked_stripe_once(rt: &Runtime, store: &ParamStore,
+                       toks: &[&TensorData], weights_id: u64,
+                       resident: bool)
+    -> Result<StackedAcc, RuntimeError> {
+    let meta = &store.meta;
+    if !resident {
+        let mut acc = StackedAcc::zeros(meta);
+        for tokens in toks {
+            acc.accumulate_batch(rt, store, tokens)?;
+        }
+        return Ok(acc);
+    }
+    let artifact = format!("calib_step_{}", meta.name);
+    let acc_id = next_buffer_layer_id();
+    let zeros = StackedAcc::zeros(meta);
+    let run = || -> Result<StackedAcc, RuntimeError> {
+        for (k, tokens) in toks.iter().enumerate() {
+            let last = k + 1 == toks.len();
+            let mut inputs: Vec<ExecInput> =
+                Vec::with_capacity(store.tensors.len() + 9);
+            for (i, p) in store.tensors.iter().enumerate() {
+                let key = BufferKey {
+                    layer: weights_id,
+                    tensor: format!("p{i}"),
+                    generation: 0,
+                };
+                // First batch ships the weights (a cache hit if a
+                // sibling stripe on this worker got there first);
+                // steady state probes key-only.
+                inputs.push(if k == 0 {
+                    ExecInput::Cached { key, data: Arc::clone(p) }
+                } else {
+                    ExecInput::CachedRef { key }
+                });
+            }
+            inputs.push(ExecInput::Inline((*tokens).clone()));
+            if k == 0 {
+                for t in zeros.grams.iter().chain(zeros.sums.iter()) {
+                    inputs.push(ExecInput::Inline(t.clone()));
+                }
+            } else {
+                for name in ACC_TENSORS {
+                    inputs.push(ExecInput::CachedRef {
+                        key: BufferKey {
+                            layer: acc_id,
+                            tensor: name.to_string(),
+                            generation: k as u64,
+                        },
+                    });
+                }
+            }
+            // Retain the updated accumulators on-device (generation =
+            // next batch index); the final batch retains nothing, so
+            // its outputs are the stripe's one download.
+            let retain: Vec<Option<BufferKey>> = if last {
+                Vec::new()
+            } else {
+                ACC_TENSORS.iter().map(|name| Some(BufferKey {
+                    layer: acc_id,
+                    tensor: (*name).to_string(),
+                    generation: k as u64 + 1,
+                })).collect()
+            };
+            let out = rt.execute_retained(&artifact, inputs, retain)?;
+            if last {
+                return StackedAcc::from_outputs(&artifact, out);
+            }
+        }
+        unreachable!("stripe has at least one batch")
+    };
+    let result = run();
+    // Free the retained chain state whether we finished or bailed.
+    rt.invalidate(acc_id);
+    result
+}
+
+/// The one striped accumulation driver (module-doc contract).  Serial
+/// callers pass a single-worker slice; the result is bit-identical to
+/// any pooled run over the same batches.
+fn accumulate_striped(workers: &[Runtime], pool: Option<&RuntimePool>,
+                      store: &ParamStore,
+                      batches: &[(TensorData, TensorData)])
+    -> Result<GramStats, RuntimeError> {
+    assert!(!workers.is_empty(), "accumulate needs at least one worker");
+    let meta = &store.meta;
+    let weights_id = next_buffer_layer_id();
+    let runs: Vec<StripeRun<StackedAcc>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CALIB_STRIPES).map(|s| {
+            let toks: Vec<&TensorData> = stripe_batches(batches.len(), s)
+                .map(|i| &batches[i].0)
+                .collect();
+            // Channel handles are not shareable across threads; each
+            // stripe thread gets owned clones of the worker set.
+            let stripe_workers: Vec<Runtime> = workers.to_vec();
+            scope.spawn(move || {
+                if toks.is_empty() {
+                    return None;
+                }
+                Some(run_stripe_with_retry(
+                    &stripe_workers, s,
+                    |rt, resident| stacked_stripe_once(
+                        rt, store, &toks, weights_id, resident)))
+            })
+        }).collect();
+        handles.into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Some(StripeRun {
+                result: Err(RuntimeError::Msg(
+                    "calibration stripe panicked".into())),
+                outcomes: Vec::new(),
+                retries: 0,
+            })))
+            .flatten()
+            .collect()
+    });
+    for w in workers {
+        w.invalidate(weights_id);
+    }
+    let mut total: Option<StackedAcc> = None;
+    let mut err: Option<RuntimeError> = None;
+    for run in runs {
+        if let Some(p) = pool {
+            for (worker, ok) in &run.outcomes {
+                p.report_worker_outcome(*worker, *ok);
+            }
+            for _ in 0..run.retries {
+                p.note_shard_retry();
+            }
+        }
+        match run.result {
+            Ok(part) => match &mut total {
+                None => total = Some(part),
+                Some(t) => t.add_assign(&part),
+            },
+            Err(e) => err = Some(err.unwrap_or(e)),
+        }
+    }
+    if let Some(e) = err {
+        return Err(e);
+    }
+    let acc = total.unwrap_or_else(|| StackedAcc::zeros(meta));
+    Ok(acc.into_stats(meta,
+                      batches.len() * meta.tokens_per_batch(),
+                      batches.len()))
+}
+
 /// Accumulate Gram statistics over a set of calibration batches using
-/// the (already masked, for sequential mode) parameter store.
+/// the (already masked, for sequential mode) parameter store, on a
+/// single runtime worker.  Redefined onto the striped partial +
+/// ordered-reduce form, so the result is bit-identical to
+/// [`accumulate_pool`] at any device count.
 pub fn accumulate(rt: &Runtime, store: &ParamStore,
                   batches: &[(TensorData, TensorData)])
     -> Result<GramStats, RuntimeError> {
-    let mut acc = StackedAcc::zeros(&store.meta);
-    for (tokens, _) in batches {
-        acc.accumulate_batch(rt, store, tokens)?;
+    let before = rt.stats();
+    let mut stats = accumulate_striped(std::slice::from_ref(rt), None,
+                                       store, batches)?;
+    stats.traffic = rt.stats().traffic_since(&before);
+    Ok(stats)
+}
+
+/// [`accumulate`] fanned across a pool's healthy workers: each worker
+/// runs whole stripes on its own device; the host reduces stripe
+/// partials in ascending stripe order.  Transient worker faults retry
+/// the stripe on the next healthy worker and feed the pool's
+/// quarantine accounting.
+pub fn accumulate_pool(pool: &RuntimePool, store: &ParamStore,
+                       batches: &[(TensorData, TensorData)])
+    -> Result<GramStats, RuntimeError> {
+    let workers = pool.healthy_runtimes();
+    let before = pool.stats_total();
+    let mut stats = accumulate_striped(&workers, Some(pool), store,
+                                       batches)?;
+    stats.traffic = pool.stats_total().traffic_since(&before);
+    Ok(stats)
+}
+
+/// Exact steady-state upload model for one [`accumulate`] /
+/// [`accumulate_pool`] call, used by the byte-accounting tests and
+/// the bench gate: weights ship once per worker that ran a stripe,
+/// zeros ship once per non-empty stripe, and every batch ships its
+/// token tensor — nothing else crosses the boundary host-to-device.
+pub fn expected_upload_bytes(store: &ParamStore, workers: usize,
+                             batches: &[(TensorData, TensorData)])
+    -> u64 {
+    // Stripe s is non-empty iff s < batches, so the non-empty stripes
+    // are 0..min(batches, CALIB_STRIPES) and they land on
+    // min(workers, non-empty) distinct workers (stripe s → worker
+    // s % workers).
+    let nonempty = batches.len().min(CALIB_STRIPES);
+    let workers_used = workers.min(nonempty);
+    let params: usize =
+        store.tensors.iter().map(|t| t.byte_size()).sum();
+    let tokens: usize = batches.iter().map(|(t, _)| t.byte_size()).sum();
+    (workers_used * params
+     + nonempty * StackedAcc::stacked_byte_size(&store.meta)
+     + tokens) as u64
+}
+
+/// Host mirror of one batch's residual stream: the authoritative copy
+/// (refreshed on every committed advance) shipped as
+/// [`ExecInput::Cached`] so a device hit uploads nothing and an
+/// evicted buffer self-heals from attached data.
+#[derive(Clone)]
+struct HostH {
+    data: Arc<TensorData>,
+    generation: u64,
+}
+
+/// Summed stats snapshot over a worker set, for per-phase traffic
+/// deltas around a stream fan-out.  When other work shares the
+/// workers concurrently (the one-shot prefetch stage overlapping
+/// refinement) the delta includes that traffic too.
+fn workers_stats(workers: &[Runtime]) -> ServiceStats {
+    let mut total = ServiceStats::default();
+    for w in workers {
+        total.merge(&w.stats());
     }
-    Ok(acc.into_stats(&store.meta,
-                      batches.len() * store.meta.tokens_per_batch(),
-                      batches.len()))
+    total
 }
 
 /// Streamed calibration driver over the `embed_{cfg}` /
@@ -248,8 +661,12 @@ pub fn accumulate(rt: &Runtime, store: &ParamStore,
 /// Holds one residual-stream tensor per calibration batch and advances
 /// them block by block, so Gram accumulation for block b+1 overlaps
 /// block b's refinement and only O(1) blocks of weights need be
-/// resident (the out-of-core pipeline's prefetch stage).  Per block
-/// the caller can:
+/// resident (the out-of-core pipeline's prefetch stage).  Batches fan
+/// across the worker set by stripe (same decomposition as the stacked
+/// driver — the bit-identity bridge between the two paths); each
+/// batch's residual stream lives against a host mirror and is cached
+/// device-side between the peek and push of a block.  Per block the
+/// caller can:
 ///
 /// * [`accumulate_and_push`]: stats + advance in one forward (one-shot
 ///   mode, where calibration is dense everywhere);
@@ -263,97 +680,389 @@ pub fn accumulate(rt: &Runtime, store: &ParamStore,
 /// [`push_block`]: GramStream::push_block
 pub struct GramStream {
     meta: ModelMeta,
+    /// Worker handles the stream fans stripes over (a single-element
+    /// set for serial callers).
+    workers: Vec<Runtime>,
+    /// Buffer-key namespace of this stream (h mirrors, block params,
+    /// embedding tensor).
+    stream_id: u64,
+    /// Bumped per `run_block` call: block params are cached under it,
+    /// so each new block's tensors replace the previous block's slots.
+    param_gen: u64,
     /// Residual stream h ([b*l, d_model]) per calibration batch.
-    hs: Vec<TensorData>,
+    hs: Vec<HostH>,
     /// Calibration tokens represented by `hs`.
     pub tokens: usize,
     /// Calibration batches represented by `hs`.
     pub batches: usize,
+    /// Worker traffic accumulated by this stream's embed and block
+    /// advances (see [`GramStream::traffic`]).
+    traffic: PhaseTraffic,
+}
+
+/// One stripe's `run_block` product: the stat partial plus the
+/// committed residual-stream mirrors (applied by the calling thread
+/// after the join, keeping `hs` single-writer).
+struct BlockStripeOut {
+    stats: Option<BlockStats>,
+    new_hs: Vec<(usize, HostH)>,
+}
+
+impl Drop for GramStream {
+    fn drop(&mut self) {
+        // Release the stream's cached device buffers (h mirrors, block
+        // params, embedding) on every worker; fire-and-forget.
+        for w in &self.workers {
+            w.invalidate(self.stream_id);
+        }
+    }
 }
 
 impl GramStream {
     /// Embed every calibration batch (`embed_{cfg}`), initialising the
     /// residual streams at the block-0 input.  `tok_emb` is the
     /// embedding tensor (param index 0) — leased, so the caller can
-    /// release the globals right after.
-    pub fn start(rt: &Runtime, meta: &ModelMeta, tok_emb: &TensorData,
+    /// release the globals right after.  `workers` is the worker set
+    /// every later block advance fans over (serial callers pass one).
+    pub fn start(workers: &[Runtime], meta: &ModelMeta,
+                 tok_emb: &TensorData,
                  batches: &[(TensorData, TensorData)])
         -> Result<GramStream, RuntimeError> {
+        assert!(!workers.is_empty(), "GramStream needs a worker");
+        let stream_id = next_buffer_layer_id();
+        let before = workers_stats(workers);
         let artifact = format!("embed_{}", meta.name);
-        let mut hs = Vec::with_capacity(batches.len());
-        for (tokens, _) in batches {
-            let out = rt.execute(&artifact,
-                                 vec![tok_emb.clone(), tokens.clone()])?;
-            hs.push(out.into_iter().next().expect("embed returns h"));
+        let emb = Arc::new(tok_emb.clone());
+        let n = batches.len();
+        let runs: Vec<StripeRun<Vec<(usize, TensorData)>>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..CALIB_STRIPES).map(|s| {
+                    let ids: Vec<usize> = stripe_batches(n, s).collect();
+                    let stripe_workers: Vec<Runtime> = workers.to_vec();
+                    let emb = Arc::clone(&emb);
+                    let artifact = &artifact;
+                    scope.spawn(move || {
+                        if ids.is_empty() {
+                            return None;
+                        }
+                        Some(run_stripe_with_retry(
+                            &stripe_workers, s, |rt, _resident| {
+                                let mut hs = Vec::with_capacity(ids.len());
+                                for &i in &ids {
+                                    let inputs = vec![
+                                        ExecInput::Cached {
+                                            key: BufferKey {
+                                                layer: stream_id,
+                                                tensor: "emb".into(),
+                                                generation: 0,
+                                            },
+                                            data: Arc::clone(&emb),
+                                        },
+                                        ExecInput::Inline(
+                                            batches[i].0.clone()),
+                                    ];
+                                    let out = rt.execute_cached(
+                                        artifact, inputs)?;
+                                    let mut it = out.into_iter();
+                                    let h = it.next().ok_or_else(|| {
+                                        RuntimeError::BadOutputArity {
+                                            artifact: artifact.clone(),
+                                            expected: 1,
+                                            got: 0,
+                                        }
+                                    })?;
+                                    hs.push((i, h));
+                                }
+                                Ok(hs)
+                            }))
+                    })
+                }).collect();
+                handles.into_iter()
+                    .map(|h| h.join().unwrap_or_else(|_| Some(StripeRun {
+                        result: Err(RuntimeError::Msg(
+                            "embed stripe panicked".into())),
+                        outcomes: Vec::new(),
+                        retries: 0,
+                    })))
+                    .flatten()
+                    .collect()
+            });
+        let mut hs: Vec<Option<HostH>> = (0..n).map(|_| None).collect();
+        for run in runs {
+            for (i, h) in run.result? {
+                hs[i] = Some(HostH {
+                    data: Arc::new(h),
+                    generation: 0,
+                });
+            }
         }
         Ok(GramStream {
             meta: meta.clone(),
-            hs,
-            tokens: batches.len() * meta.tokens_per_batch(),
-            batches: batches.len(),
+            workers: workers.to_vec(),
+            stream_id,
+            param_gen: 0,
+            hs: hs.into_iter().map(|h| h.expect("embedded")).collect(),
+            tokens: n * meta.tokens_per_batch(),
+            batches: n,
+            traffic: workers_stats(workers).traffic_since(&before),
         })
     }
 
     /// Host bytes held by the residual streams.
     pub fn byte_size(&self) -> usize {
-        self.hs.iter().map(|h| h.byte_size()).sum()
+        self.hs.iter().map(|h| h.data.byte_size()).sum()
     }
 
-    fn run_block(&mut self, rt: &Runtime, params: &[TensorData],
-                 accum: bool, commit: bool)
+    /// Worker traffic accumulated by this stream's embed and block
+    /// advances so far.  Measured as stats deltas over the stream's
+    /// worker set, so when the prefetch stage overlaps refinement on
+    /// the same devices (one-shot streamed mode) the figure includes
+    /// that concurrent traffic too.
+    pub fn traffic(&self) -> PhaseTraffic {
+        self.traffic
+    }
+
+    fn run_block(&mut self, params: &[TensorData], accum: bool,
+                 commit: bool)
         -> Result<Option<BlockStats>, RuntimeError> {
         assert_eq!(params.len(), 9,
                    "calib_block takes the block's nine tensors");
-        let artifact = format!("calib_block_{}", self.meta.name);
-        let mut stats = BlockStats::zeros(&self.meta);
-        let flag = TensorData::scalar_i32(accum as i32);
-        for h in self.hs.iter_mut() {
-            let mut inputs = Vec::with_capacity(19);
-            inputs.extend(params.iter().cloned());
-            inputs.push(h.clone());
-            inputs.push(flag.clone());
-            inputs.extend(stats.grams.iter().cloned());
-            inputs.extend(stats.sums.iter().cloned());
-            let out = rt.execute(&artifact, inputs)?;
-            assert_eq!(out.len(), 9);
-            let mut it = out.into_iter();
-            for g in stats.grams.iter_mut() {
-                *g = it.next().unwrap();
+        self.param_gen += 1;
+        let pg = self.param_gen;
+        let stream_id = self.stream_id;
+        let before = workers_stats(&self.workers);
+        // Owned copy: `self.hs` is mutated after the join while the
+        // meta is still needed for the stripe reduce.
+        let meta = self.meta.clone();
+        let artifact = format!("calib_block_{}", meta.name);
+        let params: Vec<Arc<TensorData>> =
+            params.iter().map(|p| Arc::new(p.clone())).collect();
+        let n = self.hs.len();
+        let runs: Vec<StripeRun<BlockStripeOut>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..CALIB_STRIPES).map(|s| {
+                    let ids: Vec<usize> = stripe_batches(n, s).collect();
+                    let hs_in: Vec<HostH> =
+                        ids.iter().map(|&i| self.hs[i].clone()).collect();
+                    let stripe_workers: Vec<Runtime> =
+                        self.workers.to_vec();
+                    let params = &params;
+                    let artifact = &artifact;
+                    let meta = &meta;
+                    scope.spawn(move || {
+                        if ids.is_empty() {
+                            return None;
+                        }
+                        Some(run_stripe_with_retry(
+                            &stripe_workers, s,
+                            |rt, resident| block_stripe_once(
+                                rt, meta, artifact, params, pg,
+                                stream_id, &ids, &hs_in, accum, commit,
+                                resident)))
+                    })
+                }).collect();
+                handles.into_iter()
+                    .map(|h| h.join().unwrap_or_else(|_| Some(StripeRun {
+                        result: Err(RuntimeError::Msg(
+                            "calib_block stripe panicked".into())),
+                        outcomes: Vec::new(),
+                        retries: 0,
+                    })))
+                    .flatten()
+                    .collect()
+            });
+        self.traffic.merge(
+            &workers_stats(&self.workers).traffic_since(&before));
+        let mut total: Option<BlockStats> = None;
+        for run in runs {
+            let out = run.result?;
+            for (i, h) in out.new_hs {
+                self.hs[i] = h;
             }
-            for s in stats.sums.iter_mut() {
-                *s = it.next().unwrap();
-            }
-            let h_out = it.next().unwrap();
-            if commit {
-                *h = h_out;
+            if let Some(part) = out.stats {
+                match &mut total {
+                    None => total = Some(part),
+                    Some(t) => t.add_assign(&part),
+                }
             }
         }
-        Ok(if accum { Some(stats) } else { None })
+        Ok(if accum {
+            Some(total.unwrap_or_else(|| BlockStats::zeros(&meta)))
+        } else {
+            None
+        })
     }
 
     /// Accumulate one block's stats and advance the residual streams
     /// through it, in a single forward per batch.
-    pub fn accumulate_and_push(&mut self, rt: &Runtime,
-                               params: &[TensorData])
+    pub fn accumulate_and_push(&mut self, params: &[TensorData])
         -> Result<BlockStats, RuntimeError> {
-        Ok(self.run_block(rt, params, true, true)?
+        Ok(self.run_block(params, true, true)?
                .expect("accumulating run returns stats"))
     }
 
     /// Accumulate one block's stats from the current residual streams
     /// without advancing them.
-    pub fn accumulate_block(&mut self, rt: &Runtime,
-                            params: &[TensorData])
+    pub fn accumulate_block(&mut self, params: &[TensorData])
         -> Result<BlockStats, RuntimeError> {
-        Ok(self.run_block(rt, params, true, false)?
+        Ok(self.run_block(params, true, false)?
                .expect("accumulating run returns stats"))
     }
 
     /// Advance the residual streams through one block without
     /// accumulating stats.
-    pub fn push_block(&mut self, rt: &Runtime, params: &[TensorData])
+    pub fn push_block(&mut self, params: &[TensorData])
         -> Result<(), RuntimeError> {
-        self.run_block(rt, params, false, true).map(|_| ())
+        self.run_block(params, false, true).map(|_| ())
+    }
+}
+
+/// Execute one streamed stripe of a block advance on one worker:
+/// ascending batch order, stats chained device-resident (inline in the
+/// fallback arm), residual streams shipped from their host mirrors
+/// (device hit = no upload) and re-mirrored on commit.
+#[allow(clippy::too_many_arguments)]
+fn block_stripe_once(rt: &Runtime, meta: &ModelMeta, artifact: &str,
+                     params: &[Arc<TensorData>], pg: u64, stream_id: u64,
+                     ids: &[usize], hs_in: &[HostH], accum: bool,
+                     commit: bool, resident: bool)
+    -> Result<BlockStripeOut, RuntimeError> {
+    let flag = TensorData::scalar_i32(accum as i32);
+    let zeros = BlockStats::zeros(meta);
+    let acc_id = next_buffer_layer_id();
+    let mut new_hs = Vec::new();
+    let run = |new_hs: &mut Vec<(usize, HostH)>|
+        -> Result<Option<BlockStats>, RuntimeError> {
+        // Fallback arm: host-carried stats, data-attached params.
+        // Same adds in the same order as the resident arm.
+        if !resident {
+            let mut stats = zeros.clone();
+            for (&i, h) in ids.iter().zip(hs_in) {
+                let mut inputs = Vec::with_capacity(19);
+                inputs.extend(params.iter()
+                    .map(|p| ExecInput::Inline((**p).clone())));
+                inputs.push(ExecInput::Inline((*h.data).clone()));
+                inputs.push(ExecInput::Inline(flag.clone()));
+                inputs.extend(stats.grams.iter().cloned()
+                    .map(ExecInput::Inline));
+                inputs.extend(stats.sums.iter().cloned()
+                    .map(ExecInput::Inline));
+                let out = rt.execute_cached(artifact, inputs)?;
+                expect_arity(artifact, 9, out.len())?;
+                let mut it = out.into_iter();
+                for g in stats.grams.iter_mut() {
+                    *g = it.next().unwrap();
+                }
+                for s in stats.sums.iter_mut() {
+                    *s = it.next().unwrap();
+                }
+                let h_out = it.next().unwrap();
+                if commit {
+                    new_hs.push((i, HostH {
+                        data: Arc::new(h_out),
+                        generation: h.generation + 1,
+                    }));
+                }
+            }
+            return Ok(accum.then_some(stats));
+        }
+        for (k, (&i, h)) in ids.iter().zip(hs_in).enumerate() {
+            let last = k + 1 == ids.len();
+            let mut inputs = Vec::with_capacity(19);
+            for (pi, p) in params.iter().enumerate() {
+                let key = BufferKey {
+                    layer: stream_id,
+                    tensor: format!("bp{pi}"),
+                    generation: pg,
+                };
+                inputs.push(if k == 0 {
+                    ExecInput::Cached { key, data: Arc::clone(p) }
+                } else {
+                    ExecInput::CachedRef { key }
+                });
+            }
+            inputs.push(ExecInput::Cached {
+                key: BufferKey {
+                    layer: stream_id,
+                    tensor: format!("h{i}"),
+                    generation: h.generation,
+                },
+                data: Arc::clone(&h.data),
+            });
+            inputs.push(ExecInput::Inline(flag.clone()));
+            if k == 0 {
+                inputs.extend(zeros.grams.iter().cloned()
+                    .map(ExecInput::Inline));
+                inputs.extend(zeros.sums.iter().cloned()
+                    .map(ExecInput::Inline));
+            } else {
+                for name in ACC_TENSORS {
+                    inputs.push(ExecInput::CachedRef {
+                        key: BufferKey {
+                            layer: acc_id,
+                            tensor: name.to_string(),
+                            generation: k as u64,
+                        },
+                    });
+                }
+            }
+            // Stats stay device-resident between batches; h_out (the
+            // ninth output) always returns — on commit it becomes the
+            // fresh host mirror.  A non-accumulating pass retains the
+            // pass-through stats on the last batch too, so nothing but
+            // h travels back.
+            let retain_stats_on_last = !accum;
+            let retain: Vec<Option<BufferKey>> =
+                if last && !retain_stats_on_last {
+                    Vec::new()
+                } else {
+                    ACC_TENSORS.iter()
+                        .map(|name| Some(BufferKey {
+                            layer: acc_id,
+                            tensor: (*name).to_string(),
+                            generation: k as u64 + 1,
+                        }))
+                        .chain(std::iter::once(None))
+                        .collect()
+                };
+            let out = rt.execute_retained(artifact, inputs, retain)?;
+            let stats_attached = last && !retain_stats_on_last;
+            expect_arity(artifact,
+                         if stats_attached { 9 } else { 1 },
+                         out.len())?;
+            let mut it = out.into_iter();
+            let stats = if stats_attached {
+                let mut stats = zeros.clone();
+                for g in stats.grams.iter_mut() {
+                    *g = it.next().unwrap();
+                }
+                for s in stats.sums.iter_mut() {
+                    *s = it.next().unwrap();
+                }
+                Some(stats)
+            } else {
+                None
+            };
+            let h_out = it.next().unwrap();
+            if commit {
+                new_hs.push((i, HostH {
+                    data: Arc::new(h_out),
+                    generation: h.generation + 1,
+                }));
+            }
+            if last {
+                return Ok(if accum { stats } else { None });
+            }
+        }
+        unreachable!("stripe has at least one batch")
+    };
+    let result = run(&mut new_hs);
+    if resident {
+        rt.invalidate(acc_id);
+    }
+    match result {
+        Ok(stats) => Ok(BlockStripeOut { stats, new_hs }),
+        Err(e) => Err(e),
     }
 }
 
@@ -430,5 +1139,33 @@ mod tests {
         hollow.set_block(1, BlockStats::zeros(&meta));
         assert!(hollow.block_resident(1) && !hollow.block_resident(0));
         assert_eq!(hollow.resident_bytes(), per_block);
+    }
+
+    #[test]
+    fn stripes_partition_every_batch_count() {
+        for n in 0..10 {
+            let mut seen = vec![0usize; n];
+            for s in 0..CALIB_STRIPES {
+                for i in stripe_batches(n, s) {
+                    seen[i] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1),
+                    "batches covered exactly once for n={n}");
+        }
+    }
+
+    #[test]
+    fn stripe_reduce_order_is_fixed() {
+        // The cross-stripe reduce must visit stripes in ascending
+        // order with `acc += partial` — spot-check the helper's
+        // operand order with values where f32 addition order matters.
+        let meta = tiny_meta();
+        let mut a = BlockStats::zeros(&meta);
+        let mut b = BlockStats::zeros(&meta);
+        a.grams[0].as_f32_mut().unwrap()[0] = 1.0e8;
+        b.grams[0].as_f32_mut().unwrap()[0] = 1.0;
+        a.add_assign(&b);
+        assert_eq!(a.grams[0].as_f32().unwrap()[0], 1.0e8 + 1.0f32);
     }
 }

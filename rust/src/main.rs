@@ -219,13 +219,11 @@ fn cmd_prune(argv: &[String]) -> CliResult {
     let refiner = parse_refiner(args.get("refine"), args.get("engine"))?;
     let layer_parallel = args.get_bool("layer-parallel");
     let (devices, opts) = pool_opts(&pf);
-    // Only the offload engine with layer-parallel scheduling can use
-    // more than one worker; everything else runs on the primary, so
-    // don't spawn (and later compile on) idle service threads.
-    let devices = match refiner {
-        Refiner::SparseSwapsOffload { .. } if layer_parallel => devices,
-        _ => 1,
-    };
+    // Every refiner benefits from a multi-worker pool now: the
+    // calibration passes fan batch stripes over all workers (the
+    // striped decomposition keeps masks bit-identical at any device
+    // count), and the offload engine additionally shards refinement
+    // across them under --layer-parallel.
     let rt = start_pool(args.get("artifacts"), devices, opts, &jf)?;
     let meta = rt.manifest().config(args.get("config"))?.clone();
     let ds = Dataset::build(&meta, args.parse_num("seed")?);
@@ -287,6 +285,17 @@ fn cmd_prune(argv: &[String]) -> CliResult {
                  rep.snapshots.len(),
                  rep.snapshots.keys().collect::<Vec<_>>());
     }
+    let ct = &rep.calib_traffic;
+    if ct.executions > 0 {
+        println!("  calibration: {} exec(s), {:.1} MiB uploaded, \
+                  {:.1} MiB downloaded, {}/{} probes resident \
+                  ({:.0}%)",
+                 ct.executions,
+                 ct.upload_bytes as f64 / (1u64 << 20) as f64,
+                 ct.download_bytes as f64 / (1u64 << 20) as f64,
+                 ct.probe_hits, ct.probe_hits + ct.probe_misses,
+                 100.0 * ct.probe_hit_rate());
+    }
     print_pool_stats(&rt);
     Ok(())
 }
@@ -340,13 +349,10 @@ fn cmd_sweep(argv: &[String]) -> CliResult {
         .filter(|s| !s.is_empty()) {
         refiners.push(parse_refiner(tok.trim(), args.get("engine"))?);
     }
+    // Calibration and per-point ppl eval fan over every pool worker
+    // whatever the refiner grid, so the pool size is no longer gated
+    // on an offload refiner being present.
     let (devices, opts) = pool_opts(&pf);
-    let devices = if refiners.iter().any(
-        |r| matches!(r, Refiner::SparseSwapsOffload { .. })) {
-        devices
-    } else {
-        1
-    };
     let rt = start_pool(args.get("artifacts"), devices, opts, &jf)?;
     let meta = rt.manifest().config(args.get("config"))?.clone();
     let (store, _) = checkpoint::load(args.get("checkpoint"), &meta)?;

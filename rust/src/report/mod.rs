@@ -15,7 +15,7 @@ use crate::coordinator::{
     RunOptions, TrainConfig,
 };
 use crate::data::{Dataset, Split};
-use crate::eval::{perplexity, zeroshot};
+use crate::eval::{perplexity_pool, zeroshot};
 use crate::model::checkpoint;
 use crate::model::store::{MaskSet, ParamStore};
 use crate::runtime::pool::RuntimePool;
@@ -153,11 +153,11 @@ impl Ctx {
         };
         let val = ds.batches(&store.meta, Split::Validation,
                              self.val_batches());
-        let ppl = perplexity(&self.rt, target, &val)?;
+        let ppl = perplexity_pool(&self.rt, target, &val)?;
         let n_tasks = if self.quick { 24 } else { 64 };
         let tasks = zeroshot::build_tasks(ds, store.meta.vocab, n_tasks,
                                           911);
-        let acc = zeroshot::accuracy(&self.rt, target, &tasks)?;
+        let acc = zeroshot::accuracy_pool(&self.rt, target, &tasks)?;
         Ok((ppl, acc))
     }
 }

@@ -21,7 +21,7 @@ pub use faults::{FaultPlan, FaultyBackend};
 pub use manifest::{ArtifactEntry, Manifest, ModelMeta, PrunableLayer};
 pub use pool::RuntimePool;
 pub use service::{
-    BufferKey, ExecInput, Runtime, RuntimeError, RuntimeOptions,
-    ServiceStats, DEFAULT_DEVICE_MEM_BUDGET,
+    BufferKey, ExecInput, PhaseTraffic, Runtime, RuntimeError,
+    RuntimeOptions, ServiceStats, DEFAULT_DEVICE_MEM_BUDGET,
 };
 pub use tensor_data::TensorData;

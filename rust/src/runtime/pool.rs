@@ -328,6 +328,24 @@ impl RuntimePool {
         self.quarantined_workers().len() as u64
     }
 
+    /// Handles of every non-quarantined worker, in ascending worker
+    /// order — the worker set pool-parallel phases (striped
+    /// calibration, batched eval) fan over.  Falls back to the full
+    /// worker set when everything is quarantined, mirroring
+    /// `eligible_worker`'s escape hatch: the phase keeps draining and
+    /// fails fast instead of deadlocking.
+    pub fn healthy_runtimes(&self) -> Vec<Runtime> {
+        let healthy: Vec<Runtime> = (0..self.devices())
+            .filter(|&w| !self.state.is_quarantined(w))
+            .map(|w| self.runtimes[w].clone())
+            .collect();
+        if healthy.is_empty() {
+            self.runtimes.clone()
+        } else {
+            healthy
+        }
+    }
+
     /// Count one shard redispatch (surfaced via [`stats_total`]).
     ///
     /// [`stats_total`]: RuntimePool::stats_total

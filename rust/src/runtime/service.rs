@@ -38,6 +38,12 @@ use crate::runtime::tensor_data::TensorData;
 pub enum RuntimeError {
     Msg(String),
     Xla(String),
+    /// The backend returned a different number of outputs than the
+    /// manifest declares for the artifact — a malformed or mismatched
+    /// artifact, not a worker fault.  Structured (rather than a bare
+    /// `Msg`) so calibration drivers can fail loudly with the artifact
+    /// name instead of aborting on an `assert_eq!`.
+    BadOutputArity { artifact: String, expected: usize, got: usize },
     /// A key-only probe ([`ExecInput::CachedRef`]) named a buffer that
     /// is not resident at the requested generation.  The call failed
     /// *before* any upload or execution; the caller retries with the
@@ -57,6 +63,11 @@ impl std::fmt::Display for RuntimeError {
         match self {
             RuntimeError::Msg(s) => write!(f, "runtime: {s}"),
             RuntimeError::Xla(s) => write!(f, "xla: {s}"),
+            RuntimeError::BadOutputArity { artifact, expected, got } => {
+                write!(f,
+                       "runtime: {artifact}: manifest declares \
+                        {expected} outputs, backend returned {got}")
+            }
             RuntimeError::NotResident(k) => write!(
                 f,
                 "runtime: buffer ({}, {:?}, gen {}) not resident",
@@ -90,6 +101,17 @@ impl From<String> for RuntimeError {
 }
 
 type ExecResult = Result<Vec<TensorData>, RuntimeError>;
+
+/// Monotone process-wide id for the [`BufferKey`] "layer" coordinate.
+/// Every independent cached-buffer namespace — a refinement call's W
+/// chunks, a calibration pass's weights, one stripe's resident
+/// accumulators — draws a fresh id here, so concurrent users never
+/// collide within one worker's cache.
+pub fn next_buffer_layer_id() -> u64 {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Key of one persistently cached device buffer.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -152,6 +174,12 @@ enum Request {
     Exec {
         artifact: String,
         inputs: Vec<ExecInput>,
+        /// Output retention plan: empty = return every output to the
+        /// caller; otherwise one slot per artifact output, where
+        /// `Some(key)` stores that output in the device-buffer cache
+        /// under `key` instead of returning it (see
+        /// [`Runtime::execute_retained`]).
+        retain: Vec<Option<BufferKey>>,
         reply: mpsc::Sender<ExecResult>,
     },
     /// Compile without executing (warm the cache).
@@ -212,6 +240,15 @@ pub struct ServiceStats {
     /// and cache hits add nothing here — this is the number the
     /// wave-2 bench watches drop.
     pub upload_bytes: u64,
+    /// Host bytes of outputs returned to callers.  Outputs retained
+    /// on-device via [`Runtime::execute_retained`] add nothing here —
+    /// this is the number the resident-accumulator calibration path
+    /// watches drop (a steady-state calib batch downloads nothing).
+    pub download_bytes: u64,
+    /// Outputs stored in the device-buffer cache instead of being
+    /// returned ([`Runtime::execute_retained`]).  Retention is
+    /// device-side, so it is *not* counted in [`Self::upload_bytes`].
+    pub outputs_retained: u64,
     /// Shard dispatches re-run after a transient failure.  Counted at
     /// the pool, not per service — per-worker stats report 0 and
     /// `RuntimePool::stats_total` injects the pool total.
@@ -271,8 +308,62 @@ impl ServiceStats {
         self.probe_hits += o.probe_hits;
         self.probe_misses += o.probe_misses;
         self.upload_bytes += o.upload_bytes;
+        self.download_bytes += o.download_bytes;
+        self.outputs_retained += o.outputs_retained;
         self.shard_retries += o.shard_retries;
         self.workers_quarantined += o.workers_quarantined;
+    }
+
+    /// Traffic delta between two stat snapshots of the same worker
+    /// set (`before` taken earlier): what one exclusive phase — a
+    /// calibration pass, an eval sweep — shipped over the host/device
+    /// boundary.  Saturating, so a worker restarted between snapshots
+    /// degrades to zero rather than wrapping.
+    pub fn traffic_since(&self, before: &ServiceStats) -> PhaseTraffic {
+        let d = |a: u64, b: u64| a.saturating_sub(b);
+        PhaseTraffic {
+            executions: d(self.executions, before.executions),
+            upload_bytes: d(self.upload_bytes, before.upload_bytes),
+            download_bytes: d(self.download_bytes,
+                              before.download_bytes),
+            probe_hits: d(self.probe_hits, before.probe_hits),
+            probe_misses: d(self.probe_misses, before.probe_misses),
+        }
+    }
+}
+
+/// Host/device traffic attributed to one phase of a run (calibration,
+/// eval), computed as a [`ServiceStats::traffic_since`] snapshot delta
+/// and merged across pool workers.  Surfaced in the prune CLI summary
+/// (`calibration:` line) and carried by `GramStats`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PhaseTraffic {
+    pub executions: u64,
+    pub upload_bytes: u64,
+    pub download_bytes: u64,
+    pub probe_hits: u64,
+    pub probe_misses: u64,
+}
+
+impl PhaseTraffic {
+    /// Fold another phase (a recalibration, another worker's delta)
+    /// into this one.
+    pub fn merge(&mut self, o: &PhaseTraffic) {
+        self.executions += o.executions;
+        self.upload_bytes += o.upload_bytes;
+        self.download_bytes += o.download_bytes;
+        self.probe_hits += o.probe_hits;
+        self.probe_misses += o.probe_misses;
+    }
+
+    /// Key-only probe hit rate within the phase (0 when none ran).
+    pub fn probe_hit_rate(&self) -> f64 {
+        let total = self.probe_hits + self.probe_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.probe_hits as f64 / total as f64
+        }
     }
 }
 
@@ -407,11 +498,35 @@ impl Runtime {
     /// upload once and stay resident under their [`BufferKey`].
     pub fn execute_cached(&self, artifact: &str, inputs: Vec<ExecInput>)
         -> ExecResult {
+        self.execute_retained(artifact, inputs, Vec::new())
+    }
+
+    /// [`Self::execute_cached`] with output retention.  `retain` is
+    /// either empty (every output returns to the caller) or has one
+    /// slot per artifact output: an output paired with `Some(key)` is
+    /// stored in the device-buffer cache under `key` — replacing any
+    /// stale generation of the same `(layer, tensor)` — instead of
+    /// travelling back to the caller; only `None` outputs are
+    /// returned, in artifact output order.  This is what keeps
+    /// calibration accumulators device-resident between batches: a
+    /// chain of calls retains its running stats under a
+    /// per-batch-bumped generation and names them back as
+    /// [`ExecInput::CachedRef`] inputs, downloading them only once on
+    /// the final call.
+    pub fn execute_retained(&self, artifact: &str,
+                            inputs: Vec<ExecInput>,
+                            retain: Vec<Option<BufferKey>>)
+        -> ExecResult {
         let entry = self.manifest.artifact(artifact)?;
         if inputs.len() != entry.inputs.len() {
             return Err(RuntimeError::Msg(format!(
                 "{artifact}: expected {} inputs, got {}",
                 entry.inputs.len(), inputs.len())));
+        }
+        if !retain.is_empty() && retain.len() != entry.outputs.len() {
+            return Err(RuntimeError::Msg(format!(
+                "{artifact}: retain plan names {} outputs, manifest \
+                 declares {}", retain.len(), entry.outputs.len())));
         }
         for (i, (t, sig)) in inputs.iter().zip(&entry.inputs).enumerate() {
             // Key-only probes carry no host data to check; the
@@ -424,6 +539,7 @@ impl Runtime {
         self.tx.send(Request::Exec {
             artifact: artifact.to_string(),
             inputs,
+            retain,
             reply: reply_tx,
         }).map_err(|_| RuntimeError::Transient("service stopped".into()))?;
         reply_rx.recv()
@@ -529,8 +645,9 @@ where
     };
     for req in rx {
         match req {
-            Request::Exec { artifact, inputs, reply } => {
-                let _ = reply.send(svc.execute(&artifact, inputs));
+            Request::Exec { artifact, inputs, retain, reply } => {
+                let _ = reply.send(svc.execute(&artifact, inputs,
+                                               retain));
             }
             Request::Preload { artifact, reply } => {
                 let _ = reply.send(svc.preload(&artifact));
@@ -651,7 +768,8 @@ impl<B: Backend> Service<B> {
         }
     }
 
-    fn execute(&mut self, artifact: &str, inputs: Vec<ExecInput>)
+    fn execute(&mut self, artifact: &str, inputs: Vec<ExecInput>,
+               retain: Vec<Option<BufferKey>>)
         -> ExecResult {
         // Borrow the entry through a local Arc clone so `self` stays
         // free for &mut calls — no per-call ArtifactEntry clone on the
@@ -675,6 +793,27 @@ impl<B: Backend> Service<B> {
                                 "{artifact}: duplicate cached input \
                                  key ({}, {:?})", ka.layer, ka.tensor)));
                         }
+                    }
+                }
+            }
+        }
+        // Same footgun on the retention side: two retained outputs
+        // landing on one (layer, tensor) slot would silently keep only
+        // the later one.  A retain key *aliasing an input key* is fine
+        // — that is the accumulator-chain idiom (input at generation g,
+        // output retained at g+1 replaces it).
+        if !retain.is_empty() && retain.len() != entry.outputs.len() {
+            return Err(RuntimeError::Msg(format!(
+                "{artifact}: retain plan names {} outputs, manifest \
+                 declares {}", retain.len(), entry.outputs.len())));
+        }
+        for (i, a) in retain.iter().enumerate() {
+            if let Some(ka) = a {
+                for kb in retain[i + 1..].iter().flatten() {
+                    if ka.layer == kb.layer && ka.tensor == kb.tensor {
+                        return Err(RuntimeError::Msg(format!(
+                            "{artifact}: duplicate retained output \
+                             key ({}, {:?})", ka.layer, ka.tensor)));
                     }
                 }
             }
@@ -745,12 +884,67 @@ impl<B: Backend> Service<B> {
         self.stats.exec_nanos += t1.elapsed().as_nanos() as u64;
 
         if outputs.len() != entry.outputs.len() {
-            return Err(RuntimeError::Msg(format!(
-                "{artifact}: manifest declares {} outputs, backend \
-                 returned {}", entry.outputs.len(), outputs.len())));
+            return Err(RuntimeError::BadOutputArity {
+                artifact: artifact.to_string(),
+                expected: entry.outputs.len(),
+                got: outputs.len(),
+            });
         }
         self.stats.executions += 1;
+
+        // Output retention: keep `Some(key)` outputs resident in the
+        // buffer cache (replacing any stale generation on the same
+        // slot); only the rest travel back to the caller and count as
+        // download traffic.
+        let returned = if retain.is_empty() {
+            for o in &outputs {
+                self.stats.download_bytes += o.byte_size() as u64;
+            }
+            outputs
+        } else {
+            let mut kept = Vec::new();
+            for (out, slot) in outputs.into_iter().zip(retain) {
+                match slot {
+                    Some(key) => self.retain_output(&key, &out)?,
+                    None => {
+                        self.stats.download_bytes +=
+                            out.byte_size() as u64;
+                        kept.push(out);
+                    }
+                }
+            }
+            kept
+        };
         self.trim_to_budget();
-        Ok(outputs)
+        Ok(returned)
+    }
+
+    /// Store one just-computed output in the buffer cache under `key`.
+    /// Always a fresh insert content-wise (the value was computed this
+    /// call), so any resident buffer on the slot is dropped first.
+    /// Device-side retention, not host traffic: counts toward
+    /// [`ServiceStats::outputs_retained`] and the cache byte gauges,
+    /// never toward `upload_bytes`.
+    fn retain_output(&mut self, key: &BufferKey, data: &TensorData)
+        -> Result<(), RuntimeError> {
+        let mk = (key.layer, key.tensor.clone());
+        if let Some(old) = self.cache.remove(&mk) {
+            self.stats.cache_bytes -= old.bytes;
+            self.stats.cache_invalidations += 1;
+        }
+        let buf = self.backend.upload(data)?;
+        let bytes = data.byte_size() as u64;
+        self.tick += 1;
+        self.cache.insert(mk, CachedBuf {
+            buf,
+            generation: key.generation,
+            bytes,
+            last_used: self.tick,
+        });
+        self.stats.outputs_retained += 1;
+        self.stats.cache_bytes += bytes;
+        self.stats.cache_peak_bytes =
+            self.stats.cache_peak_bytes.max(self.stats.cache_bytes);
+        Ok(())
     }
 }

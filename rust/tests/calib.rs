@@ -1,0 +1,206 @@
+//! Pooled calibration & eval integration tests: the striped Gram
+//! accumulation and the fanned eval drivers must be *bit-identical*
+//! for any device count — the stripe decomposition is fixed
+//! ([`CALIB_STRIPES`]) and the host reduces stripe/batch partials in
+//! ascending order, so 1-, 2- and 4-worker pools all see the same f32
+//! add sequence.  The resident-accumulator protocol is pinned by
+//! exact byte accounting: steady-state calibration batches upload
+//! only their token tensors.
+//!
+//! Everything runs on interp-backed pools over the in-memory tiny
+//! manifest (tier-1, artifact-free).
+
+use std::path::PathBuf;
+
+use sparseswaps::coordinator::{
+    MaskSpec, PatternKind, PruneSession, Refiner, RunOptions,
+};
+use sparseswaps::data::{Dataset, Split};
+use sparseswaps::eval::{perplexity, perplexity_pool, zeroshot};
+use sparseswaps::gram::{
+    accumulate, accumulate_pool, expected_upload_bytes, GramStats,
+    CALIB_STRIPES, STREAMS,
+};
+use sparseswaps::model::testutil::tiny_manifest;
+use sparseswaps::model::{
+    checkpoint, MaskSet, ParamStore, StreamingStore,
+};
+use sparseswaps::runtime::testutil::interp_pool;
+use sparseswaps::runtime::{RuntimeOptions, RuntimePool};
+
+fn setup() -> (ParamStore, Dataset) {
+    let manifest = tiny_manifest();
+    let meta = manifest.config("tiny").unwrap().clone();
+    let ds = Dataset::build(&meta, 42);
+    let store = ParamStore::init(&meta, meta.init_seed);
+    (store, ds)
+}
+
+fn pool(devices: usize) -> RuntimePool {
+    interp_pool(&tiny_manifest(), devices, RuntimeOptions::default())
+}
+
+/// Bitwise equality of two stat sets over every (block, stream) pair.
+fn assert_stats_eq(a: &GramStats, b: &GramStats, what: &str) {
+    assert_eq!(a.tokens, b.tokens, "{what}: token count diverged");
+    assert_eq!(a.batches, b.batches, "{what}: batch count diverged");
+    for block in 0..a.meta.n_blocks {
+        for si in 0..STREAMS.len() {
+            let (ga, gb) = (a.stream_gram(block, si),
+                            b.stream_gram(block, si));
+            assert!(ga.iter().map(|v| v.to_bits())
+                        .eq(gb.iter().map(|v| v.to_bits())),
+                    "{what}: gram diverged (block {block}, \
+                     stream {})", STREAMS[si]);
+            let (sa, sb) = (a.stream_sum(block, si),
+                            b.stream_sum(block, si));
+            assert!(sa.iter().map(|v| v.to_bits())
+                        .eq(sb.iter().map(|v| v.to_bits())),
+                    "{what}: sums diverged (block {block}, \
+                     stream {})", STREAMS[si]);
+        }
+    }
+}
+
+fn assert_masks_eq(a: &MaskSet, b: &MaskSet, what: &str) {
+    for (li, (x, y)) in a.masks.iter().zip(&b.masks).enumerate() {
+        assert_eq!(x.data, y.data, "{what}: layer {li} mask diverged");
+    }
+}
+
+#[test]
+fn gram_stats_bit_identical_across_device_counts() {
+    let (store, ds) = setup();
+    let meta = store.meta.clone();
+    // Ragged counts on purpose: fewer batches than stripes (1, 3),
+    // batches % devices != 0 (3, 5), and a full multiple (8).
+    for n_batches in [1usize, 3, 5, 8] {
+        let calib = ds.batches(&meta, Split::Calibration, n_batches);
+        let serial = pool(1);
+        let baseline =
+            accumulate(serial.primary(), &store, &calib).unwrap();
+        for devices in [1usize, 2, 4] {
+            let p = pool(devices);
+            let stats = accumulate_pool(&p, &store, &calib).unwrap();
+            assert_stats_eq(&baseline, &stats,
+                            &format!("{n_batches} batches on \
+                                      {devices} device(s)"));
+        }
+    }
+}
+
+#[test]
+fn resident_accumulators_upload_only_tokens_steady_state() {
+    let (store, ds) = setup();
+    let meta = store.meta.clone();
+    // 6 batches over 4 stripes: stripes 0 and 1 run a second,
+    // steady-state batch whose only upload may be its token tensor.
+    let calib = ds.batches(&meta, Split::Calibration, 6);
+    for devices in [1usize, 4] {
+        let p = pool(devices);
+        let stats = accumulate_pool(&p, &store, &calib).unwrap();
+        let t = stats.traffic;
+        assert_eq!(t.upload_bytes,
+                   expected_upload_bytes(&store, devices, &calib),
+                   "{devices} device(s): upload bytes off the \
+                    weights-once + zeros-per-stripe + tokens model");
+        assert_eq!(t.executions, calib.len() as u64,
+                   "one calib_step execution per batch");
+        assert_eq!(t.probe_misses, 0,
+                   "no key-only probe may miss on a healthy pool");
+        assert!(t.probe_hits > 0,
+                "steady-state batches probe weights + accumulators \
+                 key-only");
+        // The stripe chains stay device-resident: only each
+        // non-empty stripe's final outputs travel back.
+        let stripes = calib.len().min(CALIB_STRIPES) as u64;
+        assert_eq!(t.download_bytes % stripes, 0);
+        assert!(t.download_bytes > 0);
+    }
+}
+
+#[test]
+fn pooled_prune_masks_match_serial_across_modes() {
+    let (store, ds) = setup();
+    let meta = store.meta.clone();
+    let path: PathBuf = std::env::temp_dir().join(format!(
+        "sscalib_test_{}.ssck", std::process::id()));
+    checkpoint::save(&path, &store, None).unwrap();
+    let offload = || Refiner::SparseSwapsOffload {
+        impl_name: "interp".into(),
+    };
+    for (refiner, sequential) in [
+        (Refiner::SparseSwapsNative, false),
+        (Refiner::SparseSwapsNative, true),
+        (offload(), false),
+        (offload(), true),
+    ] {
+        let what = format!("{}/{}", refiner.label(),
+                           if sequential { "seq" } else { "oneshot" });
+        let spec = MaskSpec {
+            pattern_kind: PatternKind::Unstructured { sparsity: 0.5 },
+            refiner,
+            t_max: 6,
+            calib_batches: 3,
+            sequential,
+            ..Default::default()
+        };
+        let serial = pool(1);
+        let (m1, r1) =
+            PruneSession::new(&serial, &store, &ds,
+                              RunOptions::default())
+                .prune(&spec).unwrap();
+        assert!(r1.calib_traffic.executions > 0,
+                "{what}: prune report must carry calibration traffic");
+        for devices in [2usize, 4] {
+            let p = pool(devices);
+            let (m, _) = PruneSession::new(&p, &store, &ds,
+                                           RunOptions::default())
+                .prune(&spec).unwrap();
+            assert_masks_eq(&m1, &m,
+                            &format!("{what} on {devices} device(s)"));
+            if devices == 2 {
+                // The streamed store rides the same striped workers.
+                let sstore =
+                    StreamingStore::open(&path, &meta, 0).unwrap();
+                let (ms, _) = PruneSession::new(&p, &sstore, &ds,
+                                                RunOptions::default())
+                    .prune(&spec).unwrap();
+                assert_masks_eq(&m1, &ms,
+                                &format!("{what} streamed on 2 \
+                                          device(s)"));
+            }
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn eval_bit_identical_across_device_counts() {
+    let (store, ds) = setup();
+    let meta = store.meta.clone();
+    // 5 batches: ragged against both 2 and 4 workers.
+    let val = ds.batches(&meta, Split::Validation, 5);
+    let serial = pool(1);
+    let base_ppl = perplexity(serial.primary(), &store, &val).unwrap();
+    let tasks = zeroshot::build_tasks(&ds, meta.vocab, 12, 7);
+    let base_scores =
+        zeroshot::score_tasks(serial.primary(), &store, &tasks)
+            .unwrap();
+    for devices in [1usize, 2, 4] {
+        let p = pool(devices);
+        let ppl = perplexity_pool(&p, &store, &val).unwrap();
+        assert_eq!(ppl.to_bits(), base_ppl.to_bits(),
+                   "{devices} device(s): perplexity diverged");
+        let scores =
+            zeroshot::score_tasks_pool(&p, &store, &tasks).unwrap();
+        for (t, (a, b)) in
+            base_scores.iter().zip(&scores).enumerate() {
+            for (c, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(),
+                           "{devices} device(s): task {t} choice {c} \
+                            NLL diverged");
+            }
+        }
+    }
+}
